@@ -1,0 +1,108 @@
+//! End-to-end driver (DESIGN.md §5): serve batched transformer-block
+//! inference through the full three-layer stack.
+//!
+//! L1/L2: the `transformer_block` artifact was authored in JAX calling
+//! Pallas kernels and AOT-lowered to HLO text (`make artifacts`).
+//! L3: the rust coordinator compiles it once on the PJRT CPU client,
+//! then micro-batches row requests (one sequence each) up to the
+//! artifact batch dimension and serves them from a worker thread.
+//!
+//! The run cross-checks outputs against a direct artifact execution and
+//! reports latency percentiles + throughput (recorded in
+//! EXPERIMENTS.md §E2E).
+//!
+//! Run: make artifacts && cargo run --release --example transformer_serve
+
+use std::time::Instant;
+
+use tilelang::coordinator::{percentile, BatchPolicy, Coordinator};
+use tilelang::runtime::Runtime;
+
+const MODEL: &str = "transformer_block";
+
+fn main() {
+    let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let rt = match Runtime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("{e}\n(run `make artifacts` first)");
+            std::process::exit(1);
+        }
+    };
+
+    // golden check: the PJRT path reproduces the jax-side outputs
+    let err = rt.golden_check(MODEL).expect("golden check");
+    println!("artifact golden max_err = {err:.2e}");
+    assert!(err < 1e-3);
+
+    // reference outputs for request cross-checking
+    let inputs = rt.example_inputs(MODEL).expect("inputs");
+    let spec = rt.spec(MODEL).expect("spec").clone();
+    let batch = spec.in_shapes[0][0] as usize;
+    let row_len: usize = spec.in_shapes[0][1..].iter().product::<i64>() as usize;
+    let out_row_len = spec.out_len() / batch;
+    let direct = rt.execute(MODEL, &inputs).expect("direct exec");
+
+    // ---- serve ---------------------------------------------------------
+    let coord = Coordinator::start_batched(&dir, MODEL, BatchPolicy::default())
+        .expect("start coordinator");
+    let n_requests = 64usize;
+    println!(
+        "serving {n_requests} single-sequence requests (artifact batch = {batch}, \
+         micro-batching with 2ms flush) ..."
+    );
+    let t0 = Instant::now();
+    let mut receivers = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        // rotate through the example batch rows as request payloads
+        let slot = i % batch;
+        let row = inputs[0][slot * row_len..(slot + 1) * row_len].to_vec();
+        receivers.push((slot, coord.submit_row(MODEL, row).expect("submit")));
+    }
+    let mut latencies = Vec::with_capacity(n_requests);
+    let mut batch_sizes = Vec::new();
+    let mut checked = 0usize;
+    for (slot, rx) in receivers {
+        let reply = rx.recv().expect("reply");
+        let out = reply.output.expect("row output");
+        latencies.push(reply.latency_us);
+        batch_sizes.push(reply.batch_size);
+        // cross-check a few rows against the direct execution. Rows are
+        // only comparable when the row landed in its original slot
+        // (attention mixes nothing across the batch dim, so any slot
+        // yields the same output for the same row — compare directly).
+        if checked < 32 {
+            let want = &direct[slot * out_row_len..(slot + 1) * out_row_len];
+            let max_err = out
+                .iter()
+                .zip(want)
+                .map(|(g, w)| (g - w).abs())
+                .fold(0f32, f32::max);
+            assert!(
+                max_err < 1e-3,
+                "served output diverges from direct execution: {max_err}"
+            );
+            checked += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    latencies.sort_unstable();
+    let mean_batch =
+        batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len().max(1) as f64;
+    println!("cross-checked {checked} rows against direct PJRT execution: OK");
+    println!(
+        "throughput: {:.1} seq/s ({} requests in {:.2?})",
+        n_requests as f64 / wall.as_secs_f64(),
+        n_requests,
+        wall
+    );
+    println!(
+        "latency: p50 = {:.2} ms, p90 = {:.2} ms, p99 = {:.2} ms; mean batch = {:.2}",
+        percentile(&latencies, 50.0) as f64 / 1e3,
+        percentile(&latencies, 90.0) as f64 / 1e3,
+        percentile(&latencies, 99.0) as f64 / 1e3,
+        mean_batch
+    );
+    coord.shutdown();
+    println!("transformer_serve OK");
+}

@@ -1,0 +1,138 @@
+"""AOT lowering: jax -> HLO *text* artifacts for the rust runtime.
+
+HLO text (not serialized proto) is the interchange format: jax >= 0.5
+emits 64-bit instruction ids that the xla_extension 0.5.1 the rust `xla`
+crate links against rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+
+Each artifact gets a manifest line the rust runtime parses:
+    name <tab> file <tab> in=shape,shape,... <tab> out=shape
+plus a golden-output .json (flat f32 samples) for cross-checking the
+rust execution path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels.dequant_matmul import dequant_matmul_int4
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.matmul import matmul
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _shape_str(x) -> str:
+    return "x".join(str(d) for d in x.shape)
+
+
+def export(name, fn, args, out_dir, manifest, goldens):
+    """Lower fn(*args), write HLO text + input bins + manifest + golden.
+
+    Every parameter is f32 so the rust runtime only handles one dtype;
+    integer tensors are cast inside the lowered function.
+    """
+    assert all(a.dtype == jnp.float32 for a in args), name
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    path = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, path), "w") as f:
+        f.write(text)
+    for i, a in enumerate(args):
+        np.asarray(a, dtype=np.float32).tofile(
+            os.path.join(out_dir, f"{name}.in{i}.bin"))
+    out = jax.jit(fn)(*args)
+    out = out[0] if isinstance(out, tuple) else out
+    manifest.append(
+        "\t".join(
+            [
+                name,
+                path,
+                "in=" + ",".join(_shape_str(a) for a in args),
+                "out=" + _shape_str(out),
+            ]
+        )
+    )
+    flat = np.asarray(out, dtype=np.float32).reshape(-1)
+    idx = np.linspace(0, flat.size - 1, num=min(64, flat.size)).astype(int)
+    goldens[name] = {
+        "indices": idx.tolist(),
+        "values": [float(flat[i]) for i in idx],
+        "size": int(flat.size),
+    }
+    print(f"  {name}: {len(text)} chars, out {_shape_str(out)}")
+
+
+def _rand(key, shape, scale=0.5):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest, goldens = [], {}
+
+    print("lowering L1/L2 artifacts (pallas interpret -> HLO text):")
+    # GEMM kernel artifact (used by the quickstart + coordinator)
+    a = _rand(10, (128, 128))
+    b = _rand(11, (128, 128))
+    export("matmul_128", lambda x, y: (matmul(x, y),), (a, b), args.out_dir,
+           manifest, goldens)
+
+    # FlashAttention artifact
+    q = _rand(20, (4, 128, 64))
+    k = _rand(21, (4, 128, 64))
+    v = _rand(22, (4, 128, 64))
+    export(
+        "flash_attention_4x128x64",
+        lambda q, k, v: (flash_attention(q, k, v, causal=True, block_m=32,
+                                         block_n=32),),
+        (q, k, v), args.out_dir, manifest, goldens,
+    )
+
+    # Dequant GEMM artifact (packed bytes passed as f32, cast inside so
+    # the rust runtime only feeds f32 literals)
+    act = _rand(30, (16, 128))
+    packed = jax.random.randint(jax.random.PRNGKey(31), (64, 64), 0, 255,
+                                jnp.int32).astype(jnp.float32)
+    scales = jnp.abs(_rand(32, (64, 4), 0.05)) + 0.01
+    export(
+        "dequant_matmul_64x128",
+        lambda a, p, s: (dequant_matmul_int4(a, p.astype(jnp.uint8), s,
+                                             group_size=32),),
+        (act, packed, scales), args.out_dir, manifest, goldens,
+    )
+
+    # Transformer block (the E2E serving model)
+    export("transformer_block", model.block_fn, model.example_args(),
+           args.out_dir, manifest, goldens)
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    with open(os.path.join(args.out_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f, indent=1)
+    # TSV twin for the rust runtime (no JSON parser needed offline)
+    with open(os.path.join(args.out_dir, "goldens.tsv"), "w") as f:
+        for name, g in goldens.items():
+            pairs = ",".join(
+                f"{i}:{v:.6e}" for i, v in zip(g["indices"], g["values"]))
+            f.write(f"{name}\t{g['size']}\t{pairs}\n")
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

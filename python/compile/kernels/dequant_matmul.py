@@ -1,0 +1,55 @@
+"""L1 Pallas dequantize-GEMM kernel (paper Fig. 17).
+
+Packed int4 weights are decoded to fp32 *inside* the kernel (register
+dequantization) and fed straight to the MXU dot — the fused pattern the
+paper contrasts with Triton's scalar workarounds.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dq_kernel(a_ref, b_ref, s_ref, o_ref, *, group_size: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    packed = b_ref[...]  # [block_n, block_k // 2] uint8
+    lo = (packed & 0xF).astype(jnp.float32) - 8.0
+    hi = ((packed >> 4) & 0xF).astype(jnp.float32) - 8.0
+    codes = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    scales = s_ref[...]  # [block_n, block_k // group_size]
+    w = codes * jnp.repeat(scales, group_size, axis=1)
+    a = a_ref[...].astype(jnp.float32)  # [block_m, block_k]
+    o_ref[...] += jnp.dot(w, a.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("group_size", "block_m", "block_n", "block_k"),
+)
+def dequant_matmul_int4(a, packed, scales, group_size: int = 32,
+                        block_m: int = 16, block_n: int = 64,
+                        block_k: int = 64):
+    """Ct[n, m] = dequant_int4(packed, scales) @ A[m, k]^T."""
+    m, k = a.shape
+    n, kb = packed.shape
+    assert kb * 2 == k
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    grid = (n // block_n, m // block_m, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_dq_kernel, group_size=group_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (j, kk)),
+            pl.BlockSpec((block_n, block_k // 2), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec(
+                (block_n, block_k // group_size), lambda i, j, kk: (i, kk)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_m), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(a, packed, scales)

@@ -1,0 +1,78 @@
+"""L1 Pallas FlashAttention kernel (paper appendix B.3 structure).
+
+One grid step = one query block of one (batch*head); the KV loop runs
+inside the kernel as a `fori_loop` over VMEM slices with the online
+softmax state carried in registers — the same dataflow as the paper's
+`T.Pipelined` loop with `T.reduce_max` / exp2 rescaling.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, *, block_n: int, causal: bool,
+               block_m: int):
+    q = q_ref[0].astype(jnp.float32)  # [block_m, d]
+    d = q.shape[-1]
+    seq = k_ref.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d)) * 1.4426950408889634  # log2(e)
+    qi = pl.program_id(1)
+
+    n_blocks = seq // block_n
+
+    def body(i, carry):
+        acc, m_i, l_i = carry
+        k_blk = jax.lax.dynamic_slice_in_dim(k_ref[0], i * block_n, block_n)
+        v_blk = jax.lax.dynamic_slice_in_dim(v_ref[0], i * block_n, block_n)
+        s = jnp.dot(q, k_blk.astype(jnp.float32).T,
+                    preferred_element_type=jnp.float32) * scale
+        if causal:
+            rows = qi * block_m + jax.lax.broadcasted_iota(
+                jnp.int32, (block_m, block_n), 0)
+            cols = i * block_n + jax.lax.broadcasted_iota(
+                jnp.int32, (block_m, block_n), 1)
+            s = jnp.where(cols <= rows, s, -1e30)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        alpha = jnp.exp2(m_i - m_new)
+        p = jnp.exp2(s - m_new[:, None])
+        l_new = l_i * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(
+            p, v_blk.astype(jnp.float32), preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_m, d), jnp.float32)
+    m0 = jnp.full((block_m,), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_m,), jnp.float32)
+    if causal:
+        # only KV blocks up to the diagonal contribute
+        hi = qi + 1 if block_n == block_m else n_blocks
+        acc, m_i, l_i = jax.lax.fori_loop(0, hi, body, (acc0, m0, l0))
+    else:
+        acc, m_i, l_i = jax.lax.fori_loop(0, n_blocks, body, (acc0, m0, l0))
+    o_ref[0] = (acc / l_i[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_m", "block_n"))
+def flash_attention(q, k, v, causal: bool = False, block_m: int = 64,
+                    block_n: int = 64):
+    """Attention over [bh, s, d] tensors, TileLang-style tiling."""
+    bh, s, d = q.shape
+    assert s % block_m == 0 and s % block_n == 0
+    grid = (bh, s // block_m)
+    return pl.pallas_call(
+        functools.partial(
+            _fa_kernel, block_n=block_n, causal=causal, block_m=block_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_m, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_m, d), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,67 @@
+"""L1 Pallas Mamba-2 chunk kernels (linear attention of Fig. 12b)."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chunk_state_kernel(b_ref, x_ref, w_ref, o_ref):
+    b = b_ref[0].astype(jnp.float32)  # [chunk, n]
+    x = x_ref[0].astype(jnp.float32)  # [chunk, p]
+    w = w_ref[0].astype(jnp.float32)  # [chunk]
+    xw = x * w[:, None]
+    o_ref[0, 0] = jnp.dot(b.T, xw, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def chunk_state(b, x, w, chunk: int = 64):
+    """S[bh, nc, n, p] = sum_t B[bh, c t, n] * w[bh, c t] * X[bh, c t, p]."""
+    bh, seq, n = b.shape
+    p = x.shape[-1]
+    assert seq % chunk == 0
+    nc = seq // chunk
+    grid = (bh, nc)
+    return pl.pallas_call(
+        _chunk_state_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda z, c: (z, c, 0)),
+            pl.BlockSpec((1, chunk, p), lambda z, c: (z, c, 0)),
+            pl.BlockSpec((1, chunk), lambda z, c: (z, c)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, n, p), lambda z, c: (z, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, nc, n, p), jnp.float32),
+        interpret=True,
+    )(b, x, w)
+
+
+def _chunk_scan_kernel(c_ref, s_ref, w_ref, o_ref):
+    c = c_ref[0].astype(jnp.float32)  # [chunk, n]
+    s = s_ref[0, 0].astype(jnp.float32)  # [n, p]
+    w = w_ref[0].astype(jnp.float32)  # [chunk]
+    y = jnp.dot(c, s, preferred_element_type=jnp.float32)
+    o_ref[0] = y * w[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def chunk_scan(c, s, w2, chunk: int = 64):
+    """Y[bh, t, p] = w2[bh, t] * sum_n C[bh, t, n] * S[bh, chunk(t), n, p]."""
+    bh, seq, n = c.shape
+    p = s.shape[-1]
+    assert seq % chunk == 0
+    nc = seq // chunk
+    grid = (bh, nc)
+    return pl.pallas_call(
+        _chunk_scan_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, n), lambda z, cc: (z, cc, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda z, cc: (z, cc, 0, 0)),
+            pl.BlockSpec((1, chunk), lambda z, cc: (z, cc)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda z, cc: (z, cc, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, seq, p), jnp.float32),
+        interpret=True,
+    )(c, s, w2)

@@ -1,0 +1,55 @@
+"""L1 Pallas GEMM kernel — the Fig. 16 program re-expressed for TPU.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's
+threadblock tile (block_M x block_N x block_K) becomes a `BlockSpec`
+grid; `T.alloc_shared` tiles live in VMEM (the whole block the index_map
+brings in); the `T.Pipelined` K-loop is the third grid dimension (Pallas
+pipelines grid steps HBM->VMEM automatically); `T.gemm` is an MXU
+`jnp.dot` with fp32 `preferred_element_type`. `interpret=True` keeps the
+kernel executable on the CPU PJRT backend (the Mosaic path is
+TPU-only).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, k_steps: int):
+    """One (block_m, block_n) output tile; grid dim 2 walks K."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]
+    b = b_ref[...]
+    o_ref[...] += jnp.dot(
+        a.astype(jnp.float32),
+        b.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(a, b, block_m: int = 64, block_n: int = 64, block_k: int = 32):
+    """C[m, n] = A[m, k] @ B[k, n], fp32 accumulation."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"K mismatch: {k} vs {k2}"
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    k_steps = k // block_k
+    grid = (m // block_m, n // block_n, k_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)

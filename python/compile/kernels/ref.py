@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel (build-time correctness).
+
+These are the L1 reference implementations pytest checks the Pallas
+kernels against; the rust interpreter's CPU references mirror the same
+semantics on the L3 side.
+"""
+
+import jax.numpy as jnp
+
+NF4_TABLE = jnp.array(
+    [
+        -1.0, -0.6961928009986877, -0.5250730514526367, -0.39491748809814453,
+        -0.28444138169288635, -0.18477343022823334, -0.09105003625154495, 0.0,
+        0.07958029955625534, 0.16093020141124725, 0.24611230194568634,
+        0.33791524171829224, 0.44070982933044434, 0.5626170039176941,
+        0.7229568362236023, 1.0,
+    ],
+    dtype=jnp.float32,
+)
+
+
+def matmul(a, b):
+    """C[m, n] = A[m, k] @ B[k, n] with fp32 accumulation."""
+    return jnp.dot(
+        a.astype(jnp.float32), b.astype(jnp.float32),
+        precision="highest",
+    )
+
+
+def attention(q, k, v, causal=False):
+    """Softmax attention over [bh, s, d] tensors."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    scores = jnp.einsum("bqd,bkd->bqk", qf, kf) * scale
+    if causal:
+        s = q.shape[1]
+        mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+        scores = jnp.where(mask[None], scores, -jnp.inf)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bqk,bkd->bqd", p, vf)
+
+
+def dequant_int4(packed, scales, group_size):
+    """Unpack uint8 bytes -> int4 codes -> (code - 8) * group scale.
+
+    packed: [n, k // 2] uint8, scales: [n, k // group_size] f32.
+    Returns [n, k] f32.
+    """
+    lo = (packed & 0xF).astype(jnp.float32) - 8.0
+    hi = ((packed >> 4) & 0xF).astype(jnp.float32) - 8.0
+    codes = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    k = codes.shape[1]
+    s = jnp.repeat(scales, group_size, axis=1)[:, :k]
+    return codes * s
+
+
+def dequant_nf4(packed, scales, group_size):
+    """NF4 lookup-table decode (BitsandBytes layout)."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32)
+    codes = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+    vals = NF4_TABLE[codes]
+    k = vals.shape[1]
+    s = jnp.repeat(scales, group_size, axis=1)[:, :k]
+    return vals * s
+
+
+def dequant_matmul_int4(a, packed, scales, group_size):
+    """Ct[n, m] = dequant(B)[n, k] @ A[m, k]^T (Fig. 17 semantics)."""
+    w = dequant_int4(packed, scales, group_size)
+    return jnp.dot(w, a.astype(jnp.float32).T, precision="highest")
+
+
+def chunk_state(b, x, w, chunk):
+    """Mamba-2 chunk_state: S[c, n, p] = sum_t B[c t n] w[c t] X[c t p]."""
+    bh, seq, n = b.shape
+    p = x.shape[-1]
+    nc = seq // chunk
+    bc = b.reshape(bh, nc, chunk, n).astype(jnp.float32)
+    xc = x.reshape(bh, nc, chunk, p).astype(jnp.float32)
+    wc = w.reshape(bh, nc, chunk).astype(jnp.float32)
+    return jnp.einsum("bctn,bct,bctp->bcnp", bc, wc, xc)
+
+
+def chunk_scan(c, s, w2, chunk):
+    """Mamba-2 chunk_scan: Y[c, t, p] = w2[c t] sum_n C[c t n] S[c n p]."""
+    bh, seq, n = c.shape
+    nc = seq // chunk
+    p = s.shape[-1]
+    cc = c.reshape(bh, nc, chunk, n).astype(jnp.float32)
+    sc = s.reshape(bh, nc, n, p).astype(jnp.float32)
+    w2c = w2.reshape(bh, nc, chunk).astype(jnp.float32)
+    y = jnp.einsum("bctn,bcnp->bctp", cc, sc) * w2c[..., None]
+    return y.reshape(bh, seq, p)

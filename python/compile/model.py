@@ -1,0 +1,76 @@
+"""L2: JAX model graph calling the L1 Pallas kernels.
+
+A pre-norm transformer block (attention + MLP) whose GEMMs and attention
+run through the Pallas kernels — this is the computation the rust
+coordinator serves from the AOT artifact (`transformer_block.hlo.txt`).
+Python never runs at serving time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.matmul import matmul
+
+# Model geometry for the E2E serving artifact (small on purpose: the
+# CPU-PJRT interpret path executes it in milliseconds).
+D_MODEL = 256
+N_HEADS = 4
+D_HEAD = D_MODEL // N_HEADS
+D_FF = 512
+SEQ = 128
+BATCH = 4
+
+
+def init_params(key):
+    """Deterministic parameter pytree."""
+    ks = jax.random.split(key, 6)
+    scale = 0.02
+    return {
+        "wqkv": jax.random.normal(ks[0], (D_MODEL, 3 * D_MODEL), jnp.float32) * scale,
+        "wo": jax.random.normal(ks[1], (D_MODEL, D_MODEL), jnp.float32) * scale,
+        "w1": jax.random.normal(ks[2], (D_MODEL, D_FF), jnp.float32) * scale,
+        "w2": jax.random.normal(ks[3], (D_FF, D_MODEL), jnp.float32) * scale,
+        "ln1": jnp.ones((D_MODEL,), jnp.float32),
+        "ln2": jnp.ones((D_MODEL,), jnp.float32),
+    }
+
+
+def _layernorm(x, g):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g
+
+
+def transformer_block(x, wqkv, wo, w1, w2, ln1, ln2):
+    """One pre-norm block over x: [batch, seq, d_model]."""
+    b, s, d = x.shape
+    h = _layernorm(x, ln1)
+    qkv = matmul(h.reshape(b * s, d), wqkv, block_m=64, block_n=64, block_k=32)
+    qkv = qkv.reshape(b, s, 3, N_HEADS, D_HEAD)
+    # [b*heads, s, dh]
+    q = qkv[:, :, 0].transpose(0, 2, 1, 3).reshape(b * N_HEADS, s, D_HEAD)
+    k = qkv[:, :, 1].transpose(0, 2, 1, 3).reshape(b * N_HEADS, s, D_HEAD)
+    v = qkv[:, :, 2].transpose(0, 2, 1, 3).reshape(b * N_HEADS, s, D_HEAD)
+    o = flash_attention(q, k, v, causal=True, block_m=32, block_n=32)
+    o = o.reshape(b, N_HEADS, s, D_HEAD).transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + matmul(o.reshape(b * s, d), wo, block_m=64, block_n=64,
+                   block_k=32).reshape(b, s, d)
+    h = _layernorm(x, ln2)
+    ff = matmul(h.reshape(b * s, d), w1, block_m=64, block_n=64, block_k=32)
+    ff = jax.nn.gelu(ff)
+    ff = matmul(ff, w2, block_m=64, block_n=64, block_k=32)
+    return x + ff.reshape(b, s, d)
+
+
+def block_fn(x, wqkv, wo, w1, w2, ln1, ln2):
+    """Flat-argument entrypoint for AOT lowering (tuple output)."""
+    return (transformer_block(x, wqkv, wo, w1, w2, ln1, ln2),)
+
+
+def example_args():
+    key = jax.random.PRNGKey(0)
+    p = init_params(key)
+    x = jax.random.normal(jax.random.PRNGKey(1), (BATCH, SEQ, D_MODEL),
+                          jnp.float32) * 0.5
+    return (x, p["wqkv"], p["wo"], p["w1"], p["w2"], p["ln1"], p["ln2"])

@@ -1,0 +1,161 @@
+"""L1 kernel correctness: Pallas (interpret) vs pure-jnp oracles.
+
+Hypothesis sweeps tile-compatible shapes and dtypes; assert_allclose
+against ref.py per the repo's validation strategy (DESIGN.md §6).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.dequant_matmul import dequant_matmul_int4
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.linear_attention import chunk_scan, chunk_state
+from compile.kernels.matmul import matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=0.5):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+@settings(max_examples=8, deadline=None)
+@given(
+    mi=st.integers(1, 3),
+    ni=st.integers(1, 3),
+    ki=st.integers(1, 4),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_matmul_matches_ref(mi, ni, ki, dtype):
+    m, n, k = 64 * mi, 64 * ni, 32 * ki
+    a = rand(1, (m, k), dtype)
+    b = rand(2, (k, n), dtype)
+    got = matmul(a, b)
+    want = ref.matmul(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("block", [(32, 32, 32), (64, 32, 16), (64, 64, 64)])
+def test_matmul_block_shapes(block):
+    bm, bn, bk = block
+    a = rand(3, (128, 64))
+    b = rand(4, (64, 128))
+    got = matmul(a, b, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_misaligned():
+    with pytest.raises(AssertionError):
+        matmul(rand(5, (65, 64)), rand(6, (64, 64)))
+
+
+# ------------------------------------------------------- flash attention
+@settings(max_examples=6, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([64, 128, 256]),
+    d=st.sampled_from([32, 64]),
+    causal=st.booleans(),
+)
+def test_flash_attention_matches_ref(bh, s, d, causal):
+    q, k, v = (rand(i, (bh, s, d)) for i in (7, 8, 9))
+    got = flash_attention(q, k, v, causal=causal, block_m=32, block_n=32)
+    want = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_block_sizes_agree():
+    q, k, v = (rand(i, (2, 128, 64)) for i in (10, 11, 12))
+    a = flash_attention(q, k, v, block_m=32, block_n=64)
+    b = flash_attention(q, k, v, block_m=64, block_n=32)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_causal_masks_future():
+    q, k, v = (rand(i, (1, 64, 32)) for i in (13, 14, 15))
+    out = flash_attention(q, k, v, causal=True, block_m=32, block_n=32)
+    # row 0 attends only to position 0 -> equals v[0]
+    np.testing.assert_allclose(out[0, 0], v[0, 0].astype(jnp.float32),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------- dequant gemm
+@settings(max_examples=6, deadline=None)
+@given(
+    n=st.sampled_from([64, 128]),
+    k=st.sampled_from([64, 128, 256]),
+    group=st.sampled_from([32, 64]),
+)
+def test_dequant_matmul_matches_ref(n, k, group):
+    m = 16
+    a = rand(16, (m, k))
+    packed = jax.random.randint(
+        jax.random.PRNGKey(17), (n, k // 2), 0, 255, jnp.int32
+    ).astype(jnp.uint8)
+    scales = jnp.abs(rand(18, (n, k // group), scale=0.05)) + 0.01
+    got = dequant_matmul_int4(a, packed, scales, group_size=group)
+    want = ref.dequant_matmul_int4(a, packed, scales, group)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dequant_codes_roundtrip():
+    packed = jnp.arange(256, dtype=jnp.uint8).reshape(16, 16)
+    scales = jnp.ones((16, 1), jnp.float32)
+    w = ref.dequant_int4(packed, scales, 32)
+    # codes span [-8, 7]
+    assert float(w.min()) == -8.0 and float(w.max()) == 7.0
+
+
+# ------------------------------------------------------ linear attention
+@settings(max_examples=5, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2]),
+    nc=st.sampled_from([1, 2, 4]),
+    n=st.sampled_from([32, 64]),
+    p=st.sampled_from([32, 64]),
+)
+def test_chunk_state_matches_ref(bh, nc, n, p):
+    chunk = 64
+    seq = nc * chunk
+    b = rand(20, (bh, seq, n))
+    x = rand(21, (bh, seq, p))
+    w = rand(22, (bh, seq)) + 0.75
+    got = chunk_state(b, x, w, chunk=chunk)
+    want = ref.chunk_state(b, x, w, chunk)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=5, deadline=None)
+@given(
+    bh=st.sampled_from([1, 2]),
+    nc=st.sampled_from([1, 2]),
+)
+def test_chunk_scan_matches_ref(bh, nc):
+    chunk, n, p = 64, 32, 32
+    seq = nc * chunk
+    c = rand(23, (bh, seq, n))
+    s = rand(24, (bh, nc, n, p))
+    w2 = rand(25, (bh, seq)) + 0.75
+    got = chunk_scan(c, s, w2, chunk=chunk)
+    want = ref.chunk_scan(c, s, w2, chunk)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_chunk_pipeline_composes():
+    """chunk_state output feeds chunk_scan (the Mamba-2 layer dataflow)."""
+    bh, seq, n, p, chunk = 2, 128, 32, 32, 64
+    b = rand(26, (bh, seq, n))
+    x = rand(27, (bh, seq, p))
+    w = jnp.ones((bh, seq), jnp.float32)
+    c = rand(28, (bh, seq, n))
+    s = chunk_state(b, x, w, chunk=chunk)
+    y = chunk_scan(c, s, w, chunk=chunk)
+    want = ref.chunk_scan(c, ref.chunk_state(b, x, w, chunk), w, chunk)
+    np.testing.assert_allclose(y, want, rtol=1e-4, atol=1e-4)

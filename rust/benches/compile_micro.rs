@@ -1,0 +1,77 @@
+//! Compile-path microbenchmarks (the L3 hot path of this system):
+//! kernel compiles/second for each workload family, plus the
+//! dynamic-parameter specialization cost — the knobs the §Perf pass
+//! optimizes.
+
+use std::time::Instant;
+
+use tilelang::ir::dtype::DType;
+use tilelang::passes::lower::{compile, CompileOptions};
+use tilelang::sim::device::Device;
+use tilelang::sim::model::{estimate, Penalties};
+use tilelang::workloads::attention::{flash_attention_program, AttnConfig};
+use tilelang::workloads::dequant::{dequant_matmul_program, DequantConfig, WeightFormat};
+use tilelang::workloads::matmul::{matmul_program, TileConfig};
+
+fn bench<F: FnMut()>(name: &str, iters: u32, mut f: F) -> f64 {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("{:<36} {:>10.3} ms/iter  {:>8.0} iters/s", name, per * 1e3, 1.0 / per);
+    per
+}
+
+fn main() {
+    let dev = Device::h100();
+    let opts = CompileOptions::default();
+
+    println!("== compile-path microbenchmarks ==");
+    let cfg = TileConfig::default_for(4096, 4096, 4096);
+    let gemm_prog = matmul_program(4096, 4096, 4096, DType::F16, &cfg);
+    bench("compile: gemm 128x128x32", 50, || {
+        let _ = compile(&gemm_prog, &dev, &opts).unwrap();
+    });
+
+    let fa_prog = flash_attention_program(
+        32,
+        4096,
+        128,
+        true,
+        &AttnConfig { block_m: 128, block_n: 128, num_stages: 2, threads: 128 },
+    );
+    bench("compile: flash_attention 128x128", 10, || {
+        let _ = compile(&fa_prog, &dev, &opts).unwrap();
+    });
+
+    let dq_prog = dequant_matmul_program(
+        16,
+        4096,
+        4096,
+        WeightFormat::Int4,
+        &DequantConfig::default(),
+    );
+    bench("compile: dequant_matmul w4a16", 10, || {
+        let _ = compile(&dq_prog, &dev, &opts).unwrap();
+    });
+
+    let lowered = compile(&gemm_prog, &dev, &opts).unwrap();
+    bench("simulate: gemm estimate", 200, || {
+        let _ = estimate(&lowered, &dev, &Penalties::none());
+    });
+
+    // autotune sweep cost (what the paper's JIT pays per new shape)
+    bench("autotune: gemm full sweep", 3, || {
+        let _ = tilelang::autotuner::tune_gemm(
+            4096,
+            1024,
+            8192,
+            DType::F16,
+            &dev,
+            &Penalties::none(),
+        );
+    });
+}

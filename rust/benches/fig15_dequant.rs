@@ -1,0 +1,75 @@
+//! Fig. 15 reproduction: dequantize GEMM on A100 (Table 2 V0..V7).
+//!
+//! Paper: vs cuBLAS-W16A16 a maximum speedup of 7.65x (W_INT2 A_INT8);
+//! vs Marlin (W_INT4 A_FP16) an average of 1.04x; vs BitsandBytes
+//! (W_NF4 A_FP16) an average of 1.62x.
+
+use tilelang::baselines::{bitsandbytes_nf4_us, cublas_fp16_us, marlin_us};
+use tilelang::report::{claim, fmt_us, geomean, header, row};
+use tilelang::sim::device::Device;
+use tilelang::sim::model::{simulate_kernel, Penalties};
+use tilelang::workloads::dequant::{dequant_matmul_program, DequantConfig, WeightFormat};
+use tilelang::workloads::shapes::V_SHAPES;
+
+fn tilelang_dequant_us(
+    m: i64,
+    n: i64,
+    k: i64,
+    fmt: WeightFormat,
+    dev: &Device,
+) -> f64 {
+    // decode shapes (m=1) padded to the 16-row instruction tile
+    let pm = m.max(16);
+    let group = if fmt == WeightFormat::Int2 { 64 } else { 32 };
+    let cfg = DequantConfig {
+        block_m: 16,
+        block_n: 64,
+        block_k: 64,
+        num_stages: 3,
+        threads: 128,
+        group_size: group,
+    };
+    let prog = dequant_matmul_program(pm, n, k, fmt, &cfg);
+    simulate_kernel(&prog, dev, &Penalties::none())
+        .unwrap()
+        .time_us
+}
+
+fn main() {
+    let dev = Device::a100();
+    println!("== Fig 15: dequantize GEMM on {} (Table 2 V shapes) ==", dev.name);
+    let widths = [5usize, 16, 11, 11, 11, 11, 11, 11];
+    header(
+        &["shape", "n x k", "W4A16", "marlin", "NF4", "bnb", "W2A8", "cublas16"],
+        &widths,
+    );
+    let (mut vs_marlin, mut vs_bnb, mut vs_cublas) = (Vec::new(), Vec::new(), Vec::new());
+    for s in V_SHAPES {
+        let w4 = tilelang_dequant_us(s.m, s.n, s.k, WeightFormat::Int4, &dev);
+        let nf4 = tilelang_dequant_us(s.m, s.n, s.k, WeightFormat::Nf4, &dev);
+        let w2 = tilelang_dequant_us(s.m, s.n, s.k, WeightFormat::Int2, &dev);
+        let marlin = marlin_us(&s, &dev);
+        let bnb = bitsandbytes_nf4_us(&s, &dev);
+        let cublas = cublas_fp16_us(&s, &dev);
+        vs_marlin.push(marlin / w4);
+        vs_bnb.push(bnb / nf4);
+        vs_cublas.push(cublas / w2);
+        row(
+            &[
+                s.name.to_string(),
+                format!("{}x{}", s.n, s.k),
+                fmt_us(w4),
+                fmt_us(marlin),
+                fmt_us(nf4),
+                fmt_us(bnb),
+                fmt_us(w2),
+                fmt_us(cublas),
+            ],
+            &widths,
+        );
+    }
+    let max_vs_cublas = vs_cublas.iter().cloned().fold(0.0f64, f64::max);
+    claim("fig15 W4A16 vs Marlin (avg)", 1.04, geomean(&vs_marlin));
+    claim("fig15 NF4 vs BitsandBytes (avg)", 1.62, geomean(&vs_bnb));
+    claim("fig15 W2A8 vs cuBLAS-fp16 (max)", 7.65, max_vs_cublas);
+}

@@ -1,0 +1,211 @@
+//! Baseline performance models (§5.1's comparison targets).
+//!
+//! Two kinds:
+//! * **Compiler baselines** (Triton-like, Torch-like): our own tile
+//!   programs re-scored with the scheduling restrictions §1 attributes to
+//!   them (no custom layouts, single pipeline knob, no warp
+//!   specialization, scalar dequant) via `sim::model::Penalties`.
+//! * **Library baselines** (cuBLAS/rocBLAS, FlashAttention-3, FlashMLA,
+//!   AITER, Marlin, BitsandBytes): closed-form roofline models of
+//!   hand-tuned fixed-configuration kernels — near peak on the shapes
+//!   they were tuned for, degraded by tile/wave quantization elsewhere.
+
+use crate::sim::device::{Arch, Device};
+use crate::workloads::shapes::{AttnShape, GemmShape, MlaShape};
+
+/// microseconds for a memory-roofline pass over `bytes` at fraction
+/// `eff` of peak DRAM bandwidth.
+fn mem_us(bytes: f64, dev: &Device, eff: f64) -> f64 {
+    bytes / (dev.dram_gbps * eff) / 1e3
+}
+
+/// microseconds for `flops` at fraction `eff` of tensor peak.
+fn mma_us(flops: f64, dev: &Device, eff: f64) -> f64 {
+    flops / (dev.peak_tensor_tflops() * eff * 1e12) * 1e6
+}
+
+/// Tile-quantization utilization of a fixed `tile` along extent `x`.
+fn tile_util(x: i64, tile: i64) -> f64 {
+    let tiles = (x + tile - 1) / tile;
+    x as f64 / (tiles * tile) as f64
+}
+
+/// Wave-quantization efficiency for `blocks` on `dev` (one block/SM).
+fn wave_eff(blocks: i64, dev: &Device) -> f64 {
+    let waves = (blocks as f64 / dev.sms as f64).ceil().max(1.0);
+    (blocks as f64 / dev.sms as f64 / waves).clamp(0.05, 1.0)
+}
+
+/// Vendor BLAS (cuBLAS / rocBLAS) fp16 GEMM model: fixed 128x128-class
+/// tiles, ~93% of peak on large aligned shapes, memory roofline floor.
+pub fn vendor_gemm_us(s: &GemmShape, dev: &Device) -> f64 {
+    let (tile_m, tile_n) = if s.m >= 128 { (128, 128) } else { (64, 128) };
+    let util = tile_util(s.m, tile_m) * tile_util(s.n, tile_n);
+    let blocks = ((s.m + tile_m - 1) / tile_m) * ((s.n + tile_n - 1) / tile_n);
+    let compute = mma_us(s.flops(), dev, 0.93 * util) / wave_eff(blocks, dev);
+    let bytes = 2.0 * (s.m * s.k + s.k * s.n + s.m * s.n) as f64;
+    let memory = mem_us(bytes, dev, 0.88);
+    compute.max(memory) + 3.0
+}
+
+/// cuBLAS fp16 used as the W16A16 reference bar of Fig. 15: same model,
+/// fp16 weight traffic dominates at m = 1.
+pub fn cublas_fp16_us(s: &GemmShape, dev: &Device) -> f64 {
+    vendor_gemm_us(s, dev)
+}
+
+/// FlashAttention-3 model (§5.2: "its fixed tile sizes cause suboptimal
+/// performance for smaller sequence lengths"): fixed 128x128 tiles,
+/// wgmma+TMA, 85% of tensor peak when saturated.
+pub fn fa3_us(s: &AttnShape, dev: &Device) -> f64 {
+    assert!(dev.arch == Arch::Hopper, "FA3 targets Hopper");
+    let tile_m = 128i64;
+    let blocks = s.batch * s.heads * ((s.seq_len + tile_m - 1) / tile_m);
+    let util = tile_util(s.seq_len, tile_m);
+    let compute = mma_us(s.flops(), dev, 0.85 * util) / wave_eff(blocks, dev);
+    let bytes = 2.0 * (3.0 + 1.0) * (s.batch * s.heads * s.seq_len * s.head_dim) as f64;
+    compute.max(mem_us(bytes, dev, 0.85)) + 4.0
+}
+
+/// PyTorch SDPA (hand-optimized FA2 kernel, no TMA/wgmma): ~55% of peak.
+pub fn torch_fa2_us(s: &AttnShape, dev: &Device) -> f64 {
+    let tile_m = 64i64;
+    let blocks = s.batch * s.heads * ((s.seq_len + tile_m - 1) / tile_m);
+    let compute = mma_us(s.flops(), dev, 0.55 * tile_util(s.seq_len, tile_m))
+        / wave_eff(blocks, dev);
+    let bytes = 2.0 * 4.0 * (s.batch * s.heads * s.seq_len * s.head_dim) as f64;
+    compute.max(mem_us(bytes, dev, 0.75)) + 4.0
+}
+
+/// Naive (non-flash) torch attention for MLA decode: materializes the
+/// full [heads, s_kv] score matrix + weighted sum through global memory
+/// — the 1075x bar of Fig. 14.
+pub fn torch_naive_mla_us(s: &MlaShape, dev: &Device) -> f64 {
+    let scores = (s.batch * s.heads * s.seqlen_kv) as f64;
+    // torch without a fused kernel: KV is repeat-expanded per head
+    // (write + read), QK^T reads it again, PV once more, and the fp32
+    // score tensor makes several softmax round-trips — ~5 full passes
+    // over the per-head-expanded KV (this is what produces the paper's
+    // three-orders-of-magnitude gap)
+    let kv_expanded = (s.batch * s.heads * s.seqlen_kv * (s.dim + s.pe_dim)) as f64 * 2.0;
+    // a very large last-level cache (MI300X's 256MB infinity cache)
+    // absorbs most of the repeated passes; calibrated to the paper's
+    // per-device torch gaps (1075.9x on H100, 129.2x on MI300X)
+    let passes = if dev.l2_bytes >= 128 * 1024 * 1024 { 1.5 } else { 5.0 };
+    let bytes = scores * 4.0 * 5.0 + kv_expanded * passes;
+    let flops = 4.0 * (s.batch * s.heads * s.seqlen_kv) as f64 * (s.dim + s.pe_dim) as f64;
+    mem_us(bytes, dev, 0.6) + mma_us(flops, dev, 0.10) + 20.0
+}
+
+/// FlashInfer-class MLA kernel: good but generic paged-attention path.
+pub fn flashinfer_mla_us(s: &MlaShape, dev: &Device) -> f64 {
+    hand_mla_us(s, dev) / 0.70
+}
+
+/// Hand-written MLA reference (FlashMLA on H100, AITER on MI300X):
+/// decode attention is KV-bandwidth-bound; these kernels hit ~90% of
+/// effective bandwidth.
+pub fn hand_mla_us(s: &MlaShape, dev: &Device) -> f64 {
+    let kv_bytes = (s.batch * s.seqlen_kv * (s.dim + s.pe_dim)) as f64 * 2.0;
+    let flops =
+        4.0 * (s.batch * s.heads * s.seqlen_kv) as f64 * (s.dim + s.pe_dim) as f64;
+    mem_us(kv_bytes, dev, 0.90).max(mma_us(flops, dev, 0.55)) + 4.0
+}
+
+/// Marlin (W4A16) model: heavily tuned for m<=16 decode GEMMs — weight
+/// traffic at 4 bits, near-full bandwidth; fixed layouts degrade on
+/// larger m.
+pub fn marlin_us(s: &GemmShape, dev: &Device) -> f64 {
+    let w_bytes = (s.n * s.k) as f64 * 0.5 + (s.n * s.k / 32) as f64 * 2.0;
+    let act_bytes = (s.m * s.k + s.m * s.n) as f64 * 2.0;
+    let eff = if s.m <= 16 { 0.85 } else { 0.70 };
+    let compute = mma_us(s.flops(), dev, 0.80);
+    mem_us(w_bytes + act_bytes, dev, eff).max(compute) + 3.0
+}
+
+/// BitsandBytes NF4: dequantizes through a scalar LUT into fp16 before
+/// the GEMM — weight traffic is 4-bit but the decode is not fused /
+/// vectorized, costing ~2.5x the roofline pass plus a spill of the fp16
+/// weights for larger m.
+pub fn bitsandbytes_nf4_us(s: &GemmShape, dev: &Device) -> f64 {
+    let w_bytes = (s.n * s.k) as f64 * 0.5;
+    let decode_passes = 2.5;
+    let spill = if s.m > 16 {
+        (s.n * s.k) as f64 * 2.0 // fp16 materialization round-trip
+    } else {
+        0.0
+    };
+    mem_us(w_bytes * decode_passes + spill, dev, 0.80) + 5.0
+}
+
+/// The LOC numbers Fig. 14 reports for each implementation class.
+pub fn baseline_loc(name: &str) -> Option<usize> {
+    match name {
+        "torch" => Some(25),
+        "triton" => Some(160),
+        "flashinfer" => Some(2100),
+        "flashmla" => Some(1600),
+        "fa3" => Some(3200),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::shapes::{FA_SHAPES, MLA_DECODE, M_SHAPES};
+
+    #[test]
+    fn vendor_gemm_is_near_peak_on_large_shapes() {
+        let dev = Device::a100();
+        let s = M_SHAPES[5]; // 8192^3-ish
+        let t = vendor_gemm_us(&s, &dev);
+        let tflops = s.flops() / (t * 1e-6) / 1e12;
+        assert!(tflops > 0.7 * dev.peak_tensor_tflops(), "{} TFLOPS", tflops);
+    }
+
+    #[test]
+    fn fa3_fixed_tiles_hurt_short_sequences() {
+        let dev = Device::h100();
+        let short = FA_SHAPES[0]; // 512
+        let long = AttnShape { seq_len: 8192, ..short };
+        let eff = |s: &AttnShape| s.flops() / (fa3_us(s, &dev) * 1e-6) / 1e12
+            / dev.peak_tensor_tflops();
+        assert!(eff(&long) > eff(&short) * 1.5,
+            "long {} vs short {}", eff(&long), eff(&short));
+    }
+
+    #[test]
+    fn torch_mla_is_catastrophically_slow() {
+        let dev = Device::h100();
+        let naive = torch_naive_mla_us(&MLA_DECODE, &dev);
+        let hand = hand_mla_us(&MLA_DECODE, &dev);
+        assert!(
+            naive / hand > 100.0,
+            "paper reports ~1000x: got {}x",
+            naive / hand
+        );
+    }
+
+    #[test]
+    fn marlin_wins_at_decode_loses_headroom_at_large_m() {
+        let dev = Device::a100();
+        let decode = GemmShape { name: "v", m: 1, n: 16384, k: 16384 };
+        let big = GemmShape { name: "m", m: 4096, n: 16384, k: 16384 };
+        // at m=1 marlin is close to the 4-bit weight roofline
+        let w_bytes = (decode.n * decode.k) as f64 * 0.5;
+        let roof = mem_us(w_bytes, &dev, 1.0);
+        let t = marlin_us(&decode, &dev);
+        assert!(t < roof * 2.0);
+        // at large m it is no longer bandwidth-bound
+        let t_big = marlin_us(&big, &dev);
+        assert!(t_big > t * 10.0);
+    }
+
+    #[test]
+    fn loc_table() {
+        assert!(baseline_loc("fa3").unwrap() > 1000);
+        assert!(baseline_loc("torch").unwrap() < 100);
+        assert!(baseline_loc("tilelang").is_none());
+    }
+}

@@ -1,0 +1,364 @@
+//! L3 kernel-library coordinator: the serving layer that owns the event
+//! loop, worker threads and dynamic batching over the PJRT runtime.
+//!
+//! For a kernel-compiler paper the coordinator is deliberately thin
+//! (DESIGN.md: "if the paper's contribution lives entirely at L2/L1, L3
+//! is a thin driver") — but it is a real one: per-kernel worker threads
+//! each own a compiled executable, requests flow through bounded mpsc
+//! queues, and model workers micro-batch row requests up to the
+//! artifact's batch dimension with a flush deadline (the vLLM-router
+//! pattern scaled to this repo).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Runtime;
+
+/// A raw kernel invocation result.
+pub struct KernelReply {
+    pub output: Result<Vec<f32>, String>,
+    pub queue_us: u128,
+    pub exec_us: u128,
+}
+
+/// A batched-row invocation result (one row of the model batch).
+pub struct RowReply {
+    pub output: Result<Vec<f32>, String>,
+    pub latency_us: u128,
+    /// rows that shared the executed batch
+    pub batch_size: usize,
+}
+
+enum Job {
+    Raw {
+        inputs: Vec<Vec<f32>>,
+        reply: Sender<KernelReply>,
+        enqueued: Instant,
+    },
+    Row {
+        row: Vec<f32>,
+        reply: Sender<RowReply>,
+        enqueued: Instant,
+    },
+    Shutdown,
+}
+
+struct Worker {
+    tx: Sender<Job>,
+    handle: JoinHandle<()>,
+}
+
+/// The coordinator: routes requests to per-kernel workers.
+pub struct Coordinator {
+    workers: HashMap<String, Worker>,
+}
+
+/// Configuration for a batched model worker.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Max rows per executed batch (defaults to the artifact batch dim).
+    pub max_batch: usize,
+    /// Flush waiting rows after this long even if the batch is not full.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 0, // artifact batch dim
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+impl Coordinator {
+    /// Start raw workers for `kernels` from the artifacts in `dir`.
+    /// Each worker owns its own PJRT client + compiled executable (the
+    /// xla handles are not Send, so threads build their own).
+    pub fn start(dir: impl Into<PathBuf>, kernels: &[&str]) -> Result<Coordinator> {
+        let dir = dir.into();
+        let mut workers = HashMap::new();
+        for &k in kernels {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let name = k.to_string();
+            let d = dir.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("kernel-{}", k))
+                .spawn(move || raw_worker(d, name, rx))
+                .map_err(|e| anyhow!("spawn: {}", e))?;
+            workers.insert(k.to_string(), Worker { tx, handle });
+        }
+        Ok(Coordinator { workers })
+    }
+
+    /// Start a batched model worker for `kernel` (input 0 is the batch
+    /// tensor; remaining inputs are weights loaded from the recorded
+    /// example bins).
+    pub fn start_batched(
+        dir: impl Into<PathBuf>,
+        kernel: &str,
+        policy: BatchPolicy,
+    ) -> Result<Coordinator> {
+        let dir = dir.into();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let name = kernel.to_string();
+        let handle = std::thread::Builder::new()
+            .name(format!("model-{}", kernel))
+            .spawn(move || batched_worker(dir, name, policy, rx))
+            .map_err(|e| anyhow!("spawn: {}", e))?;
+        let mut workers = HashMap::new();
+        workers.insert(kernel.to_string(), Worker { tx, handle });
+        Ok(Coordinator { workers })
+    }
+
+    /// Submit a raw kernel invocation.
+    pub fn submit(&self, kernel: &str, inputs: Vec<Vec<f32>>) -> Result<Receiver<KernelReply>> {
+        let w = self
+            .workers
+            .get(kernel)
+            .ok_or_else(|| anyhow!("no worker for {}", kernel))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        w.tx.send(Job::Raw {
+            inputs,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+        })
+        .map_err(|_| anyhow!("worker for {} is gone", kernel))?;
+        Ok(reply_rx)
+    }
+
+    /// Submit one row to a batched model worker.
+    pub fn submit_row(&self, kernel: &str, row: Vec<f32>) -> Result<Receiver<RowReply>> {
+        let w = self
+            .workers
+            .get(kernel)
+            .ok_or_else(|| anyhow!("no worker for {}", kernel))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        w.tx.send(Job::Row {
+            row,
+            reply: reply_tx,
+            enqueued: Instant::now(),
+        })
+        .map_err(|_| anyhow!("worker for {} is gone", kernel))?;
+        Ok(reply_rx)
+    }
+
+    /// Graceful shutdown: drains queues, joins workers.
+    pub fn shutdown(self) {
+        for (_, w) in self.workers.iter() {
+            let _ = w.tx.send(Job::Shutdown);
+        }
+        for (_, w) in self.workers.into_iter() {
+            let _ = w.handle.join();
+        }
+    }
+}
+
+fn raw_worker(dir: PathBuf, kernel: String, rx: Receiver<Job>) {
+    let runtime = match Runtime::new(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            drain_with_error(&rx, &format!("runtime init failed: {}", e));
+            return;
+        }
+    };
+    let loaded = match runtime.load(&kernel) {
+        Ok(k) => k,
+        Err(e) => {
+            drain_with_error(&rx, &format!("compile failed: {}", e));
+            return;
+        }
+    };
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Raw {
+                inputs,
+                reply,
+                enqueued,
+            } => {
+                let queue_us = enqueued.elapsed().as_micros();
+                let t0 = Instant::now();
+                let output = loaded.execute(&inputs).map_err(|e| e.to_string());
+                let _ = reply.send(KernelReply {
+                    output,
+                    queue_us,
+                    exec_us: t0.elapsed().as_micros(),
+                });
+            }
+            Job::Row { reply, .. } => {
+                let _ = reply.send(RowReply {
+                    output: Err("raw worker cannot batch rows".into()),
+                    latency_us: 0,
+                    batch_size: 0,
+                });
+            }
+            Job::Shutdown => break,
+        }
+    }
+}
+
+fn batched_worker(dir: PathBuf, kernel: String, policy: BatchPolicy, rx: Receiver<Job>) {
+    let runtime = match Runtime::new(&dir) {
+        Ok(r) => r,
+        Err(e) => {
+            drain_with_error(&rx, &format!("runtime init failed: {}", e));
+            return;
+        }
+    };
+    let loaded = match runtime.load(&kernel) {
+        Ok(k) => k,
+        Err(e) => {
+            drain_with_error(&rx, &format!("compile failed: {}", e));
+            return;
+        }
+    };
+    let weights = match runtime.example_inputs(&kernel) {
+        Ok(mut ins) => {
+            ins.remove(0);
+            ins
+        }
+        Err(e) => {
+            drain_with_error(&rx, &format!("weights missing: {}", e));
+            return;
+        }
+    };
+    let batch_shape = &loaded.spec.in_shapes[0];
+    let max_batch = if policy.max_batch == 0 {
+        batch_shape[0] as usize
+    } else {
+        policy.max_batch.min(batch_shape[0] as usize)
+    };
+    let row_len: usize = batch_shape[1..].iter().product::<i64>() as usize;
+    let out_row_len = loaded.spec.out_len() / batch_shape[0] as usize;
+
+    let mut pending: Vec<(Vec<f32>, Sender<RowReply>, Instant)> = Vec::new();
+    let mut shutdown = false;
+    while !shutdown {
+        // wait for the first row, then micro-batch up to the deadline
+        let deadline = if pending.is_empty() {
+            match rx.recv() {
+                Ok(Job::Row { row, reply, enqueued }) => {
+                    pending.push((row, reply, enqueued));
+                    Instant::now() + policy.max_wait
+                }
+                Ok(Job::Shutdown) | Err(_) => break,
+                Ok(Job::Raw { reply, .. }) => {
+                    let _ = reply.send(KernelReply {
+                        output: Err("batched worker only accepts rows".into()),
+                        queue_us: 0,
+                        exec_us: 0,
+                    });
+                    continue;
+                }
+            }
+        } else {
+            Instant::now() + policy.max_wait
+        };
+        while pending.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Job::Row { row, reply, enqueued }) => {
+                    pending.push((row, reply, enqueued))
+                }
+                Ok(Job::Shutdown) | Err(RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Ok(Job::Raw { reply, .. }) => {
+                    let _ = reply.send(KernelReply {
+                        output: Err("batched worker only accepts rows".into()),
+                        queue_us: 0,
+                        exec_us: 0,
+                    });
+                }
+            }
+        }
+        if pending.is_empty() {
+            continue;
+        }
+        // assemble the batch (zero-pad unused slots)
+        let rows = std::mem::take(&mut pending);
+        let n = rows.len();
+        let mut batch = vec![0f32; batch_shape[0] as usize * row_len];
+        let mut bad = Vec::new();
+        for (i, (row, _, _)) in rows.iter().enumerate() {
+            if row.len() != row_len {
+                bad.push(i);
+                continue;
+            }
+            batch[i * row_len..(i + 1) * row_len].copy_from_slice(row);
+        }
+        let mut inputs = vec![batch];
+        inputs.extend(weights.iter().cloned());
+        let result = loaded.execute(&inputs).map_err(|e| e.to_string());
+        for (i, (_, reply, enq)) in rows.into_iter().enumerate() {
+            let output = if bad.contains(&i) {
+                Err(format!("row length != {}", row_len))
+            } else {
+                result
+                    .as_ref()
+                    .map(|out| out[i * out_row_len..(i + 1) * out_row_len].to_vec())
+                    .map_err(|e| e.clone())
+            };
+            let _ = reply.send(RowReply {
+                output,
+                latency_us: enq.elapsed().as_micros(),
+                batch_size: n,
+            });
+        }
+    }
+}
+
+fn drain_with_error(rx: &Receiver<Job>, msg: &str) {
+    while let Ok(job) = rx.recv() {
+        match job {
+            Job::Raw { reply, .. } => {
+                let _ = reply.send(KernelReply {
+                    output: Err(msg.to_string()),
+                    queue_us: 0,
+                    exec_us: 0,
+                });
+            }
+            Job::Row { reply, .. } => {
+                let _ = reply.send(RowReply {
+                    output: Err(msg.to_string()),
+                    latency_us: 0,
+                    batch_size: 0,
+                });
+            }
+            Job::Shutdown => break,
+        }
+    }
+}
+
+/// Latency percentile helper for serving reports.
+pub fn percentile(sorted_us: &[u128], p: f64) -> u128 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted_us.len() as f64 - 1.0) * p / 100.0).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::percentile;
+
+    #[test]
+    fn percentile_basics() {
+        let v = vec![1u128, 2, 3, 4, 100];
+        assert_eq!(percentile(&v, 50.0), 3);
+        assert_eq!(percentile(&v, 99.0), 100);
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&[], 50.0), 0);
+    }
+}

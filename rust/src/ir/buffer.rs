@@ -1,0 +1,182 @@
+//! Buffers and memory scopes.
+//!
+//! TileLang makes memory placement explicit (§3.1 "Explicit Hardware
+//! Memory Allocation"): `T.alloc_shared` places a tile in fast on-chip
+//! storage, `T.alloc_fragment` declares a *block-level* register buffer
+//! whose thread partitioning is later derived by layout inference.
+
+use super::dtype::DType;
+use super::expr::{Expr, IntoExpr};
+
+pub type BufferId = u32;
+
+/// Where a buffer lives in the memory hierarchy.
+///
+/// GPU terms (the paper's): `Global` = DRAM, `Shared` = SM shared memory,
+/// `Fragment` = per-thread register file (block-level view).
+/// TPU mapping (DESIGN.md §Hardware-Adaptation): `Global` = HBM,
+/// `Shared` = VMEM scratch, `Fragment` = vector registers / accumulators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemScope {
+    Global,
+    Shared,
+    /// Dynamic shared memory (`shared.dyn`) — same physics as `Shared`,
+    /// different allocation path; tracked for smem-usage accounting.
+    SharedDyn,
+    Fragment,
+    /// Per-thread scalar locals (loop-carried reductions etc.).
+    Local,
+}
+
+impl MemScope {
+    pub fn is_shared(self) -> bool {
+        matches!(self, MemScope::Shared | MemScope::SharedDyn)
+    }
+    pub fn on_chip(self) -> bool {
+        self != MemScope::Global
+    }
+}
+
+/// A tensor buffer. Global parameter shapes may be symbolic (dynamic
+/// shapes, §1 "dynamic parameter simplification"); on-chip tiles are
+/// always static.
+#[derive(Clone, Debug)]
+pub struct Buffer {
+    pub id: BufferId,
+    pub name: String,
+    pub shape: Vec<Expr>,
+    pub dtype: DType,
+    pub scope: MemScope,
+}
+
+impl Buffer {
+    /// Static shape if every dimension is a constant.
+    pub fn static_shape(&self) -> Option<Vec<i64>> {
+        self.shape.iter().map(|e| e.as_int()).collect()
+    }
+
+    /// Number of elements for static shapes.
+    pub fn static_size(&self) -> Option<i64> {
+        self.static_shape().map(|s| s.iter().product())
+    }
+
+    /// Storage bytes for static shapes (sub-byte dtypes pack).
+    pub fn static_bytes(&self) -> Option<i64> {
+        self.static_size()
+            .map(|n| (n * self.dtype.bits() as i64 + 7) / 8)
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+}
+
+/// A rectangular region of a buffer: `buffer[offset0 : offset0 + shape0,
+/// ...]`. Offsets are expressions (typically over block indices and
+/// pipeline loop vars); the extent is static — it is a tile.
+#[derive(Clone, Debug)]
+pub struct BufferRegion {
+    pub buffer: BufferId,
+    pub offsets: Vec<Expr>,
+    pub shape: Vec<i64>,
+}
+
+impl BufferRegion {
+    /// The full extent of a statically-shaped buffer.
+    pub fn full(buf: &Buffer) -> BufferRegion {
+        let shape = buf
+            .static_shape()
+            .expect("BufferRegion::full requires a static buffer");
+        BufferRegion {
+            buffer: buf.id,
+            offsets: shape.iter().map(|_| Expr::int(0)).collect(),
+            shape,
+        }
+    }
+
+    /// A tile at symbolic offsets.
+    pub fn tile(buf: BufferId, offsets: Vec<Expr>, shape: Vec<i64>) -> BufferRegion {
+        assert_eq!(offsets.len(), shape.len());
+        BufferRegion {
+            buffer: buf,
+            offsets,
+            shape,
+        }
+    }
+
+    pub fn size(&self) -> i64 {
+        self.shape.iter().product()
+    }
+}
+
+/// Convenience for building offset vectors from mixed ints/exprs.
+pub fn offsets(items: Vec<Box<dyn IntoExprBoxed>>) -> Vec<Expr> {
+    items.into_iter().map(|b| b.into_expr_boxed()).collect()
+}
+
+pub trait IntoExprBoxed {
+    fn into_expr_boxed(self: Box<Self>) -> Expr;
+}
+
+impl<T: IntoExpr> IntoExprBoxed for T {
+    fn into_expr_boxed(self: Box<Self>) -> Expr {
+        (*self).into_expr()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::expr::Var;
+
+    #[test]
+    fn static_accounting() {
+        let b = Buffer {
+            id: 0,
+            name: "a_shared".into(),
+            shape: vec![Expr::int(128), Expr::int(32)],
+            dtype: DType::F16,
+            scope: MemScope::Shared,
+        };
+        assert_eq!(b.static_size(), Some(4096));
+        assert_eq!(b.static_bytes(), Some(8192));
+
+        let packed = Buffer {
+            id: 1,
+            name: "w_int4".into(),
+            shape: vec![Expr::int(128), Expr::int(32)],
+            dtype: DType::I4,
+            scope: MemScope::Global,
+        };
+        assert_eq!(packed.static_bytes(), Some(2048));
+    }
+
+    #[test]
+    fn dynamic_shape_is_not_static() {
+        let m = Var::fresh("m");
+        let b = Buffer {
+            id: 0,
+            name: "x".into(),
+            shape: vec![m.expr(), Expr::int(64)],
+            dtype: DType::F32,
+            scope: MemScope::Global,
+        };
+        assert_eq!(b.static_shape(), None);
+    }
+
+    #[test]
+    fn region_full_and_tile() {
+        let b = Buffer {
+            id: 3,
+            name: "s".into(),
+            shape: vec![Expr::int(64), Expr::int(64)],
+            dtype: DType::F32,
+            scope: MemScope::Shared,
+        };
+        let r = BufferRegion::full(&b);
+        assert_eq!(r.size(), 4096);
+        let bx = Var::fresh("bx");
+        let t = BufferRegion::tile(b.id, vec![bx.expr() * 64, Expr::int(0)], vec![64, 64]);
+        assert_eq!(t.shape, vec![64, 64]);
+    }
+}

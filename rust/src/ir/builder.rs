@@ -1,0 +1,519 @@
+//! The frontend builder — rust's stand-in for the paper's Python-embedded
+//! syntax. A `KernelBuilder` call sequence reads like Fig. 16:
+//!
+//! ```no_run
+//! use tilelang::ir::builder::KernelBuilder;
+//! use tilelang::ir::dtype::DType::{F16, F32};
+//!
+//! let (m, n, k) = (256, 256, 256);
+//! let (bm, bn, bk) = (64, 64, 32);
+//! let mut t = KernelBuilder::new("matmul", 128);
+//! let a = t.param("A", &[m, k], F16);
+//! let b = t.param("B", &[k, n], F16);
+//! let c = t.param("C", &[m, n], F16);
+//! let (bx, by) = t.kernel2(n / bn, m / bm);
+//! let a_s = t.alloc_shared("A_shared", &[bm, bk], F16);
+//! let b_s = t.alloc_shared("B_shared", &[bk, bn], F16);
+//! let c_l = t.alloc_fragment("C_local", &[bm, bn], F32);
+//! t.clear(c_l);
+//! t.pipelined(k / bk, 2, |t, ko| {
+//!     t.copy_in(a, vec![by.expr() * bm, ko.expr() * bk], a_s);
+//!     t.copy_in(b, vec![ko.expr() * bk, bx.expr() * bn], b_s);
+//!     t.gemm(a_s, b_s, c_l);
+//! });
+//! t.copy_out(c_l, c, vec![by.expr() * bm, bx.expr() * bn]);
+//! let prog = t.finish();
+//! assert_eq!(prog.tile_ops().len(), 5);
+//! ```
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::buffer::{Buffer, BufferId, BufferRegion, MemScope};
+use super::dtype::DType;
+use super::expr::{Expr, IntoExpr, Var};
+use super::program::{
+    Annotations, AtomicKind, DequantScheme, ElemStmt, ForKind, GemmWarpPolicy, ReduceKind, Stmt,
+    TileOp, TileProgram,
+};
+use crate::layout::fragment::Fragment;
+use crate::layout::layout::Layout;
+
+static NEXT_BUFFER: AtomicU32 = AtomicU32::new(0);
+
+fn fresh_buffer_id() -> BufferId {
+    NEXT_BUFFER.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Builder for a single tile program.
+pub struct KernelBuilder {
+    name: String,
+    threads: i64,
+    params: Vec<Buffer>,
+    dyn_params: Vec<Var>,
+    grid: Vec<Expr>,
+    block_vars: Vec<Var>,
+    allocs: Vec<Buffer>,
+    frames: Vec<Vec<Stmt>>,
+    annotations: Annotations,
+}
+
+impl KernelBuilder {
+    pub fn new(name: &str, threads: i64) -> KernelBuilder {
+        KernelBuilder {
+            name: name.to_string(),
+            threads,
+            params: Vec::new(),
+            dyn_params: Vec::new(),
+            grid: Vec::new(),
+            block_vars: Vec::new(),
+            allocs: Vec::new(),
+            frames: vec![Vec::new()],
+            annotations: Annotations::default(),
+        }
+    }
+
+    /// Declare a global tensor parameter (static dims).
+    pub fn param(&mut self, name: &str, shape: &[i64], dtype: DType) -> BufferId {
+        let id = fresh_buffer_id();
+        self.params.push(Buffer {
+            id,
+            name: name.to_string(),
+            shape: shape.iter().map(|&d| Expr::int(d)).collect(),
+            dtype,
+            scope: MemScope::Global,
+        });
+        id
+    }
+
+    /// Declare a global tensor parameter with symbolic dims.
+    pub fn param_dyn(&mut self, name: &str, shape: Vec<Expr>, dtype: DType) -> BufferId {
+        let id = fresh_buffer_id();
+        self.params.push(Buffer {
+            id,
+            name: name.to_string(),
+            shape,
+            dtype,
+            scope: MemScope::Global,
+        });
+        id
+    }
+
+    /// Declare a dynamic scalar parameter (a runtime shape).
+    pub fn dyn_var(&mut self, name: &str) -> Var {
+        let v = Var::fresh(name);
+        self.dyn_params.push(v.clone());
+        v
+    }
+
+    /// `with T.Kernel(gx) as bx` — 1-d grid.
+    pub fn kernel1(&mut self, gx: impl IntoExpr) -> Var {
+        let bx = Var::fresh("bx");
+        self.grid = vec![gx.into_expr()];
+        self.block_vars = vec![bx.clone()];
+        bx
+    }
+
+    /// `with T.Kernel(gx, gy) as (bx, by)` — 2-d grid.
+    pub fn kernel2(&mut self, gx: impl IntoExpr, gy: impl IntoExpr) -> (Var, Var) {
+        let bx = Var::fresh("bx");
+        let by = Var::fresh("by");
+        self.grid = vec![gx.into_expr(), gy.into_expr()];
+        self.block_vars = vec![bx.clone(), by.clone()];
+        (bx, by)
+    }
+
+    /// `T.alloc_shared(shape, dtype)`.
+    pub fn alloc_shared(&mut self, name: &str, shape: &[i64], dtype: DType) -> BufferId {
+        self.alloc(name, shape, dtype, MemScope::Shared)
+    }
+
+    /// `T.alloc_fragment(shape, dtype)` — block-level register buffer.
+    pub fn alloc_fragment(&mut self, name: &str, shape: &[i64], dtype: DType) -> BufferId {
+        self.alloc(name, shape, dtype, MemScope::Fragment)
+    }
+
+    fn alloc(&mut self, name: &str, shape: &[i64], dtype: DType, scope: MemScope) -> BufferId {
+        let id = fresh_buffer_id();
+        self.allocs.push(Buffer {
+            id,
+            name: name.to_string(),
+            shape: shape.iter().map(|&d| Expr::int(d)).collect(),
+            dtype,
+            scope,
+        });
+        id
+    }
+
+    fn buffer(&self, id: BufferId) -> &Buffer {
+        self.params
+            .iter()
+            .chain(self.allocs.iter())
+            .find(|b| b.id == id)
+            .expect("unknown buffer")
+    }
+
+    fn push(&mut self, s: Stmt) {
+        self.frames.last_mut().unwrap().push(s);
+    }
+
+    /// `T.copy(global[offs...], tile)` — global → on-chip, tile-shaped.
+    /// The global region's rank follows the offsets; a 2-d tile sliced
+    /// from a 3-d tensor gets leading extent-1 dims (paper's
+    /// `Q[bx, range, :]` style slicing).
+    pub fn copy_in(&mut self, src: BufferId, offsets: Vec<Expr>, dst: BufferId) {
+        let shape = self
+            .buffer(dst)
+            .static_shape()
+            .expect("copy destination tile must be static");
+        let mut src_shape = shape.clone();
+        while src_shape.len() < offsets.len() {
+            src_shape.insert(0, 1);
+        }
+        self.push(Stmt::Op(TileOp::Copy {
+            src: BufferRegion::tile(src, offsets, src_shape),
+            dst: BufferRegion::full_shape(dst, shape),
+        }));
+    }
+
+    /// `T.copy(tile, global[offs...])` — on-chip → global.
+    pub fn copy_out(&mut self, src: BufferId, dst: BufferId, offsets: Vec<Expr>) {
+        let shape = self
+            .buffer(src)
+            .static_shape()
+            .expect("copy source tile must be static");
+        let mut dst_shape = shape.clone();
+        while dst_shape.len() < offsets.len() {
+            dst_shape.insert(0, 1);
+        }
+        self.push(Stmt::Op(TileOp::Copy {
+            src: BufferRegion::full_shape(src, shape),
+            dst: BufferRegion::tile(dst, offsets, dst_shape),
+        }));
+    }
+
+    /// `T.copy(tile, tile)` — between on-chip scopes.
+    pub fn copy(&mut self, src: BufferId, dst: BufferId) {
+        let ss = self.buffer(src).static_shape().expect("static src");
+        let ds = self.buffer(dst).static_shape().expect("static dst");
+        self.push(Stmt::Op(TileOp::Copy {
+            src: BufferRegion::full_shape(src, ss),
+            dst: BufferRegion::full_shape(dst, ds),
+        }));
+    }
+
+    /// `T.clear(buf)`.
+    pub fn clear(&mut self, buf: BufferId) {
+        self.fill(buf, 0.0);
+    }
+
+    /// `T.fill(buf, v)`.
+    pub fn fill(&mut self, buf: BufferId, value: f64) {
+        self.push(Stmt::Op(TileOp::Fill { buf, value }));
+    }
+
+    /// `T.gemm(A, B, C)` with default policy.
+    pub fn gemm(&mut self, a: BufferId, b: BufferId, c: BufferId) {
+        self.gemm_opts(a, b, c, false, false, GemmWarpPolicy::default());
+    }
+
+    /// `T.gemm(..., transpose_B=True, policy=...)`.
+    pub fn gemm_opts(
+        &mut self,
+        a: BufferId,
+        b: BufferId,
+        c: BufferId,
+        trans_a: bool,
+        trans_b: bool,
+        policy: GemmWarpPolicy,
+    ) {
+        self.push(Stmt::Op(TileOp::Gemm {
+            a,
+            b,
+            c,
+            trans_a,
+            trans_b,
+            policy,
+        }));
+    }
+
+    /// `T.reduce_max(src, dst, dim, clear)` and friends.
+    pub fn reduce(
+        &mut self,
+        src: BufferId,
+        dst: BufferId,
+        dim: usize,
+        kind: ReduceKind,
+        clear: bool,
+    ) {
+        self.push(Stmt::Op(TileOp::Reduce {
+            src,
+            dst,
+            dim,
+            kind,
+            clear,
+        }));
+    }
+
+    /// `T.atomic_add(global[offs...], tile)`.
+    pub fn atomic(
+        &mut self,
+        dst: BufferId,
+        offsets: Vec<Expr>,
+        src: BufferId,
+        kind: AtomicKind,
+    ) {
+        let shape = self.buffer(src).static_shape().expect("static src");
+        self.push(Stmt::Op(TileOp::Atomic {
+            dst: BufferRegion::tile(dst, offsets, shape),
+            src,
+            kind,
+        }));
+    }
+
+    /// Dequantize packed sub-byte weights into a compute fragment.
+    pub fn dequant(
+        &mut self,
+        src: BufferId,
+        dst: BufferId,
+        scheme: DequantScheme,
+        scale: Option<BufferId>,
+        group_size: i64,
+    ) {
+        self.push(Stmt::Op(TileOp::Dequant {
+            src,
+            dst,
+            scheme,
+            scale,
+            group_size,
+        }));
+    }
+
+    /// `for ko in T.Pipelined(extent, num_stages):` — the annotated loop.
+    pub fn pipelined(
+        &mut self,
+        extent: impl IntoExpr,
+        num_stages: usize,
+        f: impl FnOnce(&mut KernelBuilder, &Var),
+    ) {
+        self.pipelined_explicit(extent, num_stages, None, None, f)
+    }
+
+    /// Pipelined loop with explicit order/stage overrides (§4.4).
+    pub fn pipelined_explicit(
+        &mut self,
+        extent: impl IntoExpr,
+        num_stages: usize,
+        order: Option<Vec<usize>>,
+        stage: Option<Vec<usize>>,
+        f: impl FnOnce(&mut KernelBuilder, &Var),
+    ) {
+        let var = Var::fresh("ko");
+        self.frames.push(Vec::new());
+        f(self, &var);
+        let body = self.frames.pop().unwrap();
+        self.push(Stmt::For {
+            var,
+            extent: extent.into_expr(),
+            kind: ForKind::Pipelined {
+                num_stages,
+                order,
+                stage,
+            },
+            body,
+        });
+    }
+
+    /// Plain serial loop.
+    pub fn serial(&mut self, extent: impl IntoExpr, f: impl FnOnce(&mut KernelBuilder, &Var)) {
+        let var = Var::fresh("k");
+        self.frames.push(Vec::new());
+        f(self, &var);
+        let body = self.frames.pop().unwrap();
+        self.push(Stmt::For {
+            var,
+            extent: extent.into_expr(),
+            kind: ForKind::Serial,
+            body,
+        });
+    }
+
+    /// `if cond:` at tile level (tail-split predication etc.).
+    pub fn if_then(&mut self, cond: Expr, f: impl FnOnce(&mut KernelBuilder)) {
+        self.frames.push(Vec::new());
+        f(self);
+        let then_body = self.frames.pop().unwrap();
+        self.push(Stmt::If {
+            cond,
+            then_body,
+            else_body: Vec::new(),
+        });
+    }
+
+    /// `for i, j in T.Parallel(e0, e1): body` — element-wise compute.
+    /// The closure receives the loop vars and returns the stores.
+    pub fn parallel(&mut self, extents: &[i64], f: impl FnOnce(&[Var]) -> Vec<ElemStmt>) {
+        let vars: Vec<Var> = extents
+            .iter()
+            .enumerate()
+            .map(|(d, _)| Var::fresh(&format!("p{}", d)))
+            .collect();
+        let body = f(&vars);
+        self.push(Stmt::ParallelFor {
+            vars,
+            extents: extents.to_vec(),
+            body,
+        });
+    }
+
+    /// `T.annotate_layout({buf: layout})`.
+    pub fn annotate_layout(&mut self, buf: BufferId, layout: Layout) {
+        self.annotations.layouts.insert(buf, layout);
+    }
+
+    /// Pin a fragment layout explicitly (expert thread-level control).
+    pub fn annotate_fragment(&mut self, buf: BufferId, frag: Fragment) {
+        self.annotations.fragments.insert(buf, frag);
+    }
+
+    /// `T.use_swizzle(bits)`.
+    pub fn use_swizzle(&mut self, bits: u32) {
+        self.annotations.swizzle_blocks = Some(bits);
+    }
+
+    /// Ablation: disable automatic shared-memory swizzling.
+    pub fn no_smem_swizzle(&mut self) {
+        self.annotations.no_smem_swizzle = true;
+    }
+
+    /// Ablation: disable warp specialization.
+    pub fn no_warp_specialize(&mut self) {
+        self.annotations.no_warp_specialize = true;
+    }
+
+    pub fn finish(mut self) -> TileProgram {
+        assert_eq!(self.frames.len(), 1, "unbalanced builder frames");
+        assert!(
+            !self.grid.is_empty(),
+            "kernel context not declared: call kernel1/kernel2"
+        );
+        TileProgram {
+            name: self.name,
+            params: self.params,
+            dyn_params: self.dyn_params,
+            grid: self.grid,
+            block_vars: self.block_vars,
+            threads: self.threads,
+            allocs: self.allocs,
+            body: self.frames.pop().unwrap(),
+            annotations: self.annotations,
+        }
+    }
+}
+
+impl BufferRegion {
+    /// Region covering a whole statically-shaped tile buffer.
+    pub fn full_shape(buf: BufferId, shape: Vec<i64>) -> BufferRegion {
+        BufferRegion {
+            buffer: buf,
+            offsets: shape.iter().map(|_| Expr::int(0)).collect(),
+            shape,
+        }
+    }
+}
+
+/// Helper to write `dst[i, j] = value` inside `parallel` bodies.
+pub fn store(dst: BufferId, indices: Vec<Expr>, value: Expr) -> ElemStmt {
+    ElemStmt {
+        dst,
+        indices,
+        value,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::dtype::DType::{F16, F32};
+    use crate::ir::program::verify;
+
+    /// The Fig. 16 GEMM, straight from the paper's appendix B.1.
+    pub fn fig16_matmul(m: i64, n: i64, k: i64, bm: i64, bn: i64, bk: i64) -> TileProgram {
+        let mut t = KernelBuilder::new("matmul", 128);
+        let a = t.param("A", &[m, k], F16);
+        let b = t.param("B", &[k, n], F16);
+        let c = t.param("C", &[m, n], F16);
+        let (bx, by) = t.kernel2(n / bn, m / bm);
+        let a_s = t.alloc_shared("A_shared", &[bm, bk], F16);
+        let b_s = t.alloc_shared("B_shared", &[bk, bn], F16);
+        let c_l = t.alloc_fragment("C_local", &[bm, bn], F32);
+        t.clear(c_l);
+        t.pipelined(k / bk, 2, |t, ko| {
+            t.copy_in(a, vec![by.expr() * bm, ko.expr() * bk], a_s);
+            t.copy_in(b, vec![ko.expr() * bk, bx.expr() * bn], b_s);
+            t.gemm(a_s, b_s, c_l);
+        });
+        t.copy_out(c_l, c, vec![by.expr() * bm, bx.expr() * bn]);
+        t.finish()
+    }
+
+    #[test]
+    fn matmul_builds_and_verifies() {
+        let p = fig16_matmul(256, 256, 256, 64, 64, 32);
+        assert_eq!(p.params.len(), 3);
+        assert_eq!(p.allocs.len(), 3);
+        assert_eq!(p.tile_ops().len(), 5);
+        assert_eq!(p.shared_bytes(), (64 * 32 + 32 * 64) * 2);
+        verify(&p).unwrap();
+    }
+
+    #[test]
+    fn verify_catches_shape_mismatch() {
+        let mut t = KernelBuilder::new("bad", 128);
+        let _ = t.kernel1(1);
+        let a = t.alloc_shared("a", &[64, 32], F16);
+        let b = t.alloc_shared("b", &[16, 64], F16); // K mismatch
+        let c = t.alloc_fragment("c", &[64, 64], F32);
+        t.gemm(a, b, c);
+        let p = t.finish();
+        assert!(verify(&p).is_err());
+    }
+
+    #[test]
+    fn parallel_body_and_loc_metric() {
+        use crate::ir::expr::Expr;
+        let mut t = KernelBuilder::new("scale", 128);
+        let _ = t.kernel1(4);
+        let c = t.alloc_fragment("c", &[128, 8], F32);
+        let s = t.alloc_fragment("s", &[8], F32);
+        t.parallel(&[128, 8], |v| {
+            let (i, j) = (&v[0], &v[1]);
+            vec![store(
+                c,
+                vec![i.expr(), j.expr()],
+                Expr::load(c, vec![i.expr(), j.expr()])
+                    * Expr::load(s, vec![j.expr()]),
+            )]
+        });
+        let p = t.finish();
+        assert!(p.frontend_loc() > 4);
+        verify(&p).unwrap();
+    }
+
+    #[test]
+    fn dynamic_specialization_folds_grid() {
+        use crate::ir::program::specialize;
+        use std::collections::HashMap;
+        let mut t = KernelBuilder::new("dyn_matmul", 128);
+        let mvar = t.dyn_var("M");
+        let a = t.param_dyn("A", vec![mvar.expr(), Expr::int(256)], F16);
+        let _ = a;
+        let _bx = t.kernel1(mvar.expr().floordiv(64));
+        let p = t.finish();
+        let mut bind = HashMap::new();
+        bind.insert(mvar.id, 512i64);
+        let sp = specialize(&p, &bind);
+        assert!(sp.dyn_params.is_empty());
+        assert_eq!(sp.grid[0].as_int(), Some(8));
+        assert_eq!(sp.params[0].static_shape(), Some(vec![512, 256]));
+    }
+}

@@ -1,0 +1,330 @@
+//! Element data types for tile programs.
+//!
+//! TileLang's evaluation (§5) spans fp16/bf16 GEMM with fp32 accumulation,
+//! int8 (DP4A / IMMA pathways, §4.3) and sub-byte weight formats for the
+//! dequantize-GEMM study (Fig. 15): INT4, INT2, NF4 and FP4-E2M1. Sub-byte
+//! types are *storage* types: they are packed into bytes in global memory
+//! and expanded to a compute type by the `Dequant` tile operator.
+
+use std::fmt;
+
+/// Element type of a buffer or scalar expression.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    F16,
+    BF16,
+    I32,
+    I16,
+    I8,
+    U8,
+    /// 4-bit signed integer (packed storage).
+    I4,
+    /// 4-bit unsigned integer (packed storage).
+    U4,
+    /// 2-bit unsigned integer (packed storage).
+    U2,
+    /// 4-bit NormalFloat (QLoRA's NF4): a 16-entry lookup table of
+    /// quantiles of N(0,1); storage-only, dequantized via LUT.
+    NF4,
+    /// 4-bit float, 2-bit exponent / 1-bit mantissa (paper Fig. 17).
+    FP4E2M1,
+    Bool,
+}
+
+impl DType {
+    /// Storage width in bits.
+    pub fn bits(self) -> u32 {
+        match self {
+            DType::F32 | DType::I32 => 32,
+            DType::F16 | DType::BF16 | DType::I16 => 16,
+            DType::I8 | DType::U8 => 8,
+            DType::I4 | DType::U4 | DType::NF4 | DType::FP4E2M1 => 4,
+            DType::U2 => 2,
+            DType::Bool => 8,
+        }
+    }
+
+    /// Storage width in bytes for byte-addressable types; sub-byte types
+    /// return 0 and must be addressed through packed buffers.
+    pub fn bytes(self) -> usize {
+        (self.bits() / 8) as usize
+    }
+
+    /// True if this is a sub-byte packed storage type.
+    pub fn is_sub_byte(self) -> bool {
+        self.bits() < 8
+    }
+
+    /// Number of elements packed per byte (1 for >= 8-bit types).
+    pub fn elems_per_byte(self) -> usize {
+        if self.is_sub_byte() {
+            (8 / self.bits()) as usize
+        } else {
+            1
+        }
+    }
+
+    pub fn is_float(self) -> bool {
+        matches!(
+            self,
+            DType::F32 | DType::F16 | DType::BF16 | DType::NF4 | DType::FP4E2M1
+        )
+    }
+
+    pub fn is_int(self) -> bool {
+        !self.is_float() && self != DType::Bool
+    }
+
+    /// The natural accumulator type for a GEMM whose inputs are `self`
+    /// (fp16/bf16 -> fp32, int8/int4/int2 -> int32), mirroring the MMA
+    /// instruction families of §4.3.
+    pub fn accum(self) -> DType {
+        if self.is_float() {
+            DType::F32
+        } else {
+            DType::I32
+        }
+    }
+
+    /// Maximum hardware vector width for this dtype, in elements, assuming
+    /// 128-bit vector memory transactions (`ld.global.v4.b32` class).
+    pub fn max_vector_lanes(self) -> u32 {
+        (128 / self.bits()).max(1)
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::F32 => "float32",
+            DType::F16 => "float16",
+            DType::BF16 => "bfloat16",
+            DType::I32 => "int32",
+            DType::I16 => "int16",
+            DType::I8 => "int8",
+            DType::U8 => "uint8",
+            DType::I4 => "int4",
+            DType::U4 => "uint4",
+            DType::U2 => "uint2",
+            DType::NF4 => "nf4",
+            DType::FP4E2M1 => "fp4_e2m1",
+            DType::Bool => "bool",
+        };
+        f.write_str(s)
+    }
+}
+
+/// The 16-entry NF4 lookup table (quantiles of a standard normal,
+/// normalized to [-1, 1]) — the table BitsandBytes uses.
+pub const NF4_TABLE: [f32; 16] = [
+    -1.0,
+    -0.6961928009986877,
+    -0.5250730514526367,
+    -0.39491748809814453,
+    -0.28444138169288635,
+    -0.18477343022823334,
+    -0.09105003625154495,
+    0.0,
+    0.07958029955625534,
+    0.16093020141124725,
+    0.24611230194568634,
+    0.33791524171829224,
+    0.44070982933044434,
+    0.5626170039176941,
+    0.7229568362236023,
+    1.0,
+];
+
+/// Decode one FP4-E2M1 code (4 bits: sign, 2-bit exponent, 1-bit mantissa).
+pub fn fp4_e2m1_decode(code: u8) -> f32 {
+    let code = code & 0xF;
+    let sign = if code & 0x8 != 0 { -1.0f32 } else { 1.0 };
+    let exp = (code >> 1) & 0x3;
+    let man = code & 0x1;
+    let mag = if exp == 0 {
+        // subnormal: 0.0 or 0.5
+        0.5 * man as f32
+    } else {
+        // normal: (1 + m/2) * 2^(e-1)
+        (1.0 + man as f32 * 0.5) * f32::powi(2.0, exp as i32 - 1)
+    };
+    sign * mag
+}
+
+/// Encode an f32 to the nearest FP4-E2M1 code (round-to-nearest by search;
+/// the domain is 16 values so exhaustive search is exact).
+pub fn fp4_e2m1_encode(x: f32) -> u8 {
+    let mut best = 0u8;
+    let mut best_err = f32::INFINITY;
+    for code in 0..16u8 {
+        let err = (fp4_e2m1_decode(code) - x).abs();
+        if err < best_err {
+            best_err = err;
+            best = code;
+        }
+    }
+    best
+}
+
+/// Encode an f32 in [-1,1] to the nearest NF4 code.
+pub fn nf4_encode(x: f32) -> u8 {
+    let mut best = 0u8;
+    let mut best_err = f32::INFINITY;
+    for (i, v) in NF4_TABLE.iter().enumerate() {
+        let err = (v - x).abs();
+        if err < best_err {
+            best_err = err;
+            best = i as u8;
+        }
+    }
+    best
+}
+
+/// Quantize an f32 to the representable set of a low-precision float type,
+/// used by the interpreter to model fp16/bf16 rounding.
+pub fn round_to_dtype(x: f32, dt: DType) -> f32 {
+    match dt {
+        DType::F32 => x,
+        DType::F16 => f16_round(x),
+        DType::BF16 => bf16_round(x),
+        DType::NF4 => NF4_TABLE[nf4_encode(x) as usize],
+        DType::FP4E2M1 => fp4_e2m1_decode(fp4_e2m1_encode(x)),
+        _ => x.trunc(),
+    }
+}
+
+/// Round an f32 to the nearest f16 value (round-to-nearest-even), returned
+/// as f32. Implemented via bit manipulation; no half crate offline.
+pub fn f16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    let sign = bits & 0x8000_0000;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        return x; // inf / nan pass through
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        // overflow to inf
+        return f32::from_bits(sign | 0x7F80_0000);
+    }
+    if unbiased < -24 {
+        return f32::from_bits(sign); // flush to signed zero
+    }
+    if unbiased < -14 {
+        // subnormal half: quantize to multiples of 2^-24
+        let scale = f32::powi(2.0, 24);
+        let q = (x * scale).round_ties_even() / scale;
+        return q;
+    }
+    // normal: keep 10 mantissa bits, round-to-nearest-even on bit 13
+    let shift = 13u32;
+    let lsb = 1u32 << shift;
+    let half = lsb >> 1;
+    let rounded = man + half - ((man >> shift) & 1 ^ 1) * 0;
+    let mut man_r = man + half;
+    if (man & (lsb - 1)) == half && (man & lsb) == 0 {
+        man_r = man; // ties to even: already even, no increment
+    }
+    let man_kept = man_r >> shift << shift;
+    if man_kept > 0x007F_FFFF {
+        // mantissa overflow -> bump exponent
+        let _ = rounded;
+        return f32::from_bits(sign | (((exp + 1) as u32) << 23));
+    }
+    f32::from_bits(sign | ((exp as u32) << 23) | man_kept)
+}
+
+/// Round an f32 to the nearest bf16 value (round-to-nearest-even),
+/// returned as f32.
+pub fn bf16_round(x: f32) -> f32 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return x;
+    }
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7FFF + lsb);
+    f32::from_bits(rounded & 0xFFFF_0000)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_and_packing() {
+        assert_eq!(DType::F32.bits(), 32);
+        assert_eq!(DType::I4.bits(), 4);
+        assert_eq!(DType::I4.elems_per_byte(), 2);
+        assert_eq!(DType::U2.elems_per_byte(), 4);
+        assert_eq!(DType::F16.elems_per_byte(), 1);
+        assert!(DType::NF4.is_sub_byte());
+        assert!(!DType::I8.is_sub_byte());
+    }
+
+    #[test]
+    fn accumulators() {
+        assert_eq!(DType::F16.accum(), DType::F32);
+        assert_eq!(DType::BF16.accum(), DType::F32);
+        assert_eq!(DType::I8.accum(), DType::I32);
+        assert_eq!(DType::U4.accum(), DType::I32);
+    }
+
+    #[test]
+    fn vector_lanes() {
+        assert_eq!(DType::F16.max_vector_lanes(), 8);
+        assert_eq!(DType::F32.max_vector_lanes(), 4);
+        assert_eq!(DType::I8.max_vector_lanes(), 16);
+    }
+
+    #[test]
+    fn f16_roundtrip_exact_values() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.5, 65504.0, 0.099976] {
+            let r = f16_round(v);
+            // representable values are fixed points
+            assert_eq!(f16_round(r), r);
+        }
+        assert_eq!(f16_round(1.0), 1.0);
+        assert_eq!(f16_round(65504.0), 65504.0);
+        // overflows to inf
+        assert!(f16_round(70000.0).is_infinite());
+        // 1 + 2^-11 is between 1.0 and 1+2^-10 -> rounds to even (1.0)
+        assert_eq!(f16_round(1.0 + f32::powi(2.0, -11)), 1.0);
+    }
+
+    #[test]
+    fn bf16_rounding() {
+        assert_eq!(bf16_round(1.0), 1.0);
+        let v = bf16_round(3.14159265f32);
+        assert!((v - 3.14159265).abs() < 0.01);
+        assert_eq!(bf16_round(v), v);
+    }
+
+    #[test]
+    fn nf4_table_monotone_and_roundtrip() {
+        for w in NF4_TABLE.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        for (i, &v) in NF4_TABLE.iter().enumerate() {
+            assert_eq!(nf4_encode(v), i as u8);
+        }
+    }
+
+    #[test]
+    fn fp4_decode_known_values() {
+        assert_eq!(fp4_e2m1_decode(0b0000), 0.0);
+        assert_eq!(fp4_e2m1_decode(0b0001), 0.5);
+        assert_eq!(fp4_e2m1_decode(0b0010), 1.0);
+        assert_eq!(fp4_e2m1_decode(0b0011), 1.5);
+        assert_eq!(fp4_e2m1_decode(0b0100), 2.0);
+        assert_eq!(fp4_e2m1_decode(0b0101), 3.0);
+        assert_eq!(fp4_e2m1_decode(0b0110), 4.0);
+        assert_eq!(fp4_e2m1_decode(0b0111), 6.0);
+        assert_eq!(fp4_e2m1_decode(0b1111), -6.0);
+        for code in 0..16u8 {
+            let v = fp4_e2m1_decode(code);
+            assert_eq!(fp4_e2m1_decode(fp4_e2m1_encode(v)), v);
+        }
+    }
+}

@@ -1,0 +1,831 @@
+//! Scalar index/value expressions.
+//!
+//! Layout functions (§4.1) are algebraic expressions over `IterVar`s; the
+//! compiler needs to evaluate them, substitute through compositions,
+//! simplify them (the paper's "dynamic parameter simplification" pass) and
+//! bound them ("passed to an arithmetic analyzer to determine the symbolic
+//! or constant bounds"). This module provides that expression language
+//! plus interval analysis and a rule-based simplifier.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::rc::Rc;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::dtype::DType;
+
+/// Unique id for an iteration / parameter variable.
+pub type VarId = u32;
+
+static NEXT_VAR: AtomicU32 = AtomicU32::new(0);
+
+/// A named scalar variable (loop index, thread index, dynamic dimension).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Var {
+    pub id: VarId,
+    pub name: String,
+}
+
+impl Var {
+    /// Create a fresh variable with a globally unique id.
+    pub fn fresh(name: &str) -> Var {
+        Var {
+            id: NEXT_VAR.fetch_add(1, Ordering::Relaxed),
+            name: name.to_string(),
+        }
+    }
+
+    pub fn expr(&self) -> Expr {
+        Expr::var(self)
+    }
+}
+
+/// Binary operators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    /// Floor division (euclidean toward -inf), matching TVM's floordiv.
+    FloorDiv,
+    /// Floor modulo (result has sign of divisor), matching TVM's floormod.
+    FloorMod,
+    Min,
+    Max,
+    /// Bitwise xor — the workhorse of swizzled layouts.
+    BitXor,
+    BitAnd,
+    Shl,
+    Shr,
+    Lt,
+    Le,
+    Eq,
+    And,
+    Or,
+}
+
+/// Unary intrinsics used in element-wise bodies (attention epilogues etc.).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum UnOp {
+    Neg,
+    Exp,
+    Exp2,
+    Log,
+    Sqrt,
+    Rsqrt,
+    Abs,
+    Tanh,
+    Not,
+}
+
+/// Expression node. `Expr` is a cheap-to-clone handle (Rc) over this.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ExprKind {
+    Var(Var),
+    Int(i64),
+    Float(f64),
+    Bin(BinOp, Expr, Expr),
+    Un(UnOp, Expr),
+    Select(Expr, Expr, Expr),
+    Cast(DType, Expr),
+    /// Load from a buffer: `Load(buffer_id, indices)`. Only appears inside
+    /// element-wise `Parallel` bodies; layout expressions never load.
+    Load(u32, Vec<Expr>),
+}
+
+/// A reference-counted scalar expression.
+#[derive(Clone, PartialEq)]
+pub struct Expr(pub Rc<ExprKind>);
+
+impl fmt::Debug for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self)
+    }
+}
+
+impl Expr {
+    pub fn kind(&self) -> &ExprKind {
+        &self.0
+    }
+
+    pub fn var(v: &Var) -> Expr {
+        Expr(Rc::new(ExprKind::Var(v.clone())))
+    }
+
+    pub fn int(v: i64) -> Expr {
+        Expr(Rc::new(ExprKind::Int(v)))
+    }
+
+    pub fn float(v: f64) -> Expr {
+        Expr(Rc::new(ExprKind::Float(v)))
+    }
+
+    pub fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
+        Expr(Rc::new(ExprKind::Bin(op, a, b)))
+    }
+
+    pub fn un(op: UnOp, a: Expr) -> Expr {
+        Expr(Rc::new(ExprKind::Un(op, a)))
+    }
+
+    pub fn load(buffer: u32, idx: Vec<Expr>) -> Expr {
+        Expr(Rc::new(ExprKind::Load(buffer, idx)))
+    }
+
+    pub fn select(cond: Expr, t: Expr, f: Expr) -> Expr {
+        Expr(Rc::new(ExprKind::Select(cond, t, f)))
+    }
+
+    pub fn cast(self, dt: DType) -> Expr {
+        Expr(Rc::new(ExprKind::Cast(dt, self)))
+    }
+
+    pub fn floordiv(self, rhs: impl IntoExpr) -> Expr {
+        Expr::bin(BinOp::FloorDiv, self, rhs.into_expr())
+    }
+
+    pub fn floormod(self, rhs: impl IntoExpr) -> Expr {
+        Expr::bin(BinOp::FloorMod, self, rhs.into_expr())
+    }
+
+    pub fn emin(self, rhs: impl IntoExpr) -> Expr {
+        Expr::bin(BinOp::Min, self, rhs.into_expr())
+    }
+
+    pub fn emax(self, rhs: impl IntoExpr) -> Expr {
+        Expr::bin(BinOp::Max, self, rhs.into_expr())
+    }
+
+    pub fn bitxor(self, rhs: impl IntoExpr) -> Expr {
+        Expr::bin(BinOp::BitXor, self, rhs.into_expr())
+    }
+
+    pub fn bitand(self, rhs: impl IntoExpr) -> Expr {
+        Expr::bin(BinOp::BitAnd, self, rhs.into_expr())
+    }
+
+    pub fn lt(self, rhs: impl IntoExpr) -> Expr {
+        Expr::bin(BinOp::Lt, self, rhs.into_expr())
+    }
+
+    pub fn le(self, rhs: impl IntoExpr) -> Expr {
+        Expr::bin(BinOp::Le, self, rhs.into_expr())
+    }
+
+    pub fn eq(self, rhs: impl IntoExpr) -> Expr {
+        Expr::bin(BinOp::Eq, self, rhs.into_expr())
+    }
+
+    pub fn and(self, rhs: impl IntoExpr) -> Expr {
+        Expr::bin(BinOp::And, self, rhs.into_expr())
+    }
+
+    /// Constant value if this expression is a literal int.
+    pub fn as_int(&self) -> Option<i64> {
+        match self.kind() {
+            ExprKind::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// Evaluate with an integer environment. Panics on unbound vars or
+    /// float/load nodes — those never appear in layout expressions.
+    pub fn eval_int(&self, env: &HashMap<VarId, i64>) -> i64 {
+        match self.kind() {
+            ExprKind::Var(v) => *env
+                .get(&v.id)
+                .unwrap_or_else(|| panic!("unbound var {} in eval_int", v.name)),
+            ExprKind::Int(v) => *v,
+            ExprKind::Float(_) => panic!("float in integer expression"),
+            ExprKind::Bin(op, a, b) => {
+                let (a, b) = (a.eval_int(env), b.eval_int(env));
+                eval_bin_int(*op, a, b)
+            }
+            ExprKind::Un(op, a) => {
+                let a = a.eval_int(env);
+                match op {
+                    UnOp::Neg => -a,
+                    UnOp::Abs => a.abs(),
+                    UnOp::Not => (a == 0) as i64,
+                    _ => panic!("float intrinsic in integer expression"),
+                }
+            }
+            ExprKind::Select(c, t, f) => {
+                if c.eval_int(env) != 0 {
+                    t.eval_int(env)
+                } else {
+                    f.eval_int(env)
+                }
+            }
+            ExprKind::Cast(_, a) => a.eval_int(env),
+            ExprKind::Load(..) => panic!("load in layout expression"),
+        }
+    }
+
+    /// Substitute variables by expressions.
+    pub fn substitute(&self, map: &HashMap<VarId, Expr>) -> Expr {
+        match self.kind() {
+            ExprKind::Var(v) => map.get(&v.id).cloned().unwrap_or_else(|| self.clone()),
+            ExprKind::Int(_) | ExprKind::Float(_) => self.clone(),
+            ExprKind::Bin(op, a, b) => Expr::bin(*op, a.substitute(map), b.substitute(map)),
+            ExprKind::Un(op, a) => Expr::un(*op, a.substitute(map)),
+            ExprKind::Select(c, t, f) => {
+                Expr::select(c.substitute(map), t.substitute(map), f.substitute(map))
+            }
+            ExprKind::Cast(dt, a) => a.substitute(map).cast(*dt),
+            ExprKind::Load(b, idx) => {
+                Expr::load(*b, idx.iter().map(|e| e.substitute(map)).collect())
+            }
+        }
+    }
+
+    /// Collect the set of variable ids referenced by this expression.
+    pub fn collect_vars(&self, out: &mut Vec<Var>) {
+        match self.kind() {
+            ExprKind::Var(v) => {
+                if !out.iter().any(|o| o.id == v.id) {
+                    out.push(v.clone());
+                }
+            }
+            ExprKind::Int(_) | ExprKind::Float(_) => {}
+            ExprKind::Bin(_, a, b) => {
+                a.collect_vars(out);
+                b.collect_vars(out);
+            }
+            ExprKind::Un(_, a) => a.collect_vars(out),
+            ExprKind::Select(c, t, f) => {
+                c.collect_vars(out);
+                t.collect_vars(out);
+                f.collect_vars(out);
+            }
+            ExprKind::Cast(_, a) => a.collect_vars(out),
+            ExprKind::Load(_, idx) => idx.iter().for_each(|e| e.collect_vars(out)),
+        }
+    }
+
+    /// Interval analysis: inclusive (min, max) bounds given variable
+    /// ranges. Returns `None` when a referenced variable is unbounded or
+    /// the operator cannot be bounded conservatively.
+    pub fn bounds(&self, ranges: &HashMap<VarId, (i64, i64)>) -> Option<(i64, i64)> {
+        match self.kind() {
+            ExprKind::Var(v) => ranges.get(&v.id).copied(),
+            ExprKind::Int(v) => Some((*v, *v)),
+            ExprKind::Float(_) => None,
+            ExprKind::Bin(op, a, b) => {
+                let (al, ah) = a.bounds(ranges)?;
+                let (bl, bh) = b.bounds(ranges)?;
+                bounds_bin(*op, al, ah, bl, bh)
+            }
+            ExprKind::Un(UnOp::Neg, a) => {
+                let (l, h) = a.bounds(ranges)?;
+                Some((-h, -l))
+            }
+            ExprKind::Un(UnOp::Abs, a) => {
+                let (l, h) = a.bounds(ranges)?;
+                if l >= 0 {
+                    Some((l, h))
+                } else if h <= 0 {
+                    Some((-h, -l))
+                } else {
+                    Some((0, h.max(-l)))
+                }
+            }
+            ExprKind::Select(_, t, f) => {
+                let (tl, th) = t.bounds(ranges)?;
+                let (fl, fh) = f.bounds(ranges)?;
+                Some((tl.min(fl), th.max(fh)))
+            }
+            ExprKind::Cast(_, a) => a.bounds(ranges),
+            _ => None,
+        }
+    }
+
+    /// Rule-based simplification with optional bounds knowledge. This is
+    /// the core of the paper's dynamic-parameter simplification: once a
+    /// dynamic shape is bound to a constant, dividing/modding expressions
+    /// collapse and guard predicates fold away.
+    pub fn simplify(&self, ranges: &HashMap<VarId, (i64, i64)>) -> Expr {
+        match self.kind() {
+            ExprKind::Bin(op, a, b) => {
+                let a = a.simplify(ranges);
+                let b = b.simplify(ranges);
+                simplify_bin(*op, a, b, ranges)
+            }
+            ExprKind::Un(op, a) => {
+                let a = a.simplify(ranges);
+                if let (UnOp::Neg, Some(v)) = (op, a.as_int()) {
+                    return Expr::int(-v);
+                }
+                Expr::un(*op, a)
+            }
+            ExprKind::Select(c, t, f) => {
+                let c = c.simplify(ranges);
+                match c.as_int() {
+                    Some(0) => f.simplify(ranges),
+                    Some(_) => t.simplify(ranges),
+                    None => Expr::select(c, t.simplify(ranges), f.simplify(ranges)),
+                }
+            }
+            ExprKind::Cast(dt, a) => a.simplify(ranges).cast(*dt),
+            ExprKind::Load(b, idx) => {
+                Expr::load(*b, idx.iter().map(|e| e.simplify(ranges)).collect())
+            }
+            _ => self.clone(),
+        }
+    }
+
+    /// Count nodes — used as a complexity metric by compile benches.
+    pub fn size(&self) -> usize {
+        match self.kind() {
+            ExprKind::Var(_) | ExprKind::Int(_) | ExprKind::Float(_) => 1,
+            ExprKind::Bin(_, a, b) => 1 + a.size() + b.size(),
+            ExprKind::Un(_, a) => 1 + a.size(),
+            ExprKind::Select(c, t, f) => 1 + c.size() + t.size() + f.size(),
+            ExprKind::Cast(_, a) => 1 + a.size(),
+            ExprKind::Load(_, idx) => 1 + idx.iter().map(|e| e.size()).sum::<usize>(),
+        }
+    }
+}
+
+fn eval_bin_int(op: BinOp, a: i64, b: i64) -> i64 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::FloorDiv => a.div_euclid(b),
+        BinOp::FloorMod => a.rem_euclid(b),
+        BinOp::Min => a.min(b),
+        BinOp::Max => a.max(b),
+        BinOp::BitXor => a ^ b,
+        BinOp::BitAnd => a & b,
+        BinOp::Shl => a << b,
+        BinOp::Shr => a >> b,
+        BinOp::Lt => (a < b) as i64,
+        BinOp::Le => (a <= b) as i64,
+        BinOp::Eq => (a == b) as i64,
+        BinOp::And => (a != 0 && b != 0) as i64,
+        BinOp::Or => (a != 0 || b != 0) as i64,
+    }
+}
+
+fn bounds_bin(op: BinOp, al: i64, ah: i64, bl: i64, bh: i64) -> Option<(i64, i64)> {
+    match op {
+        BinOp::Add => Some((al + bl, ah + bh)),
+        BinOp::Sub => Some((al - bh, ah - bl)),
+        BinOp::Mul => {
+            let cands = [al * bl, al * bh, ah * bl, ah * bh];
+            Some((
+                *cands.iter().min().unwrap(),
+                *cands.iter().max().unwrap(),
+            ))
+        }
+        BinOp::FloorDiv => {
+            if bl == bh && bl != 0 {
+                let c = bl;
+                let x = al.div_euclid(c);
+                let y = ah.div_euclid(c);
+                Some((x.min(y), x.max(y)))
+            } else {
+                None
+            }
+        }
+        BinOp::FloorMod => {
+            if bl == bh && bl > 0 {
+                let c = bl;
+                if al.div_euclid(c) == ah.div_euclid(c) {
+                    // whole interval within one modulus period
+                    Some((al.rem_euclid(c), ah.rem_euclid(c)))
+                } else {
+                    Some((0, c - 1))
+                }
+            } else {
+                None
+            }
+        }
+        BinOp::Min => Some((al.min(bl), ah.min(bh))),
+        BinOp::Max => Some((al.max(bl), ah.max(bh))),
+        BinOp::BitXor | BinOp::BitAnd => {
+            if al >= 0 && bl >= 0 {
+                if op == BinOp::BitAnd {
+                    Some((0, ah.min(bh)))
+                } else {
+                    let m = next_pow2(ah.max(bh) + 1);
+                    Some((0, m - 1))
+                }
+            } else {
+                None
+            }
+        }
+        BinOp::Shl => {
+            if bl == bh && bl >= 0 && al >= 0 {
+                Some((al << bl, ah << bl))
+            } else {
+                None
+            }
+        }
+        BinOp::Shr => {
+            if bl == bh && bl >= 0 {
+                let (x, y) = (al >> bl, ah >> bl);
+                Some((x.min(y), x.max(y)))
+            } else {
+                None
+            }
+        }
+        BinOp::Lt | BinOp::Le | BinOp::Eq | BinOp::And | BinOp::Or => Some((0, 1)),
+    }
+}
+
+fn next_pow2(v: i64) -> i64 {
+    let mut p = 1i64;
+    while p < v {
+        p <<= 1;
+    }
+    p
+}
+
+fn simplify_bin(op: BinOp, a: Expr, b: Expr, ranges: &HashMap<VarId, (i64, i64)>) -> Expr {
+    // constant folding
+    if let (Some(x), Some(y)) = (a.as_int(), b.as_int()) {
+        if !(matches!(op, BinOp::FloorDiv | BinOp::FloorMod) && y == 0) {
+            return Expr::int(eval_bin_int(op, x, y));
+        }
+    }
+    match op {
+        BinOp::Add => {
+            if a.as_int() == Some(0) {
+                return b;
+            }
+            if b.as_int() == Some(0) {
+                return a;
+            }
+        }
+        BinOp::Sub => {
+            if b.as_int() == Some(0) {
+                return a;
+            }
+            if a == b {
+                return Expr::int(0);
+            }
+        }
+        BinOp::Mul => {
+            if a.as_int() == Some(0) || b.as_int() == Some(0) {
+                return Expr::int(0);
+            }
+            if a.as_int() == Some(1) {
+                return b;
+            }
+            if b.as_int() == Some(1) {
+                return a;
+            }
+        }
+        BinOp::FloorDiv => {
+            if b.as_int() == Some(1) {
+                return a;
+            }
+            if let Some(c) = b.as_int() {
+                if c > 0 {
+                    if let Some((l, h)) = a.bounds(ranges) {
+                        if l >= 0 && h < c {
+                            return Expr::int(0);
+                        }
+                    }
+                    // (x*c + r) // c => x + r//c when 0 <= r < c
+                    if let ExprKind::Bin(BinOp::Add, p, q) = a.kind() {
+                        if let ExprKind::Bin(BinOp::Mul, x, cc) = p.kind() {
+                            if cc.as_int() == Some(c) {
+                                if let Some((l, h)) = q.bounds(ranges) {
+                                    if l >= 0 && h < c {
+                                        return x.clone();
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        BinOp::FloorMod => {
+            if b.as_int() == Some(1) {
+                return Expr::int(0);
+            }
+            if let Some(c) = b.as_int() {
+                if c > 0 {
+                    if let Some((l, h)) = a.bounds(ranges) {
+                        if l >= 0 && h < c {
+                            return a;
+                        }
+                    }
+                    // (x*c + r) % c => r % c
+                    if let ExprKind::Bin(BinOp::Add, p, q) = a.kind() {
+                        if let ExprKind::Bin(BinOp::Mul, _, cc) = p.kind() {
+                            if let Some(m) = cc.as_int() {
+                                if m % c == 0 {
+                                    return simplify_bin(
+                                        BinOp::FloorMod,
+                                        q.clone(),
+                                        b.clone(),
+                                        ranges,
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        BinOp::Min | BinOp::Max => {
+            if a == b {
+                return a;
+            }
+            if let (Some((al, ah)), Some((bl, bh))) = (a.bounds(ranges), b.bounds(ranges)) {
+                match op {
+                    BinOp::Min => {
+                        if ah <= bl {
+                            return a;
+                        }
+                        if bh <= al {
+                            return b;
+                        }
+                    }
+                    BinOp::Max => {
+                        if al >= bh {
+                            return a;
+                        }
+                        if bl >= ah {
+                            return b;
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+        BinOp::BitXor => {
+            if b.as_int() == Some(0) {
+                return a;
+            }
+            if a.as_int() == Some(0) {
+                return b;
+            }
+        }
+        BinOp::Lt | BinOp::Le => {
+            if let (Some((al, ah)), Some((bl, bh))) = (a.bounds(ranges), b.bounds(ranges)) {
+                match op {
+                    BinOp::Lt => {
+                        if ah < bl {
+                            return Expr::int(1);
+                        }
+                        if al >= bh {
+                            return Expr::int(0);
+                        }
+                    }
+                    BinOp::Le => {
+                        if ah <= bl {
+                            return Expr::int(1);
+                        }
+                        if al > bh {
+                            return Expr::int(0);
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+        }
+        BinOp::And => {
+            if a.as_int() == Some(1) {
+                return b;
+            }
+            if b.as_int() == Some(1) {
+                return a;
+            }
+            if a.as_int() == Some(0) || b.as_int() == Some(0) {
+                return Expr::int(0);
+            }
+        }
+        _ => {}
+    }
+    Expr::bin(op, a, b)
+}
+
+/// Conversion of plain values into expressions for builder ergonomics.
+pub trait IntoExpr {
+    fn into_expr(self) -> Expr;
+}
+
+impl IntoExpr for Expr {
+    fn into_expr(self) -> Expr {
+        self
+    }
+}
+
+impl IntoExpr for &Expr {
+    fn into_expr(self) -> Expr {
+        self.clone()
+    }
+}
+
+impl IntoExpr for i64 {
+    fn into_expr(self) -> Expr {
+        Expr::int(self)
+    }
+}
+
+impl IntoExpr for i32 {
+    fn into_expr(self) -> Expr {
+        Expr::int(self as i64)
+    }
+}
+
+impl IntoExpr for usize {
+    fn into_expr(self) -> Expr {
+        Expr::int(self as i64)
+    }
+}
+
+impl IntoExpr for f64 {
+    fn into_expr(self) -> Expr {
+        Expr::float(self)
+    }
+}
+
+impl IntoExpr for &Var {
+    fn into_expr(self) -> Expr {
+        Expr::var(self)
+    }
+}
+
+macro_rules! impl_binop {
+    ($trait:ident, $method:ident, $op:expr) => {
+        impl<R: IntoExpr> std::ops::$trait<R> for Expr {
+            type Output = Expr;
+            fn $method(self, rhs: R) -> Expr {
+                Expr::bin($op, self, rhs.into_expr())
+            }
+        }
+        impl<R: IntoExpr> std::ops::$trait<R> for &Expr {
+            type Output = Expr;
+            fn $method(self, rhs: R) -> Expr {
+                Expr::bin($op, self.clone(), rhs.into_expr())
+            }
+        }
+    };
+}
+
+impl_binop!(Add, add, BinOp::Add);
+impl_binop!(Sub, sub, BinOp::Sub);
+impl_binop!(Mul, mul, BinOp::Mul);
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            match self.kind() {
+                ExprKind::Var(v) => write!(f, "{}", v.name),
+                ExprKind::Int(v) => write!(f, "{}", v),
+                ExprKind::Float(v) => write!(f, "{}", v),
+                ExprKind::Bin(op, a, b) => {
+                    let sym = match op {
+                        BinOp::Add => "+",
+                        BinOp::Sub => "-",
+                        BinOp::Mul => "*",
+                        BinOp::FloorDiv => "//",
+                        BinOp::FloorMod => "%",
+                        BinOp::Min => return write!(f, "min({}, {})", a, b),
+                        BinOp::Max => return write!(f, "max({}, {})", a, b),
+                        BinOp::BitXor => "^",
+                        BinOp::BitAnd => "&",
+                        BinOp::Shl => "<<",
+                        BinOp::Shr => ">>",
+                        BinOp::Lt => "<",
+                        BinOp::Le => "<=",
+                        BinOp::Eq => "==",
+                        BinOp::And => "&&",
+                        BinOp::Or => "||",
+                    };
+                    write!(f, "({} {} {})", a, sym, b)
+                }
+                ExprKind::Un(op, a) => write!(f, "{:?}({})", op, a),
+                ExprKind::Select(c, t, e) => write!(f, "select({}, {}, {})", c, t, e),
+                ExprKind::Cast(dt, a) => write!(f, "cast<{}>({})", dt, a),
+                ExprKind::Load(b, idx) => {
+                    write!(f, "buf{}[", b)?;
+                    for (i, e) in idx.iter().enumerate() {
+                        if i > 0 {
+                            write!(f, ", ")?;
+                        }
+                        write!(f, "{}", e)?;
+                    }
+                    write!(f, "]")
+                }
+            }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn env(pairs: &[(&Var, i64)]) -> HashMap<VarId, i64> {
+        pairs.iter().map(|(v, x)| (v.id, *x)).collect()
+    }
+
+    #[test]
+    fn eval_arithmetic() {
+        let i = Var::fresh("i");
+        let j = Var::fresh("j");
+        // i * 32 + j
+        let e = i.expr() * 32 + j.expr();
+        assert_eq!(e.eval_int(&env(&[(&i, 3), (&j, 5)])), 101);
+        // floordiv/mod are euclidean
+        let e2 = Expr::int(-7).floordiv(4);
+        assert_eq!(e2.eval_int(&HashMap::new()), -2);
+        let e3 = Expr::int(-7).floormod(4);
+        assert_eq!(e3.eval_int(&HashMap::new()), 1);
+    }
+
+    #[test]
+    fn substitution_composes() {
+        let i = Var::fresh("i");
+        let k = Var::fresh("k");
+        let e = i.expr() * 8 + 3;
+        let mut map = HashMap::new();
+        map.insert(i.id, k.expr() + 1);
+        let s = e.substitute(&map);
+        assert_eq!(s.eval_int(&env(&[(&k, 2)])), 27);
+    }
+
+    #[test]
+    fn bounds_interval() {
+        let i = Var::fresh("i");
+        let j = Var::fresh("j");
+        let mut ranges = HashMap::new();
+        ranges.insert(i.id, (0, 15));
+        ranges.insert(j.id, (0, 7));
+        let e = i.expr() * 8 + j.expr();
+        assert_eq!(e.bounds(&ranges), Some((0, 127)));
+        let d = (i.expr() * 8 + j.expr()).floordiv(8);
+        assert_eq!(d.bounds(&ranges), Some((0, 15)));
+        let m = j.expr().floormod(8);
+        assert_eq!(m.bounds(&ranges), Some((0, 7)));
+        let x = i.expr().bitxor(j.expr());
+        assert_eq!(x.bounds(&ranges), Some((0, 15)));
+    }
+
+    #[test]
+    fn simplify_folds_and_cancels() {
+        let i = Var::fresh("i");
+        let mut ranges = HashMap::new();
+        ranges.insert(i.id, (0, 31));
+        let no_ranges: HashMap<VarId, (i64, i64)> = HashMap::new();
+
+        // (i * 1 + 0) -> i
+        let e = (i.expr() * 1) + 0;
+        assert_eq!(e.simplify(&no_ranges), i.expr());
+        // i % 32 -> i given 0 <= i < 32
+        let e = i.expr().floormod(32);
+        assert_eq!(e.simplify(&ranges), i.expr());
+        // i // 32 -> 0
+        let e = i.expr().floordiv(32);
+        assert_eq!(e.simplify(&ranges).as_int(), Some(0));
+        // (i*16 + r) // 16 -> i with r in [0,16)
+        let r = Var::fresh("r");
+        ranges.insert(r.id, (0, 15));
+        let e = (i.expr() * 16 + r.expr()).floordiv(16);
+        assert_eq!(e.simplify(&ranges), i.expr());
+        // (i*16 + r) % 16 -> r
+        let e = (i.expr() * 16 + r.expr()).floormod(16);
+        assert_eq!(e.simplify(&ranges), r.expr());
+        // guard folding: i < 32 -> 1
+        let e = i.expr().lt(32);
+        assert_eq!(e.simplify(&ranges).as_int(), Some(1));
+    }
+
+    #[test]
+    fn simplify_preserves_semantics_randomized() {
+        // property: simplify(e) evaluates identically on random envs
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut next = move || {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            state
+        };
+        let i = Var::fresh("i");
+        let j = Var::fresh("j");
+        let mut ranges = HashMap::new();
+        ranges.insert(i.id, (0, 63));
+        ranges.insert(j.id, (0, 63));
+        for _ in 0..200 {
+            // random expression over i, j with small constants
+            let c1 = (next() % 8 + 1) as i64;
+            let c2 = (next() % 8 + 1) as i64;
+            let e = ((i.expr() * c1 + j.expr()).floordiv(c2))
+                .floormod(c1 + c2)
+                + (i.expr().bitxor(j.expr())).emin(j.expr() * 2);
+            let s = e.simplify(&ranges);
+            for _ in 0..16 {
+                let iv = (next() % 64) as i64;
+                let jv = (next() % 64) as i64;
+                let env = env(&[(&i, iv), (&j, jv)]);
+                assert_eq!(e.eval_int(&env), s.eval_int(&env), "expr {} vs {}", e, s);
+            }
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Tile-program intermediate representation: data types, scalar
+//! expressions, buffers, tile operators and the frontend builder.
+
+pub mod buffer;
+pub mod builder;
+pub mod dtype;
+pub mod expr;
+pub mod program;

@@ -1,0 +1,527 @@
+//! Tile programs: dataflow-centric tile operators (§3.2) plus the
+//! statement structure (`Pipelined` / `Parallel` loops) that carries the
+//! scheduling annotations (§3.3).
+
+use std::collections::HashMap;
+
+use super::buffer::{Buffer, BufferId, BufferRegion};
+use super::expr::{Expr, Var, VarId};
+use crate::layout::fragment::Fragment;
+use crate::layout::layout::Layout;
+
+/// Warp partitioning policy for `T.gemm` (paper: `T.GemmWarpPolicy`,
+/// Fig. 18 uses `FullCol`). Decides how the block's warps tile the
+/// `block_M x block_N` accumulator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum GemmWarpPolicy {
+    /// Prefer a near-square warp grid.
+    #[default]
+    Square,
+    /// All warps stacked along M (each warp owns full rows).
+    FullRow,
+    /// All warps stacked along N (each warp owns full columns).
+    FullCol,
+}
+
+impl GemmWarpPolicy {
+    /// Split `num_warps` into `(warps_m, warps_n)` for a given block
+    /// tile, honouring MMA tile divisibility (warp tiles must hold whole
+    /// 16x8 MMA tiles). Infeasible preferences degrade gracefully toward
+    /// the nearest feasible split.
+    pub fn split(self, num_warps: i64, block_m: i64, block_n: i64) -> (i64, i64) {
+        let feasible: Vec<(i64, i64)> = (1..=num_warps)
+            .filter(|wm| num_warps % wm == 0)
+            .map(|wm| (wm, num_warps / wm))
+            .filter(|(wm, wn)| block_m % (wm * 16) == 0 && block_n % (wn * 8) == 0)
+            .collect();
+        if feasible.is_empty() {
+            // degenerate tiles: fewer warps participate
+            return (1, 1);
+        }
+        match self {
+            GemmWarpPolicy::FullRow => *feasible.iter().max_by_key(|(wm, _)| *wm).unwrap(),
+            GemmWarpPolicy::FullCol => *feasible.iter().max_by_key(|(_, wn)| *wn).unwrap(),
+            GemmWarpPolicy::Square => *feasible
+                .iter()
+                .min_by(|a, b| {
+                    let sa = ((block_m / a.0) as f64 / (block_n / a.1) as f64 - 1.0).abs();
+                    let sb = ((block_m / b.0) as f64 / (block_n / b.1) as f64 - 1.0).abs();
+                    sa.partial_cmp(&sb).unwrap()
+                })
+                .unwrap(),
+        }
+    }
+}
+
+/// Reduction kinds for `T.reduce` (§3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+    Min,
+    AbsMax,
+}
+
+/// Atomic update kinds for `T.atomic` (§3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AtomicKind {
+    Add,
+    Max,
+    Min,
+}
+
+/// Sub-byte weight decode applied by the `Dequant` operator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DequantScheme {
+    /// Unsigned int codes, optionally zero-centered: `(code - zero) * scale`.
+    UintAffine { zero: i64 },
+    /// NF4 lookup-table decode then scale.
+    Nf4Lut,
+    /// FP4-E2M1 decode then scale.
+    Fp4E2m1,
+}
+
+/// A dataflow-centric tile operator (Table 1, left column).
+#[derive(Clone, Debug)]
+pub enum TileOp {
+    /// `T.copy`: parallel data movement between any two scopes.
+    Copy {
+        src: BufferRegion,
+        dst: BufferRegion,
+    },
+    /// `T.gemm`: `C += op(A) @ op(B)` on whole tile buffers.
+    Gemm {
+        a: BufferId,
+        b: BufferId,
+        c: BufferId,
+        trans_a: bool,
+        trans_b: bool,
+        policy: GemmWarpPolicy,
+    },
+    /// `T.fill` / `T.clear`.
+    Fill { buf: BufferId, value: f64 },
+    /// `T.reduce_<kind>(src, dst, dim, clear)`: reduce a fragment along
+    /// `dim` into a lower-rank fragment.
+    Reduce {
+        src: BufferId,
+        dst: BufferId,
+        dim: usize,
+        kind: ReduceKind,
+        clear: bool,
+    },
+    /// `T.atomic_<kind>(dst_region, src)`: thread-safe accumulation into
+    /// shared or global memory (split-k, histograms).
+    Atomic {
+        dst: BufferRegion,
+        src: BufferId,
+        kind: AtomicKind,
+    },
+    /// Weight dequantization: unpack sub-byte codes from `src` into the
+    /// compute-dtype fragment `dst`, applying `scheme` with per-group
+    /// scales. The paper implements this with `T.Parallel` + PTX
+    /// (Fig. 17); we make it a first-class op so instruction selection
+    /// (§4.3) can pick vectorized decode paths.
+    Dequant {
+        src: BufferId,
+        dst: BufferId,
+        scheme: DequantScheme,
+        scale: Option<BufferId>,
+        group_size: i64,
+    },
+}
+
+impl TileOp {
+    /// Buffers read by this op.
+    pub fn reads(&self) -> Vec<BufferId> {
+        match self {
+            TileOp::Copy { src, .. } => vec![src.buffer],
+            TileOp::Gemm { a, b, c, .. } => vec![*a, *b, *c],
+            TileOp::Fill { .. } => vec![],
+            TileOp::Reduce { src, dst, clear, .. } => {
+                if *clear {
+                    vec![*src]
+                } else {
+                    vec![*src, *dst]
+                }
+            }
+            TileOp::Atomic { src, dst, .. } => vec![*src, dst.buffer],
+            TileOp::Dequant { src, scale, .. } => {
+                let mut v = vec![*src];
+                if let Some(s) = scale {
+                    v.push(*s);
+                }
+                v
+            }
+        }
+    }
+
+    /// Buffers written by this op.
+    pub fn writes(&self) -> Vec<BufferId> {
+        match self {
+            TileOp::Copy { dst, .. } => vec![dst.buffer],
+            TileOp::Gemm { c, .. } => vec![*c],
+            TileOp::Fill { buf, .. } => vec![*buf],
+            TileOp::Reduce { dst, .. } => vec![*dst],
+            TileOp::Atomic { dst, .. } => vec![dst.buffer],
+            TileOp::Dequant { dst, .. } => vec![*dst],
+        }
+    }
+}
+
+/// An element-wise store inside a `Parallel` body:
+/// `dst[indices] = value` (value may `Load` from other buffers).
+#[derive(Clone, Debug)]
+pub struct ElemStmt {
+    pub dst: BufferId,
+    pub indices: Vec<Expr>,
+    pub value: Expr,
+}
+
+/// Loop kinds. `Pipelined` carries the scheduling annotation of §3.3 /
+/// §4.4; `order`/`stage` are the optional explicit overrides ("we also
+/// allow users to explicitly provide information about the order and
+/// stages if needed").
+#[derive(Clone, Debug)]
+pub enum ForKind {
+    Serial,
+    Unroll,
+    Pipelined {
+        num_stages: usize,
+        order: Option<Vec<usize>>,
+        stage: Option<Vec<usize>>,
+    },
+}
+
+/// Program statements.
+#[derive(Clone, Debug)]
+pub enum Stmt {
+    Op(TileOp),
+    For {
+        var: Var,
+        extent: Expr,
+        kind: ForKind,
+        body: Vec<Stmt>,
+    },
+    /// `T.Parallel(e0, e1, ...)`: element-wise loop nest over fragment /
+    /// shared tiles; thread binding + vectorization are inferred.
+    ParallelFor {
+        vars: Vec<Var>,
+        extents: Vec<i64>,
+        body: Vec<ElemStmt>,
+    },
+    If {
+        cond: Expr,
+        then_body: Vec<Stmt>,
+        else_body: Vec<Stmt>,
+    },
+}
+
+/// Per-program scheduling annotations (§3.3 right column).
+#[derive(Clone, Debug, Default)]
+pub struct Annotations {
+    /// `T.annotate_layout`: user-pinned buffer layouts.
+    pub layouts: HashMap<BufferId, Layout>,
+    /// User-pinned fragment layouts.
+    pub fragments: HashMap<BufferId, Fragment>,
+    /// `T.use_swizzle(bits)`: L2-locality block rasterization.
+    pub swizzle_blocks: Option<u32>,
+    /// Disable shared-memory swizzling (ablation knob).
+    pub no_smem_swizzle: bool,
+    /// Force-disable warp specialization (ablation knob).
+    pub no_warp_specialize: bool,
+}
+
+/// A complete tile program = one kernel (Fig. 1(a)).
+#[derive(Clone, Debug)]
+pub struct TileProgram {
+    pub name: String,
+    /// Global tensor parameters, in call order.
+    pub params: Vec<Buffer>,
+    /// Scalar dynamic-shape parameters.
+    pub dyn_params: Vec<Var>,
+    /// Grid extents (bx, by, ...), and the block-index vars bound to them.
+    pub grid: Vec<Expr>,
+    pub block_vars: Vec<Var>,
+    /// Threads per block.
+    pub threads: i64,
+    /// On-chip allocations (shared + fragment).
+    pub allocs: Vec<Buffer>,
+    pub body: Vec<Stmt>,
+    pub annotations: Annotations,
+}
+
+impl TileProgram {
+    pub fn buffer(&self, id: BufferId) -> &Buffer {
+        self.params
+            .iter()
+            .chain(self.allocs.iter())
+            .find(|b| b.id == id)
+            .unwrap_or_else(|| panic!("unknown buffer id {}", id))
+    }
+
+    pub fn all_buffers(&self) -> impl Iterator<Item = &Buffer> {
+        self.params.iter().chain(self.allocs.iter())
+    }
+
+    /// Total static shared memory bytes.
+    pub fn shared_bytes(&self) -> i64 {
+        self.allocs
+            .iter()
+            .filter(|b| b.scope.is_shared())
+            .map(|b| b.static_bytes().expect("shared tiles are static"))
+            .sum()
+    }
+
+    /// Walk all statements depth-first.
+    pub fn visit_stmts<'a>(&'a self, f: &mut impl FnMut(&'a Stmt)) {
+        fn walk<'a>(stmts: &'a [Stmt], f: &mut impl FnMut(&'a Stmt)) {
+            for s in stmts {
+                f(s);
+                match s {
+                    Stmt::For { body, .. } => walk(body, f),
+                    Stmt::If {
+                        then_body,
+                        else_body,
+                        ..
+                    } => {
+                        walk(then_body, f);
+                        walk(else_body, f);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        walk(&self.body, f);
+    }
+
+    /// All tile ops in program order.
+    pub fn tile_ops(&self) -> Vec<&TileOp> {
+        let mut v = Vec::new();
+        self.visit_stmts(&mut |s| {
+            if let Stmt::Op(op) = s {
+                v.push(op);
+            }
+        });
+        v
+    }
+
+    /// Ranges of all statically-bounded loop/block/dyn vars, for the
+    /// arithmetic analyzer.
+    pub fn var_ranges(&self) -> HashMap<VarId, (i64, i64)> {
+        let mut ranges = HashMap::new();
+        for (v, e) in self.block_vars.iter().zip(&self.grid) {
+            if let Some(g) = e.as_int() {
+                ranges.insert(v.id, (0, g - 1));
+            }
+        }
+        fn walk(stmts: &[Stmt], ranges: &mut HashMap<VarId, (i64, i64)>) {
+            for s in stmts {
+                match s {
+                    Stmt::For {
+                        var, extent, body, ..
+                    } => {
+                        if let Some(e) = extent.as_int() {
+                            ranges.insert(var.id, (0, e - 1));
+                        }
+                        walk(body, ranges);
+                    }
+                    Stmt::ParallelFor { vars, extents, .. } => {
+                        for (v, &e) in vars.iter().zip(extents) {
+                            ranges.insert(v.id, (0, e - 1));
+                        }
+                    }
+                    Stmt::If {
+                        then_body,
+                        else_body,
+                        ..
+                    } => {
+                        walk(then_body, ranges);
+                        walk(else_body, ranges);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        walk(&self.body, &mut ranges);
+        ranges
+    }
+
+    /// Count "frontend lines": one per op/loop/alloc — the metric behind
+    /// the paper's Fig. 14 LOC comparison.
+    pub fn frontend_loc(&self) -> usize {
+        let mut n = 2 + self.params.len() + self.allocs.len(); // signature + kernel ctx
+        self.visit_stmts(&mut |s| {
+            n += match s {
+                Stmt::Op(_) => 1,
+                Stmt::For { .. } | Stmt::If { .. } => 1,
+                Stmt::ParallelFor { body, .. } => 1 + body.len(),
+            }
+        });
+        n
+    }
+}
+
+/// Specialize dynamic parameters to constants — the entry point of the
+/// paper's "dynamic parameter simplification for kernel libraries".
+/// Returns a program with `dyn_params` substituted and all expressions
+/// re-simplified (guards fold, tail loops become splittable).
+pub fn specialize(prog: &TileProgram, bindings: &HashMap<VarId, i64>) -> TileProgram {
+    let emap: HashMap<VarId, Expr> = bindings
+        .iter()
+        .map(|(k, v)| (*k, Expr::int(*v)))
+        .collect();
+    let mut p = prog.clone();
+    p.dyn_params.retain(|v| !bindings.contains_key(&v.id));
+    for b in p.params.iter_mut().chain(p.allocs.iter_mut()) {
+        for s in b.shape.iter_mut() {
+            *s = s.substitute(&emap);
+        }
+    }
+    let empty = HashMap::new();
+    for g in p.grid.iter_mut() {
+        *g = g.substitute(&emap).simplify(&empty);
+    }
+    for b in p.params.iter_mut().chain(p.allocs.iter_mut()) {
+        for s in b.shape.iter_mut() {
+            *s = s.simplify(&empty);
+        }
+    }
+    let ranges = p.var_ranges();
+    fn walk(stmts: &mut [Stmt], emap: &HashMap<VarId, Expr>, ranges: &HashMap<VarId, (i64, i64)>) {
+        for s in stmts {
+            match s {
+                Stmt::Op(op) => match op {
+                    TileOp::Copy { src, dst } => {
+                        for o in src.offsets.iter_mut().chain(dst.offsets.iter_mut()) {
+                            *o = o.substitute(emap).simplify(ranges);
+                        }
+                    }
+                    TileOp::Atomic { dst, .. } => {
+                        for o in dst.offsets.iter_mut() {
+                            *o = o.substitute(emap).simplify(ranges);
+                        }
+                    }
+                    _ => {}
+                },
+                Stmt::For { extent, body, .. } => {
+                    *extent = extent.substitute(emap).simplify(ranges);
+                    walk(body, emap, ranges);
+                }
+                Stmt::ParallelFor { body, .. } => {
+                    for e in body {
+                        e.value = e.value.substitute(emap).simplify(ranges);
+                        for i in e.indices.iter_mut() {
+                            *i = i.substitute(emap).simplify(ranges);
+                        }
+                    }
+                }
+                Stmt::If {
+                    cond,
+                    then_body,
+                    else_body,
+                } => {
+                    *cond = cond.substitute(emap).simplify(ranges);
+                    walk(then_body, emap, ranges);
+                    walk(else_body, emap, ranges);
+                }
+            }
+        }
+    }
+    // grid ranges may have become static: recompute after substitution
+    walk(&mut p.body, &emap, &ranges);
+    let ranges2 = p.var_ranges();
+    fn resimplify(stmts: &mut [Stmt], ranges: &HashMap<VarId, (i64, i64)>) {
+        for s in stmts {
+            match s {
+                Stmt::For { extent, body, .. } => {
+                    *extent = extent.simplify(ranges);
+                    resimplify(body, ranges);
+                }
+                Stmt::If { cond, .. } => *cond = cond.simplify(ranges),
+                _ => {}
+            }
+        }
+    }
+    resimplify(&mut p.body, &ranges2);
+    p
+}
+
+/// Conservative well-formedness check run before lowering: buffer ids
+/// resolve, tile extents divide buffer shapes where required, gemm
+/// operand shapes agree.
+pub fn verify(prog: &TileProgram) -> Result<(), String> {
+    for op in prog.tile_ops() {
+        for id in op.reads().into_iter().chain(op.writes()) {
+            let _ = prog
+                .params
+                .iter()
+                .chain(prog.allocs.iter())
+                .find(|b| b.id == id)
+                .ok_or_else(|| format!("op references unknown buffer {}", id))?;
+        }
+        match op {
+            TileOp::Copy { src, dst } => {
+                let (se, de): (i64, i64) = (src.size(), dst.size());
+                if se != de {
+                    return Err(format!(
+                        "copy size mismatch: {} vs {} elements",
+                        se, de
+                    ));
+                }
+            }
+            TileOp::Gemm {
+                a,
+                b,
+                c,
+                trans_a,
+                trans_b,
+                ..
+            } => {
+                let (sa, sb, sc) = (
+                    prog.buffer(*a).static_shape().ok_or("gemm A not static")?,
+                    prog.buffer(*b).static_shape().ok_or("gemm B not static")?,
+                    prog.buffer(*c).static_shape().ok_or("gemm C not static")?,
+                );
+                let (m, ka) = if *trans_a {
+                    (sa[1], sa[0])
+                } else {
+                    (sa[0], sa[1])
+                };
+                let (kb, n) = if *trans_b {
+                    (sb[1], sb[0])
+                } else {
+                    (sb[0], sb[1])
+                };
+                if ka != kb {
+                    return Err(format!("gemm K mismatch: {} vs {}", ka, kb));
+                }
+                if sc != vec![m, n] {
+                    return Err(format!(
+                        "gemm C shape {:?} != [{}, {}]",
+                        sc, m, n
+                    ));
+                }
+            }
+            TileOp::Reduce { src, dst, dim, .. } => {
+                let ss = prog.buffer(*src).static_shape().ok_or("reduce src")?;
+                let ds = prog.buffer(*dst).static_shape().ok_or("reduce dst")?;
+                if *dim >= ss.len() {
+                    return Err("reduce dim out of range".into());
+                }
+                let mut expect = ss.clone();
+                expect.remove(*dim);
+                if expect.is_empty() {
+                    expect.push(1);
+                }
+                if ds != expect && !(ds.len() == 1 && expect.len() == 1 && ds[0] == expect[0]) {
+                    return Err(format!(
+                        "reduce dst shape {:?}, expected {:?}",
+                        ds, expect
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,619 @@
+//! The `Fragment` layout (§4.1, Fig. 6): a layout whose output is always
+//! `f : K^n -> K^2 = (thread, local)` — which thread within the block owns
+//! a cell of a block-level register buffer, and at which position in that
+//! thread's register file.
+//!
+//! Fragments support the paper's four extension primitives: `repeat`
+//! (grow the tile over new register slots), `repeat_on_thread` (grow the
+//! tile over new threads), `replicate` (duplicate cells across thread
+//! groups — needed when several threads must read the same element, the
+//! Fig. 7 bias-broadcast case), and composition with an input `Layout`.
+//!
+//! Two backends coexist: closed-form expressions (pretty, composable) and
+//! dense tables (what layout *inference* produces when deriving a layout
+//! from another buffer's constraints). Both answer the same queries.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::expr::{Expr, Var};
+use crate::layout::layout::{domain_iter, IterVar, Layout};
+
+/// Backend representation of a fragment mapping.
+#[derive(Clone, Debug, PartialEq)]
+enum Backend {
+    Expr {
+        iter_vars: Vec<IterVar>,
+        /// replication variable; extent == `replicate`
+        rep: Var,
+        fwd_thread: Expr,
+        fwd_local: Expr,
+    },
+    /// Dense: indexed by `flat(cell) * replicate + rep`.
+    Table { thread: Vec<i64>, local: Vec<i64> },
+}
+
+/// A block-level register-file layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Fragment {
+    /// Logical tile shape.
+    pub shape: Vec<i64>,
+    /// How many thread-groups hold a copy of each cell (1 = partitioned).
+    pub replicate: i64,
+    /// Number of threads the fragment spans (threads with no cells allowed).
+    pub num_threads: i64,
+    backend: Backend,
+}
+
+impl Fragment {
+    /// Build from closed-form thread/local expressions. `fwd_thread` may
+    /// reference `rep` (the replication variable) in `[0, replicate)`.
+    pub fn from_expr(
+        iter_vars: Vec<IterVar>,
+        rep: Var,
+        replicate: i64,
+        num_threads: i64,
+        fwd_thread: Expr,
+        fwd_local: Expr,
+    ) -> Fragment {
+        let shape = iter_vars.iter().map(|iv| iv.extent).collect();
+        Fragment {
+            shape,
+            replicate,
+            num_threads,
+            backend: Backend::Expr {
+                iter_vars,
+                rep,
+                fwd_thread,
+                fwd_local,
+            },
+        }
+    }
+
+    /// Build from dense tables (inference output).
+    pub fn from_table(
+        shape: Vec<i64>,
+        replicate: i64,
+        num_threads: i64,
+        thread: Vec<i64>,
+        local: Vec<i64>,
+    ) -> Fragment {
+        let cells: i64 = shape.iter().product();
+        assert_eq!(thread.len() as i64, cells * replicate);
+        assert_eq!(local.len() as i64, cells * replicate);
+        Fragment {
+            shape,
+            replicate,
+            num_threads,
+            backend: Backend::Table { thread, local },
+        }
+    }
+
+    /// The default "linear" fragment for element-wise buffers: flatten the
+    /// tile row-major, give each thread `vec` consecutive elements, cycle
+    /// threads, then wrap into further register slots. This is the layout
+    /// `T.Parallel` lowering assigns when nothing stricter constrains the
+    /// buffer (Fig. 8(c): vectorize inner, bind middle to threads).
+    pub fn linear_vectorized(shape: &[i64], num_threads: i64, vec: i64) -> Fragment {
+        let cells: i64 = shape.iter().product();
+        assert!(vec >= 1 && num_threads >= 1);
+        assert_eq!(
+            cells % vec,
+            0,
+            "vector width {} must divide tile size {}",
+            vec,
+            cells
+        );
+        let iter_vars: Vec<IterVar> = shape
+            .iter()
+            .enumerate()
+            .map(|(d, &e)| IterVar::new(&format!("i{}", d), e))
+            .collect();
+        let mut strides = vec![1i64; shape.len()];
+        let mut s = 1i64;
+        for d in (0..shape.len()).rev() {
+            strides[d] = s;
+            s *= shape[d];
+        }
+        let mut flat = Expr::int(0);
+        for (d, iv) in iter_vars.iter().enumerate() {
+            flat = flat + iv.var.expr() * strides[d];
+        }
+        let chunk = flat.clone().floordiv(vec);
+        let thread = chunk.clone().floormod(num_threads);
+        let local = chunk.floordiv(num_threads) * vec + flat.floormod(vec);
+        let rep = Var::fresh("rep");
+        let ranges: HashMap<_, _> = iter_vars
+            .iter()
+            .map(|iv| (iv.var.id, (0, iv.extent - 1)))
+            .collect();
+        Fragment::from_expr(
+            iter_vars,
+            rep,
+            1,
+            num_threads,
+            thread.simplify(&ranges),
+            local.simplify(&ranges),
+        )
+    }
+
+    /// Fig. 6's `base_layout`: the ldmatrix/MMA fragment of one warp
+    /// (32 threads) consuming an m16k16 tile, 8 registers per thread.
+    pub fn mma_ldmatrix_16x16() -> Fragment {
+        let i = IterVar::new("i", 16);
+        let j = IterVar::new("j", 16);
+        let rep = Var::fresh("rep");
+        // thread = (i % 8) * 4 + (j // 2) % 4 ; lane pattern of ldmatrix
+        let thread = i.var.expr().floormod(8) * 4 + j.var.expr().floordiv(2).floormod(4);
+        // local = (j % 2) + 2 * (i // 8) + 4 * (j // 8)
+        let local =
+            j.var.expr().floormod(2) + i.var.expr().floordiv(8) * 2 + j.var.expr().floordiv(8) * 4;
+        Fragment::from_expr(vec![i, j], rep, 1, 32, thread, local)
+    }
+
+    /// The MMA C-fragment of one warp: m16n8, 4 registers per thread
+    /// (the `mma.m16n8k16` accumulator tiling).
+    pub fn mma_c_16x8() -> Fragment {
+        let i = IterVar::new("i", 16);
+        let j = IterVar::new("j", 8);
+        let rep = Var::fresh("rep");
+        // thread = (i % 8) * 4 + j // 2 ; local = (j % 2) + 2 * (i // 8)
+        let thread = i.var.expr().floormod(8) * 4 + j.var.expr().floordiv(2);
+        let local = j.var.expr().floormod(2) + i.var.expr().floordiv(8) * 2;
+        Fragment::from_expr(vec![i, j], rep, 1, 32, thread, local)
+    }
+
+    /// Block-level GEMM accumulator layout ("MakeMMASTMatrixLayout",
+    /// Fig. 4): `warps_m x warps_n` warps tile the `block_m x block_n`
+    /// accumulator; inside a warp the `mma_c_16x8` pattern repeats.
+    pub fn block_gemm_c(block_m: i64, block_n: i64, warps_m: i64, warps_n: i64) -> Fragment {
+        let mwarp = block_m / warps_m;
+        let nwarp = block_n / warps_n;
+        assert!(
+            mwarp % 16 == 0 && nwarp % 8 == 0,
+            "warp tile {}x{} must be a multiple of the 16x8 mma tile",
+            mwarp,
+            nwarp
+        );
+        let i = IterVar::new("i", block_m);
+        let j = IterVar::new("j", block_n);
+        let rep = Var::fresh("rep");
+        let (ie, je) = (i.var.expr(), j.var.expr());
+        let wm = ie.clone().floordiv(mwarp);
+        let wn = je.clone().floordiv(nwarp);
+        let warp = wm * warps_n + wn;
+        let im = ie.floormod(mwarp); // row within warp tile
+        let jn = je.floormod(nwarp); // col within warp tile
+        let lane =
+            im.clone().floormod(16).floormod(8) * 4 + jn.clone().floormod(8).floordiv(2);
+        let thread = warp * 32 + lane;
+        // register index: which 16x8 sub-tile, then position inside it
+        let tm = im.clone().floordiv(16);
+        let tn = jn.clone().floordiv(8);
+        let base = jn.floormod(8).floormod(2) + im.floormod(16).floordiv(8) * 2;
+        let local = (tm * (nwarp / 8) + tn) * 4 + base;
+        let iter_vars = vec![i, j];
+        let ranges: HashMap<_, _> = iter_vars
+            .iter()
+            .map(|iv| (iv.var.id, (0, iv.extent - 1)))
+            .collect();
+        Fragment::from_expr(
+            iter_vars,
+            rep,
+            1,
+            warps_m * warps_n * 32,
+            thread.simplify(&ranges),
+            local.simplify(&ranges),
+        )
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn cells(&self) -> i64 {
+        self.shape.iter().product()
+    }
+
+    /// Registers needed per thread: `max(local) + 1`.
+    pub fn locals_per_thread(&self) -> i64 {
+        match &self.backend {
+            Backend::Expr {
+                iter_vars,
+                rep,
+                fwd_local,
+                ..
+            } => {
+                let mut ranges: HashMap<_, _> = iter_vars
+                    .iter()
+                    .map(|iv| (iv.var.id, (0, iv.extent - 1)))
+                    .collect();
+                ranges.insert(rep.id, (0, self.replicate - 1));
+                fwd_local
+                    .bounds(&ranges)
+                    .map(|(_, h)| h + 1)
+                    .expect("unboundable fragment local expression")
+            }
+            Backend::Table { local, .. } => local.iter().copied().max().unwrap_or(-1) + 1,
+        }
+    }
+
+    fn flat(&self, idx: &[i64]) -> i64 {
+        let mut f = 0i64;
+        for (d, &v) in idx.iter().enumerate() {
+            debug_assert!(v >= 0 && v < self.shape[d]);
+            f = f * self.shape[d] + v;
+        }
+        f
+    }
+
+    /// Which thread owns copy `rep` of cell `idx`.
+    pub fn thread_at(&self, idx: &[i64], rep_idx: i64) -> i64 {
+        assert!(rep_idx < self.replicate);
+        match &self.backend {
+            Backend::Expr {
+                iter_vars,
+                rep,
+                fwd_thread,
+                ..
+            } => {
+                let mut env: HashMap<_, _> = iter_vars
+                    .iter()
+                    .zip(idx)
+                    .map(|(iv, &v)| (iv.var.id, v))
+                    .collect();
+                env.insert(rep.id, rep_idx);
+                fwd_thread.eval_int(&env)
+            }
+            Backend::Table { thread, .. } => {
+                thread[(self.flat(idx) * self.replicate + rep_idx) as usize]
+            }
+        }
+    }
+
+    /// Register slot of cell `idx` (identical across replicas).
+    pub fn local_at(&self, idx: &[i64]) -> i64 {
+        match &self.backend {
+            Backend::Expr {
+                iter_vars,
+                rep,
+                fwd_local,
+                ..
+            } => {
+                let mut env: HashMap<_, _> = iter_vars
+                    .iter()
+                    .zip(idx)
+                    .map(|(iv, &v)| (iv.var.id, v))
+                    .collect();
+                env.insert(rep.id, 0);
+                fwd_local.eval_int(&env)
+            }
+            Backend::Table { local, .. } => local[(self.flat(idx) * self.replicate) as usize],
+        }
+    }
+
+    /// All (thread, local) owners of a cell.
+    pub fn owners(&self, idx: &[i64]) -> Vec<(i64, i64)> {
+        (0..self.replicate)
+            .map(|r| (self.thread_at(idx, r), self.local_at(idx)))
+            .collect()
+    }
+
+    /// Materialize into the table backend (used by inference outputs and
+    /// by the interpreter's hot loop to avoid re-evaluating expressions).
+    pub fn to_table(&self) -> Fragment {
+        let (iter_vars, rep, fwd_thread, fwd_local) = match &self.backend {
+            Backend::Table { .. } => return self.clone(),
+            Backend::Expr {
+                iter_vars,
+                rep,
+                fwd_thread,
+                fwd_local,
+            } => (iter_vars, rep, fwd_thread, fwd_local),
+        };
+        // one reusable env across the whole domain (hot path)
+        let cells = self.cells();
+        let mut env: HashMap<_, i64> =
+            iter_vars.iter().map(|iv| (iv.var.id, 0)).collect();
+        env.insert(rep.id, 0);
+        let mut thread = Vec::with_capacity((cells * self.replicate) as usize);
+        let mut local = Vec::with_capacity((cells * self.replicate) as usize);
+        for idx in domain_iter(&self.shape) {
+            for (iv, &v) in iter_vars.iter().zip(&idx) {
+                env.insert(iv.var.id, v);
+            }
+            for r in 0..self.replicate {
+                env.insert(rep.id, r);
+                thread.push(fwd_thread.eval_int(&env));
+                local.push(fwd_local.eval_int(&env));
+            }
+        }
+        Fragment::from_table(self.shape.clone(), self.replicate, self.num_threads, thread, local)
+    }
+
+    /// Fig. 6 `repeat`: tile the fragment `factor` times along dimension
+    /// `dim`. With `on_thread = false` the copies land in fresh register
+    /// slots of the same threads (warp consumes a taller tile); with
+    /// `on_thread = true` (`repeat_on_thread`) the copies land on fresh
+    /// thread groups (more warps consume a taller tile).
+    pub fn repeat(&self, dim: usize, factor: i64, on_thread: bool) -> Fragment {
+        let t = self.to_table();
+        let (old_thread, old_local) = match &t.backend {
+            Backend::Table { thread, local } => (thread.clone(), local.clone()),
+            _ => unreachable!(),
+        };
+        let mut new_shape = self.shape.clone();
+        new_shape[dim] *= factor;
+        let locals = self.locals_per_thread();
+        let cells_new: i64 = new_shape.iter().product();
+        let mut thread = Vec::with_capacity((cells_new * self.replicate) as usize);
+        let mut local = Vec::with_capacity((cells_new * self.replicate) as usize);
+        for idx in domain_iter(&new_shape) {
+            let q = idx[dim] / self.shape[dim];
+            let mut base = idx.clone();
+            base[dim] = idx[dim] % self.shape[dim];
+            let f = t.flat(&base);
+            for r in 0..self.replicate {
+                let ot = old_thread[(f * self.replicate + r) as usize];
+                let ol = old_local[(f * self.replicate + r) as usize];
+                if on_thread {
+                    thread.push(ot + q * self.num_threads);
+                    local.push(ol);
+                } else {
+                    thread.push(ot);
+                    local.push(ol + q * locals);
+                }
+            }
+        }
+        let num_threads = if on_thread {
+            self.num_threads * factor
+        } else {
+            self.num_threads
+        };
+        Fragment::from_table(new_shape, self.replicate, num_threads, thread, local)
+    }
+
+    /// Fig. 6 `replicate`: duplicate every cell across `k` thread groups.
+    /// Replica `r` of a cell lives on `thread + (r / old_rep) * threads`.
+    pub fn replicate(&self, k: i64) -> Fragment {
+        let t = self.to_table();
+        let (old_thread, old_local) = match &t.backend {
+            Backend::Table { thread, local } => (thread.clone(), local.clone()),
+            _ => unreachable!(),
+        };
+        let cells = self.cells();
+        let new_rep = self.replicate * k;
+        let mut thread = Vec::with_capacity((cells * new_rep) as usize);
+        let mut local = Vec::with_capacity((cells * new_rep) as usize);
+        for c in 0..cells {
+            for r in 0..new_rep {
+                let (g, old_r) = (r / self.replicate, r % self.replicate);
+                let ot = old_thread[(c * self.replicate + old_r) as usize];
+                let ol = old_local[(c * self.replicate + old_r) as usize];
+                thread.push(ot + g * self.num_threads);
+                local.push(ol);
+            }
+        }
+        Fragment::from_table(
+            self.shape.clone(),
+            new_rep,
+            self.num_threads * k,
+            thread,
+            local,
+        )
+    }
+
+    /// Compose with an input `Layout`: reindex the fragment through a
+    /// coordinate transform (e.g. view a transposed tile).
+    pub fn compose_input(&self, transform: &Layout) -> Fragment {
+        assert_eq!(transform.forward_index.len(), self.ndim());
+        let mut thread = Vec::new();
+        let mut local = Vec::new();
+        let in_shape = transform.input_shape();
+        for idx in domain_iter(&in_shape) {
+            let mapped = transform.index(&idx);
+            for r in 0..self.replicate {
+                thread.push(self.thread_at(&mapped, r));
+            }
+            local.push(self.local_at(&mapped));
+            // local identical across reps; table stores per-rep
+            for _ in 1..self.replicate {
+                let l = *local.last().unwrap();
+                local.push(l);
+            }
+        }
+        Fragment::from_table(in_shape, self.replicate, self.num_threads, thread, local)
+    }
+
+    /// Validate the partition invariant: no two (cell, replica) pairs may
+    /// collide on the same (thread, local) slot — a colliding layout would
+    /// make threads overwrite each other's registers.
+    pub fn is_valid_partition(&self) -> bool {
+        let mut seen = HashSet::new();
+        for idx in domain_iter(&self.shape) {
+            for r in 0..self.replicate {
+                let key = (self.thread_at(&idx, r), self.local_at(&idx));
+                if key.0 < 0 || key.0 >= self.num_threads || key.1 < 0 {
+                    return false;
+                }
+                if !seen.insert(key) {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// True when every thread in `[0, num_threads)` owns at least one cell
+    /// — required for layouts driving loop partitioning (idle threads are
+    /// allowed for copies but flagged by inference diagnostics).
+    pub fn covers_all_threads(&self) -> bool {
+        let mut covered = vec![false; self.num_threads as usize];
+        for idx in domain_iter(&self.shape) {
+            for r in 0..self.replicate {
+                let t = self.thread_at(&idx, r);
+                if t >= 0 && (t as usize) < covered.len() {
+                    covered[t as usize] = true;
+                }
+            }
+        }
+        covered.iter().all(|&c| c)
+    }
+
+    /// Contiguity of the innermost dimension within a thread's register
+    /// file: the largest `v` such that stepping the last logical dim by
+    /// `1..v` stays on the same thread with consecutive local slots.
+    /// Drives vectorized register<->memory copies.
+    pub fn innermost_contiguity(&self) -> i64 {
+        let shape = &self.shape;
+        let last = shape.len() - 1;
+        let inner = shape[last];
+        let mut v = 1i64;
+        'outer: while v < inner {
+            let cand = v * 2;
+            if inner % cand != 0 {
+                break;
+            }
+            for idx in domain_iter(shape) {
+                if idx[last] % cand == 0 {
+                    let t0 = self.thread_at(&idx, 0);
+                    let l0 = self.local_at(&idx);
+                    for step in 1..cand {
+                        let mut i2 = idx.clone();
+                        i2[last] += step;
+                        if self.thread_at(&i2, 0) != t0 || self.local_at(&i2) != l0 + step {
+                            break 'outer;
+                        }
+                    }
+                }
+            }
+            v = cand;
+        }
+        v
+    }
+
+    /// The set of threads that own cell `idx` (dedup over replicas).
+    pub fn threads_for_cell(&self, idx: &[i64]) -> Vec<i64> {
+        let mut v: Vec<i64> = (0..self.replicate)
+            .map(|r| self.thread_at(idx, r))
+            .collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mma_base_layout_is_a_partition() {
+        let f = Fragment::mma_ldmatrix_16x16();
+        assert_eq!(f.num_threads, 32);
+        assert_eq!(f.locals_per_thread(), 8);
+        assert!(f.is_valid_partition());
+        assert!(f.covers_all_threads());
+        assert_eq!(f.cells(), 32 * 8);
+    }
+
+    #[test]
+    fn mma_c_layout_matches_hw_pattern() {
+        let f = Fragment::mma_c_16x8();
+        assert!(f.is_valid_partition());
+        assert_eq!(f.locals_per_thread(), 2 * 2);
+        // row 0: threads 0..4 hold columns (0,1),(2,3),(4,5),(6,7)
+        assert_eq!(f.thread_at(&[0, 0], 0), 0);
+        assert_eq!(f.thread_at(&[0, 2], 0), 1);
+        assert_eq!(f.thread_at(&[1, 0], 0), 4);
+        assert_eq!(f.local_at(&[0, 1]), 1);
+        assert_eq!(f.local_at(&[8, 0]), 2);
+    }
+
+    #[test]
+    fn fig6_repeat_chain() {
+        // base m16k16 (1 warp) --repeat(m x2, on locals)--> m32k16 warp
+        // layout --repeat_on_thread(m x4)--> m128k16 for 4 warps.
+        let base = Fragment::mma_ldmatrix_16x16();
+        let warp = base.repeat(0, 2, false);
+        assert_eq!(warp.shape, vec![32, 16]);
+        assert_eq!(warp.num_threads, 32);
+        assert_eq!(warp.locals_per_thread(), 16);
+        assert!(warp.is_valid_partition());
+
+        let block = warp.repeat(0, 4, true);
+        assert_eq!(block.shape, vec![128, 16]);
+        assert_eq!(block.num_threads, 128);
+        assert_eq!(block.locals_per_thread(), 16);
+        assert!(block.is_valid_partition());
+        assert!(block.covers_all_threads());
+        // row 0 stays on warp 0, row 32 moves to warp 1's threads
+        assert!(block.thread_at(&[0, 0], 0) < 32);
+        assert!((32..64).contains(&block.thread_at(&[32, 0], 0)));
+    }
+
+    #[test]
+    fn replicate_duplicates_across_thread_groups() {
+        // Fig. 7: a 4-wide bias must be replicated so that both threads
+        // processing a row see it.
+        let f = Fragment::linear_vectorized(&[4], 4, 1);
+        let r = f.replicate(2);
+        assert_eq!(r.replicate, 2);
+        assert_eq!(r.num_threads, 8);
+        assert!(r.is_valid_partition());
+        let owners = r.threads_for_cell(&[1]);
+        assert_eq!(owners.len(), 2);
+        assert_eq!(owners[1] - owners[0], 4);
+    }
+
+    #[test]
+    fn linear_vectorized_is_coalesced() {
+        let f = Fragment::linear_vectorized(&[8, 32], 64, 4);
+        assert!(f.is_valid_partition());
+        assert!(f.covers_all_threads());
+        assert_eq!(f.locals_per_thread(), 4);
+        // consecutive elements within a vector stay on one thread
+        assert_eq!(f.thread_at(&[0, 0], 0), f.thread_at(&[0, 3], 0));
+        // next vector chunk goes to the next thread
+        assert_eq!(f.thread_at(&[0, 4], 0), f.thread_at(&[0, 0], 0) + 1);
+    }
+
+    #[test]
+    fn block_gemm_c_partitions_by_warp() {
+        let f = Fragment::block_gemm_c(128, 128, 2, 2);
+        assert_eq!(f.num_threads, 128);
+        assert!(f.is_valid_partition());
+        assert!(f.covers_all_threads());
+        assert_eq!(f.locals_per_thread(), (128 * 128) / 128);
+        // the (0,0) quadrant belongs to warp 0, (0, 64) to warp 1
+        assert!(f.thread_at(&[0, 0], 0) < 32);
+        assert!((32..64).contains(&f.thread_at(&[0, 64], 0)));
+        assert!((64..96).contains(&f.thread_at(&[64, 0], 0)));
+    }
+
+    #[test]
+    fn table_roundtrip_preserves_mapping() {
+        let f = Fragment::block_gemm_c(64, 64, 2, 1);
+        let t = f.to_table();
+        for idx in domain_iter(&f.shape) {
+            assert_eq!(f.thread_at(&idx, 0), t.thread_at(&idx, 0));
+            assert_eq!(f.local_at(&idx), t.local_at(&idx));
+        }
+    }
+
+    #[test]
+    fn compose_input_transposes() {
+        use crate::layout::layout::IterVar as IV;
+        let f = Fragment::mma_c_16x8();
+        // transpose transform: (a, b) in 8x16 -> (b, a)
+        let a = IV::new("a", 8);
+        let b = IV::new("b", 16);
+        let tr = Layout::new(
+            vec![a.clone(), b.clone()],
+            vec![b.var.expr(), a.var.expr()],
+        );
+        let ft = f.compose_input(&tr);
+        assert_eq!(ft.shape, vec![8, 16]);
+        assert_eq!(ft.thread_at(&[3, 5], 0), f.thread_at(&[5, 3], 0));
+        assert!(ft.is_valid_partition());
+    }
+}

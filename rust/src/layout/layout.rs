@@ -1,0 +1,440 @@
+//! The `Layout` abstraction (§4.1, Fig. 5).
+//!
+//! A layout is a function `f : K^n -> K^m` from logical tile indices to
+//! memory coordinates, expressed algebraically over `IterVar`s. Layouts
+//! compose/stack (the paper's "composable and stackable layout function
+//! abstraction built upon IterVar"), support non-bijective transforms
+//! (padding, Fig. 5(c)) and swizzling for bank-conflict elimination.
+
+use std::collections::HashMap;
+
+use crate::ir::expr::{Expr, Var, VarId};
+
+/// An iteration variable with a (dense, zero-based) extent.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IterVar {
+    pub var: Var,
+    pub extent: i64,
+}
+
+impl IterVar {
+    pub fn new(name: &str, extent: i64) -> IterVar {
+        IterVar {
+            var: Var::fresh(name),
+            extent,
+        }
+    }
+}
+
+/// A layout function: `iter_vars` define the input domain
+/// (`[0,e0) x [0,e1) x ...`), `forward_index` the output coordinates.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Layout {
+    pub iter_vars: Vec<IterVar>,
+    pub forward_index: Vec<Expr>,
+}
+
+impl Layout {
+    pub fn new(iter_vars: Vec<IterVar>, forward_index: Vec<Expr>) -> Layout {
+        Layout {
+            iter_vars,
+            forward_index,
+        }
+    }
+
+    /// Row-major layout flattening an n-d shape to a linear address
+    /// (Fig. 5(b): `(i, j) -> i * cols + j`).
+    pub fn row_major(shape: &[i64]) -> Layout {
+        let iter_vars: Vec<IterVar> = shape
+            .iter()
+            .enumerate()
+            .map(|(d, &e)| IterVar::new(&format!("i{}", d), e))
+            .collect();
+        let mut stride = 1i64;
+        let mut strides = vec![1i64; shape.len()];
+        for d in (0..shape.len()).rev() {
+            strides[d] = stride;
+            stride *= shape[d];
+        }
+        let mut idx = Expr::int(0);
+        for (d, iv) in iter_vars.iter().enumerate() {
+            idx = idx + iv.var.expr() * strides[d];
+        }
+        Layout::new(iter_vars, vec![idx.simplify(&HashMap::new())])
+    }
+
+    /// Column-major layout over a 2-d shape.
+    pub fn col_major(rows: i64, cols: i64) -> Layout {
+        let i = IterVar::new("i", rows);
+        let j = IterVar::new("j", cols);
+        let idx = j.var.expr() * rows + i.var.expr();
+        Layout::new(vec![i, j], vec![idx])
+    }
+
+    /// Arbitrary strided layout.
+    pub fn strided(shape: &[i64], strides: &[i64]) -> Layout {
+        assert_eq!(shape.len(), strides.len());
+        let iter_vars: Vec<IterVar> = shape
+            .iter()
+            .enumerate()
+            .map(|(d, &e)| IterVar::new(&format!("i{}", d), e))
+            .collect();
+        let mut idx = Expr::int(0);
+        for (d, iv) in iter_vars.iter().enumerate() {
+            idx = idx + iv.var.expr() * strides[d];
+        }
+        Layout::new(iter_vars, vec![idx.simplify(&HashMap::new())])
+    }
+
+    /// Padded row-major layout (Fig. 5(c)): each row is padded by `pad`
+    /// trailing elements — a non-bijective transform used to break shared
+    /// memory bank conflicts without xor swizzling.
+    pub fn padded(rows: i64, cols: i64, pad: i64) -> Layout {
+        let i = IterVar::new("i", rows);
+        let j = IterVar::new("j", cols);
+        let idx = i.var.expr() * (cols + pad) + j.var.expr();
+        Layout::new(vec![i, j], vec![idx])
+    }
+
+    /// The xor-swizzled shared-memory layout used by `T.gemm` for its
+    /// shared inputs ("MakeSwizzleLayout", Fig. 4). Rows of `cols`
+    /// elements of `elem_bits`-wide data are grouped into 128-byte lines;
+    /// the bank index of each `bank_width`-element chunk is xor-ed with
+    /// (a permutation of) the row index so that column walks hit distinct
+    /// banks. This is the layout cutlass/cute calls `Swizzle<B,M,S>`.
+    pub fn swizzled(rows: i64, cols: i64, elem_bits: u32) -> Layout {
+        let i = IterVar::new("i", rows);
+        let j = IterVar::new("j", cols);
+        // vector chunk of 128 bits (8 fp16 / 4 fp32 / 16 int8)
+        let vec_elems = (128 / elem_bits as i64).max(1);
+        // chunks per 128-byte shared-memory line
+        let row_chunks = (cols / vec_elems).max(1);
+        // how many distinct xor patterns we can apply within a line: a
+        // 128B line holds 8 16B chunks -> up to 8-way swizzle
+        let ways = row_chunks.min(8);
+        let chunk = j.var.expr().floordiv(vec_elems);
+        let within = j.var.expr().floormod(vec_elems);
+        let swizzled_chunk = chunk.bitxor(i.var.expr().floormod(ways));
+        let idx = i.var.expr() * cols + swizzled_chunk * vec_elems + within;
+        Layout::new(vec![i, j], vec![idx])
+    }
+
+    /// Number of input dimensions.
+    pub fn ndim(&self) -> usize {
+        self.iter_vars.len()
+    }
+
+    /// Input domain shape.
+    pub fn input_shape(&self) -> Vec<i64> {
+        self.iter_vars.iter().map(|iv| iv.extent).collect()
+    }
+
+    /// Ranges map for the iter vars (for the arithmetic analyzer).
+    pub fn ranges(&self) -> HashMap<VarId, (i64, i64)> {
+        self.iter_vars
+            .iter()
+            .map(|iv| (iv.var.id, (0, iv.extent - 1)))
+            .collect()
+    }
+
+    /// The transformed buffer's shape: per-output-dim `max + 1`, via
+    /// interval analysis of the forward expressions.
+    pub fn output_shape(&self) -> Vec<i64> {
+        let ranges = self.ranges();
+        self.forward_index
+            .iter()
+            .map(|e| {
+                e.bounds(&ranges)
+                    .map(|(_, h)| h + 1)
+                    .expect("unboundable layout expression")
+            })
+            .collect()
+    }
+
+    /// Total number of addressable cells in the output (product of shape).
+    pub fn output_size(&self) -> i64 {
+        self.output_shape().iter().product()
+    }
+
+    /// Evaluate the layout at a concrete input index.
+    pub fn index(&self, idx: &[i64]) -> Vec<i64> {
+        assert_eq!(idx.len(), self.ndim(), "layout arity mismatch");
+        let env: HashMap<VarId, i64> = self
+            .iter_vars
+            .iter()
+            .zip(idx)
+            .map(|(iv, &v)| (iv.var.id, v))
+            .collect();
+        self.forward_index.iter().map(|e| e.eval_int(&env)).collect()
+    }
+
+    /// Materialize the layout as a dense table over the row-major input
+    /// domain (single-output layouts only). One env is reused across
+    /// cells, avoiding the per-cell HashMap rebuild of `index()` — the
+    /// compile/interpret hot path. [perf pass, EXPERIMENTS.md §Perf]
+    pub fn table(&self) -> Vec<i64> {
+        assert_eq!(
+            self.forward_index.len(),
+            1,
+            "table() requires a linearized layout"
+        );
+        let shape = self.input_shape();
+        let total: i64 = shape.iter().product();
+        let mut env: HashMap<VarId, i64> =
+            self.iter_vars.iter().map(|iv| (iv.var.id, 0)).collect();
+        let mut out = Vec::with_capacity(total as usize);
+        let mut idx = vec![0i64; shape.len()];
+        for _ in 0..total {
+            for (d, iv) in self.iter_vars.iter().enumerate() {
+                env.insert(iv.var.id, idx[d]);
+            }
+            out.push(self.forward_index[0].eval_int(&env));
+            // row-major increment
+            for d in (0..shape.len()).rev() {
+                idx[d] += 1;
+                if idx[d] < shape[d] {
+                    break;
+                }
+                idx[d] = 0;
+            }
+        }
+        out
+    }
+
+    /// Compose: `other ∘ self` — apply `self`, feed its outputs into
+    /// `other`'s iter vars. Requires `self.forward_index.len() ==
+    /// other.ndim()`. The result maps `self`'s domain to `other`'s range.
+    pub fn compose(&self, other: &Layout) -> Layout {
+        assert_eq!(
+            self.forward_index.len(),
+            other.ndim(),
+            "compose arity mismatch: {} outputs into {} inputs",
+            self.forward_index.len(),
+            other.ndim()
+        );
+        let map: HashMap<VarId, Expr> = other
+            .iter_vars
+            .iter()
+            .zip(&self.forward_index)
+            .map(|(iv, e)| (iv.var.id, e.clone()))
+            .collect();
+        let ranges = self.ranges();
+        let fwd = other
+            .forward_index
+            .iter()
+            .map(|e| e.substitute(&map).simplify(&ranges))
+            .collect();
+        Layout::new(self.iter_vars.clone(), fwd)
+    }
+
+    /// Simplify all forward expressions under the iter-var ranges.
+    pub fn simplified(&self) -> Layout {
+        let ranges = self.ranges();
+        Layout::new(
+            self.iter_vars.clone(),
+            self.forward_index
+                .iter()
+                .map(|e| e.simplify(&ranges))
+                .collect(),
+        )
+    }
+
+    /// Exhaustively check injectivity over the input domain. Tile domains
+    /// are small (<= a few thousand cells), so brute force is fine; this
+    /// is what guards the "layouts must not alias" invariant before a
+    /// layout is accepted for a writable buffer.
+    pub fn is_injective(&self) -> bool {
+        let mut seen = std::collections::HashSet::new();
+        for idx in domain_iter(&self.input_shape()) {
+            if !seen.insert(self.index(&idx)) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// Check bijectivity onto `[0, output_size)` for 1-d outputs.
+    pub fn is_bijective_linear(&self) -> bool {
+        if self.forward_index.len() != 1 {
+            return false;
+        }
+        let n: i64 = self.input_shape().iter().product();
+        let mut seen = vec![false; n as usize];
+        for idx in domain_iter(&self.input_shape()) {
+            let out = self.index(&idx)[0];
+            if out < 0 || out >= n || seen[out as usize] {
+                return false;
+            }
+            seen[out as usize] = true;
+        }
+        true
+    }
+
+    /// Measure the contiguity of the innermost dimension: the largest `v`
+    /// such that for all indices, stepping the last input dim by 1..v-1
+    /// steps the (last) output coordinate by exactly 1. Drives
+    /// vectorization inference (Fig. 8(c)).
+    pub fn innermost_contiguity(&self) -> i64 {
+        let shape = self.input_shape();
+        if shape.is_empty() || self.forward_index.len() != 1 {
+            return 1;
+        }
+        let last = shape.len() - 1;
+        let inner_extent = shape[last];
+        // dense table: flat index walks the innermost dim contiguously
+        let table = self.table();
+        let mut v = 1i64;
+        'outer: while v < inner_extent {
+            let cand = v * 2;
+            if inner_extent % cand != 0 {
+                break;
+            }
+            let total = table.len() as i64;
+            let mut flat = 0i64;
+            while flat + cand <= total {
+                let base = table[flat as usize];
+                for step in 1..cand {
+                    if table[(flat + step) as usize] != base + step {
+                        break 'outer;
+                    }
+                }
+                flat += cand;
+            }
+            v = cand;
+        }
+        v
+    }
+}
+
+/// Iterate over the full cartesian domain of `shape`.
+pub fn domain_iter(shape: &[i64]) -> impl Iterator<Item = Vec<i64>> + '_ {
+    let total: i64 = shape.iter().product();
+    let shape = shape.to_vec();
+    (0..total).map(move |mut flat| {
+        let mut idx = vec![0i64; shape.len()];
+        for d in (0..shape.len()).rev() {
+            idx[d] = flat % shape[d];
+            flat /= shape[d];
+        }
+        idx
+    })
+}
+
+/// Count worst-case shared-memory bank conflicts for a warp accessing a
+/// buffer through `layout`. Each lane performs one `access_bytes`-wide
+/// access at the address the layout maps its index to; the memory system
+/// serves 128 bytes per phase, so lanes are grouped into phases of
+/// `128 / access_bytes` and, within a phase, the number of distinct
+/// 4-byte words landing in the same bank is the conflict degree
+/// (1 = conflict-free). This is the standard model for `ldmatrix` /
+/// `cp.async`-era conflict analysis.
+pub fn bank_conflict_degree(
+    layout: &Layout,
+    lane_indices: &[Vec<i64>],
+    elem_bits: u32,
+    num_banks: i64,
+    access_bytes: i64,
+) -> i64 {
+    let phase_lanes = (128 / access_bytes).max(1) as usize;
+    let words_per_access = (access_bytes * 8 / 32).max(1);
+    let mut worst = 1i64;
+    for warp in lane_indices.chunks(32) {
+        for group in warp.chunks(phase_lanes) {
+            let mut per_bank: HashMap<i64, std::collections::HashSet<i64>> = HashMap::new();
+            for idx in group {
+                let lin = layout.index(idx);
+                let addr = *lin.last().unwrap();
+                let word0 = addr * elem_bits as i64 / 32;
+                for w in 0..words_per_access {
+                    let word = word0 + w;
+                    per_bank.entry(word % num_banks).or_default().insert(word);
+                }
+            }
+            let g = per_bank
+                .values()
+                .map(|s| s.len() as i64)
+                .max()
+                .unwrap_or(1);
+            worst = worst.max(g);
+        }
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_major_2d_matches_fig5b() {
+        // Fig. 5(b): 2D-to-1D layout (i, j) -> i * cols + j
+        let l = Layout::row_major(&[4, 8]);
+        assert_eq!(l.index(&[0, 0]), vec![0]);
+        assert_eq!(l.index(&[1, 0]), vec![8]);
+        assert_eq!(l.index(&[2, 5]), vec![21]);
+        assert_eq!(l.output_shape(), vec![32]);
+        assert!(l.is_bijective_linear());
+    }
+
+    #[test]
+    fn padded_is_injective_not_bijective() {
+        // Fig. 5(c): padding layout
+        let l = Layout::padded(4, 8, 1);
+        assert!(l.is_injective());
+        assert!(!l.is_bijective_linear());
+        assert_eq!(l.output_shape(), vec![3 * 9 + 7 + 1]);
+        assert_eq!(l.index(&[1, 0]), vec![9]);
+    }
+
+    #[test]
+    fn compose_applies_inner_then_outer() {
+        // tile-then-linearize: (i,j) -> (i*16+j) through a row-major 2d
+        let tile = Layout::row_major(&[2, 4]); // -> [0,8)
+        // outer: 1d -> 1d multiply by 2 (spread)
+        let k = IterVar::new("k", 8);
+        let outer = Layout::new(vec![k.clone()], vec![k.var.expr() * 2]);
+        let comp = tile.compose(&outer);
+        assert_eq!(comp.index(&[1, 3]), vec![14]);
+        assert_eq!(comp.input_shape(), vec![2, 4]);
+    }
+
+    #[test]
+    fn swizzled_layout_bijective_and_conflict_free() {
+        // 128x32 fp16 tile: a column walk in naive row-major hits the
+        // same bank every 16 rows; the swizzled layout must be
+        // conflict-free while remaining a bijection.
+        let rows = 64;
+        let cols = 64;
+        let naive = Layout::row_major(&[rows, cols]);
+        let swz = Layout::swizzled(rows, cols, 16);
+        assert!(swz.is_bijective_linear(), "swizzle must permute, not alias");
+
+        // lane l of a warp reads column tile: (l, fixed j) pattern used by
+        // ldmatrix-style loads: lanes walk rows, same column chunk of 8
+        let lanes: Vec<Vec<i64>> = (0..32).map(|l| vec![l as i64, 0]).collect();
+        let naive_deg = bank_conflict_degree(&naive, &lanes, 16, 32, 16);
+        let swz_deg = bank_conflict_degree(&swz, &lanes, 16, 32, 16);
+        assert!(naive_deg >= 8, "naive column walk should conflict: {}", naive_deg);
+        assert!(swz_deg <= 2, "swizzle should remove conflicts: {}", swz_deg);
+    }
+
+    #[test]
+    fn contiguity_detection() {
+        let l = Layout::row_major(&[16, 32]);
+        assert_eq!(l.innermost_contiguity(), 32);
+        let c = Layout::col_major(16, 32);
+        assert_eq!(c.innermost_contiguity(), 1);
+        let p = Layout::padded(16, 32, 1);
+        assert_eq!(p.innermost_contiguity(), 32);
+        // swizzle breaks contiguity beyond the vector chunk
+        let s = Layout::swizzled(16, 64, 16);
+        assert_eq!(s.innermost_contiguity(), 8);
+    }
+
+    #[test]
+    fn output_shape_via_analyzer() {
+        // the analyzer must bound  i*36+j  over  i<4, j<36
+        let l = Layout::strided(&[4, 36], &[36, 1]);
+        assert_eq!(l.output_shape(), vec![144]);
+    }
+}

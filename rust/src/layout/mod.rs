@@ -1,0 +1,9 @@
+//! Layout algebra (§4.1): composable `Layout` functions and the
+//! `Fragment` extension that partitions block-level register files.
+
+pub mod fragment;
+#[allow(clippy::module_inception)]
+pub mod layout;
+
+pub use fragment::Fragment;
+pub use layout::{bank_conflict_degree, domain_iter, IterVar, Layout};

@@ -1,0 +1,26 @@
+//! # tilelang-rs
+//!
+//! Reproduction of *TileLang: A Composable Tiled Programming Model for AI
+//! Systems* as a three-layer Rust + JAX + Pallas stack. This crate is the
+//! L3 system: the tile-program IR and compiler (layout inference, thread
+//! binding, tensorization, software pipelining), a thread-level
+//! interpreter used as a semantic oracle, an analytical GPU performance
+//! model that regenerates the paper's evaluation figures, and a PJRT
+//! runtime + kernel-library coordinator that executes the AOT-compiled
+//! Pallas artifacts.
+
+pub mod autotuner;
+pub mod baselines;
+pub mod coordinator;
+pub mod ir;
+pub mod layout;
+pub mod passes;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod tir;
+pub mod workloads;
+
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

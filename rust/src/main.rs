@@ -1,0 +1,209 @@
+//! tilelang CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   devices                         list modeled devices
+//!   artifacts [--dir D]             list AOT artifacts + golden check
+//!   compile --kernel K --device D   compile a workload, print report
+//!   simulate --kernel K --device D  compile + simulate across baselines
+//!   run --artifact NAME [--dir D]   execute an artifact via PJRT
+//!
+//! (Hand-rolled argument parsing: the offline environment has no clap.)
+
+use std::collections::HashMap;
+
+use tilelang::ir::dtype::DType;
+use tilelang::passes::lower::{compile, CompileOptions};
+use tilelang::report::fmt_us;
+use tilelang::runtime::Runtime;
+use tilelang::sim::device::Device;
+use tilelang::sim::model::{estimate, Penalties};
+use tilelang::workloads::attention::{flash_attention_program, AttnConfig};
+use tilelang::workloads::dequant::{dequant_matmul_program, DequantConfig, WeightFormat};
+use tilelang::workloads::matmul::{matmul_program, TileConfig};
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                out.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                out.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+fn build_kernel(name: &str, flags: &HashMap<String, String>) -> tilelang::ir::program::TileProgram {
+    let get = |k: &str, d: i64| -> i64 {
+        flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+    };
+    match name {
+        "gemm" => {
+            let (m, n, k) = (get("m", 4096), get("n", 4096), get("k", 4096));
+            matmul_program(m, n, k, DType::F16, &TileConfig::default_for(m, n, k))
+        }
+        "flash_attention" => {
+            let (bh, s, d) = (get("bh", 32), get("seq", 1024), get("d", 128));
+            flash_attention_program(
+                bh,
+                s,
+                d,
+                flags.contains_key("causal"),
+                &AttnConfig::default_for(s),
+            )
+        }
+        "dequant" => {
+            let (m, n, k) = (get("m", 16), get("n", 4096), get("k", 4096));
+            dequant_matmul_program(m, n, k, WeightFormat::Int4, &DequantConfig::default())
+        }
+        other => {
+            eprintln!("unknown kernel {} (gemm|flash_attention|dequant)", other);
+            std::process::exit(2);
+        }
+    }
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let flags = parse_flags(&argv[1.min(argv.len())..]);
+    let dir = flags
+        .get("dir")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string());
+
+    match cmd {
+        "devices" => {
+            for d in ["rtx4090", "a100", "h100", "mi300x", "rtx3090"] {
+                let dev = Device::by_name(d).unwrap();
+                println!(
+                    "{:<10} arch={:?} sms={} bw={}GB/s tensor={}TFLOPS",
+                    dev.name,
+                    dev.arch,
+                    dev.sms,
+                    dev.dram_gbps,
+                    dev.peak_tensor_tflops()
+                );
+            }
+        }
+        "artifacts" => match Runtime::new(&dir) {
+            Ok(rt) => {
+                for name in rt.artifact_names() {
+                    let spec = rt.spec(&name).unwrap().clone();
+                    match rt.golden_check(&name) {
+                        Ok(err) => println!(
+                            "{:<28} out={:?} golden max_err={:.2e}",
+                            name, spec.out_shape, err
+                        ),
+                        Err(e) => println!("{:<28} ERROR: {}", name, e),
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("{}", e);
+                std::process::exit(1);
+            }
+        },
+        "compile" | "simulate" => {
+            let kernel = flags.get("kernel").map(|s| s.as_str()).unwrap_or("gemm");
+            let dev = Device::by_name(flags.get("device").map(|s| s.as_str()).unwrap_or("h100"))
+                .unwrap_or_else(|| {
+                    eprintln!("unknown device");
+                    std::process::exit(2);
+                });
+            let prog = build_kernel(kernel, &flags);
+            let lowered = match compile(&prog, &dev, &CompileOptions::default()) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("compile error: {}", e);
+                    std::process::exit(1);
+                }
+            };
+            let c = lowered.stmt_counts();
+            println!("kernel {} on {}:", prog.name, dev.name);
+            println!(
+                "  grid={:?} threads={} smem={}B regs/thread={}",
+                lowered.static_grid(),
+                lowered.threads,
+                lowered.schedule.smem_bytes,
+                lowered.schedule.regs_per_thread
+            );
+            println!(
+                "  stmts: {} copies ({} async), {} gemms, {} barriers, {} commits, {} waits",
+                c.copies, c.async_copies, c.gemms, c.barriers, c.commits, c.waits
+            );
+            println!(
+                "  pipeline stages={:?} warp_specialized={}",
+                lowered
+                    .schedule
+                    .pipelines
+                    .iter()
+                    .map(|p| p.num_stages)
+                    .collect::<Vec<_>>(),
+                lowered.schedule.warp_specialized
+            );
+            if cmd == "simulate" {
+                for (label, pen) in [
+                    ("tilelang", Penalties::none()),
+                    ("triton-like", Penalties::triton_like()),
+                    ("torch-like", Penalties::torch_like()),
+                ] {
+                    let r = estimate(&lowered, &dev, &pen);
+                    println!(
+                        "  {:<12} {:>10}  {:>7.1} TFLOPS  bound={:?}  occ={:.2}",
+                        label,
+                        fmt_us(r.time_us),
+                        r.tflops,
+                        r.bound,
+                        r.occupancy
+                    );
+                }
+            }
+        }
+        "run" => {
+            let name = flags
+                .get("artifact")
+                .cloned()
+                .unwrap_or_else(|| "matmul_128".to_string());
+            let res = Runtime::new(&dir).and_then(|rt| {
+                let inputs = rt.example_inputs(&name)?;
+                let t0 = std::time::Instant::now();
+                let out = rt.execute(&name, &inputs)?;
+                Ok((out, t0.elapsed()))
+            });
+            match res {
+                Ok((out, dt)) => {
+                    println!(
+                        "{}: {} outputs in {:?} (first: {:?})",
+                        name,
+                        out.len(),
+                        dt,
+                        &out[..4.min(out.len())]
+                    );
+                }
+                Err(e) => {
+                    eprintln!("run failed: {}", e);
+                    std::process::exit(1);
+                }
+            }
+        }
+        _ => {
+            println!(
+                "tilelang {} — composable tiled programming model (reproduction)\n\
+                 usage: tilelang <devices|artifacts|compile|simulate|run> [--flags]\n\
+                 examples:\n\
+                 \u{20}  tilelang simulate --kernel gemm --device a100 --m 4096 --n 4096 --k 4096\n\
+                 \u{20}  tilelang artifacts --dir artifacts\n\
+                 \u{20}  tilelang run --artifact transformer_block",
+                tilelang::version()
+            );
+        }
+    }
+}

@@ -1,0 +1,766 @@
+//! Layout & thread-binding inference (§4.2).
+//!
+//! The pass maintains a `LayoutMap` over all buffers and processes tile
+//! operators in priority order: operators with strict requirements (GEMM
+//! on tensor cores) pin layouts first; flexible operators (element-wise,
+//! copies) then *derive* layouts for their undetermined buffers from the
+//! already-pinned ones — including the Fig. 7 replication rule ("D must
+//! be replicated to ensure that each thread can access the corresponding
+//! elements"). At each priority level we iterate to a fixpoint before
+//! descending.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::ir::buffer::{BufferId, MemScope};
+use crate::ir::expr::{Expr, ExprKind, VarId};
+use crate::ir::program::{ElemStmt, Stmt, TileOp, TileProgram};
+use crate::layout::fragment::Fragment;
+use crate::layout::layout::{domain_iter, IterVar, Layout};
+use crate::sim::device::Device;
+
+/// Inferred layouts for every on-chip buffer.
+#[derive(Clone, Debug, Default)]
+pub struct LayoutMap {
+    /// Physical address layouts for shared tiles (n-d -> 1-d).
+    pub shared: HashMap<BufferId, Layout>,
+    /// Thread/register partitions for fragment buffers.
+    pub frags: HashMap<BufferId, Fragment>,
+    /// Provenance notes for diagnostics (buffer -> how it was decided).
+    pub origin: HashMap<BufferId, &'static str>,
+}
+
+impl LayoutMap {
+    pub fn fragment(&self, id: BufferId) -> &Fragment {
+        self.frags
+            .get(&id)
+            .unwrap_or_else(|| panic!("no fragment layout inferred for buffer {}", id))
+    }
+
+    pub fn shared_layout(&self, id: BufferId) -> &Layout {
+        self.shared
+            .get(&id)
+            .unwrap_or_else(|| panic!("no shared layout inferred for buffer {}", id))
+    }
+}
+
+/// The block-level fragment layout of a GEMM *A operand* held in
+/// registers: tile `(block_m, block_k)` distributed over
+/// `warps_m x warps_n` warps, where warp rows own disjoint row bands and
+/// warp columns replicate them (every warp column needs all of A).
+pub fn a_operand_fragment(block_m: i64, block_k: i64, warps_m: i64, warps_n: i64) -> Fragment {
+    let mwarp = block_m / warps_m;
+    assert!(mwarp % 16 == 0 && block_k % 16 == 0, "A operand tile must be 16-aligned");
+    let base = Fragment::mma_ldmatrix_16x16();
+    let mut f = base;
+    if block_k > 16 {
+        f = f.repeat(1, block_k / 16, false);
+    }
+    if mwarp > 16 {
+        f = f.repeat(0, mwarp / 16, false);
+    }
+    // replicate across warp columns (they consume the same A rows), then
+    // spread across warp rows. Thread id = (wm * warps_n + wn) * 32 + lane.
+    if warps_n > 1 {
+        f = f.replicate(warps_n);
+    }
+    if warps_m > 1 {
+        f = f.repeat(0, warps_m, true);
+    }
+    f
+}
+
+/// The block-level fragment layout of a GEMM *B operand* in registers:
+/// tile `(block_k, block_n)`, warp columns own disjoint column bands,
+/// warp rows replicate.
+pub fn b_operand_fragment(block_k: i64, block_n: i64, warps_m: i64, warps_n: i64) -> Fragment {
+    let nwarp = block_n / warps_n;
+    assert!(nwarp % 16 == 0 && block_k % 16 == 0, "B operand tile must be 16-aligned");
+    let base = Fragment::mma_ldmatrix_16x16();
+    let mut f = base;
+    if block_k > 16 {
+        f = f.repeat(0, block_k / 16, false);
+    }
+    if nwarp > 16 {
+        f = f.repeat(1, nwarp / 16, false);
+    }
+    if warps_n > 1 {
+        f = f.repeat(1, warps_n, true);
+    }
+    if warps_m > 1 {
+        f = f.replicate(warps_m);
+    }
+    f
+}
+
+/// Derive the fragment of a reduction destination from its source
+/// (§4.2): every thread that owns any source cell along the reduced
+/// dimension must own (a replica of) the corresponding output cell.
+pub fn derive_reduced_fragment(src: &Fragment, dim: usize) -> Result<Fragment, String> {
+    let mut out_shape = src.shape.clone();
+    out_shape.remove(dim);
+    if out_shape.is_empty() {
+        out_shape.push(1);
+    }
+    // collect owner-thread sets per output cell
+    let mut owners: BTreeMap<Vec<i64>, Vec<i64>> = BTreeMap::new();
+    for idx in domain_iter(&src.shape) {
+        let mut out_idx = idx.clone();
+        out_idx.remove(dim);
+        if out_idx.is_empty() {
+            out_idx.push(0);
+        }
+        let entry = owners.entry(out_idx).or_default();
+        for t in src.threads_for_cell(&idx) {
+            if !entry.contains(&t) {
+                entry.push(t);
+            }
+        }
+    }
+    build_table_fragment(out_shape, owners, src.num_threads)
+}
+
+/// Build a table fragment from per-cell owner-thread sets. Owner counts
+/// must be uniform (the replication factor); locals are assigned by a
+/// per-thread counter.
+fn build_table_fragment(
+    shape: Vec<i64>,
+    owners: BTreeMap<Vec<i64>, Vec<i64>>,
+    num_threads: i64,
+) -> Result<Fragment, String> {
+    let rep = owners.values().map(|v| v.len()).max().unwrap_or(1);
+    if owners.values().any(|v| v.len() != rep) {
+        return Err(format!(
+            "non-uniform replication ({}..{}) — cannot build fragment",
+            owners.values().map(|v| v.len()).min().unwrap(),
+            rep
+        ));
+    }
+    let cells: i64 = shape.iter().product();
+    let mut thread = vec![0i64; (cells as usize) * rep];
+    let mut local = vec![0i64; (cells as usize) * rep];
+    let mut counters: HashMap<i64, i64> = HashMap::new();
+    // Iterate cells in canonical order. Replicas of a cell must share one
+    // local slot; we take the max next-free slot over the owner set and
+    // bump every owner past it. Per-thread locals are strictly increasing
+    // over the cells a thread owns, so (thread, local) pairs are unique
+    // (possibly leaving holes, which only cost a few registers).
+    for (flat, idx) in domain_iter(&shape).enumerate() {
+        let ow = &owners[&idx];
+        let slot = ow
+            .iter()
+            .map(|t| *counters.get(t).unwrap_or(&0))
+            .max()
+            .unwrap_or(0);
+        for (r, &t) in ow.iter().enumerate() {
+            thread[flat * rep + r] = t;
+            local[flat * rep + r] = slot;
+            counters.insert(t, slot + 1);
+        }
+    }
+    let f = Fragment::from_table(shape, rep as i64, num_threads, thread, local);
+    Ok(f)
+}
+
+/// Derive a packed-codes fragment from the dequantized fragment: the
+/// thread that decodes cells `(i, j*epb .. j*epb+epb)` must hold packed
+/// cell `(i, j)`.
+pub fn derive_packed_fragment(dst: &Fragment, epb: i64) -> Result<Fragment, String> {
+    assert_eq!(dst.ndim(), 2, "packed derivation expects 2-d tiles");
+    let shape = vec![dst.shape[0], dst.shape[1] / epb];
+    let mut owners: BTreeMap<Vec<i64>, Vec<i64>> = BTreeMap::new();
+    for idx in domain_iter(&shape) {
+        let mut set = Vec::new();
+        for t in 0..epb {
+            let cell = vec![idx[0], idx[1] * epb + t];
+            for o in dst.threads_for_cell(&cell) {
+                if !set.contains(&o) {
+                    set.push(o);
+                }
+            }
+        }
+        owners.insert(idx, set);
+    }
+    build_table_fragment(shape, owners, dst.num_threads)
+}
+
+/// Context for ParallelFor derivation: evaluate index expressions of an
+/// element statement at a loop point.
+fn eval_indices(indices: &[Expr], vars: &[crate::ir::expr::Var], point: &[i64]) -> Option<Vec<i64>> {
+    let env: HashMap<VarId, i64> = vars.iter().zip(point).map(|(v, &p)| (v.id, p)).collect();
+    let mut out = Vec::with_capacity(indices.len());
+    for e in indices {
+        // reject indices that reference non-loop vars (block indices):
+        // those target global memory and don't constrain fragments
+        let mut vs = Vec::new();
+        e.collect_vars(&mut vs);
+        if vs.iter().any(|v| !vars.iter().any(|lv| lv.id == v.id)) {
+            return None;
+        }
+        out.push(e.eval_int(&env));
+    }
+    Some(out)
+}
+
+/// Collect fragment loads in an expression: (buffer, index exprs).
+fn collect_frag_loads(e: &Expr, frag_bufs: &HashMap<BufferId, bool>, out: &mut Vec<(BufferId, Vec<Expr>)>) {
+    match e.kind() {
+        ExprKind::Load(b, idx) => {
+            if frag_bufs.contains_key(b) {
+                out.push((*b, idx.clone()));
+            }
+            for i in idx {
+                collect_frag_loads(i, frag_bufs, out);
+            }
+        }
+        ExprKind::Bin(_, a, b) => {
+            collect_frag_loads(a, frag_bufs, out);
+            collect_frag_loads(b, frag_bufs, out);
+        }
+        ExprKind::Un(_, a) => collect_frag_loads(a, frag_bufs, out),
+        ExprKind::Select(c, t, f) => {
+            collect_frag_loads(c, frag_bufs, out);
+            collect_frag_loads(t, frag_bufs, out);
+            collect_frag_loads(f, frag_bufs, out);
+        }
+        ExprKind::Cast(_, a) => collect_frag_loads(a, frag_bufs, out),
+        _ => {}
+    }
+}
+
+/// Run layout + thread-binding inference over a program.
+pub fn infer_layouts(prog: &TileProgram, _device: &Device) -> Result<LayoutMap, String> {
+    let mut map = LayoutMap::default();
+    let warp = 32i64; // fragments are built in 32-lane units; wavefront
+                      // width only affects the cost model
+    let num_warps = prog.threads / warp;
+
+    let frag_bufs: HashMap<BufferId, bool> = prog
+        .all_buffers()
+        .filter(|b| b.scope == MemScope::Fragment)
+        .map(|b| (b.id, true))
+        .collect();
+
+    // ---- priority 0: user annotations pin everything they mention ----
+    // (annotations on GLOBAL buffers mark offline repacking — consumed
+    // by the vectorizer, not by on-chip layout assignment)
+    for (id, l) in &prog.annotations.layouts {
+        if prog.buffer(*id).scope.is_shared() {
+            map.shared.insert(*id, l.clone());
+            map.origin.insert(*id, "annotate_layout");
+        }
+    }
+    for (id, f) in &prog.annotations.fragments {
+        map.frags.insert(*id, f.clone());
+        map.origin.insert(*id, "annotate_fragment");
+    }
+
+    // ---- priority 1: GEMM pins its operands -------------------------
+    for op in prog.tile_ops() {
+        if let TileOp::Gemm {
+            a,
+            b,
+            c,
+            trans_a,
+            trans_b,
+            policy,
+        } = op
+        {
+            let sa = prog.buffer(*a).static_shape().ok_or("gemm A not static")?;
+            let sb = prog.buffer(*b).static_shape().ok_or("gemm B not static")?;
+            let (m, k) = if *trans_a { (sa[1], sa[0]) } else { (sa[0], sa[1]) };
+            let n = if *trans_b { sb[0] } else { sb[1] };
+            let (wm, wn) = policy.split(num_warps, m, n);
+            if wm * wn > num_warps {
+                return Err(format!(
+                    "warp policy {:?} cannot split {} warps over {}x{} tile",
+                    policy, num_warps, m, n
+                ));
+            }
+            // C accumulator
+            map.frags
+                .entry(*c)
+                .or_insert_with(|| Fragment::block_gemm_c(m, n, wm, wn).to_table());
+            map.origin.entry(*c).or_insert("gemm accumulator");
+            // A operand
+            let ba = prog.buffer(*a);
+            if ba.scope.is_shared() {
+                map.shared.entry(*a).or_insert_with(|| {
+                    if prog.annotations.no_smem_swizzle {
+                        Layout::row_major(&sa)
+                    } else {
+                        Layout::swizzled(sa[0], sa[1], ba.dtype.bits())
+                    }
+                });
+                map.origin.entry(*a).or_insert("gemm shared operand (swizzled)");
+            } else if ba.scope == MemScope::Fragment && !map.frags.contains_key(a) {
+                let f = a_operand_fragment(m, k, wm, wn);
+                let f = if *trans_a {
+                    // buffer is stored (k, m): view through a transpose
+                    let ai = IterVar::new("k", k);
+                    let bi = IterVar::new("m", m);
+                    let tr = Layout::new(
+                        vec![ai.clone(), bi.clone()],
+                        vec![bi.var.expr(), ai.var.expr()],
+                    );
+                    f.compose_input(&tr)
+                } else {
+                    f
+                };
+                map.frags.insert(*a, f.to_table());
+                map.origin.insert(*a, "gemm A fragment operand");
+            }
+            // B operand
+            let bb = prog.buffer(*b);
+            if bb.scope.is_shared() {
+                map.shared.entry(*b).or_insert_with(|| {
+                    if prog.annotations.no_smem_swizzle {
+                        Layout::row_major(&sb)
+                    } else {
+                        Layout::swizzled(sb[0], sb[1], bb.dtype.bits())
+                    }
+                });
+                map.origin.entry(*b).or_insert("gemm shared operand (swizzled)");
+            } else if bb.scope == MemScope::Fragment && !map.frags.contains_key(b) {
+                let f = b_operand_fragment(k, n, wm, wn);
+                let f = if *trans_b {
+                    // buffer stored (n, k): view through transpose
+                    let ai = IterVar::new("n", n);
+                    let bi = IterVar::new("k", k);
+                    let tr = Layout::new(
+                        vec![ai.clone(), bi.clone()],
+                        vec![bi.var.expr(), ai.var.expr()],
+                    );
+                    f.compose_input(&tr)
+                } else {
+                    f
+                };
+                map.frags.insert(*b, f.to_table());
+                map.origin.insert(*b, "gemm B fragment operand");
+            }
+        }
+    }
+
+    // ---- priority 2+3: propagate through reduce/dequant/parallel to a
+    // fixpoint; each round may unlock more derivations -----------------
+    for _round in 0..8 {
+        // everything decided? skip remaining rounds (common case after
+        // one pass) [perf pass, EXPERIMENTS.md §Perf]
+        if frag_bufs.keys().all(|b| map.frags.contains_key(b)) {
+            break;
+        }
+        let mut progress = false;
+        for op in prog.tile_ops() {
+            match op {
+                TileOp::Reduce { src, dst, dim, .. } => {
+                    if map.frags.contains_key(src) && !map.frags.contains_key(dst) {
+                        let f = derive_reduced_fragment(map.fragment(*src), *dim)?;
+                        map.frags.insert(*dst, f);
+                        map.origin.insert(*dst, "derived from reduce src");
+                        progress = true;
+                    }
+                }
+                TileOp::Dequant { src, dst, group_size, scale, .. } => {
+                    let sb = prog.buffer(*src);
+                    if sb.scope == MemScope::Fragment
+                        && map.frags.contains_key(dst)
+                        && !map.frags.contains_key(src)
+                    {
+                        // codes are packed into bytes: elems-per-byte is
+                        // the shape ratio (storage dtype is uint8)
+                        let sshape = sb.static_shape().ok_or("dequant src not static")?;
+                        let dshape =
+                            prog.buffer(*dst).static_shape().ok_or("dequant dst not static")?;
+                        let epb = dshape[1] / sshape[1];
+                        let f = derive_packed_fragment(map.fragment(*dst), epb)?;
+                        map.frags.insert(*src, f);
+                        map.origin.insert(*src, "derived from dequant dst");
+                        progress = true;
+                    }
+                    if let Some(sc) = scale {
+                        let scb = prog.buffer(*sc);
+                        if scb.scope == MemScope::Fragment
+                            && map.frags.contains_key(dst)
+                            && !map.frags.contains_key(sc)
+                        {
+                            // scale[i, j/group]: every thread holding a
+                            // dequantized cell needs its group's scale
+                            let dstf = map.fragment(*dst);
+                            let shape = vec![dstf.shape[0], dstf.shape[1] / group_size];
+                            let mut owners: BTreeMap<Vec<i64>, Vec<i64>> = BTreeMap::new();
+                            for idx in domain_iter(&shape) {
+                                let mut set = Vec::new();
+                                for t in 0..*group_size {
+                                    let cell = vec![idx[0], idx[1] * group_size + t];
+                                    for o in dstf.threads_for_cell(&cell) {
+                                        if !set.contains(&o) {
+                                            set.push(o);
+                                        }
+                                    }
+                                }
+                                owners.insert(idx, set);
+                            }
+                            let f = build_table_fragment(shape, owners, dstf.num_threads)?;
+                            map.frags.insert(*sc, f);
+                            map.origin.insert(*sc, "derived dequant scale (replicated)");
+                            progress = true;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        // ParallelFor derivations (Fig. 7): walk statements
+        let mut derivations: Vec<(BufferId, Fragment, &'static str)> = Vec::new();
+        prog.visit_stmts(&mut |s| {
+            if let Stmt::ParallelFor { vars, extents, body } = s {
+                for es in body {
+                    if let Err(_e) = derive_parallel(
+                        prog, &map, &frag_bufs, vars, extents, es, &mut derivations,
+                    ) {
+                        // leave for later priority rounds
+                    }
+                }
+            }
+        });
+        for (id, f, why) in derivations {
+            if !map.frags.contains_key(&id) {
+                map.frags.insert(id, f);
+                map.origin.insert(id, why);
+                progress = true;
+            }
+        }
+        if !progress {
+            break;
+        }
+    }
+
+    // ---- priority 4: defaults ----------------------------------------
+    for b in prog.all_buffers() {
+        match b.scope {
+            MemScope::Shared | MemScope::SharedDyn => {
+                if !map.shared.contains_key(&b.id) {
+                    let shape = b.static_shape().ok_or("shared tile must be static")?;
+                    map.shared.insert(b.id, Layout::row_major(&shape));
+                    map.origin.entry(b.id).or_insert("default row-major");
+                }
+            }
+            MemScope::Fragment => {
+                if !map.frags.contains_key(&b.id) {
+                    let shape = b.static_shape().ok_or("fragment tile must be static")?;
+                    let cells: i64 = shape.iter().product();
+                    let mut vec = b.dtype.max_vector_lanes() as i64;
+                    while vec > 1 && (cells % (prog.threads * vec) != 0) {
+                        vec /= 2;
+                    }
+                    let f = if cells % prog.threads == 0 {
+                        Fragment::linear_vectorized(&shape, prog.threads, vec)
+                    } else {
+                        // small tile: give each cell to one thread, pad
+                        let mut owners: BTreeMap<Vec<i64>, Vec<i64>> = BTreeMap::new();
+                        for (flat, idx) in domain_iter(&shape).enumerate() {
+                            owners.insert(idx, vec![flat as i64 % prog.threads]);
+                        }
+                        build_table_fragment(shape, owners, prog.threads)?
+                    };
+                    map.frags.insert(b.id, f);
+                    map.origin.entry(b.id).or_insert("default linear");
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // ---- materialize: store fragments in table form so every
+    // downstream query (validation, interpreter, derivations in later
+    // compiles, copy vectorization) is an O(1) lookup instead of a
+    // per-cell expression evaluation. [perf pass: 31ms -> see
+    // EXPERIMENTS.md §Perf]
+    let keys: Vec<BufferId> = map.frags.keys().copied().collect();
+    for k in keys {
+        let t = map.frags[&k].to_table();
+        map.frags.insert(k, t);
+    }
+
+    // ---- validation ---------------------------------------------------
+    for (id, f) in &map.frags {
+        if !f.is_valid_partition() {
+            return Err(format!(
+                "inferred fragment for buffer {} ({}) is not a valid partition",
+                id,
+                prog.buffer(*id).name
+            ));
+        }
+        if f.num_threads > prog.threads {
+            return Err(format!(
+                "fragment for {} spans {} threads > block threads {}",
+                prog.buffer(*id).name,
+                f.num_threads,
+                prog.threads
+            ));
+        }
+    }
+    for (id, l) in &map.shared {
+        if !l.is_injective() {
+            return Err(format!(
+                "shared layout for buffer {} aliases ({} cells)",
+                id,
+                l.output_size()
+            ));
+        }
+    }
+    Ok(map)
+}
+
+/// Derive unknown fragments inside one ParallelFor element statement.
+fn derive_parallel(
+    prog: &TileProgram,
+    map: &LayoutMap,
+    frag_bufs: &HashMap<BufferId, bool>,
+    vars: &[crate::ir::expr::Var],
+    extents: &[i64],
+    es: &ElemStmt,
+    out: &mut Vec<(BufferId, Fragment, &'static str)>,
+) -> Result<(), String> {
+    let dst_is_frag = frag_bufs.contains_key(&es.dst);
+    let mut loads = Vec::new();
+    collect_frag_loads(&es.value, frag_bufs, &mut loads);
+
+    let dst_known = map.frags.contains_key(&es.dst)
+        || out.iter().any(|(id, _, _)| *id == es.dst);
+    let known_load = loads
+        .iter()
+        .find(|(b, _)| map.frags.contains_key(b));
+
+    // case 1: dst unknown, an operand known -> bind dst to operand owners
+    if dst_is_frag && !dst_known {
+        if let Some((kb, kidx)) = known_load {
+            let kf = map.fragment(*kb);
+            let dstb = prog.buffer(es.dst);
+            let shape = dstb.static_shape().ok_or("dst not static")?;
+            let mut owners: BTreeMap<Vec<i64>, Vec<i64>> = BTreeMap::new();
+            for point in domain_iter(extents) {
+                let d = eval_indices(&es.indices, vars, &point).ok_or("dst idx")?;
+                let k = eval_indices(kidx, vars, &point).ok_or("src idx")?;
+                let set = kf.threads_for_cell(&k);
+                let entry = owners.entry(d).or_default();
+                for t in set {
+                    if !entry.contains(&t) {
+                        entry.push(t);
+                    }
+                }
+            }
+            // cells never touched by the loop keep owner thread 0
+            for idx in domain_iter(&shape) {
+                owners.entry(idx).or_insert_with(|| vec![0]);
+            }
+            let f = build_table_fragment(shape, owners, kf.num_threads)?;
+            out.push((es.dst, f, "derived from parallel operand"));
+            return Ok(());
+        }
+    }
+
+    // case 2: dst known, some operand unknown -> replicate operand so
+    // every thread writing a point holds the operand cells it reads
+    if dst_is_frag && dst_known {
+        let dstf = if let Some(f) = map.frags.get(&es.dst) {
+            f.clone()
+        } else {
+            out.iter()
+                .find(|(id, _, _)| *id == es.dst)
+                .map(|(_, f, _)| f.clone())
+                .unwrap()
+        };
+        for (ub, uidx) in &loads {
+            if map.frags.contains_key(ub) || out.iter().any(|(id, _, _)| id == ub) {
+                continue;
+            }
+            let ubuf = prog.buffer(*ub);
+            let shape = ubuf.static_shape().ok_or("operand not static")?;
+            let mut owners: BTreeMap<Vec<i64>, Vec<i64>> = BTreeMap::new();
+            for point in domain_iter(extents) {
+                let d = eval_indices(&es.indices, vars, &point).ok_or("dst idx")?;
+                let u = eval_indices(uidx, vars, &point).ok_or("operand idx")?;
+                let set = dstf.threads_for_cell(&d);
+                let entry = owners.entry(u).or_default();
+                for t in set {
+                    if !entry.contains(&t) {
+                        entry.push(t);
+                    }
+                }
+            }
+            for idx in domain_iter(&shape) {
+                owners.entry(idx).or_insert_with(|| vec![0]);
+            }
+            // pad owner sets to uniform cardinality by repeating threads
+            // is invalid; instead require uniformity
+            let f = build_table_fragment(shape, owners, dstf.num_threads)?;
+            out.push((*ub, f, "replicated parallel operand (Fig.7)"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::{store, KernelBuilder};
+    use crate::ir::dtype::DType::{F16, F32};
+    use crate::ir::program::GemmWarpPolicy;
+
+    fn matmul_prog() -> TileProgram {
+        let mut t = KernelBuilder::new("mm", 128);
+        let a = t.param("A", &[256, 256], F16);
+        let b = t.param("B", &[256, 256], F16);
+        let c = t.param("C", &[256, 256], F16);
+        let (bx, by) = t.kernel2(4, 4);
+        let a_s = t.alloc_shared("A_shared", &[64, 32], F16);
+        let b_s = t.alloc_shared("B_shared", &[32, 64], F16);
+        let c_l = t.alloc_fragment("C_local", &[64, 64], F32);
+        t.clear(c_l);
+        t.pipelined(8, 2, |t, ko| {
+            t.copy_in(a, vec![by.expr() * 64, ko.expr() * 32], a_s);
+            t.copy_in(b, vec![ko.expr() * 32, bx.expr() * 64], b_s);
+            t.gemm(a_s, b_s, c_l);
+        });
+        t.copy_out(c_l, c, vec![by.expr() * 64, bx.expr() * 64]);
+        t.finish()
+    }
+
+    #[test]
+    fn gemm_pins_swizzled_shared_and_block_fragment() {
+        let p = matmul_prog();
+        let map = infer_layouts(&p, &Device::a100()).unwrap();
+        // shared operands got swizzled (non-row-major, injective) layouts
+        let a_s = p.allocs.iter().find(|b| b.name == "A_shared").unwrap();
+        let l = map.shared_layout(a_s.id);
+        assert!(l.is_bijective_linear());
+        assert_ne!(l.index(&[1, 0])[0], 32, "expected swizzle, got row-major");
+        // accumulator is a valid 128-thread partition
+        let c_l = p.allocs.iter().find(|b| b.name == "C_local").unwrap();
+        let f = map.fragment(c_l.id);
+        assert_eq!(f.num_threads, 128);
+        assert!(f.is_valid_partition());
+        assert!(f.covers_all_threads());
+    }
+
+    #[test]
+    fn fig7_bias_gets_replicated() {
+        // C[i,j] += D[j] after a GEMM: D must replicate across the
+        // threads sharing each column.
+        let mut t = KernelBuilder::new("bias", 128);
+        let _ = t.kernel1(1);
+        let a_s = t.alloc_shared("A_shared", &[64, 32], F16);
+        let b_s = t.alloc_shared("B_shared", &[32, 64], F16);
+        let c_l = t.alloc_fragment("C_local", &[64, 64], F32);
+        let d_l = t.alloc_fragment("D_local", &[64], F32);
+        t.clear(c_l);
+        t.gemm(a_s, b_s, c_l);
+        t.parallel(&[64, 64], |v| {
+            let (i, j) = (&v[0], &v[1]);
+            vec![store(
+                c_l,
+                vec![i.expr(), j.expr()],
+                Expr::load(c_l, vec![i.expr(), j.expr()]) + Expr::load(d_l, vec![j.expr()]),
+            )]
+        });
+        let p = t.finish();
+        let map = infer_layouts(&p, &Device::a100()).unwrap();
+        let d = p.allocs.iter().find(|b| b.name == "D_local").unwrap();
+        let f = map.fragment(d.id);
+        assert!(f.replicate > 1, "bias must be replicated, got {}", f.replicate);
+        assert!(f.is_valid_partition());
+        // every thread that owns a C cell in column j owns D[j]
+        let c = p.allocs.iter().find(|b| b.name == "C_local").unwrap();
+        let cf = map.fragment(c.id);
+        for j in [0i64, 17, 63] {
+            let dj = f.threads_for_cell(&[j]);
+            for i in [0i64, 31, 63] {
+                for t in cf.threads_for_cell(&[i, j]) {
+                    assert!(dj.contains(&t), "thread {} lacks D[{}]", t, j);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_dst_owned_by_row_owners() {
+        let mut t = KernelBuilder::new("rowmax", 128);
+        let _ = t.kernel1(1);
+        let a_s = t.alloc_shared("A_shared", &[64, 32], F16);
+        let b_s = t.alloc_shared("B_shared", &[32, 64], F16);
+        let acc = t.alloc_fragment("acc", &[64, 64], F32);
+        let mx = t.alloc_fragment("mx", &[64], F32);
+        t.clear(acc);
+        t.gemm(a_s, b_s, acc);
+        t.reduce(acc, mx, 1, crate::ir::program::ReduceKind::Max, true);
+        let p = t.finish();
+        let map = infer_layouts(&p, &Device::a100()).unwrap();
+        let accb = p.allocs.iter().find(|b| b.name == "acc").unwrap();
+        let mxb = p.allocs.iter().find(|b| b.name == "mx").unwrap();
+        let accf = map.fragment(accb.id);
+        let mxf = map.fragment(mxb.id);
+        assert!(mxf.is_valid_partition());
+        for i in [0i64, 13, 63] {
+            let owners = mxf.threads_for_cell(&[i]);
+            for j in [0i64, 32, 63] {
+                for t in accf.threads_for_cell(&[i, j]) {
+                    assert!(owners.contains(&t), "thread {} lacks mx[{}]", t, i);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_chain_derives_packed_and_scale() {
+        use crate::ir::dtype::DType::U4;
+        use crate::ir::program::DequantScheme;
+        let mut t = KernelBuilder::new("dq", 128);
+        let _ = t.kernel1(1);
+        let a_s = t.alloc_shared("A_shared", &[64, 64], F16);
+        let b_q = t.alloc_fragment("B_q", &[64, 32], U4); // packed codes (64 x 64 int4)
+        let b_dq = t.alloc_fragment("B_dq", &[64, 64], F16);
+        let scale = t.alloc_fragment("scales", &[64, 2], F16); // group 32
+        let c_l = t.alloc_fragment("C_local", &[64, 64], F32);
+        t.clear(c_l);
+        t.dequant(b_q, b_dq, DequantScheme::UintAffine { zero: 8 }, Some(scale), 32);
+        t.gemm_opts(b_dq, a_s, c_l, false, false, GemmWarpPolicy::FullCol);
+        let p = t.finish();
+        let map = infer_layouts(&p, &Device::a100()).unwrap();
+        let bq = p.allocs.iter().find(|b| b.name == "B_q").unwrap();
+        let bdq = p.allocs.iter().find(|b| b.name == "B_dq").unwrap();
+        let sc = p.allocs.iter().find(|b| b.name == "scales").unwrap();
+        let fq = map.fragment(bq.id);
+        let fdq = map.fragment(bdq.id);
+        let fsc = map.fragment(sc.id);
+        assert_eq!(fq.shape, vec![64, 32], "packed fragment must match byte shape");
+        assert_eq!(fsc.shape, vec![64, 2]);
+        assert!(fq.is_valid_partition());
+        assert!(fsc.is_valid_partition());
+        // each packed cell's owner owns its two decoded cells
+        for idx in [[0i64, 0], [13, 7], [63, 31]] {
+            let owners = fq.threads_for_cell(&idx);
+            for t in 0..2 {
+                for o in fdq.threads_for_cell(&[idx[0], idx[1] * 2 + t]) {
+                    assert!(owners.contains(&o));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn defaults_cover_unconstrained_buffers() {
+        let mut t = KernelBuilder::new("free", 64);
+        let _ = t.kernel1(1);
+        let s = t.alloc_shared("s", &[32, 32], F32);
+        let f = t.alloc_fragment("f", &[32, 32], F32);
+        t.copy(s, f);
+        let p = t.finish();
+        let map = infer_layouts(&p, &Device::a100()).unwrap();
+        let sb = p.allocs.iter().find(|b| b.name == "s").unwrap();
+        let fb = p.allocs.iter().find(|b| b.name == "f").unwrap();
+        assert!(map.shared_layout(sb.id).is_bijective_linear());
+        let fr = map.fragment(fb.id);
+        assert!(fr.is_valid_partition());
+        assert!(fr.covers_all_threads());
+    }
+}

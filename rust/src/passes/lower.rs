@@ -1,0 +1,957 @@
+//! Lowering: `TileProgram` -> `LoweredProgram`.
+//!
+//! Chains the scheduling passes the paper automates:
+//! 1. layout & thread-binding inference (§4.2, `layout_inference`),
+//! 2. vectorization / binding of copies (Fig. 8),
+//! 3. instruction selection for GEMMs (§4.3),
+//! 4. software-pipeline expansion with multi-buffering + async copies
+//!    (§4.4) — producing the prologue / steady-state / predicated-issue
+//!    structure of Fig. 1(c),
+//! 5. warp-specialization decision on Hopper-class devices (§4.4).
+
+use std::collections::{HashMap, HashSet};
+
+use crate::ir::buffer::{BufferId, MemScope};
+use crate::ir::expr::{Expr, VarId};
+use crate::ir::program::{self, ForKind, Stmt, TileOp, TileProgram};
+use crate::layout::layout::{bank_conflict_degree, Layout};
+use crate::passes::layout_inference::{infer_layouts, LayoutMap};
+use crate::sim::device::Device;
+use crate::tir::{
+    CopyBinding, FragAlloc, GemmSched, LoweredProgram, ParallelBinding, PipelineSched, RegionRef,
+    ScheduleInfo, SharedAlloc, TStmt,
+};
+
+/// Compilation options (the knobs a `tilelang.compile` call exposes).
+#[derive(Clone, Debug, Default)]
+pub struct CompileOptions {
+    /// Lower GEMMs natively (inline-PTX path) instead of via the tile
+    /// library (§4.3 "two complementary methods"). Semantics identical;
+    /// affects the compile-time model and layout override flexibility.
+    pub native_mma: bool,
+}
+
+/// Compile a tile program for a device.
+pub fn compile(
+    prog: &TileProgram,
+    device: &Device,
+    opts: &CompileOptions,
+) -> Result<LoweredProgram, String> {
+    program::verify(prog)?;
+    let layout = infer_layouts(prog, device)?;
+
+    // multi-buffer slot counts: shared buffers produced by global->shared
+    // copies inside a Pipelined loop get `num_stages` slots
+    let mut slots: HashMap<BufferId, i64> = HashMap::new();
+    collect_slots(prog, &prog.body, &mut slots);
+
+    let mut ctx = LowerCtx {
+        prog,
+        device,
+        opts,
+        layout: &layout,
+        pipelines: Vec::new(),
+        validated_gemms: HashSet::new(),
+        binding_cache: HashMap::new(),
+    };
+    let body = ctx.lower_stmts(&prog.body, &HashMap::new())?;
+
+    let shared: Vec<SharedAlloc> = prog
+        .allocs
+        .iter()
+        .filter(|b| b.scope.is_shared())
+        .map(|b| {
+            let l = layout.shared_layout(b.id);
+            SharedAlloc {
+                buf: b.id,
+                cells_per_slot: l.output_size(),
+                slots: *slots.get(&b.id).unwrap_or(&1),
+                elem_bits: b.dtype.bits(),
+                dtype: b.dtype,
+            }
+        })
+        .collect();
+    let frags: Vec<FragAlloc> = prog
+        .allocs
+        .iter()
+        .filter(|b| b.scope == MemScope::Fragment)
+        .map(|b| FragAlloc {
+            buf: b.id,
+            locals_per_thread: layout.fragment(b.id).locals_per_thread(),
+            dtype: b.dtype,
+        })
+        .collect();
+
+    let smem_bytes: i64 = shared.iter().map(|s| s.bytes()).sum();
+    if smem_bytes > device.smem_per_block {
+        return Err(format!(
+            "kernel needs {} B shared memory; {} allows {} per block",
+            smem_bytes, device.name, device.smem_per_block
+        ));
+    }
+    let regs_per_thread: i64 = frags
+        .iter()
+        .map(|f| f.locals_per_thread * (dtype_bits(prog, f.buf) as i64).max(32) / 32)
+        .sum();
+
+    let has_pipeline = !ctx.pipelines.is_empty();
+    let schedule = ScheduleInfo {
+        pipelines: ctx.pipelines.clone(),
+        warp_specialized: device.arch.has_tma()
+            && has_pipeline
+            && !prog.annotations.no_warp_specialize,
+        smem_bytes,
+        regs_per_thread,
+        swizzle_blocks: prog.annotations.swizzle_blocks.is_some(),
+    };
+
+    Ok(LoweredProgram {
+        name: prog.name.clone(),
+        grid: prog.grid.clone(),
+        block_vars: prog.block_vars.clone(),
+        threads: prog.threads,
+        params: prog.params.clone(),
+        shared,
+        frags,
+        layout,
+        body,
+        schedule,
+    })
+}
+
+fn dtype_bits(prog: &TileProgram, buf: BufferId) -> u32 {
+    prog.buffer(buf).dtype.bits()
+}
+
+/// Record pipeline slot counts for shared buffers written by copies in
+/// pipelined loops.
+fn collect_slots(prog: &TileProgram, stmts: &[Stmt], slots: &mut HashMap<BufferId, i64>) {
+    for s in stmts {
+        match s {
+            Stmt::For { kind, body, .. } => {
+                if let ForKind::Pipelined { num_stages, .. } = kind {
+                    let st = (*num_stages).max(1) as i64;
+                    for op in body.iter().filter_map(|s| match s {
+                        Stmt::Op(op) => Some(op),
+                        _ => None,
+                    }) {
+                        if let TileOp::Copy { src, dst } = op {
+                            let sb = prog.buffer(src.buffer);
+                            let db = prog.buffer(dst.buffer);
+                            if sb.scope == MemScope::Global && db.scope.is_shared() {
+                                let e = slots.entry(dst.buffer).or_insert(1);
+                                *e = (*e).max(st);
+                            }
+                        }
+                    }
+                }
+                collect_slots(prog, body, slots);
+            }
+            Stmt::If {
+                then_body,
+                else_body,
+                ..
+            } => {
+                collect_slots(prog, then_body, slots);
+                collect_slots(prog, else_body, slots);
+            }
+            _ => {}
+        }
+    }
+}
+
+struct LowerCtx<'a> {
+    prog: &'a TileProgram,
+    device: &'a Device,
+    opts: &'a CompileOptions,
+    layout: &'a LayoutMap,
+    pipelines: Vec<PipelineSched>,
+    validated_gemms: HashSet<usize>,
+    /// memoized copy bindings: pipeline expansion re-lowers the same
+    /// copy op once per stage [perf pass, EXPERIMENTS.md §Perf]
+    binding_cache: HashMap<(BufferId, BufferId, bool), CopyBinding>,
+}
+
+impl<'a> LowerCtx<'a> {
+    fn lower_stmts(
+        &mut self,
+        stmts: &[Stmt],
+        slot_env: &HashMap<BufferId, Expr>,
+    ) -> Result<Vec<TStmt>, String> {
+        let mut out = Vec::new();
+        for s in stmts {
+            match s {
+                Stmt::Op(op) => self.lower_op(op, slot_env, &mut out)?,
+                Stmt::ParallelFor {
+                    vars,
+                    extents,
+                    body,
+                } => {
+                    let cells: i64 = extents.iter().product();
+                    let vec = (1..=8i64)
+                        .rev()
+                        .find(|v| cells % (self.prog.threads * v) == 0)
+                        .unwrap_or(1);
+                    out.push(TStmt::Parallel {
+                        vars: vars.clone(),
+                        extents: extents.clone(),
+                        body: body.clone(),
+                        binding: ParallelBinding {
+                            vec,
+                            threads_used: self.prog.threads.min(cells / vec.max(1)).max(1),
+                        },
+                    });
+                }
+                Stmt::If {
+                    cond,
+                    then_body,
+                    else_body,
+                } => {
+                    out.push(TStmt::If {
+                        cond: cond.clone(),
+                        then_body: self.lower_stmts(then_body, slot_env)?,
+                        else_body: self.lower_stmts(else_body, slot_env)?,
+                    });
+                }
+                Stmt::For {
+                    var,
+                    extent,
+                    kind,
+                    body,
+                } => match kind {
+                    ForKind::Serial | ForKind::Unroll => {
+                        out.push(TStmt::For {
+                            var: var.clone(),
+                            extent: extent.clone(),
+                            body: self.lower_stmts(body, slot_env)?,
+                            unroll: matches!(kind, ForKind::Unroll),
+                        });
+                    }
+                    ForKind::Pipelined {
+                        num_stages, stage, ..
+                    } => {
+                        self.lower_pipelined(
+                            var,
+                            extent,
+                            *num_stages,
+                            stage.as_deref(),
+                            body,
+                            slot_env,
+                            &mut out,
+                        )?;
+                    }
+                },
+            }
+        }
+        Ok(out)
+    }
+
+    fn region(
+        &self,
+        r: &crate::ir::buffer::BufferRegion,
+        slot_env: &HashMap<BufferId, Expr>,
+    ) -> RegionRef {
+        RegionRef {
+            buf: r.buffer,
+            offsets: r.offsets.clone(),
+            shape: r.shape.clone(),
+            slot: slot_env.get(&r.buffer).cloned().unwrap_or_else(|| Expr::int(0)),
+        }
+    }
+
+    fn lower_op(
+        &mut self,
+        op: &TileOp,
+        slot_env: &HashMap<BufferId, Expr>,
+        out: &mut Vec<TStmt>,
+    ) -> Result<(), String> {
+        match op {
+            TileOp::Copy { src, dst } => {
+                let binding = self.copy_binding(op, false);
+                let writes_shared = self.prog.buffer(dst.buffer).scope.is_shared();
+                out.push(TStmt::Copy {
+                    src: self.region(src, slot_env),
+                    dst: self.region(dst, slot_env),
+                    binding,
+                });
+                if writes_shared {
+                    out.push(TStmt::Barrier);
+                }
+            }
+            TileOp::Gemm {
+                a,
+                b,
+                c,
+                trans_a,
+                trans_b,
+                policy,
+            } => {
+                let ab = self.prog.buffer(*a);
+                let bb = self.prog.buffer(*b);
+                let sa = ab.static_shape().unwrap();
+                let sb = bb.static_shape().unwrap();
+                let (m, k) = if *trans_a {
+                    (sa[1], sa[0])
+                } else {
+                    (sa[0], sa[1])
+                };
+                let n = if *trans_b { sb[0] } else { sb[1] };
+                let (wm, wn) = policy.split(self.prog.threads / 32, m, n);
+                let instr = self.device.best_gemm_instr(ab.dtype);
+                self.validate_gemm_alignment(*a, *b, *c, *trans_a, *trans_b)?;
+                out.push(TStmt::Gemm {
+                    a: RegionRef {
+                        buf: *a,
+                        offsets: sa.iter().map(|_| Expr::int(0)).collect(),
+                        shape: sa,
+                        slot: slot_env.get(a).cloned().unwrap_or_else(|| Expr::int(0)),
+                    },
+                    b: RegionRef {
+                        buf: *b,
+                        offsets: sb.iter().map(|_| Expr::int(0)).collect(),
+                        shape: sb,
+                        slot: slot_env.get(b).cloned().unwrap_or_else(|| Expr::int(0)),
+                    },
+                    c: *c,
+                    trans_a: *trans_a,
+                    trans_b: *trans_b,
+                    sched: GemmSched {
+                        m,
+                        n,
+                        k,
+                        instr,
+                        native: self.opts.native_mma,
+                        warps_m: wm,
+                        warps_n: wn,
+                    },
+                });
+            }
+            TileOp::Fill { buf, value } => out.push(TStmt::Fill {
+                buf: *buf,
+                value: *value,
+            }),
+            TileOp::Reduce {
+                src,
+                dst,
+                dim,
+                kind,
+                clear,
+            } => out.push(TStmt::Reduce {
+                src: *src,
+                dst: *dst,
+                dim: *dim,
+                kind: *kind,
+                clear: *clear,
+            }),
+            TileOp::Dequant {
+                src,
+                dst,
+                scheme,
+                scale,
+                group_size,
+            } => out.push(TStmt::Dequant {
+                src: *src,
+                dst: *dst,
+                scheme: *scheme,
+                scale: *scale,
+                group_size: *group_size,
+            }),
+            TileOp::Atomic { dst, src, kind } => out.push(TStmt::Atomic {
+                dst: self.region(dst, slot_env),
+                src: *src,
+                kind: *kind,
+            }),
+        }
+        Ok(())
+    }
+
+    /// Sampled validation of the MMA operand-ownership constraint, at
+    /// *warp* granularity: the warp computing C[i,j] collectively owns
+    /// the register-operand cells it consumes (A row i / B column j) —
+    /// the mma instruction exchanges fragments within a warp, so
+    /// per-thread ownership is not required, warp ownership is.
+    fn validate_gemm_alignment(
+        &mut self,
+        a: BufferId,
+        b: BufferId,
+        c: BufferId,
+        trans_a: bool,
+        trans_b: bool,
+    ) -> Result<(), String> {
+        let key = (a as usize) << 40 | (b as usize) << 20 | c as usize;
+        if !self.validated_gemms.insert(key) {
+            return Ok(());
+        }
+        let cf = self.layout.fragment(c).to_table();
+        let (m, n) = (cf.shape[0], cf.shape[1]);
+        let samples_i = [0, m / 2, m - 1];
+        let samples_j = [0, n / 2, n - 1];
+        for (buf, trans, is_a) in [(a, trans_a, true), (b, trans_b, false)] {
+            if self.prog.buffer(buf).scope != MemScope::Fragment {
+                continue;
+            }
+            let f = self.layout.fragment(buf).to_table();
+            let kdim = if is_a {
+                if trans {
+                    f.shape[0]
+                } else {
+                    f.shape[1]
+                }
+            } else if trans {
+                f.shape[1]
+            } else {
+                f.shape[0]
+            };
+            for &i in &samples_i {
+                for &j in &samples_j {
+                    let owners_c = cf.threads_for_cell(&[i, j]);
+                    for kk in [0, kdim / 2, kdim - 1] {
+                        let cell = if is_a {
+                            if trans {
+                                vec![kk, i]
+                            } else {
+                                vec![i, kk]
+                            }
+                        } else if trans {
+                            vec![j, kk]
+                        } else {
+                            vec![kk, j]
+                        };
+                        let owner_warps: Vec<i64> = f
+                            .threads_for_cell(&cell)
+                            .iter()
+                            .map(|t| t / 32)
+                            .collect();
+                        for t in &owners_c {
+                            if !owner_warps.contains(&(t / 32)) {
+                                return Err(format!(
+                                    "gemm operand misalignment: warp {} computes \
+                                     C[{},{}] but does not own operand cell {:?} of \
+                                     buffer {} (owner warps {:?})",
+                                    t / 32, i, j, cell, buf, owner_warps
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Vectorization + binding inference for a copy (Fig. 8 stages b-d),
+    /// memoized per (src, dst, async) triple.
+    fn copy_binding(&mut self, op: &TileOp, is_async: bool) -> CopyBinding {
+        let (src, dst) = match op {
+            TileOp::Copy { src, dst } => (src, dst),
+            _ => unreachable!(),
+        };
+        let key = (src.buffer, dst.buffer, is_async);
+        if let Some(b) = self.binding_cache.get(&key) {
+            return b.clone();
+        }
+        let threads = self.prog.threads;
+        let cells: i64 = dst.shape.iter().product();
+        let mut vec = 8i64; // 128-bit / fp16 upper bound
+        for r in [src, dst] {
+            let b = self.prog.buffer(r.buffer);
+            vec = vec.min(b.dtype.max_vector_lanes() as i64);
+            let contig = match b.scope {
+                MemScope::Global => *r.shape.last().unwrap(),
+                MemScope::Shared | MemScope::SharedDyn => {
+                    self.layout.shared_layout(r.buffer).innermost_contiguity()
+                }
+                MemScope::Fragment => self.layout.fragment(r.buffer).innermost_contiguity(),
+                MemScope::Local => 1,
+            };
+            vec = vec.min(largest_pow2_divisor(contig));
+        }
+        vec = vec.min(largest_pow2_divisor(cells)).max(1);
+        while vec > 1 && cells % vec != 0 {
+            vec /= 2;
+        }
+        let threads_used = threads.min(cells / vec).max(1);
+
+        // coalescing: simulate the first warp's global addresses. A
+        // layout annotation on a *global* buffer means the tensor was
+        // repacked tile-major offline (the paper's Ladder integration:
+        // "leverage Ladder to achieve smoother memory access within
+        // tiles") -> fully contiguous tile reads.
+        let mut coalesced_frac = 1.0f64;
+        for r in [src, dst] {
+            let b = self.prog.buffer(r.buffer);
+            if b.scope == MemScope::Global
+                && !self.prog.annotations.layouts.contains_key(&r.buffer)
+            {
+                coalesced_frac = coalesced_frac.min(self.global_coalescing(r, vec, b.dtype.bits()));
+            }
+        }
+        // bank conflicts: shared-side lane pattern
+        let mut bank = 1i64;
+        for r in [src, dst] {
+            let b = self.prog.buffer(r.buffer);
+            if b.scope.is_shared() {
+                let l = self.layout.shared_layout(r.buffer);
+                let lanes: Vec<Vec<i64>> = (0..32)
+                    .map(|t| unflatten_idx(t * vec, &r.shape))
+                    .collect();
+                bank = bank.max(bank_conflict_degree(
+                    l,
+                    &lanes,
+                    b.dtype.bits(),
+                    self.device.smem_banks,
+                    vec * b.dtype.bytes().max(1) as i64,
+                ));
+            }
+        }
+        let binding = CopyBinding {
+            vec,
+            threads_used,
+            coalesced_frac,
+            bank_conflict: bank,
+            is_async,
+        };
+        self.binding_cache.insert(key, binding.clone());
+        binding
+    }
+
+    /// Fraction of each 128-byte transaction used by the first warp.
+    fn global_coalescing(&self, r: &crate::ir::buffer::BufferRegion, vec: i64, bits: u32) -> f64 {
+        let esize = (bits as i64 / 8).max(1);
+        let shape = &r.shape;
+        let buf_shape = self
+            .prog
+            .buffer(r.buffer)
+            .static_shape()
+            .unwrap_or_else(|| shape.clone());
+        let mut segments: HashSet<i64> = HashSet::new();
+        let mut bytes = 0i64;
+        for t in 0..32.min((shape.iter().product::<i64>() / vec).max(1)) {
+            let cell = unflatten_idx(t * vec, shape);
+            // linear address in the global buffer (offsets at 0)
+            let mut addr = 0i64;
+            for (d, &c) in cell.iter().enumerate() {
+                addr = addr * buf_shape[d] + c;
+            }
+            for v in 0..vec {
+                let a = (addr + v) * esize;
+                segments.insert(a / 128);
+                bytes += esize;
+            }
+        }
+        if segments.is_empty() {
+            return 1.0;
+        }
+        (bytes as f64) / (segments.len() as f64 * 128.0)
+    }
+
+    /// Software-pipeline expansion (§4.4).
+    #[allow(clippy::too_many_arguments)]
+    fn lower_pipelined(
+        &mut self,
+        var: &crate::ir::expr::Var,
+        extent: &Expr,
+        num_stages: usize,
+        stage_override: Option<&[usize]>,
+        body: &[Stmt],
+        slot_env: &HashMap<BufferId, Expr>,
+        out: &mut Vec<TStmt>,
+    ) -> Result<(), String> {
+        let s = num_stages.max(1);
+        // classify ops: producers = global->shared copies (stage 0 by
+        // default or via explicit stage annotation)
+        let mut producers: Vec<&Stmt> = Vec::new();
+        let mut consumers: Vec<&Stmt> = Vec::new();
+        for (i, st) in body.iter().enumerate() {
+            let is_producer = match st {
+                Stmt::Op(TileOp::Copy { src, dst }) => {
+                    let p = self.prog.buffer(src.buffer).scope == MemScope::Global
+                        && self.prog.buffer(dst.buffer).scope.is_shared();
+                    match stage_override {
+                        Some(stages) => stages.get(i).map(|&x| x == 0).unwrap_or(p),
+                        None => p,
+                    }
+                }
+                _ => false,
+            };
+            if is_producer {
+                producers.push(st);
+            } else {
+                consumers.push(st);
+            }
+        }
+
+        // dependency sanity: every consumer reading a multi-buffered
+        // shared tile must have a producer for it in this loop
+        let produced: HashSet<BufferId> = producers
+            .iter()
+            .filter_map(|s| match s {
+                Stmt::Op(TileOp::Copy { dst, .. }) => Some(dst.buffer),
+                _ => None,
+            })
+            .collect();
+
+        let bytes_per_iter: i64 = producers
+            .iter()
+            .filter_map(|s| match s {
+                Stmt::Op(TileOp::Copy { dst, .. }) => {
+                    let b = self.prog.buffer(dst.buffer);
+                    Some(dst.size() * b.dtype.bits() as i64 / 8)
+                }
+                _ => None,
+            })
+            .sum();
+        self.pipelines.push(PipelineSched {
+            num_stages: s,
+            bytes_per_iter,
+            trip_count: extent.as_int(),
+            uses_async: s >= 2 && self.device.arch.has_async_copy(),
+        });
+
+        if s < 2 || producers.is_empty() {
+            // degenerate: plain serial loop
+            let inner = self.lower_stmts(body, slot_env)?;
+            out.push(TStmt::For {
+                var: var.clone(),
+                extent: extent.clone(),
+                body: inner,
+                unroll: false,
+            });
+            return Ok(());
+        }
+
+        // slot environment for the loop body: produced buffers cycle
+        // through `ko % s`
+        let consume_slot = var.expr().floormod(s as i64);
+        let mut body_slots = slot_env.clone();
+        for b in &produced {
+            body_slots.insert(*b, consume_slot.clone());
+        }
+
+        let use_async = self.device.arch.has_async_copy();
+
+        // ---- prologue: issue stages 0..s-1 ----------------------------
+        let static_extent = extent.as_int();
+        for p in 0..(s - 1) as i64 {
+            let mut sub = HashMap::new();
+            sub.insert(var.id, Expr::int(p));
+            let mut pro_slots = slot_env.clone();
+            for b in &produced {
+                pro_slots.insert(*b, Expr::int(p % s as i64));
+            }
+            let mut grp = Vec::new();
+            for st in &producers {
+                if let Stmt::Op(op) = st {
+                    let op = substitute_op(op, &sub);
+                    self.lower_producer(&op, &pro_slots, use_async, &mut grp)?;
+                }
+            }
+            // The commit is ALWAYS issued — even when the copies are
+            // predicated off — so `wait_group N` group counting stays
+            // aligned at the tail (the standard cp.async idiom).
+            match static_extent {
+                Some(e) if p >= e => {} // copies compile-time dead
+                Some(_) => out.extend(grp),
+                None => out.push(TStmt::If {
+                    cond: Expr::int(p).lt(extent.clone()),
+                    then_body: grp,
+                    else_body: vec![],
+                }),
+            }
+            if use_async {
+                out.push(TStmt::AsyncCommit);
+            }
+        }
+
+        // ---- steady state ---------------------------------------------
+        let mut loop_body = Vec::new();
+        if use_async {
+            loop_body.push(TStmt::AsyncWait(s - 2));
+        }
+        loop_body.push(TStmt::Barrier);
+        for st in &consumers {
+            let lowered = self.lower_stmts(std::slice::from_ref(*st), &body_slots)?;
+            loop_body.extend(lowered);
+        }
+        loop_body.push(TStmt::Barrier);
+        // issue iteration ko + s - 1
+        let ahead = var.expr() + (s as i64 - 1);
+        let mut sub = HashMap::new();
+        sub.insert(var.id, ahead.clone());
+        let mut pro_slots = slot_env.clone();
+        for b in &produced {
+            pro_slots.insert(*b, ahead.clone().floormod(s as i64));
+        }
+        let mut issue = Vec::new();
+        for st in &producers {
+            if let Stmt::Op(op) = st {
+                let op = substitute_op(op, &sub);
+                self.lower_producer(&op, &pro_slots, use_async, &mut issue)?;
+            }
+        }
+        loop_body.push(TStmt::If {
+            cond: ahead.lt(extent.clone()),
+            then_body: issue,
+            else_body: vec![],
+        });
+        // commit unconditionally — keeps group counting aligned
+        if use_async {
+            loop_body.push(TStmt::AsyncCommit);
+        }
+
+        out.push(TStmt::For {
+            var: var.clone(),
+            extent: extent.clone(),
+            body: loop_body,
+            unroll: false,
+        });
+        Ok(())
+    }
+
+    fn lower_producer(
+        &mut self,
+        op: &TileOp,
+        slots: &HashMap<BufferId, Expr>,
+        is_async: bool,
+        out: &mut Vec<TStmt>,
+    ) -> Result<(), String> {
+        if let TileOp::Copy { src, dst } = op {
+            let binding = self.copy_binding(op, is_async);
+            out.push(TStmt::Copy {
+                src: self.region(src, slots),
+                dst: self.region(dst, slots),
+                binding,
+            });
+            Ok(())
+        } else {
+            Err("pipeline producer must be a copy".into())
+        }
+    }
+}
+
+fn largest_pow2_divisor(v: i64) -> i64 {
+    if v <= 0 {
+        return 1;
+    }
+    v & v.wrapping_neg()
+}
+
+fn unflatten_idx(mut flat: i64, shape: &[i64]) -> Vec<i64> {
+    let mut idx = vec![0i64; shape.len()];
+    for d in (0..shape.len()).rev() {
+        idx[d] = flat % shape[d];
+        flat /= shape[d];
+    }
+    idx
+}
+
+/// Substitute the pipeline loop var inside a copy op's offsets.
+fn substitute_op(op: &TileOp, sub: &HashMap<VarId, Expr>) -> TileOp {
+    match op {
+        TileOp::Copy { src, dst } => {
+            let mut s2 = src.clone();
+            let mut d2 = dst.clone();
+            for o in s2.offsets.iter_mut().chain(d2.offsets.iter_mut()) {
+                *o = o.substitute(sub);
+            }
+            TileOp::Copy { src: s2, dst: d2 }
+        }
+        other => other.clone(),
+    }
+}
+
+/// Expose the default shared-memory layout decision for testing.
+pub fn default_shared_layout(shape: &[i64], bits: u32, swizzle: bool) -> Layout {
+    if swizzle && shape.len() == 2 {
+        Layout::swizzled(shape[0], shape[1], bits)
+    } else {
+        Layout::row_major(shape)
+    }
+}
+
+/// Compute the number of tail iterations a dynamic-shape loop needs —
+/// the loop-tail-splitting analysis. Returns `(main_trips, tail)` for a
+/// statically-bound extent, or None when the extent is symbolic.
+pub fn split_tail(extent: &Expr, tile: i64) -> Option<(i64, i64)> {
+    extent.as_int().map(|e| (e / tile, e % tile))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::builder::KernelBuilder;
+    use crate::ir::dtype::DType::{F16, F32};
+    use crate::tir::interp::{Interp, Tensors};
+
+    fn matmul(m: i64, n: i64, k: i64, bm: i64, bn: i64, bk: i64, stages: usize) -> TileProgram {
+        let mut t = KernelBuilder::new("mm", 128);
+        let a = t.param("A", &[m, k], F16);
+        let b = t.param("B", &[k, n], F16);
+        let c = t.param("C", &[m, n], F32);
+        let (bx, by) = t.kernel2(n / bn, m / bm);
+        let a_s = t.alloc_shared("A_shared", &[bm, bk], F16);
+        let b_s = t.alloc_shared("B_shared", &[bk, bn], F16);
+        let c_l = t.alloc_fragment("C_local", &[bm, bn], F32);
+        t.clear(c_l);
+        t.pipelined(k / bk, stages, |t, ko| {
+            t.copy_in(a, vec![by.expr() * bm, ko.expr() * bk], a_s);
+            t.copy_in(b, vec![ko.expr() * bk, bx.expr() * bn], b_s);
+            t.gemm(a_s, b_s, c_l);
+        });
+        t.copy_out(c_l, c, vec![by.expr() * bm, bx.expr() * bn]);
+        t.finish()
+    }
+
+    fn run_gemm(prog: &TileProgram, m: i64, n: i64, k: i64, dev: &Device) -> Vec<f32> {
+        let lowered = compile(prog, dev, &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&lowered).unwrap();
+        let mut tensors: Tensors = Tensors::new();
+        let aval: Vec<f32> = (0..m * k)
+            .map(|i| ((i * 37 % 13) as f32 - 6.0) / 8.0)
+            .collect();
+        let bval: Vec<f32> = (0..k * n)
+            .map(|i| ((i * 23 % 11) as f32 - 5.0) / 8.0)
+            .collect();
+        let (aid, bid, cid) = (prog.params[0].id, prog.params[1].id, prog.params[2].id);
+        tensors.insert(aid, aval.clone());
+        tensors.insert(bid, bval.clone());
+        interp.run(&mut tensors).unwrap();
+        // reference
+        let mut want = vec![0f32; (m * n) as usize];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += aval[(i * k + kk) as usize] * bval[(kk * n + j) as usize];
+                }
+                want[(i * n + j) as usize] = acc;
+            }
+        }
+        let got = tensors[&cid].clone();
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() <= 1e-2 + w.abs() * 1e-2,
+                "gemm mismatch: got {} want {}",
+                g,
+                w
+            );
+        }
+        got
+    }
+
+    #[test]
+    fn matmul_end_to_end_matches_reference() {
+        let p = matmul(128, 128, 64, 64, 64, 32, 2);
+        run_gemm(&p, 128, 128, 64, &Device::a100());
+    }
+
+    #[test]
+    fn pipeline_depths_do_not_change_numerics() {
+        for stages in [1usize, 2, 3, 4] {
+            eprintln!("stages={}", stages);
+            let p = matmul(64, 64, 64, 32, 32, 16, stages);
+            run_gemm(&p, 64, 64, 64, &Device::a100());
+        }
+    }
+
+    #[test]
+    fn pipeline_expansion_structure() {
+        let p = matmul(128, 128, 128, 64, 64, 32, 3);
+        let l = compile(&p, &Device::a100(), &CompileOptions::default()).unwrap();
+        let c = l.stmt_counts();
+        // prologue: 2 stages x 2 copies; steady state: 2 more copies
+        assert_eq!(c.async_copies, 6, "{:?}", c);
+        // commits: 2 prologue + 1 steady state
+        assert_eq!(c.commits, 3, "{:?}", c);
+        assert_eq!(c.waits, 1, "{:?}", c);
+        assert_eq!(c.gemms, 1);
+        // A_shared/B_shared triple buffered
+        let a_s = p.allocs.iter().find(|b| b.name == "A_shared").unwrap();
+        assert_eq!(l.shared_alloc(a_s.id).slots, 3);
+        assert_eq!(l.schedule.pipelines.len(), 1);
+        assert_eq!(l.schedule.pipelines[0].num_stages, 3);
+        assert_eq!(
+            l.schedule.pipelines[0].bytes_per_iter,
+            (64 * 32 + 32 * 64) * 2
+        );
+    }
+
+    #[test]
+    fn copy_bindings_are_vectorized_and_conflict_free() {
+        let p = matmul(128, 128, 128, 64, 64, 32, 2);
+        let l = compile(&p, &Device::a100(), &CompileOptions::default()).unwrap();
+        let mut found = 0;
+        l.visit(&mut |s| {
+            if let TStmt::Copy { binding, dst, .. } = s {
+                if l.shared.iter().any(|sa| sa.buf == dst.buf) {
+                    found += 1;
+                    assert_eq!(binding.vec, 8, "fp16 copies should be 128-bit");
+                    // the 64x32 A tile is a 64B row segment of a 256B
+                    // row: 50% of each 128B transaction is used; the
+                    // 32x64 B tile is fully coalesced
+                    assert!(binding.coalesced_frac >= 0.45, "{}", binding.coalesced_frac);
+                    assert!(
+                        binding.bank_conflict <= 2,
+                        "swizzled store should be conflict-free, got {}",
+                        binding.bank_conflict
+                    );
+                }
+            }
+        });
+        assert!(found > 0);
+    }
+
+    #[test]
+    fn warp_policy_and_transpose_variants() {
+        use crate::ir::program::GemmWarpPolicy;
+        // C = A @ B^T with B stored (n, k)
+        let (m, n, k) = (64, 64, 32);
+        let mut t = KernelBuilder::new("mm_nt", 128);
+        let a = t.param("A", &[m, k], F16);
+        let b = t.param("B", &[n, k], F16);
+        let c = t.param("C", &[m, n], F32);
+        let _ = t.kernel2(1, 1);
+        let a_s = t.alloc_shared("A_s", &[m, k], F16);
+        let b_s = t.alloc_shared("B_s", &[n, k], F16);
+        let c_l = t.alloc_fragment("C_l", &[m, n], F32);
+        t.clear(c_l);
+        t.copy_in(a, vec![Expr::int(0), Expr::int(0)], a_s);
+        t.copy_in(b, vec![Expr::int(0), Expr::int(0)], b_s);
+        t.gemm_opts(a_s, b_s, c_l, false, true, GemmWarpPolicy::FullRow);
+        t.copy_out(c_l, c, vec![Expr::int(0), Expr::int(0)]);
+        let p = t.finish();
+        let l = compile(&p, &Device::h100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+        let mut tensors = Tensors::new();
+        let aval: Vec<f32> = (0..m * k).map(|i| ((i % 7) as f32 - 3.0) / 4.0).collect();
+        let bval: Vec<f32> = (0..n * k).map(|i| ((i % 5) as f32 - 2.0) / 4.0).collect();
+        tensors.insert(p.params[0].id, aval.clone());
+        tensors.insert(p.params[1].id, bval.clone());
+        interp.run(&mut tensors).unwrap();
+        let got = &tensors[&p.params[2].id];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0f32;
+                for kk in 0..k {
+                    acc += aval[(i * k + kk) as usize] * bval[(j * k + kk) as usize];
+                }
+                let g = got[(i * n + j) as usize];
+                assert!((g - acc).abs() < 1e-2, "({}, {}): {} vs {}", i, j, g, acc);
+            }
+        }
+    }
+
+    #[test]
+    fn smem_budget_enforced() {
+        // 256x256 fp32 tiles x 2 = 512KB >> any device budget
+        let mut t = KernelBuilder::new("big", 128);
+        let _ = t.kernel1(1);
+        let a_s = t.alloc_shared("a", &[256, 256], F32);
+        let b_s = t.alloc_shared("b", &[256, 256], F32);
+        t.copy(a_s, b_s);
+        let p = t.finish();
+        let err = compile(&p, &Device::a100(), &CompileOptions::default());
+        assert!(err.is_err());
+        assert!(err.unwrap_err().contains("shared memory"));
+    }
+}

@@ -1,0 +1,6 @@
+//! Compiler passes: layout/thread-binding inference, vectorization,
+//! tensorization, software pipelining, warp specialization and lowering
+//! to thread-level IR.
+
+pub mod layout_inference;
+pub mod lower;

@@ -1,0 +1,62 @@
+//! Small table/summary formatting helpers shared by the benchmark
+//! harnesses (`rust/benches/*`) and examples.
+
+/// Geometric mean of a slice of positive ratios.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+/// Print a fixed-width row.
+pub fn row(cells: &[String], widths: &[usize]) {
+    let mut line = String::new();
+    for (c, w) in cells.iter().zip(widths) {
+        line.push_str(&format!("{:>width$}  ", c, width = w));
+    }
+    println!("{}", line.trim_end());
+}
+
+/// Print a header row + separator.
+pub fn header(cells: &[&str], widths: &[usize]) {
+    row(
+        &cells.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        widths,
+    );
+    let total: usize = widths.iter().sum::<usize>() + widths.len() * 2;
+    println!("{}", "-".repeat(total));
+}
+
+/// Format microseconds human-readably.
+pub fn fmt_us(us: f64) -> String {
+    if us >= 1e3 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.1}us", us)
+    }
+}
+
+/// A paper-vs-measured comparison line for EXPERIMENTS.md extraction.
+pub fn claim(label: &str, paper: f64, measured: f64) {
+    let ok = if (measured / paper).ln().abs() < 0.7 {
+        "~consistent"
+    } else {
+        "DIVERGES"
+    };
+    println!(
+        "CLAIM {label}: paper {paper:.2}x, measured {measured:.2}x ({ok})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::geomean;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-9);
+        assert!((geomean(&[1.0]) - 1.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+}

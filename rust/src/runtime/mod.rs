@@ -1,0 +1,240 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts (produced once by
+//! `python/compile/aot.py`) and executes them from the rust hot path.
+//! Python is never on the request path — the binary is self-contained
+//! after `make artifacts`.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
+//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`,
+//! with `return_tuple=True` artifacts unwrapped via `to_tuple1`.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Parsed manifest entry for one artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub in_shapes: Vec<Vec<i64>>,
+    pub out_shape: Vec<i64>,
+}
+
+impl ArtifactSpec {
+    pub fn out_len(&self) -> usize {
+        self.out_shape.iter().product::<i64>() as usize
+    }
+}
+
+/// Golden sample for cross-checking rust-side execution.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub size: usize,
+    pub samples: Vec<(usize, f32)>,
+}
+
+/// A compiled, executable artifact.
+pub struct LoadedKernel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedKernel {
+    /// Execute with row-major f32 inputs.
+    pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if inputs.len() != self.spec.in_shapes.len() {
+            bail!(
+                "{} expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.in_shapes.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.spec.in_shapes) {
+            let want: i64 = shape.iter().product();
+            if data.len() as i64 != want {
+                bail!(
+                    "{}: input length {} != shape {:?}",
+                    self.spec.name,
+                    data.len(),
+                    shape
+                );
+            }
+            let lit = xla::Literal::vec1(data);
+            let lit = if shape.len() > 1 {
+                lit.reshape(shape)?
+            } else {
+                lit
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The artifact registry + PJRT client + compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    specs: HashMap<String, ArtifactSpec>,
+    goldens: HashMap<String, Golden>,
+    cache: Mutex<HashMap<String, std::sync::Arc<LoadedKernel>>>,
+}
+
+fn parse_shape(s: &str) -> Vec<i64> {
+    s.split('x').map(|d| d.parse().unwrap_or(0)).collect()
+}
+
+impl Runtime {
+    /// Open the artifacts directory (built by `make artifacts`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = fs::read_to_string(&manifest)
+            .with_context(|| format!("missing {:?}; run `make artifacts`", manifest))?;
+        let mut specs = HashMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("malformed manifest line: {}", line);
+            }
+            let ins = cols[2]
+                .strip_prefix("in=")
+                .ok_or_else(|| anyhow!("bad manifest in= column"))?;
+            let out = cols[3]
+                .strip_prefix("out=")
+                .ok_or_else(|| anyhow!("bad manifest out= column"))?;
+            specs.insert(
+                cols[0].to_string(),
+                ArtifactSpec {
+                    name: cols[0].to_string(),
+                    hlo_path: dir.join(cols[1]),
+                    in_shapes: ins.split(',').map(parse_shape).collect(),
+                    out_shape: parse_shape(out),
+                },
+            );
+        }
+        // goldens are optional (older artifact dirs)
+        let mut goldens = HashMap::new();
+        if let Ok(g) = fs::read_to_string(dir.join("goldens.tsv")) {
+            for line in g.lines().filter(|l| !l.trim().is_empty()) {
+                let cols: Vec<&str> = line.split('\t').collect();
+                if cols.len() != 3 {
+                    continue;
+                }
+                let samples = cols[2]
+                    .split(',')
+                    .filter_map(|p| {
+                        let (i, v) = p.split_once(':')?;
+                        Some((i.parse().ok()?, v.parse().ok()?))
+                    })
+                    .collect();
+                goldens.insert(
+                    cols[0].to_string(),
+                    Golden {
+                        size: cols[1].parse().unwrap_or(0),
+                        samples,
+                    },
+                );
+            }
+        }
+        Ok(Runtime {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("{:?}", e))?,
+            dir,
+            specs,
+            goldens,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifact_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.specs.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {}", name))
+    }
+
+    /// Load (compile) an artifact; cached.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedKernel>> {
+        if let Some(k) = self.cache.lock().unwrap().get(name) {
+            return Ok(k.clone());
+        }
+        let spec = self.spec(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow!("bad path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let k = std::sync::Arc::new(LoadedKernel { spec, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), k.clone());
+        Ok(k)
+    }
+
+    /// Convenience: load + execute.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.load(name)?.execute(inputs)
+    }
+
+    /// Read the recorded example inputs for an artifact.
+    pub fn example_inputs(&self, name: &str) -> Result<Vec<Vec<f32>>> {
+        let spec = self.spec(name)?;
+        let mut out = Vec::new();
+        for (i, shape) in spec.in_shapes.iter().enumerate() {
+            let path = self.dir.join(format!("{}.in{}.bin", name, i));
+            let bytes = fs::read(&path)
+                .with_context(|| format!("missing input bin {:?}", path))?;
+            let want = shape.iter().product::<i64>() as usize * 4;
+            if bytes.len() != want {
+                bail!("{:?}: {} bytes, expected {}", path, bytes.len(), want);
+            }
+            out.push(
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            );
+        }
+        Ok(out)
+    }
+
+    /// Execute with the recorded inputs and compare against the golden
+    /// samples baked by aot.py. Returns the max abs error.
+    pub fn golden_check(&self, name: &str) -> Result<f32> {
+        let golden = self
+            .goldens
+            .get(name)
+            .ok_or_else(|| anyhow!("no golden for {}", name))?;
+        let inputs = self.example_inputs(name)?;
+        let out = self.execute(name, &inputs)?;
+        if out.len() != golden.size {
+            bail!(
+                "{}: output size {} != golden {}",
+                name,
+                out.len(),
+                golden.size
+            );
+        }
+        let mut max_err = 0f32;
+        for &(i, v) in &golden.samples {
+            max_err = max_err.max((out[i] - v).abs());
+        }
+        Ok(max_err)
+    }
+}

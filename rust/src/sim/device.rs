@@ -1,0 +1,295 @@
+//! Device specifications for the analytical performance model.
+//!
+//! The paper's testbed (§5.1): NVIDIA H100 (CUDA 12.4), NVIDIA A100,
+//! NVIDIA RTX 4090, and AMD Instinct MI300X (ROCm 6.1.0). We parameterize
+//! the simulator with their published specs; the per-instruction
+//! throughput table reproduces §4.3's IMAD / DP4A / MMA hierarchy
+//! (17.8 / 71.2 / 284 TOPS int8 on the RTX 3090-class example).
+
+use crate::ir::dtype::DType;
+
+/// Vendor architecture families that gate scheduling features (§4.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arch {
+    /// NVIDIA Ampere: `cp.async`, no TMA/wgmma.
+    Ampere,
+    /// NVIDIA Ada (RTX 4090): Ampere-style async copy, no TMA.
+    Ada,
+    /// NVIDIA Hopper: TMA + `wgmma.mma_async` + warp specialization.
+    Hopper,
+    /// AMD CDNA3 (MI300X): `buffer_load_dword_lds` async copy, 64-lane
+    /// wavefronts, MFMA matrix cores.
+    Cdna3,
+}
+
+impl Arch {
+    pub fn has_async_copy(self) -> bool {
+        true // all evaluated devices have some global->shared async path
+    }
+    pub fn has_tma(self) -> bool {
+        matches!(self, Arch::Hopper)
+    }
+    pub fn has_wgmma(self) -> bool {
+        matches!(self, Arch::Hopper)
+    }
+    /// Warp/wavefront width.
+    pub fn warp_size(self) -> i64 {
+        match self {
+            Arch::Cdna3 => 64,
+            _ => 32,
+        }
+    }
+}
+
+/// Instruction pathway classes from §4.3.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum InstrClass {
+    /// Scalar fused multiply-add (IMAD / FFMA).
+    ScalarMac,
+    /// Packed dot product (DP4A / v_dot4).
+    DotProd,
+    /// Matrix unit (Tensor Core MMA / wgmma / MFMA).
+    Mma,
+}
+
+/// One entry in a device's instruction table: the peak throughput of an
+/// instruction class at a given input precision.
+#[derive(Clone, Copy, Debug)]
+pub struct InstrSpec {
+    pub class: InstrClass,
+    pub in_dtype: DType,
+    /// Peak dense throughput in TFLOPS (fp) or TOPS (int), MACs counted
+    /// as 2 ops.
+    pub tops: f64,
+    /// Minimum tile (m, n, k) the instruction consumes (1,1,1 = scalar).
+    pub tile: (i64, i64, i64),
+}
+
+/// A GPU device model.
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub name: &'static str,
+    pub arch: Arch,
+    /// Number of SMs / CUs.
+    pub sms: i64,
+    /// SM clock in GHz (boost, sustained).
+    pub clock_ghz: f64,
+    /// DRAM bandwidth, GB/s.
+    pub dram_gbps: f64,
+    /// L2 size in bytes.
+    pub l2_bytes: i64,
+    /// Shared memory per SM, bytes (configurable carve-out max).
+    pub smem_per_sm: i64,
+    /// Max shared memory per block, bytes.
+    pub smem_per_block: i64,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: i64,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: i64,
+    /// Shared-memory banks.
+    pub smem_banks: i64,
+    /// Shared memory bandwidth per SM, bytes/clk.
+    pub smem_bytes_per_clk: f64,
+    /// Instruction table (peak throughputs).
+    pub instrs: Vec<InstrSpec>,
+}
+
+impl Device {
+    /// Peak throughput (TOPS) for an instruction class at a precision.
+    pub fn instr_tops(&self, class: InstrClass, dt: DType) -> Option<f64> {
+        self.instrs
+            .iter()
+            .find(|i| i.class == class && i.in_dtype == dt)
+            .map(|i| i.tops)
+    }
+
+    /// Best available instruction for a GEMM at `dt` inputs: the §4.3
+    /// selection problem. Returns the chosen spec.
+    pub fn best_gemm_instr(&self, dt: DType) -> InstrSpec {
+        *self
+            .instrs
+            .iter()
+            .filter(|i| i.in_dtype == dt)
+            .max_by(|a, b| a.tops.partial_cmp(&b.tops).unwrap())
+            .unwrap_or_else(|| panic!("{} has no instruction for {}", self.name, dt))
+    }
+
+    /// Peak MMA throughput at fp16 — the headline tensor TFLOPS.
+    pub fn peak_tensor_tflops(&self) -> f64 {
+        self.instr_tops(InstrClass::Mma, DType::F16).unwrap_or(0.0)
+    }
+
+    pub fn h100() -> Device {
+        Device {
+            name: "H100-SXM",
+            arch: Arch::Hopper,
+            sms: 132,
+            clock_ghz: 1.83,
+            dram_gbps: 3350.0,
+            l2_bytes: 50 * 1024 * 1024,
+            smem_per_sm: 228 * 1024,
+            smem_per_block: 227 * 1024,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 2048,
+            smem_banks: 32,
+            smem_bytes_per_clk: 128.0,
+            instrs: vec![
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::F32, tops: 66.9, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::F16, tops: 133.8, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::I8, tops: 66.9, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::DotProd, in_dtype: DType::I8, tops: 267.6, tile: (1, 1, 4) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::F16, tops: 989.0, tile: (64, 8, 16) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::BF16, tops: 989.0, tile: (64, 8, 16) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::I8, tops: 1979.0, tile: (16, 8, 32) },
+            ],
+        }
+    }
+
+    pub fn a100() -> Device {
+        Device {
+            name: "A100-80G",
+            arch: Arch::Ampere,
+            sms: 108,
+            clock_ghz: 1.41,
+            dram_gbps: 2039.0,
+            l2_bytes: 40 * 1024 * 1024,
+            smem_per_sm: 164 * 1024,
+            smem_per_block: 163 * 1024,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 2048,
+            smem_banks: 32,
+            smem_bytes_per_clk: 128.0,
+            instrs: vec![
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::F32, tops: 19.5, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::F16, tops: 39.0, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::I8, tops: 19.5, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::DotProd, in_dtype: DType::I8, tops: 78.0, tile: (1, 1, 4) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::F16, tops: 312.0, tile: (16, 8, 16) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::BF16, tops: 312.0, tile: (16, 8, 16) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::I8, tops: 624.0, tile: (16, 8, 32) },
+            ],
+        }
+    }
+
+    pub fn rtx4090() -> Device {
+        Device {
+            name: "RTX-4090",
+            arch: Arch::Ada,
+            sms: 128,
+            clock_ghz: 2.52,
+            dram_gbps: 1008.0,
+            l2_bytes: 72 * 1024 * 1024,
+            smem_per_sm: 100 * 1024,
+            smem_per_block: 99 * 1024,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 1536,
+            smem_banks: 32,
+            smem_bytes_per_clk: 128.0,
+            instrs: vec![
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::F32, tops: 82.6, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::F16, tops: 82.6, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::I8, tops: 82.6, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::DotProd, in_dtype: DType::I8, tops: 330.3, tile: (1, 1, 4) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::F16, tops: 330.3, tile: (16, 8, 16) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::BF16, tops: 330.3, tile: (16, 8, 16) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::I8, tops: 660.6, tile: (16, 8, 32) },
+            ],
+        }
+    }
+
+    pub fn mi300x() -> Device {
+        Device {
+            name: "MI300X",
+            arch: Arch::Cdna3,
+            sms: 304, // CUs
+            clock_ghz: 2.1,
+            dram_gbps: 5300.0,
+            l2_bytes: 256 * 1024 * 1024, // infinity cache as L2 proxy
+            smem_per_sm: 64 * 1024,      // LDS per CU
+            smem_per_block: 64 * 1024,
+            regs_per_sm: 65536 * 2, // 512KB VGPR per CU (2x 256KB files)
+            max_threads_per_sm: 2048,
+            smem_banks: 32,
+            smem_bytes_per_clk: 128.0,
+            instrs: vec![
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::F32, tops: 163.4, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::F16, tops: 163.4, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::I8, tops: 163.4, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::DotProd, in_dtype: DType::I8, tops: 653.7, tile: (1, 1, 4) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::F16, tops: 1307.4, tile: (16, 16, 16) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::BF16, tops: 1307.4, tile: (16, 16, 16) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::I8, tops: 2614.9, tile: (16, 16, 32) },
+            ],
+        }
+    }
+
+    /// The RTX 3090 of §4.3's worked example (used by tensorize tests).
+    pub fn rtx3090() -> Device {
+        Device {
+            name: "RTX-3090",
+            arch: Arch::Ampere,
+            sms: 82,
+            clock_ghz: 1.70,
+            dram_gbps: 936.0,
+            l2_bytes: 6 * 1024 * 1024,
+            smem_per_sm: 100 * 1024,
+            smem_per_block: 99 * 1024,
+            regs_per_sm: 65536,
+            max_threads_per_sm: 1536,
+            smem_banks: 32,
+            smem_bytes_per_clk: 128.0,
+            instrs: vec![
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::I8, tops: 17.8, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::F16, tops: 35.6, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::ScalarMac, in_dtype: DType::F32, tops: 35.6, tile: (1, 1, 1) },
+                InstrSpec { class: InstrClass::DotProd, in_dtype: DType::I8, tops: 71.2, tile: (1, 1, 4) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::I8, tops: 284.0, tile: (16, 8, 32) },
+                InstrSpec { class: InstrClass::Mma, in_dtype: DType::F16, tops: 142.0, tile: (16, 8, 16) },
+            ],
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Device> {
+        match name.to_ascii_lowercase().as_str() {
+            "h100" | "h100-sxm" => Some(Device::h100()),
+            "a100" | "a100-80g" => Some(Device::a100()),
+            "rtx4090" | "4090" | "rtx-4090" => Some(Device::rtx4090()),
+            "mi300x" => Some(Device::mi300x()),
+            "rtx3090" | "3090" | "rtx-3090" => Some(Device::rtx3090()),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_4_3_instruction_hierarchy_on_3090() {
+        // §4.3: "the throughput of these instructions is approximately
+        // 17.8 TOPS, 71.2 TOPS, and 284 TOPS, respectively" (int8).
+        let d = Device::rtx3090();
+        assert_eq!(d.instr_tops(InstrClass::ScalarMac, DType::I8), Some(17.8));
+        assert_eq!(d.instr_tops(InstrClass::DotProd, DType::I8), Some(71.2));
+        assert_eq!(d.instr_tops(InstrClass::Mma, DType::I8), Some(284.0));
+        let best = d.best_gemm_instr(DType::I8);
+        assert_eq!(best.class, InstrClass::Mma);
+    }
+
+    #[test]
+    fn arch_feature_gates() {
+        assert!(Device::h100().arch.has_tma());
+        assert!(!Device::a100().arch.has_tma());
+        assert!(!Device::rtx4090().arch.has_wgmma());
+        assert_eq!(Device::mi300x().arch.warp_size(), 64);
+        assert_eq!(Device::h100().arch.warp_size(), 32);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Device::by_name("h100").unwrap().name, "H100-SXM");
+        assert_eq!(Device::by_name("MI300X").unwrap().sms, 304);
+        assert!(Device::by_name("tpu").is_none());
+    }
+}

@@ -1,0 +1,5 @@
+//! Analytical GPU performance model (DESIGN.md substitution for the
+//! paper's H100/A100/RTX4090/MI300X testbed).
+
+pub mod device;
+pub mod model;

@@ -1,0 +1,767 @@
+//! Interpreter for lowered programs — the semantic oracle.
+//!
+//! Executes a `LoweredProgram` block-by-block on the CPU with:
+//! * physical shared memory (accesses go through the inferred layouts, so
+//!   an aliasing layout corrupts results),
+//! * per-thread register files for fragments (reads check *ownership*:
+//!   if layout inference failed to replicate a broadcast operand, the
+//!   reading thread does not own the cell and execution errors — the
+//!   Fig. 7 invariant, enforced dynamically),
+//! * async-copy queue semantics (`commit`/`wait` groups): a mis-scheduled
+//!   pipeline reads stale tiles and produces wrong numbers,
+//! * dtype rounding on every store (fp16/bf16 storage effects).
+
+use std::collections::HashMap;
+
+use crate::ir::buffer::{BufferId, MemScope};
+use crate::ir::dtype::{fp4_e2m1_decode, round_to_dtype, DType, NF4_TABLE};
+use crate::ir::expr::{BinOp, Expr, ExprKind, UnOp, VarId};
+use crate::ir::program::{AtomicKind, DequantScheme, ReduceKind};
+use crate::layout::fragment::Fragment;
+use crate::layout::layout::domain_iter;
+
+use super::{LoweredProgram, RegionRef, TStmt};
+
+/// Dense tensor storage for interpreter runs: logical row-major f32
+/// (sub-byte packed buffers hold their *byte* codes as values 0..255).
+pub type Tensors = HashMap<BufferId, Vec<f32>>;
+
+struct BlockState {
+    /// physical shared storage: buf -> values (slots * cells_per_slot)
+    shared: HashMap<BufferId, Vec<f32>>,
+    /// fragment registers: buf -> values (num_threads * locals)
+    regs: HashMap<BufferId, Vec<f32>>,
+    /// pending async copy groups (stmt clone + env snapshot)
+    pending: Vec<Vec<(TStmt, HashMap<VarId, i64>)>>,
+    current_group: Vec<(TStmt, HashMap<VarId, i64>)>,
+}
+
+/// Cached per-buffer metadata.
+struct Meta {
+    scope: MemScope,
+    dtype: DType,
+    shape: Vec<i64>,
+    frag: Option<Fragment>,
+    /// dense physical-address table for shared layouts (hot path)
+    layout_table: Option<Vec<i64>>,
+    slots_cells: i64,
+    locals: i64,
+    frag_threads: i64,
+}
+
+impl Meta {
+    #[inline]
+    fn phys(&self, idx: &[i64]) -> i64 {
+        let mut flat = 0i64;
+        for (d, &i) in idx.iter().enumerate() {
+            flat = flat * self.shape[d] + i;
+        }
+        self.layout_table.as_ref().unwrap()[flat as usize]
+    }
+}
+
+pub struct Interp<'a> {
+    prog: &'a LoweredProgram,
+    meta: HashMap<BufferId, Meta>,
+}
+
+impl<'a> Interp<'a> {
+    pub fn new(prog: &'a LoweredProgram) -> Result<Interp<'a>, String> {
+        let mut meta = HashMap::new();
+        for b in &prog.params {
+            let shape = b
+                .static_shape()
+                .ok_or_else(|| format!("param {} must be static for execution", b.name))?;
+            meta.insert(
+                b.id,
+                Meta {
+                    scope: MemScope::Global,
+                    dtype: b.dtype,
+                    shape,
+                    frag: None,
+                    layout_table: None,
+                    slots_cells: 0,
+                    locals: 0,
+                    frag_threads: 0,
+                },
+            );
+        }
+        for s in &prog.shared {
+            let l = prog.layout.shared_layout(s.buf).clone();
+            meta.insert(
+                s.buf,
+                Meta {
+                    scope: MemScope::Shared,
+                    dtype: dtype_of(prog, s.buf),
+                    shape: l.input_shape(),
+                    layout_table: Some(l.table()),
+                    frag: None,
+                    slots_cells: s.cells_per_slot * s.slots,
+                    locals: 0,
+                    frag_threads: 0,
+                },
+            );
+        }
+        for f in &prog.frags {
+            let fr = prog.layout.fragment(f.buf).to_table();
+            meta.insert(
+                f.buf,
+                Meta {
+                    scope: MemScope::Fragment,
+                    dtype: dtype_of(prog, f.buf),
+                    shape: fr.shape.clone(),
+                    frag: Some(fr.clone()),
+                    layout_table: None,
+                    slots_cells: 0,
+                    locals: f.locals_per_thread,
+                    frag_threads: fr.num_threads,
+                },
+            );
+        }
+        Ok(Interp { prog, meta })
+    }
+
+    fn m(&self, buf: BufferId) -> &Meta {
+        self.meta
+            .get(&buf)
+            .unwrap_or_else(|| panic!("no metadata for buffer {}", buf))
+    }
+
+    /// Execute the whole grid. `tensors` maps every global param id to
+    /// row-major f32 contents (created if missing, zero-filled).
+    pub fn run(&self, tensors: &mut Tensors) -> Result<(), String> {
+        let grid = self
+            .prog
+            .static_grid()
+            .ok_or("grid must be static for execution (specialize first)")?;
+        for b in &self.prog.params {
+            let n = self.m(b.id).shape.iter().product::<i64>() as usize;
+            let t = tensors.entry(b.id).or_insert_with(|| vec![0.0; n]);
+            if t.len() != n {
+                return Err(format!(
+                    "tensor for {} has {} elements, expected {}",
+                    b.name,
+                    t.len(),
+                    n
+                ));
+            }
+        }
+        let total: i64 = grid.iter().product();
+        for flat in 0..total {
+            let mut rem = flat;
+            let mut env: HashMap<VarId, i64> = HashMap::new();
+            for (d, v) in self.prog.block_vars.iter().enumerate() {
+                let e = grid[d];
+                env.insert(v.id, rem % e);
+                rem /= e;
+            }
+            let mut st = BlockState {
+                shared: self
+                    .prog
+                    .shared
+                    .iter()
+                    .map(|s| (s.buf, vec![0.0f32; (s.cells_per_slot * s.slots) as usize]))
+                    .collect(),
+                regs: self
+                    .prog
+                    .frags
+                    .iter()
+                    .map(|f| {
+                        let m = self.m(f.buf);
+                        (
+                            f.buf,
+                            vec![0.0f32; (m.frag_threads * f.locals_per_thread) as usize],
+                        )
+                    })
+                    .collect(),
+                pending: Vec::new(),
+                current_group: Vec::new(),
+            };
+            self.exec_stmts(&self.prog.body, &mut env, &mut st, tensors)?;
+            // flush any remaining async copies (epilogue safety)
+            self.drain_async(0, &mut st, tensors)?;
+        }
+        Ok(())
+    }
+
+    fn exec_stmts(
+        &self,
+        stmts: &[TStmt],
+        env: &mut HashMap<VarId, i64>,
+        st: &mut BlockState,
+        tensors: &mut Tensors,
+    ) -> Result<(), String> {
+        for s in stmts {
+            self.exec_stmt(s, env, st, tensors)?;
+        }
+        Ok(())
+    }
+
+    fn exec_stmt(
+        &self,
+        s: &TStmt,
+        env: &mut HashMap<VarId, i64>,
+        st: &mut BlockState,
+        tensors: &mut Tensors,
+    ) -> Result<(), String> {
+        match s {
+            TStmt::For {
+                var, extent, body, ..
+            } => {
+                let e = extent.eval_int(env);
+                for i in 0..e {
+                    env.insert(var.id, i);
+                    self.exec_stmts(body, env, st, tensors)?;
+                }
+                env.remove(&var.id);
+                Ok(())
+            }
+            TStmt::If {
+                cond,
+                then_body,
+                else_body,
+            } => {
+                if cond.eval_int(env) != 0 {
+                    self.exec_stmts(then_body, env, st, tensors)
+                } else {
+                    self.exec_stmts(else_body, env, st, tensors)
+                }
+            }
+            TStmt::Copy { binding, .. } => {
+                if binding.is_async {
+                    st.current_group.push((s.clone(), env.clone()));
+                    Ok(())
+                } else {
+                    self.exec_copy(s, env, st, tensors)
+                }
+            }
+            TStmt::AsyncCommit => {
+                let g = std::mem::take(&mut st.current_group);
+                st.pending.push(g);
+                Ok(())
+            }
+            TStmt::AsyncWait(n) => self.drain_async(*n, st, tensors),
+            TStmt::Barrier => Ok(()), // lockstep execution: no-op numerically
+            TStmt::Fill { buf, value } => {
+                let m = self.m(*buf);
+                let v = round_to_dtype(*value as f32, m.dtype);
+                match m.scope {
+                    MemScope::Fragment => {
+                        for x in st.regs.get_mut(buf).unwrap().iter_mut() {
+                            *x = v;
+                        }
+                    }
+                    _ => {
+                        for x in st.shared.get_mut(buf).unwrap().iter_mut() {
+                            *x = v;
+                        }
+                    }
+                }
+                Ok(())
+            }
+            TStmt::Gemm {
+                a,
+                b,
+                c,
+                trans_a,
+                trans_b,
+                ..
+            } => self.exec_gemm(a, b, *c, *trans_a, *trans_b, env, st, tensors),
+            TStmt::Reduce {
+                src,
+                dst,
+                dim,
+                kind,
+                clear,
+            } => self.exec_reduce(*src, *dst, *dim, *kind, *clear, st),
+            TStmt::Dequant {
+                src,
+                dst,
+                scheme,
+                scale,
+                group_size,
+            } => self.exec_dequant(*src, *dst, *scheme, *scale, *group_size, st),
+            TStmt::Atomic { dst, src, kind } => self.exec_atomic(dst, *src, *kind, env, st, tensors),
+            TStmt::Parallel {
+                vars,
+                extents,
+                body,
+                ..
+            } => self.exec_parallel(vars, extents, body, env, st, tensors),
+        }
+    }
+
+    fn drain_async(
+        &self,
+        keep: usize,
+        st: &mut BlockState,
+        tensors: &mut Tensors,
+    ) -> Result<(), String> {
+        while st.pending.len() > keep {
+            let group = st.pending.remove(0);
+            for (stmt, genv) in group {
+                let mut env = genv.clone();
+                self.exec_copy(&stmt, &mut env, st, tensors)?;
+            }
+        }
+        Ok(())
+    }
+
+    // ---- element accessors ------------------------------------------
+
+    fn global_linear(&self, m: &Meta, idx: &[i64]) -> Option<usize> {
+        let mut addr = 0i64;
+        for (d, &i) in idx.iter().enumerate() {
+            if i < 0 || i >= m.shape[d] {
+                return None; // out-of-bounds: predicated off
+            }
+            addr = addr * m.shape[d] + i;
+        }
+        Some(addr as usize)
+    }
+
+    fn read_elem(
+        &self,
+        buf: BufferId,
+        idx: &[i64],
+        slot: i64,
+        exec_thread: Option<i64>,
+        st: &BlockState,
+        tensors: &Tensors,
+    ) -> Result<f32, String> {
+        let m = self.m(buf);
+        match m.scope {
+            MemScope::Global => Ok(self
+                .global_linear(m, idx)
+                .map(|a| tensors[&buf][a])
+                .unwrap_or(0.0)),
+            MemScope::Shared | MemScope::SharedDyn => {
+                let phys = m.phys(idx) + slot * (m.slots_cells / self.slots_of(buf));
+                Ok(st.shared[&buf][phys as usize])
+            }
+            MemScope::Fragment => {
+                let f = m.frag.as_ref().unwrap();
+                let owners = f.owners(idx);
+                let (t, l) = match exec_thread {
+                    Some(et) => *owners.iter().find(|(t, _)| *t == et).ok_or_else(|| {
+                        format!(
+                            "thread {} reads cell {:?} of buffer {} it does not own \
+                             (owners: {:?}) — layout inference failed to replicate",
+                            et, idx, buf, owners
+                        )
+                    })?,
+                    None => owners[0],
+                };
+                Ok(st.regs[&buf][(t * m.locals + l) as usize])
+            }
+            MemScope::Local => unreachable!("locals are not addressable buffers"),
+        }
+    }
+
+    fn slots_of(&self, buf: BufferId) -> i64 {
+        self.prog
+            .shared
+            .iter()
+            .find(|s| s.buf == buf)
+            .map(|s| s.slots)
+            .unwrap_or(1)
+    }
+
+    fn write_elem(
+        &self,
+        buf: BufferId,
+        idx: &[i64],
+        slot: i64,
+        value: f32,
+        st: &mut BlockState,
+        tensors: &mut Tensors,
+    ) {
+        let m = self.m(buf);
+        let v = round_to_dtype(value, m.dtype);
+        match m.scope {
+            MemScope::Global => {
+                if let Some(a) = self.global_linear(m, idx) {
+                    tensors.get_mut(&buf).unwrap()[a] = v;
+                }
+            }
+            MemScope::Shared | MemScope::SharedDyn => {
+                let cells = m.slots_cells / self.slots_of(buf);
+                let phys = m.phys(idx) + slot * cells;
+                st.shared.get_mut(&buf).unwrap()[phys as usize] = v;
+            }
+            MemScope::Fragment => {
+                let f = m.frag.as_ref().unwrap();
+                let regs = st.regs.get_mut(&buf).unwrap();
+                for (t, l) in f.owners(idx) {
+                    regs[(t * m.locals + l) as usize] = v;
+                }
+            }
+            MemScope::Local => unreachable!(),
+        }
+    }
+
+    // ---- op executors -----------------------------------------------
+
+    fn exec_copy(
+        &self,
+        s: &TStmt,
+        env: &mut HashMap<VarId, i64>,
+        st: &mut BlockState,
+        tensors: &mut Tensors,
+    ) -> Result<(), String> {
+        let (src, dst) = match s {
+            TStmt::Copy { src, dst, .. } => (src, dst),
+            _ => unreachable!(),
+        };
+        let src_off: Vec<i64> = src.offsets.iter().map(|e| e.eval_int(env)).collect();
+        let dst_off: Vec<i64> = dst.offsets.iter().map(|e| e.eval_int(env)).collect();
+        let src_slot = src.slot.eval_int(env);
+        let dst_slot = dst.slot.eval_int(env);
+        // copies are tile-shaped; same cell count, possibly different rank
+        for cell in domain_iter(&dst.shape) {
+            let flat = flatten(&cell, &dst.shape);
+            let scell = unflatten(flat, &src.shape);
+            let sidx: Vec<i64> = scell.iter().zip(&src_off).map(|(c, o)| c + o).collect();
+            let didx: Vec<i64> = cell.iter().zip(&dst_off).map(|(c, o)| c + o).collect();
+            let v = self.read_elem(src.buf, &sidx, src_slot, None, st, tensors)?;
+            self.write_elem(dst.buf, &didx, dst_slot, v, st, tensors);
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn exec_gemm(
+        &self,
+        a: &RegionRef,
+        b: &RegionRef,
+        c: BufferId,
+        trans_a: bool,
+        trans_b: bool,
+        env: &mut HashMap<VarId, i64>,
+        st: &mut BlockState,
+        tensors: &mut Tensors,
+    ) -> Result<(), String> {
+        let (sa, sb) = (&a.shape, &b.shape);
+        let (m, k) = if trans_a {
+            (sa[1], sa[0])
+        } else {
+            (sa[0], sa[1])
+        };
+        let n = if trans_b { sb[0] } else { sb[1] };
+        let a_slot = a.slot.eval_int(env);
+        let b_slot = b.slot.eval_int(env);
+        let cm = self.m(c);
+        let cf = cm.frag.as_ref().expect("gemm accumulator must be a fragment");
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = self.read_elem(c, &[i, j], 0, None, st, tensors)?;
+                for kk in 0..k {
+                    let ai = if trans_a { vec![kk, i] } else { vec![i, kk] };
+                    let bi = if trans_b { vec![j, kk] } else { vec![kk, j] };
+                    let av = self.read_elem(a.buf, &ai, a_slot, None, st, tensors)?;
+                    let bv = self.read_elem(b.buf, &bi, b_slot, None, st, tensors)?;
+                    acc += av * bv;
+                }
+                let regs = st.regs.get_mut(&c).unwrap();
+                for (t, l) in cf.owners(&[i, j]) {
+                    regs[(t * cm.locals + l) as usize] = acc;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_reduce(
+        &self,
+        src: BufferId,
+        dst: BufferId,
+        dim: usize,
+        kind: ReduceKind,
+        clear: bool,
+        st: &mut BlockState,
+    ) -> Result<(), String> {
+        let sm = self.m(src);
+        let dm = self.m(dst);
+        let sf = sm.frag.as_ref().ok_or("reduce src must be fragment")?;
+        let df = dm.frag.as_ref().ok_or("reduce dst must be fragment")?;
+        for out in domain_iter(&df.shape) {
+            let init = if clear {
+                match kind {
+                    ReduceKind::Sum => 0.0f32,
+                    ReduceKind::Max => f32::NEG_INFINITY,
+                    ReduceKind::Min => f32::INFINITY,
+                    ReduceKind::AbsMax => 0.0,
+                }
+            } else {
+                let (t, l) = df.owners(&out)[0];
+                st.regs[&dst][(t * dm.locals + l) as usize]
+            };
+            let mut acc = init;
+            for r in 0..sf.shape[dim] {
+                let mut idx = out.clone();
+                if sf.ndim() == out.len() {
+                    // dst kept a dummy dim
+                    idx = out.clone();
+                    idx[dim] = r;
+                } else {
+                    idx.insert(dim, r);
+                }
+                let (t, l) = sf.owners(&idx)[0];
+                let v = st.regs[&src][(t * sm.locals + l) as usize];
+                acc = match kind {
+                    ReduceKind::Sum => acc + v,
+                    ReduceKind::Max => acc.max(v),
+                    ReduceKind::Min => acc.min(v),
+                    ReduceKind::AbsMax => acc.max(v.abs()),
+                };
+            }
+            let regs = st.regs.get_mut(&dst).unwrap();
+            let v = round_to_dtype(acc, dm.dtype);
+            for (t, l) in df.owners(&out) {
+                regs[(t * dm.locals + l) as usize] = v;
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_dequant(
+        &self,
+        src: BufferId,
+        dst: BufferId,
+        scheme: DequantScheme,
+        scale: Option<BufferId>,
+        group_size: i64,
+        st: &mut BlockState,
+    ) -> Result<(), String> {
+        let dm = self.m(dst);
+        let df = dm.frag.as_ref().ok_or("dequant dst must be fragment")?;
+        let sm = self.m(src);
+        let bits = match scheme {
+            DequantScheme::UintAffine { .. } => {
+                // bits derivable from shape ratio
+                let epb = df.shape[1] / sm.shape[1];
+                (8 / epb) as u32
+            }
+            DequantScheme::Nf4Lut | DequantScheme::Fp4E2m1 => 4,
+        };
+        let epb = (8 / bits) as i64;
+        let mask = (1u32 << bits) - 1;
+        for cell in domain_iter(&df.shape) {
+            let (i, j) = (cell[0], cell[1]);
+            let byte_idx = vec![i, j / epb];
+            let byte = self.frag_or_shared_read(src, &byte_idx, st)? as u32;
+            let code = (byte >> (((j % epb) as u32) * bits)) & mask;
+            let base = match scheme {
+                DequantScheme::UintAffine { zero } => code as f32 - zero as f32,
+                DequantScheme::Nf4Lut => NF4_TABLE[code as usize],
+                DequantScheme::Fp4E2m1 => fp4_e2m1_decode(code as u8),
+            };
+            let s = match scale {
+                Some(sc) => {
+                    let sidx = vec![i, j / group_size];
+                    self.frag_or_shared_read(sc, &sidx, st)?
+                }
+                None => 1.0,
+            };
+            let v = round_to_dtype(base * s, dm.dtype);
+            let regs = st.regs.get_mut(&dst).unwrap();
+            for (t, l) in df.owners(&cell) {
+                regs[(t * dm.locals + l) as usize] = v;
+            }
+        }
+        Ok(())
+    }
+
+    fn frag_or_shared_read(
+        &self,
+        buf: BufferId,
+        idx: &[i64],
+        st: &BlockState,
+    ) -> Result<f32, String> {
+        let m = self.m(buf);
+        match m.scope {
+            MemScope::Fragment => {
+                let f = m.frag.as_ref().unwrap();
+                let (t, l) = f.owners(idx)[0];
+                Ok(st.regs[&buf][(t * m.locals + l) as usize])
+            }
+            MemScope::Shared | MemScope::SharedDyn => {
+                Ok(st.shared[&buf][m.phys(idx) as usize])
+            }
+            _ => Err("dequant operand must be on-chip".into()),
+        }
+    }
+
+    fn exec_atomic(
+        &self,
+        dst: &RegionRef,
+        src: BufferId,
+        kind: AtomicKind,
+        env: &mut HashMap<VarId, i64>,
+        st: &mut BlockState,
+        tensors: &mut Tensors,
+    ) -> Result<(), String> {
+        let off: Vec<i64> = dst.offsets.iter().map(|e| e.eval_int(env)).collect();
+        let dm = self.m(dst.buf);
+        for cell in domain_iter(&dst.shape) {
+            let didx: Vec<i64> = cell.iter().zip(&off).map(|(c, o)| c + o).collect();
+            let sv = self.read_elem(src, &cell, 0, None, st, tensors)?;
+            if let Some(a) = self.global_linear(dm, &didx) {
+                let t = tensors.get_mut(&dst.buf).unwrap();
+                let cur = t[a];
+                t[a] = round_to_dtype(
+                    match kind {
+                        AtomicKind::Add => cur + sv,
+                        AtomicKind::Max => cur.max(sv),
+                        AtomicKind::Min => cur.min(sv),
+                    },
+                    dm.dtype,
+                );
+            }
+        }
+        Ok(())
+    }
+
+    fn exec_parallel(
+        &self,
+        vars: &[crate::ir::expr::Var],
+        extents: &[i64],
+        body: &[crate::ir::program::ElemStmt],
+        env: &mut HashMap<VarId, i64>,
+        st: &mut BlockState,
+        tensors: &mut Tensors,
+    ) -> Result<(), String> {
+        for point in domain_iter(extents) {
+            for (v, &p) in vars.iter().zip(&point) {
+                env.insert(v.id, p);
+            }
+            for es in body {
+                let idx: Vec<i64> = es.indices.iter().map(|e| e.eval_int(env)).collect();
+                let dm = self.m(es.dst);
+                match dm.scope {
+                    MemScope::Fragment => {
+                        let owners = dm.frag.as_ref().unwrap().owners(&idx);
+                        // each owning thread computes the value itself —
+                        // its loads must resolve within its own registers
+                        let mut vals = Vec::with_capacity(owners.len());
+                        for (t, _) in &owners {
+                            vals.push(self.eval_value(&es.value, env, Some(*t), st, tensors)?);
+                        }
+                        let regs = st.regs.get_mut(&es.dst).unwrap();
+                        for ((t, l), v) in owners.iter().zip(vals) {
+                            regs[(t * dm.locals + l) as usize] = round_to_dtype(v, dm.dtype);
+                        }
+                    }
+                    _ => {
+                        let v = self.eval_value(&es.value, env, None, st, tensors)?;
+                        self.write_elem(es.dst, &idx, 0, v, st, tensors);
+                    }
+                }
+            }
+        }
+        for v in vars {
+            env.remove(&v.id);
+        }
+        Ok(())
+    }
+
+    /// Evaluate a scalar value expression (element-wise bodies).
+    fn eval_value(
+        &self,
+        e: &Expr,
+        env: &HashMap<VarId, i64>,
+        exec_thread: Option<i64>,
+        st: &BlockState,
+        tensors: &Tensors,
+    ) -> Result<f32, String> {
+        Ok(match e.kind() {
+            ExprKind::Var(v) => *env
+                .get(&v.id)
+                .unwrap_or_else(|| panic!("unbound var {} in value", v.name))
+                as f32,
+            ExprKind::Int(v) => *v as f32,
+            ExprKind::Float(v) => *v as f32,
+            ExprKind::Load(buf, idx) => {
+                let i: Vec<i64> = idx.iter().map(|x| x.eval_int(env)).collect();
+                self.read_elem(*buf, &i, 0, exec_thread, st, tensors)?
+            }
+            ExprKind::Bin(op, a, b) => {
+                let (x, y) = (
+                    self.eval_value(a, env, exec_thread, st, tensors)?,
+                    self.eval_value(b, env, exec_thread, st, tensors)?,
+                );
+                match op {
+                    BinOp::Add => x + y,
+                    BinOp::Sub => x - y,
+                    BinOp::Mul => x * y,
+                    BinOp::FloorDiv => (x / y).floor(),
+                    BinOp::FloorMod => x - (x / y).floor() * y,
+                    BinOp::Min => x.min(y),
+                    BinOp::Max => x.max(y),
+                    BinOp::Lt => (x < y) as i32 as f32,
+                    BinOp::Le => (x <= y) as i32 as f32,
+                    BinOp::Eq => (x == y) as i32 as f32,
+                    BinOp::And => ((x != 0.0) && (y != 0.0)) as i32 as f32,
+                    BinOp::Or => ((x != 0.0) || (y != 0.0)) as i32 as f32,
+                    BinOp::BitXor | BinOp::BitAnd | BinOp::Shl | BinOp::Shr => {
+                        return Err("bitwise op in float value".into())
+                    }
+                }
+            }
+            ExprKind::Un(op, a) => {
+                let x = self.eval_value(a, env, exec_thread, st, tensors)?;
+                match op {
+                    UnOp::Neg => -x,
+                    UnOp::Exp => x.exp(),
+                    UnOp::Exp2 => x.exp2(),
+                    UnOp::Log => x.ln(),
+                    UnOp::Sqrt => x.sqrt(),
+                    UnOp::Rsqrt => 1.0 / x.sqrt(),
+                    UnOp::Abs => x.abs(),
+                    UnOp::Tanh => x.tanh(),
+                    UnOp::Not => (x == 0.0) as i32 as f32,
+                }
+            }
+            ExprKind::Select(c, t, f) => {
+                if self.eval_value(c, env, exec_thread, st, tensors)? != 0.0 {
+                    self.eval_value(t, env, exec_thread, st, tensors)?
+                } else {
+                    self.eval_value(f, env, exec_thread, st, tensors)?
+                }
+            }
+            ExprKind::Cast(dt, a) => {
+                round_to_dtype(self.eval_value(a, env, exec_thread, st, tensors)?, *dt)
+            }
+        })
+    }
+}
+
+fn flatten(idx: &[i64], shape: &[i64]) -> i64 {
+    let mut f = 0;
+    for (d, &i) in idx.iter().enumerate() {
+        f = f * shape[d] + i;
+    }
+    f
+}
+
+fn unflatten(mut flat: i64, shape: &[i64]) -> Vec<i64> {
+    let mut idx = vec![0i64; shape.len()];
+    for d in (0..shape.len()).rev() {
+        idx[d] = flat % shape[d];
+        flat /= shape[d];
+    }
+    idx
+}
+
+fn dtype_of(prog: &LoweredProgram, buf: BufferId) -> DType {
+    if let Some(b) = prog.params.iter().find(|b| b.id == buf) {
+        return b.dtype;
+    }
+    if let Some(s) = prog.shared.iter().find(|s| s.buf == buf) {
+        return s.dtype;
+    }
+    if let Some(f) = prog.frags.iter().find(|f| f.buf == buf) {
+        return f.dtype;
+    }
+    DType::F32
+}

@@ -1,0 +1,287 @@
+//! Lowered, scheduled tile IR ("ThreadIR").
+//!
+//! `lower::compile` turns a `TileProgram` into a `LoweredProgram`: every
+//! buffer has a resolved layout, every copy a thread binding + vector
+//! width, every GEMM a selected instruction, and every `Pipelined` loop
+//! has been *expanded* into the prologue / steady-state / epilogue form
+//! with multi-buffered shared tiles and explicit async-copy, commit,
+//! wait and barrier statements — the structure Fig. 1(c) shows as
+//! generated CUDA. The interpreter (`interp`) executes this IR with
+//! async-queue semantics, so a mis-scheduled pipeline produces wrong
+//! numbers, not just a slow estimate.
+
+pub mod interp;
+
+use crate::ir::buffer::{Buffer, BufferId};
+use crate::ir::expr::{Expr, Var};
+use crate::ir::program::{AtomicKind, DequantScheme, ElemStmt, ReduceKind};
+use crate::passes::layout_inference::LayoutMap;
+use crate::sim::device::InstrSpec;
+
+/// A reference to a tile-shaped region of a buffer in the lowered IR.
+#[derive(Clone, Debug)]
+pub struct RegionRef {
+    pub buf: BufferId,
+    /// Global buffers: element offsets per dim. On-chip: zeros.
+    pub offsets: Vec<Expr>,
+    pub shape: Vec<i64>,
+    /// Multi-buffer slot index (pipelined shared tiles); `0` otherwise.
+    pub slot: Expr,
+}
+
+impl RegionRef {
+    pub fn whole(buf: BufferId, shape: Vec<i64>) -> RegionRef {
+        RegionRef {
+            buf,
+            offsets: shape.iter().map(|_| Expr::int(0)).collect(),
+            shape,
+            slot: Expr::int(0),
+        }
+    }
+}
+
+/// Thread binding + vectorization decision for a copy (Fig. 8 output).
+#[derive(Clone, Debug)]
+pub struct CopyBinding {
+    /// Elements moved per thread per vector transaction.
+    pub vec: i64,
+    /// Threads that participate.
+    pub threads_used: i64,
+    /// Fraction of a 128B transaction actually used on the global side.
+    pub coalesced_frac: f64,
+    /// Worst-case shared-memory bank conflict degree (1 = conflict-free).
+    pub bank_conflict: i64,
+    /// Lowered as an asynchronous copy (cp.async / TMA / DMA-to-LDS).
+    pub is_async: bool,
+}
+
+/// Instruction selection result for one GEMM (§4.3).
+#[derive(Clone, Debug)]
+pub struct GemmSched {
+    pub m: i64,
+    pub n: i64,
+    pub k: i64,
+    pub instr: InstrSpec,
+    /// True when lowered natively (inline PTX path); false = tile library.
+    pub native: bool,
+    pub warps_m: i64,
+    pub warps_n: i64,
+}
+
+/// Per-ParallelFor binding summary.
+#[derive(Clone, Debug)]
+pub struct ParallelBinding {
+    pub vec: i64,
+    pub threads_used: i64,
+}
+
+/// Lowered statements.
+#[derive(Clone, Debug)]
+pub enum TStmt {
+    For {
+        var: Var,
+        extent: Expr,
+        body: Vec<TStmt>,
+        unroll: bool,
+    },
+    If {
+        cond: Expr,
+        then_body: Vec<TStmt>,
+        else_body: Vec<TStmt>,
+    },
+    Copy {
+        src: RegionRef,
+        dst: RegionRef,
+        binding: CopyBinding,
+    },
+    Gemm {
+        a: RegionRef,
+        b: RegionRef,
+        c: BufferId,
+        trans_a: bool,
+        trans_b: bool,
+        sched: GemmSched,
+    },
+    Fill {
+        buf: BufferId,
+        value: f64,
+    },
+    Reduce {
+        src: BufferId,
+        dst: BufferId,
+        dim: usize,
+        kind: ReduceKind,
+        clear: bool,
+    },
+    Dequant {
+        src: BufferId,
+        dst: BufferId,
+        scheme: DequantScheme,
+        scale: Option<BufferId>,
+        group_size: i64,
+    },
+    Atomic {
+        dst: RegionRef,
+        src: BufferId,
+        kind: AtomicKind,
+    },
+    Parallel {
+        vars: Vec<Var>,
+        extents: Vec<i64>,
+        body: Vec<ElemStmt>,
+        binding: ParallelBinding,
+    },
+    /// `__syncthreads()` — block barrier.
+    Barrier,
+    /// `cp.async.commit_group` — seal the pending async copies.
+    AsyncCommit,
+    /// `cp.async.wait_group N` — wait until at most N groups in flight.
+    AsyncWait(usize),
+}
+
+/// Shared-memory allocation in the lowered program.
+#[derive(Clone, Debug)]
+pub struct SharedAlloc {
+    pub buf: BufferId,
+    /// Physical cells of ONE slot (layout output size, includes padding).
+    pub cells_per_slot: i64,
+    /// Multi-buffer slot count (pipeline stages), >= 1.
+    pub slots: i64,
+    pub elem_bits: u32,
+    pub dtype: crate::ir::dtype::DType,
+}
+
+impl SharedAlloc {
+    pub fn bytes(&self) -> i64 {
+        (self.cells_per_slot * self.slots * self.elem_bits as i64 + 7) / 8
+    }
+}
+
+/// Register allocation for a fragment buffer.
+#[derive(Clone, Debug)]
+pub struct FragAlloc {
+    pub buf: BufferId,
+    pub locals_per_thread: i64,
+    pub dtype: crate::ir::dtype::DType,
+}
+
+/// Pipeline summary for the performance model.
+#[derive(Clone, Debug)]
+pub struct PipelineSched {
+    pub num_stages: usize,
+    /// Global->shared bytes moved per iteration.
+    pub bytes_per_iter: i64,
+    /// Loop trip count (static) or None (dynamic).
+    pub trip_count: Option<i64>,
+    /// Whether copies were lowered async (cp.async / TMA class).
+    pub uses_async: bool,
+}
+
+/// Whole-kernel scheduling summary consumed by the simulator.
+#[derive(Clone, Debug, Default)]
+pub struct ScheduleInfo {
+    pub pipelines: Vec<PipelineSched>,
+    pub warp_specialized: bool,
+    /// Total shared memory bytes per block (after multi-buffering).
+    pub smem_bytes: i64,
+    /// Estimated registers per thread (fragment locals x 32-bit words).
+    pub regs_per_thread: i64,
+    /// L2 rasterization swizzle enabled.
+    pub swizzle_blocks: bool,
+}
+
+/// The lowered kernel.
+#[derive(Clone, Debug)]
+pub struct LoweredProgram {
+    pub name: String,
+    pub grid: Vec<Expr>,
+    pub block_vars: Vec<Var>,
+    pub threads: i64,
+    pub params: Vec<Buffer>,
+    pub shared: Vec<SharedAlloc>,
+    pub frags: Vec<FragAlloc>,
+    pub layout: LayoutMap,
+    pub body: Vec<TStmt>,
+    pub schedule: ScheduleInfo,
+}
+
+impl LoweredProgram {
+    pub fn static_grid(&self) -> Option<Vec<i64>> {
+        self.grid.iter().map(|g| g.as_int()).collect()
+    }
+
+    pub fn shared_alloc(&self, buf: BufferId) -> &SharedAlloc {
+        self.shared
+            .iter()
+            .find(|s| s.buf == buf)
+            .unwrap_or_else(|| panic!("no shared alloc for buffer {}", buf))
+    }
+
+    pub fn frag_alloc(&self, buf: BufferId) -> &FragAlloc {
+        self.frags
+            .iter()
+            .find(|s| s.buf == buf)
+            .unwrap_or_else(|| panic!("no fragment alloc for buffer {}", buf))
+    }
+
+    pub fn param(&self, buf: BufferId) -> &Buffer {
+        self.params
+            .iter()
+            .find(|b| b.id == buf)
+            .unwrap_or_else(|| panic!("no param buffer {}", buf))
+    }
+
+    /// Walk statements depth-first.
+    pub fn visit<'a>(&'a self, f: &mut impl FnMut(&'a TStmt)) {
+        fn walk<'a>(stmts: &'a [TStmt], f: &mut impl FnMut(&'a TStmt)) {
+            for s in stmts {
+                f(s);
+                match s {
+                    TStmt::For { body, .. } => walk(body, f),
+                    TStmt::If {
+                        then_body,
+                        else_body,
+                        ..
+                    } => {
+                        walk(then_body, f);
+                        walk(else_body, f);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        walk(&self.body, f);
+    }
+
+    /// Count statements of each major kind (used by pipeline tests and
+    /// the compile report).
+    pub fn stmt_counts(&self) -> StmtCounts {
+        let mut c = StmtCounts::default();
+        self.visit(&mut |s| match s {
+            TStmt::Copy { binding, .. } => {
+                c.copies += 1;
+                if binding.is_async {
+                    c.async_copies += 1;
+                }
+            }
+            TStmt::Gemm { .. } => c.gemms += 1,
+            TStmt::Barrier => c.barriers += 1,
+            TStmt::AsyncCommit => c.commits += 1,
+            TStmt::AsyncWait(_) => c.waits += 1,
+            TStmt::Parallel { .. } => c.parallels += 1,
+            _ => {}
+        });
+        c
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StmtCounts {
+    pub copies: usize,
+    pub async_copies: usize,
+    pub gemms: usize,
+    pub barriers: usize,
+    pub commits: usize,
+    pub waits: usize,
+    pub parallels: usize,
+}

@@ -1,0 +1,337 @@
+//! Dequantize-GEMM tile programs (Fig. 17 / Fig. 15): weight-only
+//! quantized matmul `Ct[N,M] = dequant(B)[N,K] @ A[M,K]^T` with packed
+//! sub-byte weights (INT4 / INT2 / NF4 / FP4-E2M1) and per-group scales.
+//!
+//! The packed weight tensor stores *bytes*: `B[N, K/elems_per_byte]`
+//! (`storage_dtype = uint8`, exactly the paper's Fig. 17 convention);
+//! codes travel global -> shared -> registers and are decoded in
+//! registers right before the tensor-core GEMM — the pattern Triton
+//! cannot express efficiently (§5.2).
+
+use crate::ir::builder::KernelBuilder;
+use crate::ir::dtype::{fp4_e2m1_decode, fp4_e2m1_encode, nf4_encode, DType, NF4_TABLE};
+use crate::ir::expr::Expr;
+use crate::ir::program::{DequantScheme, GemmWarpPolicy, TileProgram};
+
+/// Weight format of the dequant GEMM family (Fig. 15's x-axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum WeightFormat {
+    /// `W_INT4 A_FP16` (Marlin's format).
+    Int4,
+    /// `W_INT2 A_INT8` (the BitBLAS headline config).
+    Int2,
+    /// `W_NF4 A_FP16` (BitsandBytes).
+    Nf4,
+    /// `W_FP4_E2M1 A_FP16` (Fig. 17).
+    Fp4,
+}
+
+impl WeightFormat {
+    pub fn bits(self) -> u32 {
+        match self {
+            WeightFormat::Int4 | WeightFormat::Nf4 | WeightFormat::Fp4 => 4,
+            WeightFormat::Int2 => 2,
+        }
+    }
+    pub fn elems_per_byte(self) -> i64 {
+        (8 / self.bits()) as i64
+    }
+    pub fn scheme(self) -> DequantScheme {
+        match self {
+            WeightFormat::Int4 => DequantScheme::UintAffine { zero: 8 },
+            WeightFormat::Int2 => DequantScheme::UintAffine { zero: 2 },
+            WeightFormat::Nf4 => DequantScheme::Nf4Lut,
+            WeightFormat::Fp4 => DequantScheme::Fp4E2m1,
+        }
+    }
+    /// Activation dtype (paper: fp16 except the W2A8 config).
+    pub fn act_dtype(self) -> DType {
+        match self {
+            WeightFormat::Int2 => DType::I8,
+            _ => DType::F16,
+        }
+    }
+}
+
+/// Tile configuration for dequant GEMM.
+#[derive(Clone, Copy, Debug)]
+pub struct DequantConfig {
+    pub block_m: i64,
+    pub block_n: i64,
+    pub block_k: i64,
+    pub num_stages: usize,
+    pub threads: i64,
+    pub group_size: i64,
+}
+
+impl Default for DequantConfig {
+    fn default() -> Self {
+        DequantConfig {
+            block_m: 16,
+            block_n: 64,
+            block_k: 64,
+            num_stages: 2,
+            threads: 128,
+            group_size: 32,
+        }
+    }
+}
+
+/// Build the Fig. 17 kernel: `Ct[N, M] = dequant(B) @ A^T`.
+pub fn dequant_matmul_program(
+    m: i64,
+    n: i64,
+    k: i64,
+    fmt: WeightFormat,
+    cfg: &DequantConfig,
+) -> TileProgram {
+    let (bm, bn, bk) = (cfg.block_m, cfg.block_n, cfg.block_k);
+    assert!(m % bm == 0 && n % bn == 0 && k % bk == 0);
+    let epb = fmt.elems_per_byte();
+    let group = cfg.group_size;
+    assert!(bk % epb == 0 && bk % group == 0);
+    let act = fmt.act_dtype();
+
+    let mut t = KernelBuilder::new("dequant_matmul", cfg.threads);
+    let a = t.param("A", &[m, k], act);
+    let b = t.param("B", &[n, k / epb], DType::U8);
+    let scales = t.param("Scales", &[n, k / group], DType::F16);
+    let ct = t.param("Ct", &[n, m], DType::F32);
+    let (bx, by) = t.kernel2(n / bn, m / bm);
+
+    // weights + scales are repacked tile-major offline (Ladder), so
+    // tile reads stream at full bandwidth — the optimization Triton
+    // cannot express (§5.2)
+    t.annotate_layout(b, crate::layout::Layout::row_major(&[n, k / epb]));
+    t.annotate_layout(scales, crate::layout::Layout::row_major(&[n, k / group]));
+
+    let a_s = t.alloc_shared("A_shared", &[bm, bk], act);
+    let b_s = t.alloc_shared("B_shared", &[bn, bk / epb], DType::U8);
+    let b_local = t.alloc_fragment("B_local", &[bn, bk / epb], DType::U8);
+    let b_dq = t.alloc_fragment("B_dequantize_local", &[bn, bk], act);
+    let s_local = t.alloc_fragment("Scale_local", &[bn, bk / group], DType::F16);
+    let ct_l = t.alloc_fragment("Ct_local", &[bn, bm], DType::F32);
+
+    if act.is_float() {
+        // fp16 activations: decode+scale in registers, single accumulator
+        t.clear(ct_l);
+        t.pipelined(k / bk, cfg.num_stages, |t, ko| {
+            t.copy_in(a, vec![by.expr() * bm, ko.expr() * bk], a_s);
+            t.copy_in(b, vec![bx.expr() * bn, ko.expr() * (bk / epb)], b_s);
+            t.copy(b_s, b_local);
+            t.copy_in(
+                scales,
+                vec![bx.expr() * bn, ko.expr() * (bk / group)],
+                s_local,
+            );
+            t.dequant(b_local, b_dq, fmt.scheme(), Some(s_local), group);
+            t.gemm_opts(b_dq, a_s, ct_l, false, true, GemmWarpPolicy::FullCol);
+        });
+        t.copy_out(ct_l, ct, vec![bx.expr() * bn, by.expr() * bm]);
+    } else {
+        // integer activations (W2A8): weights must STAY integer codes
+        // through the IMMA gemm; the per-group scale is applied on the
+        // int32 partial accumulator (requires group == block_k so one
+        // scale covers each k-slice)
+        assert_eq!(group, bk, "W-int/A-int path needs group_size == block_k");
+        let partial = t.alloc_fragment("Partial", &[bn, bm], DType::F32);
+        t.clear(ct_l);
+        t.pipelined(k / bk, cfg.num_stages, |t, ko| {
+            t.copy_in(a, vec![by.expr() * bm, ko.expr() * bk], a_s);
+            t.copy_in(b, vec![bx.expr() * bn, ko.expr() * (bk / epb)], b_s);
+            t.copy(b_s, b_local);
+            t.copy_in(
+                scales,
+                vec![bx.expr() * bn, ko.expr() * (bk / group)],
+                s_local,
+            );
+            t.dequant(b_local, b_dq, fmt.scheme(), None, group);
+            t.clear(partial);
+            t.gemm_opts(b_dq, a_s, partial, false, true, GemmWarpPolicy::FullCol);
+            t.parallel(&[bn, bm], |v| {
+                let (i, j) = (&v[0], &v[1]);
+                vec![crate::ir::builder::store(
+                    ct_l,
+                    vec![i.expr(), j.expr()],
+                    Expr::load(ct_l, vec![i.expr(), j.expr()])
+                        + Expr::load(partial, vec![i.expr(), j.expr()])
+                            * Expr::load(s_local, vec![i.expr(), Expr::int(0)]),
+                )]
+            });
+        });
+        t.copy_out(ct_l, ct, vec![bx.expr() * bn, by.expr() * bm]);
+    }
+    t.finish()
+}
+
+// ---- host-side quantization helpers (shared with tests/benches) ------
+
+/// Quantize a row-major f32 weight matrix `[n, k]` into packed bytes +
+/// per-group scales for `fmt`. Returns (packed[n, k/epb] as byte values,
+/// scales[n, k/groups]).
+pub fn quantize_weights(
+    w: &[f32],
+    n: i64,
+    k: i64,
+    fmt: WeightFormat,
+    group: i64,
+) -> (Vec<f32>, Vec<f32>) {
+    let epb = fmt.elems_per_byte();
+    let bits = fmt.bits();
+    let groups = k / group;
+    let mut packed = vec![0f32; (n * k / epb) as usize];
+    let mut scales = vec![0f32; (n * groups) as usize];
+    for i in 0..n {
+        for g in 0..groups {
+            // per-group absmax scaling
+            let mut mx = 1e-8f32;
+            for t in 0..group {
+                mx = mx.max(w[(i * k + g * group + t) as usize].abs());
+            }
+            let scale = match fmt {
+                WeightFormat::Int4 => mx / 7.0,
+                WeightFormat::Int2 => mx / 1.0,
+                WeightFormat::Nf4 => mx,
+                WeightFormat::Fp4 => mx / 6.0,
+            };
+            scales[(i * groups + g) as usize] = scale;
+            for t in 0..group {
+                let j = g * group + t;
+                let x = w[(i * k + j) as usize] / scale;
+                let code: u8 = match fmt {
+                    WeightFormat::Int4 => (x.round().clamp(-7.0, 7.0) + 8.0) as u8,
+                    WeightFormat::Int2 => (x.round().clamp(-1.0, 1.0) + 2.0) as u8,
+                    WeightFormat::Nf4 => nf4_encode(x.clamp(-1.0, 1.0)),
+                    WeightFormat::Fp4 => fp4_e2m1_encode(x.clamp(-6.0, 6.0)),
+                };
+                let byte_idx = (i * k / epb + j / epb) as usize;
+                let shift = ((j % epb) as u32) * bits;
+                let cur = packed[byte_idx] as u32;
+                packed[byte_idx] = (cur | ((code as u32) << shift)) as f32;
+            }
+        }
+    }
+    (packed, scales)
+}
+
+/// Decode packed weights back to f32 (reference for the Dequant op).
+pub fn dequantize_weights(
+    packed: &[f32],
+    scales: &[f32],
+    n: i64,
+    k: i64,
+    fmt: WeightFormat,
+    group: i64,
+) -> Vec<f32> {
+    let epb = fmt.elems_per_byte();
+    let bits = fmt.bits();
+    let mask = (1u32 << bits) - 1;
+    let groups = k / group;
+    let mut out = vec![0f32; (n * k) as usize];
+    for i in 0..n {
+        for j in 0..k {
+            let byte = packed[(i * k / epb + j / epb) as usize] as u32;
+            let code = (byte >> (((j % epb) as u32) * bits)) & mask;
+            let base = match fmt {
+                WeightFormat::Int4 => code as f32 - 8.0,
+                WeightFormat::Int2 => code as f32 - 2.0,
+                WeightFormat::Nf4 => NF4_TABLE[code as usize],
+                WeightFormat::Fp4 => fp4_e2m1_decode(code as u8),
+            };
+            out[(i * k + j) as usize] = base * scales[(i * groups + j / group) as usize];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::passes::lower::{compile, CompileOptions};
+    use crate::sim::device::Device;
+    use crate::tir::interp::{Interp, Tensors};
+    use crate::workloads::matmul::test_data;
+
+    fn run_fmt(fmt: WeightFormat, tol: f32) {
+        let (m, n, k) = (32i64, 64i64, 64i64);
+        let cfg = DequantConfig {
+            block_m: 32,
+            block_n: 32,
+            block_k: 32,
+            num_stages: 2,
+            threads: 128,
+            group_size: 32,
+        };
+        let p = dequant_matmul_program(m, n, k, fmt, &cfg);
+        let l = compile(&p, &Device::a100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+
+        let mut aval = test_data(m * k, 31);
+        if fmt == WeightFormat::Int2 {
+            // int8 activations: integer values in [-4, 4)
+            for x in aval.iter_mut() {
+                *x = (*x * 8.0).round().clamp(-4.0, 3.0);
+            }
+        }
+        let w = test_data(n * k, 32);
+        let (packed, scales) = quantize_weights(&w, n, k, fmt, cfg.group_size);
+
+        let mut t = Tensors::new();
+        t.insert(p.params[0].id, aval.clone());
+        t.insert(p.params[1].id, packed.clone());
+        t.insert(p.params[2].id, scales.clone());
+        interp.run(&mut t).unwrap();
+
+        // reference: dequantize then GEMM against A^T
+        let wdq = dequantize_weights(&packed, &scales, n, k, fmt, cfg.group_size);
+        let got = &t[&p.params[3].id];
+        let mut max_err = 0f32;
+        for i in 0..n as usize {
+            for j in 0..m as usize {
+                let mut acc = 0f32;
+                for kk in 0..k as usize {
+                    acc += wdq[i * k as usize + kk] * aval[j * k as usize + kk];
+                }
+                let g = got[i * m as usize + j];
+                max_err = max_err.max((g - acc).abs());
+            }
+        }
+        assert!(max_err < tol, "{:?}: max err {}", fmt, max_err);
+    }
+
+    #[test]
+    fn int4_dequant_gemm_matches_reference() {
+        run_fmt(WeightFormat::Int4, 0.05);
+    }
+
+    #[test]
+    fn int2_w2a8_matches_reference() {
+        run_fmt(WeightFormat::Int2, 0.5);
+    }
+
+    #[test]
+    fn nf4_dequant_gemm_matches_reference() {
+        run_fmt(WeightFormat::Nf4, 0.05);
+    }
+
+    #[test]
+    fn fp4_dequant_gemm_matches_reference() {
+        run_fmt(WeightFormat::Fp4, 0.05);
+    }
+
+    #[test]
+    fn quantize_roundtrip_error_is_bounded() {
+        let w = test_data(64 * 128, 5);
+        for fmt in [WeightFormat::Int4, WeightFormat::Nf4, WeightFormat::Fp4] {
+            let (p, s) = quantize_weights(&w, 64, 128, fmt, 32);
+            let dq = dequantize_weights(&p, &s, 64, 128, fmt, 32);
+            let mse: f32 = w
+                .iter()
+                .zip(&dq)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                / w.len() as f32;
+            assert!(mse < 0.002, "{:?} mse {}", fmt, mse);
+        }
+    }
+}

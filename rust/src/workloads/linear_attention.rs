@@ -1,0 +1,234 @@
+//! Linear-attention (Mamba-2 SSD) chunk kernels: `chunk_state` and
+//! `chunk_scan` (§5.2 "we use the chunk-scan and chunk-state functions
+//! from Mamba-2"), Table 4 shapes.
+//!
+//! Semantics (per batch*head, chunk length `L`, state size `N`, head dim
+//! `P`, with per-step decay weights `w`):
+//!   chunk_state:  S[n, p]   = sum_t  B[t, n] * w_st[t] * X[t, p]
+//!   chunk_scan:   Y[t, p]   = w_sc[t] * sum_n C[t, n] * S[n, p]
+//! (the intra-chunk causal correction term of full SSD is carried by the
+//! same GEMM machinery and omitted here; the benchmark's arithmetic
+//! profile — two chunked GEMM families — is preserved).
+
+use crate::ir::builder::{store, KernelBuilder};
+use crate::ir::dtype::DType;
+use crate::ir::expr::Expr;
+use crate::ir::program::{GemmWarpPolicy, TileProgram};
+
+/// chunk_state: grid (nchunks, bh); inputs flattened per chunk:
+/// `B: [bh, seq, N]`, `X: [bh, seq, P]`, `W: [bh, seq]`,
+/// output `S: [bh, nchunks, N, P]` stored as `[bh * nchunks, N, P]`.
+pub fn chunk_state_program(
+    bh: i64,
+    seq: i64,
+    d_state: i64,
+    head_dim: i64,
+    chunk: i64,
+    num_stages: usize,
+) -> TileProgram {
+    assert!(seq % chunk == 0);
+    let nchunks = seq / chunk;
+    let threads = 128;
+    let mut t = KernelBuilder::new("chunk_state", threads);
+    let b_in = t.param("B", &[bh, seq, d_state], DType::F16);
+    let x_in = t.param("X", &[bh, seq, head_dim], DType::F16);
+    let w_in = t.param("W", &[bh, seq], DType::F32);
+    let s_out = t.param("S", &[bh * nchunks, d_state, head_dim], DType::F32);
+    let (bc, bz) = t.kernel2(nchunks, bh);
+
+    let b_s = t.alloc_shared("B_shared", &[chunk, d_state], DType::F16);
+    let x_s = t.alloc_shared("X_shared", &[chunk, head_dim], DType::F16);
+    let xw = t.alloc_fragment("Xw", &[chunk, head_dim], DType::F16);
+    let w_l = t.alloc_fragment("W_local", &[chunk], DType::F32);
+    let s_l = t.alloc_fragment("S_local", &[d_state, head_dim], DType::F32);
+
+    t.clear(s_l);
+    // one chunk per block: a single pipelined iteration keeps the
+    // dataflow identical to the multi-chunk variant
+    t.pipelined(1, num_stages, |t, _ko| {
+        t.copy_in(b_in, vec![bz.expr(), bc.expr() * chunk, Expr::int(0)], b_s);
+        t.copy_in(x_in, vec![bz.expr(), bc.expr() * chunk, Expr::int(0)], x_s);
+        t.copy_in(w_in, vec![bz.expr(), bc.expr() * chunk], w_l);
+        // Xw[t, p] = w[t] * X[t, p]
+        t.parallel(&[chunk, head_dim], |vrs| {
+            let (i, j) = (&vrs[0], &vrs[1]);
+            vec![store(
+                xw,
+                vec![i.expr(), j.expr()],
+                Expr::load(x_s, vec![i.expr(), j.expr()]) * Expr::load(w_l, vec![i.expr()]),
+            )]
+        });
+        // S += B^T @ Xw  (shared x register GEMM: the "sr" case)
+        t.gemm_opts(b_s, xw, s_l, true, false, GemmWarpPolicy::Square);
+    });
+    t.copy_out(
+        s_l,
+        s_out,
+        vec![bz.expr() * nchunks + bc.expr(), Expr::int(0), Expr::int(0)],
+    );
+    t.finish()
+}
+
+/// chunk_scan: grid (nchunks, bh); `C: [bh, seq, N]`,
+/// `S: [bh * nchunks, N, P]`, `W2: [bh, seq]`, output `Y: [bh, seq, P]`.
+pub fn chunk_scan_program(
+    bh: i64,
+    seq: i64,
+    d_state: i64,
+    head_dim: i64,
+    chunk: i64,
+    num_stages: usize,
+) -> TileProgram {
+    assert!(seq % chunk == 0);
+    let nchunks = seq / chunk;
+    let threads = 128;
+    let mut t = KernelBuilder::new("chunk_scan", threads);
+    let c_in = t.param("C", &[bh, seq, d_state], DType::F16);
+    let s_in = t.param("S", &[bh * nchunks, d_state, head_dim], DType::F16);
+    let w_in = t.param("W2", &[bh, seq], DType::F32);
+    let y_out = t.param("Y", &[bh, seq, head_dim], DType::F32);
+    let (bc, bz) = t.kernel2(nchunks, bh);
+
+    let c_s = t.alloc_shared("C_shared", &[chunk, d_state], DType::F16);
+    let s_s = t.alloc_shared("S_shared", &[d_state, head_dim], DType::F16);
+    let w_l = t.alloc_fragment("W2_local", &[chunk], DType::F32);
+    let y_l = t.alloc_fragment("Y_local", &[chunk, head_dim], DType::F32);
+
+    t.clear(y_l);
+    t.pipelined(1, num_stages, |t, _ko| {
+        t.copy_in(c_in, vec![bz.expr(), bc.expr() * chunk, Expr::int(0)], c_s);
+        t.copy_in(
+            s_in,
+            vec![bz.expr() * nchunks + bc.expr(), Expr::int(0), Expr::int(0)],
+            s_s,
+        );
+        t.copy_in(w_in, vec![bz.expr(), bc.expr() * chunk], w_l);
+        t.gemm_opts(c_s, s_s, y_l, false, false, GemmWarpPolicy::Square);
+        t.parallel(&[chunk, head_dim], |vrs| {
+            let (i, j) = (&vrs[0], &vrs[1]);
+            vec![store(
+                y_l,
+                vec![i.expr(), j.expr()],
+                Expr::load(y_l, vec![i.expr(), j.expr()]) * Expr::load(w_l, vec![i.expr()]),
+            )]
+        });
+    });
+    t.copy_out(y_l, y_out, vec![bz.expr(), bc.expr() * chunk, Expr::int(0)]);
+    t.finish()
+}
+
+/// Reference chunk_state.
+pub fn reference_chunk_state(
+    b: &[f32],
+    x: &[f32],
+    w: &[f32],
+    bh: i64,
+    seq: i64,
+    n: i64,
+    p: i64,
+    chunk: i64,
+) -> Vec<f32> {
+    let nchunks = seq / chunk;
+    let mut out = vec![0f32; (bh * nchunks * n * p) as usize];
+    for z in 0..bh {
+        for c in 0..nchunks {
+            for t in 0..chunk {
+                let tt = c * chunk + t;
+                let wv = w[(z * seq + tt) as usize];
+                for ni in 0..n {
+                    let bv = b[((z * seq + tt) * n + ni) as usize] * wv;
+                    for pi in 0..p {
+                        out[(((z * nchunks + c) * n + ni) * p + pi) as usize] +=
+                            bv * x[((z * seq + tt) * p + pi) as usize];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reference chunk_scan.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_chunk_scan(
+    c: &[f32],
+    s: &[f32],
+    w2: &[f32],
+    bh: i64,
+    seq: i64,
+    n: i64,
+    p: i64,
+    chunk: i64,
+) -> Vec<f32> {
+    let nchunks = seq / chunk;
+    let mut out = vec![0f32; (bh * seq * p) as usize];
+    for z in 0..bh {
+        for ch in 0..nchunks {
+            for t in 0..chunk {
+                let tt = ch * chunk + t;
+                for pi in 0..p {
+                    let mut acc = 0f32;
+                    for ni in 0..n {
+                        acc += c[((z * seq + tt) * n + ni) as usize]
+                            * s[(((z * nchunks + ch) * n + ni) * p + pi) as usize];
+                    }
+                    out[((z * seq + tt) * p + pi) as usize] =
+                        acc * w2[(z * seq + tt) as usize];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::passes::lower::{compile, CompileOptions};
+    use crate::sim::device::Device;
+    use crate::tir::interp::{Interp, Tensors};
+    use crate::workloads::matmul::test_data;
+
+    #[test]
+    fn chunk_state_matches_reference() {
+        let (bh, seq, n, p, chunk) = (2i64, 128i64, 32i64, 32i64, 64i64);
+        let prog = chunk_state_program(bh, seq, n, p, chunk, 2);
+        let l = compile(&prog, &Device::h100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+        let b = test_data(bh * seq * n, 41);
+        let x = test_data(bh * seq * p, 42);
+        let w: Vec<f32> = test_data(bh * seq, 43).iter().map(|v| v + 0.75).collect();
+        let mut t = Tensors::new();
+        t.insert(prog.params[0].id, b.clone());
+        t.insert(prog.params[1].id, x.clone());
+        t.insert(prog.params[2].id, w.clone());
+        interp.run(&mut t).unwrap();
+        let want = reference_chunk_state(&b, &x, &w, bh, seq, n, p, chunk);
+        let got = &t[&prog.params[3].id];
+        for (g, wv) in got.iter().zip(&want) {
+            assert!((g - wv).abs() < 0.05 + 0.02 * wv.abs(), "{} vs {}", g, wv);
+        }
+    }
+
+    #[test]
+    fn chunk_scan_matches_reference() {
+        let (bh, seq, n, p, chunk) = (2i64, 128i64, 32i64, 32i64, 64i64);
+        let prog = chunk_scan_program(bh, seq, n, p, chunk, 2);
+        let l = compile(&prog, &Device::h100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+        let nchunks = seq / chunk;
+        let c = test_data(bh * seq * n, 51);
+        let s = test_data(bh * nchunks * n * p, 52);
+        let w2: Vec<f32> = test_data(bh * seq, 53).iter().map(|v| v + 0.75).collect();
+        let mut t = Tensors::new();
+        t.insert(prog.params[0].id, c.clone());
+        t.insert(prog.params[1].id, s.clone());
+        t.insert(prog.params[2].id, w2.clone());
+        interp.run(&mut t).unwrap();
+        let want = reference_chunk_scan(&c, &s, &w2, bh, seq, n, p, chunk);
+        let got = &t[&prog.params[3].id];
+        for (g, wv) in got.iter().zip(&want) {
+            assert!((g - wv).abs() < 0.05 + 0.02 * wv.abs(), "{} vs {}", g, wv);
+        }
+    }
+}

