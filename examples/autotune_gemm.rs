@@ -1,16 +1,19 @@
 //! Autotuning demo: sweep tile configurations for several GEMM shapes on
 //! two devices and show how the chosen schedule adapts — the adaptive
 //! advantage §5.2 attributes to TileLang over fixed-tile libraries.
+//! Decisions are stored in (and on repeat runs served from) the
+//! persistent tuning cache; a cache hit shows `0 cands`.
 //!
 //! Run: cargo run --release --example autotune_gemm
 
-use tilelang::autotuner::tune_gemm;
+use tilelang::autotuner::{tune_gemm_cached, TuningCache};
 use tilelang::ir::dtype::DType;
 use tilelang::report::{fmt_us, header, row};
 use tilelang::sim::device::Device;
 use tilelang::sim::model::Penalties;
 
 fn main() {
+    let mut cache = TuningCache::open_default();
     let shapes = [
         ("square", 4096i64, 4096i64, 4096i64),
         ("wide-n", 4096, 28672, 8192),
@@ -25,7 +28,8 @@ fn main() {
             &widths,
         );
         for (name, m, n, k) in shapes {
-            let r = tune_gemm(m, n, k, DType::F16, &dev, &Penalties::none());
+            let r = tune_gemm_cached(m, n, k, DType::F16, &dev, &Penalties::none(), &mut cache)
+                .expect("tuning");
             row(
                 &[
                     name.to_string(),
@@ -42,5 +46,8 @@ fn main() {
             );
         }
     }
-    println!("\nautotune_gemm OK");
+    if let Err(e) = cache.save() {
+        eprintln!("warning: could not persist tuning cache: {}", e);
+    }
+    println!("\nautotune_gemm OK ({} cache entries)", cache.len());
 }

@@ -74,4 +74,30 @@ fn main() {
             &Penalties::none(),
         );
     });
+
+    // warm-cache path: what a bench or serving start pays after the
+    // first sweep persisted its decision
+    let mut cache = tilelang::autotuner::TuningCache::in_memory();
+    let _ = tilelang::autotuner::tune_gemm_cached(
+        4096,
+        1024,
+        8192,
+        DType::F16,
+        &dev,
+        &Penalties::none(),
+        &mut cache,
+    );
+    bench("autotune: gemm cache hit", 20, || {
+        let r = tilelang::autotuner::tune_gemm_cached(
+            4096,
+            1024,
+            8192,
+            DType::F16,
+            &dev,
+            &Penalties::none(),
+            &mut cache,
+        )
+        .expect("cache hit");
+        assert_eq!(r.evaluated, 0);
+    });
 }

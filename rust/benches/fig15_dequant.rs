@@ -3,12 +3,16 @@
 //! Paper: vs cuBLAS-W16A16 a maximum speedup of 7.65x (W_INT2 A_INT8);
 //! vs Marlin (W_INT4 A_FP16) an average of 1.04x; vs BitsandBytes
 //! (W_NF4 A_FP16) an average of 1.62x.
+//!
+//! Per-format configs are selected by the unified autotuner through the
+//! persistent tuning cache instead of a hardcoded tile.
 
+use tilelang::autotuner::{tune_dequant_cached, TuningCache};
 use tilelang::baselines::{bitsandbytes_nf4_us, cublas_fp16_us, marlin_us};
 use tilelang::report::{claim, fmt_us, geomean, header, row};
 use tilelang::sim::device::Device;
-use tilelang::sim::model::{simulate_kernel, Penalties};
-use tilelang::workloads::dequant::{dequant_matmul_program, DequantConfig, WeightFormat};
+use tilelang::sim::model::Penalties;
+use tilelang::workloads::dequant::WeightFormat;
 use tilelang::workloads::shapes::V_SHAPES;
 
 fn tilelang_dequant_us(
@@ -17,25 +21,16 @@ fn tilelang_dequant_us(
     k: i64,
     fmt: WeightFormat,
     dev: &Device,
+    cache: &mut TuningCache,
 ) -> f64 {
-    // decode shapes (m=1) padded to the 16-row instruction tile
-    let pm = m.max(16);
-    let group = if fmt == WeightFormat::Int2 { 64 } else { 32 };
-    let cfg = DequantConfig {
-        block_m: 16,
-        block_n: 64,
-        block_k: 64,
-        num_stages: 3,
-        threads: 128,
-        group_size: group,
-    };
-    let prog = dequant_matmul_program(pm, n, k, fmt, &cfg);
-    simulate_kernel(&prog, dev, &Penalties::none())
-        .unwrap()
+    tune_dequant_cached(m, n, k, fmt, dev, &Penalties::none(), cache)
+        .expect("dequant tuning")
+        .report
         .time_us
 }
 
 fn main() {
+    let mut cache = TuningCache::open_default();
     let dev = Device::a100();
     println!("== Fig 15: dequantize GEMM on {} (Table 2 V shapes) ==", dev.name);
     let widths = [5usize, 16, 11, 11, 11, 11, 11, 11];
@@ -45,9 +40,9 @@ fn main() {
     );
     let (mut vs_marlin, mut vs_bnb, mut vs_cublas) = (Vec::new(), Vec::new(), Vec::new());
     for s in V_SHAPES {
-        let w4 = tilelang_dequant_us(s.m, s.n, s.k, WeightFormat::Int4, &dev);
-        let nf4 = tilelang_dequant_us(s.m, s.n, s.k, WeightFormat::Nf4, &dev);
-        let w2 = tilelang_dequant_us(s.m, s.n, s.k, WeightFormat::Int2, &dev);
+        let w4 = tilelang_dequant_us(s.m, s.n, s.k, WeightFormat::Int4, &dev, &mut cache);
+        let nf4 = tilelang_dequant_us(s.m, s.n, s.k, WeightFormat::Nf4, &dev, &mut cache);
+        let w2 = tilelang_dequant_us(s.m, s.n, s.k, WeightFormat::Int2, &dev, &mut cache);
         let marlin = marlin_us(&s, &dev);
         let bnb = bitsandbytes_nf4_us(&s, &dev);
         let cublas = cublas_fp16_us(&s, &dev);
@@ -72,4 +67,8 @@ fn main() {
     claim("fig15 W4A16 vs Marlin (avg)", 1.04, geomean(&vs_marlin));
     claim("fig15 NF4 vs BitsandBytes (avg)", 1.62, geomean(&vs_bnb));
     claim("fig15 W2A8 vs cuBLAS-fp16 (max)", 7.65, max_vs_cublas);
+    if let Err(e) = cache.save() {
+        eprintln!("warning: could not persist tuning cache: {}", e);
+    }
+    println!("\ntuning cache: {} entries", cache.len());
 }

@@ -1,0 +1,274 @@
+//! Persistent on-disk tuning cache.
+//!
+//! JSON file keyed by (workload, shape, dtype, device, variant); see
+//! `rust/src/autotuner/README.md` for the format. Benches, the CLI and
+//! the coordinator share one cache so a shape is swept once per device
+//! and every later run reuses the stored config (`evaluated == 0`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Identity of one tuning entry.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CacheKey {
+    /// Workload family (`"gemm"`, `"flash_attention"`, ...).
+    pub workload: String,
+    /// Logical shape signature (problem dims, not tile dims).
+    pub shape: Vec<i64>,
+    /// Input dtype signature (`"float16"`, `"w4a16"`, ...).
+    pub dtype: String,
+    /// Device name (`Device::name`).
+    pub device: String,
+    /// Cost-model variant (penalty fingerprint); `"default"` for
+    /// `Penalties::none()`. Keeps baseline sweeps from colliding with
+    /// the tilelang entries under the same workload/shape key.
+    pub variant: String,
+}
+
+impl CacheKey {
+    fn to_json_fields(&self) -> Vec<(String, Json)> {
+        vec![
+            ("workload".into(), Json::Str(self.workload.clone())),
+            (
+                "shape".into(),
+                Json::Arr(self.shape.iter().map(|&d| Json::Num(d as f64)).collect()),
+            ),
+            ("dtype".into(), Json::Str(self.dtype.clone())),
+            ("device".into(), Json::Str(self.device.clone())),
+            ("variant".into(), Json::Str(self.variant.clone())),
+        ]
+    }
+
+    fn from_json(v: &Json) -> Option<CacheKey> {
+        Some(CacheKey {
+            workload: v.get("workload")?.as_str()?.to_string(),
+            shape: v.get("shape")?.as_i64_arr()?,
+            dtype: v.get("dtype")?.as_str()?.to_string(),
+            device: v.get("device")?.as_str()?.to_string(),
+            variant: v.get("variant")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One cached tuning decision.
+#[derive(Clone, Debug)]
+struct Entry {
+    key: CacheKey,
+    config: Json,
+    time_us: f64,
+}
+
+/// The persistent tuning cache.
+///
+/// Load errors are non-fatal: a missing, unreadable or corrupt file
+/// yields an empty cache (tuning falls back to a fresh sweep), so a bad
+/// cache can never break a bench or serving start.
+pub struct TuningCache {
+    path: Option<PathBuf>,
+    entries: Vec<Entry>,
+}
+
+pub const CACHE_FORMAT_VERSION: i64 = 1;
+
+impl TuningCache {
+    /// A cache that never touches disk (tests, one-shot runs).
+    pub fn in_memory() -> TuningCache {
+        TuningCache {
+            path: None,
+            entries: Vec::new(),
+        }
+    }
+
+    /// Open (or initialize) a cache file.
+    pub fn open(path: impl Into<PathBuf>) -> TuningCache {
+        let path = path.into();
+        let mut cache = TuningCache {
+            path: Some(path.clone()),
+            entries: Vec::new(),
+        };
+        let Ok(text) = std::fs::read_to_string(&path) else {
+            return cache;
+        };
+        match Json::parse(&text) {
+            Ok(doc) => {
+                if doc.get("version").and_then(|v| v.as_i64()) != Some(CACHE_FORMAT_VERSION) {
+                    eprintln!(
+                        "tuning cache {:?}: unknown version, starting fresh",
+                        path
+                    );
+                    return cache;
+                }
+                for e in doc.get("entries").and_then(|v| v.as_arr()).unwrap_or(&[]) {
+                    let (Some(key), Some(config)) = (CacheKey::from_json(e), e.get("config"))
+                    else {
+                        continue;
+                    };
+                    let time_us = e.get("time_us").and_then(|v| v.as_f64()).unwrap_or(0.0);
+                    cache.entries.push(Entry {
+                        key,
+                        config: config.clone(),
+                        time_us,
+                    });
+                }
+            }
+            Err(err) => {
+                eprintln!("tuning cache {:?}: parse error ({}), starting fresh", path, err);
+            }
+        }
+        cache
+    }
+
+    /// Default cache location: `$TILELANG_TUNE_CACHE` or
+    /// `.tilelang/tune_cache.json` under the working directory.
+    pub fn default_path() -> PathBuf {
+        std::env::var_os("TILELANG_TUNE_CACHE")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| Path::new(".tilelang").join("tune_cache.json"))
+    }
+
+    /// Open the default cache.
+    pub fn open_default() -> TuningCache {
+        TuningCache::open(TuningCache::default_path())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up the stored config for a key.
+    pub fn get(&self, key: &CacheKey) -> Option<&Json> {
+        self.entries
+            .iter()
+            .find(|e| &e.key == key)
+            .map(|e| &e.config)
+    }
+
+    /// The stored model time for a key, if any.
+    pub fn time_us(&self, key: &CacheKey) -> Option<f64> {
+        self.entries.iter().find(|e| &e.key == key).map(|e| e.time_us)
+    }
+
+    /// Insert or replace an entry.
+    pub fn put(&mut self, key: CacheKey, config: Json, time_us: f64) {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.key == key) {
+            e.config = config;
+            e.time_us = time_us;
+        } else {
+            self.entries.push(Entry {
+                key,
+                config,
+                time_us,
+            });
+        }
+    }
+
+    /// Serialize the whole cache document.
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut fields = e.key.to_json_fields();
+                fields.push(("time_us".into(), Json::Num(e.time_us)));
+                fields.push(("config".into(), e.config.clone()));
+                Json::Obj(fields)
+            })
+            .collect();
+        Json::Obj(vec![
+            ("version".into(), Json::Num(CACHE_FORMAT_VERSION as f64)),
+            ("entries".into(), Json::Arr(entries)),
+        ])
+    }
+
+    /// Write the cache back to its file (no-op for in-memory caches).
+    pub fn save(&self) -> Result<(), String> {
+        let Some(path) = &self.path else {
+            return Ok(());
+        };
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .map_err(|e| format!("creating {:?}: {}", parent, e))?;
+            }
+        }
+        std::fs::write(path, self.to_json().dump())
+            .map_err(|e| format!("writing {:?}: {}", path, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(workload: &str) -> CacheKey {
+        CacheKey {
+            workload: workload.into(),
+            shape: vec![128, 256, 64],
+            dtype: "float16".into(),
+            device: "A100-80G".into(),
+            variant: "default".into(),
+        }
+    }
+
+    #[test]
+    fn put_get_replace() {
+        let mut c = TuningCache::in_memory();
+        assert!(c.is_empty());
+        assert!(c.get(&key("gemm")).is_none());
+        c.put(key("gemm"), Json::Num(1.0), 10.0);
+        c.put(key("attn"), Json::Num(2.0), 20.0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&key("gemm")), Some(&Json::Num(1.0)));
+        assert_eq!(c.time_us(&key("attn")), Some(20.0));
+        // replace keeps one entry per key
+        c.put(key("gemm"), Json::Num(3.0), 30.0);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&key("gemm")), Some(&Json::Num(3.0)));
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let mut c = TuningCache::in_memory();
+        c.put(key("gemm"), Json::Num(1.0), 1.0);
+        let mut other_dev = key("gemm");
+        other_dev.device = "H100-SXM".into();
+        let mut other_variant = key("gemm");
+        other_variant.variant = "triton".into();
+        assert!(c.get(&other_dev).is_none());
+        assert!(c.get(&other_variant).is_none());
+    }
+
+    #[test]
+    fn disk_roundtrip_and_corrupt_files() {
+        let dir = std::env::temp_dir().join(format!("tilelang-cache-test-{}", std::process::id()));
+        let path = dir.join("tune_cache.json");
+        let _ = std::fs::remove_file(&path);
+
+        let mut c = TuningCache::open(&path);
+        assert!(c.is_empty());
+        c.put(
+            key("gemm"),
+            Json::Obj(vec![("block_m".into(), Json::Num(128.0))]),
+            42.5,
+        );
+        c.save().expect("save");
+
+        let c2 = TuningCache::open(&path);
+        assert_eq!(c2.len(), 1);
+        let cfg = c2.get(&key("gemm")).expect("hit");
+        assert_eq!(cfg.get("block_m").and_then(|v| v.as_i64()), Some(128));
+        assert_eq!(c2.time_us(&key("gemm")), Some(42.5));
+
+        // corrupt file degrades to an empty cache, not a panic
+        std::fs::write(&path, "{not json").unwrap();
+        let c3 = TuningCache::open(&path);
+        assert!(c3.is_empty());
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

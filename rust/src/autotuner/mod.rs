@@ -1,27 +1,178 @@
 //! Tile-configuration autotuner.
 //!
-//! Sweeps the `TileConfig` search space, scoring each candidate with the
-//! analytical model — the mechanism behind the paper's adaptive-tile
-//! advantage over fixed-configuration libraries (§5.2: FlashAttention-3
-//! "cannot efficiently adapt to varying workload sizes").
+//! The mechanism behind the paper's adaptive-tile advantage over
+//! fixed-configuration libraries (§5.2: FlashAttention-3 "cannot
+//! efficiently adapt to varying workload sizes"), grown into a unified
+//! subsystem:
+//!
+//! * [`Tunable`] — implemented by every workload family (GEMM, flash
+//!   attention, MLA decode, linear attention, dequant-GEMM): enumerates
+//!   candidate configs and builds the `TileProgram` for each;
+//! * [`search::tune`] — one generic, parallel, deterministic search
+//!   driver scoring candidates with `sim::simulate_kernel` (no
+//!   per-workload argmin loops);
+//! * [`cache::TuningCache`] — a persistent JSON cache keyed by
+//!   (workload, shape, dtype, device, variant) so benches, the CLI and
+//!   serving starts reuse tuned configs instead of re-sweeping;
+//! * `Result`-based error handling throughout: infeasible spaces return
+//!   [`TuneError`], never panic.
+//!
+//! See `rust/src/autotuner/README.md` for the API walkthrough and the
+//! cache file format.
+
+pub mod cache;
+pub mod search;
+
+pub use cache::{CacheKey, TuningCache};
+pub use search::tune;
+
+use std::fmt;
 
 use crate::ir::dtype::DType;
+use crate::ir::program::TileProgram;
 use crate::sim::device::Device;
 use crate::sim::model::{simulate_kernel, Penalties, SimReport};
-use crate::workloads::attention::{flash_attention_program, AttnConfig};
-use crate::workloads::matmul::{matmul_program, TileConfig};
-use crate::workloads::shapes::AttnShape;
+use crate::util::json::Json;
+use crate::workloads::attention::{AttentionTunable, AttnConfig, MlaConfig, MlaTunable};
+use crate::workloads::dequant::{DequantConfig, DequantTunable, WeightFormat};
+use crate::workloads::linear_attention::{ChunkKind, LinAttnConfig, LinearAttentionTunable};
+use crate::workloads::matmul::{GemmTunable, TileConfig};
+use crate::workloads::shapes::{AttnShape, LinAttnShape, MlaShape};
 
 /// Result of an autotuning sweep.
 #[derive(Clone, Debug)]
 pub struct TuneResult<C> {
     pub config: C,
     pub report: SimReport,
+    /// Candidates that compiled and were scored during this call.
+    /// `0` when the config came from the cache (no sweep happened).
     pub evaluated: usize,
+    /// True when the config was served from the tuning cache.
+    pub cache_hit: bool,
 }
 
-/// Autotune a GEMM. Candidates that fail to compile (e.g. shared-memory
-/// budget) are skipped, mirroring `tilelang.autotune` behaviour.
+/// Tuning failure: every infeasible search space is an error, not a panic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum TuneError {
+    /// The workload produced no candidates (e.g. no tile divides the shape).
+    EmptySpace { workload: String },
+    /// Candidates existed but none compiled on this device.
+    NoFeasibleConfig { workload: String, candidates: usize },
+}
+
+impl fmt::Display for TuneError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TuneError::EmptySpace { workload } => {
+                write!(f, "{}: empty tuning space for this shape", workload)
+            }
+            TuneError::NoFeasibleConfig {
+                workload,
+                candidates,
+            } => write!(
+                f,
+                "{}: none of {} candidate configs compiled on this device",
+                workload, candidates
+            ),
+        }
+    }
+}
+
+impl std::error::Error for TuneError {}
+
+/// A tile configuration that can be persisted in the tuning cache.
+pub trait TunableConfig: Clone + PartialEq + fmt::Debug + Send + Sync + 'static {
+    fn to_json(&self) -> Json;
+    fn from_json(v: &Json) -> Option<Self>;
+}
+
+/// A workload the generic driver can tune.
+///
+/// Contract: every config returned by [`candidates`](Tunable::candidates)
+/// must satisfy [`accepts`](Tunable::accepts), and `build` must not panic
+/// on accepted configs — device-level feasibility (shared-memory budget,
+/// layout constraints) is checked by compilation inside the driver and
+/// failing candidates are skipped.
+pub trait Tunable: Sync {
+    type Config: TunableConfig;
+
+    /// Stable workload name (cache key component).
+    fn workload(&self) -> &'static str;
+    /// Logical problem-shape signature (cache key component).
+    fn shape_key(&self) -> Vec<i64>;
+    /// Dtype signature (cache key component).
+    fn dtype_key(&self) -> String;
+    /// Structural feasibility of a config for this problem (divisibility,
+    /// packing). Used both to filter the candidate space and to reject
+    /// stale cache entries without panicking.
+    fn accepts(&self, cfg: &Self::Config) -> bool;
+    /// Enumerate the candidate configs (all satisfying `accepts`).
+    fn candidates(&self) -> Vec<Self::Config>;
+    /// Build the tile program for an accepted candidate.
+    fn build(&self, cfg: &Self::Config) -> TileProgram;
+}
+
+/// Stable fingerprint of a penalty model for the cache `variant` key:
+/// baseline sweeps (triton-like, torch-like) must not collide with the
+/// unpenalized tilelang entries.
+pub fn penalties_variant(pen: &Penalties) -> String {
+    let is_default = !pen.scalar_dequant
+        && !pen.no_warp_specialization
+        && pen.forced_bank_conflict <= 1
+        && (pen.overlap_cap - 1.0).abs() < 1e-12;
+    if is_default {
+        "default".to_string()
+    } else {
+        format!(
+            "sd{}-ws{}-bc{}-oc{}",
+            pen.scalar_dequant as u8,
+            pen.no_warp_specialization as u8,
+            pen.forced_bank_conflict,
+            pen.overlap_cap
+        )
+    }
+}
+
+/// Tune with a persistent cache: a hit decodes the stored config and
+/// re-scores only that config (`evaluated == 0`); a miss runs the full
+/// parallel sweep and stores the winner.
+pub fn tune_cached<T: Tunable>(
+    t: &T,
+    dev: &Device,
+    pen: &Penalties,
+    cache: &mut TuningCache,
+) -> Result<TuneResult<T::Config>, TuneError> {
+    let key = CacheKey {
+        workload: t.workload().to_string(),
+        shape: t.shape_key(),
+        dtype: t.dtype_key(),
+        device: dev.name.to_string(),
+        variant: penalties_variant(pen),
+    };
+    if let Some(cfg_json) = cache.get(&key) {
+        if let Some(config) = T::Config::from_json(cfg_json) {
+            if t.accepts(&config) {
+                let prog = t.build(&config);
+                if let Ok(report) = simulate_kernel(&prog, dev, pen) {
+                    return Ok(TuneResult {
+                        config,
+                        report,
+                        evaluated: 0,
+                        cache_hit: true,
+                    });
+                }
+            }
+        }
+        // stale or undecodable entry: fall through to a fresh sweep
+    }
+    let result = search::tune(t, dev, pen)?;
+    cache.put(key, result.config.to_json(), result.report.time_us);
+    Ok(result)
+}
+
+// ---- per-workload convenience wrappers --------------------------------
+
+/// Autotune a GEMM (degenerate dims padded to the 16-wide minimum tile).
 pub fn tune_gemm(
     m: i64,
     n: i64,
@@ -29,83 +180,105 @@ pub fn tune_gemm(
     dtype: DType,
     dev: &Device,
     pen: &Penalties,
-) -> TuneResult<TileConfig> {
-    // pad degenerate dims to the minimum tile the hardware supports
-    let (pm, pn, pk) = (m.max(16), n.max(16), k.max(16));
-    let mut best: Option<(TileConfig, SimReport)> = None;
-    let mut evaluated = 0;
-    for cfg in TileConfig::search_space(pm, pn, pk) {
-        if pm % cfg.block_m != 0 || pn % cfg.block_n != 0 || pk % cfg.block_k != 0 {
-            continue;
-        }
-        let prog = matmul_program(pm, pn, pk, dtype, &cfg);
-        match simulate_kernel(&prog, dev, pen) {
-            Ok(r) => {
-                evaluated += 1;
-                if best.as_ref().map(|(_, b)| r.time_us < b.time_us).unwrap_or(true) {
-                    best = Some((cfg, r));
-                }
-            }
-            Err(_) => continue,
-        }
-    }
-    let (config, report) = best.expect("no feasible GEMM configuration");
-    TuneResult {
-        config,
-        report,
-        evaluated,
-    }
+) -> Result<TuneResult<TileConfig>, TuneError> {
+    search::tune(&GemmTunable::new(m, n, k, dtype), dev, pen)
 }
 
-/// Autotune FlashAttention block sizes.
+/// Cached [`tune_gemm`].
+pub fn tune_gemm_cached(
+    m: i64,
+    n: i64,
+    k: i64,
+    dtype: DType,
+    dev: &Device,
+    pen: &Penalties,
+    cache: &mut TuningCache,
+) -> Result<TuneResult<TileConfig>, TuneError> {
+    tune_cached(&GemmTunable::new(m, n, k, dtype), dev, pen, cache)
+}
+
+/// Autotune FlashAttention block sizes / stages / thread counts.
 pub fn tune_attention(
     s: &AttnShape,
     dev: &Device,
     pen: &Penalties,
-) -> TuneResult<AttnConfig> {
-    let mut best: Option<(AttnConfig, SimReport)> = None;
-    let mut evaluated = 0;
-    for bm in [32i64, 64, 128] {
-        for bn in [32i64, 64, 128] {
-            for stages in [2usize, 3] {
-                if s.seq_len % bm != 0 || s.seq_len % bn != 0 {
-                    continue;
-                }
-                let cfg = AttnConfig {
-                    block_m: bm,
-                    block_n: bn,
-                    num_stages: stages,
-                    threads: 128,
-                };
-                let prog = flash_attention_program(
-                    s.batch * s.heads,
-                    s.seq_len,
-                    s.head_dim,
-                    s.causal,
-                    &cfg,
-                );
-                match simulate_kernel(&prog, dev, pen) {
-                    Ok(r) => {
-                        evaluated += 1;
-                        if best
-                            .as_ref()
-                            .map(|(_, b)| r.time_us < b.time_us)
-                            .unwrap_or(true)
-                        {
-                            best = Some((cfg, r));
-                        }
-                    }
-                    Err(_) => continue,
-                }
-            }
-        }
-    }
-    let (config, report) = best.expect("no feasible attention configuration");
-    TuneResult {
-        config,
-        report,
-        evaluated,
-    }
+) -> Result<TuneResult<AttnConfig>, TuneError> {
+    search::tune(&AttentionTunable { shape: *s }, dev, pen)
+}
+
+/// Cached [`tune_attention`].
+pub fn tune_attention_cached(
+    s: &AttnShape,
+    dev: &Device,
+    pen: &Penalties,
+    cache: &mut TuningCache,
+) -> Result<TuneResult<AttnConfig>, TuneError> {
+    tune_cached(&AttentionTunable { shape: *s }, dev, pen, cache)
+}
+
+/// Autotune the MLA decode kernel (block_h x block_n x stages x staging).
+pub fn tune_mla(
+    s: &MlaShape,
+    dev: &Device,
+    pen: &Penalties,
+) -> Result<TuneResult<MlaConfig>, TuneError> {
+    search::tune(&MlaTunable { shape: *s }, dev, pen)
+}
+
+/// Cached [`tune_mla`].
+pub fn tune_mla_cached(
+    s: &MlaShape,
+    dev: &Device,
+    pen: &Penalties,
+    cache: &mut TuningCache,
+) -> Result<TuneResult<MlaConfig>, TuneError> {
+    tune_cached(&MlaTunable { shape: *s }, dev, pen, cache)
+}
+
+/// Autotune a Mamba-2 chunk kernel (chunk length x stages).
+pub fn tune_linear_attention(
+    kind: ChunkKind,
+    s: &LinAttnShape,
+    dev: &Device,
+    pen: &Penalties,
+) -> Result<TuneResult<LinAttnConfig>, TuneError> {
+    search::tune(&LinearAttentionTunable { kind, shape: *s }, dev, pen)
+}
+
+/// Cached [`tune_linear_attention`].
+pub fn tune_linear_attention_cached(
+    kind: ChunkKind,
+    s: &LinAttnShape,
+    dev: &Device,
+    pen: &Penalties,
+    cache: &mut TuningCache,
+) -> Result<TuneResult<LinAttnConfig>, TuneError> {
+    tune_cached(&LinearAttentionTunable { kind, shape: *s }, dev, pen, cache)
+}
+
+/// Autotune a dequantize-GEMM (decode shapes padded to the 16-row tile).
+pub fn tune_dequant(
+    m: i64,
+    n: i64,
+    k: i64,
+    fmt: WeightFormat,
+    dev: &Device,
+    pen: &Penalties,
+) -> Result<TuneResult<DequantConfig>, TuneError> {
+    search::tune(&DequantTunable::new(m, n, k, fmt), dev, pen)
+}
+
+/// Cached [`tune_dequant`].
+pub fn tune_dequant_cached(
+    m: i64,
+    n: i64,
+    k: i64,
+    fmt: WeightFormat,
+    dev: &Device,
+    pen: &Penalties,
+    cache: &mut TuningCache,
+) -> Result<TuneResult<DequantConfig>, TuneError> {
+    tune_cached(&DequantTunable::new(m, n, k, fmt), dev, pen, cache)
 }
 
 #[cfg(test)]
@@ -116,10 +289,11 @@ mod tests {
     #[test]
     fn gemm_tuner_finds_feasible_configs() {
         let dev = Device::a100();
-        let r = tune_gemm(4096, 1024, 8192, DType::F16, &dev, &Penalties::none());
+        let r = tune_gemm(4096, 1024, 8192, DType::F16, &dev, &Penalties::none()).unwrap();
         assert!(r.evaluated > 5);
         assert!(r.report.time_us > 0.0);
         assert!(r.config.block_m >= 32);
+        assert!(!r.cache_hit);
     }
 
     #[test]
@@ -136,19 +310,170 @@ mod tests {
             head_dim: 128,
             causal: false,
         };
-        let tuned = tune_attention(&tiny, &dev, &Penalties::none());
+        let tuned = tune_attention(&tiny, &dev, &Penalties::none()).unwrap();
         assert!(
             tuned.config.block_m <= 64,
             "tiny workloads should pick small tiles, got {}",
             tuned.config.block_m
         );
         // and the tuned config never loses to the fixed-128 config
-        let fixed = AttnConfig { block_m: 128, block_n: 128, num_stages: 2, threads: 128 };
-        let prog = flash_attention_program(8, 256, 128, false, &fixed);
+        let fixed = AttnConfig {
+            block_m: 128,
+            block_n: 128,
+            num_stages: 2,
+            threads: 128,
+        };
+        let prog = crate::workloads::attention::flash_attention_program(8, 256, 128, false, &fixed);
         let fixed_r = simulate_kernel(&prog, &dev, &Penalties::none()).unwrap();
         assert!(tuned.report.time_us <= fixed_r.time_us * 1.001);
         // long sequences still reach good efficiency
-        let long = tune_attention(&FA_SHAPES[4], &dev, &Penalties::none());
+        let long = tune_attention(&FA_SHAPES[4], &dev, &Penalties::none()).unwrap();
         assert!(long.report.tflops > tuned.report.tflops);
+    }
+
+    #[test]
+    fn infeasible_spaces_are_errors_not_panics() {
+        let dev = Device::a100();
+        // 40 is not divisible by any candidate tile after the 16-pad
+        let r = tune_gemm(40, 40, 40, DType::F16, &dev, &Penalties::none());
+        assert!(matches!(&r, Err(TuneError::EmptySpace { .. })));
+        // attention with a sequence no block divides
+        let odd = AttnShape {
+            name: "odd",
+            batch: 1,
+            heads: 2,
+            seq_len: 40,
+            head_dim: 64,
+            causal: false,
+        };
+        let r = tune_attention(&odd, &dev, &Penalties::none());
+        assert!(matches!(&r, Err(TuneError::EmptySpace { .. })));
+        let err = r.unwrap_err().to_string();
+        assert!(err.contains("empty tuning space"), "{}", err);
+    }
+
+    #[test]
+    fn tuning_is_deterministic_across_runs() {
+        let dev = Device::h100();
+        let a = tune_gemm(1024, 1024, 1024, DType::F16, &dev, &Penalties::none()).unwrap();
+        let b = tune_gemm(1024, 1024, 1024, DType::F16, &dev, &Penalties::none()).unwrap();
+        assert_eq!(a.config, b.config);
+        assert_eq!(a.evaluated, b.evaluated);
+    }
+
+    #[test]
+    fn cache_hit_returns_identical_config_without_reevaluating() {
+        let dev = Device::a100();
+        let mut cache = TuningCache::in_memory();
+        let first =
+            tune_gemm_cached(2048, 1024, 2048, DType::F16, &dev, &Penalties::none(), &mut cache)
+                .unwrap();
+        assert!(first.evaluated > 0);
+        assert!(!first.cache_hit);
+        assert_eq!(cache.len(), 1);
+        let second =
+            tune_gemm_cached(2048, 1024, 2048, DType::F16, &dev, &Penalties::none(), &mut cache)
+                .unwrap();
+        assert_eq!(second.evaluated, 0, "cache hit must not re-sweep");
+        assert!(second.cache_hit);
+        assert_eq!(second.config, first.config);
+        // a different penalty model is a different cache entry
+        let tri = tune_gemm_cached(
+            2048,
+            1024,
+            2048,
+            DType::F16,
+            &dev,
+            &Penalties::triton_like(),
+            &mut cache,
+        )
+        .unwrap();
+        assert!(!tri.cache_hit);
+        assert_eq!(cache.len(), 2);
+    }
+
+    #[test]
+    fn corrupt_cache_entries_fall_back_to_a_fresh_sweep() {
+        let dev = Device::a100();
+        let mut cache = TuningCache::in_memory();
+        // poison the exact key tune_gemm_cached will look up with a
+        // config that would divide-by-zero in lowering if accepted
+        let key = CacheKey {
+            workload: "gemm".into(),
+            shape: vec![512, 512, 512],
+            dtype: "float16".into(),
+            device: dev.name.to_string(),
+            variant: "default".into(),
+        };
+        let mut bad = TileConfig::default_for(512, 512, 512);
+        bad.threads = 0;
+        cache.put(key, bad.to_json(), 1.0);
+        let r = tune_gemm_cached(512, 512, 512, DType::F16, &dev, &Penalties::none(), &mut cache)
+            .unwrap();
+        assert!(!r.cache_hit, "poisoned entry must not be served");
+        assert!(r.evaluated > 0);
+        assert!(r.config.threads > 0);
+    }
+
+    #[test]
+    fn cache_persists_across_open() {
+        let dir = std::env::temp_dir().join(format!("tilelang-tuner-test-{}", std::process::id()));
+        let path = dir.join("cache.json");
+        let _ = std::fs::remove_file(&path);
+        let dev = Device::a100();
+        let shape = FA_SHAPES[0];
+
+        let mut cache = TuningCache::open(&path);
+        let first = tune_attention_cached(&shape, &dev, &Penalties::none(), &mut cache).unwrap();
+        assert!(first.evaluated > 0);
+        cache.save().expect("save");
+
+        let mut cache2 = TuningCache::open(&path);
+        assert_eq!(cache2.len(), 1);
+        let second = tune_attention_cached(&shape, &dev, &Penalties::none(), &mut cache2).unwrap();
+        assert_eq!(second.evaluated, 0);
+        assert!(second.cache_hit);
+        assert_eq!(second.config, first.config);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn all_workload_families_tune_through_one_driver() {
+        let dev = Device::h100();
+        let pen = Penalties::none();
+        let dq = tune_dequant(16, 256, 256, WeightFormat::Int4, &dev, &pen).unwrap();
+        assert!(dq.evaluated > 0);
+        let lin_shape = LinAttnShape {
+            name: "t",
+            batch: 1,
+            nheads: 4,
+            seq_len: 512,
+            head_dim: 64,
+            d_state: 128,
+        };
+        for kind in [ChunkKind::State, ChunkKind::Scan] {
+            let r = tune_linear_attention(kind, &lin_shape, &dev, &pen).unwrap();
+            assert!(r.evaluated > 0);
+            assert!(lin_shape.seq_len % r.config.chunk == 0);
+        }
+        let mla_shape = MlaShape {
+            batch: 2,
+            heads: 32,
+            seqlen_kv: 256,
+            dim: 128,
+            pe_dim: 64,
+        };
+        let r = tune_mla(&mla_shape, &dev, &pen).unwrap();
+        assert!(r.evaluated > 0);
+        assert!(mla_shape.heads % r.config.block_h == 0);
+    }
+
+    #[test]
+    fn penalty_variants_have_distinct_cache_keys() {
+        assert_eq!(penalties_variant(&Penalties::none()), "default");
+        let tri = penalties_variant(&Penalties::triton_like());
+        let tor = penalties_variant(&Penalties::torch_like());
+        assert_ne!(tri, "default");
+        assert_ne!(tri, tor);
     }
 }

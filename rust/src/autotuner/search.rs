@@ -1,0 +1,89 @@
+//! The generic parallel search driver.
+//!
+//! One argmin loop for every workload family: candidates come from a
+//! [`Tunable`](super::Tunable), each is built into a `TileProgram`,
+//! compiled and scored with the analytical model (`sim::simulate_kernel`)
+//! across a pool of std threads, and the fastest feasible candidate wins.
+//! Candidates that fail to compile (shared-memory budget, layout
+//! constraints) are skipped — mirroring `tilelang.autotune`. The result
+//! is deterministic regardless of thread count: scores are collected per
+//! candidate index and reduced sequentially, ties broken by the lower
+//! index.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::sim::device::Device;
+use crate::sim::model::{simulate_kernel, Penalties, SimReport};
+
+use super::{TuneError, TuneResult, Tunable};
+
+/// Score every candidate of `t` and return the fastest feasible one.
+///
+/// Never panics on infeasible spaces: an empty candidate set or a space
+/// where no candidate compiles surfaces as a [`TuneError`].
+pub fn tune<T: Tunable>(
+    t: &T,
+    dev: &Device,
+    pen: &Penalties,
+) -> Result<TuneResult<T::Config>, TuneError> {
+    let cands = t.candidates();
+    if cands.is_empty() {
+        return Err(TuneError::EmptySpace {
+            workload: t.workload().to_string(),
+        });
+    }
+    let n = cands.len();
+    let workers = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(n)
+        .max(1);
+
+    // Each worker claims candidate indices from a shared counter, builds
+    // the program locally (`TileProgram` holds `Rc` expressions and is
+    // not `Send`; configs are), and writes its score into a fixed slot.
+    let next = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<SimReport>>> = Mutex::new(vec![None; n]);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let prog = t.build(&cands[i]);
+                let report = simulate_kernel(&prog, dev, pen).ok();
+                slots.lock().unwrap()[i] = report;
+            });
+        }
+    });
+    let results = slots.into_inner().unwrap();
+
+    let mut evaluated = 0usize;
+    let mut best: Option<(usize, SimReport)> = None;
+    for (i, r) in results.into_iter().enumerate() {
+        if let Some(r) = r {
+            evaluated += 1;
+            let better = best
+                .as_ref()
+                .map(|(_, b)| r.time_us < b.time_us)
+                .unwrap_or(true);
+            if better {
+                best = Some((i, r));
+            }
+        }
+    }
+    match best {
+        Some((i, report)) => Ok(TuneResult {
+            config: cands[i].clone(),
+            report,
+            evaluated,
+            cache_hit: false,
+        }),
+        None => Err(TuneError::NoFeasibleConfig {
+            workload: t.workload().to_string(),
+            candidates: n,
+        }),
+    }
+}

@@ -15,8 +15,8 @@ use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
-
+use crate::anyhow;
+use crate::error::Result;
 use crate::runtime::Runtime;
 
 /// A raw kernel invocation result.
@@ -288,15 +288,8 @@ fn batched_worker(dir: PathBuf, kernel: String, policy: BatchPolicy, rx: Receive
         // assemble the batch (zero-pad unused slots)
         let rows = std::mem::take(&mut pending);
         let n = rows.len();
-        let mut batch = vec![0f32; batch_shape[0] as usize * row_len];
-        let mut bad = Vec::new();
-        for (i, (row, _, _)) in rows.iter().enumerate() {
-            if row.len() != row_len {
-                bad.push(i);
-                continue;
-            }
-            batch[i * row_len..(i + 1) * row_len].copy_from_slice(row);
-        }
+        let row_refs: Vec<&[f32]> = rows.iter().map(|(r, _, _)| r.as_slice()).collect();
+        let (batch, bad) = assemble_batch(&row_refs, row_len, batch_shape[0] as usize);
         let mut inputs = vec![batch];
         inputs.extend(weights.iter().cloned());
         let result = loaded.execute(&inputs).map_err(|e| e.to_string());
@@ -340,6 +333,29 @@ fn drain_with_error(rx: &Receiver<Job>, msg: &str) {
     }
 }
 
+/// Assemble pending rows into one zero-padded batch tensor of
+/// `capacity * row_len` values. Rows beyond `capacity` are ignored (the
+/// worker never collects more than `max_batch`); rows whose length does
+/// not match `row_len` are skipped and reported in the second return
+/// value so the worker can reply with a per-row error instead of
+/// corrupting the batch.
+pub fn assemble_batch(
+    rows: &[&[f32]],
+    row_len: usize,
+    capacity: usize,
+) -> (Vec<f32>, Vec<usize>) {
+    let mut batch = vec![0f32; capacity * row_len];
+    let mut bad = Vec::new();
+    for (i, row) in rows.iter().enumerate().take(capacity) {
+        if row.len() != row_len {
+            bad.push(i);
+            continue;
+        }
+        batch[i * row_len..(i + 1) * row_len].copy_from_slice(row);
+    }
+    (batch, bad)
+}
+
 /// Latency percentile helper for serving reports.
 pub fn percentile(sorted_us: &[u128], p: f64) -> u128 {
     if sorted_us.is_empty() {
@@ -351,7 +367,7 @@ pub fn percentile(sorted_us: &[u128], p: f64) -> u128 {
 
 #[cfg(test)]
 mod tests {
-    use super::percentile;
+    use super::{assemble_batch, percentile};
 
     #[test]
     fn percentile_basics() {
@@ -360,5 +376,65 @@ mod tests {
         assert_eq!(percentile(&v, 99.0), 100);
         assert_eq!(percentile(&v, 0.0), 1);
         assert_eq!(percentile(&[], 50.0), 0);
+    }
+
+    #[test]
+    fn percentile_boundary_cases() {
+        // single element: every percentile is that element
+        let one = [7u128];
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(percentile(&one, p), 7);
+        }
+        // two elements: the midpoint rounds to the upper rank
+        let two = [10u128, 20];
+        assert_eq!(percentile(&two, 0.0), 10);
+        assert_eq!(percentile(&two, 49.0), 10);
+        assert_eq!(percentile(&two, 50.0), 20);
+        assert_eq!(percentile(&two, 100.0), 20);
+        // p beyond 100 clamps to the max instead of panicking
+        assert_eq!(percentile(&two, 250.0), 20);
+        // p100 is exactly the max, never out of bounds
+        let v = [1u128, 2, 3, 4, 5, 6, 7, 8, 9];
+        assert_eq!(percentile(&v, 100.0), 9);
+        assert_eq!(percentile(&v, 25.0), 3);
+    }
+
+    #[test]
+    fn assemble_batch_zero_pads_unused_slots() {
+        let r0 = [1.0f32, 2.0];
+        let r1 = [3.0f32, 4.0];
+        let rows: Vec<&[f32]> = vec![&r0, &r1];
+        let (batch, bad) = assemble_batch(&rows, 2, 4);
+        assert!(bad.is_empty());
+        assert_eq!(batch, vec![1.0, 2.0, 3.0, 4.0, 0.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn assemble_batch_rejects_wrong_row_lengths() {
+        let ok = [1.0f32, 2.0, 3.0];
+        let short = [9.0f32];
+        let long = [9.0f32, 9.0, 9.0, 9.0];
+        let ok2 = [4.0f32, 5.0, 6.0];
+        let rows: Vec<&[f32]> = vec![&ok, &short, &long, &ok2];
+        let (batch, bad) = assemble_batch(&rows, 3, 4);
+        assert_eq!(bad, vec![1, 2]);
+        // good rows land in their slots; bad slots stay zeroed
+        assert_eq!(&batch[0..3], &[1.0, 2.0, 3.0]);
+        assert_eq!(&batch[3..6], &[0.0, 0.0, 0.0]);
+        assert_eq!(&batch[6..9], &[0.0, 0.0, 0.0]);
+        assert_eq!(&batch[9..12], &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn assemble_batch_empty_and_overflow() {
+        let (batch, bad) = assemble_batch(&[], 3, 2);
+        assert_eq!(batch, vec![0.0; 6]);
+        assert!(bad.is_empty());
+        // rows beyond capacity are ignored, not panicked on
+        let r = [1.0f32];
+        let rows: Vec<&[f32]> = vec![&r, &r, &r];
+        let (batch, bad) = assemble_batch(&rows, 1, 2);
+        assert_eq!(batch, vec![1.0, 1.0]);
+        assert!(bad.is_empty());
     }
 }

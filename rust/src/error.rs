@@ -1,0 +1,118 @@
+//! Minimal error plumbing for the runtime/coordinator layers.
+//!
+//! The offline vendor set has no `anyhow`; this module provides the small
+//! subset the crate uses: a string-backed `Error`, a `Result` alias, the
+//! `anyhow!` / `bail!` macros and a `Context` extension trait.
+
+use std::fmt;
+
+/// A boxed, message-carrying error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error(String);
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Error {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Error {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `anyhow::Context`-style helpers for any displayable error type.
+pub trait Context<T> {
+    fn context(self, msg: &str) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {}", msg, e)))
+    }
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {}", f(), e)))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: &str) -> Result<T> {
+        self.ok_or_else(|| Error(msg.to_string()))
+    }
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_and_context() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        let r: std::result::Result<(), std::io::Error> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        let c = r.context("opening file");
+        assert!(c.unwrap_err().to_string().starts_with("opening file: "));
+        let n: Option<i32> = None;
+        assert_eq!(n.context("empty").unwrap_err().to_string(), "empty");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(fail: bool) -> Result<i32> {
+            if fail {
+                bail!("code {}", 7);
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "code 7");
+        let e = anyhow!("x={}", 3);
+        assert_eq!(e.to_string(), "x=3");
+    }
+}

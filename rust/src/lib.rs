@@ -12,6 +12,7 @@
 pub mod autotuner;
 pub mod baselines;
 pub mod coordinator;
+pub mod error;
 pub mod ir;
 pub mod layout;
 pub mod passes;
@@ -19,6 +20,7 @@ pub mod report;
 pub mod runtime;
 pub mod sim;
 pub mod tir;
+pub mod util;
 pub mod workloads;
 
 pub fn version() -> &'static str {

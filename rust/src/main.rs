@@ -5,21 +5,32 @@
 //!   artifacts [--dir D]             list AOT artifacts + golden check
 //!   compile --kernel K --device D   compile a workload, print report
 //!   simulate --kernel K --device D  compile + simulate across baselines
+//!   tune --kernel K --device D      autotune a workload (persistent cache)
 //!   run --artifact NAME [--dir D]   execute an artifact via PJRT
+//!
+//! `compile`/`simulate` accept `--tune` to pick the tile configuration
+//! via the autotuner (served from the tuning cache when warm) instead of
+//! the static defaults. `--cache PATH` overrides the cache location,
+//! `--no-cache` forces a fresh sweep.
 //!
 //! (Hand-rolled argument parsing: the offline environment has no clap.)
 
 use std::collections::HashMap;
 
+use tilelang::autotuner::{tune_cached, TuneResult, Tunable, TuningCache};
 use tilelang::ir::dtype::DType;
 use tilelang::passes::lower::{compile, CompileOptions};
 use tilelang::report::fmt_us;
 use tilelang::runtime::Runtime;
 use tilelang::sim::device::Device;
 use tilelang::sim::model::{estimate, Penalties};
-use tilelang::workloads::attention::{flash_attention_program, AttnConfig};
-use tilelang::workloads::dequant::{dequant_matmul_program, DequantConfig, WeightFormat};
-use tilelang::workloads::matmul::{matmul_program, TileConfig};
+use tilelang::workloads::attention::{
+    flash_attention_program, AttentionTunable, AttnConfig, MlaTunable,
+};
+use tilelang::workloads::dequant::{dequant_matmul_program, DequantConfig, DequantTunable, WeightFormat};
+use tilelang::workloads::linear_attention::{ChunkKind, LinearAttentionTunable};
+use tilelang::workloads::matmul::{matmul_program, GemmTunable, TileConfig};
+use tilelang::workloads::shapes::{AttnShape, LinAttnShape, MlaShape};
 
 fn parse_flags(args: &[String]) -> HashMap<String, String> {
     let mut out = HashMap::new();
@@ -40,31 +51,126 @@ fn parse_flags(args: &[String]) -> HashMap<String, String> {
     out
 }
 
-fn build_kernel(name: &str, flags: &HashMap<String, String>) -> tilelang::ir::program::TileProgram {
-    let get = |k: &str, d: i64| -> i64 {
-        flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
-    };
+fn geti(flags: &HashMap<String, String>, k: &str, d: i64) -> i64 {
+    flags.get(k).and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn open_cache(flags: &HashMap<String, String>) -> TuningCache {
+    if flags.contains_key("no-cache") {
+        TuningCache::in_memory()
+    } else if let Some(path) = flags.get("cache") {
+        TuningCache::open(path)
+    } else {
+        TuningCache::open_default()
+    }
+}
+
+fn die(msg: &str) -> ! {
+    eprintln!("{}", msg);
+    std::process::exit(1)
+}
+
+/// Tune one workload through the generic driver + cache, printing the
+/// decision, and return the program built from the chosen config.
+fn tuned_program<T: Tunable>(
+    t: &T,
+    dev: &Device,
+    cache: &mut TuningCache,
+) -> tilelang::ir::program::TileProgram {
+    match tune_cached(t, dev, &Penalties::none(), cache) {
+        Ok(r) => {
+            print_tune_result(t.workload(), &r);
+            t.build(&r.config)
+        }
+        Err(e) => die(&format!("tuning failed: {}", e)),
+    }
+}
+
+fn print_tune_result<C: std::fmt::Debug>(workload: &str, r: &TuneResult<C>) {
+    println!(
+        "tuned {}: {:?}  ({} in {}; {} candidates evaluated)",
+        workload,
+        r.config,
+        fmt_us(r.report.time_us),
+        if r.cache_hit { "cache hit" } else { "fresh sweep" },
+        r.evaluated
+    );
+}
+
+/// Build a workload program; `tune` selects the config via the cached
+/// autotuner, otherwise the static defaults are used.
+fn build_kernel(
+    name: &str,
+    flags: &HashMap<String, String>,
+    dev: &Device,
+    tune: bool,
+    cache: &mut TuningCache,
+) -> tilelang::ir::program::TileProgram {
     match name {
         "gemm" => {
-            let (m, n, k) = (get("m", 4096), get("n", 4096), get("k", 4096));
-            matmul_program(m, n, k, DType::F16, &TileConfig::default_for(m, n, k))
+            let (m, n, k) = (geti(flags, "m", 4096), geti(flags, "n", 4096), geti(flags, "k", 4096));
+            if tune {
+                tuned_program(&GemmTunable::new(m, n, k, DType::F16), dev, cache)
+            } else {
+                matmul_program(m, n, k, DType::F16, &TileConfig::default_for(m, n, k))
+            }
         }
         "flash_attention" => {
-            let (bh, s, d) = (get("bh", 32), get("seq", 1024), get("d", 128));
-            flash_attention_program(
-                bh,
-                s,
-                d,
-                flags.contains_key("causal"),
-                &AttnConfig::default_for(s),
-            )
+            let (bh, s, d) = (geti(flags, "bh", 32), geti(flags, "seq", 1024), geti(flags, "d", 128));
+            let causal = flags.contains_key("causal");
+            if tune {
+                let shape = AttnShape {
+                    name: "cli",
+                    batch: 1,
+                    heads: bh,
+                    seq_len: s,
+                    head_dim: d,
+                    causal,
+                };
+                tuned_program(&AttentionTunable { shape }, dev, cache)
+            } else {
+                flash_attention_program(bh, s, d, causal, &AttnConfig::default_for(s))
+            }
         }
         "dequant" => {
-            let (m, n, k) = (get("m", 16), get("n", 4096), get("k", 4096));
-            dequant_matmul_program(m, n, k, WeightFormat::Int4, &DequantConfig::default())
+            let (m, n, k) = (geti(flags, "m", 16), geti(flags, "n", 4096), geti(flags, "k", 4096));
+            if tune {
+                tuned_program(&DequantTunable::new(m, n, k, WeightFormat::Int4), dev, cache)
+            } else {
+                dequant_matmul_program(m.max(16), n, k, WeightFormat::Int4, &DequantConfig::default())
+            }
+        }
+        "mla" => {
+            let shape = MlaShape {
+                batch: geti(flags, "batch", 64),
+                heads: geti(flags, "heads", 128),
+                seqlen_kv: geti(flags, "seq-kv", 8192),
+                dim: geti(flags, "dim", 512),
+                pe_dim: geti(flags, "pe", 64),
+            };
+            tuned_program(&MlaTunable { shape }, dev, cache)
+        }
+        "chunk_scan" | "chunk_state" => {
+            let shape = LinAttnShape {
+                name: "cli",
+                batch: geti(flags, "batch", 1),
+                nheads: geti(flags, "heads", 64),
+                seq_len: geti(flags, "seq", 2048),
+                head_dim: geti(flags, "d", 64),
+                d_state: geti(flags, "dstate", 128),
+            };
+            let kind = if name == "chunk_state" {
+                ChunkKind::State
+            } else {
+                ChunkKind::Scan
+            };
+            tuned_program(&LinearAttentionTunable { kind, shape }, dev, cache)
         }
         other => {
-            eprintln!("unknown kernel {} (gemm|flash_attention|dequant)", other);
+            eprintln!(
+                "unknown kernel {} (gemm|flash_attention|dequant|mla|chunk_scan|chunk_state)",
+                other
+            );
             std::process::exit(2);
         }
     }
@@ -106,11 +212,25 @@ fn main() {
                     }
                 }
             }
-            Err(e) => {
-                eprintln!("{}", e);
-                std::process::exit(1);
-            }
+            Err(e) => die(&e.to_string()),
         },
+        "tune" => {
+            let kernel = flags.get("kernel").map(|s| s.as_str()).unwrap_or("gemm");
+            let dev = Device::by_name(flags.get("device").map(|s| s.as_str()).unwrap_or("h100"))
+                .unwrap_or_else(|| {
+                    eprintln!("unknown device");
+                    std::process::exit(2);
+                });
+            let mut cache = open_cache(&flags);
+            // every workload prints its decision inside build_kernel;
+            // spaces with no feasible candidate exit with an error
+            let _ = build_kernel(kernel, &flags, &dev, true, &mut cache);
+            if let Err(e) = cache.save() {
+                eprintln!("warning: could not persist tuning cache: {}", e);
+            } else if !flags.contains_key("no-cache") {
+                println!("cache: {} entries", cache.len());
+            }
+        }
         "compile" | "simulate" => {
             let kernel = flags.get("kernel").map(|s| s.as_str()).unwrap_or("gemm");
             let dev = Device::by_name(flags.get("device").map(|s| s.as_str()).unwrap_or("h100"))
@@ -118,13 +238,20 @@ fn main() {
                     eprintln!("unknown device");
                     std::process::exit(2);
                 });
-            let prog = build_kernel(kernel, &flags);
+            let tune = flags.contains_key("tune");
+            let mut cache = open_cache(&flags);
+            let prog = build_kernel(kernel, &flags, &dev, tune, &mut cache);
+            // mla/chunk kernels always go through the tuner, so their
+            // sweep results must persist even without --tune
+            let tuner_ran = tune || matches!(kernel, "mla" | "chunk_scan" | "chunk_state");
+            if tuner_ran {
+                if let Err(e) = cache.save() {
+                    eprintln!("warning: could not persist tuning cache: {}", e);
+                }
+            }
             let lowered = match compile(&prog, &dev, &CompileOptions::default()) {
                 Ok(l) => l,
-                Err(e) => {
-                    eprintln!("compile error: {}", e);
-                    std::process::exit(1);
-                }
+                Err(e) => die(&format!("compile error: {}", e)),
             };
             let c = lowered.stmt_counts();
             println!("kernel {} on {}:", prog.name, dev.name);
@@ -188,18 +315,16 @@ fn main() {
                         &out[..4.min(out.len())]
                     );
                 }
-                Err(e) => {
-                    eprintln!("run failed: {}", e);
-                    std::process::exit(1);
-                }
+                Err(e) => die(&format!("run failed: {}", e)),
             }
         }
         _ => {
             println!(
                 "tilelang {} — composable tiled programming model (reproduction)\n\
-                 usage: tilelang <devices|artifacts|compile|simulate|run> [--flags]\n\
+                 usage: tilelang <devices|artifacts|compile|simulate|tune|run> [--flags]\n\
                  examples:\n\
-                 \u{20}  tilelang simulate --kernel gemm --device a100 --m 4096 --n 4096 --k 4096\n\
+                 \u{20}  tilelang simulate --kernel gemm --device a100 --m 4096 --n 4096 --k 4096 --tune\n\
+                 \u{20}  tilelang tune --kernel flash_attention --device h100 --seq 4096\n\
                  \u{20}  tilelang artifacts --dir artifacts\n\
                  \u{20}  tilelang run --artifact transformer_block",
                 tilelang::version()

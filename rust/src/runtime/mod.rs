@@ -6,13 +6,24 @@
 //! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
 //! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`,
 //! with `return_tuple=True` artifacts unwrapped via `to_tuple1`.
+//!
+//! The PJRT execution backend is gated behind the `pjrt` cargo feature
+//! (it needs the vendored `xla` crate, absent from the offline vendor
+//! set). Without it the runtime still parses manifests, goldens and
+//! example inputs — everything the coordinator and CLI need for
+//! bookkeeping — but `load`/`execute` return an error. Check
+//! [`Runtime::has_execution_backend`] before relying on execution.
+//! (Re-enabling the feature also needs a `From<xla::Error>` impl for
+//! `error::Error` so the gated `?` conversions resolve.)
 
 use std::collections::HashMap;
 use std::fs;
 use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::error::{Context, Result};
+use crate::{anyhow, bail};
 
 /// Parsed manifest entry for one artifact.
 #[derive(Clone, Debug)]
@@ -39,11 +50,13 @@ pub struct Golden {
 /// A compiled, executable artifact.
 pub struct LoadedKernel {
     pub spec: ArtifactSpec,
+    #[cfg(feature = "pjrt")]
     exe: xla::PjRtLoadedExecutable,
 }
 
 impl LoadedKernel {
     /// Execute with row-major f32 inputs.
+    #[cfg(feature = "pjrt")]
     pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
         if inputs.len() != self.spec.in_shapes.len() {
             bail!(
@@ -77,14 +90,26 @@ impl LoadedKernel {
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
     }
+
+    /// Execute with row-major f32 inputs (stub: no backend in this build).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute(&self, _inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        bail!(
+            "{}: this build has no PJRT backend (enable the `pjrt` feature \
+             and supply the vendored `xla` crate)",
+            self.spec.name
+        )
+    }
 }
 
 /// The artifact registry + PJRT client + compile cache.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     dir: PathBuf,
     specs: HashMap<String, ArtifactSpec>,
     goldens: HashMap<String, Golden>,
+    #[cfg(feature = "pjrt")]
     cache: Mutex<HashMap<String, std::sync::Arc<LoadedKernel>>>,
 }
 
@@ -93,6 +118,11 @@ fn parse_shape(s: &str) -> Vec<i64> {
 }
 
 impl Runtime {
+    /// True when this build can execute artifacts (PJRT linked in).
+    pub fn has_execution_backend() -> bool {
+        cfg!(feature = "pjrt")
+    }
+
     /// Open the artifacts directory (built by `make artifacts`).
     pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
@@ -146,10 +176,12 @@ impl Runtime {
             }
         }
         Ok(Runtime {
+            #[cfg(feature = "pjrt")]
             client: xla::PjRtClient::cpu().map_err(|e| anyhow!("{:?}", e))?,
             dir,
             specs,
             goldens,
+            #[cfg(feature = "pjrt")]
             cache: Mutex::new(HashMap::new()),
         })
     }
@@ -167,6 +199,7 @@ impl Runtime {
     }
 
     /// Load (compile) an artifact; cached.
+    #[cfg(feature = "pjrt")]
     pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedKernel>> {
         if let Some(k) = self.cache.lock().unwrap().get(name) {
             return Ok(k.clone());
@@ -185,6 +218,17 @@ impl Runtime {
             .unwrap()
             .insert(name.to_string(), k.clone());
         Ok(k)
+    }
+
+    /// Load (compile) an artifact (stub: no backend in this build).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedKernel>> {
+        let _ = self.spec(name)?;
+        bail!(
+            "cannot load {}: this build has no PJRT backend (enable the \
+             `pjrt` feature and supply the vendored `xla` crate)",
+            name
+        )
     }
 
     /// Convenience: load + execute.
@@ -236,5 +280,41 @@ impl Runtime {
             max_err = max_err.max((out[i] - v).abs());
         }
         Ok(max_err)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parsing_and_spec_lookup() {
+        let dir = std::env::temp_dir().join(format!("tilelang-rt-test-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "matmul_128\tmatmul_128.hlo\tin=128x64,64x128\tout=128x128\n",
+        )
+        .unwrap();
+        let rt = Runtime::new(&dir).expect("runtime opens without a backend");
+        assert_eq!(rt.artifact_names(), vec!["matmul_128".to_string()]);
+        let spec = rt.spec("matmul_128").unwrap();
+        assert_eq!(spec.in_shapes, vec![vec![128, 64], vec![64, 128]]);
+        assert_eq!(spec.out_len(), 128 * 128);
+        assert!(rt.spec("nope").is_err());
+        if !Runtime::has_execution_backend() {
+            let err = rt.execute("matmul_128", &[]).unwrap_err().to_string();
+            assert!(err.contains("pjrt"), "{}", err);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_manifest_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("tilelang-rt-bad-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), "only two\tcolumns\n").unwrap();
+        assert!(Runtime::new(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

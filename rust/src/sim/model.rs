@@ -396,14 +396,22 @@ fn walk(
     }
 }
 
-/// Convenience: compile + simulate a program variant, mapping grid
-/// extents that depend on dynamic vars is unsupported (specialize first).
+/// Convenience: compile + simulate a program variant. Grid extents that
+/// depend on dynamic vars are unsupported — that surfaces as an `Err`
+/// (specialize first), not a panic, so autotuner sweeps can skip such
+/// candidates.
 pub fn simulate_kernel(
     prog: &crate::ir::program::TileProgram,
     dev: &Device,
     pen: &Penalties,
 ) -> Result<SimReport, String> {
     let lowered = crate::passes::lower::compile(prog, dev, &Default::default())?;
+    if lowered.static_grid().is_none() {
+        return Err(format!(
+            "{}: simulation requires a static grid (specialize dynamic shapes first)",
+            prog.name
+        ));
+    }
     Ok(estimate(&lowered, dev, pen))
 }
 

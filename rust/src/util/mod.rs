@@ -1,0 +1,4 @@
+//! Dependency-free utility modules (the offline vendor set has no
+//! serde/anyhow-class crates; see DESIGN.md dependency note).
+
+pub mod json;

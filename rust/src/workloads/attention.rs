@@ -6,10 +6,13 @@
 //! `T.Parallel` bodies, and the S-tile staged through shared memory
 //! between the two GEMMs.
 
+use crate::autotuner::{Tunable, TunableConfig};
 use crate::ir::builder::{store, KernelBuilder};
 use crate::ir::dtype::DType;
 use crate::ir::expr::{Expr, UnOp};
 use crate::ir::program::{GemmWarpPolicy, ReduceKind, TileProgram};
+use crate::util::json::Json;
+use crate::workloads::shapes::{AttnShape, MlaShape};
 
 /// Attention tile configuration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -307,6 +310,191 @@ pub fn mla_program_opts(
         t.copy_out(acc_o, out, vec![bx.expr(), by.expr() * block_h, Expr::int(0)]);
     }
     t.finish()
+}
+
+impl TunableConfig for AttnConfig {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("block_m".into(), Json::Num(self.block_m as f64)),
+            ("block_n".into(), Json::Num(self.block_n as f64)),
+            ("num_stages".into(), Json::Num(self.num_stages as f64)),
+            ("threads".into(), Json::Num(self.threads as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<AttnConfig> {
+        Some(AttnConfig {
+            block_m: v.get("block_m")?.as_i64()?,
+            block_n: v.get("block_n")?.as_i64()?,
+            num_stages: v.get("num_stages")?.as_i64()?.max(1) as usize,
+            threads: v.get("threads")?.as_i64()?,
+        })
+    }
+}
+
+/// FlashAttention tuning problem over one Table 3 shape.
+#[derive(Clone, Copy, Debug)]
+pub struct AttentionTunable {
+    pub shape: AttnShape,
+}
+
+impl Tunable for AttentionTunable {
+    type Config = AttnConfig;
+
+    fn workload(&self) -> &'static str {
+        "flash_attention"
+    }
+
+    fn shape_key(&self) -> Vec<i64> {
+        let s = &self.shape;
+        vec![s.batch, s.heads, s.seq_len, s.head_dim, s.causal as i64]
+    }
+
+    fn dtype_key(&self) -> String {
+        DType::F16.to_string()
+    }
+
+    fn accepts(&self, cfg: &AttnConfig) -> bool {
+        cfg.block_m > 0
+            && cfg.block_n > 0
+            && cfg.threads % 32 == 0
+            && cfg.threads > 0
+            && self.shape.seq_len % cfg.block_m == 0
+            && self.shape.seq_len % cfg.block_n == 0
+    }
+
+    fn candidates(&self) -> Vec<AttnConfig> {
+        let mut out = Vec::new();
+        for bm in [32i64, 64, 128] {
+            for bn in [32i64, 64, 128] {
+                for stages in [2usize, 3] {
+                    // thread count is part of the space: short sequences
+                    // on small blocks keep 128, saturated shapes can use
+                    // a second warp-group (the IR supports any multiple
+                    // of the warp size)
+                    for threads in [128i64, 256] {
+                        let cfg = AttnConfig {
+                            block_m: bm,
+                            block_n: bn,
+                            num_stages: stages,
+                            threads,
+                        };
+                        if self.accepts(&cfg) {
+                            out.push(cfg);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn build(&self, cfg: &AttnConfig) -> TileProgram {
+        let s = &self.shape;
+        flash_attention_program(s.batch * s.heads, s.seq_len, s.head_dim, s.causal, cfg)
+    }
+}
+
+/// MLA decode tile configuration (Fig. 14 knobs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MlaConfig {
+    pub block_h: i64,
+    pub block_n: i64,
+    pub num_stages: usize,
+    /// Stage the output tile through shared memory before the final
+    /// copy-out (saves global traffic; costs `block_h * dim` smem bytes).
+    pub stage_output: bool,
+}
+
+impl TunableConfig for MlaConfig {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("block_h".into(), Json::Num(self.block_h as f64)),
+            ("block_n".into(), Json::Num(self.block_n as f64)),
+            ("num_stages".into(), Json::Num(self.num_stages as f64)),
+            ("stage_output".into(), Json::Bool(self.stage_output)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<MlaConfig> {
+        Some(MlaConfig {
+            block_h: v.get("block_h")?.as_i64()?,
+            block_n: v.get("block_n")?.as_i64()?,
+            num_stages: v.get("num_stages")?.as_i64()?.max(1) as usize,
+            stage_output: v.get("stage_output")?.as_bool()?,
+        })
+    }
+}
+
+/// MLA decode tuning problem (Fig. 14 geometry). Device feasibility
+/// (e.g. MI300X's 64KB LDS rejecting wide double-buffered tiles) is
+/// discovered by compilation — infeasible candidates are skipped, so
+/// the same space adapts per device, which is exactly the paper's
+/// H100-vs-MI300X configuration split.
+#[derive(Clone, Copy, Debug)]
+pub struct MlaTunable {
+    pub shape: MlaShape,
+}
+
+impl Tunable for MlaTunable {
+    type Config = MlaConfig;
+
+    fn workload(&self) -> &'static str {
+        "mla_decode"
+    }
+
+    fn shape_key(&self) -> Vec<i64> {
+        let s = &self.shape;
+        vec![s.batch, s.heads, s.seqlen_kv, s.dim, s.pe_dim]
+    }
+
+    fn dtype_key(&self) -> String {
+        DType::F16.to_string()
+    }
+
+    fn accepts(&self, cfg: &MlaConfig) -> bool {
+        cfg.block_h > 0
+            && cfg.block_n > 0
+            && self.shape.heads % cfg.block_h == 0
+            && self.shape.seqlen_kv % cfg.block_n == 0
+    }
+
+    fn candidates(&self) -> Vec<MlaConfig> {
+        let mut out = Vec::new();
+        for block_h in [16i64, 32, 64] {
+            for block_n in [16i64, 32, 64] {
+                for stages in [1usize, 2] {
+                    for stage_output in [true, false] {
+                        let cfg = MlaConfig {
+                            block_h,
+                            block_n,
+                            num_stages: stages,
+                            stage_output,
+                        };
+                        if self.accepts(&cfg) {
+                            out.push(cfg);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn build(&self, cfg: &MlaConfig) -> TileProgram {
+        let s = &self.shape;
+        mla_program_opts(
+            s.batch,
+            s.heads,
+            s.seqlen_kv,
+            s.dim,
+            s.pe_dim,
+            cfg.block_h,
+            cfg.block_n,
+            cfg.num_stages,
+            cfg.stage_output,
+        )
+    }
 }
 
 /// Reference attention in f32 (supports causal masking).

@@ -8,10 +8,12 @@
 //! registers right before the tensor-core GEMM — the pattern Triton
 //! cannot express efficiently (§5.2).
 
+use crate::autotuner::{Tunable, TunableConfig};
 use crate::ir::builder::KernelBuilder;
 use crate::ir::dtype::{fp4_e2m1_decode, fp4_e2m1_encode, nf4_encode, DType, NF4_TABLE};
 use crate::ir::expr::Expr;
 use crate::ir::program::{DequantScheme, GemmWarpPolicy, TileProgram};
+use crate::util::json::Json;
 
 /// Weight format of the dequant GEMM family (Fig. 15's x-axis).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -54,7 +56,7 @@ impl WeightFormat {
 }
 
 /// Tile configuration for dequant GEMM.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DequantConfig {
     pub block_m: i64,
     pub block_n: i64,
@@ -162,6 +164,128 @@ pub fn dequant_matmul_program(
         t.copy_out(ct_l, ct, vec![bx.expr() * bn, by.expr() * bm]);
     }
     t.finish()
+}
+
+impl TunableConfig for DequantConfig {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("block_m".into(), Json::Num(self.block_m as f64)),
+            ("block_n".into(), Json::Num(self.block_n as f64)),
+            ("block_k".into(), Json::Num(self.block_k as f64)),
+            ("num_stages".into(), Json::Num(self.num_stages as f64)),
+            ("threads".into(), Json::Num(self.threads as f64)),
+            ("group_size".into(), Json::Num(self.group_size as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<DequantConfig> {
+        Some(DequantConfig {
+            block_m: v.get("block_m")?.as_i64()?,
+            block_n: v.get("block_n")?.as_i64()?,
+            block_k: v.get("block_k")?.as_i64()?,
+            num_stages: v.get("num_stages")?.as_i64()?.max(1) as usize,
+            threads: v.get("threads")?.as_i64()?,
+            group_size: v.get("group_size")?.as_i64()?,
+        })
+    }
+}
+
+/// Dequant-GEMM tuning problem: `Ct[n,m] = dequant(B)[n,k] @ A[m,k]^T`.
+/// Decode shapes (m = 1) are padded to the 16-row instruction tile.
+#[derive(Clone, Copy, Debug)]
+pub struct DequantTunable {
+    pub m: i64,
+    pub n: i64,
+    pub k: i64,
+    pub fmt: WeightFormat,
+    padded_m: i64,
+}
+
+impl DequantTunable {
+    pub fn new(m: i64, n: i64, k: i64, fmt: WeightFormat) -> DequantTunable {
+        DequantTunable {
+            m,
+            n,
+            k,
+            fmt,
+            padded_m: m.max(16),
+        }
+    }
+}
+
+impl Tunable for DequantTunable {
+    type Config = DequantConfig;
+
+    fn workload(&self) -> &'static str {
+        "dequant_gemm"
+    }
+
+    fn shape_key(&self) -> Vec<i64> {
+        vec![self.m, self.n, self.k]
+    }
+
+    fn dtype_key(&self) -> String {
+        match self.fmt {
+            WeightFormat::Int4 => "w4a16",
+            WeightFormat::Int2 => "w2a8",
+            WeightFormat::Nf4 => "nf4a16",
+            WeightFormat::Fp4 => "fp4a16",
+        }
+        .to_string()
+    }
+
+    fn accepts(&self, cfg: &DequantConfig) -> bool {
+        let epb = self.fmt.elems_per_byte();
+        cfg.block_m > 0
+            && cfg.block_n > 0
+            && cfg.block_k > 0
+            && cfg.group_size > 0
+            && cfg.threads > 0
+            && cfg.threads % 32 == 0
+            && self.padded_m % cfg.block_m == 0
+            && self.n % cfg.block_n == 0
+            && self.k % cfg.block_k == 0
+            && cfg.block_k % epb == 0
+            && cfg.block_k % cfg.group_size == 0
+            // the W-int/A-int path applies one scale per k-slice, which
+            // requires group_size == block_k (see dequant_matmul_program)
+            && (self.fmt.act_dtype().is_float() || cfg.group_size == cfg.block_k)
+    }
+
+    fn candidates(&self) -> Vec<DequantConfig> {
+        let mut out = Vec::new();
+        for bm in [16i64, 32, 64] {
+            for bn in [32i64, 64, 128] {
+                for bk in [32i64, 64, 128] {
+                    for stages in [2usize, 3] {
+                        // fp16 activations: fixed fine-grained groups;
+                        // int8 activations: group must span block_k
+                        let group = if self.fmt.act_dtype().is_float() {
+                            32
+                        } else {
+                            bk
+                        };
+                        let cfg = DequantConfig {
+                            block_m: bm,
+                            block_n: bn,
+                            block_k: bk,
+                            num_stages: stages,
+                            threads: 128,
+                            group_size: group,
+                        };
+                        if self.accepts(&cfg) {
+                            out.push(cfg);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn build(&self, cfg: &DequantConfig) -> TileProgram {
+        dequant_matmul_program(self.padded_m, self.n, self.k, self.fmt, cfg)
+    }
 }
 
 // ---- host-side quantization helpers (shared with tests/benches) ------

@@ -10,10 +10,13 @@
 //! same GEMM machinery and omitted here; the benchmark's arithmetic
 //! profile — two chunked GEMM families — is preserved).
 
+use crate::autotuner::{Tunable, TunableConfig};
 use crate::ir::builder::{store, KernelBuilder};
 use crate::ir::dtype::DType;
 use crate::ir::expr::Expr;
 use crate::ir::program::{GemmWarpPolicy, TileProgram};
+use crate::util::json::Json;
+use crate::workloads::shapes::LinAttnShape;
 
 /// chunk_state: grid (nchunks, bh); inputs flattened per chunk:
 /// `B: [bh, seq, N]`, `X: [bh, seq, P]`, `W: [bh, seq]`,
@@ -115,6 +118,107 @@ pub fn chunk_scan_program(
     });
     t.copy_out(y_l, y_out, vec![bz.expr(), bc.expr() * chunk, Expr::int(0)]);
     t.finish()
+}
+
+/// Which of the two Mamba-2 chunk kernels is being tuned.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChunkKind {
+    State,
+    Scan,
+}
+
+/// Linear-attention chunk-kernel configuration: chunk length + pipeline
+/// depth (the scheduling knobs both kernels expose).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LinAttnConfig {
+    pub chunk: i64,
+    pub num_stages: usize,
+}
+
+impl TunableConfig for LinAttnConfig {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("chunk".into(), Json::Num(self.chunk as f64)),
+            ("num_stages".into(), Json::Num(self.num_stages as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<LinAttnConfig> {
+        Some(LinAttnConfig {
+            chunk: v.get("chunk")?.as_i64()?,
+            num_stages: v.get("num_stages")?.as_i64()?.max(1) as usize,
+        })
+    }
+}
+
+/// Tuning problem for one Table 4 shape of `chunk_state` / `chunk_scan`.
+#[derive(Clone, Copy, Debug)]
+pub struct LinearAttentionTunable {
+    pub kind: ChunkKind,
+    pub shape: LinAttnShape,
+}
+
+impl Tunable for LinearAttentionTunable {
+    type Config = LinAttnConfig;
+
+    fn workload(&self) -> &'static str {
+        match self.kind {
+            ChunkKind::State => "chunk_state",
+            ChunkKind::Scan => "chunk_scan",
+        }
+    }
+
+    fn shape_key(&self) -> Vec<i64> {
+        let s = &self.shape;
+        vec![s.batch, s.nheads, s.seq_len, s.head_dim, s.d_state]
+    }
+
+    fn dtype_key(&self) -> String {
+        DType::F16.to_string()
+    }
+
+    fn accepts(&self, cfg: &LinAttnConfig) -> bool {
+        cfg.chunk > 0 && self.shape.seq_len % cfg.chunk == 0
+    }
+
+    fn candidates(&self) -> Vec<LinAttnConfig> {
+        let mut out = Vec::new();
+        for chunk in [32i64, 64, 128, 256] {
+            for stages in [1usize, 2, 3] {
+                let cfg = LinAttnConfig {
+                    chunk,
+                    num_stages: stages,
+                };
+                if self.accepts(&cfg) {
+                    out.push(cfg);
+                }
+            }
+        }
+        out
+    }
+
+    fn build(&self, cfg: &LinAttnConfig) -> TileProgram {
+        let s = &self.shape;
+        let bh = s.batch * s.nheads;
+        match self.kind {
+            ChunkKind::State => chunk_state_program(
+                bh,
+                s.seq_len,
+                s.d_state,
+                s.head_dim,
+                cfg.chunk,
+                cfg.num_stages,
+            ),
+            ChunkKind::Scan => chunk_scan_program(
+                bh,
+                s.seq_len,
+                s.d_state,
+                s.head_dim,
+                cfg.chunk,
+                cfg.num_stages,
+            ),
+        }
+    }
 }
 
 /// Reference chunk_state.

@@ -2,9 +2,11 @@
 //! tile configuration — the search space the autotuner explores and the
 //! baselines restrict.
 
+use crate::autotuner::{Tunable, TunableConfig};
 use crate::ir::builder::KernelBuilder;
 use crate::ir::dtype::DType;
 use crate::ir::program::{GemmWarpPolicy, TileProgram};
+use crate::util::json::Json;
 
 /// A GEMM tile configuration (the scheduling decision vector).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -43,7 +45,9 @@ impl TileConfig {
         for &bm in &[32i64, 64, 128, 256] {
             for &bn in &[32i64, 64, 128, 256] {
                 for &bk in &[32i64, 64] {
-                    for &stages in &[2usize, 3, 4] {
+                    // stage 1 = unpipelined serial loop (the degenerate
+                    // baseline); 2..4 = multi-buffered async pipelines
+                    for &stages in &[1usize, 2, 3, 4] {
                         if bm > m.max(16) * 2 || bn > n.max(16) * 2 || bk > k {
                             continue;
                         }
@@ -116,6 +120,107 @@ pub fn reference_matmul(a: &[f32], b: &[f32], m: i64, n: i64, k: i64) -> Vec<f32
         }
     }
     c
+}
+
+impl TunableConfig for TileConfig {
+    fn to_json(&self) -> Json {
+        let policy = match self.policy {
+            GemmWarpPolicy::Square => "square",
+            GemmWarpPolicy::FullRow => "full_row",
+            GemmWarpPolicy::FullCol => "full_col",
+        };
+        Json::Obj(vec![
+            ("block_m".into(), Json::Num(self.block_m as f64)),
+            ("block_n".into(), Json::Num(self.block_n as f64)),
+            ("block_k".into(), Json::Num(self.block_k as f64)),
+            ("num_stages".into(), Json::Num(self.num_stages as f64)),
+            ("threads".into(), Json::Num(self.threads as f64)),
+            ("policy".into(), Json::Str(policy.into())),
+            ("rasterize".into(), Json::Bool(self.rasterize)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<TileConfig> {
+        let policy = match v.get("policy")?.as_str()? {
+            "square" => GemmWarpPolicy::Square,
+            "full_row" => GemmWarpPolicy::FullRow,
+            "full_col" => GemmWarpPolicy::FullCol,
+            _ => return None,
+        };
+        Some(TileConfig {
+            block_m: v.get("block_m")?.as_i64()?,
+            block_n: v.get("block_n")?.as_i64()?,
+            block_k: v.get("block_k")?.as_i64()?,
+            num_stages: v.get("num_stages")?.as_i64()?.max(1) as usize,
+            threads: v.get("threads")?.as_i64()?,
+            policy,
+            rasterize: v.get("rasterize")?.as_bool()?,
+        })
+    }
+}
+
+/// GEMM tuning problem: `C[m,n] = A[m,k] @ B[k,n]`. Degenerate dims are
+/// padded to the 16-wide minimum hardware tile (decode GEMV shapes).
+#[derive(Clone, Copy, Debug)]
+pub struct GemmTunable {
+    pub m: i64,
+    pub n: i64,
+    pub k: i64,
+    pub dtype: DType,
+    padded: (i64, i64, i64),
+}
+
+impl GemmTunable {
+    pub fn new(m: i64, n: i64, k: i64, dtype: DType) -> GemmTunable {
+        GemmTunable {
+            m,
+            n,
+            k,
+            dtype,
+            padded: (m.max(16), n.max(16), k.max(16)),
+        }
+    }
+}
+
+impl Tunable for GemmTunable {
+    type Config = TileConfig;
+
+    fn workload(&self) -> &'static str {
+        "gemm"
+    }
+
+    fn shape_key(&self) -> Vec<i64> {
+        vec![self.m, self.n, self.k]
+    }
+
+    fn dtype_key(&self) -> String {
+        self.dtype.to_string()
+    }
+
+    fn accepts(&self, cfg: &TileConfig) -> bool {
+        let (pm, pn, pk) = self.padded;
+        cfg.block_m > 0
+            && cfg.block_n > 0
+            && cfg.block_k > 0
+            && cfg.threads > 0
+            && cfg.threads % 32 == 0
+            && pm % cfg.block_m == 0
+            && pn % cfg.block_n == 0
+            && pk % cfg.block_k == 0
+    }
+
+    fn candidates(&self) -> Vec<TileConfig> {
+        let (pm, pn, pk) = self.padded;
+        TileConfig::search_space(pm, pn, pk)
+            .into_iter()
+            .filter(|cfg| self.accepts(cfg))
+            .collect()
+    }
+
+    fn build(&self, cfg: &TileConfig) -> TileProgram {
+        let (pm, pn, pk) = self.padded;
+        matmul_program(pm, pn, pk, self.dtype, cfg)
+    }
 }
 
 /// Deterministic pseudo-random test data in [-0.5, 0.5].

@@ -18,6 +18,10 @@ use tilelang::workloads::linear_attention::{chunk_scan_program, chunk_state_prog
 use tilelang::workloads::matmul::{matmul_program, TileConfig};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if !Runtime::has_execution_backend() {
+        eprintln!("skipping: built without the `pjrt` feature (no execution backend)");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("manifest.tsv").exists() {
         Some(dir)

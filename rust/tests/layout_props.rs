@@ -1,0 +1,183 @@
+//! Seeded property tests for the layout algebra (§4.1): index maps stay
+//! within the bounds the interval analyzer reports, linearizing layouts
+//! are bijections on the tile, composition agrees with function
+//! application, and the fragment extension primitives preserve the
+//! partition invariant across randomized shapes.
+
+use tilelang::layout::{domain_iter, Fragment, IterVar, Layout};
+
+/// SplitMix64 (no proptest in the offline vendor set).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next() % xs.len() as u64) as usize]
+    }
+}
+
+/// Every index a layout produces must lie inside the shape its interval
+/// analysis reports — the in-bounds invariant backing buffer sizing.
+fn assert_in_bounds(l: &Layout, label: &str) {
+    let out_shape = l.output_shape();
+    for idx in domain_iter(&l.input_shape()) {
+        let out = l.index(&idx);
+        assert_eq!(out.len(), out_shape.len(), "{label}: arity");
+        for (d, (&o, &hi)) in out.iter().zip(&out_shape).enumerate() {
+            assert!(
+                o >= 0 && o < hi,
+                "{label}: index {idx:?} -> dim {d} value {o} outside [0, {hi})"
+            );
+        }
+    }
+}
+
+#[test]
+fn random_layouts_stay_in_bounds_and_linearizers_are_bijective() {
+    let mut rng = Rng(0xA11CE);
+    for _ in 0..24 {
+        let rows = *rng.pick(&[4i64, 8, 16, 32, 64]);
+        let cols = *rng.pick(&[8i64, 16, 32, 64]);
+
+        let rm = Layout::row_major(&[rows, cols]);
+        assert_in_bounds(&rm, "row_major");
+        assert!(rm.is_bijective_linear());
+
+        let cm = Layout::col_major(rows, cols);
+        assert_in_bounds(&cm, "col_major");
+        assert!(cm.is_bijective_linear());
+
+        // padding: injective (no aliasing) but deliberately not onto
+        let pad = *rng.pick(&[1i64, 2, 4]);
+        let p = Layout::padded(rows, cols, pad);
+        assert_in_bounds(&p, "padded");
+        assert!(p.is_injective());
+        assert!(!p.is_bijective_linear());
+        assert!(p.output_size() >= rows * cols);
+
+        // swizzle: a bank permutation must remain a bijection on the tile
+        let bits = *rng.pick(&[8u32, 16, 32]);
+        let s = Layout::swizzled(rows, cols, bits);
+        assert_in_bounds(&s, "swizzled");
+        assert!(
+            s.is_bijective_linear(),
+            "swizzle({rows},{cols},{bits}) aliases"
+        );
+    }
+}
+
+#[test]
+fn composition_agrees_with_function_application() {
+    let mut rng = Rng(0xC0DE);
+    for _ in 0..16 {
+        let rows = *rng.pick(&[2i64, 4, 8]);
+        let cols = *rng.pick(&[4i64, 8, 16]);
+        let inner = Layout::row_major(&[rows, cols]);
+        // outer: 1-d -> 1-d affine stretch over the inner's range
+        let stride = *rng.pick(&[1i64, 2, 3]);
+        let kv = IterVar::new("k", rows * cols);
+        let outer = Layout::new(vec![kv.clone()], vec![kv.var.expr() * stride]);
+        let comp = inner.compose(&outer);
+        assert_eq!(comp.input_shape(), vec![rows, cols]);
+        for idx in domain_iter(&[rows, cols]) {
+            let step = inner.index(&idx);
+            let want = outer.index(&step);
+            let got = comp.index(&idx);
+            assert_eq!(got, want, "compose mismatch at {idx:?}");
+        }
+        // composing with an injective outer preserves injectivity
+        assert!(comp.is_injective());
+        assert_in_bounds(&comp, "composed");
+    }
+}
+
+#[test]
+fn linear_vectorized_fragments_partition_and_vectorize() {
+    let mut rng = Rng(0xF1A6);
+    for _ in 0..20 {
+        let rows = *rng.pick(&[4i64, 8, 16]);
+        let cols = *rng.pick(&[8i64, 16, 32]);
+        let threads = *rng.pick(&[4i64, 16, 32, 64]);
+        let vec = *rng.pick(&[1i64, 2, 4]);
+        let f = Fragment::linear_vectorized(&[rows, cols], threads, vec);
+        assert!(f.is_valid_partition(), "{rows}x{cols} t{threads} v{vec}");
+        // vector chunks stay on one thread with consecutive register slots
+        assert!(
+            f.innermost_contiguity() >= vec,
+            "{rows}x{cols} t{threads} v{vec}: contiguity {}",
+            f.innermost_contiguity()
+        );
+        // a partition never stores more cells than the register file holds
+        assert!(f.cells() * f.replicate <= f.num_threads * f.locals_per_thread());
+    }
+}
+
+#[test]
+fn fragment_algebra_chains_preserve_the_partition_invariant() {
+    let mut rng = Rng(0xBEEF2);
+    for case in 0..16 {
+        let mut f = if case % 2 == 0 {
+            Fragment::mma_ldmatrix_16x16()
+        } else {
+            Fragment::mma_c_16x8()
+        };
+        let mut expected_cells = f.cells();
+        let mut expected_rep = f.replicate;
+        for _ in 0..(rng.next() % 3 + 1) {
+            match rng.next() % 3 {
+                0 => {
+                    let dim = (rng.next() % 2) as usize;
+                    f = f.repeat(dim, 2, false);
+                    expected_cells *= 2;
+                }
+                1 => {
+                    let dim = (rng.next() % 2) as usize;
+                    f = f.repeat(dim, 2, true);
+                    expected_cells *= 2;
+                }
+                _ => {
+                    f = f.replicate(2);
+                    expected_rep *= 2;
+                }
+            }
+            assert!(f.is_valid_partition(), "algebra step broke the partition");
+            assert_eq!(f.cells(), expected_cells);
+            assert_eq!(f.replicate, expected_rep);
+            // ownership bookkeeping: every (cell, replica) fits the
+            // thread x register grid injectively
+            assert!(f.cells() * f.replicate <= f.num_threads * f.locals_per_thread());
+        }
+        // the dense-table backend answers identically to the algebra
+        let t = f.to_table();
+        assert_eq!(t.shape, f.shape);
+        assert_eq!(t.locals_per_thread(), f.locals_per_thread());
+        for idx in domain_iter(&f.shape).take(64) {
+            assert_eq!(t.thread_at(&idx, 0), f.thread_at(&idx, 0));
+            assert_eq!(t.local_at(&idx), f.local_at(&idx));
+        }
+    }
+}
+
+#[test]
+fn block_gemm_fragments_partition_for_all_warp_grids() {
+    for (bm, bn, wm, wn) in [
+        (32i64, 32i64, 1i64, 2i64),
+        (32, 32, 2, 1),
+        (64, 64, 2, 2),
+        (64, 128, 1, 4),
+        (128, 64, 4, 1),
+        (128, 128, 2, 4),
+    ] {
+        let f = Fragment::block_gemm_c(bm, bn, wm, wn);
+        assert!(f.is_valid_partition(), "{bm}x{bn} warps {wm}x{wn}");
+        assert!(f.covers_all_threads(), "{bm}x{bn} warps {wm}x{wn}");
+        assert_eq!(f.num_threads, wm * wn * 32);
+        assert_eq!(f.cells(), bm * bn);
+    }
+}
