@@ -1,39 +1,53 @@
-//! End-to-end driver (DESIGN.md §5): serve batched transformer-block
-//! inference through the full three-layer stack.
+//! End-to-end serving driver: batched row inference through the full
+//! three-layer stack, fully offline.
 //!
-//! L1/L2: the `transformer_block` artifact was authored in JAX calling
-//! Pallas kernels and AOT-lowered to HLO text (`make artifacts`).
-//! L3: the rust coordinator compiles it once on the PJRT CPU client,
-//! then micro-batches row requests (one sequence each) up to the
-//! artifact batch dimension and serves them from a worker thread.
+//! L1/L2: the artifact's workload tag resolves to a tile program, the
+//! tile configuration comes from the persistent tuning cache, and
+//! lowering produces the scheduled TIR.
+//! L3: the rust coordinator loads the artifact once on the execution
+//! backend (TIR interpreter by default; PJRT when the `pjrt` feature
+//! supplies it), then micro-batches row requests (one row each) up to
+//! the artifact batch dimension and serves them from a worker thread.
 //!
 //! The run cross-checks outputs against a direct artifact execution and
-//! reports latency percentiles + throughput (recorded in
-//! EXPERIMENTS.md §E2E).
+//! the recorded goldens, then reports latency percentiles + throughput.
 //!
-//! Run: make artifacts && cargo run --release --example transformer_serve
+//! Run: cargo run --release --example transformer_serve
+//! (artifacts are generated on the fly when the directory is missing)
 
 use std::time::Instant;
 
 use tilelang::coordinator::{percentile, BatchPolicy, Coordinator};
-use tilelang::runtime::Runtime;
+use tilelang::runtime::{artifacts, Runtime};
 
-const MODEL: &str = "transformer_block";
+/// The batched serving model: a transformer feed-forward linear layer
+/// (input 0 is the row batch, input 1 the weight matrix).
+const MODEL: &str = "linear_64x256x64";
 
 fn main() {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
-    let rt = match Runtime::new(&dir) {
-        Ok(rt) => rt,
-        Err(e) => {
-            eprintln!("{e}\n(run `make artifacts` first)");
-            std::process::exit(1);
-        }
-    };
+    if !std::path::Path::new(&dir).join("manifest.tsv").exists() {
+        let names = artifacts::generate_default_set(&dir).expect("generate artifacts");
+        println!("generated {} artifacts in {}/", names.len(), dir);
+    }
+    let rt = Runtime::new(&dir).expect("open artifact runtime");
+    if rt.spec(MODEL).is_err() {
+        // stale directory from an older generator (or a PJRT-era
+        // `make artifacts` run): it parses but lacks the serving model
+        eprintln!(
+            "{}/ has no {} artifact; regenerate it with `tilelang artifacts --force --dir {}`",
+            dir, MODEL, dir
+        );
+        std::process::exit(1);
+    }
 
-    // golden check: the PJRT path reproduces the jax-side outputs
+    // golden check: execution reproduces the CPU-reference outputs
     let err = rt.golden_check(MODEL).expect("golden check");
-    println!("artifact golden max_err = {err:.2e}");
-    assert!(err < 1e-3);
+    println!(
+        "artifact golden max_err = {err:.2e} (backend {})",
+        rt.backend_name()
+    );
+    assert!(err < 0.05, "golden diverged: {err}");
 
     // reference outputs for request cross-checking
     let inputs = rt.example_inputs(MODEL).expect("inputs");
@@ -48,7 +62,7 @@ fn main() {
         .expect("start coordinator");
     let n_requests = 64usize;
     println!(
-        "serving {n_requests} single-sequence requests (artifact batch = {batch}, \
+        "serving {n_requests} single-row requests (artifact batch = {batch}, \
          micro-batching with 2ms flush) ..."
     );
     let t0 = Instant::now();
@@ -67,10 +81,9 @@ fn main() {
         let out = reply.output.expect("row output");
         latencies.push(reply.latency_us);
         batch_sizes.push(reply.batch_size);
-        // cross-check a few rows against the direct execution. Rows are
-        // only comparable when the row landed in its original slot
-        // (attention mixes nothing across the batch dim, so any slot
-        // yields the same output for the same row — compare directly).
+        // cross-check rows against the direct execution (the linear
+        // layer mixes nothing across the batch dim, so a row yields the
+        // same output regardless of which batch slot served it)
         if checked < 32 {
             let want = &direct[slot * out_row_len..(slot + 1) * out_row_len];
             let max_err = out
@@ -79,7 +92,7 @@ fn main() {
                 .map(|(g, w)| (g - w).abs())
                 .fold(0f32, f32::max);
             assert!(
-                max_err < 1e-3,
+                max_err < 1e-4,
                 "served output diverges from direct execution: {max_err}"
             );
             checked += 1;
@@ -89,9 +102,9 @@ fn main() {
     latencies.sort_unstable();
     let mean_batch =
         batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len().max(1) as f64;
-    println!("cross-checked {checked} rows against direct PJRT execution: OK");
+    println!("cross-checked {checked} rows against direct execution: OK");
     println!(
-        "throughput: {:.1} seq/s ({} requests in {:.2?})",
+        "throughput: {:.1} rows/s ({} requests in {:.2?})",
         n_requests as f64 / wall.as_secs_f64(),
         n_requests,
         wall

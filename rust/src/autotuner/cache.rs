@@ -186,6 +186,10 @@ impl TuningCache {
     }
 
     /// Write the cache back to its file (no-op for in-memory caches).
+    /// The write is atomic (temp file + rename) so concurrent savers —
+    /// e.g. coordinator workers tuning different artifacts — can never
+    /// leave a torn, malformed cache behind; the worst outcome of a
+    /// race is last-writer-wins on the entry set.
     pub fn save(&self) -> Result<(), String> {
         let Some(path) = &self.path else {
             return Ok(());
@@ -196,8 +200,17 @@ impl TuningCache {
                     .map_err(|e| format!("creating {:?}: {}", parent, e))?;
             }
         }
-        std::fs::write(path, self.to_json().dump())
-            .map_err(|e| format!("writing {:?}: {}", path, e))
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        static SAVE_SEQ: AtomicUsize = AtomicUsize::new(0);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            SAVE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, self.to_json().dump())
+            .map_err(|e| format!("writing {:?}: {}", tmp, e))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| format!("renaming {:?} -> {:?}: {}", tmp, path, e))
     }
 }
 

@@ -1,13 +1,20 @@
 //! L3 kernel-library coordinator: the serving layer that owns the event
-//! loop, worker threads and dynamic batching over the PJRT runtime.
+//! loop, worker threads and dynamic batching over the artifact runtime.
 //!
 //! For a kernel-compiler paper the coordinator is deliberately thin
 //! (DESIGN.md: "if the paper's contribution lives entirely at L2/L1, L3
 //! is a thin driver") — but it is a real one: per-kernel worker threads
-//! each own a compiled executable, requests flow through bounded mpsc
-//! queues, and model workers micro-batch row requests up to the
-//! artifact's batch dimension with a flush deadline (the vLLM-router
-//! pattern scaled to this repo).
+//! each own a loaded executable, requests flow through mpsc queues, and
+//! model workers micro-batch row requests up to the artifact's batch
+//! dimension with a flush deadline (the vLLM-router pattern scaled to
+//! this repo).
+//!
+//! Workers execute through the runtime's [`ExecBackend`]: the interp
+//! backend by default (offline builds serve real requests through the
+//! TIR interpreter), PJRT when the `pjrt` feature supplies it. Loading
+//! an artifact on the interp backend selects its tile configuration
+//! through the persistent tuning cache, so serving starts pre-compile
+//! tuned configs for their artifact shapes.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -17,20 +24,25 @@ use std::time::{Duration, Instant};
 
 use crate::anyhow;
 use crate::error::Result;
-use crate::runtime::Runtime;
+use crate::runtime::{ExecBackend, Runtime};
 
 /// A raw kernel invocation result.
 pub struct KernelReply {
+    /// Full output tensor, or a stringified worker-side error.
     pub output: Result<Vec<f32>, String>,
+    /// Time the job waited in the worker queue.
     pub queue_us: u128,
+    /// Backend execution time.
     pub exec_us: u128,
 }
 
 /// A batched-row invocation result (one row of the model batch).
 pub struct RowReply {
+    /// This row's output slice, or a stringified worker-side error.
     pub output: Result<Vec<f32>, String>,
+    /// Submit-to-reply latency (includes micro-batch wait).
     pub latency_us: u128,
-    /// rows that shared the executed batch
+    /// Rows that shared the executed batch.
     pub batch_size: usize,
 }
 
@@ -77,19 +89,30 @@ impl Default for BatchPolicy {
 }
 
 impl Coordinator {
-    /// Start raw workers for `kernels` from the artifacts in `dir`.
-    /// Each worker owns its own PJRT client + compiled executable (the
-    /// xla handles are not Send, so threads build their own).
+    /// Start raw workers for `kernels` from the artifacts in `dir`, on
+    /// the build's default execution backend. Each worker owns its own
+    /// runtime + loaded executable (the handles are not required to be
+    /// Send, so threads build their own).
     pub fn start(dir: impl Into<PathBuf>, kernels: &[&str]) -> Result<Coordinator> {
+        Coordinator::start_with_backend(dir, ExecBackend::default_backend(), kernels)
+    }
+
+    /// [`Coordinator::start`] with an explicit execution backend.
+    pub fn start_with_backend(
+        dir: impl Into<PathBuf>,
+        backend: ExecBackend,
+        kernels: &[&str],
+    ) -> Result<Coordinator> {
         let dir = dir.into();
         let mut workers = HashMap::new();
         for &k in kernels {
             let (tx, rx) = mpsc::channel::<Job>();
             let name = k.to_string();
             let d = dir.clone();
+            let be = backend.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("kernel-{}", k))
-                .spawn(move || raw_worker(d, name, rx))
+                .spawn(move || raw_worker(d, be, name, rx))
                 .map_err(|e| anyhow!("spawn: {}", e))?;
             workers.insert(k.to_string(), Worker { tx, handle });
         }
@@ -98,9 +121,24 @@ impl Coordinator {
 
     /// Start a batched model worker for `kernel` (input 0 is the batch
     /// tensor; remaining inputs are weights loaded from the recorded
-    /// example bins).
+    /// example bins), on the build's default execution backend.
     pub fn start_batched(
         dir: impl Into<PathBuf>,
+        kernel: &str,
+        policy: BatchPolicy,
+    ) -> Result<Coordinator> {
+        Coordinator::start_batched_with_backend(
+            dir,
+            ExecBackend::default_backend(),
+            kernel,
+            policy,
+        )
+    }
+
+    /// [`Coordinator::start_batched`] with an explicit execution backend.
+    pub fn start_batched_with_backend(
+        dir: impl Into<PathBuf>,
+        backend: ExecBackend,
         kernel: &str,
         policy: BatchPolicy,
     ) -> Result<Coordinator> {
@@ -109,7 +147,7 @@ impl Coordinator {
         let name = kernel.to_string();
         let handle = std::thread::Builder::new()
             .name(format!("model-{}", kernel))
-            .spawn(move || batched_worker(dir, name, policy, rx))
+            .spawn(move || batched_worker(dir, backend, name, policy, rx))
             .map_err(|e| anyhow!("spawn: {}", e))?;
         let mut workers = HashMap::new();
         workers.insert(kernel.to_string(), Worker { tx, handle });
@@ -159,8 +197,8 @@ impl Coordinator {
     }
 }
 
-fn raw_worker(dir: PathBuf, kernel: String, rx: Receiver<Job>) {
-    let runtime = match Runtime::new(&dir) {
+fn raw_worker(dir: PathBuf, backend: ExecBackend, kernel: String, rx: Receiver<Job>) {
+    let runtime = match Runtime::with_backend(&dir, backend) {
         Ok(r) => r,
         Err(e) => {
             drain_with_error(&rx, &format!("runtime init failed: {}", e));
@@ -202,8 +240,14 @@ fn raw_worker(dir: PathBuf, kernel: String, rx: Receiver<Job>) {
     }
 }
 
-fn batched_worker(dir: PathBuf, kernel: String, policy: BatchPolicy, rx: Receiver<Job>) {
-    let runtime = match Runtime::new(&dir) {
+fn batched_worker(
+    dir: PathBuf,
+    backend: ExecBackend,
+    kernel: String,
+    policy: BatchPolicy,
+    rx: Receiver<Job>,
+) {
+    let runtime = match Runtime::with_backend(&dir, backend) {
         Ok(r) => r,
         Err(e) => {
             drain_with_error(&rx, &format!("runtime init failed: {}", e));

@@ -42,7 +42,9 @@ impl From<std::io::Error> for Error {
     }
 }
 
-pub type Result<T> = std::result::Result<T, Error>;
+/// Crate-wide result alias. The error type defaults to [`Error`] but can
+/// be overridden (`Result<T, String>`), mirroring `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// `anyhow::Context`-style helpers for any displayable error type.
 pub trait Context<T> {

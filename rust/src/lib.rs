@@ -1,13 +1,34 @@
 //! # tilelang-rs
 //!
-//! Reproduction of *TileLang: A Composable Tiled Programming Model for AI
-//! Systems* as a three-layer Rust + JAX + Pallas stack. This crate is the
-//! L3 system: the tile-program IR and compiler (layout inference, thread
-//! binding, tensorization, software pipelining), a thread-level
-//! interpreter used as a semantic oracle, an analytical GPU performance
-//! model that regenerates the paper's evaluation figures, and a PJRT
-//! runtime + kernel-library coordinator that executes the AOT-compiled
-//! Pallas artifacts.
+//! Reproduction of *TileLang: A Composable Tiled Programming Model for
+//! AI Systems* as a three-layer Rust stack (see `docs/ARCHITECTURE.md`
+//! for the full map):
+//!
+//! * **L1 — tile programs**: the tile-level IR ([`ir`]), explicit memory
+//!   scopes and layout/fragment algebra ([`layout`]), authored through
+//!   `ir::builder::KernelBuilder` by the workload families in
+//!   [`workloads`] (GEMM, FlashAttention, FlashMLA decode, Mamba-2
+//!   chunk kernels, dequantize-GEMM).
+//! * **L2 — compilation and modeling**: the lowering passes
+//!   ([`passes`]: layout inference, thread binding, tensorization,
+//!   software pipelining, warp specialization) producing scheduled
+//!   ThreadIR ([`tir`]); a thread-level interpreter (`tir::interp`)
+//!   used as the semantic oracle; an analytical GPU performance model
+//!   ([`sim`]) that regenerates the paper's evaluation figures; and the
+//!   unified autotuner with its persistent tuning cache ([`autotuner`]).
+//! * **L3 — serving**: the artifact runtime ([`runtime`]) with
+//!   pluggable execution backends (`runtime::ExecBackend`) — the
+//!   always-available TIR-interpreter backend and the feature-gated
+//!   PJRT backend — plus the micro-batching kernel coordinator
+//!   ([`coordinator`]) that serves row requests from worker threads.
+//!
+//! The crate is dependency-free (std only) so the whole loop — author,
+//! compile, tune, execute, serve — runs in an offline build:
+//!
+//! ```text
+//! tilelang artifacts   # generate manifest + inputs + CPU-reference goldens
+//! tilelang serve       # micro-batched row serving on the interp backend
+//! ```
 
 pub mod autotuner;
 pub mod baselines;
@@ -23,6 +44,7 @@ pub mod tir;
 pub mod util;
 pub mod workloads;
 
+/// The crate version (mirrors `Cargo.toml`).
 pub fn version() -> &'static str {
     env!("CARGO_PKG_VERSION")
 }

@@ -1,0 +1,300 @@
+//! Rust-native artifact generation: the offline replacement for the
+//! Python `make artifacts` flow.
+//!
+//! Emits everything the runtime needs to serve a directory of kernels
+//! hermetically — `manifest.tsv` (name, shapes, workload tag),
+//! `<name>.in<i>.bin` example inputs (deterministic seeded data), and
+//! `goldens.tsv` sample points computed from the CPU reference
+//! implementations in `workloads` — so `tilelang artifacts && tilelang
+//! serve` works with no Python, no HLO files and no network.
+//!
+//! File formats are documented in `docs/ARCHITECTURE.md`. The path
+//! column of the manifest is written as `-`: the interp backend rebuilds
+//! programs from the workload tag, only the PJRT backend reads HLO text
+//! from that path.
+
+use std::fs;
+use std::path::Path;
+
+use crate::bail;
+use crate::error::{Context, Result};
+use crate::workloads::attention::reference_attention;
+use crate::workloads::dequant::{dequantize_weights, quantize_weights, WeightFormat};
+use crate::workloads::linear_attention::{reference_chunk_scan, reference_chunk_state};
+use crate::workloads::matmul::{reference_matmul, test_data};
+
+use super::interp_backend::WorkloadKind;
+
+/// One artifact to emit: shapes, input payloads and the CPU-reference
+/// golden output.
+pub struct ArtifactDef {
+    pub name: String,
+    pub workload: WorkloadKind,
+    pub in_shapes: Vec<Vec<i64>>,
+    pub out_shape: Vec<i64>,
+    pub inputs: Vec<Vec<f32>>,
+    pub golden: Vec<f32>,
+}
+
+/// Golden sample points recorded per artifact (evenly strided).
+const GOLDEN_SAMPLES: usize = 32;
+
+/// The default artifact set: one representative per workload family,
+/// sized so interpreter execution stays interactive. `linear_*` is the
+/// batched serving model (input 0 is the row batch, input 1 the weight).
+pub fn default_set() -> Vec<ArtifactDef> {
+    let mut out = Vec::new();
+
+    // gemm: the raw-kernel serving artifact
+    {
+        let (m, n, k) = (64i64, 64i64, 64i64);
+        let a = test_data(m * k, 0xA1);
+        let b = test_data(k * n, 0xA2);
+        let golden = reference_matmul(&a, &b, m, n, k);
+        out.push(ArtifactDef {
+            name: format!("matmul_{}x{}x{}", m, n, k),
+            workload: WorkloadKind::Gemm,
+            in_shapes: vec![vec![m, k], vec![k, n]],
+            out_shape: vec![m, n],
+            inputs: vec![a, b],
+            golden,
+        });
+    }
+
+    // linear layer: the batched row-serving model
+    {
+        let (m, n, k) = (64i64, 256i64, 64i64);
+        let a = test_data(m * k, 0xA3);
+        let b = test_data(k * n, 0xA4);
+        let golden = reference_matmul(&a, &b, m, n, k);
+        out.push(ArtifactDef {
+            name: format!("linear_{}x{}x{}", m, n, k),
+            workload: WorkloadKind::Gemm,
+            in_shapes: vec![vec![m, k], vec![k, n]],
+            out_shape: vec![m, n],
+            inputs: vec![a, b],
+            golden,
+        });
+    }
+
+    // flash attention, both masks
+    for causal in [false, true] {
+        let (bh, seq, d) = (2i64, 128i64, 64i64);
+        let seed = if causal { 0xB8 } else { 0xB1 };
+        let q = test_data(bh * seq * d, seed);
+        let k = test_data(bh * seq * d, seed + 1);
+        let v = test_data(bh * seq * d, seed + 2);
+        let golden = reference_attention(&q, &k, &v, bh, seq, d, causal);
+        let base = if causal {
+            "flash_attention_causal"
+        } else {
+            "flash_attention"
+        };
+        out.push(ArtifactDef {
+            name: format!("{}_{}x{}x{}", base, bh, seq, d),
+            workload: WorkloadKind::FlashAttention { causal },
+            in_shapes: vec![vec![bh, seq, d]; 3],
+            out_shape: vec![bh, seq, d],
+            inputs: vec![q, k, v],
+            golden,
+        });
+    }
+
+    // weight-only quantized GEMM (W4A16, per-group scales)
+    {
+        let (m, n, k, group) = (32i64, 64i64, 64i64, 32i64);
+        let fmt = WeightFormat::Int4;
+        let a = test_data(m * k, 0xC1);
+        let w = test_data(n * k, 0xC2);
+        let (packed, scales) = quantize_weights(&w, n, k, fmt, group);
+        let wdq = dequantize_weights(&packed, &scales, n, k, fmt, group);
+        let mut golden = vec![0f32; (n * m) as usize];
+        for i in 0..n as usize {
+            for j in 0..m as usize {
+                let mut acc = 0f32;
+                for kk in 0..k as usize {
+                    acc += wdq[i * k as usize + kk] * a[j * k as usize + kk];
+                }
+                golden[i * m as usize + j] = acc;
+            }
+        }
+        let epb = fmt.elems_per_byte();
+        out.push(ArtifactDef {
+            name: format!("dequant_int4_{}x{}x{}", m, n, k),
+            workload: WorkloadKind::Dequant { fmt, group },
+            in_shapes: vec![vec![m, k], vec![n, k / epb], vec![n, k / group]],
+            out_shape: vec![n, m],
+            inputs: vec![a, packed, scales],
+            golden,
+        });
+    }
+
+    // Mamba-2 chunk kernels (state update + scan)
+    {
+        let (bh, seq, n_state, p, chunk) = (2i64, 128i64, 32i64, 32i64, 64i64);
+        let nchunks = seq / chunk;
+        let b = test_data(bh * seq * n_state, 0xD1);
+        let x = test_data(bh * seq * p, 0xD2);
+        let w = test_data(bh * seq, 0xD3);
+        let golden = reference_chunk_state(&b, &x, &w, bh, seq, n_state, p, chunk);
+        out.push(ArtifactDef {
+            name: format!("chunk_state_{}x{}", bh, seq),
+            workload: WorkloadKind::ChunkState,
+            in_shapes: vec![vec![bh, seq, n_state], vec![bh, seq, p], vec![bh, seq]],
+            out_shape: vec![bh * nchunks, n_state, p],
+            inputs: vec![b, x, w],
+            golden,
+        });
+
+        let c = test_data(bh * seq * n_state, 0xD4);
+        let s = test_data(bh * nchunks * n_state * p, 0xD5);
+        let w2 = test_data(bh * seq, 0xD6);
+        let golden = reference_chunk_scan(&c, &s, &w2, bh, seq, n_state, p, chunk);
+        out.push(ArtifactDef {
+            name: format!("chunk_scan_{}x{}", bh, seq),
+            workload: WorkloadKind::ChunkScan,
+            in_shapes: vec![
+                vec![bh, seq, n_state],
+                vec![bh * nchunks, n_state, p],
+                vec![bh, seq],
+            ],
+            out_shape: vec![bh, seq, p],
+            inputs: vec![c, s, w2],
+            golden,
+        });
+    }
+
+    out
+}
+
+fn fmt_shape(s: &[i64]) -> String {
+    s.iter()
+        .map(|d| d.to_string())
+        .collect::<Vec<_>>()
+        .join("x")
+}
+
+/// Write `defs` into `dir` (manifest + input bins + goldens); returns
+/// the artifact names in manifest order.
+pub fn generate(dir: impl AsRef<Path>, defs: &[ArtifactDef]) -> Result<Vec<String>> {
+    let dir = dir.as_ref();
+    fs::create_dir_all(dir).with_context(|| format!("creating {:?}", dir))?;
+    let mut manifest = String::new();
+    let mut goldens = String::new();
+    let mut names = Vec::new();
+    for d in defs {
+        let ins = d
+            .in_shapes
+            .iter()
+            .map(|s| fmt_shape(s))
+            .collect::<Vec<_>>()
+            .join(",");
+        manifest.push_str(&format!(
+            "{}\t-\tin={}\tout={}\tworkload={}\n",
+            d.name,
+            ins,
+            fmt_shape(&d.out_shape),
+            d.workload.tag()
+        ));
+        if d.inputs.len() != d.in_shapes.len() {
+            bail!(
+                "{}: {} input payloads for {} declared shapes",
+                d.name,
+                d.inputs.len(),
+                d.in_shapes.len()
+            );
+        }
+        for (i, data) in d.inputs.iter().enumerate() {
+            let want = d.in_shapes[i].iter().product::<i64>() as usize;
+            if data.len() != want {
+                bail!(
+                    "{}: input {} has {} values, shape {:?} wants {}",
+                    d.name,
+                    i,
+                    data.len(),
+                    d.in_shapes[i],
+                    want
+                );
+            }
+            let mut bytes = Vec::with_capacity(data.len() * 4);
+            for v in data {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+            let path = dir.join(format!("{}.in{}.bin", d.name, i));
+            fs::write(&path, bytes).with_context(|| format!("writing {:?}", path))?;
+        }
+        let out_len = d.out_shape.iter().product::<i64>() as usize;
+        if d.golden.len() != out_len {
+            bail!(
+                "{}: golden has {} values, output shape {:?} wants {}",
+                d.name,
+                d.golden.len(),
+                d.out_shape,
+                out_len
+            );
+        }
+        let step = (out_len / GOLDEN_SAMPLES).max(1);
+        let samples = (0..out_len)
+            .step_by(step)
+            .take(GOLDEN_SAMPLES)
+            .map(|i| format!("{}:{}", i, d.golden[i]))
+            .collect::<Vec<_>>()
+            .join(",");
+        goldens.push_str(&format!("{}\t{}\t{}\n", d.name, out_len, samples));
+        names.push(d.name.clone());
+    }
+    fs::write(dir.join("manifest.tsv"), manifest).context("writing manifest.tsv")?;
+    fs::write(dir.join("goldens.tsv"), goldens).context("writing goldens.tsv")?;
+    Ok(names)
+}
+
+/// Generate the [`default_set`] into `dir`.
+pub fn generate_default_set(dir: impl AsRef<Path>) -> Result<Vec<String>> {
+    generate(dir, &default_set())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+
+    #[test]
+    fn generated_manifest_round_trips_through_the_runtime() {
+        let dir =
+            std::env::temp_dir().join(format!("tilelang-artgen-{}", std::process::id()));
+        let names = generate_default_set(&dir).expect("generate");
+        assert!(names.len() >= 6, "expected >= 6 artifacts, got {:?}", names);
+        let rt = Runtime::new(&dir).expect("runtime parses generated manifest");
+        assert_eq!(rt.artifact_names().len(), names.len());
+        for n in &names {
+            let spec = rt.spec(n).expect("spec");
+            assert!(spec.workload.is_some(), "{} missing workload tag", n);
+            let ins = rt.example_inputs(n).expect("example inputs");
+            assert_eq!(ins.len(), spec.in_shapes.len());
+            for (data, shape) in ins.iter().zip(&spec.in_shapes) {
+                assert_eq!(data.len(), shape.iter().product::<i64>() as usize);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn default_set_is_internally_consistent() {
+        for d in default_set() {
+            assert_eq!(d.inputs.len(), d.in_shapes.len(), "{}", d.name);
+            assert_eq!(
+                d.golden.len(),
+                d.out_shape.iter().product::<i64>() as usize,
+                "{}",
+                d.name
+            );
+            // every workload tag parses back to its kind
+            assert_eq!(
+                WorkloadKind::parse(&d.workload.tag()).unwrap(),
+                d.workload,
+                "{}",
+                d.name
+            );
+        }
+    }
+}

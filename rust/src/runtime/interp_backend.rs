@@ -1,0 +1,543 @@
+//! TIR-interpreter execution backend: serve artifacts without PJRT.
+//!
+//! Resolves a manifest artifact (workload tag + tensor shapes) to one of
+//! the paper's workload tile programs, selects a tile configuration
+//! through the persistent tuning cache, lowers the program with
+//! `passes::lower::compile` and executes requests through `tir::interp`
+//! — the same semantic oracle the differential tests trust. This makes
+//! the whole L3 serving path (runtime + coordinator) work in an offline,
+//! dependency-free build; the `pjrt` feature remains the fast native
+//! backend when the vendored `xla` crate is available.
+//!
+//! Numerics carry the storage-dtype rounding of the lowered schedule
+//! (fp16 tiles round on store), so outputs match the f32 CPU references
+//! to roughly 1e-2 absolute error, not bit-exactly.
+
+use std::path::{Path, PathBuf};
+
+use crate::autotuner::{tune_cached, Tunable, TuningCache};
+use crate::error::Result;
+use crate::ir::buffer::BufferId;
+use crate::ir::dtype::DType;
+use crate::ir::program::TileProgram;
+use crate::passes::lower::{compile, CompileOptions};
+use crate::sim::device::Device;
+use crate::sim::model::Penalties;
+use crate::tir::interp::{Interp, Tensors};
+use crate::tir::LoweredProgram;
+use crate::workloads::attention::{AttentionTunable, AttnConfig};
+use crate::workloads::dequant::{DequantConfig, DequantTunable, WeightFormat};
+use crate::workloads::linear_attention::{
+    chunk_scan_program, chunk_state_program, ChunkKind, LinearAttentionTunable,
+};
+use crate::workloads::matmul::{GemmTunable, TileConfig};
+use crate::workloads::shapes::{AttnShape, LinAttnShape};
+use crate::{anyhow, bail};
+
+use super::ArtifactSpec;
+
+/// Configuration of the interpreter execution backend.
+#[derive(Clone, Debug)]
+pub struct InterpOptions {
+    /// Modeled device whose cost model selects tile configurations
+    /// (also part of the tuning-cache key). Any `Device::by_name` name.
+    pub device: String,
+    /// Tuning-cache location; `None` uses `tune_cache.json` inside the
+    /// artifact directory, so serving starts share tuned configs.
+    pub cache_path: Option<PathBuf>,
+    /// When false, skip the tuning sweep and use each workload's static
+    /// default configuration (faster cold start, slower modeled kernel).
+    pub tune: bool,
+}
+
+impl Default for InterpOptions {
+    fn default() -> Self {
+        InterpOptions {
+            device: "h100".to_string(),
+            cache_path: None,
+            tune: true,
+        }
+    }
+}
+
+/// The workload family an artifact resolves to, parsed from the
+/// manifest's `workload=` column (see `docs/ARCHITECTURE.md`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    /// `C[m,n] = A[m,k] @ B[k,n]` (also serves batched "linear" rows).
+    Gemm,
+    /// FlashAttention forward over flattened `[bh, seq, d]` tensors.
+    FlashAttention { causal: bool },
+    /// Weight-only quantized GEMM `Ct[n,m] = dequant(B) @ A^T`.
+    Dequant { fmt: WeightFormat, group: i64 },
+    /// Mamba-2 chunked state update `S = B^T @ (w * X)`.
+    ChunkState,
+    /// Mamba-2 chunked scan `Y = w2 * (C @ S)`.
+    ChunkScan,
+}
+
+impl WorkloadKind {
+    /// Parse a manifest `workload=` tag. Tags are stable strings:
+    /// `gemm`, `flash_attention`, `flash_attention_causal`,
+    /// `dequant_<int4|int2|nf4|fp4>_g<group>`, `chunk_state`,
+    /// `chunk_scan`.
+    pub fn parse(tag: &str) -> Result<WorkloadKind> {
+        match tag {
+            "gemm" | "matmul" | "linear" => return Ok(WorkloadKind::Gemm),
+            "flash_attention" => return Ok(WorkloadKind::FlashAttention { causal: false }),
+            "flash_attention_causal" => return Ok(WorkloadKind::FlashAttention { causal: true }),
+            "chunk_state" => return Ok(WorkloadKind::ChunkState),
+            "chunk_scan" => return Ok(WorkloadKind::ChunkScan),
+            _ => {}
+        }
+        if let Some(rest) = tag.strip_prefix("dequant_") {
+            let (fmt_s, group_s) = rest.split_once("_g").unwrap_or((rest, "32"));
+            let fmt = match fmt_s {
+                "int4" => WeightFormat::Int4,
+                "int2" => WeightFormat::Int2,
+                "nf4" => WeightFormat::Nf4,
+                "fp4" => WeightFormat::Fp4,
+                other => bail!("unknown weight format {:?} in workload tag {:?}", other, tag),
+            };
+            let group: i64 = group_s
+                .parse()
+                .map_err(|_| anyhow!("bad group size in workload tag {:?}", tag))?;
+            if group <= 0 {
+                bail!("bad group size in workload tag {:?}", tag);
+            }
+            return Ok(WorkloadKind::Dequant { fmt, group });
+        }
+        bail!("unknown workload tag {:?}", tag)
+    }
+
+    /// Manifest tag for this workload (inverse of [`WorkloadKind::parse`]).
+    pub fn tag(&self) -> String {
+        match self {
+            WorkloadKind::Gemm => "gemm".to_string(),
+            WorkloadKind::FlashAttention { causal: false } => "flash_attention".to_string(),
+            WorkloadKind::FlashAttention { causal: true } => "flash_attention_causal".to_string(),
+            WorkloadKind::ChunkState => "chunk_state".to_string(),
+            WorkloadKind::ChunkScan => "chunk_scan".to_string(),
+            WorkloadKind::Dequant { fmt, group } => {
+                let f = match fmt {
+                    WeightFormat::Int4 => "int4",
+                    WeightFormat::Int2 => "int2",
+                    WeightFormat::Nf4 => "nf4",
+                    WeightFormat::Fp4 => "fp4",
+                };
+                format!("dequant_{}_g{}", f, group)
+            }
+        }
+    }
+
+    /// Best-effort inference from an artifact name, for manifests written
+    /// before the `workload=` column existed (4-column PJRT manifests).
+    pub fn from_artifact_name(name: &str) -> Result<WorkloadKind> {
+        if name.starts_with("matmul") || name.starts_with("gemm") || name.starts_with("linear") {
+            return Ok(WorkloadKind::Gemm);
+        }
+        if name.starts_with("flash_attention_causal") {
+            return Ok(WorkloadKind::FlashAttention { causal: true });
+        }
+        if name.starts_with("flash_attention") || name.starts_with("attention") {
+            return Ok(WorkloadKind::FlashAttention { causal: false });
+        }
+        if name.starts_with("chunk_state") {
+            return Ok(WorkloadKind::ChunkState);
+        }
+        if name.starts_with("chunk_scan") {
+            return Ok(WorkloadKind::ChunkScan);
+        }
+        if name.starts_with("dequant") {
+            return Ok(WorkloadKind::Dequant {
+                fmt: WeightFormat::Int4,
+                group: 32,
+            });
+        }
+        bail!(
+            "artifact {:?} has no workload mapping; regenerate the directory with \
+             `tilelang artifacts --force` (or add a workload= column to manifest.tsv)",
+            name
+        )
+    }
+}
+
+/// A manifest artifact resolved to an executable lowered program.
+pub(crate) struct InterpKernel {
+    lowered: LoweredProgram,
+    param_ids: Vec<BufferId>,
+    out_id: BufferId,
+    out_len: usize,
+}
+
+impl InterpKernel {
+    /// Resolve `spec` to a workload program (tile config via the tuning
+    /// cache) and lower it. `dir` is the artifact directory, used for
+    /// the default tuning-cache location.
+    pub(crate) fn prepare(
+        spec: &ArtifactSpec,
+        opts: &InterpOptions,
+        dir: &Path,
+    ) -> Result<InterpKernel> {
+        let kind = match &spec.workload {
+            Some(tag) => WorkloadKind::parse(tag)?,
+            None => WorkloadKind::from_artifact_name(&spec.name)?,
+        };
+        let dev = Device::by_name(&opts.device)
+            .ok_or_else(|| anyhow!("interp backend: unknown modeled device {:?}", opts.device))?;
+        let prog = build_program(&kind, spec, &dev, opts, dir)?;
+        if prog.params.len() != spec.in_shapes.len() + 1 {
+            bail!(
+                "{}: workload program has {} params, manifest lists {} inputs + 1 output",
+                spec.name,
+                prog.params.len(),
+                spec.in_shapes.len()
+            );
+        }
+        for (i, shape) in spec.in_shapes.iter().enumerate() {
+            let got = prog.params[i].static_shape();
+            if got.as_deref() != Some(shape.as_slice()) {
+                bail!(
+                    "{}: input {} shape {:?} does not match the workload program ({:?})",
+                    spec.name,
+                    i,
+                    shape,
+                    got
+                );
+            }
+        }
+        let out = prog.params.last().expect("workload program has params");
+        if out.static_shape().as_deref() != Some(spec.out_shape.as_slice()) {
+            bail!(
+                "{}: output shape {:?} does not match the workload program ({:?})",
+                spec.name,
+                spec.out_shape,
+                out.static_shape()
+            );
+        }
+        let lowered = compile(&prog, &dev, &CompileOptions::default())
+            .map_err(|e| anyhow!("{}: compile failed: {}", spec.name, e))?;
+        Ok(InterpKernel {
+            param_ids: prog.params.iter().map(|b| b.id).collect(),
+            out_id: out.id,
+            out_len: spec.out_len(),
+            lowered,
+        })
+    }
+
+    /// Execute f32 inputs (already length-validated against the spec).
+    pub(crate) fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let interp = Interp::new(&self.lowered).map_err(|e| anyhow!("interp init: {}", e))?;
+        let mut tensors = Tensors::new();
+        for (id, data) in self.param_ids.iter().zip(inputs) {
+            tensors.insert(*id, data.clone());
+        }
+        interp
+            .run(&mut tensors)
+            .map_err(|e| anyhow!("interp run: {}", e))?;
+        let out = tensors
+            .remove(&self.out_id)
+            .ok_or_else(|| anyhow!("interp produced no output tensor"))?;
+        if out.len() != self.out_len {
+            bail!("interp output length {} != manifest {}", out.len(), self.out_len);
+        }
+        Ok(out)
+    }
+}
+
+/// Select a config through the persistent tuning cache; `None` when
+/// tuning is disabled or the sweep found nothing feasible (callers fall
+/// back to the workload's static defaults).
+fn tuned_config<T: Tunable>(
+    t: &T,
+    dev: &Device,
+    opts: &InterpOptions,
+    dir: &Path,
+) -> Option<T::Config> {
+    if !opts.tune {
+        return None;
+    }
+    let mut cache = match &opts.cache_path {
+        Some(p) => TuningCache::open(p.clone()),
+        None => TuningCache::open(dir.join("tune_cache.json")),
+    };
+    match tune_cached(t, dev, &Penalties::none(), &mut cache) {
+        Ok(r) => {
+            if r.evaluated > 0 {
+                // fresh sweep: persist so the next serving start is warm
+                let _ = cache.save();
+            }
+            Some(r.config)
+        }
+        Err(_) => None,
+    }
+}
+
+fn dims<'a>(spec: &'a ArtifactSpec, i: usize, ndim: usize) -> Result<&'a [i64]> {
+    let s = spec
+        .in_shapes
+        .get(i)
+        .ok_or_else(|| anyhow!("{}: missing input {}", spec.name, i))?;
+    if s.len() != ndim {
+        bail!("{}: input {} must be rank {}, got {:?}", spec.name, i, ndim, s);
+    }
+    Ok(s)
+}
+
+/// Build the workload tile program for an artifact, validating the
+/// manifest shapes against the workload's parameter contract.
+fn build_program(
+    kind: &WorkloadKind,
+    spec: &ArtifactSpec,
+    dev: &Device,
+    opts: &InterpOptions,
+    dir: &Path,
+) -> Result<TileProgram> {
+    match kind {
+        WorkloadKind::Gemm => {
+            if spec.in_shapes.len() != 2 {
+                bail!("{}: gemm expects 2 inputs (A, B)", spec.name);
+            }
+            let a = dims(spec, 0, 2)?;
+            let b = dims(spec, 1, 2)?;
+            let (m, k, n) = (a[0], a[1], b[1]);
+            if b[0] != k || spec.out_shape != [m, n] {
+                bail!(
+                    "{}: inconsistent gemm shapes (A {:?}, B {:?}, out {:?})",
+                    spec.name,
+                    a,
+                    b,
+                    spec.out_shape
+                );
+            }
+            let tun = GemmTunable::new(m, n, k, DType::F16);
+            let cfg = tuned_config(&tun, dev, opts, dir)
+                .unwrap_or_else(|| TileConfig::default_for(m, n, k));
+            if !tun.accepts(&cfg) {
+                bail!("{}: no feasible gemm tile config for {}x{}x{}", spec.name, m, n, k);
+            }
+            Ok(tun.build(&cfg))
+        }
+        WorkloadKind::FlashAttention { causal } => {
+            if spec.in_shapes.len() != 3 {
+                bail!("{}: attention expects 3 inputs (Q, K, V)", spec.name);
+            }
+            let q = dims(spec, 0, 3)?;
+            let (bh, seq, d) = (q[0], q[1], q[2]);
+            for i in 1..3 {
+                if spec.in_shapes[i] != q {
+                    bail!(
+                        "{}: K/V shape {:?} != Q {:?}",
+                        spec.name,
+                        spec.in_shapes[i],
+                        q
+                    );
+                }
+            }
+            if spec.out_shape != q {
+                bail!("{}: output shape {:?} != Q {:?}", spec.name, spec.out_shape, q);
+            }
+            let shape = AttnShape {
+                name: "artifact",
+                batch: 1,
+                heads: bh,
+                seq_len: seq,
+                head_dim: d,
+                causal: *causal,
+            };
+            let tun = AttentionTunable { shape };
+            let cfg =
+                tuned_config(&tun, dev, opts, dir).unwrap_or_else(|| AttnConfig::default_for(seq));
+            if !tun.accepts(&cfg) {
+                bail!("{}: no feasible attention tile config for seq {}", spec.name, seq);
+            }
+            Ok(tun.build(&cfg))
+        }
+        WorkloadKind::Dequant { fmt, group } => {
+            let (fmt, group) = (*fmt, *group);
+            if spec.in_shapes.len() != 3 {
+                bail!("{}: dequant expects 3 inputs (A, packed B, Scales)", spec.name);
+            }
+            let a = dims(spec, 0, 2)?;
+            let b = dims(spec, 1, 2)?;
+            let s = dims(spec, 2, 2)?;
+            let (m, k) = (a[0], a[1]);
+            let n = b[0];
+            let epb = fmt.elems_per_byte();
+            if b[1] * epb != k || s[0] != n || s[1] * group != k || spec.out_shape != [n, m] {
+                bail!(
+                    "{}: inconsistent dequant shapes (A {:?}, B {:?}, Scales {:?}, out {:?}, \
+                     group {})",
+                    spec.name,
+                    a,
+                    b,
+                    s,
+                    spec.out_shape,
+                    group
+                );
+            }
+            let tun = DequantTunable::new(m, n, k, fmt);
+            let mut cfg = tuned_config(&tun, dev, opts, dir).unwrap_or_default();
+            // the artifact fixes the scale grouping; the tuner's choice of
+            // group must yield to the packed data layout
+            cfg.group_size = group;
+            if !tun.accepts(&cfg) {
+                cfg = DequantConfig {
+                    group_size: group,
+                    block_k: group.max(32),
+                    ..DequantConfig::default()
+                };
+            }
+            if !tun.accepts(&cfg) {
+                bail!("{}: no feasible dequant tile config", spec.name);
+            }
+            Ok(tun.build(&cfg))
+        }
+        WorkloadKind::ChunkState => {
+            if spec.in_shapes.len() != 3 {
+                bail!("{}: chunk_state expects 3 inputs (B, X, W)", spec.name);
+            }
+            let b = dims(spec, 0, 3)?;
+            let x = dims(spec, 1, 3)?;
+            let w = dims(spec, 2, 2)?;
+            let (bh, seq, n_state) = (b[0], b[1], b[2]);
+            let p = x[2];
+            let out = &spec.out_shape;
+            if x[0] != bh
+                || x[1] != seq
+                || w != [bh, seq]
+                || out.len() != 3
+                || out[1] != n_state
+                || out[2] != p
+                || out[0] % bh != 0
+            {
+                bail!(
+                    "{}: inconsistent chunk_state shapes (B {:?}, X {:?}, W {:?}, out {:?})",
+                    spec.name,
+                    b,
+                    x,
+                    w,
+                    out
+                );
+            }
+            let chunk = pinned_chunk(spec, seq, out[0] / bh)?;
+            let stages = chunk_stages(ChunkKind::State, bh, seq, n_state, p, dev, opts, dir);
+            Ok(chunk_state_program(bh, seq, n_state, p, chunk, stages))
+        }
+        WorkloadKind::ChunkScan => {
+            if spec.in_shapes.len() != 3 {
+                bail!("{}: chunk_scan expects 3 inputs (C, S, W2)", spec.name);
+            }
+            let c = dims(spec, 0, 3)?;
+            let s = dims(spec, 1, 3)?;
+            let w = dims(spec, 2, 2)?;
+            let (bh, seq, n_state) = (c[0], c[1], c[2]);
+            let p = s[2];
+            if s[1] != n_state || w != [bh, seq] || s[0] % bh != 0 || spec.out_shape != [bh, seq, p]
+            {
+                bail!(
+                    "{}: inconsistent chunk_scan shapes (C {:?}, S {:?}, W2 {:?}, out {:?})",
+                    spec.name,
+                    c,
+                    s,
+                    w,
+                    spec.out_shape
+                );
+            }
+            let chunk = pinned_chunk(spec, seq, s[0] / bh)?;
+            let stages = chunk_stages(ChunkKind::Scan, bh, seq, n_state, p, dev, opts, dir);
+            Ok(chunk_scan_program(bh, seq, n_state, p, chunk, stages))
+        }
+    }
+}
+
+/// The chunk length a linear-attention artifact pins through its state
+/// tensor shape (`S: [bh * nchunks, N, P]` fixes `chunk = seq / nchunks`).
+fn pinned_chunk(spec: &ArtifactSpec, seq: i64, nchunks: i64) -> Result<i64> {
+    if nchunks <= 0 || seq % nchunks != 0 {
+        bail!(
+            "{}: state tensor implies {} chunks, which does not divide seq {}",
+            spec.name,
+            nchunks,
+            seq
+        );
+    }
+    Ok(seq / nchunks)
+}
+
+/// Pipeline depth for a chunk kernel: the chunk length is pinned by the
+/// artifact, so only the schedule knob that survives (num_stages) is
+/// taken from the tuner; defaults to 2 when tuning is off.
+#[allow(clippy::too_many_arguments)]
+fn chunk_stages(
+    kind: ChunkKind,
+    bh: i64,
+    seq: i64,
+    n_state: i64,
+    p: i64,
+    dev: &Device,
+    opts: &InterpOptions,
+    dir: &Path,
+) -> usize {
+    let shape = LinAttnShape {
+        name: "artifact",
+        batch: 1,
+        nheads: bh,
+        seq_len: seq,
+        head_dim: p,
+        d_state: n_state,
+    };
+    tuned_config(&LinearAttentionTunable { kind, shape }, dev, opts, dir)
+        .map(|c| c.num_stages)
+        .unwrap_or(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_tags_round_trip() {
+        let kinds = [
+            WorkloadKind::Gemm,
+            WorkloadKind::FlashAttention { causal: false },
+            WorkloadKind::FlashAttention { causal: true },
+            WorkloadKind::ChunkState,
+            WorkloadKind::ChunkScan,
+            WorkloadKind::Dequant {
+                fmt: WeightFormat::Int4,
+                group: 32,
+            },
+            WorkloadKind::Dequant {
+                fmt: WeightFormat::Nf4,
+                group: 64,
+            },
+        ];
+        for kind in kinds {
+            let tag = kind.tag();
+            assert_eq!(WorkloadKind::parse(&tag).unwrap(), kind, "tag {}", tag);
+        }
+        assert!(WorkloadKind::parse("wat").is_err());
+        assert!(WorkloadKind::parse("dequant_int9_g32").is_err());
+        assert!(WorkloadKind::parse("dequant_int4_gx").is_err());
+    }
+
+    #[test]
+    fn name_fallback_covers_legacy_artifacts() {
+        assert_eq!(
+            WorkloadKind::from_artifact_name("matmul_128").unwrap(),
+            WorkloadKind::Gemm
+        );
+        assert_eq!(
+            WorkloadKind::from_artifact_name("flash_attention_causal_2x128x64").unwrap(),
+            WorkloadKind::FlashAttention { causal: true }
+        );
+        assert_eq!(
+            WorkloadKind::from_artifact_name("chunk_scan_2x128").unwrap(),
+            WorkloadKind::ChunkScan
+        );
+        // PJRT-era HLO models have no tile-program equivalent: a clear
+        // error beats silently executing the wrong math
+        assert!(WorkloadKind::from_artifact_name("transformer_block").is_err());
+    }
+}

@@ -1,40 +1,96 @@
-//! PJRT runtime: loads AOT-compiled HLO-text artifacts (produced once by
-//! `python/compile/aot.py`) and executes them from the rust hot path.
-//! Python is never on the request path — the binary is self-contained
-//! after `make artifacts`.
+//! Artifact runtime: the L3 execution layer behind the coordinator.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` ->
-//! `HloModuleProto::from_text_file` -> `client.compile` -> `execute`,
-//! with `return_tuple=True` artifacts unwrapped via `to_tuple1`.
+//! A `Runtime` opens an artifact directory (`manifest.tsv` + example
+//! input bins + golden samples — written offline by `tilelang
+//! artifacts`, see [`artifacts`]), and loads artifacts through an
+//! [`ExecBackend`]:
 //!
-//! The PJRT execution backend is gated behind the `pjrt` cargo feature
-//! (it needs the vendored `xla` crate, absent from the offline vendor
-//! set). Without it the runtime still parses manifests, goldens and
-//! example inputs — everything the coordinator and CLI need for
-//! bookkeeping — but `load`/`execute` return an error. Check
-//! [`Runtime::has_execution_backend`] before relying on execution.
-//! (Re-enabling the feature also needs a `From<xla::Error>` impl for
-//! `error::Error` so the gated `?` conversions resolve.)
+//! * [`ExecBackend::Interp`] — always available. Resolves the artifact's
+//!   workload tag to a tile program, picks the tile configuration
+//!   through the persistent tuning cache, lowers it and executes
+//!   requests on the TIR interpreter (`tir::interp`). The whole serving
+//!   loop is hermetic: no Python, no HLO files, no network.
+//! * `ExecBackend::Pjrt` — the fast native backend, gated behind the
+//!   off-by-default `pjrt` cargo feature (needs a vendored `xla` crate;
+//!   also a `From<xla::Error>` impl for `error::Error` so the gated `?`
+//!   conversions resolve). Loads AOT-compiled HLO-text artifacts and
+//!   executes them on a PJRT CPU client, following the
+//!   `/opt/xla-example/load_hlo` pattern: `PjRtClient::cpu()` ->
+//!   `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
+//!
+//! Both backends share the manifest bookkeeping, input-shape validation,
+//! the per-runtime compile cache and [`Runtime::golden_check`].
+
+pub mod artifacts;
+mod interp_backend;
+
+pub use interp_backend::{InterpOptions, WorkloadKind};
 
 use std::collections::HashMap;
 use std::fs;
 use std::path::{Path, PathBuf};
-#[cfg(feature = "pjrt")]
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::error::{Context, Result};
 use crate::{anyhow, bail};
+
+/// How loaded artifacts execute.
+#[derive(Clone, Debug)]
+pub enum ExecBackend {
+    /// Lower the artifact's workload program and run it on the TIR
+    /// interpreter (always available; see [`InterpOptions`]).
+    Interp(InterpOptions),
+    /// Compile the artifact's HLO text on a PJRT CPU client.
+    #[cfg(feature = "pjrt")]
+    Pjrt,
+}
+
+impl ExecBackend {
+    /// The interpreter backend with default options.
+    pub fn interp() -> ExecBackend {
+        ExecBackend::Interp(InterpOptions::default())
+    }
+
+    /// The fastest backend this build provides: PJRT when the feature is
+    /// enabled, the interpreter otherwise.
+    #[cfg(feature = "pjrt")]
+    pub fn default_backend() -> ExecBackend {
+        ExecBackend::Pjrt
+    }
+
+    /// The fastest backend this build provides: PJRT when the feature is
+    /// enabled, the interpreter otherwise.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn default_backend() -> ExecBackend {
+        ExecBackend::interp()
+    }
+
+    /// Stable backend name for logs and reports.
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExecBackend::Interp(_) => "interp",
+            #[cfg(feature = "pjrt")]
+            ExecBackend::Pjrt => "pjrt",
+        }
+    }
+}
 
 /// Parsed manifest entry for one artifact.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
     pub name: String,
+    /// HLO-text location (PJRT backend only; `-` for interp-only
+    /// artifacts, which rebuild programs from the workload tag).
     pub hlo_path: PathBuf,
     pub in_shapes: Vec<Vec<i64>>,
     pub out_shape: Vec<i64>,
+    /// Workload tag (`workload=` manifest column) mapping the artifact
+    /// to a tile-program family; `None` on legacy 4-column manifests.
+    pub workload: Option<String>,
 }
 
 impl ArtifactSpec {
+    /// Number of output elements.
     pub fn out_len(&self) -> usize {
         self.out_shape.iter().product::<i64>() as usize
     }
@@ -50,13 +106,18 @@ pub struct Golden {
 /// A compiled, executable artifact.
 pub struct LoadedKernel {
     pub spec: ArtifactSpec,
+    exec: KernelExec,
+}
+
+enum KernelExec {
+    Interp(interp_backend::InterpKernel),
     #[cfg(feature = "pjrt")]
-    exe: xla::PjRtLoadedExecutable,
+    Pjrt(xla::PjRtLoadedExecutable),
 }
 
 impl LoadedKernel {
-    /// Execute with row-major f32 inputs.
-    #[cfg(feature = "pjrt")]
+    /// Execute with row-major f32 inputs (validated against the
+    /// manifest shapes before dispatch to the backend).
     pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
         if inputs.len() != self.spec.in_shapes.len() {
             bail!(
@@ -66,17 +127,33 @@ impl LoadedKernel {
                 inputs.len()
             );
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs.iter().zip(&self.spec.in_shapes) {
-            let want: i64 = shape.iter().product();
-            if data.len() as i64 != want {
+        for (i, (data, shape)) in inputs.iter().zip(&self.spec.in_shapes).enumerate() {
+            let want = shape.iter().product::<i64>() as usize;
+            if data.len() != want {
                 bail!(
-                    "{}: input length {} != shape {:?}",
+                    "{}: input {} length {} != shape {:?}",
                     self.spec.name,
+                    i,
                     data.len(),
                     shape
                 );
             }
+        }
+        match &self.exec {
+            KernelExec::Interp(k) => k.execute(inputs),
+            #[cfg(feature = "pjrt")]
+            KernelExec::Pjrt(exe) => self.execute_pjrt(exe, inputs),
+        }
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn execute_pjrt(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[Vec<f32>],
+    ) -> Result<Vec<f32>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs.iter().zip(&self.spec.in_shapes) {
             let lit = xla::Literal::vec1(data);
             let lit = if shape.len() > 1 {
                 lit.reshape(shape)?
@@ -85,54 +162,68 @@ impl LoadedKernel {
             };
             literals.push(lit);
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot lowering uses return_tuple=True: unwrap the 1-tuple
         let out = result.to_tuple1()?;
         Ok(out.to_vec::<f32>()?)
     }
-
-    /// Execute with row-major f32 inputs (stub: no backend in this build).
-    #[cfg(not(feature = "pjrt"))]
-    pub fn execute(&self, _inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
-        bail!(
-            "{}: this build has no PJRT backend (enable the `pjrt` feature \
-             and supply the vendored `xla` crate)",
-            self.spec.name
-        )
-    }
 }
 
-/// The artifact registry + PJRT client + compile cache.
+/// The artifact registry + execution backend + compile cache.
 pub struct Runtime {
+    /// Only constructed for `ExecBackend::Pjrt`: the interp backend must
+    /// stay usable even when PJRT client initialization would fail.
     #[cfg(feature = "pjrt")]
-    client: xla::PjRtClient,
+    client: Option<xla::PjRtClient>,
+    backend: ExecBackend,
     dir: PathBuf,
     specs: HashMap<String, ArtifactSpec>,
     goldens: HashMap<String, Golden>,
-    #[cfg(feature = "pjrt")]
-    cache: Mutex<HashMap<String, std::sync::Arc<LoadedKernel>>>,
+    cache: Mutex<HashMap<String, Arc<LoadedKernel>>>,
 }
 
-fn parse_shape(s: &str) -> Vec<i64> {
-    s.split('x').map(|d| d.parse().unwrap_or(0)).collect()
+/// Parse a `x`-separated shape (`128x64`). Malformed or non-positive
+/// dimensions are manifest errors: a silently-zeroed dim would poison
+/// `out_len` and every batch computation downstream.
+fn parse_shape(s: &str) -> Result<Vec<i64>> {
+    let mut out = Vec::new();
+    for d in s.split('x') {
+        let v: i64 = d
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("malformed shape {:?}: bad dimension {:?}", s, d))?;
+        if v <= 0 {
+            bail!("malformed shape {:?}: non-positive dimension {}", s, v);
+        }
+        out.push(v);
+    }
+    Ok(out)
 }
 
 impl Runtime {
-    /// True when this build can execute artifacts (PJRT linked in).
+    /// True when this build can execute artifacts. Always true since the
+    /// interp backend is built in; the `pjrt` feature only swaps in a
+    /// faster native default.
     pub fn has_execution_backend() -> bool {
-        cfg!(feature = "pjrt")
+        true
     }
 
-    /// Open the artifacts directory (built by `make artifacts`).
+    /// Open the artifacts directory with the build's default backend
+    /// ([`ExecBackend::default_backend`]).
     pub fn new(dir: impl AsRef<Path>) -> Result<Runtime> {
+        Runtime::with_backend(dir, ExecBackend::default_backend())
+    }
+
+    /// Open the artifacts directory with an explicit execution backend.
+    pub fn with_backend(dir: impl AsRef<Path>, backend: ExecBackend) -> Result<Runtime> {
         let dir = dir.as_ref().to_path_buf();
         let manifest = dir.join("manifest.tsv");
         let text = fs::read_to_string(&manifest)
-            .with_context(|| format!("missing {:?}; run `make artifacts`", manifest))?;
+            .with_context(|| format!("missing {:?}; run `tilelang artifacts`", manifest))?;
         let mut specs = HashMap::new();
         for line in text.lines().filter(|l| !l.trim().is_empty()) {
             let cols: Vec<&str> = line.split('\t').collect();
-            if cols.len() != 4 {
+            if cols.len() != 4 && cols.len() != 5 {
                 bail!("malformed manifest line: {}", line);
             }
             let ins = cols[2]
@@ -141,13 +232,29 @@ impl Runtime {
             let out = cols[3]
                 .strip_prefix("out=")
                 .ok_or_else(|| anyhow!("bad manifest out= column"))?;
+            let workload = match cols.get(4) {
+                Some(c) => Some(
+                    c.strip_prefix("workload=")
+                        .ok_or_else(|| anyhow!("bad manifest workload= column"))?
+                        .to_string(),
+                ),
+                None => None,
+            };
+            let in_shapes = ins
+                .split(',')
+                .map(parse_shape)
+                .collect::<Result<Vec<_>>>()
+                .with_context(|| format!("manifest entry {}", cols[0]))?;
+            let out_shape =
+                parse_shape(out).with_context(|| format!("manifest entry {}", cols[0]))?;
             specs.insert(
                 cols[0].to_string(),
                 ArtifactSpec {
                     name: cols[0].to_string(),
                     hlo_path: dir.join(cols[1]),
-                    in_shapes: ins.split(',').map(parse_shape).collect(),
-                    out_shape: parse_shape(out),
+                    in_shapes,
+                    out_shape,
+                    workload,
                 },
             );
         }
@@ -175,60 +282,92 @@ impl Runtime {
                 );
             }
         }
+        #[cfg(feature = "pjrt")]
+        let client = match &backend {
+            ExecBackend::Pjrt => {
+                Some(xla::PjRtClient::cpu().map_err(|e| anyhow!("{:?}", e))?)
+            }
+            _ => None,
+        };
         Ok(Runtime {
             #[cfg(feature = "pjrt")]
-            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("{:?}", e))?,
+            client,
+            backend,
             dir,
             specs,
             goldens,
-            #[cfg(feature = "pjrt")]
             cache: Mutex::new(HashMap::new()),
         })
     }
 
+    /// The backend this runtime loads artifacts with.
+    pub fn backend(&self) -> &ExecBackend {
+        &self.backend
+    }
+
+    /// Stable backend name for logs and reports.
+    pub fn backend_name(&self) -> &'static str {
+        self.backend.name()
+    }
+
+    /// Sorted artifact names from the manifest.
     pub fn artifact_names(&self) -> Vec<String> {
         let mut v: Vec<String> = self.specs.keys().cloned().collect();
         v.sort();
         v
     }
 
+    /// The parsed manifest entry for `name`.
     pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
         self.specs
             .get(name)
             .ok_or_else(|| anyhow!("unknown artifact {}", name))
     }
 
-    /// Load (compile) an artifact; cached.
-    #[cfg(feature = "pjrt")]
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedKernel>> {
+    /// Load (resolve + compile) an artifact; cached per runtime. On the
+    /// interp backend this is where tile configs are selected through
+    /// the tuning cache, so serving starts pre-compile tuned configs.
+    pub fn load(&self, name: &str) -> Result<Arc<LoadedKernel>> {
         if let Some(k) = self.cache.lock().unwrap().get(name) {
             return Ok(k.clone());
         }
         let spec = self.spec(name)?.clone();
-        let proto = xla::HloModuleProto::from_text_file(
-            spec.hlo_path
-                .to_str()
-                .ok_or_else(|| anyhow!("bad path"))?,
-        )?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let k = std::sync::Arc::new(LoadedKernel { spec, exe });
+        let exec = match &self.backend {
+            ExecBackend::Interp(opts) => KernelExec::Interp(interp_backend::InterpKernel::prepare(
+                &spec, opts, &self.dir,
+            )?),
+            #[cfg(feature = "pjrt")]
+            ExecBackend::Pjrt => {
+                if spec.hlo_path.file_name() == Some(std::ffi::OsStr::new("-")) {
+                    // rust-generated artifacts carry no HLO (path "-"):
+                    // they execute on the interp backend even in pjrt
+                    // builds, resolved from their workload tag
+                    KernelExec::Interp(interp_backend::InterpKernel::prepare(
+                        &spec,
+                        &InterpOptions::default(),
+                        &self.dir,
+                    )?)
+                } else {
+                    let proto = xla::HloModuleProto::from_text_file(
+                        spec.hlo_path
+                            .to_str()
+                            .ok_or_else(|| anyhow!("bad path"))?,
+                    )?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let client = self
+                        .client
+                        .as_ref()
+                        .ok_or_else(|| anyhow!("PJRT client not initialized"))?;
+                    KernelExec::Pjrt(client.compile(&comp)?)
+                }
+            }
+        };
+        let k = Arc::new(LoadedKernel { spec, exec });
         self.cache
             .lock()
             .unwrap()
             .insert(name.to_string(), k.clone());
         Ok(k)
-    }
-
-    /// Load (compile) an artifact (stub: no backend in this build).
-    #[cfg(not(feature = "pjrt"))]
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedKernel>> {
-        let _ = self.spec(name)?;
-        bail!(
-            "cannot load {}: this build has no PJRT backend (enable the \
-             `pjrt` feature and supply the vendored `xla` crate)",
-            name
-        )
     }
 
     /// Convenience: load + execute.
@@ -259,7 +398,8 @@ impl Runtime {
     }
 
     /// Execute with the recorded inputs and compare against the golden
-    /// samples baked by aot.py. Returns the max abs error.
+    /// samples (CPU references for rust-generated artifacts). Returns
+    /// the max abs error over the sampled points.
     pub fn golden_check(&self, name: &str) -> Result<f32> {
         let golden = self
             .goldens
@@ -277,7 +417,15 @@ impl Runtime {
         }
         let mut max_err = 0f32;
         for &(i, v) in &golden.samples {
-            max_err = max_err.max((out[i] - v).abs());
+            let Some(&o) = out.get(i) else {
+                bail!(
+                    "{}: golden sample index {} out of range (output len {})",
+                    name,
+                    i,
+                    out.len()
+                );
+            };
+            max_err = max_err.max((o - v).abs());
         }
         Ok(max_err)
     }
@@ -287,34 +435,89 @@ impl Runtime {
 mod tests {
     use super::*;
 
+    fn write_dir(tag: &str, manifest: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("tilelang-rt-{}-{}", tag, std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), manifest).unwrap();
+        dir
+    }
+
     #[test]
     fn manifest_parsing_and_spec_lookup() {
-        let dir = std::env::temp_dir().join(format!("tilelang-rt-test-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(
-            dir.join("manifest.tsv"),
+        let dir = write_dir(
+            "parse",
             "matmul_128\tmatmul_128.hlo\tin=128x64,64x128\tout=128x128\n",
-        )
-        .unwrap();
-        let rt = Runtime::new(&dir).expect("runtime opens without a backend");
+        );
+        let rt = Runtime::new(&dir).expect("runtime opens");
+        assert!(Runtime::has_execution_backend());
         assert_eq!(rt.artifact_names(), vec!["matmul_128".to_string()]);
         let spec = rt.spec("matmul_128").unwrap();
         assert_eq!(spec.in_shapes, vec![vec![128, 64], vec![64, 128]]);
         assert_eq!(spec.out_len(), 128 * 128);
+        // legacy 4-column manifests carry no workload tag
+        assert!(spec.workload.is_none());
         assert!(rt.spec("nope").is_err());
-        if !Runtime::has_execution_backend() {
-            let err = rt.execute("matmul_128", &[]).unwrap_err().to_string();
-            assert!(err.contains("pjrt"), "{}", err);
-        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_workload_column_is_parsed() {
+        let dir = write_dir("wl", "linear_8\t-\tin=8x4,4x8\tout=8x8\tworkload=gemm\n");
+        let rt = Runtime::new(&dir).unwrap();
+        assert_eq!(rt.spec("linear_8").unwrap().workload.as_deref(), Some("gemm"));
+        assert_eq!(rt.backend_name(), ExecBackend::default_backend().name());
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn malformed_manifest_is_an_error() {
-        let dir = std::env::temp_dir().join(format!("tilelang-rt-bad-{}", std::process::id()));
-        std::fs::create_dir_all(&dir).unwrap();
-        std::fs::write(dir.join("manifest.tsv"), "only two\tcolumns\n").unwrap();
+        let dir = write_dir("bad", "only two\tcolumns\n");
         assert!(Runtime::new(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_shape_dims_are_errors_not_zero() {
+        for (i, bad) in ["in=12xab,4x4", "in=0x4,4x4", "in=-2x4,4x4", "in=,4x4"]
+            .iter()
+            .enumerate()
+        {
+            let line = format!("k\tk.hlo\t{}\tout=4x4\n", bad);
+            let dir = write_dir(&format!("shape{}", i), &line);
+            let err = Runtime::new(&dir).unwrap_err().to_string();
+            assert!(err.contains("malformed shape"), "{}: {}", bad, err);
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+        // malformed output shapes are rejected too
+        let dir = write_dir("shape-out", "k\tk.hlo\tin=4x4,4x4\tout=4x\n");
+        assert!(Runtime::new(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn interp_backend_executes_generated_artifacts() {
+        let dir =
+            std::env::temp_dir().join(format!("tilelang-rt-interp-{}", std::process::id()));
+        let defs = artifacts::default_set();
+        artifacts::generate(&dir, &defs[..1]).expect("generate matmul artifact");
+        // tune: false keeps this unit test fast (no sweep) and covers
+        // the static-default config path
+        let rt = Runtime::with_backend(
+            &dir,
+            ExecBackend::Interp(InterpOptions {
+                tune: false,
+                ..Default::default()
+            }),
+        )
+        .expect("runtime");
+        let err = rt.golden_check("matmul_64x64x64").expect("golden check");
+        assert!(err < 0.05, "golden max err {}", err);
+        let e = rt
+            .execute("matmul_64x64x64", &[])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("expects 2 inputs"), "{}", e);
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,4 +1,7 @@
-//! Interpreter for lowered programs — the semantic oracle.
+//! Interpreter for lowered programs — the semantic oracle, and the
+//! always-available execution backend of the serving layer
+//! (`runtime::ExecBackend::Interp` executes requests through this
+//! module, so deployments work in an offline, dependency-free build).
 //!
 //! Executes a `LoweredProgram` block-by-block on the CPU with:
 //! * physical shared memory (accesses go through the inferred layouts, so

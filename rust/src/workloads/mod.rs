@@ -2,6 +2,12 @@
 //! FlashMLA (Fig. 18), Mamba-2 linear-attention chunk kernels, and the
 //! dequantize-GEMM family (Fig. 17), plus the Appendix A shape tables
 //! and CPU reference implementations.
+//!
+//! These families are also the execution vocabulary of the serving
+//! layer: the runtime's interp backend resolves a manifest artifact's
+//! `workload=` tag to one of these program builders, and the CPU
+//! references are the ground truth for artifact goldens
+//! (`runtime::artifacts`) and the differential tests.
 
 pub mod attention;
 pub mod dequant;

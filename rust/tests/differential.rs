@@ -137,6 +137,41 @@ fn attention_interp_matches_reference_over_seeded_grid() {
     assert!(executed >= 5, "grid too sparse: only {executed} cases ran");
 }
 
+/// End-to-end differential: the runtime's interp execution backend
+/// (manifest -> workload program -> tuned config -> lowered IR ->
+/// interpreter) against the CPU references, through the same
+/// `Runtime::execute` path the coordinator serves from.
+#[test]
+fn interp_backend_runtime_matches_references_end_to_end() {
+    use tilelang::runtime::{artifacts, ExecBackend, InterpOptions, Runtime};
+
+    let dir =
+        std::env::temp_dir().join(format!("tilelang-diff-artifacts-{}", std::process::id()));
+    artifacts::generate_default_set(&dir).expect("generate artifacts");
+    let rt = Runtime::with_backend(&dir, ExecBackend::Interp(InterpOptions::default()))
+        .expect("runtime");
+
+    // gemm artifact: full-output comparison against the CPU reference
+    let ins = rt.example_inputs("matmul_64x64x64").expect("inputs");
+    let got = rt.execute("matmul_64x64x64", &ins).expect("exec");
+    let want = reference_matmul(&ins[0], &ins[1], 64, 64, 64);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 0.05 + 0.02 * w.abs(), "{} vs {}", g, w);
+    }
+
+    // attention artifact: end-to-end through the same path
+    let ins = rt.example_inputs("flash_attention_2x128x64").expect("inputs");
+    let got = rt.execute("flash_attention_2x128x64", &ins).expect("exec");
+    let want = reference_attention(&ins[0], &ins[1], &ins[2], 2, 128, 64, false);
+    let mut max_err = 0f32;
+    for (g, w) in got.iter().zip(&want) {
+        max_err = max_err.max((g - w).abs());
+    }
+    assert!(max_err < 0.03, "attention max err {max_err}");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn dequant_interp_matches_reference_over_config_grid() {
     let (m, n, k) = (32i64, 64i64, 64i64);
