@@ -12,13 +12,15 @@
 //! The run cross-checks outputs against a direct artifact execution and
 //! the recorded goldens, then reports latency percentiles + throughput.
 //!
-//! Run: cargo run --release --example transformer_serve
-//! (artifacts are generated on the fly when the directory is missing)
+//! Run: cargo run --release --example transformer_serve [DIR] [SHARDS]
+//! (artifacts are generated on the fly when the directory is missing;
+//! SHARDS >= 2 partitions the model across parallel executors through
+//! the sharded backend)
 
 use std::time::Instant;
 
 use tilelang::coordinator::{percentile, BatchPolicy, Coordinator};
-use tilelang::runtime::{artifacts, Runtime};
+use tilelang::runtime::{artifacts, ExecBackend, Runtime};
 
 /// The batched serving model: a transformer feed-forward linear layer
 /// (input 0 is the row batch, input 1 the weight matrix).
@@ -26,11 +28,20 @@ const MODEL: &str = "linear_64x256x64";
 
 fn main() {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
+    let shards: usize = std::env::args()
+        .nth(2)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
     if !std::path::Path::new(&dir).join("manifest.tsv").exists() {
         let names = artifacts::generate_default_set(&dir).expect("generate artifacts");
         println!("generated {} artifacts in {}/", names.len(), dir);
     }
-    let rt = Runtime::new(&dir).expect("open artifact runtime");
+    let backend = if shards >= 2 {
+        ExecBackend::sharded(shards)
+    } else {
+        ExecBackend::default_backend()
+    };
+    let rt = Runtime::with_backend(&dir, backend.clone()).expect("open artifact runtime");
     if rt.spec(MODEL).is_err() {
         // stale directory from an older generator (or a PJRT-era
         // `make artifacts` run): it parses but lacks the serving model
@@ -48,6 +59,15 @@ fn main() {
         rt.backend_name()
     );
     assert!(err < 0.05, "golden diverged: {err}");
+    if shards >= 2 {
+        let plan = rt
+            .load(MODEL)
+            .expect("load sharded model")
+            .shard_plan()
+            .expect("sharded backend exposes its plan")
+            .describe();
+        println!("sharding: {plan}");
+    }
 
     // reference outputs for request cross-checking
     let inputs = rt.example_inputs(MODEL).expect("inputs");
@@ -58,8 +78,9 @@ fn main() {
     let direct = rt.execute(MODEL, &inputs).expect("direct exec");
 
     // ---- serve ---------------------------------------------------------
-    let coord = Coordinator::start_batched(&dir, MODEL, BatchPolicy::default())
-        .expect("start coordinator");
+    let coord =
+        Coordinator::start_batched_with_backend(&dir, backend, MODEL, BatchPolicy::default())
+            .expect("start coordinator");
     let n_requests = 64usize;
     println!(
         "serving {n_requests} single-row requests (artifact batch = {batch}, \

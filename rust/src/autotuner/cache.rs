@@ -24,6 +24,11 @@ pub struct CacheKey {
     /// `Penalties::none()`. Keeps baseline sweeps from colliding with
     /// the tilelang entries under the same workload/shape key.
     pub variant: String,
+    /// Shard count the kernel is tuned under (`1` = unsharded). Sharded
+    /// serving tunes per-shard sub-shapes whose optima need not match a
+    /// same-shape single-device kernel, so the count is part of the
+    /// identity. Entries written before this field existed decode as 1.
+    pub shards: i64,
 }
 
 impl CacheKey {
@@ -37,6 +42,7 @@ impl CacheKey {
             ("dtype".into(), Json::Str(self.dtype.clone())),
             ("device".into(), Json::Str(self.device.clone())),
             ("variant".into(), Json::Str(self.variant.clone())),
+            ("shards".into(), Json::Num(self.shards as f64)),
         ]
     }
 
@@ -47,6 +53,7 @@ impl CacheKey {
             dtype: v.get("dtype")?.as_str()?.to_string(),
             device: v.get("device")?.as_str()?.to_string(),
             variant: v.get("variant")?.as_str()?.to_string(),
+            shards: v.get("shards").and_then(|s| s.as_i64()).unwrap_or(1),
         })
     }
 }
@@ -225,6 +232,7 @@ mod tests {
             dtype: "float16".into(),
             device: "A100-80G".into(),
             variant: "default".into(),
+            shards: 1,
         }
     }
 
@@ -252,8 +260,11 @@ mod tests {
         other_dev.device = "H100-SXM".into();
         let mut other_variant = key("gemm");
         other_variant.variant = "triton".into();
+        let mut other_shards = key("gemm");
+        other_shards.shards = 2;
         assert!(c.get(&other_dev).is_none());
         assert!(c.get(&other_variant).is_none());
+        assert!(c.get(&other_shards).is_none());
     }
 
     #[test]

@@ -142,12 +142,26 @@ pub fn tune_cached<T: Tunable>(
     pen: &Penalties,
     cache: &mut TuningCache,
 ) -> Result<TuneResult<T::Config>, TuneError> {
+    tune_cached_sharded(t, dev, pen, cache, 1)
+}
+
+/// [`tune_cached`] under a shard count: per-shard sub-shape configs are
+/// cached independently of same-shape single-device entries (the shard
+/// count is a [`CacheKey`] component).
+pub fn tune_cached_sharded<T: Tunable>(
+    t: &T,
+    dev: &Device,
+    pen: &Penalties,
+    cache: &mut TuningCache,
+    shards: usize,
+) -> Result<TuneResult<T::Config>, TuneError> {
     let key = CacheKey {
         workload: t.workload().to_string(),
         shape: t.shape_key(),
         dtype: t.dtype_key(),
         device: dev.name.to_string(),
         variant: penalties_variant(pen),
+        shards: shards.max(1) as i64,
     };
     if let Some(cfg_json) = cache.get(&key) {
         if let Some(config) = T::Config::from_json(cfg_json) {
@@ -404,6 +418,7 @@ mod tests {
             dtype: "float16".into(),
             device: dev.name.to_string(),
             variant: "default".into(),
+            shards: 1,
         };
         let mut bad = TileConfig::default_for(512, 512, 512);
         bad.threads = 0;
@@ -466,6 +481,24 @@ mod tests {
         let r = tune_mla(&mla_shape, &dev, &pen).unwrap();
         assert!(r.evaluated > 0);
         assert!(mla_shape.heads % r.config.block_h == 0);
+    }
+
+    #[test]
+    fn shard_counts_are_distinct_cache_entries() {
+        let dev = Device::a100();
+        let mut cache = TuningCache::in_memory();
+        let t = GemmTunable::new(1024, 1024, 1024, DType::F16);
+        let single = tune_cached(&t, &dev, &Penalties::none(), &mut cache).unwrap();
+        assert!(!single.cache_hit);
+        // the same problem under 2 shards is a distinct entry, not a hit
+        let sharded =
+            tune_cached_sharded(&t, &dev, &Penalties::none(), &mut cache, 2).unwrap();
+        assert!(!sharded.cache_hit, "shard count must be part of the cache key");
+        assert_eq!(cache.len(), 2);
+        let again =
+            tune_cached_sharded(&t, &dev, &Penalties::none(), &mut cache, 2).unwrap();
+        assert!(again.cache_hit);
+        assert_eq!(again.config, sharded.config);
     }
 
     #[test]

@@ -41,8 +41,9 @@ pub fn tune<T: Tunable>(
         .max(1);
 
     // Each worker claims candidate indices from a shared counter, builds
-    // the program locally (`TileProgram` holds `Rc` expressions and is
-    // not `Send`; configs are), and writes its score into a fixed slot.
+    // the program locally (cheaper than shipping built programs around;
+    // configs are small and `Copy`-ish), and writes its score into a
+    // fixed slot.
     let next = AtomicUsize::new(0);
     let slots: Mutex<Vec<Option<SimReport>>> = Mutex::new(vec![None; n]);
     std::thread::scope(|scope| {

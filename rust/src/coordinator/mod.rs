@@ -73,8 +73,9 @@ pub struct Coordinator {
 /// Configuration for a batched model worker.
 #[derive(Clone, Debug)]
 pub struct BatchPolicy {
-    /// Max rows per executed batch (defaults to the artifact batch dim).
-    pub max_batch: usize,
+    /// Max rows per executed batch. `None` uses the artifact's batch
+    /// dimension; an explicit cap is clamped to that dimension.
+    pub max_batch: Option<usize>,
     /// Flush waiting rows after this long even if the batch is not full.
     pub max_wait: Duration,
 }
@@ -82,7 +83,7 @@ pub struct BatchPolicy {
 impl Default for BatchPolicy {
     fn default() -> Self {
         BatchPolicy {
-            max_batch: 0, // artifact batch dim
+            max_batch: None, // artifact batch dim
             max_wait: Duration::from_millis(2),
         }
     }
@@ -133,6 +134,20 @@ impl Coordinator {
             kernel,
             policy,
         )
+    }
+
+    /// Start a batched model worker whose artifact is partitioned across
+    /// `shards` parallel executors ([`ExecBackend::Sharded`]): the worker
+    /// assembles micro-batches exactly as [`Coordinator::start_batched`]
+    /// does, and every executed batch is scattered across the shard
+    /// plan's executors and gathered back before rows are replied.
+    pub fn start_sharded(
+        dir: impl Into<PathBuf>,
+        kernel: &str,
+        policy: BatchPolicy,
+        shards: usize,
+    ) -> Result<Coordinator> {
+        Coordinator::start_batched_with_backend(dir, ExecBackend::sharded(shards), kernel, policy)
     }
 
     /// [`Coordinator::start_batched`] with an explicit execution backend.
@@ -272,10 +287,10 @@ fn batched_worker(
         }
     };
     let batch_shape = &loaded.spec.in_shapes[0];
-    let max_batch = if policy.max_batch == 0 {
-        batch_shape[0] as usize
-    } else {
-        policy.max_batch.min(batch_shape[0] as usize)
+    let batch_cap = batch_shape[0] as usize;
+    let max_batch = match policy.max_batch {
+        None => batch_cap,
+        Some(m) => m.clamp(1, batch_cap),
     };
     let row_len: usize = batch_shape[1..].iter().product::<i64>() as usize;
     let out_row_len = loaded.spec.out_len() / batch_shape[0] as usize;

@@ -9,7 +9,7 @@
 
 use std::collections::HashMap;
 use std::fmt;
-use std::rc::Rc;
+use std::sync::Arc;
 use std::sync::atomic::{AtomicU32, Ordering};
 
 use super::dtype::DType;
@@ -78,7 +78,9 @@ pub enum UnOp {
     Not,
 }
 
-/// Expression node. `Expr` is a cheap-to-clone handle (Rc) over this.
+/// Expression node. `Expr` is a cheap-to-clone handle (Arc) over this —
+/// atomically counted so lowered programs can be executed from parallel
+/// shard threads (`shard::exec`).
 #[derive(Clone, Debug, PartialEq)]
 pub enum ExprKind {
     Var(Var),
@@ -95,7 +97,7 @@ pub enum ExprKind {
 
 /// A reference-counted scalar expression.
 #[derive(Clone, PartialEq)]
-pub struct Expr(pub Rc<ExprKind>);
+pub struct Expr(pub Arc<ExprKind>);
 
 impl fmt::Debug for Expr {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -109,35 +111,35 @@ impl Expr {
     }
 
     pub fn var(v: &Var) -> Expr {
-        Expr(Rc::new(ExprKind::Var(v.clone())))
+        Expr(Arc::new(ExprKind::Var(v.clone())))
     }
 
     pub fn int(v: i64) -> Expr {
-        Expr(Rc::new(ExprKind::Int(v)))
+        Expr(Arc::new(ExprKind::Int(v)))
     }
 
     pub fn float(v: f64) -> Expr {
-        Expr(Rc::new(ExprKind::Float(v)))
+        Expr(Arc::new(ExprKind::Float(v)))
     }
 
     pub fn bin(op: BinOp, a: Expr, b: Expr) -> Expr {
-        Expr(Rc::new(ExprKind::Bin(op, a, b)))
+        Expr(Arc::new(ExprKind::Bin(op, a, b)))
     }
 
     pub fn un(op: UnOp, a: Expr) -> Expr {
-        Expr(Rc::new(ExprKind::Un(op, a)))
+        Expr(Arc::new(ExprKind::Un(op, a)))
     }
 
     pub fn load(buffer: u32, idx: Vec<Expr>) -> Expr {
-        Expr(Rc::new(ExprKind::Load(buffer, idx)))
+        Expr(Arc::new(ExprKind::Load(buffer, idx)))
     }
 
     pub fn select(cond: Expr, t: Expr, f: Expr) -> Expr {
-        Expr(Rc::new(ExprKind::Select(cond, t, f)))
+        Expr(Arc::new(ExprKind::Select(cond, t, f)))
     }
 
     pub fn cast(self, dt: DType) -> Expr {
-        Expr(Rc::new(ExprKind::Cast(dt, self)))
+        Expr(Arc::new(ExprKind::Cast(dt, self)))
     }
 
     pub fn floordiv(self, rhs: impl IntoExpr) -> Expr {

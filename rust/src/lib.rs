@@ -18,9 +18,12 @@
 //!   unified autotuner with its persistent tuning cache ([`autotuner`]).
 //! * **L3 — serving**: the artifact runtime ([`runtime`]) with
 //!   pluggable execution backends (`runtime::ExecBackend`) — the
-//!   always-available TIR-interpreter backend and the feature-gated
-//!   PJRT backend — plus the micro-batching kernel coordinator
-//!   ([`coordinator`]) that serves row requests from worker threads.
+//!   always-available TIR-interpreter backend, the multi-executor
+//!   sharded backend ([`shard`]: a planner chooses row/split-K/head
+//!   partitions by modeled cost and N interpreter shards execute in
+//!   parallel threads), and the feature-gated PJRT backend — plus the
+//!   micro-batching kernel coordinator ([`coordinator`]) that serves
+//!   row requests from worker threads.
 //!
 //! The crate is dependency-free (std only) so the whole loop — author,
 //! compile, tune, execute, serve — runs in an offline build:
@@ -39,6 +42,7 @@ pub mod layout;
 pub mod passes;
 pub mod report;
 pub mod runtime;
+pub mod shard;
 pub mod sim;
 pub mod tir;
 pub mod util;

@@ -15,7 +15,7 @@
 
 use std::path::{Path, PathBuf};
 
-use crate::autotuner::{tune_cached, Tunable, TuningCache};
+use crate::autotuner::{tune_cached_sharded, Tunable, TuningCache};
 use crate::error::Result;
 use crate::ir::buffer::BufferId;
 use crate::ir::dtype::DType;
@@ -48,6 +48,11 @@ pub struct InterpOptions {
     /// When false, skip the tuning sweep and use each workload's static
     /// default configuration (faster cold start, slower modeled kernel).
     pub tune: bool,
+    /// Shard count this kernel executes under (`1` = unsharded). Only
+    /// affects the tuning-cache key: per-shard sub-shape configs are
+    /// cached independently of single-device entries. Set by
+    /// `shard::exec::ShardedKernel` when it prepares per-shard kernels.
+    pub shards: usize,
 }
 
 impl Default for InterpOptions {
@@ -56,6 +61,7 @@ impl Default for InterpOptions {
             device: "h100".to_string(),
             cache_path: None,
             tune: true,
+            shards: 1,
         }
     }
 }
@@ -160,6 +166,15 @@ impl WorkloadKind {
             name
         )
     }
+
+    /// Resolve the workload family of a manifest artifact: the explicit
+    /// `workload=` tag when present, the name-prefix fallback otherwise.
+    pub fn for_spec(spec: &ArtifactSpec) -> Result<WorkloadKind> {
+        match &spec.workload {
+            Some(tag) => WorkloadKind::parse(tag),
+            None => WorkloadKind::from_artifact_name(&spec.name),
+        }
+    }
 }
 
 /// A manifest artifact resolved to an executable lowered program.
@@ -179,10 +194,7 @@ impl InterpKernel {
         opts: &InterpOptions,
         dir: &Path,
     ) -> Result<InterpKernel> {
-        let kind = match &spec.workload {
-            Some(tag) => WorkloadKind::parse(tag)?,
-            None => WorkloadKind::from_artifact_name(&spec.name)?,
-        };
+        let kind = WorkloadKind::for_spec(spec)?;
         let dev = Device::by_name(&opts.device)
             .ok_or_else(|| anyhow!("interp backend: unknown modeled device {:?}", opts.device))?;
         let prog = build_program(&kind, spec, &dev, opts, dir)?;
@@ -227,10 +239,17 @@ impl InterpKernel {
 
     /// Execute f32 inputs (already length-validated against the spec).
     pub(crate) fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        self.execute_refs(&refs)
+    }
+
+    /// Like `execute`, over borrowed slices — the sharded backend shares
+    /// replicated input tensors across shards without re-copying them.
+    pub(crate) fn execute_refs(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         let interp = Interp::new(&self.lowered).map_err(|e| anyhow!("interp init: {}", e))?;
         let mut tensors = Tensors::new();
         for (id, data) in self.param_ids.iter().zip(inputs) {
-            tensors.insert(*id, data.clone());
+            tensors.insert(*id, data.to_vec());
         }
         interp
             .run(&mut tensors)
@@ -261,7 +280,7 @@ fn tuned_config<T: Tunable>(
         Some(p) => TuningCache::open(p.clone()),
         None => TuningCache::open(dir.join("tune_cache.json")),
     };
-    match tune_cached(t, dev, &Penalties::none(), &mut cache) {
+    match tune_cached_sharded(t, dev, &Penalties::none(), &mut cache, opts.shards) {
         Ok(r) => {
             if r.evaluated > 0 {
                 // fresh sweep: persist so the next serving start is warm
@@ -285,8 +304,10 @@ fn dims<'a>(spec: &'a ArtifactSpec, i: usize, ndim: usize) -> Result<&'a [i64]> 
 }
 
 /// Build the workload tile program for an artifact, validating the
-/// manifest shapes against the workload's parameter contract.
-fn build_program(
+/// manifest shapes against the workload's parameter contract. Also used
+/// by `shard::plan` to cost candidate per-shard sub-problems — planner
+/// feasibility and execution feasibility are the same check.
+pub(crate) fn build_program(
     kind: &WorkloadKind,
     spec: &ArtifactSpec,
     dev: &Device,

@@ -10,6 +10,12 @@
 //!   through the persistent tuning cache, lowers it and executes
 //!   requests on the TIR interpreter (`tir::interp`). The whole serving
 //!   loop is hermetic: no Python, no HLO files, no network.
+//! * [`ExecBackend::Sharded`] — the multi-executor backend: a
+//!   `shard::plan` strategy partitions each artifact across N parallel
+//!   interpreter shards (data/row-parallel, split-K with sum-reduce,
+//!   head-parallel, chunk-parallel), chosen by modeled cost. Requests
+//!   scatter per the plan, shards execute on parallel threads and a
+//!   gather/reduce collective recombines the outputs.
 //! * `ExecBackend::Pjrt` — the fast native backend, gated behind the
 //!   off-by-default `pjrt` cargo feature (needs a vendored `xla` crate;
 //!   also a `From<xla::Error>` impl for `error::Error` so the gated `?`
@@ -18,20 +24,22 @@
 //!   `/opt/xla-example/load_hlo` pattern: `PjRtClient::cpu()` ->
 //!   `HloModuleProto::from_text_file` -> `client.compile` -> `execute`.
 //!
-//! Both backends share the manifest bookkeeping, input-shape validation,
+//! All backends share the manifest bookkeeping, input-shape validation,
 //! the per-runtime compile cache and [`Runtime::golden_check`].
 
 pub mod artifacts;
-mod interp_backend;
+pub(crate) mod interp_backend;
 
 pub use interp_backend::{InterpOptions, WorkloadKind};
 
 use std::collections::HashMap;
 use std::fs;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use crate::error::{Context, Result};
+use crate::shard::exec::{ShardedKernel, ShardedOptions};
+use crate::shard::plan::ShardPlan;
 use crate::{anyhow, bail};
 
 /// How loaded artifacts execute.
@@ -40,6 +48,9 @@ pub enum ExecBackend {
     /// Lower the artifact's workload program and run it on the TIR
     /// interpreter (always available; see [`InterpOptions`]).
     Interp(InterpOptions),
+    /// Partition each artifact across N parallel interpreter executors
+    /// according to a planned strategy (see `shard::plan`).
+    Sharded(ShardedOptions),
     /// Compile the artifact's HLO text on a PJRT CPU client.
     #[cfg(feature = "pjrt")]
     Pjrt,
@@ -49,6 +60,11 @@ impl ExecBackend {
     /// The interpreter backend with default options.
     pub fn interp() -> ExecBackend {
         ExecBackend::Interp(InterpOptions::default())
+    }
+
+    /// The sharded backend across `shards` parallel executors.
+    pub fn sharded(shards: usize) -> ExecBackend {
+        ExecBackend::Sharded(ShardedOptions::new(shards))
     }
 
     /// The fastest backend this build provides: PJRT when the feature is
@@ -69,6 +85,7 @@ impl ExecBackend {
     pub fn name(&self) -> &'static str {
         match self {
             ExecBackend::Interp(_) => "interp",
+            ExecBackend::Sharded(_) => "sharded",
             #[cfg(feature = "pjrt")]
             ExecBackend::Pjrt => "pjrt",
         }
@@ -111,6 +128,7 @@ pub struct LoadedKernel {
 
 enum KernelExec {
     Interp(interp_backend::InterpKernel),
+    Sharded(ShardedKernel),
     #[cfg(feature = "pjrt")]
     Pjrt(xla::PjRtLoadedExecutable),
 }
@@ -141,8 +159,18 @@ impl LoadedKernel {
         }
         match &self.exec {
             KernelExec::Interp(k) => k.execute(inputs),
+            KernelExec::Sharded(k) => k.execute(inputs),
             #[cfg(feature = "pjrt")]
             KernelExec::Pjrt(exe) => self.execute_pjrt(exe, inputs),
+        }
+    }
+
+    /// The sharding plan this kernel executes under, when loaded on the
+    /// sharded backend.
+    pub fn shard_plan(&self) -> Option<&ShardPlan> {
+        match &self.exec {
+            KernelExec::Sharded(k) => Some(k.plan()),
+            _ => None,
         }
     }
 
@@ -324,11 +352,21 @@ impl Runtime {
             .ok_or_else(|| anyhow!("unknown artifact {}", name))
     }
 
+    /// The compile-cache guard, with lock poisoning mapped into a
+    /// regular [`crate::error::Error`]: a panicking loader thread must
+    /// surface as a per-request serving error, not take the whole
+    /// runtime down with it.
+    fn compile_cache(&self) -> Result<MutexGuard<'_, HashMap<String, Arc<LoadedKernel>>>> {
+        self.cache
+            .lock()
+            .map_err(|_| anyhow!("kernel compile cache poisoned: a concurrent load panicked"))
+    }
+
     /// Load (resolve + compile) an artifact; cached per runtime. On the
     /// interp backend this is where tile configs are selected through
     /// the tuning cache, so serving starts pre-compile tuned configs.
     pub fn load(&self, name: &str) -> Result<Arc<LoadedKernel>> {
-        if let Some(k) = self.cache.lock().unwrap().get(name) {
+        if let Some(k) = self.compile_cache()?.get(name) {
             return Ok(k.clone());
         }
         let spec = self.spec(name)?.clone();
@@ -336,6 +374,9 @@ impl Runtime {
             ExecBackend::Interp(opts) => KernelExec::Interp(interp_backend::InterpKernel::prepare(
                 &spec, opts, &self.dir,
             )?),
+            ExecBackend::Sharded(opts) => {
+                KernelExec::Sharded(ShardedKernel::prepare(&spec, opts, &self.dir)?)
+            }
             #[cfg(feature = "pjrt")]
             ExecBackend::Pjrt => {
                 if spec.hlo_path.file_name() == Some(std::ffi::OsStr::new("-")) {
@@ -363,10 +404,7 @@ impl Runtime {
             }
         };
         let k = Arc::new(LoadedKernel { spec, exec });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), k.clone());
+        self.compile_cache()?.insert(name.to_string(), k.clone());
         Ok(k)
     }
 

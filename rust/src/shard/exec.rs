@@ -1,0 +1,280 @@
+//! Sharded execution: run one workload's [`ShardPlan`] across N
+//! parallel interpreter executors.
+//!
+//! A [`ShardedKernel`] is the sharded analogue of the interp backend's
+//! per-artifact kernel: `prepare` plans the partition (or accepts a
+//! pinned plan), then builds one interpreter kernel per *distinct*
+//! shard sub-shape (today's strategies are shape-uniform, so all shards
+//! share one kernel) — resolved through the same workload-program path
+//! and tuned for the sub-shape through the persistent tuning cache (the
+//! shard count is part of the cache key, so sharded and unsharded
+//! configs never collide). `execute` scatters the request inputs per the
+//! plan's [`plan::InputSlice`]s, runs every shard on its own `std` thread
+//! (expression trees are `Arc`-backed, so lowered programs are shared
+//! across threads without copying), and applies the gather collective.
+
+use std::borrow::Cow;
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+use crate::runtime::interp_backend::InterpKernel;
+use crate::runtime::{ArtifactSpec, InterpOptions};
+use crate::shard::plan::{self, Collective, ShardPlan};
+use crate::sim::device::Device;
+use crate::{anyhow, bail};
+
+/// Configuration of the sharded execution backend.
+#[derive(Clone, Debug)]
+pub struct ShardedOptions {
+    /// Number of parallel executors to partition each workload across.
+    pub shards: usize,
+    /// Per-shard interpreter configuration (modeled device, tuning
+    /// cache). Its `shards` field is overwritten from the plan.
+    pub interp: InterpOptions,
+}
+
+impl ShardedOptions {
+    pub fn new(shards: usize) -> ShardedOptions {
+        ShardedOptions {
+            shards: shards.max(1),
+            interp: InterpOptions::default(),
+        }
+    }
+}
+
+impl Default for ShardedOptions {
+    fn default() -> Self {
+        ShardedOptions::new(2)
+    }
+}
+
+/// A manifest artifact resolved to per-shard interpreter kernels plus
+/// the scatter/gather plan connecting them.
+pub struct ShardedKernel {
+    plan: ShardPlan,
+    /// Distinct prepared kernels: every strategy today produces
+    /// shape-uniform parts, so this usually holds exactly one kernel
+    /// shared by all shard threads (kernels are immutable and `Sync`).
+    kernels: Vec<InterpKernel>,
+    /// Part index -> index into `kernels`.
+    part_kernel: Vec<usize>,
+    in_shapes: Vec<Vec<i64>>,
+    out_len: usize,
+}
+
+impl ShardedKernel {
+    /// Plan the partition for `spec` (cheapest feasible strategy on the
+    /// modeled device) and prepare the per-shard kernels.
+    pub fn prepare(
+        spec: &ArtifactSpec,
+        opts: &ShardedOptions,
+        dir: &Path,
+    ) -> Result<ShardedKernel> {
+        let kind = plan::resolve_kind(spec)?;
+        let dev = Device::by_name(&opts.interp.device).ok_or_else(|| {
+            anyhow!("sharded backend: unknown modeled device {:?}", opts.interp.device)
+        })?;
+        let plan = plan::plan(&kind, &spec.in_shapes, &spec.out_shape, opts.shards, &dev)
+            .map_err(|e| anyhow!("{}: sharding plan failed: {}", spec.name, e))?;
+        ShardedKernel::prepare_with_plan(spec, plan, opts, dir)
+    }
+
+    /// Prepare per-shard kernels for an explicit plan (differential
+    /// tests pin strategies through this).
+    pub fn prepare_with_plan(
+        spec: &ArtifactSpec,
+        plan: ShardPlan,
+        opts: &ShardedOptions,
+        dir: &Path,
+    ) -> Result<ShardedKernel> {
+        let mut interp = opts.interp.clone();
+        interp.shards = plan.shards();
+        // prepare one kernel per *distinct* sub-shape: uniform strategies
+        // (all of today's) compile once and share the kernel across
+        // shard threads instead of re-tuning/re-lowering per part
+        let mut kernels: Vec<InterpKernel> = Vec::new();
+        let mut kernel_shapes: Vec<(Vec<Vec<i64>>, Vec<i64>)> = Vec::new();
+        let mut part_kernel = Vec::with_capacity(plan.shards());
+        for part in &plan.parts {
+            let ki = match kernel_shapes
+                .iter()
+                .position(|(ins, out)| *ins == part.in_shapes && *out == part.out_shape)
+            {
+                Some(ki) => ki,
+                None => {
+                    let sub = ArtifactSpec {
+                        name: format!("{}.shard{}", spec.name, part.index),
+                        hlo_path: PathBuf::from("-"),
+                        in_shapes: part.in_shapes.clone(),
+                        out_shape: part.out_shape.clone(),
+                        workload: Some(plan.workload.tag()),
+                    };
+                    kernels.push(InterpKernel::prepare(&sub, &interp, dir)?);
+                    kernel_shapes.push((part.in_shapes.clone(), part.out_shape.clone()));
+                    kernels.len() - 1
+                }
+            };
+            part_kernel.push(ki);
+        }
+        Ok(ShardedKernel {
+            in_shapes: spec.in_shapes.clone(),
+            out_len: spec.out_len(),
+            plan,
+            kernels,
+            part_kernel,
+        })
+    }
+
+    /// The partition this kernel executes.
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Scatter -> parallel shard execution -> gather/reduce.
+    pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if inputs.len() != self.in_shapes.len() {
+            bail!(
+                "sharded kernel expects {} inputs, got {}",
+                self.in_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (data, shape)) in inputs.iter().zip(&self.in_shapes).enumerate() {
+            let want = shape.iter().product::<i64>() as usize;
+            if data.len() != want {
+                bail!("sharded input {} length {} != shape {:?}", i, data.len(), shape);
+            }
+        }
+        // scatter: materialize only the sliced tensors; replicated
+        // inputs are borrowed by every shard instead of copied per shard
+        let mut shard_inputs: Vec<Vec<Cow<'_, [f32]>>> = Vec::with_capacity(self.plan.shards());
+        for part in &self.plan.parts {
+            let mut ins = Vec::with_capacity(inputs.len());
+            for (i, slice) in part.inputs.iter().enumerate() {
+                ins.push(match slice.dim {
+                    None => Cow::Borrowed(inputs[i].as_slice()),
+                    Some(d) => Cow::Owned(slice_tensor(
+                        &inputs[i],
+                        &self.in_shapes[i],
+                        d,
+                        slice.start,
+                        slice.len,
+                    )),
+                });
+            }
+            shard_inputs.push(ins);
+        }
+        // execute every shard on its own thread
+        let outs: Vec<Result<Vec<f32>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .part_kernel
+                .iter()
+                .zip(shard_inputs.iter())
+                .map(|(&ki, ins)| {
+                    let kernel = &self.kernels[ki];
+                    scope.spawn(move || {
+                        let refs: Vec<&[f32]> = ins.iter().map(|c| c.as_ref()).collect();
+                        kernel.execute_refs(&refs)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow!("shard worker thread panicked")))
+                })
+                .collect()
+        });
+        // gather
+        match self.plan.collective {
+            Collective::Concat | Collective::HeadConcat => {
+                let mut out = Vec::with_capacity(self.out_len);
+                for (i, r) in outs.into_iter().enumerate() {
+                    let o = r.map_err(|e| anyhow!("shard {}: {}", i, e))?;
+                    out.extend_from_slice(&o);
+                }
+                if out.len() != self.out_len {
+                    bail!(
+                        "gathered output has {} elements, artifact expects {}",
+                        out.len(),
+                        self.out_len
+                    );
+                }
+                Ok(out)
+            }
+            Collective::SumReduce => {
+                let mut out = vec![0f32; self.out_len];
+                for (i, r) in outs.into_iter().enumerate() {
+                    let o = r.map_err(|e| anyhow!("shard {}: {}", i, e))?;
+                    if o.len() != self.out_len {
+                        bail!(
+                            "shard {} partial has {} elements, artifact expects {}",
+                            i,
+                            o.len(),
+                            self.out_len
+                        );
+                    }
+                    for (acc, v) in out.iter_mut().zip(&o) {
+                        *acc += v;
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// Slice a row-major tensor along one dimension: the scatter primitive.
+/// Contiguous for `dim == 0`, strided gather otherwise.
+pub fn slice_tensor(data: &[f32], shape: &[i64], dim: usize, start: i64, len: i64) -> Vec<f32> {
+    assert!(dim < shape.len(), "slice dim {} out of rank {}", dim, shape.len());
+    assert!(
+        start >= 0 && len > 0 && start + len <= shape[dim],
+        "slice {}..{} out of extent {}",
+        start,
+        start + len,
+        shape[dim]
+    );
+    let outer: i64 = shape[..dim].iter().product();
+    let inner: i64 = shape[dim + 1..].iter().product();
+    let extent = shape[dim];
+    let mut out = Vec::with_capacity((outer * len * inner) as usize);
+    for o in 0..outer {
+        let base = ((o * extent + start) * inner) as usize;
+        out.extend_from_slice(&data[base..base + (len * inner) as usize]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_tensor_dim0_is_contiguous() {
+        let data: Vec<f32> = (0..24).map(|v| v as f32).collect();
+        // shape [4, 6], rows 1..3
+        let s = slice_tensor(&data, &[4, 6], 0, 1, 2);
+        assert_eq!(s, (6..18).map(|v| v as f32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn slice_tensor_inner_dim_gathers_strided() {
+        let data: Vec<f32> = (0..12).map(|v| v as f32).collect();
+        // shape [3, 4], columns 1..3
+        let s = slice_tensor(&data, &[3, 4], 1, 1, 2);
+        assert_eq!(s, vec![1.0, 2.0, 5.0, 6.0, 9.0, 10.0]);
+        // rank-3 middle dim
+        let data: Vec<f32> = (0..24).map(|v| v as f32).collect();
+        let s = slice_tensor(&data, &[2, 3, 4], 1, 2, 1);
+        assert_eq!(s, vec![8.0, 9.0, 10.0, 11.0, 20.0, 21.0, 22.0, 23.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of extent")]
+    fn slice_tensor_rejects_out_of_range() {
+        let data = vec![0f32; 8];
+        let _ = slice_tensor(&data, &[2, 4], 0, 1, 2);
+    }
+}

@@ -22,14 +22,17 @@ pub struct TileConfig {
 }
 
 impl TileConfig {
-    pub fn default_for(m: i64, n: i64, _k: i64) -> TileConfig {
+    pub fn default_for(m: i64, n: i64, k: i64) -> TileConfig {
         let pow2 = |v: i64| (v as u64).next_power_of_two() as i64;
         let block_m = if m >= 128 { 128 } else { pow2(m.max(16)).min(64) };
         let block_n = if n >= 128 { 128 } else { pow2(n.max(16)).min(64) };
+        // shallow reductions (split-K shards, K < 32) get a K tile that
+        // still divides them instead of an infeasible fixed 32
+        let block_k = if k >= 32 { 32 } else { pow2(k.max(16)).min(32) };
         TileConfig {
             block_m,
             block_n,
-            block_k: 32,
+            block_k,
             num_stages: 3,
             threads: 128,
             policy: GemmWarpPolicy::Square,
@@ -103,6 +106,59 @@ pub fn matmul_program(
     });
     t.copy_out(c_l, c, vec![by.expr() * bm, bx.expr() * bn]);
     t.finish()
+}
+
+/// Build a GEMM with a *dynamic* M dimension (the serving-side shape):
+/// `C[M,n] = A[M,k] @ B[k,n]` where `M` is a runtime scalar parameter
+/// and the row grid is `ceil(M / block_m)`. Specializing `M` to a
+/// concrete value (`ir::program::specialize`) folds the grid to a
+/// constant; when `M` is not a multiple of the row tile, the last block
+/// runs as a predicated tail — out-of-bounds rows read as zero and
+/// their stores are dropped, so the first `M` output rows are exact.
+/// Returns the program and the `M` variable for binding.
+pub fn matmul_program_dyn(
+    n: i64,
+    k: i64,
+    dtype: DType,
+    cfg: &TileConfig,
+) -> (TileProgram, crate::ir::expr::Var) {
+    assert!(
+        n % cfg.block_n == 0 && k % cfg.block_k == 0,
+        "static dims {}x{} not divisible by tile {}x{}",
+        n,
+        k,
+        cfg.block_n,
+        cfg.block_k
+    );
+    let mut t = KernelBuilder::new("matmul_dyn_m", cfg.threads);
+    let m = t.dyn_var("M");
+    let a = t.param_dyn(
+        "A",
+        vec![m.expr(), crate::ir::expr::Expr::int(k)],
+        dtype,
+    );
+    let b = t.param("B", &[k, n], dtype);
+    let c = t.param_dyn(
+        "C",
+        vec![m.expr(), crate::ir::expr::Expr::int(n)],
+        DType::F32,
+    );
+    let (bm, bn, bk) = (cfg.block_m, cfg.block_n, cfg.block_k);
+    let (bx, by) = t.kernel2(n / bn, (m.expr() + (bm - 1)).floordiv(bm));
+    if cfg.rasterize {
+        t.use_swizzle(3);
+    }
+    let a_s = t.alloc_shared("A_shared", &[bm, bk], dtype);
+    let b_s = t.alloc_shared("B_shared", &[bk, bn], dtype);
+    let c_l = t.alloc_fragment("C_local", &[bm, bn], DType::F32);
+    t.clear(c_l);
+    t.pipelined(k / bk, cfg.num_stages, |t, ko| {
+        t.copy_in(a, vec![by.expr() * bm, ko.expr() * bk], a_s);
+        t.copy_in(b, vec![ko.expr() * bk, bx.expr() * bn], b_s);
+        t.gemm_opts(a_s, b_s, c_l, false, false, cfg.policy);
+    });
+    t.copy_out(c_l, c, vec![by.expr() * bm, bx.expr() * bn]);
+    (t.finish(), m)
 }
 
 /// Reference GEMM in f32 (row-major).

@@ -236,3 +236,70 @@ fn dequant_interp_matches_reference_over_config_grid() {
         }
     }
 }
+
+/// Dynamic-M tail shapes: a GEMM whose row count is a runtime scalar is
+/// specialized (`ir::program::specialize`) to values that are NOT
+/// multiples of the row tile. The last grid row runs as a predicated
+/// tail — out-of-bounds rows read as zero and their stores are dropped —
+/// so the first M output rows must match the CPU reference exactly
+/// (within fp16 staging tolerance). This is the ROADMAP tail-split item
+/// exercised end to end through the interpreter.
+#[test]
+fn dynamic_m_tail_shapes_specialize_and_match_reference() {
+    use std::collections::HashMap;
+    use tilelang::ir::program::specialize;
+    use tilelang::workloads::matmul::matmul_program_dyn;
+
+    let dev = Device::a100();
+    let (n, k) = (64i64, 64i64);
+    let cfg = TileConfig {
+        block_m: 64,
+        block_n: 32,
+        block_k: 32,
+        num_stages: 2,
+        threads: 128,
+        policy: GemmWarpPolicy::Square,
+        rasterize: true,
+    };
+    // 96 and 80: one full block + a partial tail; 33: a single mostly-
+    // empty block; 128: control (no tail at all)
+    for &m in &[96i64, 80, 33, 128] {
+        let (prog, mvar) = matmul_program_dyn(n, k, DType::F16, &cfg);
+        assert!(!prog.dyn_params.is_empty());
+        assert!(
+            prog.grid[1].as_int().is_none(),
+            "row grid must be symbolic before specialization"
+        );
+        let mut bind = HashMap::new();
+        bind.insert(mvar.id, m);
+        let sp = specialize(&prog, &bind);
+        assert!(sp.dyn_params.is_empty());
+        let grid: Vec<i64> = sp
+            .grid
+            .iter()
+            .map(|g| g.as_int().expect("specialized grid is static"))
+            .collect();
+        assert_eq!(grid, vec![n / 32, (m + 63) / 64], "m = {m}");
+        assert_eq!(sp.params[0].static_shape(), Some(vec![m, k]));
+
+        let lowered = compile(&sp, &dev, &CompileOptions::default())
+            .unwrap_or_else(|e| panic!("m={m}: {e}"));
+        let interp = Interp::new(&lowered).unwrap();
+        let a = test_data(m * k, 0x7A11 + m as u64);
+        let b = test_data(k * n, 0x7A12);
+        let mut t = Tensors::new();
+        t.insert(sp.params[0].id, a.clone());
+        t.insert(sp.params[1].id, b.clone());
+        interp.run(&mut t).unwrap_or_else(|e| panic!("m={m}: {e}"));
+
+        let got = &t[&sp.params[2].id];
+        assert_eq!(got.len(), (m * n) as usize, "m = {m}");
+        let want = reference_matmul(&a, &b, m, n, k);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 0.05 + 0.02 * w.abs(),
+                "m={m} idx={i}: {g} vs {w}"
+            );
+        }
+    }
+}

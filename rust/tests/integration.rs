@@ -158,7 +158,7 @@ fn coordinator_micro_batches_concurrent_rows() {
         interp_backend(),
         "linear_64x256x64",
         BatchPolicy {
-            max_batch: 0,
+            max_batch: None,
             max_wait: Duration::from_millis(50),
         },
     )

@@ -1,0 +1,229 @@
+//! Sharded-vs-single-device differential tests: the `shard` subsystem
+//! must produce the same numbers as the single-device interp backend
+//! and the CPU references, for every strategy the acceptance criteria
+//! name (gemm row-parallel, gemm split-K, flash-attention
+//! head-parallel) across shard counts 2 and 4 — plus end-to-end golden
+//! checks through `Runtime`/`Coordinator` on the sharded backend.
+//!
+//! Planner *choice* tests (which strategy wins for which shape) live in
+//! `shard::plan`'s unit tests; this file pins execution semantics.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use tilelang::coordinator::{BatchPolicy, Coordinator};
+use tilelang::runtime::{artifacts, ArtifactSpec, ExecBackend, InterpOptions, Runtime, WorkloadKind};
+use tilelang::shard::exec::{ShardedKernel, ShardedOptions};
+use tilelang::shard::plan::{plan_with_strategy, Collective, Strategy};
+use tilelang::sim::device::Device;
+use tilelang::workloads::attention::reference_attention;
+use tilelang::workloads::matmul::{reference_matmul, test_data};
+
+/// Interp execution stages tiles through fp16 shared memory; sharded
+/// gathers additionally reorder partial sums (split-K), so compare with
+/// the same tolerance the integration suite pins.
+const TOL: f32 = 0.05;
+
+/// One shared artifact directory per test binary (generation once).
+fn artifacts_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir =
+            std::env::temp_dir().join(format!("tilelang-shard-artifacts-{}", std::process::id()));
+        artifacts::generate_default_set(&dir).expect("generate artifacts");
+        dir
+    })
+    .clone()
+}
+
+/// Sharded options with tuning disabled: unit tests stay fast and cover
+/// the static-default config path.
+fn fast_opts(shards: usize) -> ShardedOptions {
+    ShardedOptions {
+        shards,
+        interp: InterpOptions {
+            tune: false,
+            ..Default::default()
+        },
+    }
+}
+
+fn fast_interp() -> ExecBackend {
+    ExecBackend::Interp(InterpOptions {
+        tune: false,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn gemm_row_parallel_and_split_k_match_single_device() {
+    let dir = artifacts_dir();
+    let rt = Runtime::with_backend(&dir, fast_interp()).expect("runtime");
+    let spec = rt.spec("matmul_64x64x64").expect("spec").clone();
+    let inputs = rt.example_inputs("matmul_64x64x64").expect("inputs");
+    let single = rt.execute("matmul_64x64x64", &inputs).expect("single-device");
+    let want = reference_matmul(&inputs[0], &inputs[1], 64, 64, 64);
+    let dev = Device::by_name("h100").unwrap();
+
+    for strategy in [Strategy::RowParallel, Strategy::SplitK] {
+        for shards in [2usize, 4] {
+            let plan = plan_with_strategy(
+                &WorkloadKind::Gemm,
+                &spec.in_shapes,
+                &spec.out_shape,
+                shards,
+                strategy,
+                &dev,
+            )
+            .unwrap_or_else(|e| panic!("{strategy:?} x{shards}: {e}"));
+            assert_eq!(plan.shards(), shards);
+            let kernel = ShardedKernel::prepare_with_plan(&spec, plan, &fast_opts(shards), &dir)
+                .unwrap_or_else(|e| panic!("{strategy:?} x{shards}: {e}"));
+            let got = kernel
+                .execute(&inputs)
+                .unwrap_or_else(|e| panic!("{strategy:?} x{shards}: {e}"));
+            assert_eq!(got.len(), single.len());
+            for (i, ((g, s), w)) in got.iter().zip(&single).zip(&want).enumerate() {
+                assert!(
+                    (g - s).abs() < TOL,
+                    "{strategy:?} x{shards} idx {i}: sharded {g} vs single {s}"
+                );
+                assert!(
+                    (g - w).abs() < TOL,
+                    "{strategy:?} x{shards} idx {i}: sharded {g} vs reference {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn flash_attention_head_parallel_matches_reference() {
+    // synthetic bh=4 spec so both shard counts divide the heads; no
+    // artifact files are needed — the dir only hosts the tuning cache
+    let dir = std::env::temp_dir().join(format!("tilelang-shard-fa-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let (bh, seq, d) = (4i64, 128i64, 64i64);
+    let q = test_data(bh * seq * d, 0xF1);
+    let k = test_data(bh * seq * d, 0xF2);
+    let v = test_data(bh * seq * d, 0xF3);
+    let inputs = vec![q.clone(), k.clone(), v.clone()];
+    let want = reference_attention(&q, &k, &v, bh, seq, d, false);
+    let spec = ArtifactSpec {
+        name: "fa_head_parallel_test".to_string(),
+        hlo_path: PathBuf::from("-"),
+        in_shapes: vec![vec![bh, seq, d]; 3],
+        out_shape: vec![bh, seq, d],
+        workload: Some("flash_attention".to_string()),
+    };
+    // shards = 1 doubles as the single-device baseline
+    let mut baseline: Option<Vec<f32>> = None;
+    for shards in [1usize, 2, 4] {
+        let kernel = ShardedKernel::prepare(&spec, &fast_opts(shards), &dir)
+            .unwrap_or_else(|e| panic!("x{shards}: {e}"));
+        assert_eq!(kernel.plan().strategy, Strategy::HeadParallel);
+        assert_eq!(kernel.plan().collective, Collective::HeadConcat);
+        assert_eq!(kernel.plan().shards(), shards);
+        let got = kernel.execute(&inputs).unwrap_or_else(|e| panic!("x{shards}: {e}"));
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!((g - w).abs() < TOL, "x{shards} idx {i}: {g} vs reference {w}");
+        }
+        if let Some(base) = &baseline {
+            // head-parallel never mixes heads: sharded output equals
+            // the single-executor run bit-for-bit
+            for (i, (g, b)) in got.iter().zip(base).enumerate() {
+                assert!((g - b).abs() < 1e-6, "x{shards} idx {i}: {g} vs baseline {b}");
+            }
+        } else {
+            baseline = Some(got);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn sharded_runtime_passes_golden_checks() {
+    let dir = artifacts_dir();
+    let rt =
+        Runtime::with_backend(&dir, ExecBackend::Sharded(fast_opts(2))).expect("sharded runtime");
+    assert_eq!(rt.backend_name(), "sharded");
+    // every family the planner can split at bh/m = 2 serves end to end
+    for name in [
+        "matmul_64x64x64",
+        "linear_64x256x64",
+        "flash_attention_2x128x64",
+        "flash_attention_causal_2x128x64",
+        "chunk_state_2x128",
+        "chunk_scan_2x128",
+    ] {
+        let err = rt.golden_check(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(err < TOL, "{name}: golden max err {err}");
+        let loaded = rt.load(name).expect(name);
+        let plan = loaded.shard_plan().expect("sharded kernels expose their plan");
+        assert_eq!(plan.shards(), 2, "{name}");
+    }
+    // the small dequant artifact cannot split its 64 output rows under
+    // the default 64-wide tile: planning must fail with an error, not
+    // panic or serve wrong numbers
+    assert!(rt.load("dequant_int4_32x64x64").is_err());
+}
+
+#[test]
+fn sharded_coordinator_serves_batched_rows() {
+    let dir = artifacts_dir();
+    let model = "linear_64x256x64";
+    let rt =
+        Runtime::with_backend(&dir, ExecBackend::Sharded(fast_opts(2))).expect("runtime");
+    let inputs = rt.example_inputs(model).expect("inputs");
+    let spec = rt.spec(model).expect("spec").clone();
+    let batch = spec.in_shapes[0][0] as usize;
+    let row_len: usize = spec.in_shapes[0][1..].iter().product::<i64>() as usize;
+    let out_row = spec.out_len() / batch;
+    let direct = rt.execute(model, &inputs).expect("direct sharded execution");
+    let want = reference_matmul(&inputs[0], &inputs[1], 64, 256, 64);
+    for (g, w) in direct.iter().zip(&want) {
+        assert!((g - w).abs() < TOL, "sharded direct vs reference: {g} vs {w}");
+    }
+
+    let coord = Coordinator::start_batched_with_backend(
+        &dir,
+        ExecBackend::Sharded(fast_opts(2)),
+        model,
+        BatchPolicy::default(),
+    )
+    .expect("start sharded coordinator");
+    let mut rxs = Vec::new();
+    for slot in 0..batch {
+        let row = inputs[0][slot * row_len..(slot + 1) * row_len].to_vec();
+        rxs.push((slot, coord.submit_row(model, row).expect("submit")));
+    }
+    for (slot, rx) in rxs {
+        let reply = rx.recv().expect("reply");
+        let out = reply.output.unwrap_or_else(|e| panic!("slot {slot}: {e}"));
+        assert_eq!(out.len(), out_row);
+        // same backend + same plan + shared tuning cache: the served
+        // rows reproduce the direct sharded execution exactly
+        let wd = &direct[slot * out_row..(slot + 1) * out_row];
+        for (g, w) in out.iter().zip(wd) {
+            assert!((g - w).abs() < 1e-4, "slot {slot}: {g} vs {w}");
+        }
+        assert!(reply.batch_size >= 1 && reply.batch_size <= batch);
+    }
+    coord.shutdown();
+
+    // the convenience constructor wires the same backend
+    let coord = Coordinator::start_sharded(&dir, model, BatchPolicy::default(), 2)
+        .expect("start_sharded");
+    let row = inputs[0][..row_len].to_vec();
+    let reply = coord
+        .submit_row(model, row)
+        .expect("submit")
+        .recv()
+        .expect("reply");
+    let out = reply.output.expect("row output");
+    for (g, w) in out.iter().zip(&direct[..out_row]) {
+        assert!((g - w).abs() < TOL, "start_sharded row: {g} vs {w}");
+    }
+    coord.shutdown();
+}
