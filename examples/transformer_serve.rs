@@ -1,30 +1,37 @@
-//! End-to-end serving driver: batched row inference through the full
-//! three-layer stack, fully offline.
+//! End-to-end serving driver: batched row inference of a full
+//! transformer MLP block through the three-layer stack, fully offline.
 //!
-//! L1/L2: the artifact's workload tag resolves to a tile program, the
-//! tile configuration comes from the persistent tuning cache, and
-//! lowering produces the scheduled TIR.
-//! L3: the rust coordinator loads the artifact once on the execution
-//! backend (TIR interpreter by default; PJRT when the `pjrt` feature
-//! supplies it), then micro-batches row requests (one row each) up to
-//! the artifact batch dimension and serves them from a worker thread.
+//! L1/L2: the artifact's graph file resolves to a `KernelGraph`
+//! (GEMM+bias+GELU -> GEMM+bias+residual), the fusion planner folds the
+//! element-wise nodes into the GEMM epilogues, per-node tile configs
+//! come from the persistent tuning cache, and lowering produces the
+//! scheduled TIR for each kernel node.
+//! L3: the rust coordinator loads the graph artifact once on the
+//! execution backend (TIR interpreter), then micro-batches row requests
+//! (one row each) up to the artifact batch dimension and serves whole
+//! blocks from a worker thread — intermediates never leave the planned
+//! buffer pool.
 //!
 //! The run cross-checks outputs against a direct artifact execution and
 //! the recorded goldens, then reports latency percentiles + throughput.
 //!
 //! Run: cargo run --release --example transformer_serve [DIR] [SHARDS]
 //! (artifacts are generated on the fly when the directory is missing;
-//! SHARDS >= 2 partitions the model across parallel executors through
-//! the sharded backend)
+//! SHARDS >= 2 serves the single-kernel linear model through the
+//! sharded backend instead — graph sharding is a ROADMAP follow-on)
 
 use std::time::Instant;
 
 use tilelang::coordinator::{percentile, BatchPolicy, Coordinator};
 use tilelang::runtime::{artifacts, ExecBackend, Runtime};
 
-/// The batched serving model: a transformer feed-forward linear layer
-/// (input 0 is the row batch, input 1 the weight matrix).
-const MODEL: &str = "linear_64x256x64";
+/// The batched serving model: a transformer MLP block served as one
+/// graph artifact (input 0 is the row batch; the rest are weights).
+const MODEL: &str = "mlp_block_64x64x128";
+
+/// Fallback for sharded runs: the single-kernel linear layer.
+const SHARDED_MODEL: &str = "linear_64x256x64";
+
 
 fn main() {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
@@ -36,54 +43,66 @@ fn main() {
         let names = artifacts::generate_default_set(&dir).expect("generate artifacts");
         println!("generated {} artifacts in {}/", names.len(), dir);
     }
-    let backend = if shards >= 2 {
-        ExecBackend::sharded(shards)
+    let (model, backend) = if shards >= 2 {
+        println!("note: graph artifacts serve single-shard; sharding {SHARDED_MODEL} instead");
+        (SHARDED_MODEL, ExecBackend::sharded(shards))
     } else {
-        ExecBackend::default_backend()
+        (MODEL, ExecBackend::default_backend())
     };
     let rt = Runtime::with_backend(&dir, backend.clone()).expect("open artifact runtime");
-    if rt.spec(MODEL).is_err() {
+    if rt.spec(model).is_err() {
         // stale directory from an older generator (or a PJRT-era
         // `make artifacts` run): it parses but lacks the serving model
         eprintln!(
             "{}/ has no {} artifact; regenerate it with `tilelang artifacts --force --dir {}`",
-            dir, MODEL, dir
+            dir, model, dir
         );
         std::process::exit(1);
     }
 
-    // golden check: execution reproduces the CPU-reference outputs
-    let err = rt.golden_check(MODEL).expect("golden check");
+    // golden check: execution reproduces the CPU-reference composition
+    let err = rt.golden_check(model).expect("golden check");
     println!(
         "artifact golden max_err = {err:.2e} (backend {})",
         rt.backend_name()
     );
-    assert!(err < 0.05, "golden diverged: {err}");
-    if shards >= 2 {
-        let plan = rt
-            .load(MODEL)
-            .expect("load sharded model")
-            .shard_plan()
-            .expect("sharded backend exposes its plan")
-            .describe();
-        println!("sharding: {plan}");
+    // the library's per-artifact bound: graph blocks chain two GEMMs
+    // and compound the fp16 rounding once
+    let tol = tilelang::runtime::golden_tol(rt.spec(model).expect("spec"));
+    assert!(err < tol, "golden diverged: {err}");
+    let loaded = rt.load(model).expect("load model");
+    if let Some(plan) = loaded.shard_plan() {
+        println!("sharding: {}", plan.describe());
+    }
+    if let Some(gk) = loaded.graph_kernel() {
+        // the full block plan: fusions + planned intermediate pool
+        println!("graph: {}", gk.describe());
+        for f in gk.fusions() {
+            println!(
+                "  fused {} <- {} ({}), modeled saving {:.2} us",
+                f.producer,
+                f.folded,
+                f.op.describe(),
+                f.saved_us
+            );
+        }
     }
 
     // reference outputs for request cross-checking
-    let inputs = rt.example_inputs(MODEL).expect("inputs");
-    let spec = rt.spec(MODEL).expect("spec").clone();
+    let inputs = rt.example_inputs(model).expect("inputs");
+    let spec = rt.spec(model).expect("spec").clone();
     let batch = spec.in_shapes[0][0] as usize;
     let row_len: usize = spec.in_shapes[0][1..].iter().product::<i64>() as usize;
     let out_row_len = spec.out_len() / batch;
-    let direct = rt.execute(MODEL, &inputs).expect("direct exec");
+    let direct = rt.execute(model, &inputs).expect("direct exec");
 
     // ---- serve ---------------------------------------------------------
     let coord =
-        Coordinator::start_batched_with_backend(&dir, backend, MODEL, BatchPolicy::default())
+        Coordinator::start_batched_with_backend(&dir, backend, model, BatchPolicy::default())
             .expect("start coordinator");
     let n_requests = 64usize;
     println!(
-        "serving {n_requests} single-row requests (artifact batch = {batch}, \
+        "serving {n_requests} single-row requests of {model} (artifact batch = {batch}, \
          micro-batching with 2ms flush) ..."
     );
     let t0 = Instant::now();
@@ -92,7 +111,7 @@ fn main() {
         // rotate through the example batch rows as request payloads
         let slot = i % batch;
         let row = inputs[0][slot * row_len..(slot + 1) * row_len].to_vec();
-        receivers.push((slot, coord.submit_row(MODEL, row).expect("submit")));
+        receivers.push((slot, coord.submit_row(model, row).expect("submit")));
     }
     let mut latencies = Vec::with_capacity(n_requests);
     let mut batch_sizes = Vec::new();
@@ -102,9 +121,10 @@ fn main() {
         let out = reply.output.expect("row output");
         latencies.push(reply.latency_us);
         batch_sizes.push(reply.batch_size);
-        // cross-check rows against the direct execution (the linear
-        // layer mixes nothing across the batch dim, so a row yields the
-        // same output regardless of which batch slot served it)
+        // cross-check rows against the direct execution (every node of
+        // the block is row-independent over the batch dim, so a row
+        // yields the same output regardless of which batch slot served
+        // it)
         if checked < 32 {
             let want = &direct[slot * out_row_len..(slot + 1) * out_row_len];
             let max_err = out

@@ -1,7 +1,7 @@
 //! Compile-path microbenchmarks (the L3 hot path of this system):
-//! kernel compiles/second for each workload family, plus the
-//! dynamic-parameter specialization cost — the knobs the §Perf pass
-//! optimizes.
+//! kernel compiles/second for each workload family, graph fusion
+//! planning + whole-graph prepare time, plus the dynamic-parameter
+//! specialization cost — the knobs the §Perf pass optimizes.
 
 use std::time::Instant;
 
@@ -73,6 +73,38 @@ fn main() {
             &dev,
             &Penalties::none(),
         );
+    });
+
+    // graph layer: what a graph-artifact serving start pays for fusion
+    // planning alone, and for the whole prepare (fuse + per-node tile
+    // configs + lowering + memplan) — the compile-latency surface a
+    // regression in the planner or the epilogue builders would move
+    let mlp = tilelang::graph::ir::mlp_block(64, 64, 128);
+    bench("graph: fusion planning (mlp_block)", 20, || {
+        let fp = tilelang::graph::fuse::plan(&mlp, &dev).unwrap();
+        assert!(!fp.fused.is_empty());
+    });
+    let graph_opts = tilelang::runtime::InterpOptions {
+        tune: false,
+        ..Default::default()
+    };
+    bench("graph: prepare mlp_block (fuse+lower)", 10, || {
+        let k = tilelang::graph::exec::GraphKernel::prepare(
+            &mlp,
+            &graph_opts,
+            std::path::Path::new("."),
+        )
+        .unwrap();
+        assert!(k.memplan().peak_bytes > 0);
+    });
+    let attn = tilelang::graph::ir::attention_block(128, 64, false);
+    bench("graph: prepare attention_block", 5, || {
+        let _ = tilelang::graph::exec::GraphKernel::prepare(
+            &attn,
+            &graph_opts,
+            std::path::Path::new("."),
+        )
+        .unwrap();
     });
 
     // warm-cache path: what a bench or serving start pays after the

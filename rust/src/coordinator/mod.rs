@@ -14,7 +14,10 @@
 //! TIR interpreter), PJRT when the `pjrt` feature supplies it. Loading
 //! an artifact on the interp backend selects its tile configuration
 //! through the persistent tuning cache, so serving starts pre-compile
-//! tuned configs for their artifact shapes.
+//! tuned configs for their artifact shapes. Graph artifacts (manifest
+//! `graph=` tag) serve through the same workers: the runtime loads them
+//! as fused, buffer-planned `graph::GraphKernel`s, so a batched model
+//! worker can serve a whole transformer block per request batch.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -24,7 +27,7 @@ use std::time::{Duration, Instant};
 
 use crate::anyhow;
 use crate::error::Result;
-use crate::runtime::{ExecBackend, Runtime};
+use crate::runtime::{ExecBackend, Runtime, WorkloadKind};
 
 /// A raw kernel invocation result.
 pub struct KernelReply {
@@ -278,6 +281,12 @@ fn batched_worker(
     };
     let weights = match runtime.example_inputs(&kernel) {
         Ok(mut ins) => {
+            if ins.is_empty() {
+                // a malformed artifact must fail requests, not panic the
+                // worker thread (satellite: no unwrap on serving paths)
+                drain_with_error(&rx, "artifact has no inputs; cannot serve rows");
+                return;
+            }
             ins.remove(0);
             ins
         }
@@ -286,14 +295,73 @@ fn batched_worker(
             return;
         }
     };
-    let batch_shape = &loaded.spec.in_shapes[0];
+    // row serving needs the output to keep input 0's batch dim as its
+    // own dim 0 — transposed (dequant) or re-chunked (chunk_state)
+    // outputs would interleave co-batched requests' data into every
+    // reply. This also guarantees out_len divides by the batch dim.
+    let batch_shape = loaded.spec.in_shapes[0].clone();
+    if batch_shape.len() < 2 || loaded.spec.out_shape.first() != batch_shape.first() {
+        drain_with_error(
+            &rx,
+            &format!(
+                "artifact {} is not row-batchable (input 0 {:?}, output {:?} does \
+                 not keep the batch dim); use raw submit instead",
+                kernel, batch_shape, loaded.spec.out_shape
+            ),
+        );
+        return;
+    }
+    // the dequant family always writes a transposed output and the
+    // chunk kernels re-chunk theirs: even a shape coincidence (square
+    // dequant, m == n) must not row-serve. Graph artifacts skip this —
+    // they get the dedicated `row_batchable` dataflow analysis below,
+    // and `for_spec`'s name-prefix fallback would misread their names.
+    // Unclassifiable legacy manifests keep the shape guard alone.
+    let kind_blocks_rows = loaded.spec.graph.is_none()
+        && WorkloadKind::for_spec(&loaded.spec)
+            .map(|k| {
+                matches!(
+                    k,
+                    WorkloadKind::Dequant { .. }
+                        | WorkloadKind::ChunkState
+                        | WorkloadKind::ChunkScan
+                )
+            })
+            .unwrap_or(false);
+    if kind_blocks_rows {
+        drain_with_error(
+            &rx,
+            &format!(
+                "artifact {} is not row-batchable (its workload family transposes or \
+                 re-chunks the output); use raw submit instead",
+                kernel
+            ),
+        );
+        return;
+    }
+    // graph artifacts must additionally be provably row-independent:
+    // an attention block keeps the batch dim structurally but mixes
+    // across it, which would serve silently wrong numbers
+    if let Some(g) = loaded.graph_kernel() {
+        if !g.row_batchable() {
+            drain_with_error(
+                &rx,
+                &format!(
+                    "graph artifact {} is not row-batchable (output rows depend on \
+                     other batch rows); serve it through raw submit instead",
+                    kernel
+                ),
+            );
+            return;
+        }
+    }
     let batch_cap = batch_shape[0] as usize;
     let max_batch = match policy.max_batch {
         None => batch_cap,
         Some(m) => m.clamp(1, batch_cap),
     };
     let row_len: usize = batch_shape[1..].iter().product::<i64>() as usize;
-    let out_row_len = loaded.spec.out_len() / batch_shape[0] as usize;
+    let out_row_len = loaded.spec.out_len() / batch_cap;
 
     let mut pending: Vec<(Vec<f32>, Sender<RowReply>, Instant)> = Vec::new();
     let mut shutdown = false;
@@ -356,10 +424,18 @@ fn batched_worker(
             let output = if bad.contains(&i) {
                 Err(format!("row length != {}", row_len))
             } else {
-                result
-                    .as_ref()
-                    .map(|out| out[i * out_row_len..(i + 1) * out_row_len].to_vec())
-                    .map_err(|e| e.clone())
+                // row slices go through `get`: a backend returning a
+                // short output yields per-row errors, never a panicking
+                // worker
+                match &result {
+                    Ok(out) => out
+                        .get(i * out_row_len..(i + 1) * out_row_len)
+                        .map(|s| s.to_vec())
+                        .ok_or_else(|| {
+                            format!("backend output too short for batch row {}", i)
+                        }),
+                    Err(e) => Err(e.clone()),
+                }
             };
             let _ = reply.send(RowReply {
                 output,

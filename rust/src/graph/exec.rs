@@ -1,0 +1,420 @@
+//! Graph execution on the interp backend: topological node order, tile
+//! configs per node selected through the persistent tuning cache, and
+//! intermediates placed by the liveness [`crate::graph::memplan`] so
+//! disjoint live ranges share allocations.
+//!
+//! [`GraphKernel`] is the graph analogue of the interp backend's
+//! per-artifact kernel: `prepare` runs the fusion planner, builds one
+//! lowered program per kernel node (through the same tuning-cache ->
+//! builder -> `passes::lower` path single-kernel artifacts use), and
+//! computes the buffer plan; `execute` walks the nodes, feeding each
+//! node's output into its assigned pool buffer via
+//! `InterpKernel::execute_into` — the reuse is physical, so a broken
+//! plan fails the differential tests instead of mis-reporting a number.
+
+use std::path::Path;
+
+use crate::error::Result;
+use crate::graph::fuse::{self, FusedEdge};
+use crate::graph::ir::{GraphNode, KernelGraph, NodeOp, ValueRef};
+use crate::graph::memplan::{self, MemPlan};
+use crate::ir::program::TileProgram;
+use crate::runtime::interp_backend::{dequant_config, gemm_config, InterpKernel};
+use crate::runtime::{ArtifactSpec, InterpOptions, WorkloadKind};
+use crate::sim::device::Device;
+use crate::sim::model::{simulate_kernel, Penalties, LAUNCH_US};
+use crate::workloads::dequant::dequant_matmul_program_ep;
+use crate::workloads::epilogue::reference_apply;
+use crate::workloads::matmul::matmul_program_ep;
+use crate::{anyhow, bail};
+
+/// Build the tile program a kernel node executes: workload builder +
+/// fused epilogues, tile config through the tuning cache (or the static
+/// defaults when `opts.tune` is off).
+pub(crate) fn node_program(
+    node: &GraphNode,
+    dev: &Device,
+    opts: &InterpOptions,
+    dir: &Path,
+) -> Result<TileProgram> {
+    let kind = match &node.op {
+        NodeOp::Kernel(kind) => kind,
+        NodeOp::Elementwise(op) => {
+            bail!("{}: element-wise node {} has no tile program", node.name, op.describe())
+        }
+    };
+    if node.epilogues.is_empty() {
+        // no epilogues: reuse the exact artifact path (validation + all
+        // five families, chunk kernels included)
+        let spec = node_spec(node, kind);
+        return crate::runtime::interp_backend::build_program(kind, &spec, dev, opts, dir);
+    }
+    match kind {
+        WorkloadKind::Gemm => {
+            let (a, b) = (&node.in_shapes[0], &node.in_shapes[1]);
+            let (m, k, n) = (a[0], a[1], b[1]);
+            let cfg = gemm_config(m, n, k, dev, opts, dir)
+                .map_err(|e| anyhow!("{}: {}", node.name, e))?;
+            // the builder asserts tileability; graphs with sub-tile
+            // shapes must surface as errors, not panics
+            if m % cfg.block_m != 0 || n % cfg.block_n != 0 || k % cfg.block_k != 0 {
+                bail!(
+                    "{}: gemm {}x{}x{} is not tileable by {}x{}x{}",
+                    node.name, m, n, k, cfg.block_m, cfg.block_n, cfg.block_k
+                );
+            }
+            Ok(matmul_program_ep(
+                m,
+                n,
+                k,
+                crate::ir::dtype::DType::F16,
+                &cfg,
+                &node.epilogues,
+            ))
+        }
+        WorkloadKind::Dequant { fmt, group } => {
+            let a = &node.in_shapes[0];
+            let (m, k) = (a[0], a[1]);
+            let n = node.in_shapes[1][0];
+            let cfg = dequant_config(m, n, k, *fmt, *group, dev, opts, dir)
+                .map_err(|e| anyhow!("{}: {}", node.name, e))?;
+            if m % cfg.block_m != 0 || n % cfg.block_n != 0 || k % cfg.block_k != 0 {
+                bail!(
+                    "{}: dequant {}x{}x{} is not tileable by {}x{}x{}",
+                    node.name, m, n, k, cfg.block_m, cfg.block_n, cfg.block_k
+                );
+            }
+            Ok(dequant_matmul_program_ep(m, n, k, *fmt, &cfg, &node.epilogues))
+        }
+        other => bail!(
+            "{}: {} kernels take no fused epilogues",
+            node.name,
+            other.tag()
+        ),
+    }
+}
+
+/// A kernel node viewed as a single-kernel artifact spec (shape
+/// contract checks reuse the interp backend's).
+fn node_spec(node: &GraphNode, kind: &WorkloadKind) -> ArtifactSpec {
+    ArtifactSpec {
+        name: node.name.clone(),
+        hlo_path: Path::new("-").to_path_buf(),
+        in_shapes: node.in_shapes.clone(),
+        out_shape: node.out_shape.clone(),
+        workload: Some(kind.tag()),
+        graph: None,
+    }
+}
+
+/// Modeled cost of one node, µs: `sim::simulate_kernel` for kernel
+/// nodes (static-default configs — uniform, cache-free costing), DRAM
+/// traffic for element-wise nodes (read primary + operand, write out).
+pub(crate) fn node_cost_us(node: &GraphNode, dev: &Device) -> Result<f64> {
+    match &node.op {
+        NodeOp::Kernel(_) => {
+            let opts = InterpOptions {
+                tune: false,
+                ..Default::default()
+            };
+            let prog = node_program(node, dev, &opts, Path::new("."))?;
+            let report = simulate_kernel(&prog, dev, &Penalties::none())
+                .map_err(|e| anyhow!("{}: cost model: {}", node.name, e))?;
+            Ok(report.time_us)
+        }
+        NodeOp::Elementwise(_) => {
+            let elems: i64 = node
+                .in_shapes
+                .iter()
+                .map(|s| s.iter().product::<i64>())
+                .sum::<i64>()
+                + node.out_len() as i64;
+            Ok(LAUNCH_US + elems as f64 * 4.0 / (dev.dram_gbps * 1e3))
+        }
+    }
+}
+
+/// A graph artifact resolved to per-node lowered programs plus the
+/// fusion decision and buffer plan that connect them.
+pub struct GraphKernel {
+    graph: KernelGraph,
+    fused: Vec<FusedEdge>,
+    fused_cost_us: f64,
+    unfused_cost_us: f64,
+    memplan: MemPlan,
+    /// One prepared kernel per kernel node (`None` for element-wise).
+    kernels: Vec<Option<InterpKernel>>,
+    in_shapes: Vec<Vec<i64>>,
+    out_len: usize,
+}
+
+impl GraphKernel {
+    /// Run the fusion planner, then prepare every kernel node (tile
+    /// configs through the tuning cache in `dir`) and the buffer plan.
+    pub fn prepare(graph: &KernelGraph, opts: &InterpOptions, dir: &Path) -> Result<GraphKernel> {
+        let dev = device(opts)?;
+        let fp = fuse::plan(graph, &dev)
+            .map_err(|e| anyhow!("{}: fusion planning: {}", graph.name, e))?;
+        GraphKernel::from_planned(
+            fp.graph,
+            fp.fused,
+            fp.fused_cost_us,
+            fp.unfused_cost_us,
+            &dev,
+            opts,
+            dir,
+        )
+    }
+
+    /// Prepare without fusing — the unfused baseline of the differential
+    /// tests and the CLI's `--no-fuse` view.
+    pub fn prepare_unfused(
+        graph: &KernelGraph,
+        opts: &InterpOptions,
+        dir: &Path,
+    ) -> Result<GraphKernel> {
+        let dev = device(opts)?;
+        graph.validate()?;
+        let cost = fuse::graph_cost_us(graph, &dev)?;
+        GraphKernel::from_planned(graph.clone(), Vec::new(), cost, cost, &dev, opts, dir)
+    }
+
+    fn from_planned(
+        graph: KernelGraph,
+        fused: Vec<FusedEdge>,
+        fused_cost_us: f64,
+        unfused_cost_us: f64,
+        dev: &Device,
+        opts: &InterpOptions,
+        dir: &Path,
+    ) -> Result<GraphKernel> {
+        let memplan = memplan::plan(&graph);
+        let mut kernels = Vec::with_capacity(graph.nodes.len());
+        for node in &graph.nodes {
+            kernels.push(match &node.op {
+                NodeOp::Kernel(kind) => {
+                    let prog = node_program(node, dev, opts, dir)?;
+                    Some(InterpKernel::from_program(&prog, &node_spec(node, kind), dev)?)
+                }
+                NodeOp::Elementwise(_) => None,
+            });
+        }
+        Ok(GraphKernel {
+            in_shapes: graph.input_shapes(),
+            out_len: graph.out_shape()?.iter().product::<i64>() as usize,
+            graph,
+            fused,
+            fused_cost_us,
+            unfused_cost_us,
+            memplan,
+            kernels,
+        })
+    }
+
+    /// The graph this kernel executes (post-fusion).
+    pub fn graph(&self) -> &KernelGraph {
+        &self.graph
+    }
+
+    /// Accepted folds from the fusion planner.
+    pub fn fusions(&self) -> &[FusedEdge] {
+        &self.fused
+    }
+
+    /// The buffer-reuse plan the executor allocates from.
+    pub fn memplan(&self) -> &MemPlan {
+        &self.memplan
+    }
+
+    /// Modeled (fused, unfused) graph cost, µs.
+    pub fn modeled_cost_us(&self) -> (f64, f64) {
+        (self.fused_cost_us, self.unfused_cost_us)
+    }
+
+    /// Whether batched *row* serving is sound for this graph (every
+    /// output row depends only on the matching row of input 0 — see
+    /// [`KernelGraph::row_batchable`]). The coordinator's model workers
+    /// refuse artifacts where this is false.
+    pub fn row_batchable(&self) -> bool {
+        self.graph.row_batchable()
+    }
+
+    /// One-line summary for serve output and logs.
+    pub fn describe(&self) -> String {
+        let kernels = self.kernels.iter().filter(|k| k.is_some()).count();
+        format!(
+            "{}: {} node(s) ({} kernel(s)), {} fusion(s), modeled {:.1} us fused vs {:.1} us \
+             unfused, planned peak {} B vs {} B materialized",
+            self.graph.name,
+            self.graph.nodes.len(),
+            kernels,
+            self.fused.len(),
+            self.fused_cost_us,
+            self.unfused_cost_us,
+            self.memplan.peak_bytes,
+            self.memplan.intermediate_bytes
+        )
+    }
+
+    /// Execute the graph on f32 inputs (manifest order).
+    pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if inputs.len() != self.in_shapes.len() {
+            bail!(
+                "graph {} expects {} inputs, got {}",
+                self.graph.name,
+                self.in_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (data, shape)) in inputs.iter().zip(&self.in_shapes).enumerate() {
+            let want = shape.iter().product::<i64>() as usize;
+            if data.len() != want {
+                bail!(
+                    "graph input {} length {} != shape {:?}",
+                    i,
+                    data.len(),
+                    shape
+                );
+            }
+        }
+        let mut pool: Vec<Vec<f32>> = self.memplan.pool_bytes.iter().map(|_| Vec::new()).collect();
+        let mut dedicated: Vec<Option<Vec<f32>>> = vec![None; self.graph.nodes.len()];
+        for (i, node) in self.graph.nodes.iter().enumerate() {
+            // take this node's output storage *before* borrowing the
+            // operands: the memplan guarantees the assigned buffer holds
+            // no live operand of this node
+            let storage = match self.memplan.slots[i].buffer {
+                Some(b) => std::mem::take(&mut pool[b]),
+                None => Vec::new(),
+            };
+            let mut ops: Vec<&[f32]> = Vec::with_capacity(node.inputs.len());
+            for v in &node.inputs {
+                ops.push(match v {
+                    ValueRef::Input(k) => inputs[*k].as_slice(),
+                    ValueRef::Node(j) => match self.memplan.slots[*j].buffer {
+                        Some(b) => pool[b].as_slice(),
+                        None => dedicated[*j]
+                            .as_ref()
+                            .ok_or_else(|| {
+                                anyhow!("{}: operand node {} not materialized", node.name, j)
+                            })?
+                            .as_slice(),
+                    },
+                });
+            }
+            let out = match (&self.kernels[i], &node.op) {
+                (Some(kernel), _) => kernel
+                    .execute_into(&ops, storage)
+                    .map_err(|e| anyhow!("{}: {}", node.name, e))?,
+                (None, NodeOp::Elementwise(op)) => {
+                    let mut out = storage;
+                    out.clear();
+                    out.extend_from_slice(ops[0]);
+                    reference_apply(op, &mut out, ops.get(1).copied(), &node.out_shape)
+                        .map_err(|e| anyhow!("{}: {}", node.name, e))?;
+                    out
+                }
+                (None, NodeOp::Kernel(_)) => {
+                    bail!("{}: kernel node was not prepared", node.name)
+                }
+            };
+            drop(ops);
+            match self.memplan.slots[i].buffer {
+                Some(b) => pool[b] = out,
+                None => dedicated[i] = Some(out),
+            }
+        }
+        let out = match self.graph.output {
+            ValueRef::Input(i) => inputs[i].clone(),
+            ValueRef::Node(j) => match self.memplan.slots[j].buffer {
+                Some(b) => std::mem::take(&mut pool[b]),
+                None => dedicated[j]
+                    .take()
+                    .ok_or_else(|| anyhow!("graph output was not materialized"))?,
+            },
+        };
+        if out.len() != self.out_len {
+            bail!(
+                "graph output has {} values, manifest expects {}",
+                out.len(),
+                self.out_len
+            );
+        }
+        Ok(out)
+    }
+}
+
+fn device(opts: &InterpOptions) -> Result<Device> {
+    Device::by_name(&opts.device)
+        .ok_or_else(|| anyhow!("graph backend: unknown modeled device {:?}", opts.device))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ir::mlp_block;
+    use crate::workloads::matmul::test_data;
+
+    fn fast_opts() -> InterpOptions {
+        InterpOptions {
+            tune: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn fused_mlp_matches_the_reference_composition() {
+        let (m, dm, dh) = (64i64, 64, 128);
+        let g = mlp_block(m, dm, dh);
+        let inputs = vec![
+            test_data(m * dm, 0x51),
+            test_data(dm * dh, 0x52),
+            test_data(dh, 0x53),
+            test_data(dh * dm, 0x54),
+            test_data(dm, 0x55),
+        ];
+        let want = g.reference_execute(&inputs).expect("reference");
+        let dir = std::env::temp_dir().join(format!("tilelang-graph-exec-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let fused = GraphKernel::prepare(&g, &fast_opts(), &dir).expect("prepare fused");
+        assert!(!fused.fusions().is_empty());
+        let got = fused.execute(&inputs).expect("fused execution");
+        assert_eq!(got.len(), want.len());
+        for (i, (g_, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g_ - w).abs() < 0.06 + 0.02 * w.abs(),
+                "idx {}: fused {} vs reference {}",
+                i,
+                g_,
+                w
+            );
+        }
+        // unfused execution agrees too (kernel f16 rounding is shared)
+        let unfused = GraphKernel::prepare_unfused(&g, &fast_opts(), &dir).expect("unfused");
+        assert!(unfused.fusions().is_empty());
+        let got_u = unfused.execute(&inputs).expect("unfused execution");
+        for (g_, u) in got.iter().zip(&got_u) {
+            assert!((g_ - u).abs() < 0.06, "fused {} vs unfused {}", g_, u);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn kernel_count_and_describe() {
+        let g = mlp_block(64, 64, 128);
+        let dir = std::env::temp_dir().join(format!("tilelang-graph-desc-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let k = GraphKernel::prepare(&g, &fast_opts(), &dir).expect("prepare");
+        let d = k.describe();
+        assert!(d.contains("fusion"), "{}", d);
+        assert!(k.memplan().peak_bytes > 0);
+        let (fused_us, unfused_us) = k.modeled_cost_us();
+        assert!(fused_us > 0.0 && fused_us < unfused_us);
+        // wrong input counts and lengths error instead of panicking
+        assert!(k.execute(&[]).is_err());
+        let mut bad = vec![vec![0.0; 1]; 5];
+        bad[0] = vec![0.0; 64 * 64];
+        assert!(k.execute(&bad).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

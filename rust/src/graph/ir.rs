@@ -1,0 +1,1130 @@
+//! Dataflow-graph IR: multi-kernel computations over the workload
+//! families, with typed edges carrying shapes/dtypes.
+//!
+//! A [`KernelGraph`] is a DAG in topological node order: every node's
+//! operands reference graph inputs or *earlier* nodes. Nodes are either
+//! kernel nodes (one of the `runtime::WorkloadKind` families, built by
+//! the `workloads::*` tile-program builders, optionally carrying a fused
+//! epilogue list) or element-wise nodes (one `EpilogueOp` applied to a
+//! tensor — the unfused form that `graph::fuse` folds into producers).
+//!
+//! Edges are f32 wire tensors. A node may view an operand under a
+//! different shape when the element counts match (row-major reshape,
+//! e.g. a `[seq, d]` GEMM output feeding a `[1, seq, d]` attention
+//! input); the declared per-operand `in_shapes` make that explicit.
+//!
+//! [`KernelGraph::reference_execute`] composes the f32 CPU references
+//! node by node — the oracle for goldens and the differential tests.
+//!
+//! Ships builders for the paper-motivated scenarios: [`mlp_block`]
+//! (GEMM+bias+GELU -> GEMM+bias+residual), [`attention_block`]
+//! (QKV GEMMs -> flash attention -> output-proj+residual) and
+//! [`dequant_mlp_block`] (GEMM+bias+GELU -> dequant-GEMM+bias).
+
+use std::fs;
+use std::path::Path;
+
+use crate::error::{Context, Result};
+use crate::ir::dtype::DType;
+use crate::runtime::WorkloadKind;
+use crate::util::json::Json;
+use crate::workloads::attention::reference_attention;
+use crate::workloads::dequant::{reference_dequant_matmul, WeightFormat};
+use crate::workloads::epilogue::{reference_apply, Activation, EpilogueOp};
+use crate::workloads::linear_attention::{reference_chunk_scan, reference_chunk_state};
+use crate::workloads::matmul::reference_matmul;
+use crate::{anyhow, bail};
+
+/// A value flowing along a graph edge: a graph input or a node output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ValueRef {
+    Input(usize),
+    Node(usize),
+}
+
+impl ValueRef {
+    fn encode(&self) -> String {
+        match self {
+            ValueRef::Input(i) => format!("in:{}", i),
+            ValueRef::Node(i) => format!("node:{}", i),
+        }
+    }
+
+    fn decode(s: &str) -> Option<ValueRef> {
+        if let Some(i) = s.strip_prefix("in:") {
+            return Some(ValueRef::Input(i.parse().ok()?));
+        }
+        if let Some(i) = s.strip_prefix("node:") {
+            return Some(ValueRef::Node(i.parse().ok()?));
+        }
+        None
+    }
+}
+
+/// A graph input tensor (typed edge source).
+#[derive(Clone, Debug)]
+pub struct GraphInput {
+    pub name: String,
+    pub shape: Vec<i64>,
+    /// Wire dtype. Graphs currently move f32 tensors end to end (the
+    /// runtime's request format); compute dtypes live inside the tile
+    /// programs.
+    pub dtype: DType,
+}
+
+/// What a node computes.
+#[derive(Clone, Debug)]
+pub enum NodeOp {
+    /// One workload-family kernel (tile program).
+    Kernel(WorkloadKind),
+    /// One element-wise operator over the primary input — the unfused
+    /// form of an epilogue.
+    Elementwise(EpilogueOp),
+}
+
+/// One graph node. `inputs` lists operands in program-parameter order:
+/// for kernel nodes the workload's operands first, then one operand per
+/// fused epilogue op that consumes a tensor; for element-wise nodes the
+/// primary tensor and (for bias/residual) the operand.
+#[derive(Clone, Debug)]
+pub struct GraphNode {
+    pub name: String,
+    pub op: NodeOp,
+    pub inputs: Vec<ValueRef>,
+    /// The shape the node's program expects for each operand. May be a
+    /// row-major reshape of the producer's shape (same element count).
+    pub in_shapes: Vec<Vec<i64>>,
+    /// Fused epilogue ops (kernel nodes only; populated by
+    /// `graph::fuse`, or pre-seeded by a builder).
+    pub epilogues: Vec<EpilogueOp>,
+    pub out_shape: Vec<i64>,
+    /// Wire dtype of the output edge.
+    pub dtype: DType,
+}
+
+impl GraphNode {
+    pub fn out_len(&self) -> usize {
+        self.out_shape.iter().product::<i64>() as usize
+    }
+
+    /// One-line description for plans and the CLI.
+    pub fn describe(&self) -> String {
+        let op = match &self.op {
+            NodeOp::Kernel(k) => k.tag(),
+            NodeOp::Elementwise(e) => format!("ew:{}", e.describe()),
+        };
+        let eps = if self.epilogues.is_empty() {
+            String::new()
+        } else {
+            format!(
+                " + {}",
+                self.epilogues
+                    .iter()
+                    .map(|e| e.describe())
+                    .collect::<Vec<_>>()
+                    .join(" + ")
+            )
+        };
+        format!("{}: {}{} -> {:?}", self.name, op, eps, self.out_shape)
+    }
+}
+
+/// A multi-kernel dataflow graph with a single output tensor (the
+/// runtime artifact contract).
+#[derive(Clone, Debug)]
+pub struct KernelGraph {
+    pub name: String,
+    pub inputs: Vec<GraphInput>,
+    pub nodes: Vec<GraphNode>,
+    pub output: ValueRef,
+}
+
+/// Number of primary (non-epilogue) operands a workload kernel takes.
+pub fn kernel_input_count(kind: &WorkloadKind) -> usize {
+    match kind {
+        WorkloadKind::Gemm => 2,
+        WorkloadKind::FlashAttention { .. } => 3,
+        WorkloadKind::Dequant { .. } => 3,
+        WorkloadKind::ChunkState | WorkloadKind::ChunkScan => 3,
+    }
+}
+
+impl KernelGraph {
+    /// Shape of a value (input or node output).
+    pub fn value_shape(&self, v: ValueRef) -> Result<&[i64]> {
+        match v {
+            ValueRef::Input(i) => Ok(&self
+                .inputs
+                .get(i)
+                .ok_or_else(|| anyhow!("graph references unknown input {}", i))?
+                .shape),
+            ValueRef::Node(i) => Ok(&self
+                .nodes
+                .get(i)
+                .ok_or_else(|| anyhow!("graph references unknown node {}", i))?
+                .out_shape),
+        }
+    }
+
+    fn value_elems(&self, v: ValueRef) -> Result<i64> {
+        Ok(self.value_shape(v)?.iter().product())
+    }
+
+    /// The graph's output shape.
+    pub fn out_shape(&self) -> Result<&[i64]> {
+        self.value_shape(self.output)
+    }
+
+    /// Shapes of the graph inputs (manifest `in=` order).
+    pub fn input_shapes(&self) -> Vec<Vec<i64>> {
+        self.inputs.iter().map(|i| i.shape.clone()).collect()
+    }
+
+    /// How many node operands (plus the graph output) read this value.
+    pub fn fan_out(&self, v: ValueRef) -> usize {
+        let mut n = 0;
+        for node in &self.nodes {
+            n += node.inputs.iter().filter(|&&i| i == v).count();
+        }
+        if self.output == v {
+            n += 1;
+        }
+        n
+    }
+
+    /// Structural + shape validation: topological operand order, operand
+    /// counts per node kind, element-count-compatible reshapes, epilogue
+    /// operand shapes, and a reachable output.
+    pub fn validate(&self) -> Result<()> {
+        // shapes must be positive everywhere: a zero/negative dim would
+        // pass element-count products and reach builder asserts
+        for gi in &self.inputs {
+            check_positive(&gi.name, &gi.shape)?;
+        }
+        for node in &self.nodes {
+            check_positive(&node.name, &node.out_shape)?;
+            for s in &node.in_shapes {
+                check_positive(&node.name, s)?;
+            }
+        }
+        // node names are identifiers in every plan, error and fusion
+        // memo: duplicates would silently skip folds and misattribute
+        // diagnostics
+        for (i, node) in self.nodes.iter().enumerate() {
+            if self.nodes[..i].iter().any(|n| n.name == node.name) {
+                bail!("duplicate node name {:?}", node.name);
+            }
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            if node.inputs.len() != node.in_shapes.len() {
+                bail!(
+                    "{}: {} operands but {} declared shapes",
+                    node.name,
+                    node.inputs.len(),
+                    node.in_shapes.len()
+                );
+            }
+            for &v in &node.inputs {
+                if let ValueRef::Node(j) = v {
+                    if j >= i {
+                        bail!(
+                            "{}: operand references node {} out of topological order",
+                            node.name,
+                            j
+                        );
+                    }
+                }
+            }
+            for (k, (v, shape)) in node.inputs.iter().zip(&node.in_shapes).enumerate() {
+                let have = self.value_elems(*v).with_context(|| node.name.clone())?;
+                let want: i64 = shape.iter().product();
+                if have != want {
+                    bail!(
+                        "{}: operand {} has {} elements, program expects {:?} ({})",
+                        node.name,
+                        k,
+                        have,
+                        shape,
+                        want
+                    );
+                }
+            }
+            match &node.op {
+                NodeOp::Kernel(kind) => {
+                    let primary = kernel_input_count(kind);
+                    let operands: usize = node
+                        .epilogues
+                        .iter()
+                        .filter(|e| e.takes_operand())
+                        .count();
+                    if node.inputs.len() != primary + operands {
+                        bail!(
+                            "{}: {} kernel expects {} primary + {} epilogue operands, got {}",
+                            node.name,
+                            kind.tag(),
+                            primary,
+                            operands,
+                            node.inputs.len()
+                        );
+                    }
+                    // primary operand ranks per family: the program
+                    // builders index dims positionally, so a wrong-rank
+                    // shape from a hand-edited graph file must fail here
+                    // rather than panic inside `node_program`
+                    let ranks: &[usize] = match kind {
+                        WorkloadKind::Gemm => &[2, 2],
+                        WorkloadKind::FlashAttention { .. } => &[3, 3, 3],
+                        WorkloadKind::Dequant { .. } => &[2, 2, 2],
+                        WorkloadKind::ChunkState | WorkloadKind::ChunkScan => &[3, 3, 2],
+                    };
+                    for (idx, want) in ranks.iter().enumerate() {
+                        if node.in_shapes[idx].len() != *want {
+                            bail!(
+                                "{}: {} operand {} must be rank {}, got {:?}",
+                                node.name,
+                                kind.tag(),
+                                idx,
+                                want,
+                                node.in_shapes[idx]
+                            );
+                        }
+                    }
+                    if let WorkloadKind::Gemm = kind {
+                        if node.in_shapes[1][0] != node.in_shapes[0][1] {
+                            bail!(
+                                "{}: gemm K mismatch (A {:?}, B {:?})",
+                                node.name,
+                                node.in_shapes[0],
+                                node.in_shapes[1]
+                            );
+                        }
+                    }
+                    let mut next = primary;
+                    for ep in &node.epilogues {
+                        check_epilogue_dim(&node.name, ep, &node.out_shape)?;
+                        if let Some(want) = ep.operand_shape(&node.out_shape) {
+                            let got = &node.in_shapes[next];
+                            if *got != want {
+                                bail!(
+                                    "{}: epilogue {} operand shape {:?}, expected {:?}",
+                                    node.name,
+                                    ep.describe(),
+                                    got,
+                                    want
+                                );
+                            }
+                            next += 1;
+                        }
+                    }
+                }
+                NodeOp::Elementwise(op) => {
+                    if !node.epilogues.is_empty() {
+                        bail!("{}: element-wise nodes carry no fused epilogues", node.name);
+                    }
+                    check_epilogue_dim(&node.name, op, &node.out_shape)?;
+                    let want_operands = 1 + op.takes_operand() as usize;
+                    if node.inputs.len() != want_operands {
+                        bail!(
+                            "{}: {} expects {} operand(s), got {}",
+                            node.name,
+                            op.describe(),
+                            want_operands,
+                            node.inputs.len()
+                        );
+                    }
+                    if node.in_shapes[0] != node.out_shape {
+                        bail!(
+                            "{}: element-wise output {:?} != primary input {:?}",
+                            node.name,
+                            node.out_shape,
+                            node.in_shapes[0]
+                        );
+                    }
+                    if let Some(want) = op.operand_shape(&node.out_shape) {
+                        if node.in_shapes[1] != want {
+                            bail!(
+                                "{}: {} operand shape {:?}, expected {:?}",
+                                node.name,
+                                op.describe(),
+                                node.in_shapes[1],
+                                want
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        self.value_shape(self.output).context("graph output")?;
+        Ok(())
+    }
+
+    /// Conservative row-independence analysis for batched row serving:
+    /// true only when every output row provably depends on just the
+    /// matching row of graph input 0. Tracks which values carry the
+    /// request rows along their dim 0: input 0 does; a GEMM propagates
+    /// it when its A operand does (same leading extent, B not
+    /// row-carrying), as do row-independent epilogues / element-wise ops
+    /// (feature-dim bias, activation, scale, residual against another
+    /// row-carrying value). Anything else — attention (mixes across the
+    /// sequence), the transposed dequant output, chunk kernels, dim-0
+    /// bias — stops the chain, so the coordinator refuses to micro-batch
+    /// the artifact instead of serving rows computed from co-batched
+    /// strangers.
+    pub fn row_batchable(&self) -> bool {
+        let batch = match self.inputs.first() {
+            Some(gi) => gi.shape[0],
+            None => return false,
+        };
+        let mut carries = vec![false; self.nodes.len()];
+        for (i, node) in self.nodes.iter().enumerate() {
+            let primary = carries_rows(&node.inputs[0], &carries);
+            // a reshape that moves the row dimension breaks tracking
+            let rows_intact = node.in_shapes[0].first() == Some(&batch)
+                && node.out_shape.first() == Some(&batch);
+            carries[i] = match &node.op {
+                NodeOp::Kernel(WorkloadKind::Gemm) => {
+                    primary
+                        && rows_intact
+                        && !carries_rows(&node.inputs[1], &carries)
+                        && epilogues_row_independent(node, &carries)
+                }
+                NodeOp::Elementwise(op) => {
+                    primary
+                        && rows_intact
+                        && ep_row_independent(op, node.inputs.get(1), &carries)
+                }
+                NodeOp::Kernel(_) => false,
+            };
+        }
+        carries_rows(&self.output, &carries)
+    }
+
+    /// Execute the graph on the f32 CPU references, node by node with
+    /// every edge materialized — the semantic oracle for goldens and the
+    /// fused-vs-unfused differential tests.
+    pub fn reference_execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.validate()?;
+        if inputs.len() != self.inputs.len() {
+            bail!(
+                "graph {} expects {} inputs, got {}",
+                self.name,
+                self.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (data, gi)) in inputs.iter().zip(&self.inputs).enumerate() {
+            let want = gi.shape.iter().product::<i64>() as usize;
+            if data.len() != want {
+                bail!(
+                    "graph input {} has {} values, shape {:?} wants {}",
+                    i,
+                    data.len(),
+                    gi.shape,
+                    want
+                );
+            }
+        }
+        let mut values: Vec<Vec<f32>> = Vec::with_capacity(self.nodes.len());
+        for node in &self.nodes {
+            let ops: Vec<&[f32]> = node
+                .inputs
+                .iter()
+                .map(|v| match v {
+                    ValueRef::Input(i) => inputs[*i].as_slice(),
+                    ValueRef::Node(j) => values[*j].as_slice(),
+                })
+                .collect();
+            let mut out = match &node.op {
+                NodeOp::Kernel(kind) => {
+                    reference_kernel(kind, &node.in_shapes, &node.out_shape, &ops)
+                        .with_context(|| node.name.clone())?
+                }
+                NodeOp::Elementwise(op) => {
+                    let mut out = ops[0].to_vec();
+                    reference_apply(op, &mut out, ops.get(1).copied(), &node.out_shape)
+                        .map_err(|e| anyhow!("{}: {}", node.name, e))?;
+                    out
+                }
+            };
+            // fused epilogues run on the kernel result in graph order
+            if let NodeOp::Kernel(kind) = &node.op {
+                let mut next = kernel_input_count(kind);
+                for ep in &node.epilogues {
+                    let op_data = if ep.takes_operand() {
+                        let d = ops[next];
+                        next += 1;
+                        Some(d)
+                    } else {
+                        None
+                    };
+                    reference_apply(ep, &mut out, op_data, &node.out_shape)
+                        .map_err(|e| anyhow!("{}: {}", node.name, e))?;
+                }
+            }
+            drop(ops);
+            values.push(out);
+        }
+        Ok(match self.output {
+            ValueRef::Input(i) => inputs[i].clone(),
+            ValueRef::Node(j) => values[j].clone(),
+        })
+    }
+
+    // ---- serialization (graph artifacts) -----------------------------
+
+    pub fn to_json(&self) -> Json {
+        let inputs = self
+            .inputs
+            .iter()
+            .map(|i| {
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(i.name.clone())),
+                    ("shape".into(), shape_json(&i.shape)),
+                    ("dtype".into(), Json::Str(i.dtype.to_string())),
+                ])
+            })
+            .collect();
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| {
+                let mut fields = vec![("name".into(), Json::Str(n.name.clone()))];
+                match &n.op {
+                    NodeOp::Kernel(k) => {
+                        fields.push(("kernel".into(), Json::Str(k.tag())));
+                    }
+                    NodeOp::Elementwise(e) => {
+                        fields.push(("elementwise".into(), e.to_json()));
+                    }
+                }
+                fields.push((
+                    "inputs".into(),
+                    Json::Arr(n.inputs.iter().map(|v| Json::Str(v.encode())).collect()),
+                ));
+                fields.push((
+                    "in_shapes".into(),
+                    Json::Arr(n.in_shapes.iter().map(|s| shape_json(s)).collect()),
+                ));
+                if !n.epilogues.is_empty() {
+                    fields.push((
+                        "epilogues".into(),
+                        Json::Arr(n.epilogues.iter().map(|e| e.to_json()).collect()),
+                    ));
+                }
+                fields.push(("out".into(), shape_json(&n.out_shape)));
+                fields.push(("dtype".into(), Json::Str(n.dtype.to_string())));
+                Json::Obj(fields)
+            })
+            .collect();
+        Json::Obj(vec![
+            ("name".into(), Json::Str(self.name.clone())),
+            ("inputs".into(), Json::Arr(inputs)),
+            ("nodes".into(), Json::Arr(nodes)),
+            ("output".into(), Json::Str(self.output.encode())),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<KernelGraph> {
+        let name = v
+            .get("name")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("graph json missing name"))?
+            .to_string();
+        let mut inputs = Vec::new();
+        for i in v
+            .get("inputs")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("graph json missing inputs"))?
+        {
+            inputs.push(GraphInput {
+                name: i
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("graph input missing name"))?
+                    .to_string(),
+                shape: i
+                    .get("shape")
+                    .and_then(Json::as_i64_arr)
+                    .ok_or_else(|| anyhow!("graph input missing shape"))?,
+                dtype: parse_wire_dtype(i.get("dtype").and_then(Json::as_str))?,
+            });
+        }
+        let mut nodes = Vec::new();
+        for n in v
+            .get("nodes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("graph json missing nodes"))?
+        {
+            let nname = n
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("graph node missing name"))?
+                .to_string();
+            let op = if let Some(tag) = n.get("kernel").and_then(Json::as_str) {
+                NodeOp::Kernel(WorkloadKind::parse(tag)?)
+            } else if let Some(e) = n.get("elementwise") {
+                NodeOp::Elementwise(
+                    EpilogueOp::from_json(e)
+                        .ok_or_else(|| anyhow!("{}: bad elementwise op", nname))?,
+                )
+            } else {
+                bail!("{}: node is neither kernel nor elementwise", nname);
+            };
+            let mut refs = Vec::new();
+            for s in n
+                .get("inputs")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{}: missing inputs", nname))?
+            {
+                let s = s.as_str().ok_or_else(|| anyhow!("{}: bad input ref", nname))?;
+                refs.push(
+                    ValueRef::decode(s).ok_or_else(|| anyhow!("{}: bad input ref {:?}", nname, s))?,
+                );
+            }
+            let mut in_shapes = Vec::new();
+            for s in n
+                .get("in_shapes")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("{}: missing in_shapes", nname))?
+            {
+                in_shapes.push(
+                    s.as_i64_arr()
+                        .ok_or_else(|| anyhow!("{}: bad in_shape", nname))?,
+                );
+            }
+            let mut epilogues = Vec::new();
+            if let Some(eps) = n.get("epilogues").and_then(Json::as_arr) {
+                for e in eps {
+                    epilogues.push(
+                        EpilogueOp::from_json(e)
+                            .ok_or_else(|| anyhow!("{}: bad epilogue", nname))?,
+                    );
+                }
+            }
+            nodes.push(GraphNode {
+                name: nname.clone(),
+                op,
+                inputs: refs,
+                in_shapes,
+                epilogues,
+                out_shape: n
+                    .get("out")
+                    .and_then(Json::as_i64_arr)
+                    .ok_or_else(|| anyhow!("{}: missing out shape", nname))?,
+                dtype: parse_wire_dtype(n.get("dtype").and_then(Json::as_str))?,
+            });
+        }
+        let output = v
+            .get("output")
+            .and_then(Json::as_str)
+            .and_then(ValueRef::decode)
+            .ok_or_else(|| anyhow!("graph json missing output"))?;
+        let g = KernelGraph {
+            name,
+            inputs,
+            nodes,
+            output,
+        };
+        g.validate()?;
+        Ok(g)
+    }
+
+    /// Read + validate a graph artifact file (`<name>.graph.json`).
+    pub fn load(path: impl AsRef<Path>) -> Result<KernelGraph> {
+        let path = path.as_ref();
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("reading graph artifact {:?}", path))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing graph artifact {:?}: {}", path, e))?;
+        KernelGraph::from_json(&v)
+    }
+
+    /// Write the graph artifact file.
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        fs::write(path, self.to_json().dump())
+            .with_context(|| format!("writing graph artifact {:?}", path))
+    }
+}
+
+fn shape_json(s: &[i64]) -> Json {
+    Json::Arr(s.iter().map(|&d| Json::Num(d as f64)).collect())
+}
+
+fn check_positive(name: &str, shape: &[i64]) -> Result<()> {
+    if shape.is_empty() || shape.iter().any(|&d| d <= 0) {
+        bail!("{}: malformed shape {:?} (dims must be positive)", name, shape);
+    }
+    Ok(())
+}
+
+/// Does `v` carry the request rows along its dim 0? The single source
+/// of truth for `row_batchable`'s tracking: graph input 0 does; node
+/// outputs per the propagation table.
+fn carries_rows(v: &ValueRef, carries: &[bool]) -> bool {
+    match v {
+        ValueRef::Input(i) => *i == 0,
+        ValueRef::Node(j) => carries[*j],
+    }
+}
+
+/// Are all of a kernel node's fused epilogues row-independent?
+fn epilogues_row_independent(node: &GraphNode, carries: &[bool]) -> bool {
+    let kind = match &node.op {
+        NodeOp::Kernel(kind) => kind,
+        NodeOp::Elementwise(_) => return true,
+    };
+    let mut next = kernel_input_count(kind);
+    for ep in &node.epilogues {
+        let operand = if ep.takes_operand() {
+            let v = node.inputs.get(next);
+            next += 1;
+            v
+        } else {
+            None
+        };
+        if !ep_row_independent(ep, operand, carries) {
+            return false;
+        }
+    }
+    true
+}
+
+/// Is one epilogue / element-wise op independent across output rows?
+/// Feature-dim bias, activation and scale are; a residual is when its
+/// operand also carries the request rows; a dim-0 bias ties values to
+/// absolute batch slots, which rotated request rows would scramble.
+fn ep_row_independent(op: &EpilogueOp, operand: Option<&ValueRef>, carries: &[bool]) -> bool {
+    match op {
+        EpilogueOp::BiasAdd { dim } => *dim == 1,
+        EpilogueOp::Activation(_) | EpilogueOp::Scale(_) => true,
+        EpilogueOp::ResidualAdd => operand.map(|v| carries_rows(v, carries)).unwrap_or(false),
+    }
+}
+
+/// A bias must index a real dimension of a rank-2 output — anything
+/// else would sail past `operand_shape` (which returns `None` for an
+/// out-of-range dim) and panic inside the builder asserts instead of
+/// failing the load.
+fn check_epilogue_dim(name: &str, op: &EpilogueOp, out_shape: &[i64]) -> Result<()> {
+    if let EpilogueOp::BiasAdd { dim } = op {
+        if out_shape.len() != 2 || *dim >= 2 {
+            bail!(
+                "{}: bias_add dim {} invalid for output {:?} (rank-2, dim < 2 required)",
+                name,
+                dim,
+                out_shape
+            );
+        }
+    }
+    Ok(())
+}
+
+fn parse_wire_dtype(s: Option<&str>) -> Result<DType> {
+    match s {
+        None | Some("f32") => Ok(DType::F32),
+        Some(other) => bail!("unsupported wire dtype {:?} (graphs move f32 tensors)", other),
+    }
+}
+
+/// Execute one workload kernel on the CPU references. `ops` holds the
+/// primary operand slices (flat f32) in program order.
+fn reference_kernel(
+    kind: &WorkloadKind,
+    in_shapes: &[Vec<i64>],
+    out_shape: &[i64],
+    ops: &[&[f32]],
+) -> Result<Vec<f32>> {
+    match kind {
+        WorkloadKind::Gemm => {
+            let (a, b) = (&in_shapes[0], &in_shapes[1]);
+            Ok(reference_matmul(ops[0], ops[1], a[0], b[1], a[1]))
+        }
+        WorkloadKind::FlashAttention { causal } => {
+            let q = &in_shapes[0];
+            Ok(reference_attention(
+                ops[0], ops[1], ops[2], q[0], q[1], q[2], *causal,
+            ))
+        }
+        WorkloadKind::Dequant { fmt, group } => {
+            let (a, s) = (&in_shapes[0], &in_shapes[2]);
+            let (m, k) = (a[0], a[1]);
+            let n = in_shapes[1][0];
+            if s[1] * group != k {
+                bail!("dequant scales {:?} do not cover k {} at group {}", s, k, group);
+            }
+            Ok(reference_dequant_matmul(
+                ops[0], ops[1], ops[2], m, n, k, *fmt, *group,
+            ))
+        }
+        WorkloadKind::ChunkState => {
+            let b = &in_shapes[0];
+            let (bh, seq, n_state) = (b[0], b[1], b[2]);
+            let p = in_shapes[1][2];
+            let nchunks = out_shape[0] / bh;
+            if nchunks <= 0 || seq % nchunks != 0 {
+                bail!("chunk_state output {:?} does not tile seq {}", out_shape, seq);
+            }
+            Ok(reference_chunk_state(
+                ops[0],
+                ops[1],
+                ops[2],
+                bh,
+                seq,
+                n_state,
+                p,
+                seq / nchunks,
+            ))
+        }
+        WorkloadKind::ChunkScan => {
+            let c = &in_shapes[0];
+            let (bh, seq, n_state) = (c[0], c[1], c[2]);
+            let p = in_shapes[1][2];
+            let nchunks = in_shapes[1][0] / bh;
+            if nchunks <= 0 || seq % nchunks != 0 {
+                bail!("chunk_scan state {:?} does not tile seq {}", in_shapes[1], seq);
+            }
+            Ok(reference_chunk_scan(
+                ops[0],
+                ops[1],
+                ops[2],
+                bh,
+                seq,
+                n_state,
+                p,
+                seq / nchunks,
+            ))
+        }
+    }
+}
+
+// ---- scenario builders ---------------------------------------------
+
+/// Transformer MLP block: `Y = X + B2 + gelu(X W1 + B1) W2` over a row
+/// batch `X [m, d_model]`. Built *unfused* — one node per kernel and one
+/// per element-wise op — so the fusion planner's folds are observable,
+/// testable decisions.
+pub fn mlp_block(m: i64, d_model: i64, d_hidden: i64) -> KernelGraph {
+    let f32s = DType::F32;
+    let inputs = vec![
+        GraphInput { name: "X".into(), shape: vec![m, d_model], dtype: f32s },
+        GraphInput { name: "W1".into(), shape: vec![d_model, d_hidden], dtype: f32s },
+        GraphInput { name: "B1".into(), shape: vec![d_hidden], dtype: f32s },
+        GraphInput { name: "W2".into(), shape: vec![d_hidden, d_model], dtype: f32s },
+        GraphInput { name: "B2".into(), shape: vec![d_model], dtype: f32s },
+    ];
+    let nodes = vec![
+        GraphNode {
+            name: "ffn1".into(),
+            op: NodeOp::Kernel(WorkloadKind::Gemm),
+            inputs: vec![ValueRef::Input(0), ValueRef::Input(1)],
+            in_shapes: vec![vec![m, d_model], vec![d_model, d_hidden]],
+            epilogues: vec![],
+            out_shape: vec![m, d_hidden],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "bias1".into(),
+            op: NodeOp::Elementwise(EpilogueOp::BiasAdd { dim: 1 }),
+            inputs: vec![ValueRef::Node(0), ValueRef::Input(2)],
+            in_shapes: vec![vec![m, d_hidden], vec![d_hidden]],
+            epilogues: vec![],
+            out_shape: vec![m, d_hidden],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "gelu".into(),
+            op: NodeOp::Elementwise(EpilogueOp::Activation(Activation::Gelu)),
+            inputs: vec![ValueRef::Node(1)],
+            in_shapes: vec![vec![m, d_hidden]],
+            epilogues: vec![],
+            out_shape: vec![m, d_hidden],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "ffn2".into(),
+            op: NodeOp::Kernel(WorkloadKind::Gemm),
+            inputs: vec![ValueRef::Node(2), ValueRef::Input(3)],
+            in_shapes: vec![vec![m, d_hidden], vec![d_hidden, d_model]],
+            epilogues: vec![],
+            out_shape: vec![m, d_model],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "bias2".into(),
+            op: NodeOp::Elementwise(EpilogueOp::BiasAdd { dim: 1 }),
+            inputs: vec![ValueRef::Node(3), ValueRef::Input(4)],
+            in_shapes: vec![vec![m, d_model], vec![d_model]],
+            epilogues: vec![],
+            out_shape: vec![m, d_model],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "residual".into(),
+            op: NodeOp::Elementwise(EpilogueOp::ResidualAdd),
+            inputs: vec![ValueRef::Node(4), ValueRef::Input(0)],
+            in_shapes: vec![vec![m, d_model], vec![m, d_model]],
+            epilogues: vec![],
+            out_shape: vec![m, d_model],
+            dtype: f32s,
+        },
+    ];
+    KernelGraph {
+        name: format!("mlp_block_{}x{}x{}", m, d_model, d_hidden),
+        inputs,
+        nodes,
+        output: ValueRef::Node(5),
+    }
+}
+
+/// Single-head attention block: Q/K/V projections of `X [seq, d]`,
+/// flash attention over the `[1, seq, d]` view, output projection with
+/// a residual back to `X`. The rank-2 -> rank-3 operand reshapes are the
+/// typed-edge case the graph IR makes explicit.
+pub fn attention_block(seq: i64, d: i64, causal: bool) -> KernelGraph {
+    let f32s = DType::F32;
+    let proj = |name: &str, w: usize| GraphNode {
+        name: name.into(),
+        op: NodeOp::Kernel(WorkloadKind::Gemm),
+        inputs: vec![ValueRef::Input(0), ValueRef::Input(w)],
+        in_shapes: vec![vec![seq, d], vec![d, d]],
+        epilogues: vec![],
+        out_shape: vec![seq, d],
+        dtype: f32s,
+    };
+    let inputs = vec![
+        GraphInput { name: "X".into(), shape: vec![seq, d], dtype: f32s },
+        GraphInput { name: "Wq".into(), shape: vec![d, d], dtype: f32s },
+        GraphInput { name: "Wk".into(), shape: vec![d, d], dtype: f32s },
+        GraphInput { name: "Wv".into(), shape: vec![d, d], dtype: f32s },
+        GraphInput { name: "Wo".into(), shape: vec![d, d], dtype: f32s },
+    ];
+    let nodes = vec![
+        proj("q_proj", 1),
+        proj("k_proj", 2),
+        proj("v_proj", 3),
+        GraphNode {
+            name: "attention".into(),
+            op: NodeOp::Kernel(WorkloadKind::FlashAttention { causal }),
+            inputs: vec![ValueRef::Node(0), ValueRef::Node(1), ValueRef::Node(2)],
+            // [seq, d] projections viewed as single-head [1, seq, d];
+            // the kernel's output keeps the rank-3 view and the output
+            // projection reshapes it back — both sides of the typed-edge
+            // reshape rule
+            in_shapes: vec![vec![1, seq, d]; 3],
+            epilogues: vec![],
+            out_shape: vec![1, seq, d],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "out_proj".into(),
+            op: NodeOp::Kernel(WorkloadKind::Gemm),
+            inputs: vec![ValueRef::Node(3), ValueRef::Input(4)],
+            in_shapes: vec![vec![seq, d], vec![d, d]],
+            epilogues: vec![],
+            out_shape: vec![seq, d],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "residual".into(),
+            op: NodeOp::Elementwise(EpilogueOp::ResidualAdd),
+            inputs: vec![ValueRef::Node(4), ValueRef::Input(0)],
+            in_shapes: vec![vec![seq, d], vec![seq, d]],
+            epilogues: vec![],
+            out_shape: vec![seq, d],
+            dtype: f32s,
+        },
+    ];
+    KernelGraph {
+        name: format!("attention_block_{}x{}", seq, d),
+        inputs,
+        nodes,
+        output: ValueRef::Node(5),
+    }
+}
+
+/// Dequant MLP: fp16 GEMM + bias + GELU feeding a weight-only-quantized
+/// second layer (`Ct[n_out, m] = dequant(W2) @ h^T`) with a bias over
+/// the transposed output's feature rows (dim 0).
+pub fn dequant_mlp_block(
+    m: i64,
+    d_model: i64,
+    d_hidden: i64,
+    d_out: i64,
+    fmt: WeightFormat,
+    group: i64,
+) -> KernelGraph {
+    let f32s = DType::F32;
+    let epb = fmt.elems_per_byte();
+    let inputs = vec![
+        GraphInput { name: "X".into(), shape: vec![m, d_model], dtype: f32s },
+        GraphInput { name: "W1".into(), shape: vec![d_model, d_hidden], dtype: f32s },
+        GraphInput { name: "B1".into(), shape: vec![d_hidden], dtype: f32s },
+        GraphInput {
+            name: "W2_packed".into(),
+            shape: vec![d_out, d_hidden / epb],
+            dtype: f32s,
+        },
+        GraphInput {
+            name: "W2_scales".into(),
+            shape: vec![d_out, d_hidden / group],
+            dtype: f32s,
+        },
+        GraphInput { name: "B2".into(), shape: vec![d_out], dtype: f32s },
+    ];
+    let nodes = vec![
+        GraphNode {
+            name: "ffn1".into(),
+            op: NodeOp::Kernel(WorkloadKind::Gemm),
+            inputs: vec![ValueRef::Input(0), ValueRef::Input(1)],
+            in_shapes: vec![vec![m, d_model], vec![d_model, d_hidden]],
+            epilogues: vec![],
+            out_shape: vec![m, d_hidden],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "bias1".into(),
+            op: NodeOp::Elementwise(EpilogueOp::BiasAdd { dim: 1 }),
+            inputs: vec![ValueRef::Node(0), ValueRef::Input(2)],
+            in_shapes: vec![vec![m, d_hidden], vec![d_hidden]],
+            epilogues: vec![],
+            out_shape: vec![m, d_hidden],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "gelu".into(),
+            op: NodeOp::Elementwise(EpilogueOp::Activation(Activation::Gelu)),
+            inputs: vec![ValueRef::Node(1)],
+            in_shapes: vec![vec![m, d_hidden]],
+            epilogues: vec![],
+            out_shape: vec![m, d_hidden],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "ffn2_dequant".into(),
+            op: NodeOp::Kernel(WorkloadKind::Dequant { fmt, group }),
+            inputs: vec![ValueRef::Node(2), ValueRef::Input(3), ValueRef::Input(4)],
+            in_shapes: vec![
+                vec![m, d_hidden],
+                vec![d_out, d_hidden / epb],
+                vec![d_out, d_hidden / group],
+            ],
+            epilogues: vec![],
+            out_shape: vec![d_out, m],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "bias2".into(),
+            op: NodeOp::Elementwise(EpilogueOp::BiasAdd { dim: 0 }),
+            inputs: vec![ValueRef::Node(3), ValueRef::Input(5)],
+            in_shapes: vec![vec![d_out, m], vec![d_out]],
+            epilogues: vec![],
+            out_shape: vec![d_out, m],
+            dtype: f32s,
+        },
+    ];
+    KernelGraph {
+        name: format!("dequant_mlp_{}x{}x{}", m, d_model, d_hidden),
+        inputs,
+        nodes,
+        output: ValueRef::Node(4),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::matmul::test_data;
+
+    #[test]
+    fn builders_validate() {
+        for g in [
+            mlp_block(64, 64, 128),
+            attention_block(128, 64, false),
+            attention_block(128, 64, true),
+            dequant_mlp_block(32, 64, 64, 64, WeightFormat::Int4, 32),
+        ] {
+            g.validate().unwrap_or_else(|e| panic!("{}: {}", g.name, e));
+            assert!(g.out_shape().is_ok());
+        }
+    }
+
+    #[test]
+    fn json_round_trip_preserves_structure() {
+        let g = mlp_block(64, 64, 128);
+        let text = g.to_json().dump();
+        let back = KernelGraph::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.name, g.name);
+        assert_eq!(back.inputs.len(), g.inputs.len());
+        assert_eq!(back.nodes.len(), g.nodes.len());
+        assert_eq!(back.output, g.output);
+        for (a, b) in back.nodes.iter().zip(&g.nodes) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.inputs, b.inputs);
+            assert_eq!(a.in_shapes, b.in_shapes);
+            assert_eq!(a.out_shape, b.out_shape);
+            assert_eq!(a.epilogues, b.epilogues);
+        }
+        // attention's rank-3 reshapes survive too
+        let g = attention_block(128, 64, true);
+        let back =
+            KernelGraph::from_json(&Json::parse(&g.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.nodes[3].in_shapes[0], vec![1, 128, 64]);
+    }
+
+    #[test]
+    fn validation_rejects_malformed_graphs() {
+        // forward reference
+        let mut g = mlp_block(64, 64, 128);
+        g.nodes[0].inputs[0] = ValueRef::Node(3);
+        assert!(g.validate().is_err());
+        // element-count mismatch
+        let mut g = mlp_block(64, 64, 128);
+        g.nodes[0].in_shapes[0] = vec![64, 32];
+        assert!(g.validate().is_err());
+        // epilogue operand shape mismatch
+        let mut g = mlp_block(64, 64, 128);
+        g.nodes[1].in_shapes[1] = vec![64];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn reference_execute_composes_the_mlp() {
+        let (m, dm, dh) = (8i64, 8i64, 16i64);
+        let g = mlp_block(m, dm, dh);
+        let x = test_data(m * dm, 1);
+        let w1 = test_data(dm * dh, 2);
+        let b1 = test_data(dh, 3);
+        let w2 = test_data(dh * dm, 4);
+        let b2 = test_data(dm, 5);
+        let out = g
+            .reference_execute(&[x.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()])
+            .unwrap();
+        // hand-composed oracle
+        let mut h = reference_matmul(&x, &w1, m, dh, dm);
+        for i in 0..m as usize {
+            for j in 0..dh as usize {
+                h[i * dh as usize + j] += b1[j];
+                h[i * dh as usize + j] = Activation::Gelu.reference(h[i * dh as usize + j]);
+            }
+        }
+        let mut y = reference_matmul(&h, &w2, m, dm, dh);
+        for i in 0..m as usize {
+            for j in 0..dm as usize {
+                y[i * dm as usize + j] += b2[j] + x[i * dm as usize + j];
+            }
+        }
+        for (g_, w_) in out.iter().zip(&y) {
+            assert!((g_ - w_).abs() < 1e-5, "{} vs {}", g_, w_);
+        }
+    }
+
+    #[test]
+    fn fan_out_counts_every_consumer() {
+        let g = mlp_block(64, 64, 128);
+        // X feeds ffn1 and the residual
+        assert_eq!(g.fan_out(ValueRef::Input(0)), 2);
+        assert_eq!(g.fan_out(ValueRef::Node(0)), 1);
+        assert_eq!(g.fan_out(ValueRef::Node(5)), 1); // the graph output
+    }
+}

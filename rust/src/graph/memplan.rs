@@ -1,0 +1,219 @@
+//! Liveness-based buffer planning for graph execution: intermediates
+//! whose live ranges are disjoint share one allocation, so a block's
+//! peak "DRAM" footprint is the planned pool, not the sum of every edge
+//! tensor.
+//!
+//! The plan is computed once per prepared graph and then *used* by the
+//! executor (`graph::exec`): each node writes its output into its
+//! assigned pool buffer via `InterpKernel::execute_into`, so a plan that
+//! wrongly shared a live buffer would corrupt the differential tests,
+//! not just an accounting number.
+
+use crate::graph::ir::{KernelGraph, ValueRef};
+
+/// One pooled intermediate: which buffer a node's output occupies and
+/// its live range `[def, last_use]` in node indices.
+#[derive(Clone, Debug)]
+pub struct SlotAssign {
+    /// Pool buffer index; `None` for the graph output (dedicated
+    /// allocation — it leaves the pool as the request reply).
+    pub buffer: Option<usize>,
+    /// Node index that defines the tensor.
+    pub def: usize,
+    /// Last node index that reads it (== `def` for dead or output-only
+    /// tensors; `usize::MAX` never occurs — the output is dedicated).
+    pub last_use: usize,
+    /// Tensor bytes (f32 wire format).
+    pub bytes: i64,
+}
+
+/// The buffer-reuse plan for one graph.
+#[derive(Clone, Debug)]
+pub struct MemPlan {
+    /// Per node (same order as `graph.nodes`).
+    pub slots: Vec<SlotAssign>,
+    /// Planned pool buffer sizes, bytes.
+    pub pool_bytes: Vec<i64>,
+    /// Peak planned bytes: the whole pool is live at once in the worst
+    /// case, so this is the pool sum (graph output excluded).
+    pub peak_bytes: i64,
+    /// What materializing every intermediate would cost (graph output
+    /// excluded) — the number the pool must beat.
+    pub intermediate_bytes: i64,
+}
+
+impl MemPlan {
+    /// Human lines for the CLI plan printout.
+    pub fn describe(&self, g: &KernelGraph) -> Vec<String> {
+        let mut out = Vec::new();
+        for (i, s) in self.slots.iter().enumerate() {
+            let buf = match s.buffer {
+                Some(b) => format!("pool[{}]", b),
+                None => "output".to_string(),
+            };
+            out.push(format!(
+                "  {:<24} {:>8} B  {:<9} live [{}, {}]",
+                g.nodes[i].name, s.bytes, buf, s.def, s.last_use
+            ));
+        }
+        out.push(format!(
+            "  peak planned: {} B across {} pooled buffer(s); materializing every \
+             intermediate would take {} B",
+            self.peak_bytes,
+            self.pool_bytes.len(),
+            self.intermediate_bytes
+        ));
+        out
+    }
+}
+
+/// Plan buffer reuse for `g` (fused or unfused). Greedy linear scan in
+/// topological order: allocate the defining node's output first (so a
+/// node never aliases its own operands), then return operands whose
+/// last consumer was this node to the free pool.
+pub fn plan(g: &KernelGraph) -> MemPlan {
+    let n = g.nodes.len();
+    // last consuming node per node output
+    let mut last_use: Vec<usize> = (0..n).collect();
+    for (i, node) in g.nodes.iter().enumerate() {
+        for v in &node.inputs {
+            if let ValueRef::Node(j) = v {
+                last_use[*j] = last_use[*j].max(i);
+            }
+        }
+    }
+    let mut pool_bytes: Vec<i64> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut slots: Vec<SlotAssign> = Vec::with_capacity(n);
+    let mut intermediate_bytes = 0i64;
+    for (i, node) in g.nodes.iter().enumerate() {
+        let bytes = node.out_len() as i64 * 4;
+        let buffer = if g.output == ValueRef::Node(i) {
+            None
+        } else {
+            intermediate_bytes += bytes;
+            // best fit: the smallest free buffer that holds the tensor;
+            // otherwise grow the largest free buffer (still reuse);
+            // otherwise open a new one
+            let fit = free
+                .iter()
+                .copied()
+                .filter(|&b| pool_bytes[b] >= bytes)
+                .min_by_key(|&b| pool_bytes[b]);
+            let chosen = match fit {
+                Some(b) => b,
+                None => match free.iter().copied().max_by_key(|&b| pool_bytes[b]) {
+                    Some(b) => {
+                        pool_bytes[b] = bytes;
+                        b
+                    }
+                    None => {
+                        pool_bytes.push(bytes);
+                        pool_bytes.len() - 1
+                    }
+                },
+            };
+            free.retain(|&b| b != chosen);
+            Some(chosen)
+        };
+        slots.push(SlotAssign {
+            buffer,
+            def: i,
+            last_use: last_use[i],
+            bytes,
+        });
+        // operands that die here go back to the pool — strictly after
+        // this node's own allocation, so input/output never alias
+        // (j == i frees a never-consumed output immediately)
+        for j in 0..=i {
+            if last_use[j] == i {
+                if let Some(b) = slots[j].buffer {
+                    if !free.contains(&b) {
+                        free.push(b);
+                    }
+                }
+            }
+        }
+    }
+    MemPlan {
+        peak_bytes: pool_bytes.iter().sum(),
+        pool_bytes,
+        slots,
+        intermediate_bytes,
+    }
+}
+
+/// Check the no-aliasing invariant: two tensors sharing a pool buffer
+/// must have disjoint live ranges, with the later tensor defined
+/// strictly after the earlier one's last use. Returns the offending
+/// pair when violated (test + debug helper).
+pub fn find_live_overlap(plan: &MemPlan) -> Option<(usize, usize)> {
+    for i in 0..plan.slots.len() {
+        for j in (i + 1)..plan.slots.len() {
+            let (a, b) = (&plan.slots[i], &plan.slots[j]);
+            if a.buffer.is_some() && a.buffer == b.buffer && b.def <= a.last_use {
+                return Some((i, j));
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ir::{attention_block, dequant_mlp_block, mlp_block};
+    use crate::workloads::dequant::WeightFormat;
+
+    #[test]
+    fn chain_graph_reuses_buffers() {
+        // unfused MLP: a 6-node chain — consecutive intermediates are
+        // dead after one hop, so the pool stays tiny
+        let g = mlp_block(64, 64, 128);
+        let p = plan(&g);
+        assert_eq!(p.slots.len(), 6);
+        assert!(p.slots[5].buffer.is_none(), "output is dedicated");
+        assert!(
+            p.peak_bytes < p.intermediate_bytes,
+            "peak {} must beat materializing all {} intermediate bytes",
+            p.peak_bytes,
+            p.intermediate_bytes
+        );
+        // the chain needs at most two live tensors at a time
+        assert!(p.pool_bytes.len() <= 2, "pool {:?}", p.pool_bytes);
+        assert!(find_live_overlap(&p).is_none());
+    }
+
+    #[test]
+    fn attention_graph_reuses_after_the_attention_node() {
+        let g = attention_block(128, 64, false);
+        let p = plan(&g);
+        // q/k/v all stay live until attention consumes them; the
+        // attention output can then reuse one of their buffers
+        assert!(p.pool_bytes.len() >= 3);
+        assert!(p.peak_bytes < p.intermediate_bytes);
+        assert!(find_live_overlap(&p).is_none());
+        // q, k, v must not share buffers with each other
+        let (q, k, v) = (&p.slots[0], &p.slots[1], &p.slots[2]);
+        assert_ne!(q.buffer, k.buffer);
+        assert_ne!(q.buffer, v.buffer);
+        assert_ne!(k.buffer, v.buffer);
+    }
+
+    #[test]
+    fn no_two_live_intermediates_share_a_buffer() {
+        for g in [
+            mlp_block(64, 64, 128),
+            attention_block(128, 64, true),
+            dequant_mlp_block(32, 64, 64, 64, WeightFormat::Int4, 32),
+        ] {
+            let p = plan(&g);
+            if let Some((i, j)) = find_live_overlap(&p) {
+                panic!(
+                    "{}: nodes {} and {} share a buffer while both live",
+                    g.name, i, j
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! The graph layer: multi-kernel dataflow graphs with epilogue fusion
+//! and planned buffer reuse, served end to end.
+//!
+//! The paper's central claim is that AI kernels are *composable tiled
+//! dataflow* — this subsystem makes the composition explicit above the
+//! single-kernel layer:
+//!
+//! * [`ir`] — `KernelGraph`: nodes are workload tile programs (plus a
+//!   fused epilogue vocabulary from `workloads::epilogue`) or standalone
+//!   element-wise ops, edges are typed f32 tensors; ships builders for
+//!   real scenarios (`mlp_block`, `attention_block`,
+//!   `dequant_mlp_block`) and a CPU-reference composition oracle.
+//! * [`fuse`] — the fusion planner: folds element-wise consumers into
+//!   producer-kernel epilogues where the tile shapes admit it, costed by
+//!   `sim::simulate_kernel` per node plus a DRAM-traffic + launch term
+//!   per materialized edge.
+//! * [`memplan`] — liveness-based buffer planning: intermediates with
+//!   disjoint live ranges share allocations; the executor allocates
+//!   from this plan, so it is enforced, not advisory.
+//! * [`exec`] — [`GraphKernel`]: topological execution through the
+//!   interp backend, tile configs per node via the persistent tuning
+//!   cache.
+//!
+//! Serving integration lives in `runtime` (manifest `graph=` artifacts
+//! load as `GraphKernel`s) and the CLI (`tilelang graph` prints the
+//! plan; `serve` accepts graph artifacts).
+
+pub mod exec;
+pub mod fuse;
+pub mod ir;
+pub mod memplan;
+
+pub use exec::GraphKernel;
+pub use fuse::FusionPlan;
+pub use ir::KernelGraph;

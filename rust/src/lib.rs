@@ -23,7 +23,11 @@
 //!   partitions by modeled cost and N interpreter shards execute in
 //!   parallel threads), and the feature-gated PJRT backend — plus the
 //!   micro-batching kernel coordinator ([`coordinator`]) that serves
-//!   row requests from worker threads.
+//!   row requests from worker threads. The graph layer ([`graph`])
+//!   composes multiple kernels into one served artifact: a dataflow
+//!   `KernelGraph` with a costed epilogue-fusion planner and a
+//!   liveness-based buffer-reuse plan, executed through the same
+//!   interp backend.
 //!
 //! The crate is dependency-free (std only) so the whole loop — author,
 //! compile, tune, execute, serve — runs in an offline build:
@@ -37,6 +41,7 @@ pub mod autotuner;
 pub mod baselines;
 pub mod coordinator;
 pub mod error;
+pub mod graph;
 pub mod ir;
 pub mod layout;
 pub mod passes;

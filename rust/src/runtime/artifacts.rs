@@ -2,11 +2,13 @@
 //! Python `make artifacts` flow.
 //!
 //! Emits everything the runtime needs to serve a directory of kernels
-//! hermetically — `manifest.tsv` (name, shapes, workload tag),
-//! `<name>.in<i>.bin` example inputs (deterministic seeded data), and
+//! hermetically — `manifest.tsv` (name, shapes, workload or graph tag),
+//! `<name>.in<i>.bin` example inputs (deterministic seeded data),
+//! `<name>.graph.json` side files for dataflow-graph artifacts, and
 //! `goldens.tsv` sample points computed from the CPU reference
-//! implementations in `workloads` — so `tilelang artifacts && tilelang
-//! serve` works with no Python, no HLO files and no network.
+//! implementations in `workloads` (graph goldens come from the
+//! node-by-node reference composition) — so `tilelang artifacts &&
+//! tilelang serve` works with no Python, no HLO files and no network.
 //!
 //! File formats are documented in `docs/ARCHITECTURE.md`. The path
 //! column of the manifest is written as `-`: the interp backend rebuilds
@@ -18,18 +20,22 @@ use std::path::Path;
 
 use crate::bail;
 use crate::error::{Context, Result};
+use crate::graph::ir::{attention_block, dequant_mlp_block, mlp_block, KernelGraph};
 use crate::workloads::attention::reference_attention;
-use crate::workloads::dequant::{dequantize_weights, quantize_weights, WeightFormat};
+use crate::workloads::dequant::{quantize_weights, reference_dequant_matmul, WeightFormat};
 use crate::workloads::linear_attention::{reference_chunk_scan, reference_chunk_state};
 use crate::workloads::matmul::{reference_matmul, test_data};
 
 use super::interp_backend::WorkloadKind;
 
 /// One artifact to emit: shapes, input payloads and the CPU-reference
-/// golden output.
+/// golden output. Exactly one of `workload` / `graph` is set: single
+/// kernels carry a `workload=` manifest tag, dataflow graphs a `graph=`
+/// tag plus a `<name>.graph.json` side file.
 pub struct ArtifactDef {
     pub name: String,
-    pub workload: WorkloadKind,
+    pub workload: Option<WorkloadKind>,
+    pub graph: Option<KernelGraph>,
     pub in_shapes: Vec<Vec<i64>>,
     pub out_shape: Vec<i64>,
     pub inputs: Vec<Vec<f32>>,
@@ -53,7 +59,8 @@ pub fn default_set() -> Vec<ArtifactDef> {
         let golden = reference_matmul(&a, &b, m, n, k);
         out.push(ArtifactDef {
             name: format!("matmul_{}x{}x{}", m, n, k),
-            workload: WorkloadKind::Gemm,
+            workload: Some(WorkloadKind::Gemm),
+            graph: None,
             in_shapes: vec![vec![m, k], vec![k, n]],
             out_shape: vec![m, n],
             inputs: vec![a, b],
@@ -69,7 +76,8 @@ pub fn default_set() -> Vec<ArtifactDef> {
         let golden = reference_matmul(&a, &b, m, n, k);
         out.push(ArtifactDef {
             name: format!("linear_{}x{}x{}", m, n, k),
-            workload: WorkloadKind::Gemm,
+            workload: Some(WorkloadKind::Gemm),
+            graph: None,
             in_shapes: vec![vec![m, k], vec![k, n]],
             out_shape: vec![m, n],
             inputs: vec![a, b],
@@ -92,7 +100,8 @@ pub fn default_set() -> Vec<ArtifactDef> {
         };
         out.push(ArtifactDef {
             name: format!("{}_{}x{}x{}", base, bh, seq, d),
-            workload: WorkloadKind::FlashAttention { causal },
+            workload: Some(WorkloadKind::FlashAttention { causal }),
+            graph: None,
             in_shapes: vec![vec![bh, seq, d]; 3],
             out_shape: vec![bh, seq, d],
             inputs: vec![q, k, v],
@@ -107,21 +116,12 @@ pub fn default_set() -> Vec<ArtifactDef> {
         let a = test_data(m * k, 0xC1);
         let w = test_data(n * k, 0xC2);
         let (packed, scales) = quantize_weights(&w, n, k, fmt, group);
-        let wdq = dequantize_weights(&packed, &scales, n, k, fmt, group);
-        let mut golden = vec![0f32; (n * m) as usize];
-        for i in 0..n as usize {
-            for j in 0..m as usize {
-                let mut acc = 0f32;
-                for kk in 0..k as usize {
-                    acc += wdq[i * k as usize + kk] * a[j * k as usize + kk];
-                }
-                golden[i * m as usize + j] = acc;
-            }
-        }
+        let golden = reference_dequant_matmul(&a, &packed, &scales, m, n, k, fmt, group);
         let epb = fmt.elems_per_byte();
         out.push(ArtifactDef {
             name: format!("dequant_int4_{}x{}x{}", m, n, k),
-            workload: WorkloadKind::Dequant { fmt, group },
+            workload: Some(WorkloadKind::Dequant { fmt, group }),
+            graph: None,
             in_shapes: vec![vec![m, k], vec![n, k / epb], vec![n, k / group]],
             out_shape: vec![n, m],
             inputs: vec![a, packed, scales],
@@ -139,7 +139,8 @@ pub fn default_set() -> Vec<ArtifactDef> {
         let golden = reference_chunk_state(&b, &x, &w, bh, seq, n_state, p, chunk);
         out.push(ArtifactDef {
             name: format!("chunk_state_{}x{}", bh, seq),
-            workload: WorkloadKind::ChunkState,
+            workload: Some(WorkloadKind::ChunkState),
+            graph: None,
             in_shapes: vec![vec![bh, seq, n_state], vec![bh, seq, p], vec![bh, seq]],
             out_shape: vec![bh * nchunks, n_state, p],
             inputs: vec![b, x, w],
@@ -152,7 +153,8 @@ pub fn default_set() -> Vec<ArtifactDef> {
         let golden = reference_chunk_scan(&c, &s, &w2, bh, seq, n_state, p, chunk);
         out.push(ArtifactDef {
             name: format!("chunk_scan_{}x{}", bh, seq),
-            workload: WorkloadKind::ChunkScan,
+            workload: Some(WorkloadKind::ChunkScan),
+            graph: None,
             in_shapes: vec![
                 vec![bh, seq, n_state],
                 vec![bh * nchunks, n_state, p],
@@ -164,7 +166,66 @@ pub fn default_set() -> Vec<ArtifactDef> {
         });
     }
 
+    // dataflow-graph artifacts: whole blocks served as one artifact
+    out.extend(graph_set());
     out
+}
+
+/// Turn a built graph into an artifact definition: seeded inputs per
+/// graph-input tensor (with a caller hook for inputs that need special
+/// encodings, e.g. packed quantized weights) and a golden from the
+/// CPU-reference composition.
+fn graph_def(
+    graph: KernelGraph,
+    seed: u64,
+    special: impl Fn(&str) -> Option<Vec<f32>>,
+) -> ArtifactDef {
+    let inputs: Vec<Vec<f32>> = graph
+        .inputs
+        .iter()
+        .enumerate()
+        .map(|(i, gi)| {
+            special(&gi.name)
+                .unwrap_or_else(|| test_data(gi.shape.iter().product(), seed + i as u64))
+        })
+        .collect();
+    let golden = graph
+        .reference_execute(&inputs)
+        .unwrap_or_else(|e| panic!("{}: reference execution failed: {}", graph.name, e));
+    ArtifactDef {
+        name: graph.name.clone(),
+        workload: None,
+        in_shapes: graph.input_shapes(),
+        out_shape: graph.out_shape().expect("validated graph").to_vec(),
+        graph: Some(graph),
+        inputs,
+        golden,
+    }
+}
+
+/// The default graph artifacts: a transformer MLP block (the batched
+/// graph-serving model — input 0 is the row batch), a single-head
+/// attention block, and a dequant-MLP variant.
+pub fn graph_set() -> Vec<ArtifactDef> {
+    // the quantized second layer of the dequant variant needs real
+    // packed codes + scales, not random floats
+    let (m, dm, dh, dout, group) = (32i64, 64i64, 64i64, 64i64, 32i64);
+    let fmt = WeightFormat::Int4;
+    let w2 = test_data(dout * dh, 0xEE);
+    let (packed, scales) = quantize_weights(&w2, dout, dh, fmt, group);
+    vec![
+        graph_def(mlp_block(64, 64, 128), 0xE1, |_| None),
+        graph_def(attention_block(128, 64, false), 0xE8, |_| None),
+        graph_def(
+            dequant_mlp_block(m, dm, dh, dout, fmt, group),
+            0xF1,
+            move |name| match name {
+                "W2_packed" => Some(packed.clone()),
+                "W2_scales" => Some(scales.clone()),
+                _ => None,
+            },
+        ),
+    ]
 }
 
 fn fmt_shape(s: &[i64]) -> String {
@@ -189,12 +250,21 @@ pub fn generate(dir: impl AsRef<Path>, defs: &[ArtifactDef]) -> Result<Vec<Strin
             .map(|s| fmt_shape(s))
             .collect::<Vec<_>>()
             .join(",");
+        let tag = match (&d.workload, &d.graph) {
+            (Some(w), None) => format!("workload={}", w.tag()),
+            (None, Some(g)) => {
+                let gfile = format!("{}.graph.json", d.name);
+                g.save(dir.join(&gfile))?;
+                format!("graph={}", gfile)
+            }
+            _ => bail!("{}: artifact must carry exactly one of workload/graph", d.name),
+        };
         manifest.push_str(&format!(
-            "{}\t-\tin={}\tout={}\tworkload={}\n",
+            "{}\t-\tin={}\tout={}\t{}\n",
             d.name,
             ins,
             fmt_shape(&d.out_shape),
-            d.workload.tag()
+            tag
         ));
         if d.inputs.len() != d.in_shapes.len() {
             bail!(
@@ -263,18 +333,30 @@ mod tests {
         let dir =
             std::env::temp_dir().join(format!("tilelang-artgen-{}", std::process::id()));
         let names = generate_default_set(&dir).expect("generate");
-        assert!(names.len() >= 6, "expected >= 6 artifacts, got {:?}", names);
+        assert!(names.len() >= 9, "expected >= 9 artifacts, got {:?}", names);
         let rt = Runtime::new(&dir).expect("runtime parses generated manifest");
         assert_eq!(rt.artifact_names().len(), names.len());
+        let mut graphs = 0usize;
         for n in &names {
             let spec = rt.spec(n).expect("spec");
-            assert!(spec.workload.is_some(), "{} missing workload tag", n);
+            assert!(
+                spec.workload.is_some() != spec.graph.is_some(),
+                "{} must carry exactly one of workload/graph",
+                n
+            );
+            if let Some(g) = &spec.graph {
+                // the graph side file parses and matches the manifest
+                let graph = crate::graph::ir::KernelGraph::load(dir.join(g)).expect("graph file");
+                assert_eq!(graph.input_shapes(), spec.in_shapes, "{}", n);
+                graphs += 1;
+            }
             let ins = rt.example_inputs(n).expect("example inputs");
             assert_eq!(ins.len(), spec.in_shapes.len());
             for (data, shape) in ins.iter().zip(&spec.in_shapes) {
                 assert_eq!(data.len(), shape.iter().product::<i64>() as usize);
             }
         }
+        assert_eq!(graphs, 3, "graph artifacts present");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -288,13 +370,19 @@ mod tests {
                 "{}",
                 d.name
             );
-            // every workload tag parses back to its kind
-            assert_eq!(
-                WorkloadKind::parse(&d.workload.tag()).unwrap(),
-                d.workload,
-                "{}",
-                d.name
-            );
+            match (&d.workload, &d.graph) {
+                // every workload tag parses back to its kind
+                (Some(w), None) => {
+                    assert_eq!(WorkloadKind::parse(&w.tag()).unwrap(), *w, "{}", d.name)
+                }
+                // every graph validates and agrees with the def's shapes
+                (None, Some(g)) => {
+                    g.validate().unwrap_or_else(|e| panic!("{}: {}", d.name, e));
+                    assert_eq!(g.input_shapes(), d.in_shapes, "{}", d.name);
+                    assert_eq!(g.out_shape().unwrap(), d.out_shape.as_slice(), "{}", d.name);
+                }
+                _ => panic!("{}: must carry exactly one of workload/graph", d.name),
+            }
         }
     }
 }

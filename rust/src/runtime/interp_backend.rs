@@ -198,6 +198,18 @@ impl InterpKernel {
         let dev = Device::by_name(&opts.device)
             .ok_or_else(|| anyhow!("interp backend: unknown modeled device {:?}", opts.device))?;
         let prog = build_program(&kind, spec, &dev, opts, dir)?;
+        InterpKernel::from_program(&prog, spec, &dev)
+    }
+
+    /// Validate an already-built program against the spec's parameter
+    /// contract (`inputs..., output`) and lower it. Also the entry point
+    /// for graph-node kernels, whose programs carry fused epilogues the
+    /// `workload=` tag grammar cannot express.
+    pub(crate) fn from_program(
+        prog: &TileProgram,
+        spec: &ArtifactSpec,
+        dev: &Device,
+    ) -> Result<InterpKernel> {
         if prog.params.len() != spec.in_shapes.len() + 1 {
             bail!(
                 "{}: workload program has {} params, manifest lists {} inputs + 1 output",
@@ -218,7 +230,10 @@ impl InterpKernel {
                 );
             }
         }
-        let out = prog.params.last().expect("workload program has params");
+        let out = prog
+            .params
+            .last()
+            .ok_or_else(|| anyhow!("{}: workload program has no params", spec.name))?;
         if out.static_shape().as_deref() != Some(spec.out_shape.as_slice()) {
             bail!(
                 "{}: output shape {:?} does not match the workload program ({:?})",
@@ -227,7 +242,7 @@ impl InterpKernel {
                 out.static_shape()
             );
         }
-        let lowered = compile(&prog, &dev, &CompileOptions::default())
+        let lowered = compile(prog, dev, &CompileOptions::default())
             .map_err(|e| anyhow!("{}: compile failed: {}", spec.name, e))?;
         Ok(InterpKernel {
             param_ids: prog.params.iter().map(|b| b.id).collect(),
@@ -246,11 +261,29 @@ impl InterpKernel {
     /// Like `execute`, over borrowed slices — the sharded backend shares
     /// replicated input tensors across shards without re-copying them.
     pub(crate) fn execute_refs(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        self.execute_into(inputs, Vec::new())
+    }
+
+    /// Execute with caller-provided output storage: the graph executor's
+    /// planned buffer-reuse path. `storage` is resized to the output
+    /// length (reusing its allocation when the capacity suffices), the
+    /// kernel writes every output cell, and the same vector is returned.
+    pub(crate) fn execute_into(
+        &self,
+        inputs: &[&[f32]],
+        mut storage: Vec<f32>,
+    ) -> Result<Vec<f32>> {
         let interp = Interp::new(&self.lowered).map_err(|e| anyhow!("interp init: {}", e))?;
         let mut tensors = Tensors::new();
+        // param_ids ends with the output id; zip stops at the inputs
         for (id, data) in self.param_ids.iter().zip(inputs) {
             tensors.insert(*id, data.to_vec());
         }
+        // zero-fill (keeping the allocation): accumulating kernels must
+        // never read a previous tenant's values out of a reused buffer
+        storage.clear();
+        storage.resize(self.out_len, 0.0);
+        tensors.insert(self.out_id, storage);
         interp
             .run(&mut tensors)
             .map_err(|e| anyhow!("interp run: {}", e))?;
@@ -267,7 +300,7 @@ impl InterpKernel {
 /// Select a config through the persistent tuning cache; `None` when
 /// tuning is disabled or the sweep found nothing feasible (callers fall
 /// back to the workload's static defaults).
-fn tuned_config<T: Tunable>(
+pub(crate) fn tuned_config<T: Tunable>(
     t: &T,
     dev: &Device,
     opts: &InterpOptions,
@@ -290,6 +323,72 @@ fn tuned_config<T: Tunable>(
         }
         Err(_) => None,
     }
+}
+
+/// Tile config for a GEMM problem: tuning cache first, static default
+/// as fallback, feasibility-checked either way. Shared by the interp
+/// backend's `build_program` and the graph layer's per-node kernels.
+pub(crate) fn gemm_config(
+    m: i64,
+    n: i64,
+    k: i64,
+    dev: &Device,
+    opts: &InterpOptions,
+    dir: &Path,
+) -> Result<TileConfig> {
+    let tun = GemmTunable::new(m, n, k, DType::F16);
+    let cfg =
+        tuned_config(&tun, dev, opts, dir).unwrap_or_else(|| TileConfig::default_for(m, n, k));
+    if !tun.accepts(&cfg) {
+        bail!("no feasible gemm tile config for {}x{}x{}", m, n, k);
+    }
+    Ok(cfg)
+}
+
+/// Tile config for a flash-attention problem (see [`gemm_config`]).
+pub(crate) fn attention_config(
+    shape: AttnShape,
+    dev: &Device,
+    opts: &InterpOptions,
+    dir: &Path,
+) -> Result<AttnConfig> {
+    let tun = AttentionTunable { shape };
+    let cfg = tuned_config(&tun, dev, opts, dir)
+        .unwrap_or_else(|| AttnConfig::default_for(shape.seq_len));
+    if !tun.accepts(&cfg) {
+        bail!("no feasible attention tile config for seq {}", shape.seq_len);
+    }
+    Ok(cfg)
+}
+
+/// Tile config for a dequant-GEMM problem. The artifact pins the scale
+/// grouping, so the tuner's group choice yields to the packed layout;
+/// an infeasible tuned config degrades to a group-compatible default.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn dequant_config(
+    m: i64,
+    n: i64,
+    k: i64,
+    fmt: WeightFormat,
+    group: i64,
+    dev: &Device,
+    opts: &InterpOptions,
+    dir: &Path,
+) -> Result<DequantConfig> {
+    let tun = DequantTunable::new(m, n, k, fmt);
+    let mut cfg = tuned_config(&tun, dev, opts, dir).unwrap_or_default();
+    cfg.group_size = group;
+    if !tun.accepts(&cfg) {
+        cfg = DequantConfig {
+            group_size: group,
+            block_k: group.max(32),
+            ..DequantConfig::default()
+        };
+    }
+    if !tun.accepts(&cfg) {
+        bail!("no feasible dequant tile config for {}x{}x{} group {}", m, n, k, group);
+    }
+    Ok(cfg)
 }
 
 fn dims<'a>(spec: &'a ArtifactSpec, i: usize, ndim: usize) -> Result<&'a [i64]> {
@@ -331,13 +430,9 @@ pub(crate) fn build_program(
                     spec.out_shape
                 );
             }
-            let tun = GemmTunable::new(m, n, k, DType::F16);
-            let cfg = tuned_config(&tun, dev, opts, dir)
-                .unwrap_or_else(|| TileConfig::default_for(m, n, k));
-            if !tun.accepts(&cfg) {
-                bail!("{}: no feasible gemm tile config for {}x{}x{}", spec.name, m, n, k);
-            }
-            Ok(tun.build(&cfg))
+            let cfg = gemm_config(m, n, k, dev, opts, dir)
+                .map_err(|e| anyhow!("{}: {}", spec.name, e))?;
+            Ok(GemmTunable::new(m, n, k, DType::F16).build(&cfg))
         }
         WorkloadKind::FlashAttention { causal } => {
             if spec.in_shapes.len() != 3 {
@@ -366,13 +461,9 @@ pub(crate) fn build_program(
                 head_dim: d,
                 causal: *causal,
             };
-            let tun = AttentionTunable { shape };
-            let cfg =
-                tuned_config(&tun, dev, opts, dir).unwrap_or_else(|| AttnConfig::default_for(seq));
-            if !tun.accepts(&cfg) {
-                bail!("{}: no feasible attention tile config for seq {}", spec.name, seq);
-            }
-            Ok(tun.build(&cfg))
+            let cfg = attention_config(shape, dev, opts, dir)
+                .map_err(|e| anyhow!("{}: {}", spec.name, e))?;
+            Ok(AttentionTunable { shape }.build(&cfg))
         }
         WorkloadKind::Dequant { fmt, group } => {
             let (fmt, group) = (*fmt, *group);
@@ -397,22 +488,9 @@ pub(crate) fn build_program(
                     group
                 );
             }
-            let tun = DequantTunable::new(m, n, k, fmt);
-            let mut cfg = tuned_config(&tun, dev, opts, dir).unwrap_or_default();
-            // the artifact fixes the scale grouping; the tuner's choice of
-            // group must yield to the packed data layout
-            cfg.group_size = group;
-            if !tun.accepts(&cfg) {
-                cfg = DequantConfig {
-                    group_size: group,
-                    block_k: group.max(32),
-                    ..DequantConfig::default()
-                };
-            }
-            if !tun.accepts(&cfg) {
-                bail!("{}: no feasible dequant tile config", spec.name);
-            }
-            Ok(tun.build(&cfg))
+            let cfg = dequant_config(m, n, k, fmt, group, dev, opts, dir)
+                .map_err(|e| anyhow!("{}: {}", spec.name, e))?;
+            Ok(DequantTunable::new(m, n, k, fmt).build(&cfg))
         }
         WorkloadKind::ChunkState => {
             if spec.in_shapes.len() != 3 {

@@ -52,9 +52,9 @@ impl Default for ShardedOptions {
 /// the scatter/gather plan connecting them.
 pub struct ShardedKernel {
     plan: ShardPlan,
-    /// Distinct prepared kernels: every strategy today produces
-    /// shape-uniform parts, so this usually holds exactly one kernel
-    /// shared by all shard threads (kernels are immutable and `Sync`).
+    /// Distinct prepared kernels: even splits are shape-uniform (one
+    /// kernel shared by all shard threads); uneven remainder splits
+    /// compile one kernel per distinct sub-shape (typically two).
     kernels: Vec<InterpKernel>,
     /// Part index -> index into `kernels`.
     part_kernel: Vec<usize>,
@@ -89,9 +89,9 @@ impl ShardedKernel {
     ) -> Result<ShardedKernel> {
         let mut interp = opts.interp.clone();
         interp.shards = plan.shards();
-        // prepare one kernel per *distinct* sub-shape: uniform strategies
-        // (all of today's) compile once and share the kernel across
-        // shard threads instead of re-tuning/re-lowering per part
+        // prepare one kernel per *distinct* sub-shape: uniform splits
+        // compile once and share the kernel across shard threads;
+        // remainder splits add one more for the wider leading shards
         let mut kernels: Vec<InterpKernel> = Vec::new();
         let mut kernel_shapes: Vec<(Vec<Vec<i64>>, Vec<i64>)> = Vec::new();
         let mut part_kernel = Vec::with_capacity(plan.shards());
@@ -108,6 +108,7 @@ impl ShardedKernel {
                         in_shapes: part.in_shapes.clone(),
                         out_shape: part.out_shape.clone(),
                         workload: Some(plan.workload.tag()),
+                        graph: None,
                     };
                     kernels.push(InterpKernel::prepare(&sub, &interp, dir)?);
                     kernel_shapes.push((part.in_shapes.clone(), part.out_shape.clone()));

@@ -18,6 +18,11 @@
 //! | flash attention         | head-parallel (split batch*heads)   |
 //! | dequant-GEMM            | row-parallel (split output rows N)  |
 //! | chunk_state / chunk_scan| chunk-parallel (split batch*heads)  |
+//!
+//! Splits need not be even: shard counts that do not divide the
+//! partitioned dimension get remainder spans (whole hardware tiles,
+//! distributed over the leading shards), and the compute phase is
+//! costed as the slowest shard.
 
 use std::fmt;
 use std::path::{Path, PathBuf};
@@ -140,8 +145,8 @@ pub struct ShardPlan {
     pub strategy: Strategy,
     pub parts: Vec<ShardSpec>,
     pub collective: Collective,
-    /// Modeled per-shard kernel time (shards run in parallel, so this is
-    /// the whole compute phase), microseconds.
+    /// Modeled kernel time of the *slowest* shard (shards run in
+    /// parallel, so this is the whole compute phase), microseconds.
     pub kernel_us: f64,
     /// Modeled scatter + gather communication time, microseconds.
     pub comm_us: f64,
@@ -249,28 +254,32 @@ pub fn plan_with_strategy(
     let (parts, collective): (Vec<ShardSpec>, Collective) = match (kind, strategy) {
         (WorkloadKind::Gemm, Strategy::RowParallel) => {
             let (m, k, n) = gemm_dims(in_shapes, out_shape)?;
-            let sm = split_extent("M", m, s, 16)?;
-            let parts = (0..s)
-                .map(|i| ShardSpec {
-                    index: i as usize,
-                    inputs: vec![InputSlice::along(0, i * sm, sm), InputSlice::full()],
-                    in_shapes: vec![vec![sm, k], vec![k, n]],
-                    out_shape: vec![sm, n],
+            let spans = split_spans("M", m, s, 16)?;
+            let parts = spans
+                .iter()
+                .enumerate()
+                .map(|(i, &(start, len))| ShardSpec {
+                    index: i,
+                    inputs: vec![InputSlice::along(0, start, len), InputSlice::full()],
+                    in_shapes: vec![vec![len, k], vec![k, n]],
+                    out_shape: vec![len, n],
                 })
                 .collect();
             (parts, Collective::Concat)
         }
         (WorkloadKind::Gemm, Strategy::SplitK) => {
             let (m, k, n) = gemm_dims(in_shapes, out_shape)?;
-            let sk = split_extent("K", k, s, 16)?;
-            let parts = (0..s)
-                .map(|i| ShardSpec {
-                    index: i as usize,
+            let spans = split_spans("K", k, s, 16)?;
+            let parts = spans
+                .iter()
+                .enumerate()
+                .map(|(i, &(start, len))| ShardSpec {
+                    index: i,
                     inputs: vec![
-                        InputSlice::along(1, i * sk, sk),
-                        InputSlice::along(0, i * sk, sk),
+                        InputSlice::along(1, start, len),
+                        InputSlice::along(0, start, len),
                     ],
-                    in_shapes: vec![vec![m, sk], vec![sk, n]],
+                    in_shapes: vec![vec![m, len], vec![len, n]],
                     out_shape: vec![m, n],
                 })
                 .collect();
@@ -288,13 +297,15 @@ pub fn plan_with_strategy(
                 );
             }
             let (bh, seq, d) = (in_shapes[0][0], in_shapes[0][1], in_shapes[0][2]);
-            let sbh = split_extent("batch*heads", bh, s, 1)?;
-            let parts = (0..s)
-                .map(|i| ShardSpec {
-                    index: i as usize,
-                    inputs: vec![InputSlice::along(0, i * sbh, sbh); 3],
-                    in_shapes: vec![vec![sbh, seq, d]; 3],
-                    out_shape: vec![sbh, seq, d],
+            let spans = split_spans("batch*heads", bh, s, 1)?;
+            let parts = spans
+                .iter()
+                .enumerate()
+                .map(|(i, &(start, len))| ShardSpec {
+                    index: i,
+                    inputs: vec![InputSlice::along(0, start, len); 3],
+                    in_shapes: vec![vec![len, seq, d]; 3],
+                    out_shape: vec![len, seq, d],
                 })
                 .collect();
             (parts, Collective::HeadConcat)
@@ -307,18 +318,20 @@ pub fn plan_with_strategy(
             // output Ct: [n, m] — split the output rows N
             let (m, k) = (in_shapes[0][0], in_shapes[0][1]);
             let n = in_shapes[1][0];
-            let sn = split_extent("N", n, s, 1)?;
+            let spans = split_spans("N", n, s, 16)?;
             let (kb, kg) = (in_shapes[1][1], in_shapes[2][1]);
-            let parts = (0..s)
-                .map(|i| ShardSpec {
-                    index: i as usize,
+            let parts = spans
+                .iter()
+                .enumerate()
+                .map(|(i, &(start, len))| ShardSpec {
+                    index: i,
                     inputs: vec![
                         InputSlice::full(),
-                        InputSlice::along(0, i * sn, sn),
-                        InputSlice::along(0, i * sn, sn),
+                        InputSlice::along(0, start, len),
+                        InputSlice::along(0, start, len),
                     ],
-                    in_shapes: vec![vec![m, k], vec![sn, kb], vec![sn, kg]],
-                    out_shape: vec![sn, m],
+                    in_shapes: vec![vec![m, k], vec![len, kb], vec![len, kg]],
+                    out_shape: vec![len, m],
                 })
                 .collect();
             (parts, Collective::Concat)
@@ -334,20 +347,22 @@ pub fn plan_with_strategy(
                 bail!("state rows {} do not tile batch*heads {}", out_shape[0], bh);
             }
             let nchunks = out_shape[0] / bh;
-            let sbh = split_extent("batch*heads", bh, s, 1)?;
-            let parts = (0..s)
-                .map(|i| ShardSpec {
-                    index: i as usize,
-                    inputs: vec![InputSlice::along(0, i * sbh, sbh); 3],
+            let spans = split_spans("batch*heads", bh, s, 1)?;
+            let parts = spans
+                .iter()
+                .enumerate()
+                .map(|(i, &(start, len))| ShardSpec {
+                    index: i,
+                    inputs: vec![InputSlice::along(0, start, len); 3],
                     in_shapes: in_shapes
                         .iter()
                         .map(|sh| {
                             let mut sub = sh.clone();
-                            sub[0] = sbh;
+                            sub[0] = len;
                             sub
                         })
                         .collect(),
-                    out_shape: vec![sbh * nchunks, out_shape[1], out_shape[2]],
+                    out_shape: vec![len * nchunks, out_shape[1], out_shape[2]],
                 })
                 .collect();
             (parts, Collective::Concat)
@@ -367,30 +382,41 @@ pub fn plan_with_strategy(
                 );
             }
             let nchunks = in_shapes[1][0] / bh;
-            let sbh = split_extent("batch*heads", bh, s, 1)?;
-            let parts = (0..s)
-                .map(|i| ShardSpec {
-                    index: i as usize,
+            let spans = split_spans("batch*heads", bh, s, 1)?;
+            let parts = spans
+                .iter()
+                .enumerate()
+                .map(|(i, &(start, len))| ShardSpec {
+                    index: i,
                     inputs: vec![
-                        InputSlice::along(0, i * sbh, sbh),
-                        InputSlice::along(0, i * sbh * nchunks, sbh * nchunks),
-                        InputSlice::along(0, i * sbh, sbh),
+                        InputSlice::along(0, start, len),
+                        InputSlice::along(0, start * nchunks, len * nchunks),
+                        InputSlice::along(0, start, len),
                     ],
                     in_shapes: vec![
-                        vec![sbh, in_shapes[0][1], in_shapes[0][2]],
-                        vec![sbh * nchunks, in_shapes[1][1], in_shapes[1][2]],
-                        vec![sbh, in_shapes[2][1]],
+                        vec![len, in_shapes[0][1], in_shapes[0][2]],
+                        vec![len * nchunks, in_shapes[1][1], in_shapes[1][2]],
+                        vec![len, in_shapes[2][1]],
                     ],
-                    out_shape: vec![sbh, out_shape[1], out_shape[2]],
+                    out_shape: vec![len, out_shape[1], out_shape[2]],
                 })
                 .collect();
             (parts, Collective::Concat)
         }
         (kind, strategy) => bail!("strategy {} does not apply to {}", strategy, kind.tag()),
     };
-    // every part is shape-uniform: cost the first and let it stand for
-    // the whole parallel compute phase
-    let kernel_us = shard_kernel_us(kind, &parts[0], dev)?;
+    // shards run in parallel, so the compute phase is the *slowest*
+    // shard; uneven splits make parts non-uniform, so cost each
+    // distinct sub-shape (uniform plans still cost one kernel)
+    let mut kernel_us = 0f64;
+    let mut seen: Vec<&Vec<Vec<i64>>> = Vec::new();
+    for part in &parts {
+        if seen.contains(&&part.in_shapes) {
+            continue;
+        }
+        seen.push(&part.in_shapes);
+        kernel_us = kernel_us.max(shard_kernel_us(kind, part, dev)?);
+    }
     let comm_us = comm_us(in_shapes, out_shape, &parts, collective, dev);
     Ok(ShardPlan {
         workload: kind.clone(),
@@ -418,23 +444,44 @@ fn gemm_dims(in_shapes: &[Vec<i64>], out_shape: &[i64]) -> Result<(i64, i64, i64
     Ok((m, k, n))
 }
 
-/// Divide `extent` into `s` equal slices of at least `min` (the 16-row
-/// GEMM floor exists because sub-16 shards pad back up to the hardware
-/// tile and just recompute the full problem).
-fn split_extent(name: &str, extent: i64, s: i64, min: i64) -> Result<i64> {
-    if extent % s != 0 {
-        bail!("{} = {} is not divisible by {} shards", name, extent, s);
-    }
-    let sub = extent / s;
-    if sub < min {
+/// Divide `extent` into `s` contiguous spans of `granule`-aligned
+/// sizes, distributing the remainder one granule at a time over the
+/// leading shards — so shard counts that do not divide the extent stop
+/// being rejected. The granule is the hardware tile the per-shard
+/// kernel needs (16 rows for GEMM dims — sub-16 shards pad back up to
+/// the instruction tile and just recompute the full problem; 1 for
+/// head/chunk dims). Returns `(start, len)` per shard.
+fn split_spans(name: &str, extent: i64, s: i64, granule: i64) -> Result<Vec<(i64, i64)>> {
+    if extent % granule != 0 {
         bail!(
-            "{} shard extent {} is below the minimum {} (padding would recompute the full tile)",
+            "{} = {} is not a multiple of the {}-wide hardware tile",
             name,
-            sub,
-            min
+            extent,
+            granule
         );
     }
-    Ok(sub)
+    let granules = extent / granule;
+    if granules < s {
+        bail!(
+            "{} = {} has only {} tile(s) of {}, fewer than {} shards",
+            name,
+            extent,
+            granules,
+            granule,
+            s
+        );
+    }
+    let base = granules / s;
+    let rem = granules % s;
+    let mut spans = Vec::with_capacity(s as usize);
+    let mut start = 0i64;
+    for i in 0..s {
+        let len = (base + i64::from(i < rem)) * granule;
+        spans.push((start, len));
+        start += len;
+    }
+    debug_assert_eq!(start, extent);
+    Ok(spans)
 }
 
 /// Score one shard's kernel with the analytical device model, through
@@ -446,6 +493,7 @@ fn shard_kernel_us(kind: &WorkloadKind, part: &ShardSpec, dev: &Device) -> Resul
         in_shapes: part.in_shapes.clone(),
         out_shape: part.out_shape.clone(),
         workload: Some(kind.tag()),
+        graph: None,
     };
     let opts = InterpOptions {
         tune: false, // static default configs: uniform, cache-free costing
@@ -574,9 +622,9 @@ mod tests {
     }
 
     #[test]
-    fn indivisible_or_degenerate_splits_are_errors() {
-        // 64 rows across 3 shards: not divisible
-        assert!(plan_with_strategy(
+    fn uneven_splits_distribute_whole_tiles() {
+        // 64 rows across 3 shards: 4 row tiles of 16 -> 32, 16, 16
+        let p = plan_with_strategy(
             &WorkloadKind::Gemm,
             &[vec![64, 64], vec![64, 64]],
             &[64, 64],
@@ -584,8 +632,43 @@ mod tests {
             Strategy::RowParallel,
             &h100(),
         )
-        .is_err());
-        // 32 rows across 4 shards: sub-16 shards would pad back up
+        .unwrap();
+        assert_eq!(p.parts.len(), 3);
+        assert_eq!(p.parts[0].inputs[0], InputSlice::along(0, 0, 32));
+        assert_eq!(p.parts[1].inputs[0], InputSlice::along(0, 32, 16));
+        assert_eq!(p.parts[2].inputs[0], InputSlice::along(0, 48, 16));
+        assert_eq!(p.parts[0].out_shape, vec![32, 64]);
+        assert_eq!(p.parts[2].out_shape, vec![16, 64]);
+        assert!(p.kernel_us > 0.0);
+        // heads: 4 across 3 shards -> 2, 1, 1
+        let p = plan_with_strategy(
+            &WorkloadKind::FlashAttention { causal: false },
+            &[vec![4, 128, 64]; 3],
+            &[4, 128, 64],
+            3,
+            Strategy::HeadParallel,
+            &h100(),
+        )
+        .unwrap();
+        assert_eq!(p.parts[0].out_shape, vec![2, 128, 64]);
+        assert_eq!(p.parts[2].inputs[0], InputSlice::along(0, 3, 1));
+        // split-K remainder: K = 64 across 3 shards -> 32, 16, 16 deep
+        let p = plan_with_strategy(
+            &WorkloadKind::Gemm,
+            &[vec![64, 64], vec![64, 64]],
+            &[64, 64],
+            3,
+            Strategy::SplitK,
+            &h100(),
+        )
+        .unwrap();
+        assert_eq!(p.parts[0].in_shapes[0], vec![64, 32]);
+        assert_eq!(p.parts[1].inputs[1], InputSlice::along(0, 32, 16));
+    }
+
+    #[test]
+    fn indivisible_or_degenerate_splits_are_errors() {
+        // 32 rows across 4 shards: only 2 row tiles of 16 for 4 shards
         assert!(plan_with_strategy(
             &WorkloadKind::Gemm,
             &[vec![32, 64], vec![64, 64]],
@@ -605,11 +688,13 @@ mod tests {
             &h100(),
         )
         .is_err());
-        // no strategy at all -> plan() reports every failure
+        // no strategy at all -> plan() reports every failure: M = 16 is
+        // a single row tile (cannot split 3 ways) and K = 62 is not
+        // 16-tile aligned for split-K
         let err = plan(
             &WorkloadKind::Gemm,
-            &[vec![64, 62], vec![62, 64]],
-            &[64, 64],
+            &[vec![16, 62], vec![62, 64]],
+            &[16, 64],
             3,
             &h100(),
         )

@@ -72,6 +72,13 @@ pub enum Bound {
     Latency,
 }
 
+/// Fixed kernel-launch latency charged to every kernel, µs (the
+/// pipeline fill adds `stages * 0.4` on top). Shared with the graph
+/// layer's fusion planner, which charges the same latency to every
+/// standalone element-wise kernel a fold would remove — retuning it
+/// here moves both models together.
+pub const LAUNCH_US: f64 = 3.0;
+
 /// Simulation result.
 #[derive(Clone, Debug)]
 pub struct SimReport {
@@ -231,7 +238,7 @@ pub fn estimate(l: &LoweredProgram, dev: &Device, pen: &Penalties) -> SimReport 
     let full_waves = blocks as f64 / concurrent as f64;
     let wave_eff = (full_waves / waves).max(1.0 / waves);
     // fixed launch + pipeline fill latency
-    let latency_us = 3.0 + acc.stages as f64 * 0.4;
+    let latency_us = LAUNCH_US + acc.stages as f64 * 0.4;
     if blocks < concurrent {
         // partial occupancy: bandwidth/compute scale with active SMs
         let frac = (blocks as f64 / dev.sms as f64).min(1.0).max(1.0 / dev.sms as f64);

@@ -87,6 +87,21 @@ pub fn dequant_matmul_program(
     fmt: WeightFormat,
     cfg: &DequantConfig,
 ) -> TileProgram {
+    dequant_matmul_program_ep(m, n, k, fmt, cfg, &[])
+}
+
+/// [`dequant_matmul_program`] with a fused epilogue on the transposed
+/// `Ct[n, m]` output: bias-add broadcasts along output dim 0 (the weight
+/// rows / output features), residual-add takes a full `[n, m]` operand.
+/// Epilogue params follow `Scales` and precede `Ct`.
+pub fn dequant_matmul_program_ep(
+    m: i64,
+    n: i64,
+    k: i64,
+    fmt: WeightFormat,
+    cfg: &DequantConfig,
+    eps: &[crate::workloads::epilogue::EpilogueOp],
+) -> TileProgram {
     let (bm, bn, bk) = (cfg.block_m, cfg.block_n, cfg.block_k);
     assert!(m % bm == 0 && n % bn == 0 && k % bk == 0);
     let epb = fmt.elems_per_byte();
@@ -94,10 +109,17 @@ pub fn dequant_matmul_program(
     assert!(bk % epb == 0 && bk % group == 0);
     let act = fmt.act_dtype();
 
-    let mut t = KernelBuilder::new("dequant_matmul", cfg.threads);
+    let name = if eps.is_empty() {
+        "dequant_matmul"
+    } else {
+        "dequant_matmul_ep"
+    };
+    let mut t = KernelBuilder::new(name, cfg.threads);
     let a = t.param("A", &[m, k], act);
     let b = t.param("B", &[n, k / epb], DType::U8);
     let scales = t.param("Scales", &[n, k / group], DType::F16);
+    let ep_params =
+        crate::workloads::epilogue::declare_epilogue_params(&mut t, eps, [n, m]);
     let ct = t.param("Ct", &[n, m], DType::F32);
     let (bx, by) = t.kernel2(n / bn, m / bm);
 
@@ -129,7 +151,6 @@ pub fn dequant_matmul_program(
             t.dequant(b_local, b_dq, fmt.scheme(), Some(s_local), group);
             t.gemm_opts(b_dq, a_s, ct_l, false, true, GemmWarpPolicy::FullCol);
         });
-        t.copy_out(ct_l, ct, vec![bx.expr() * bn, by.expr() * bm]);
     } else {
         // integer activations (W2A8): weights must STAY integer codes
         // through the IMMA gemm; the per-group scale is applied on the
@@ -161,8 +182,16 @@ pub fn dequant_matmul_program(
                 )]
             });
         });
-        t.copy_out(ct_l, ct, vec![bx.expr() * bn, by.expr() * bm]);
     }
+    crate::workloads::epilogue::emit_epilogues(
+        &mut t,
+        eps,
+        &ep_params,
+        ct_l,
+        [bn, bm],
+        &[bx.expr() * bn, by.expr() * bm],
+    );
+    t.copy_out(ct_l, ct, vec![bx.expr() * bn, by.expr() * bm]);
     t.finish()
 }
 
@@ -368,6 +397,34 @@ pub fn dequantize_weights(
     out
 }
 
+/// Reference dequant-GEMM in f32: `Ct[n, m] = dequant(packed) @ A^T`.
+/// The oracle for artifact goldens and graph differential tests.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_dequant_matmul(
+    a: &[f32],
+    packed: &[f32],
+    scales: &[f32],
+    m: i64,
+    n: i64,
+    k: i64,
+    fmt: WeightFormat,
+    group: i64,
+) -> Vec<f32> {
+    let wdq = dequantize_weights(packed, scales, n, k, fmt, group);
+    let (mu, nu, ku) = (m as usize, n as usize, k as usize);
+    let mut out = vec![0f32; nu * mu];
+    for i in 0..nu {
+        for j in 0..mu {
+            let mut acc = 0f32;
+            for kk in 0..ku {
+                acc += wdq[i * ku + kk] * a[j * ku + kk];
+            }
+            out[i * mu + j] = acc;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -441,6 +498,48 @@ mod tests {
     #[test]
     fn fp4_dequant_gemm_matches_reference() {
         run_fmt(WeightFormat::Fp4, 0.05);
+    }
+
+    #[test]
+    fn dequant_epilogues_match_reference() {
+        use crate::workloads::epilogue::{reference_apply, Activation, EpilogueOp};
+        let (m, n, k) = (32i64, 64i64, 64i64);
+        let cfg = DequantConfig {
+            block_m: 32,
+            block_n: 32,
+            block_k: 32,
+            num_stages: 2,
+            threads: 128,
+            group_size: 32,
+        };
+        // bias broadcasts along the transposed output's dim 0 (features)
+        let eps = [
+            EpilogueOp::BiasAdd { dim: 0 },
+            EpilogueOp::Activation(Activation::Relu),
+        ];
+        let p = dequant_matmul_program_ep(m, n, k, WeightFormat::Int4, &cfg, &eps);
+        // A, B, Scales, bias, Ct
+        assert_eq!(p.params.len(), 5);
+        let l = compile(&p, &Device::a100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+        let aval = test_data(m * k, 41);
+        let w = test_data(n * k, 42);
+        let bias = test_data(n, 43);
+        let (packed, scales) = quantize_weights(&w, n, k, WeightFormat::Int4, 32);
+        let mut t = Tensors::new();
+        t.insert(p.params[0].id, aval.clone());
+        t.insert(p.params[1].id, packed.clone());
+        t.insert(p.params[2].id, scales.clone());
+        t.insert(p.params[3].id, bias.clone());
+        interp.run(&mut t).unwrap();
+        let mut want =
+            reference_dequant_matmul(&aval, &packed, &scales, m, n, k, WeightFormat::Int4, 32);
+        reference_apply(&eps[0], &mut want, Some(&bias), &[n, m]).unwrap();
+        reference_apply(&eps[1], &mut want, None, &[n, m]).unwrap();
+        let got = &t[&p.params[4].id];
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 0.05, "{} vs {}", g, w);
+        }
     }
 
     #[test]

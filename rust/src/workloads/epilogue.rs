@@ -1,0 +1,432 @@
+//! Epilogue vocabulary for the tile-program builders: bias-add,
+//! activation, residual-add and scale operators that fuse into a
+//! kernel's accumulator tile before the final copy-out.
+//!
+//! The same enum describes (a) standalone element-wise nodes in a
+//! `graph::ir::KernelGraph` and (b) the fused epilogue list a kernel
+//! node carries after `graph::fuse` folds its consumers in. The
+//! builder-side helpers stage epilogue operands global -> shared ->
+//! fragment (the dequant idiom) and apply them in `T.Parallel` bodies on
+//! the accumulator, so layout inference replicates operands across the
+//! owning threads exactly as in the Fig. 7 bias example.
+//!
+//! [`reference_apply`] is the f32 CPU semantics used by goldens, the
+//! differential tests and the unfused graph executor; the activation
+//! expressions are built so the interpreter computes bit-identical math
+//! (GELU uses the tanh approximation on both sides).
+
+use crate::ir::builder::{store, KernelBuilder};
+use crate::ir::buffer::BufferId;
+use crate::ir::dtype::DType;
+use crate::ir::expr::{Expr, UnOp};
+use crate::util::json::Json;
+
+/// GELU tanh-approximation constants (sqrt(2/pi) and the cubic term).
+const GELU_C0: f64 = 0.797_884_560_802_865_4;
+const GELU_C1: f64 = 0.044_715;
+
+/// Element-wise nonlinearity applied to an accumulator tile.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Activation {
+    Relu,
+    /// tanh-approximated GELU: `0.5 x (1 + tanh(c0 (x + c1 x^3)))`.
+    Gelu,
+    /// SiLU via the exact tanh identity: `x * 0.5 * (1 + tanh(x/2))`.
+    Silu,
+}
+
+impl Activation {
+    /// Stable serialization tag.
+    pub fn tag(self) -> &'static str {
+        match self {
+            Activation::Relu => "relu",
+            Activation::Gelu => "gelu",
+            Activation::Silu => "silu",
+        }
+    }
+
+    /// Inverse of [`Activation::tag`].
+    pub fn parse(tag: &str) -> Option<Activation> {
+        match tag {
+            "relu" => Some(Activation::Relu),
+            "gelu" => Some(Activation::Gelu),
+            "silu" => Some(Activation::Silu),
+            _ => None,
+        }
+    }
+
+    /// The on-chip element-wise expression (interpreter semantics).
+    pub fn expr(self, x: Expr) -> Expr {
+        match self {
+            Activation::Relu => x.emax(Expr::float(0.0)),
+            Activation::Gelu => {
+                let cubic = x.clone() * x.clone() * x.clone() * Expr::float(GELU_C1);
+                let inner = (x.clone() + cubic) * Expr::float(GELU_C0);
+                Expr::float(0.5) * x * (Expr::float(1.0) + Expr::un(UnOp::Tanh, inner))
+            }
+            Activation::Silu => {
+                Expr::float(0.5)
+                    * x.clone()
+                    * (Expr::float(1.0) + Expr::un(UnOp::Tanh, x * Expr::float(0.5)))
+            }
+        }
+    }
+
+    /// Scalar CPU reference. Must mirror [`Activation::expr`] exactly
+    /// (same approximation, f32 arithmetic) so fused and reference
+    /// executions agree to rounding, not to model error.
+    pub fn reference(self, x: f32) -> f32 {
+        match self {
+            Activation::Relu => x.max(0.0),
+            Activation::Gelu => {
+                let cubic = x * x * x * GELU_C1 as f32;
+                let inner = (x + cubic) * GELU_C0 as f32;
+                0.5 * x * (1.0 + inner.tanh())
+            }
+            Activation::Silu => 0.5 * x * (1.0 + (x * 0.5).tanh()),
+        }
+    }
+}
+
+/// One epilogue operator. As a standalone graph node it transforms its
+/// primary input; fused, it transforms a kernel's accumulator tile
+/// in registers before the copy-out.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum EpilogueOp {
+    /// `out[i0, i1] += bias[i_dim]` — a rank-1 bias broadcast along the
+    /// other output dimension. `dim` is the *output* dimension the bias
+    /// indexes (1 for row-major GEMM features, 0 for the transposed
+    /// dequant-GEMM output).
+    BiasAdd { dim: usize },
+    /// `out = act(out)`.
+    Activation(Activation),
+    /// `out += residual` (same shape as the output).
+    ResidualAdd,
+    /// `out *= factor` (compile-time constant; no operand tensor).
+    Scale(f64),
+}
+
+impl EpilogueOp {
+    /// Whether this op consumes an extra operand tensor.
+    pub fn takes_operand(&self) -> bool {
+        matches!(self, EpilogueOp::BiasAdd { .. } | EpilogueOp::ResidualAdd)
+    }
+
+    /// The operand tensor shape for a given output shape (`None` for
+    /// operand-free ops).
+    pub fn operand_shape(&self, out_shape: &[i64]) -> Option<Vec<i64>> {
+        match self {
+            EpilogueOp::BiasAdd { dim } => Some(vec![*out_shape.get(*dim)?]),
+            EpilogueOp::ResidualAdd => Some(out_shape.to_vec()),
+            _ => None,
+        }
+    }
+
+    /// Short human tag for plans and logs.
+    pub fn describe(&self) -> String {
+        match self {
+            EpilogueOp::BiasAdd { dim } => format!("bias_add[dim={}]", dim),
+            EpilogueOp::Activation(a) => a.tag().to_string(),
+            EpilogueOp::ResidualAdd => "residual_add".to_string(),
+            EpilogueOp::Scale(f) => format!("scale({})", f),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            EpilogueOp::BiasAdd { dim } => Json::Obj(vec![
+                ("op".into(), Json::Str("bias_add".into())),
+                ("dim".into(), Json::Num(*dim as f64)),
+            ]),
+            EpilogueOp::Activation(a) => Json::Obj(vec![
+                ("op".into(), Json::Str("activation".into())),
+                ("act".into(), Json::Str(a.tag().into())),
+            ]),
+            EpilogueOp::ResidualAdd => {
+                Json::Obj(vec![("op".into(), Json::Str("residual_add".into()))])
+            }
+            EpilogueOp::Scale(f) => Json::Obj(vec![
+                ("op".into(), Json::Str("scale".into())),
+                ("factor".into(), Json::Num(*f)),
+            ]),
+        }
+    }
+
+    pub fn from_json(v: &Json) -> Option<EpilogueOp> {
+        match v.get("op")?.as_str()? {
+            "bias_add" => Some(EpilogueOp::BiasAdd {
+                dim: v.get("dim")?.as_i64()? as usize,
+            }),
+            "activation" => Some(EpilogueOp::Activation(Activation::parse(
+                v.get("act")?.as_str()?,
+            )?)),
+            "residual_add" => Some(EpilogueOp::ResidualAdd),
+            "scale" => Some(EpilogueOp::Scale(v.get("factor")?.as_f64()?)),
+            _ => None,
+        }
+    }
+}
+
+/// Declare the global parameters an epilogue list consumes, in epilogue
+/// order. Call *after* the kernel's main operand params and *before* its
+/// output param, so the program parameter list keeps the runtime
+/// contract `inputs..., epilogue inputs..., output`. Returns one entry
+/// per epilogue (`None` for operand-free ops).
+pub fn declare_epilogue_params(
+    t: &mut KernelBuilder,
+    eps: &[EpilogueOp],
+    out_shape: [i64; 2],
+) -> Vec<Option<BufferId>> {
+    eps.iter()
+        .enumerate()
+        .map(|(i, ep)| match ep {
+            EpilogueOp::BiasAdd { dim } => {
+                assert!(*dim < 2, "bias dim {} out of rank 2", dim);
+                Some(t.param(&format!("Bias{}", i), &[out_shape[*dim]], DType::F32))
+            }
+            EpilogueOp::ResidualAdd => Some(t.param(
+                &format!("Residual{}", i),
+                &[out_shape[0], out_shape[1]],
+                DType::F32,
+            )),
+            _ => None,
+        })
+        .collect()
+}
+
+/// Emit the epilogue ops on the accumulator fragment `acc`, which holds
+/// the `[tile[0], tile[1]]` output tile at global offsets `off` (both in
+/// *output* coordinates — for the transposed dequant output the tile is
+/// `[block_n, block_m]` and `dim = 0` indexes its first axis). Operand
+/// tiles stage global -> shared -> fragment, so layout inference
+/// replicates them across the accumulator's owning threads.
+pub fn emit_epilogues(
+    t: &mut KernelBuilder,
+    eps: &[EpilogueOp],
+    params: &[Option<BufferId>],
+    acc: BufferId,
+    tile: [i64; 2],
+    off: &[Expr; 2],
+) {
+    for (i, ep) in eps.iter().enumerate() {
+        match ep {
+            EpilogueOp::BiasAdd { dim } => {
+                let d = *dim;
+                let bias = params[i].expect("bias param declared");
+                let b_s =
+                    t.alloc_shared(&format!("Bias{}_shared", i), &[tile[d]], DType::F32);
+                let b_l =
+                    t.alloc_fragment(&format!("Bias{}_local", i), &[tile[d]], DType::F32);
+                t.copy_in(bias, vec![off[d].clone()], b_s);
+                t.copy(b_s, b_l);
+                t.parallel(&[tile[0], tile[1]], |v| {
+                    let (pi, pj) = (&v[0], &v[1]);
+                    let bidx = if d == 0 { pi.expr() } else { pj.expr() };
+                    vec![store(
+                        acc,
+                        vec![pi.expr(), pj.expr()],
+                        Expr::load(acc, vec![pi.expr(), pj.expr()])
+                            + Expr::load(b_l, vec![bidx]),
+                    )]
+                });
+            }
+            EpilogueOp::ResidualAdd => {
+                let res = params[i].expect("residual param declared");
+                let r_s = t.alloc_shared(
+                    &format!("Residual{}_shared", i),
+                    &[tile[0], tile[1]],
+                    DType::F32,
+                );
+                let r_l = t.alloc_fragment(
+                    &format!("Residual{}_local", i),
+                    &[tile[0], tile[1]],
+                    DType::F32,
+                );
+                t.copy_in(res, vec![off[0].clone(), off[1].clone()], r_s);
+                t.copy(r_s, r_l);
+                t.parallel(&[tile[0], tile[1]], |v| {
+                    let (pi, pj) = (&v[0], &v[1]);
+                    vec![store(
+                        acc,
+                        vec![pi.expr(), pj.expr()],
+                        Expr::load(acc, vec![pi.expr(), pj.expr()])
+                            + Expr::load(r_l, vec![pi.expr(), pj.expr()]),
+                    )]
+                });
+            }
+            EpilogueOp::Activation(a) => {
+                let a = *a;
+                t.parallel(&[tile[0], tile[1]], |v| {
+                    let (pi, pj) = (&v[0], &v[1]);
+                    vec![store(
+                        acc,
+                        vec![pi.expr(), pj.expr()],
+                        a.expr(Expr::load(acc, vec![pi.expr(), pj.expr()])),
+                    )]
+                });
+            }
+            EpilogueOp::Scale(f) => {
+                let f = *f;
+                t.parallel(&[tile[0], tile[1]], |v| {
+                    let (pi, pj) = (&v[0], &v[1]);
+                    vec![store(
+                        acc,
+                        vec![pi.expr(), pj.expr()],
+                        Expr::load(acc, vec![pi.expr(), pj.expr()]) * Expr::float(f),
+                    )]
+                });
+            }
+        }
+    }
+}
+
+/// Apply one epilogue op to a row-major f32 tensor in place — the CPU
+/// reference semantics (goldens, differential oracles) and the executor
+/// of *unfused* element-wise graph nodes. `BiasAdd` requires rank 2.
+pub fn reference_apply(
+    op: &EpilogueOp,
+    data: &mut [f32],
+    operand: Option<&[f32]>,
+    shape: &[i64],
+) -> Result<(), String> {
+    match op {
+        EpilogueOp::BiasAdd { dim } => {
+            if shape.len() != 2 {
+                return Err(format!("bias_add needs a rank-2 tensor, got {:?}", shape));
+            }
+            if *dim >= 2 {
+                return Err(format!("bias_add dim {} out of rank 2", dim));
+            }
+            let bias = operand.ok_or("bias_add needs an operand")?;
+            let (r, c) = (shape[0] as usize, shape[1] as usize);
+            if bias.len() != shape[*dim] as usize {
+                return Err(format!(
+                    "bias length {} != output dim {} ({})",
+                    bias.len(),
+                    dim,
+                    shape[*dim]
+                ));
+            }
+            for i in 0..r {
+                for j in 0..c {
+                    data[i * c + j] += bias[if *dim == 0 { i } else { j }];
+                }
+            }
+        }
+        EpilogueOp::Activation(a) => {
+            for x in data.iter_mut() {
+                *x = a.reference(*x);
+            }
+        }
+        EpilogueOp::ResidualAdd => {
+            let res = operand.ok_or("residual_add needs an operand")?;
+            if res.len() != data.len() {
+                return Err(format!(
+                    "residual length {} != output length {}",
+                    res.len(),
+                    data.len()
+                ));
+            }
+            for (x, r) in data.iter_mut().zip(res) {
+                *x += r;
+            }
+        }
+        EpilogueOp::Scale(f) => {
+            let f = *f as f32;
+            for x in data.iter_mut() {
+                *x *= f;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn activations_are_sane() {
+        for a in [Activation::Relu, Activation::Gelu, Activation::Silu] {
+            assert!(a.reference(0.0).abs() < 1e-6, "{:?}(0) != 0", a);
+            // monotone-ish on the positive side, near-identity for large x
+            assert!(a.reference(3.0) > 2.5, "{:?}(3) too small", a);
+            assert_eq!(Activation::parse(a.tag()), Some(a));
+        }
+        assert_eq!(Activation::Relu.reference(-1.0), 0.0);
+        assert!(Activation::Gelu.reference(-0.5) < 0.0);
+        assert!(Activation::parse("wat").is_none());
+    }
+
+    #[test]
+    fn epilogue_json_round_trips() {
+        let ops = [
+            EpilogueOp::BiasAdd { dim: 1 },
+            EpilogueOp::BiasAdd { dim: 0 },
+            EpilogueOp::Activation(Activation::Gelu),
+            EpilogueOp::ResidualAdd,
+            EpilogueOp::Scale(0.125),
+        ];
+        for op in ops {
+            let j = op.to_json();
+            let back = EpilogueOp::from_json(&j).expect("parse back");
+            assert_eq!(back, op, "{}", j.dump());
+        }
+        assert!(EpilogueOp::from_json(&Json::parse("{\"op\":\"nope\"}").unwrap()).is_none());
+    }
+
+    #[test]
+    fn reference_apply_bias_and_residual() {
+        // [2, 3] tensor
+        let mut d = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        reference_apply(
+            &EpilogueOp::BiasAdd { dim: 1 },
+            &mut d,
+            Some(&[10.0, 20.0, 30.0]),
+            &[2, 3],
+        )
+        .unwrap();
+        assert_eq!(d, vec![11.0, 22.0, 33.0, 14.0, 25.0, 36.0]);
+        reference_apply(
+            &EpilogueOp::BiasAdd { dim: 0 },
+            &mut d,
+            Some(&[100.0, 200.0]),
+            &[2, 3],
+        )
+        .unwrap();
+        assert_eq!(d, vec![111.0, 122.0, 133.0, 214.0, 225.0, 236.0]);
+        let res = vec![1.0f32; 6];
+        reference_apply(&EpilogueOp::ResidualAdd, &mut d, Some(&res), &[2, 3]).unwrap();
+        assert_eq!(d[0], 112.0);
+        reference_apply(&EpilogueOp::Scale(2.0), &mut d, None, &[2, 3]).unwrap();
+        assert_eq!(d[0], 224.0);
+        // errors, not panics, on malformed operands
+        assert!(reference_apply(
+            &EpilogueOp::BiasAdd { dim: 1 },
+            &mut d,
+            Some(&[1.0]),
+            &[2, 3]
+        )
+        .is_err());
+        assert!(reference_apply(&EpilogueOp::ResidualAdd, &mut d, None, &[2, 3]).is_err());
+    }
+
+    #[test]
+    fn operand_shapes() {
+        assert_eq!(
+            EpilogueOp::BiasAdd { dim: 1 }.operand_shape(&[64, 128]),
+            Some(vec![128])
+        );
+        assert_eq!(
+            EpilogueOp::BiasAdd { dim: 0 }.operand_shape(&[64, 128]),
+            Some(vec![64])
+        );
+        assert_eq!(
+            EpilogueOp::ResidualAdd.operand_shape(&[64, 128]),
+            Some(vec![64, 128])
+        );
+        assert_eq!(EpilogueOp::Scale(2.0).operand_shape(&[64, 128]), None);
+        assert!(!EpilogueOp::Scale(2.0).takes_operand());
+        assert!(EpilogueOp::ResidualAdd.takes_operand());
+    }
+}

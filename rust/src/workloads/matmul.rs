@@ -84,11 +84,32 @@ pub fn matmul_program(
     dtype: DType,
     cfg: &TileConfig,
 ) -> TileProgram {
+    matmul_program_ep(m, n, k, dtype, cfg, &[])
+}
+
+/// [`matmul_program`] with a fused epilogue: after the K loop the
+/// accumulator tile takes the epilogue ops (bias-add over the feature
+/// dim `n`, activation, residual-add, scale) in registers before the
+/// single copy-out — the `graph::fuse` target that removes a DRAM round
+/// trip per folded element-wise node. Epilogue operand params follow the
+/// GEMM operands and precede `C` (the runtime's `inputs..., output`
+/// contract).
+pub fn matmul_program_ep(
+    m: i64,
+    n: i64,
+    k: i64,
+    dtype: DType,
+    cfg: &TileConfig,
+    eps: &[crate::workloads::epilogue::EpilogueOp],
+) -> TileProgram {
     assert!(m % cfg.block_m == 0 && n % cfg.block_n == 0 && k % cfg.block_k == 0,
         "shape {}x{}x{} not divisible by tile {}x{}x{}", m, n, k, cfg.block_m, cfg.block_n, cfg.block_k);
-    let mut t = KernelBuilder::new("matmul", cfg.threads);
+    let name = if eps.is_empty() { "matmul" } else { "matmul_ep" };
+    let mut t = KernelBuilder::new(name, cfg.threads);
     let a = t.param("A", &[m, k], dtype);
     let b = t.param("B", &[k, n], dtype);
+    let ep_params =
+        crate::workloads::epilogue::declare_epilogue_params(&mut t, eps, [m, n]);
     let c = t.param("C", &[m, n], DType::F32);
     let (bx, by) = t.kernel2(n / cfg.block_n, m / cfg.block_m);
     if cfg.rasterize {
@@ -104,6 +125,14 @@ pub fn matmul_program(
         t.copy_in(b, vec![ko.expr() * bk, bx.expr() * bn], b_s);
         t.gemm_opts(a_s, b_s, c_l, false, false, cfg.policy);
     });
+    crate::workloads::epilogue::emit_epilogues(
+        &mut t,
+        eps,
+        &ep_params,
+        c_l,
+        [bm, bn],
+        &[by.expr() * bm, bx.expr() * bn],
+    );
     t.copy_out(c_l, c, vec![by.expr() * bm, bx.expr() * bn]);
     t.finish()
 }
@@ -348,6 +377,51 @@ mod tests {
                 rasterize: true,
             },
         );
+    }
+
+    #[test]
+    fn matmul_epilogues_match_reference() {
+        use crate::workloads::epilogue::{reference_apply, Activation, EpilogueOp};
+        let (m, n, k) = (64i64, 64, 64);
+        let cfg = TileConfig {
+            block_m: 32,
+            block_n: 32,
+            block_k: 32,
+            num_stages: 2,
+            threads: 64,
+            policy: GemmWarpPolicy::Square,
+            rasterize: false,
+        };
+        let eps = [
+            EpilogueOp::BiasAdd { dim: 1 },
+            EpilogueOp::Activation(Activation::Gelu),
+            EpilogueOp::ResidualAdd,
+            EpilogueOp::Scale(0.5),
+        ];
+        let p = matmul_program_ep(m, n, k, DType::F16, &cfg, &eps);
+        // A, B, bias, residual, C — epilogue operands precede the output
+        assert_eq!(p.params.len(), 5);
+        let l = compile(&p, &Device::h100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+        let a = test_data(m * k, 1);
+        let b = test_data(k * n, 2);
+        let bias = test_data(n, 3);
+        let res = test_data(m * n, 4);
+        let mut t = Tensors::new();
+        t.insert(p.params[0].id, a.clone());
+        t.insert(p.params[1].id, b.clone());
+        t.insert(p.params[2].id, bias.clone());
+        t.insert(p.params[3].id, res.clone());
+        interp.run(&mut t).unwrap();
+        let mut want = reference_matmul(&a, &b, m, n, k);
+        reference_apply(&eps[0], &mut want, Some(&bias), &[m, n]).unwrap();
+        reference_apply(&eps[1], &mut want, None, &[m, n]).unwrap();
+        reference_apply(&eps[2], &mut want, Some(&res), &[m, n]).unwrap();
+        reference_apply(&eps[3], &mut want, None, &[m, n]).unwrap();
+        let got = &t[&p.params[4].id];
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 0.05 + 0.02 * w.abs(), "{} vs {}", g, w);
+        }
     }
 
     #[test]

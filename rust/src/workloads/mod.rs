@@ -8,9 +8,15 @@
 //! `workload=` tag to one of these program builders, and the CPU
 //! references are the ground truth for artifact goldens
 //! (`runtime::artifacts`) and the differential tests.
+//!
+//! The [`epilogue`] module adds the fused epilogue vocabulary
+//! (bias-add, activation, residual-add, scale) that the GEMM-family
+//! builders accept and the graph layer's fusion planner folds producer
+//! consumers into (`graph::fuse`).
 
 pub mod attention;
 pub mod dequant;
+pub mod epilogue;
 pub mod linear_attention;
 pub mod matmul;
 pub mod shapes;

@@ -1,0 +1,291 @@
+//! Graph-layer differential tests: every fused graph must match its
+//! unfused node-by-node execution and the CPU-reference composition
+//! (mlp_block, attention_block, dequant-MLP variant), the memory plan
+//! must reuse buffers without aliasing live intermediates, and graph
+//! artifacts must serve end to end through `Runtime` and `Coordinator`.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use tilelang::coordinator::{BatchPolicy, Coordinator};
+use tilelang::graph::exec::GraphKernel;
+use tilelang::graph::memplan::{self, find_live_overlap};
+use tilelang::graph::{fuse, ir::KernelGraph};
+use tilelang::runtime::{artifacts, ExecBackend, InterpOptions, Runtime};
+use tilelang::sim::device::Device;
+
+/// Graph outputs chain two GEMMs through fp16 tiles, so rounding
+/// compounds once relative to the f32 reference composition — the same
+/// bound the runtime's golden gate applies to graph artifacts.
+const TOL: f32 = tilelang::runtime::GRAPH_GOLDEN_TOL;
+
+/// One shared artifact directory per test binary (generation once).
+fn artifacts_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir =
+            std::env::temp_dir().join(format!("tilelang-graph-artifacts-{}", std::process::id()));
+        artifacts::generate_default_set(&dir).expect("generate artifacts");
+        dir
+    })
+    .clone()
+}
+
+fn fast_opts() -> InterpOptions {
+    InterpOptions {
+        tune: false,
+        ..Default::default()
+    }
+}
+
+fn fast_interp() -> ExecBackend {
+    ExecBackend::Interp(fast_opts())
+}
+
+/// The graph artifacts carry valid example inputs (packed weights for
+/// the dequant variant) and reference goldens — reuse them as the
+/// differential corpus.
+fn graph_defs() -> Vec<artifacts::ArtifactDef> {
+    artifacts::default_set()
+        .into_iter()
+        .filter(|d| d.graph.is_some())
+        .collect()
+}
+
+#[test]
+fn fused_matches_unfused_and_reference_for_every_graph() {
+    let dir = artifacts_dir();
+    let defs = graph_defs();
+    assert_eq!(defs.len(), 3, "mlp, attention and dequant-MLP variants");
+    for d in defs {
+        let graph = d.graph.as_ref().expect("graph def");
+        let fused = GraphKernel::prepare(graph, &fast_opts(), &dir)
+            .unwrap_or_else(|e| panic!("{}: prepare fused: {}", d.name, e));
+        let unfused = GraphKernel::prepare_unfused(graph, &fast_opts(), &dir)
+            .unwrap_or_else(|e| panic!("{}: prepare unfused: {}", d.name, e));
+        assert!(
+            !fused.fusions().is_empty(),
+            "{}: the planner must fold at least one epilogue",
+            d.name
+        );
+        let got_f = fused
+            .execute(&d.inputs)
+            .unwrap_or_else(|e| panic!("{}: fused execution: {}", d.name, e));
+        let got_u = unfused
+            .execute(&d.inputs)
+            .unwrap_or_else(|e| panic!("{}: unfused execution: {}", d.name, e));
+        assert_eq!(got_f.len(), d.golden.len(), "{}", d.name);
+        for (i, ((f, u), w)) in got_f.iter().zip(&got_u).zip(&d.golden).enumerate() {
+            assert!(
+                (f - u).abs() < TOL,
+                "{} idx {}: fused {} vs unfused {}",
+                d.name,
+                i,
+                f,
+                u
+            );
+            assert!(
+                (f - w).abs() < TOL + 0.02 * w.abs(),
+                "{} idx {}: fused {} vs reference {}",
+                d.name,
+                i,
+                f,
+                w
+            );
+            assert!(
+                (u - w).abs() < TOL + 0.02 * w.abs(),
+                "{} idx {}: unfused {} vs reference {}",
+                d.name,
+                i,
+                u,
+                w
+            );
+        }
+    }
+}
+
+#[test]
+fn mlp_block_fuses_and_beats_materializing_every_edge() {
+    // the acceptance criteria in one place: >= 1 fusion on mlp_block,
+    // and the memory plan's peak strictly below the sum of all
+    // intermediate sizes
+    let dev = Device::h100();
+    let graph = tilelang::graph::ir::mlp_block(64, 64, 128);
+    let fp = fuse::plan(&graph, &dev).expect("fusion plan");
+    assert!(
+        !fp.fused.is_empty(),
+        "mlp_block must produce at least one fusion"
+    );
+    assert!(fp.fused_cost_us < fp.unfused_cost_us);
+    // peak planned bytes strictly below materializing every edge — on
+    // the *unfused* graph, which is where the intermediates live
+    let mp = memplan::plan(&graph);
+    assert!(
+        mp.peak_bytes < mp.intermediate_bytes,
+        "peak {} vs materialized {}",
+        mp.peak_bytes,
+        mp.intermediate_bytes
+    );
+    assert!(find_live_overlap(&mp).is_none());
+    // the fused graph's plan is also overlap-free
+    let mp_fused = memplan::plan(&fp.graph);
+    assert!(find_live_overlap(&mp_fused).is_none());
+}
+
+#[test]
+fn memplans_never_alias_live_intermediates() {
+    let dev = Device::h100();
+    for d in graph_defs() {
+        let g = d.graph.as_ref().unwrap();
+        for planned in [g.clone(), fuse::plan(g, &dev).expect("fuse").graph] {
+            let mp = memplan::plan(&planned);
+            if let Some((i, j)) = find_live_overlap(&mp) {
+                panic!(
+                    "{}: nodes {} and {} share a buffer while live",
+                    d.name, i, j
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn graph_artifacts_serve_through_the_runtime() {
+    let dir = artifacts_dir();
+    let rt = Runtime::with_backend(&dir, fast_interp()).expect("runtime");
+    for name in [
+        "mlp_block_64x64x128",
+        "attention_block_128x64",
+        "dequant_mlp_32x64x64",
+    ] {
+        let err = rt.golden_check(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(err < TOL, "{name}: golden max err {err}");
+        let loaded = rt.load(name).expect(name);
+        let gk = loaded.graph_kernel().expect("graph artifacts expose their kernel");
+        assert!(!gk.fusions().is_empty(), "{name}: no fusions");
+        // fusion already removed most intermediates; the pool never
+        // exceeds materializing the ones that remain
+        assert!(
+            gk.memplan().peak_bytes <= gk.memplan().intermediate_bytes,
+            "{name}"
+        );
+    }
+    // graph artifacts refuse the sharded backend with an error, not a
+    // panic or silent wrong numbers
+    let sharded = Runtime::with_backend(&dir, ExecBackend::sharded(2)).expect("runtime");
+    let e = sharded.load("mlp_block_64x64x128").unwrap_err().to_string();
+    assert!(e.contains("single-shard"), "{e}");
+}
+
+#[test]
+fn coordinator_serves_a_full_block_per_row() {
+    let dir = artifacts_dir();
+    let model = "mlp_block_64x64x128";
+    let rt = Runtime::with_backend(&dir, fast_interp()).expect("runtime");
+    let inputs = rt.example_inputs(model).expect("inputs");
+    let spec = rt.spec(model).expect("spec").clone();
+    let batch = spec.in_shapes[0][0] as usize;
+    let row_len: usize = spec.in_shapes[0][1..].iter().product::<i64>() as usize;
+    let out_row = spec.out_len() / batch;
+    let direct = rt.execute(model, &inputs).expect("direct execution");
+
+    let coord =
+        Coordinator::start_batched_with_backend(&dir, fast_interp(), model, BatchPolicy::default())
+            .expect("start coordinator");
+    let mut rxs = Vec::new();
+    for slot in 0..batch.min(16) {
+        let row = inputs[0][slot * row_len..(slot + 1) * row_len].to_vec();
+        rxs.push((slot, coord.submit_row(model, row).expect("submit")));
+    }
+    for (slot, rx) in rxs {
+        let reply = rx.recv().expect("reply");
+        let out = reply.output.unwrap_or_else(|e| panic!("slot {slot}: {e}"));
+        assert_eq!(out.len(), out_row);
+        // the MLP's gemm+bias+gelu+gemm+bias mixes nothing across batch
+        // rows; the residual reads the same row of X — but the worker
+        // zero-pads *other* slots, whose residual rows differ from the
+        // example batch, so compare only the requested slot
+        let want = &direct[slot * out_row..(slot + 1) * out_row];
+        for (g, w) in out.iter().zip(want) {
+            assert!((g - w).abs() < 1e-4, "slot {slot}: {g} vs {w}");
+        }
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn row_batchability_is_enforced_for_graph_serving() {
+    use tilelang::graph::ir::{attention_block, dequant_mlp_block, mlp_block};
+    use tilelang::workloads::dequant::WeightFormat;
+    // the MLP keeps request rows independent end to end; attention mixes
+    // across the row dim and the dequant block transposes its output
+    assert!(mlp_block(64, 64, 128).row_batchable());
+    assert!(!attention_block(128, 64, false).row_batchable());
+    assert!(!dequant_mlp_block(32, 64, 64, 64, WeightFormat::Int4, 32).row_batchable());
+
+    // a batched worker must refuse the attention block with a per-row
+    // error instead of serving rows computed from co-batched strangers
+    let dir = artifacts_dir();
+    let coord = Coordinator::start_batched_with_backend(
+        &dir,
+        fast_interp(),
+        "attention_block_128x64",
+        BatchPolicy::default(),
+    )
+    .expect("start coordinator");
+    let reply = coord
+        .submit_row("attention_block_128x64", vec![0.0; 64])
+        .expect("submit")
+        .recv()
+        .expect("reply");
+    let err = reply.output.expect_err("attention rows must be refused");
+    assert!(err.contains("not row-batchable"), "{err}");
+    coord.shutdown();
+}
+
+#[test]
+fn malformed_graph_files_error_instead_of_panicking() {
+    use tilelang::graph::ir::mlp_block;
+    use tilelang::workloads::epilogue::EpilogueOp;
+    // an out-of-range bias dim must fail validation (it would otherwise
+    // reach the builder asserts inside a serving worker)
+    let mut g = mlp_block(64, 64, 128);
+    g.nodes[1].op = tilelang::graph::ir::NodeOp::Elementwise(EpilogueOp::BiasAdd { dim: 2 });
+    assert!(g.validate().is_err());
+    // non-positive dims are rejected up front
+    let mut g = mlp_block(64, 64, 128);
+    g.nodes[0].out_shape = vec![64, -128];
+    g.nodes[0].in_shapes[1] = vec![64, -128];
+    assert!(g.validate().is_err());
+    // a wrong-rank kernel operand (same element count) must fail
+    // validation, not index-panic inside the program builders
+    let mut g = mlp_block(64, 64, 128);
+    g.nodes[0].in_shapes[0] = vec![64 * 64];
+    assert!(g.validate().is_err());
+    // duplicate node names would scramble fusion memos and diagnostics
+    let mut g = mlp_block(64, 64, 128);
+    g.nodes[1].name = "ffn1".into();
+    assert!(g.validate().is_err());
+}
+
+#[test]
+fn graph_artifact_files_round_trip() {
+    let dir = artifacts_dir();
+    for name in [
+        "mlp_block_64x64x128",
+        "attention_block_128x64",
+        "dequant_mlp_32x64x64",
+    ] {
+        let path = dir.join(format!("{name}.graph.json"));
+        let g = KernelGraph::load(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(g.name, name);
+        g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+        // saving and reloading preserves the structure
+        let tmp = dir.join(format!("{name}.roundtrip.json"));
+        g.save(&tmp).expect("save");
+        let back = KernelGraph::load(&tmp).expect("reload");
+        assert_eq!(back.nodes.len(), g.nodes.len());
+        assert_eq!(back.output, g.output);
+        let _ = std::fs::remove_file(&tmp);
+    }
+}

@@ -2,8 +2,9 @@
 //! must produce the same numbers as the single-device interp backend
 //! and the CPU references, for every strategy the acceptance criteria
 //! name (gemm row-parallel, gemm split-K, flash-attention
-//! head-parallel) across shard counts 2 and 4 — plus end-to-end golden
-//! checks through `Runtime`/`Coordinator` on the sharded backend.
+//! head-parallel) across shard counts 2 and 4 — plus uneven remainder
+//! splits at shards = 3 and end-to-end golden checks through
+//! `Runtime`/`Coordinator` on the sharded backend.
 //!
 //! Planner *choice* tests (which strategy wins for which shape) live in
 //! `shard::plan`'s unit tests; this file pins execution semantics.
@@ -98,6 +99,86 @@ fn gemm_row_parallel_and_split_k_match_single_device() {
 }
 
 #[test]
+fn uneven_shard_counts_match_single_device() {
+    // shards = 3 does not divide M = 64 (or bh = 4): the planner hands
+    // out remainder spans (32/16/16 rows; 2/1/1 heads) and the gathered
+    // output must still equal the single-device run
+    let dir = artifacts_dir();
+    let rt = Runtime::with_backend(&dir, fast_interp()).expect("runtime");
+    let spec = rt.spec("matmul_64x64x64").expect("spec").clone();
+    let inputs = rt.example_inputs("matmul_64x64x64").expect("inputs");
+    let single = rt.execute("matmul_64x64x64", &inputs).expect("single-device");
+    let want = reference_matmul(&inputs[0], &inputs[1], 64, 64, 64);
+    let dev = Device::by_name("h100").unwrap();
+
+    for strategy in [Strategy::RowParallel, Strategy::SplitK] {
+        let plan = plan_with_strategy(
+            &WorkloadKind::Gemm,
+            &spec.in_shapes,
+            &spec.out_shape,
+            3,
+            strategy,
+            &dev,
+        )
+        .unwrap_or_else(|e| panic!("{strategy:?} x3: {e}"));
+        assert_eq!(plan.shards(), 3);
+        // remainder spans cover the dimension exactly
+        let widths: Vec<i64> = plan
+            .parts
+            .iter()
+            .map(|p| match strategy {
+                Strategy::RowParallel => p.in_shapes[0][0],
+                _ => p.in_shapes[0][1],
+            })
+            .collect();
+        assert_eq!(widths.iter().sum::<i64>(), 64, "{strategy:?}: {widths:?}");
+        assert_eq!(widths, vec![32, 16, 16], "{strategy:?}");
+        let kernel = ShardedKernel::prepare_with_plan(&spec, plan, &fast_opts(3), &dir)
+            .unwrap_or_else(|e| panic!("{strategy:?} x3: {e}"));
+        let got = kernel
+            .execute(&inputs)
+            .unwrap_or_else(|e| panic!("{strategy:?} x3: {e}"));
+        assert_eq!(got.len(), single.len());
+        for (i, ((g, s), w)) in got.iter().zip(&single).zip(&want).enumerate() {
+            assert!(
+                (g - s).abs() < TOL,
+                "{strategy:?} x3 idx {i}: sharded {g} vs single {s}"
+            );
+            assert!(
+                (g - w).abs() < TOL,
+                "{strategy:?} x3 idx {i}: sharded {g} vs reference {w}"
+            );
+        }
+    }
+
+    // head-parallel remainder: bh = 4 across 3 shards (2/1/1 heads)
+    let spec = rt.spec("flash_attention_2x128x64").expect("spec").clone();
+    // bh = 2 cannot split 3 ways: planning must error cleanly
+    assert!(ShardedKernel::prepare(&spec, &fast_opts(3), &dir).is_err());
+    let (bh, seq, d) = (4i64, 128i64, 64i64);
+    let q = test_data(bh * seq * d, 0xA7);
+    let k = test_data(bh * seq * d, 0xA8);
+    let v = test_data(bh * seq * d, 0xA9);
+    let fa_inputs = vec![q.clone(), k.clone(), v.clone()];
+    let fa_spec = ArtifactSpec {
+        name: "fa_uneven_test".to_string(),
+        hlo_path: PathBuf::from("-"),
+        in_shapes: vec![vec![bh, seq, d]; 3],
+        out_shape: vec![bh, seq, d],
+        workload: Some("flash_attention".to_string()),
+        graph: None,
+    };
+    let kernel = ShardedKernel::prepare(&fa_spec, &fast_opts(3), &dir).expect("fa x3");
+    assert_eq!(kernel.plan().shards(), 3);
+    assert_eq!(kernel.plan().parts[0].out_shape, vec![2, seq, d]);
+    let got = kernel.execute(&fa_inputs).expect("fa x3 execution");
+    let want = reference_attention(&q, &k, &v, bh, seq, d, false);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < TOL, "fa x3 idx {i}: {g} vs {w}");
+    }
+}
+
+#[test]
 fn flash_attention_head_parallel_matches_reference() {
     // synthetic bh=4 spec so both shard counts divide the heads; no
     // artifact files are needed — the dir only hosts the tuning cache
@@ -115,6 +196,7 @@ fn flash_attention_head_parallel_matches_reference() {
         in_shapes: vec![vec![bh, seq, d]; 3],
         out_shape: vec![bh, seq, d],
         workload: Some("flash_attention".to_string()),
+        graph: None,
     };
     // shards = 1 doubles as the single-device baseline
     let mut baseline: Option<Vec<f32>> = None;
