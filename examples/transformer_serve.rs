@@ -17,8 +17,10 @@
 //!
 //! Run: cargo run --release --example transformer_serve [DIR] [SHARDS]
 //! (artifacts are generated on the fly when the directory is missing;
-//! SHARDS >= 2 serves the single-kernel linear model through the
-//! sharded backend instead — graph sharding is a ROADMAP follow-on)
+//! SHARDS >= 2 partitions the whole block across N parallel executors —
+//! every micro-batch scatters across the graph shard plan, each shard
+//! runs the fused block on its slice of the rows, and the outputs
+//! gather before rows are replied)
 
 use std::time::Instant;
 
@@ -28,10 +30,6 @@ use tilelang::runtime::{artifacts, ExecBackend, Runtime};
 /// The batched serving model: a transformer MLP block served as one
 /// graph artifact (input 0 is the row batch; the rest are weights).
 const MODEL: &str = "mlp_block_64x64x128";
-
-/// Fallback for sharded runs: the single-kernel linear layer.
-const SHARDED_MODEL: &str = "linear_64x256x64";
-
 
 fn main() {
     let dir = std::env::args().nth(1).unwrap_or_else(|| "artifacts".into());
@@ -44,8 +42,7 @@ fn main() {
         println!("generated {} artifacts in {}/", names.len(), dir);
     }
     let (model, backend) = if shards >= 2 {
-        println!("note: graph artifacts serve single-shard; sharding {SHARDED_MODEL} instead");
-        (SHARDED_MODEL, ExecBackend::sharded(shards))
+        (MODEL, ExecBackend::sharded(shards))
     } else {
         (MODEL, ExecBackend::default_backend())
     };
@@ -73,6 +70,9 @@ fn main() {
     let loaded = rt.load(model).expect("load model");
     if let Some(plan) = loaded.shard_plan() {
         println!("sharding: {}", plan.describe());
+    }
+    if let Some(sg) = loaded.sharded_graph() {
+        println!("graph sharding: {}", sg.describe());
     }
     if let Some(gk) = loaded.graph_kernel() {
         // the full block plan: fusions + planned intermediate pool

@@ -17,7 +17,10 @@
 //! tuned configs for their artifact shapes. Graph artifacts (manifest
 //! `graph=` tag) serve through the same workers: the runtime loads them
 //! as fused, buffer-planned `graph::GraphKernel`s, so a batched model
-//! worker can serve a whole transformer block per request batch.
+//! worker can serve a whole transformer block per request batch — and on
+//! the sharded backend (`start_sharded`) the block itself is partitioned,
+//! so every executed micro-batch scatters across the graph shard plan's
+//! executors and gathers back before rows are replied.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -339,21 +342,20 @@ fn batched_worker(
         );
         return;
     }
-    // graph artifacts must additionally be provably row-independent:
-    // an attention block keeps the batch dim structurally but mixes
-    // across it, which would serve silently wrong numbers
-    if let Some(g) = loaded.graph_kernel() {
-        if !g.row_batchable() {
-            drain_with_error(
-                &rx,
-                &format!(
-                    "graph artifact {} is not row-batchable (output rows depend on \
-                     other batch rows); serve it through raw submit instead",
-                    kernel
-                ),
-            );
-            return;
-        }
+    // graph artifacts (single-executor or sharded) must additionally be
+    // provably row-independent: an attention block keeps the batch dim
+    // structurally but mixes across it, which would serve silently wrong
+    // numbers
+    if loaded.graph_row_batchable() == Some(false) {
+        drain_with_error(
+            &rx,
+            &format!(
+                "graph artifact {} is not row-batchable (output rows depend on \
+                 other batch rows); serve it through raw submit instead",
+                kernel
+            ),
+        );
+        return;
     }
     let batch_cap = batch_shape[0] as usize;
     let max_batch = match policy.max_batch {

@@ -19,13 +19,17 @@ use crate::graph::fuse::{self, FusedEdge};
 use crate::graph::ir::{GraphNode, KernelGraph, NodeOp, ValueRef};
 use crate::graph::memplan::{self, MemPlan};
 use crate::ir::program::TileProgram;
-use crate::runtime::interp_backend::{dequant_config, gemm_config, InterpKernel};
+use crate::runtime::interp_backend::{
+    attention_config, decode_config, dequant_config, gemm_config, InterpKernel,
+};
 use crate::runtime::{ArtifactSpec, InterpOptions, WorkloadKind};
 use crate::sim::device::Device;
 use crate::sim::model::{simulate_kernel, Penalties, LAUNCH_US};
+use crate::workloads::attention::{flash_attention_program_ep, flash_decode_program};
 use crate::workloads::dequant::dequant_matmul_program_ep;
 use crate::workloads::epilogue::reference_apply;
 use crate::workloads::matmul::matmul_program_ep;
+use crate::workloads::shapes::AttnShape;
 use crate::{anyhow, bail};
 
 /// Build the tile program a kernel node executes: workload builder +
@@ -85,6 +89,36 @@ pub(crate) fn node_program(
                 );
             }
             Ok(dequant_matmul_program_ep(m, n, k, *fmt, &cfg, &node.epilogues))
+        }
+        WorkloadKind::FlashAttention { causal } => {
+            let q = &node.in_shapes[0];
+            let (bh, seq, d) = (q[0], q[1], q[2]);
+            let shape = AttnShape {
+                name: "graph-node",
+                batch: 1,
+                heads: bh,
+                seq_len: seq,
+                head_dim: d,
+                causal: *causal,
+            };
+            let cfg = attention_config(shape, dev, opts, dir)
+                .map_err(|e| anyhow!("{}: {}", node.name, e))?;
+            Ok(flash_attention_program_ep(
+                bh,
+                seq,
+                d,
+                *causal,
+                &cfg,
+                &node.epilogues,
+            ))
+        }
+        WorkloadKind::FlashDecode => {
+            let q = &node.in_shapes[0];
+            let (b, h, d) = (q[0], q[1], q[2]);
+            let kv = node.in_shapes[1][1];
+            let cfg = decode_config(b, h, kv, d, dev, opts, dir)
+                .map_err(|e| anyhow!("{}: {}", node.name, e))?;
+            Ok(flash_decode_program(b, h, kv, d, &cfg, &node.epilogues))
         }
         other => bail!(
             "{}: {} kernels take no fused epilogues",
@@ -258,6 +292,14 @@ impl GraphKernel {
 
     /// Execute the graph on f32 inputs (manifest order).
     pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        self.execute_refs(&refs)
+    }
+
+    /// Like [`GraphKernel::execute`], over borrowed slices — the sharded
+    /// graph backend shares replicated weight tensors across shard
+    /// threads without copying them per shard.
+    pub fn execute_refs(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         if inputs.len() != self.in_shapes.len() {
             bail!(
                 "graph {} expects {} inputs, got {}",
@@ -290,7 +332,7 @@ impl GraphKernel {
             let mut ops: Vec<&[f32]> = Vec::with_capacity(node.inputs.len());
             for v in &node.inputs {
                 ops.push(match v {
-                    ValueRef::Input(k) => inputs[*k].as_slice(),
+                    ValueRef::Input(k) => inputs[*k],
                     ValueRef::Node(j) => match self.memplan.slots[*j].buffer {
                         Some(b) => pool[b].as_slice(),
                         None => dedicated[*j]
@@ -325,7 +367,7 @@ impl GraphKernel {
             }
         }
         let out = match self.graph.output {
-            ValueRef::Input(i) => inputs[i].clone(),
+            ValueRef::Input(i) => inputs[i].to_vec(),
             ValueRef::Node(j) => match self.memplan.slots[j].buffer {
                 Some(b) => std::mem::take(&mut pool[b]),
                 None => dedicated[j]

@@ -18,8 +18,10 @@
 //!
 //! Ships builders for the paper-motivated scenarios: [`mlp_block`]
 //! (GEMM+bias+GELU -> GEMM+bias+residual), [`attention_block`]
-//! (QKV GEMMs -> flash attention -> output-proj+residual) and
-//! [`dequant_mlp_block`] (GEMM+bias+GELU -> dequant-GEMM+bias).
+//! (QKV GEMMs -> flash attention -> output-proj+residual),
+//! [`dequant_mlp_block`] (GEMM+bias+GELU -> dequant-GEMM+bias) and
+//! [`decode_block`] (autoregressive decode against a KV cache:
+//! Q projection -> flash decode + residual-in-O -> out-proj + bias).
 
 use std::fs;
 use std::path::Path;
@@ -28,7 +30,7 @@ use crate::error::{Context, Result};
 use crate::ir::dtype::DType;
 use crate::runtime::WorkloadKind;
 use crate::util::json::Json;
-use crate::workloads::attention::reference_attention;
+use crate::workloads::attention::{reference_attention, reference_flash_decode};
 use crate::workloads::dequant::{reference_dequant_matmul, WeightFormat};
 use crate::workloads::epilogue::{reference_apply, Activation, EpilogueOp};
 use crate::workloads::linear_attention::{reference_chunk_scan, reference_chunk_state};
@@ -143,7 +145,7 @@ pub struct KernelGraph {
 pub fn kernel_input_count(kind: &WorkloadKind) -> usize {
     match kind {
         WorkloadKind::Gemm => 2,
-        WorkloadKind::FlashAttention { .. } => 3,
+        WorkloadKind::FlashAttention { .. } | WorkloadKind::FlashDecode => 3,
         WorkloadKind::Dequant { .. } => 3,
         WorkloadKind::ChunkState | WorkloadKind::ChunkScan => 3,
     }
@@ -273,7 +275,9 @@ impl KernelGraph {
                     // rather than panic inside `node_program`
                     let ranks: &[usize] = match kind {
                         WorkloadKind::Gemm => &[2, 2],
-                        WorkloadKind::FlashAttention { .. } => &[3, 3, 3],
+                        WorkloadKind::FlashAttention { .. } | WorkloadKind::FlashDecode => {
+                            &[3, 3, 3]
+                        }
                         WorkloadKind::Dequant { .. } => &[2, 2, 2],
                         WorkloadKind::ChunkState | WorkloadKind::ChunkScan => &[3, 3, 2],
                     };
@@ -386,6 +390,17 @@ impl KernelGraph {
                     primary
                         && rows_intact
                         && !carries_rows(&node.inputs[1], &carries)
+                        && epilogues_row_independent(node, &carries)
+                }
+                // flash decode attends each stream (= request row) only
+                // against its own row of the Q tensor and the cache
+                // operands; as long as the caches are weight tensors (not
+                // row-carrying values), output rows stay independent
+                NodeOp::Kernel(WorkloadKind::FlashDecode) => {
+                    primary
+                        && rows_intact
+                        && !carries_rows(&node.inputs[1], &carries)
+                        && !carries_rows(&node.inputs[2], &carries)
                         && epilogues_row_independent(node, &carries)
                 }
                 NodeOp::Elementwise(op) => {
@@ -746,6 +761,20 @@ fn reference_kernel(
                 ops[0], ops[1], ops[2], q[0], q[1], q[2], *causal,
             ))
         }
+        WorkloadKind::FlashDecode => {
+            let (q, k) = (&in_shapes[0], &in_shapes[1]);
+            if k[0] != q[0] || k[2] != q[2] || in_shapes[2] != *k {
+                bail!(
+                    "flash_decode cache {:?}/{:?} does not match Q {:?}",
+                    k,
+                    in_shapes[2],
+                    q
+                );
+            }
+            Ok(reference_flash_decode(
+                ops[0], ops[1], ops[2], q[0], q[1], k[1], q[2],
+            ))
+        }
         WorkloadKind::Dequant { fmt, group } => {
             let (a, s) = (&in_shapes[0], &in_shapes[2]);
             let (m, k) = (a[0], a[1]);
@@ -1031,6 +1060,105 @@ pub fn dequant_mlp_block(
     }
 }
 
+/// Autoregressive decode block over a KV cache: a micro-batch of
+/// `streams` decode positions `X [streams, d_model]` runs
+/// `Y = (X + MQA(X Wq, K_cache, V_cache)) Wo + Bo`, where every stream's
+/// `heads = d_model / head_dim` query heads attend its own cached
+/// keys/values (`[streams, past, head_dim]`, MQA-style shared cache per
+/// stream; the serving layer appends/rolls the cache between steps — see
+/// `rust/tests/graph_sharding.rs` for the two-step lifecycle).
+///
+/// Built *unfused*: the residual is a standalone element-wise node on
+/// the attention output (the fusion planner folds it into the flash
+/// kernel's O epilogue — the attention-family fold), and the output bias
+/// folds into the out-projection GEMM. The `[streams, d_model]` <->
+/// `[streams, heads, head_dim]` views on both sides of the attention
+/// node are row-major reshapes along the typed edges.
+pub fn decode_block(streams: i64, heads: i64, head_dim: i64, past: i64) -> KernelGraph {
+    let f32s = DType::F32;
+    let d_model = heads * head_dim;
+    let inputs = vec![
+        GraphInput { name: "X".into(), shape: vec![streams, d_model], dtype: f32s },
+        GraphInput { name: "Wq".into(), shape: vec![d_model, d_model], dtype: f32s },
+        GraphInput {
+            name: "K_cache".into(),
+            shape: vec![streams, past, head_dim],
+            dtype: f32s,
+        },
+        GraphInput {
+            name: "V_cache".into(),
+            shape: vec![streams, past, head_dim],
+            dtype: f32s,
+        },
+        GraphInput { name: "Wo".into(), shape: vec![d_model, d_model], dtype: f32s },
+        GraphInput { name: "Bo".into(), shape: vec![d_model], dtype: f32s },
+    ];
+    let nodes = vec![
+        GraphNode {
+            name: "q_proj".into(),
+            op: NodeOp::Kernel(WorkloadKind::Gemm),
+            inputs: vec![ValueRef::Input(0), ValueRef::Input(1)],
+            in_shapes: vec![vec![streams, d_model], vec![d_model, d_model]],
+            epilogues: vec![],
+            out_shape: vec![streams, d_model],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "attn".into(),
+            op: NodeOp::Kernel(WorkloadKind::FlashDecode),
+            inputs: vec![ValueRef::Node(0), ValueRef::Input(2), ValueRef::Input(3)],
+            // the projection's [streams, d_model] rows view as
+            // [streams, heads, head_dim] query heads (row-major reshape)
+            in_shapes: vec![
+                vec![streams, heads, head_dim],
+                vec![streams, past, head_dim],
+                vec![streams, past, head_dim],
+            ],
+            epilogues: vec![],
+            out_shape: vec![streams, heads, head_dim],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "attn_res".into(),
+            op: NodeOp::Elementwise(EpilogueOp::ResidualAdd),
+            // X viewed under the attention output's rank-3 shape — the
+            // fold target for the flash kernel's O epilogue
+            inputs: vec![ValueRef::Node(1), ValueRef::Input(0)],
+            in_shapes: vec![
+                vec![streams, heads, head_dim],
+                vec![streams, heads, head_dim],
+            ],
+            epilogues: vec![],
+            out_shape: vec![streams, heads, head_dim],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "out_proj".into(),
+            op: NodeOp::Kernel(WorkloadKind::Gemm),
+            inputs: vec![ValueRef::Node(2), ValueRef::Input(4)],
+            in_shapes: vec![vec![streams, d_model], vec![d_model, d_model]],
+            epilogues: vec![],
+            out_shape: vec![streams, d_model],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "bias_o".into(),
+            op: NodeOp::Elementwise(EpilogueOp::BiasAdd { dim: 1 }),
+            inputs: vec![ValueRef::Node(3), ValueRef::Input(5)],
+            in_shapes: vec![vec![streams, d_model], vec![d_model]],
+            epilogues: vec![],
+            out_shape: vec![streams, d_model],
+            dtype: f32s,
+        },
+    ];
+    KernelGraph {
+        name: format!("decode_block_{}x{}x{}", streams, d_model, past),
+        inputs,
+        nodes,
+        output: ValueRef::Node(4),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1043,6 +1171,7 @@ mod tests {
             attention_block(128, 64, false),
             attention_block(128, 64, true),
             dequant_mlp_block(32, 64, 64, 64, WeightFormat::Int4, 32),
+            decode_block(64, 16, 16, 64),
         ] {
             g.validate().unwrap_or_else(|e| panic!("{}: {}", g.name, e));
             assert!(g.out_shape().is_ok());
@@ -1117,6 +1246,47 @@ mod tests {
         for (g_, w_) in out.iter().zip(&y) {
             assert!((g_ - w_).abs() < 1e-5, "{} vs {}", g_, w_);
         }
+    }
+
+    #[test]
+    fn decode_block_composes_the_reference_decode() {
+        use crate::workloads::attention::reference_flash_decode;
+        let (streams, heads, dh, past) = (16i64, 16i64, 16i64, 32i64);
+        let d_model = heads * dh;
+        let g = decode_block(streams, heads, dh, past);
+        let x = test_data(streams * d_model, 0x61);
+        let wq = test_data(d_model * d_model, 0x62);
+        let kc = test_data(streams * past * dh, 0x63);
+        let vc = test_data(streams * past * dh, 0x64);
+        let wo = test_data(d_model * d_model, 0x65);
+        let bo = test_data(d_model, 0x66);
+        let out = g
+            .reference_execute(&[
+                x.clone(),
+                wq.clone(),
+                kc.clone(),
+                vc.clone(),
+                wo.clone(),
+                bo.clone(),
+            ])
+            .unwrap();
+        // hand-composed oracle: y = (x + mqa(x wq, cache)) wo + bo
+        let q = reference_matmul(&x, &wq, streams, d_model, d_model);
+        let mut h = reference_flash_decode(&q, &kc, &vc, streams, heads, past, dh);
+        for (hv, xv) in h.iter_mut().zip(&x) {
+            *hv += xv;
+        }
+        let mut y = reference_matmul(&h, &wo, streams, d_model, d_model);
+        for i in 0..streams as usize {
+            for j in 0..d_model as usize {
+                y[i * d_model as usize + j] += bo[j];
+            }
+        }
+        for (g_, w) in out.iter().zip(&y) {
+            assert!((g_ - w).abs() < 1e-4, "{} vs {}", g_, w);
+        }
+        // the decode block keeps request rows independent end to end
+        assert!(g.row_batchable());
     }
 
     #[test]

@@ -8,12 +8,15 @@
 //! * [`ir`] — `KernelGraph`: nodes are workload tile programs (plus a
 //!   fused epilogue vocabulary from `workloads::epilogue`) or standalone
 //!   element-wise ops, edges are typed f32 tensors; ships builders for
-//!   real scenarios (`mlp_block`, `attention_block`,
-//!   `dequant_mlp_block`) and a CPU-reference composition oracle.
+//!   real scenarios (`mlp_block`, `attention_block`, `dequant_mlp_block`
+//!   and the KV-cache `decode_block`) and a CPU-reference composition
+//!   oracle.
 //! * [`fuse`] — the fusion planner: folds element-wise consumers into
-//!   producer-kernel epilogues where the tile shapes admit it, costed by
-//!   `sim::simulate_kernel` per node plus a DRAM-traffic + launch term
-//!   per materialized edge.
+//!   producer epilogues where the tile shapes admit it — GEMM-family
+//!   accumulators take the full vocabulary, attention-family O tiles the
+//!   element-wise subset (e.g. a block residual folded into the flash
+//!   kernel's O epilogue) — costed by `sim::simulate_kernel` per node
+//!   plus a DRAM-traffic + launch term per materialized edge.
 //! * [`memplan`] — liveness-based buffer planning: intermediates with
 //!   disjoint live ranges share allocations; the executor allocates
 //!   from this plan, so it is enforced, not advisory.
@@ -22,8 +25,38 @@
 //!   cache.
 //!
 //! Serving integration lives in `runtime` (manifest `graph=` artifacts
-//! load as `GraphKernel`s) and the CLI (`tilelang graph` prints the
-//! plan; `serve` accepts graph artifacts).
+//! load as `GraphKernel`s — or, on the sharded backend, as
+//! `shard::graph::ShardedGraphKernel`s running the fused block per
+//! shard) and the CLI (`tilelang graph` prints the plan; `serve` accepts
+//! graph artifacts at any shard count). See `docs/SERVING.md` for the
+//! operator flows.
+//!
+//! The whole load-plan-execute loop, against the reference oracle:
+//!
+//! ```
+//! use tilelang::graph::GraphKernel;
+//! use tilelang::graph::ir::mlp_block;
+//! use tilelang::runtime::InterpOptions;
+//! use tilelang::workloads::matmul::test_data;
+//!
+//! let g = mlp_block(32, 32, 32);
+//! let opts = InterpOptions { tune: false, ..Default::default() };
+//! let kernel = GraphKernel::prepare(&g, &opts, &std::env::temp_dir()).unwrap();
+//! assert!(!kernel.fusions().is_empty()); // biases + GELU fold into the GEMMs
+//!
+//! let inputs = vec![
+//!     test_data(32 * 32, 1), // X
+//!     test_data(32 * 32, 2), // W1
+//!     test_data(32, 3),      // B1
+//!     test_data(32 * 32, 4), // W2
+//!     test_data(32, 5),      // B2
+//! ];
+//! let got = kernel.execute(&inputs).unwrap();
+//! let want = g.reference_execute(&inputs).unwrap();
+//! for (g_, w) in got.iter().zip(&want) {
+//!     assert!((g_ - w).abs() < 0.06 + 0.02 * w.abs());
+//! }
+//! ```
 
 pub mod exec;
 pub mod fuse;

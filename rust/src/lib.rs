@@ -27,7 +27,10 @@
 //!   composes multiple kernels into one served artifact: a dataflow
 //!   `KernelGraph` with a costed epilogue-fusion planner and a
 //!   liveness-based buffer-reuse plan, executed through the same
-//!   interp backend.
+//!   interp backend — and, via `shard::graph`, partitioned whole across
+//!   executors (scatter once, run the fused block per shard, gather
+//!   once; the KV-cache decode block serves this way with per-stream
+//!   caches scattered to their shards).
 //!
 //! The crate is dependency-free (std only) so the whole loop — author,
 //! compile, tune, execute, serve — runs in an offline build:

@@ -20,8 +20,8 @@ use std::path::Path;
 
 use crate::bail;
 use crate::error::{Context, Result};
-use crate::graph::ir::{attention_block, dequant_mlp_block, mlp_block, KernelGraph};
-use crate::workloads::attention::reference_attention;
+use crate::graph::ir::{attention_block, decode_block, dequant_mlp_block, mlp_block, KernelGraph};
+use crate::workloads::attention::{reference_attention, reference_flash_decode};
 use crate::workloads::dequant::{quantize_weights, reference_dequant_matmul, WeightFormat};
 use crate::workloads::linear_attention::{reference_chunk_scan, reference_chunk_state};
 use crate::workloads::matmul::{reference_matmul, test_data};
@@ -105,6 +105,25 @@ pub fn default_set() -> Vec<ArtifactDef> {
             in_shapes: vec![vec![bh, seq, d]; 3],
             out_shape: vec![bh, seq, d],
             inputs: vec![q, k, v],
+            golden,
+        });
+    }
+
+    // flash decode: one query per (stream, head) against per-stream
+    // KV caches (the m=1 serving shape; caches are artifact operands)
+    {
+        let (b, h, kv, d) = (4i64, 16i64, 64i64, 16i64);
+        let q = test_data(b * h * d, 0xB4);
+        let kc = test_data(b * kv * d, 0xB5);
+        let vc = test_data(b * kv * d, 0xB6);
+        let golden = reference_flash_decode(&q, &kc, &vc, b, h, kv, d);
+        out.push(ArtifactDef {
+            name: format!("flash_decode_{}x{}x{}x{}", b, h, kv, d),
+            workload: Some(WorkloadKind::FlashDecode),
+            graph: None,
+            in_shapes: vec![vec![b, h, d], vec![b, kv, d], vec![b, kv, d]],
+            out_shape: vec![b, h, d],
+            inputs: vec![q, kc, vc],
             golden,
         });
     }
@@ -205,11 +224,14 @@ fn graph_def(
 
 /// The default graph artifacts: a transformer MLP block (the batched
 /// graph-serving model — input 0 is the row batch), a single-head
-/// attention block, and a dequant-MLP variant.
+/// attention block, a dequant-MLP variant, and the KV-cache decode
+/// block (input 0 is the stream batch; the caches ride along as
+/// artifact operands — `docs/SERVING.md` walks the lifecycle).
 pub fn graph_set() -> Vec<ArtifactDef> {
     // the quantized second layer of the dequant variant needs real
-    // packed codes + scales, not random floats
-    let (m, dm, dh, dout, group) = (32i64, 64i64, 64i64, 64i64, 32i64);
+    // packed codes + scales, not random floats. m = 64 keeps the batch
+    // splittable into whole 16-row GEMM tiles at shard counts 2 and 3.
+    let (m, dm, dh, dout, group) = (64i64, 64i64, 64i64, 64i64, 32i64);
     let fmt = WeightFormat::Int4;
     let w2 = test_data(dout * dh, 0xEE);
     let (packed, scales) = quantize_weights(&w2, dout, dh, fmt, group);
@@ -225,6 +247,9 @@ pub fn graph_set() -> Vec<ArtifactDef> {
                 _ => None,
             },
         ),
+        // 64 decode streams x 16 heads x d_head 16 against a 64-deep
+        // per-stream KV cache
+        graph_def(decode_block(64, 16, 16, 64), 0xF8, |_| None),
     ]
 }
 
@@ -333,7 +358,7 @@ mod tests {
         let dir =
             std::env::temp_dir().join(format!("tilelang-artgen-{}", std::process::id()));
         let names = generate_default_set(&dir).expect("generate");
-        assert!(names.len() >= 9, "expected >= 9 artifacts, got {:?}", names);
+        assert!(names.len() >= 12, "expected >= 12 artifacts, got {:?}", names);
         let rt = Runtime::new(&dir).expect("runtime parses generated manifest");
         assert_eq!(rt.artifact_names().len(), names.len());
         let mut graphs = 0usize;
@@ -356,7 +381,7 @@ mod tests {
                 assert_eq!(data.len(), shape.iter().product::<i64>() as usize);
             }
         }
-        assert_eq!(graphs, 3, "graph artifacts present");
+        assert_eq!(graphs, 4, "graph artifacts present");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -25,7 +25,9 @@ use crate::sim::device::Device;
 use crate::sim::model::Penalties;
 use crate::tir::interp::{Interp, Tensors};
 use crate::tir::LoweredProgram;
-use crate::workloads::attention::{AttentionTunable, AttnConfig};
+use crate::workloads::attention::{
+    AttentionTunable, AttnConfig, DecodeConfig, DecodeTunable,
+};
 use crate::workloads::dequant::{DequantConfig, DequantTunable, WeightFormat};
 use crate::workloads::linear_attention::{
     chunk_scan_program, chunk_state_program, ChunkKind, LinearAttentionTunable,
@@ -74,6 +76,10 @@ pub enum WorkloadKind {
     Gemm,
     /// FlashAttention forward over flattened `[bh, seq, d]` tensors.
     FlashAttention { causal: bool },
+    /// Flash decode: one query per (stream, head) against a per-stream
+    /// KV cache shared by the stream's heads (MQA-style) —
+    /// `Q: [batch, heads, d]`, `K,V: [batch, seqlen_kv, d]`.
+    FlashDecode,
     /// Weight-only quantized GEMM `Ct[n,m] = dequant(B) @ A^T`.
     Dequant { fmt: WeightFormat, group: i64 },
     /// Mamba-2 chunked state update `S = B^T @ (w * X)`.
@@ -85,13 +91,14 @@ pub enum WorkloadKind {
 impl WorkloadKind {
     /// Parse a manifest `workload=` tag. Tags are stable strings:
     /// `gemm`, `flash_attention`, `flash_attention_causal`,
-    /// `dequant_<int4|int2|nf4|fp4>_g<group>`, `chunk_state`,
-    /// `chunk_scan`.
+    /// `flash_decode`, `dequant_<int4|int2|nf4|fp4>_g<group>`,
+    /// `chunk_state`, `chunk_scan`.
     pub fn parse(tag: &str) -> Result<WorkloadKind> {
         match tag {
             "gemm" | "matmul" | "linear" => return Ok(WorkloadKind::Gemm),
             "flash_attention" => return Ok(WorkloadKind::FlashAttention { causal: false }),
             "flash_attention_causal" => return Ok(WorkloadKind::FlashAttention { causal: true }),
+            "flash_decode" => return Ok(WorkloadKind::FlashDecode),
             "chunk_state" => return Ok(WorkloadKind::ChunkState),
             "chunk_scan" => return Ok(WorkloadKind::ChunkScan),
             _ => {}
@@ -122,6 +129,7 @@ impl WorkloadKind {
             WorkloadKind::Gemm => "gemm".to_string(),
             WorkloadKind::FlashAttention { causal: false } => "flash_attention".to_string(),
             WorkloadKind::FlashAttention { causal: true } => "flash_attention_causal".to_string(),
+            WorkloadKind::FlashDecode => "flash_decode".to_string(),
             WorkloadKind::ChunkState => "chunk_state".to_string(),
             WorkloadKind::ChunkScan => "chunk_scan".to_string(),
             WorkloadKind::Dequant { fmt, group } => {
@@ -141,6 +149,9 @@ impl WorkloadKind {
     pub fn from_artifact_name(name: &str) -> Result<WorkloadKind> {
         if name.starts_with("matmul") || name.starts_with("gemm") || name.starts_with("linear") {
             return Ok(WorkloadKind::Gemm);
+        }
+        if name.starts_with("flash_decode") {
+            return Ok(WorkloadKind::FlashDecode);
         }
         if name.starts_with("flash_attention_causal") {
             return Ok(WorkloadKind::FlashAttention { causal: true });
@@ -361,6 +372,56 @@ pub(crate) fn attention_config(
     Ok(cfg)
 }
 
+/// Tile config for a flash-decode problem (see [`gemm_config`]). The
+/// rejection message names the head count explicitly: the planners
+/// (shard/graph-shard) surface it verbatim when a candidate partition
+/// would leave a shard with fewer heads than one 16-row warp tile.
+pub(crate) fn decode_config(
+    batch: i64,
+    heads: i64,
+    seqlen_kv: i64,
+    head_dim: i64,
+    dev: &Device,
+    opts: &InterpOptions,
+    dir: &Path,
+) -> Result<DecodeConfig> {
+    let tun = DecodeTunable {
+        batch,
+        heads,
+        seqlen_kv,
+        head_dim,
+    };
+    let cfg = tuned_config(&tun, dev, opts, dir)
+        .unwrap_or_else(|| DecodeConfig::default_for(heads, seqlen_kv));
+    if !tun.accepts(&cfg) {
+        // name the constraint that actually failed: the planners surface
+        // this reason verbatim, so a cache-length problem must not read
+        // as a head-count problem
+        let why = if heads < 16 || heads % 16 != 0 {
+            format!(
+                "{} head(s) cannot tile the 16-row warp tiles (a shard needs a \
+                 16-aligned head count of at least 16)",
+                heads
+            )
+        } else if head_dim % 16 != 0 {
+            format!("head_dim {} is not a multiple of the 16-wide MMA tile", head_dim)
+        } else {
+            format!(
+                "cache length {} is not divisible by a 16-aligned KV tile",
+                seqlen_kv
+            )
+        };
+        bail!(
+            "no feasible flash_decode tile config for {} head(s) x kv {} x d {}: {}",
+            heads,
+            seqlen_kv,
+            head_dim,
+            why
+        );
+    }
+    Ok(cfg)
+}
+
 /// Tile config for a dequant-GEMM problem. The artifact pins the scale
 /// grouping, so the tuner's group choice yields to the packed layout;
 /// an infeasible tuned config degrades to a group-compatible default.
@@ -464,6 +525,35 @@ pub(crate) fn build_program(
             let cfg = attention_config(shape, dev, opts, dir)
                 .map_err(|e| anyhow!("{}: {}", spec.name, e))?;
             Ok(AttentionTunable { shape }.build(&cfg))
+        }
+        WorkloadKind::FlashDecode => {
+            if spec.in_shapes.len() != 3 {
+                bail!("{}: flash_decode expects 3 inputs (Q, K cache, V cache)", spec.name);
+            }
+            let q = dims(spec, 0, 3)?;
+            let k = dims(spec, 1, 3)?;
+            let v = dims(spec, 2, 3)?;
+            let (b, h, d) = (q[0], q[1], q[2]);
+            let kv = k[1];
+            if k != [b, kv, d] || v != k || spec.out_shape != q {
+                bail!(
+                    "{}: inconsistent flash_decode shapes (Q {:?}, K {:?}, V {:?}, out {:?})",
+                    spec.name,
+                    q,
+                    k,
+                    v,
+                    spec.out_shape
+                );
+            }
+            let cfg = decode_config(b, h, kv, d, dev, opts, dir)
+                .map_err(|e| anyhow!("{}: {}", spec.name, e))?;
+            Ok(DecodeTunable {
+                batch: b,
+                heads: h,
+                seqlen_kv: kv,
+                head_dim: d,
+            }
+            .build(&cfg))
         }
         WorkloadKind::Dequant { fmt, group } => {
             let (fmt, group) = (*fmt, *group);
@@ -601,6 +691,7 @@ mod tests {
             WorkloadKind::Gemm,
             WorkloadKind::FlashAttention { causal: false },
             WorkloadKind::FlashAttention { causal: true },
+            WorkloadKind::FlashDecode,
             WorkloadKind::ChunkState,
             WorkloadKind::ChunkScan,
             WorkloadKind::Dequant {
@@ -634,6 +725,10 @@ mod tests {
         assert_eq!(
             WorkloadKind::from_artifact_name("chunk_scan_2x128").unwrap(),
             WorkloadKind::ChunkScan
+        );
+        assert_eq!(
+            WorkloadKind::from_artifact_name("flash_decode_4x16x64x16").unwrap(),
+            WorkloadKind::FlashDecode
         );
         // PJRT-era HLO models have no tile-program equivalent: a clear
         // error beats silently executing the wrong math

@@ -15,7 +15,10 @@
 //!   interpreter shards (data/row-parallel, split-K with sum-reduce,
 //!   head-parallel, chunk-parallel), chosen by modeled cost. Requests
 //!   scatter per the plan, shards execute on parallel threads and a
-//!   gather/reduce collective recombines the outputs.
+//!   gather/reduce collective recombines the outputs. Graph artifacts
+//!   shard too: `shard::graph` picks one partition axis for the whole
+//!   block and each shard runs the fused sub-graph locally (scatter
+//!   once, gather once — intermediates never cross the interconnect).
 //! * `ExecBackend::Pjrt` — the fast native backend, gated behind the
 //!   off-by-default `pjrt` cargo feature (needs a vendored `xla` crate;
 //!   also a `From<xla::Error>` impl for `error::Error` so the gated `?`
@@ -60,6 +63,7 @@ use crate::error::{Context, Result};
 use crate::graph::exec::GraphKernel;
 use crate::graph::ir::KernelGraph;
 use crate::shard::exec::{ShardedKernel, ShardedOptions};
+use crate::shard::graph::{GraphShardPlan, ShardedGraphKernel};
 use crate::shard::plan::ShardPlan;
 use crate::{anyhow, bail};
 
@@ -159,6 +163,10 @@ enum KernelExec {
     /// fused, buffer-planned, executed node by node on the interp
     /// backend.
     Graph(GraphKernel),
+    /// A graph artifact partitioned across N executors: the whole fused
+    /// block runs per shard against sliced inputs, intermediates stay
+    /// shard-local (see `shard::graph`).
+    ShardedGraph(ShardedGraphKernel),
     #[cfg(feature = "pjrt")]
     Pjrt(xla::PjRtLoadedExecutable),
 }
@@ -191,13 +199,15 @@ impl LoadedKernel {
             KernelExec::Interp(k) => k.execute(inputs),
             KernelExec::Sharded(k) => k.execute(inputs),
             KernelExec::Graph(k) => k.execute(inputs),
+            KernelExec::ShardedGraph(k) => k.execute(inputs),
             #[cfg(feature = "pjrt")]
             KernelExec::Pjrt(exe) => self.execute_pjrt(exe, inputs),
         }
     }
 
-    /// The sharding plan this kernel executes under, when loaded on the
-    /// sharded backend.
+    /// The sharding plan this kernel executes under, when loaded as a
+    /// *single kernel* on the sharded backend (graph artifacts report a
+    /// [`LoadedKernel::graph_shard_plan`] instead).
     pub fn shard_plan(&self) -> Option<&ShardPlan> {
         match &self.exec {
             KernelExec::Sharded(k) => Some(k.plan()),
@@ -205,11 +215,41 @@ impl LoadedKernel {
         }
     }
 
+    /// The graph-level sharding plan, when this artifact is a dataflow
+    /// graph loaded on the sharded backend.
+    pub fn graph_shard_plan(&self) -> Option<&GraphShardPlan> {
+        match &self.exec {
+            KernelExec::ShardedGraph(k) => Some(k.plan()),
+            _ => None,
+        }
+    }
+
     /// The prepared graph (fusion decision + memory plan) when this
-    /// artifact is a dataflow graph.
+    /// artifact is a dataflow graph on a single executor.
     pub fn graph_kernel(&self) -> Option<&GraphKernel> {
         match &self.exec {
             KernelExec::Graph(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    /// The sharded graph executor, when this artifact is a dataflow
+    /// graph partitioned across executors.
+    pub fn sharded_graph(&self) -> Option<&ShardedGraphKernel> {
+        match &self.exec {
+            KernelExec::ShardedGraph(k) => Some(k),
+            _ => None,
+        }
+    }
+
+    /// Whether batched *row* serving is sound for this artifact's graph
+    /// (`Some(false)` = a graph whose output rows depend on other batch
+    /// rows; `None` = not a graph artifact — single kernels apply their
+    /// own family-based guard in the coordinator).
+    pub fn graph_row_batchable(&self) -> Option<bool> {
+        match &self.exec {
+            KernelExec::Graph(k) => Some(k.row_batchable()),
+            KernelExec::ShardedGraph(k) => Some(k.row_batchable()),
             _ => None,
         }
     }
@@ -416,25 +456,31 @@ impl Runtime {
         }
         let spec = self.spec(name)?.clone();
         let exec = if let Some(gfile) = &spec.graph {
-            // graph artifacts execute on the interp backend (single
-            // executor): the fusion planner + memplan already remove the
-            // cross-kernel DRAM round trips; sharding a graph is a
-            // follow-on (see ROADMAP)
             match &self.backend {
                 ExecBackend::Interp(opts) => {
-                    KernelExec::Graph(self.load_graph(&spec, gfile, opts)?)
+                    let graph = self.read_graph(&spec, gfile)?;
+                    KernelExec::Graph(
+                        GraphKernel::prepare(&graph, opts, &self.dir)
+                            .map_err(|e| anyhow!("{}: {}", spec.name, e))?,
+                    )
                 }
-                ExecBackend::Sharded(_) => bail!(
-                    "{}: graph artifacts serve single-shard for now; drop --shards \
-                     (or load with the interp backend)",
-                    name
-                ),
+                ExecBackend::Sharded(opts) => {
+                    // the whole fused block runs per shard: one partition
+                    // axis for the graph, intermediates stay shard-local
+                    let graph = self.read_graph(&spec, gfile)?;
+                    KernelExec::ShardedGraph(
+                        ShardedGraphKernel::prepare(&graph, opts, &self.dir)
+                            .map_err(|e| anyhow!("{}: {}", spec.name, e))?,
+                    )
+                }
                 #[cfg(feature = "pjrt")]
-                ExecBackend::Pjrt => KernelExec::Graph(self.load_graph(
-                    &spec,
-                    gfile,
-                    &InterpOptions::default(),
-                )?),
+                ExecBackend::Pjrt => {
+                    let graph = self.read_graph(&spec, gfile)?;
+                    KernelExec::Graph(
+                        GraphKernel::prepare(&graph, &InterpOptions::default(), &self.dir)
+                            .map_err(|e| anyhow!("{}: {}", spec.name, e))?,
+                    )
+                }
             }
         } else {
             match &self.backend {
@@ -476,15 +522,10 @@ impl Runtime {
         Ok(k)
     }
 
-    /// Read, validate and prepare a graph artifact: the graph file must
-    /// exist in the artifact directory and agree with the manifest's
-    /// input/output shapes before the fusion planner runs.
-    fn load_graph(
-        &self,
-        spec: &ArtifactSpec,
-        gfile: &str,
-        opts: &InterpOptions,
-    ) -> Result<GraphKernel> {
+    /// Read and validate a graph artifact file: it must exist in the
+    /// artifact directory and agree with the manifest's input/output
+    /// shapes before any planner runs.
+    fn read_graph(&self, spec: &ArtifactSpec, gfile: &str) -> Result<KernelGraph> {
         let graph = KernelGraph::load(self.dir.join(gfile))
             .map_err(|e| anyhow!("{}: {}", spec.name, e))?;
         if graph.input_shapes() != spec.in_shapes {
@@ -504,8 +545,7 @@ impl Runtime {
                 gout
             );
         }
-        GraphKernel::prepare(&graph, opts, &self.dir)
-            .map_err(|e| anyhow!("{}: {}", spec.name, e))
+        Ok(graph)
     }
 
     /// Convenience: load + execute.

@@ -1,0 +1,1149 @@
+//! Graph sharding: plan and execute one whole [`KernelGraph`] across N
+//! parallel executors — scatter once, run the fused block per shard,
+//! gather once.
+//!
+//! The single-kernel planner ([`crate::shard::plan`]) partitions one
+//! kernel's tile grid; this module lifts the same decision to a *block*:
+//! one partition axis is chosen for the entire graph, every shard
+//! receives a sliced sub-graph (same nodes, scaled shapes), and
+//! intermediates stay shard-local — they are produced, fused and
+//! buffer-pooled inside each shard's [`GraphKernel`] and never cross the
+//! interconnect. Only the graph inputs scatter and the single graph
+//! output gathers.
+//!
+//! ## The partition axis
+//!
+//! A [`batch-axis analysis`](plan_graph) (a generalization of
+//! `KernelGraph::row_batchable`) tracks where dim 0 of graph input 0 —
+//! the block's batch axis — lives in every value:
+//!
+//! * a GEMM propagates it from its A rows to its output rows (B must be
+//!   a replicated weight);
+//! * a dequant-GEMM moves it to dim 1 of its transposed output;
+//! * flash attention / flash decode carry it through the `batch*heads`
+//!   grid axis, and *demand* that their K/V operands slice identically
+//!   (a KV cache is per-stream state, so it scatters with the streams);
+//! * element-wise ops pass it through (a residual operand must carry it
+//!   the same way; a feature-dim bias replicates).
+//!
+//! Row-major reshapes along typed edges keep the axis when it stays
+//! leading (`[m, h*d] -> [m*h', 1, d]`-style views); anything that moves
+//! the batch off the leading dimension — e.g. `attention_block`'s
+//! `[seq, d] -> [1, seq, d]` single-head view, whose rows the flash
+//! kernel then mixes — rejects the strategy with a reason.
+//!
+//! The strategy is reported as `row_parallel` when only GEMM-family
+//! nodes ride the axis (MLP blocks: data-parallel rows) and
+//! `head_parallel` when an attention-family node does (decode blocks:
+//! the axis is the flash grid's batch*heads dimension).
+//!
+//! ## Cost and feasibility
+//!
+//! Each candidate partition is costed like the single-kernel planner:
+//! the *fused* per-shard graph cost from `graph::fuse::plan` (which
+//! builds every node's real tile program, so planner feasibility equals
+//! execution feasibility — an over-split shard whose GEMM rows or decode
+//! heads fall below the hardware tile is rejected here with the
+//! builder's reason), taken over the slowest distinct sub-shape, plus
+//! one scatter + one gather communication term over the modeled
+//! NVLink-class link.
+//!
+//! ## Execution
+//!
+//! [`ShardedGraphKernel`] prepares one [`GraphKernel`] per *distinct*
+//! shard sub-shape (uniform splits share one kernel — and its fusion
+//! decision, tuned per-node tile configs and buffer memplan — across all
+//! shard threads), scatters request inputs per the plan's
+//! [`InputSlice`]s (replicated weights are borrowed, not copied),
+//! executes every shard on its own `std::thread::scope` thread, and
+//! concatenates the shard outputs along the output's batch dimension.
+//!
+//! ```
+//! use tilelang::graph::ir::mlp_block;
+//! use tilelang::runtime::InterpOptions;
+//! use tilelang::shard::graph::{plan_graph, GraphStrategy, ShardedGraphKernel};
+//! use tilelang::sim::device::Device;
+//! use tilelang::workloads::matmul::test_data;
+//!
+//! // plan a whole MLP block across 2 executors...
+//! let g = mlp_block(32, 32, 32);
+//! let plan = plan_graph(&g, 2, &Device::h100()).unwrap();
+//! assert_eq!(plan.shards(), 2);
+//! assert_eq!(plan.strategy, GraphStrategy::RowParallel);
+//!
+//! // ...execute it sharded, and compare to the reference oracle
+//! let opts = InterpOptions { tune: false, ..Default::default() };
+//! let kernel = ShardedGraphKernel::from_plan(&g, plan, &opts, std::env::temp_dir()).unwrap();
+//! let inputs = vec![
+//!     test_data(32 * 32, 1), // X
+//!     test_data(32 * 32, 2), // W1
+//!     test_data(32, 3),      // B1
+//!     test_data(32 * 32, 4), // W2
+//!     test_data(32, 5),      // B2
+//! ];
+//! let got = kernel.execute(&inputs).unwrap();
+//! let want = g.reference_execute(&inputs).unwrap();
+//! for (g_, w) in got.iter().zip(&want) {
+//!     assert!((g_ - w).abs() < 0.06 + 0.02 * w.abs());
+//! }
+//! ```
+
+use std::borrow::Cow;
+use std::fmt;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::graph::exec::GraphKernel;
+use crate::graph::fuse;
+use crate::graph::ir::{kernel_input_count, KernelGraph, NodeOp, ValueRef};
+use crate::runtime::{InterpOptions, WorkloadKind};
+use crate::shard::exec::{slice_tensor, ShardedOptions};
+use crate::shard::plan::{link_gbps, split_spans, InputSlice};
+use crate::sim::device::Device;
+use crate::workloads::epilogue::EpilogueOp;
+use crate::{anyhow, bail};
+
+/// How the block partitions, named by what rides the axis: pure
+/// GEMM-family graphs split their data rows, graphs with an
+/// attention-family node on the axis split the flash grid's batch*heads
+/// dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphStrategy {
+    RowParallel,
+    HeadParallel,
+}
+
+impl fmt::Display for GraphStrategy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            GraphStrategy::RowParallel => "row_parallel",
+            GraphStrategy::HeadParallel => "head_parallel",
+        })
+    }
+}
+
+/// Where a value carries the block's batch axis: slicing batch units
+/// `[s0, s1)` slices the value's `dim` at `[s0 * unit, s1 * unit)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct Axis {
+    dim: usize,
+    unit: i64,
+}
+
+/// One shard's slice of the block.
+#[derive(Clone, Debug)]
+pub struct GraphShardPart {
+    pub index: usize,
+    /// Per graph input (manifest order): slice or replicate.
+    pub inputs: Vec<InputSlice>,
+    /// The sliced sub-graph this shard executes (same nodes and fusion
+    /// opportunities, scaled shapes).
+    pub graph: KernelGraph,
+}
+
+/// A complete sharding decision for one dataflow graph.
+#[derive(Clone, Debug)]
+pub struct GraphShardPlan {
+    pub graph_name: String,
+    pub strategy: GraphStrategy,
+    /// Batch extent (rows of graph input 0) being partitioned.
+    pub batch: i64,
+    /// `(start, len)` of each shard's batch span, in input-0 rows.
+    pub spans: Vec<(i64, i64)>,
+    pub parts: Vec<GraphShardPart>,
+    /// Output dimension the shard outputs concatenate along (0 for
+    /// row-major leading concat; 1 for the transposed dequant output).
+    pub concat_dim: usize,
+    /// Modeled *fused* graph time of the slowest shard, microseconds
+    /// (shards run in parallel).
+    pub kernel_us: f64,
+    /// Modeled scatter + gather communication time, microseconds.
+    pub comm_us: f64,
+}
+
+impl GraphShardPlan {
+    pub fn shards(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Total modeled time the planner minimizes.
+    pub fn cost_us(&self) -> f64 {
+        self.kernel_us + self.comm_us
+    }
+
+    /// One-line human description for CLI / serve output.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} x{} (spans {:?}, gather concat dim {}), modeled {:.1} us slowest shard \
+             + {:.1} us comm",
+            self.strategy,
+            self.shards(),
+            self.spans,
+            self.concat_dim,
+            self.kernel_us,
+            self.comm_us
+        )
+    }
+}
+
+/// The per-value batch-axis assignment of one graph (see module docs).
+struct BatchFlow {
+    /// Per graph input: `Some` = sliced along the axis, `None` =
+    /// replicated to every shard.
+    inputs: Vec<Option<Axis>>,
+    /// Per node output.
+    nodes: Vec<Option<Axis>>,
+    /// Per node, per operand: the axis in the operand's *view*
+    /// coordinates (`in_shapes[k]`), for sub-graph shape scaling.
+    views: Vec<Vec<Option<Axis>>>,
+    /// Whether any attention-family node rides the axis.
+    attention_on_axis: bool,
+    /// Minimum batch-span granule (input-0 rows) so every per-shard
+    /// kernel keeps whole hardware tiles.
+    granule: i64,
+}
+
+fn gcd(a: i64, b: i64) -> i64 {
+    if b == 0 {
+        a
+    } else {
+        gcd(b, a % b)
+    }
+}
+
+fn lcm(a: i64, b: i64) -> i64 {
+    a / gcd(a, b) * b
+}
+
+/// Translate a producer-side axis through a row-major reshape into the
+/// consumer's view coordinates. Identity views keep the axis; a real
+/// reshape only preserves it when it stays on the leading dimension.
+fn view_axis(
+    producer: Option<Axis>,
+    producer_shape: &[i64],
+    view: &[i64],
+    batch: i64,
+) -> Result<Option<Axis>, String> {
+    if view == producer_shape {
+        return Ok(producer);
+    }
+    match producer {
+        None => Ok(None),
+        Some(Axis { dim: 0, .. }) => {
+            if view[0] % batch != 0 {
+                return Err(format!(
+                    "reshape {:?} -> {:?} moves the batch axis off the leading dim",
+                    producer_shape, view
+                ));
+            }
+            Ok(Some(Axis {
+                dim: 0,
+                unit: view[0] / batch,
+            }))
+        }
+        Some(Axis { dim, .. }) => Err(format!(
+            "batch axis lives on dim {} of {:?}; reshaped views are only \
+             supported for a leading batch axis",
+            dim, producer_shape
+        )),
+    }
+}
+
+/// Require graph input `idx` to scatter along `axis` (or fail on a
+/// conflicting earlier decision).
+fn require_input_axis(
+    flow_inputs: &mut [Option<Axis>],
+    denied: &[Option<String>],
+    idx: usize,
+    axis: Axis,
+    why: &str,
+) -> Result<(), String> {
+    if let Some(user) = &denied[idx] {
+        return Err(format!(
+            "input {} must scatter with the batch ({}) but {} needs it replicated",
+            idx, why, user
+        ));
+    }
+    match flow_inputs[idx] {
+        None => {
+            flow_inputs[idx] = Some(axis);
+            Ok(())
+        }
+        Some(existing) if existing == axis => Ok(()),
+        Some(existing) => Err(format!(
+            "input {} is sliced two different ways ({:?} vs {:?})",
+            idx, existing, axis
+        )),
+    }
+}
+
+/// Record that graph input `idx` must be replicated (weights); fails if
+/// it was already required to scatter.
+fn deny_input_axis(
+    flow_inputs: &[Option<Axis>],
+    denied: &mut [Option<String>],
+    idx: usize,
+    why: &str,
+) -> Result<(), String> {
+    if flow_inputs[idx].is_some() {
+        return Err(format!(
+            "input {} carries the batch axis but {} needs it replicated",
+            idx, why
+        ));
+    }
+    if denied[idx].is_none() {
+        denied[idx] = Some(why.to_string());
+    }
+    Ok(())
+}
+
+/// The axis of one operand value (input or earlier node), translated
+/// into the operand's view shape. For *input* operands whose axis is not
+/// yet decided, `demand` assigns it (attention caches, sliced residuals).
+#[allow(clippy::too_many_arguments)]
+fn operand_axis(
+    g: &KernelGraph,
+    flow_inputs: &mut [Option<Axis>],
+    flow_nodes: &[Option<Axis>],
+    denied: &[Option<String>],
+    v: ValueRef,
+    view: &[i64],
+    batch: i64,
+    demand: Option<(Axis, &str)>,
+) -> Result<Option<Axis>, String> {
+    let (current, shape): (Option<Axis>, &[i64]) = match v {
+        ValueRef::Input(i) => (flow_inputs[i], &g.inputs[i].shape),
+        ValueRef::Node(j) => (flow_nodes[j], &g.nodes[j].out_shape),
+    };
+    let viewed = view_axis(current, shape, view, batch)?;
+    match (viewed, demand) {
+        (Some(a), _) => Ok(Some(a)),
+        (None, Some((want, why))) => {
+            // only undecided *inputs* can still be assigned; a node that
+            // does not carry the axis cannot be re-sliced
+            let ValueRef::Input(i) = v else {
+                return Err(format!(
+                    "{} needs a batch-sliced operand, but the value does not carry \
+                     the batch axis",
+                    why
+                ));
+            };
+            if view != shape {
+                return Err(format!(
+                    "{} needs input {} sliced, but it is consumed through a reshape",
+                    why, i
+                ));
+            }
+            if shape[0] % batch != 0 || shape[0] / batch != want.unit || want.dim != 0 {
+                return Err(format!(
+                    "{} needs input {} sliced as {:?}, which its shape {:?} cannot \
+                     satisfy over batch {}",
+                    why, i, want, shape, batch
+                ));
+            }
+            require_input_axis(flow_inputs, denied, i, want, why)?;
+            Ok(Some(want))
+        }
+        (None, None) => Ok(None),
+    }
+}
+
+/// Walk one node's epilogue list (pre-seeded graphs), applying the
+/// element-wise operand rules against the node's output axis. Returns
+/// the view axes of the epilogue operands (aligned with
+/// `inputs[base..]`).
+#[allow(clippy::too_many_arguments)]
+fn epilogue_axes(
+    g: &KernelGraph,
+    flow_inputs: &mut [Option<Axis>],
+    flow_nodes: &[Option<Axis>],
+    denied: &mut [Option<String>],
+    node_idx: usize,
+    base: usize,
+    out_axis: Option<Axis>,
+    batch: i64,
+) -> Result<Vec<Option<Axis>>, String> {
+    let node = &g.nodes[node_idx];
+    let mut views = Vec::new();
+    let mut next = base;
+    for ep in &node.epilogues {
+        if !ep.takes_operand() {
+            continue;
+        }
+        let v = node.inputs[next];
+        let view = &node.in_shapes[next];
+        let axis = ep_operand_axis(
+            g,
+            flow_inputs,
+            flow_nodes,
+            denied,
+            ep,
+            v,
+            view,
+            out_axis,
+            batch,
+            &node.name,
+        )?;
+        views.push(axis);
+        next += 1;
+    }
+    Ok(views)
+}
+
+/// The element-wise operand rule shared by standalone element-wise nodes
+/// and fused epilogues: a residual scatters exactly like the output; a
+/// bias replicates unless it indexes the batch-carrying dim, in which
+/// case it slices.
+#[allow(clippy::too_many_arguments)]
+fn ep_operand_axis(
+    g: &KernelGraph,
+    flow_inputs: &mut [Option<Axis>],
+    flow_nodes: &[Option<Axis>],
+    denied: &mut [Option<String>],
+    ep: &EpilogueOp,
+    v: ValueRef,
+    view: &[i64],
+    out_axis: Option<Axis>,
+    batch: i64,
+    node_name: &str,
+) -> Result<Option<Axis>, String> {
+    match ep {
+        EpilogueOp::ResidualAdd => match out_axis {
+            Some(a) => {
+                let why = format!("{}'s residual operand", node_name);
+                let got = operand_axis(
+                    g,
+                    flow_inputs,
+                    flow_nodes,
+                    denied,
+                    v,
+                    view,
+                    batch,
+                    Some((a, why.as_str())),
+                )?;
+                if got != Some(a) {
+                    return Err(format!(
+                        "{}: residual operand axis {:?} does not match the output's {:?}",
+                        node_name, got, a
+                    ));
+                }
+                Ok(got)
+            }
+            None => {
+                let got =
+                    operand_axis(g, flow_inputs, flow_nodes, denied, v, view, batch, None)?;
+                if got.is_some() {
+                    return Err(format!(
+                        "{}: residual operand carries the batch axis but the node's \
+                         output is replicated",
+                        node_name
+                    ));
+                }
+                Ok(None)
+            }
+        },
+        EpilogueOp::BiasAdd { dim } => {
+            match out_axis {
+                Some(a) if a.dim == *dim => {
+                    // bias over the batch-carrying dim: slice it with the
+                    // same unit (rank-1 operand, so its dim 0)
+                    let want = Axis { dim: 0, unit: a.unit };
+                    let why = format!("{}'s batch-dim bias", node_name);
+                    operand_axis(
+                        g,
+                        flow_inputs,
+                        flow_nodes,
+                        denied,
+                        v,
+                        view,
+                        batch,
+                        Some((want, why.as_str())),
+                    )
+                }
+                _ => {
+                    // feature-dim bias: a replicated weight
+                    if let ValueRef::Input(i) = v {
+                        let why = format!("{}'s feature bias", node_name);
+                        deny_input_axis(flow_inputs, denied, i, &why)?;
+                    }
+                    Ok(None)
+                }
+            }
+        }
+        EpilogueOp::Activation(_) | EpilogueOp::Scale(_) => Ok(None),
+    }
+}
+
+/// Run the batch-axis analysis (module docs) over `g`.
+fn analyze(g: &KernelGraph) -> Result<BatchFlow, String> {
+    if g.inputs.is_empty() {
+        return Err("graph has no inputs to partition".to_string());
+    }
+    let batch = g.inputs[0].shape[0];
+    let mut flow_inputs: Vec<Option<Axis>> = vec![None; g.inputs.len()];
+    let mut denied: Vec<Option<String>> = vec![None; g.inputs.len()];
+    // the partition axis is *defined* as dim 0 of graph input 0
+    flow_inputs[0] = Some(Axis { dim: 0, unit: 1 });
+    let mut flow_nodes: Vec<Option<Axis>> = vec![None; g.nodes.len()];
+    let mut views: Vec<Vec<Option<Axis>>> = Vec::with_capacity(g.nodes.len());
+    let mut attention_on_axis = false;
+    let mut granule = 1i64;
+
+    for (i, node) in g.nodes.iter().enumerate() {
+        let mut node_views: Vec<Option<Axis>> = vec![None; node.inputs.len()];
+        let out_axis: Option<Axis> = match &node.op {
+            NodeOp::Kernel(kind) => {
+                let base = kernel_input_count(kind);
+                let primary = operand_axis(
+                    g,
+                    &mut flow_inputs,
+                    &flow_nodes,
+                    &denied,
+                    node.inputs[0],
+                    &node.in_shapes[0],
+                    batch,
+                    None,
+                )?;
+                let out = match kind {
+                    WorkloadKind::Gemm => {
+                        if let ValueRef::Input(bi) = node.inputs[1] {
+                            deny_input_axis(
+                                &flow_inputs,
+                                &mut denied,
+                                bi,
+                                &format!("{}'s weight operand", node.name),
+                            )?;
+                        } else if let ValueRef::Node(bj) = node.inputs[1] {
+                            if flow_nodes[bj].is_some() {
+                                return Err(format!(
+                                    "{}: the B operand carries the batch axis",
+                                    node.name
+                                ));
+                            }
+                        }
+                        match primary {
+                            Some(a @ Axis { dim: 0, unit }) => {
+                                node_views[0] = Some(a);
+                                // per-shard GEMM rows must stay whole
+                                // 16-row hardware tiles
+                                granule = lcm(granule, 16 / gcd(16, unit));
+                                Some(Axis { dim: 0, unit })
+                            }
+                            Some(a) => {
+                                return Err(format!(
+                                    "{}: gemm rows carry the batch on dim {} (only a \
+                                     leading batch axis is splittable)",
+                                    node.name, a.dim
+                                ))
+                            }
+                            None => None,
+                        }
+                    }
+                    WorkloadKind::Dequant { .. } => {
+                        for (k, what) in [(1usize, "packed weights"), (2, "scales")] {
+                            if let ValueRef::Input(bi) = node.inputs[k] {
+                                deny_input_axis(
+                                    &flow_inputs,
+                                    &mut denied,
+                                    bi,
+                                    &format!("{}'s {}", node.name, what),
+                                )?;
+                            } else if let ValueRef::Node(bj) = node.inputs[k] {
+                                if flow_nodes[bj].is_some() {
+                                    return Err(format!(
+                                        "{}: the {} operand carries the batch axis",
+                                        node.name, what
+                                    ));
+                                }
+                            }
+                        }
+                        match primary {
+                            Some(a @ Axis { dim: 0, unit }) => {
+                                node_views[0] = Some(a);
+                                granule = lcm(granule, 16 / gcd(16, unit));
+                                // the dequant output is transposed:
+                                // activations' rows land on dim 1
+                                Some(Axis { dim: 1, unit })
+                            }
+                            Some(a) => {
+                                return Err(format!(
+                                    "{}: dequant activations carry the batch on dim {}",
+                                    node.name, a.dim
+                                ))
+                            }
+                            None => None,
+                        }
+                    }
+                    WorkloadKind::FlashAttention { .. } | WorkloadKind::FlashDecode => {
+                        match primary {
+                            Some(a @ Axis { dim: 0, unit }) => {
+                                node_views[0] = Some(a);
+                                attention_on_axis = true;
+                                // K/V must scatter with Q's batch*heads
+                                // rows: same extent on their dim 0
+                                for k in [1usize, 2] {
+                                    let why = format!("{}'s KV operand", node.name);
+                                    let got = operand_axis(
+                                        g,
+                                        &mut flow_inputs,
+                                        &flow_nodes,
+                                        &denied,
+                                        node.inputs[k],
+                                        &node.in_shapes[k],
+                                        batch,
+                                        Some((a, why.as_str())),
+                                    )?;
+                                    if got != Some(a) {
+                                        return Err(format!(
+                                            "{}: KV operand {} axis {:?} does not \
+                                             match Q's {:?}",
+                                            node.name, k, got, a
+                                        ));
+                                    }
+                                    node_views[k] = got;
+                                }
+                                Some(Axis { dim: 0, unit })
+                            }
+                            Some(a) => {
+                                return Err(format!(
+                                    "{}: attention batch*heads carry the batch on dim {}",
+                                    node.name, a.dim
+                                ))
+                            }
+                            None => {
+                                // a fully replicated attention node: K/V
+                                // must not carry either
+                                for k in [1usize, 2] {
+                                    let got = operand_axis(
+                                        g,
+                                        &mut flow_inputs,
+                                        &flow_nodes,
+                                        &denied,
+                                        node.inputs[k],
+                                        &node.in_shapes[k],
+                                        batch,
+                                        None,
+                                    )?;
+                                    if got.is_some() {
+                                        return Err(format!(
+                                            "{}: KV operand carries the batch axis but \
+                                             Q is replicated",
+                                            node.name
+                                        ));
+                                    }
+                                }
+                                None
+                            }
+                        }
+                    }
+                    WorkloadKind::ChunkState | WorkloadKind::ChunkScan => {
+                        return Err(format!(
+                            "{}: {} nodes are not graph-shardable yet",
+                            node.name,
+                            kind.tag()
+                        ))
+                    }
+                };
+                // fused epilogue operands (pre-seeded graphs)
+                let ep_views = epilogue_axes(
+                    g,
+                    &mut flow_inputs,
+                    &flow_nodes,
+                    &mut denied,
+                    i,
+                    base,
+                    out,
+                    batch,
+                )?;
+                for (off, a) in ep_views.into_iter().enumerate() {
+                    node_views[base + off] = a;
+                }
+                out
+            }
+            NodeOp::Elementwise(op) => {
+                let primary = operand_axis(
+                    g,
+                    &mut flow_inputs,
+                    &flow_nodes,
+                    &denied,
+                    node.inputs[0],
+                    &node.in_shapes[0],
+                    batch,
+                    None,
+                )?;
+                node_views[0] = primary;
+                if let (Some(v), Some(view)) = (node.inputs.get(1), node.in_shapes.get(1)) {
+                    node_views[1] = ep_operand_axis(
+                        g,
+                        &mut flow_inputs,
+                        &flow_nodes,
+                        &mut denied,
+                        op,
+                        *v,
+                        view,
+                        primary,
+                        batch,
+                        &node.name,
+                    )?;
+                }
+                // element-wise outputs keep the primary's shape and axis
+                primary
+            }
+        };
+        flow_nodes[i] = out_axis;
+        views.push(node_views);
+    }
+    // the gathered output must carry the axis, or there is nothing to
+    // concatenate back
+    let out_axis = match g.output {
+        ValueRef::Input(i) => flow_inputs[i],
+        ValueRef::Node(j) => flow_nodes[j],
+    };
+    if out_axis.is_none() {
+        return Err("the graph output does not carry the partition axis".to_string());
+    }
+    Ok(BatchFlow {
+        inputs: flow_inputs,
+        nodes: flow_nodes,
+        views,
+        attention_on_axis,
+        granule,
+    })
+}
+
+/// Build the sliced sub-graph for one batch span (`start`, `len` in
+/// input-0 rows): every axis-carrying shape scales its batch dim, all
+/// other shapes stay intact.
+fn slice_graph(g: &KernelGraph, flow: &BatchFlow, len: i64) -> KernelGraph {
+    let mut sub = g.clone();
+    for (gi, axis) in sub.inputs.iter_mut().zip(&flow.inputs) {
+        if let Some(a) = axis {
+            gi.shape[a.dim] = len * a.unit;
+        }
+    }
+    for (ni, node) in sub.nodes.iter_mut().enumerate() {
+        if let Some(a) = flow.nodes[ni] {
+            node.out_shape[a.dim] = len * a.unit;
+        }
+        for (k, view_axis) in flow.views[ni].iter().enumerate() {
+            if let Some(a) = view_axis {
+                node.in_shapes[k][a.dim] = len * a.unit;
+            }
+        }
+    }
+    sub
+}
+
+/// Plan how `g` partitions across `shards` executors: run the batch-axis
+/// analysis, split the batch into granule-aligned spans, build + cost the
+/// per-shard sub-graphs (fused cost of the slowest distinct sub-shape +
+/// scatter/gather comm). Errors carry the structural or feasibility
+/// reason the block cannot shard.
+pub fn plan_graph(g: &KernelGraph, shards: usize, dev: &Device) -> Result<GraphShardPlan> {
+    g.validate()?;
+    let flow = analyze(g)
+        .map_err(|e| anyhow!("{}: graph sharding does not apply: {}", g.name, e))?;
+    let batch = g.inputs[0].shape[0];
+    let s = shards.max(1) as i64;
+    let spans = split_spans("batch rows", batch, s, flow.granule)
+        .map_err(|e| anyhow!("{}: {}", g.name, e))?;
+    let out_axis = match g.output {
+        ValueRef::Input(i) => flow.inputs[i],
+        ValueRef::Node(j) => flow.nodes[j],
+    }
+    .expect("analyze() guarantees an output axis");
+
+    let mut parts = Vec::with_capacity(spans.len());
+    for (i, &(start, len)) in spans.iter().enumerate() {
+        let sub = slice_graph(g, &flow, len);
+        sub.validate()
+            .map_err(|e| anyhow!("{}: shard {} sub-graph invalid: {}", g.name, i, e))?;
+        let inputs = flow
+            .inputs
+            .iter()
+            .map(|axis| match axis {
+                Some(a) => InputSlice::along(a.dim, start * a.unit, len * a.unit),
+                None => InputSlice::full(),
+            })
+            .collect();
+        parts.push(GraphShardPart {
+            index: i,
+            inputs,
+            graph: sub,
+        });
+    }
+
+    // feasibility + cost: the fused program of every distinct sub-shape
+    // must build (the same builder path the executor runs), and the
+    // compute phase is the slowest shard
+    let mut kernel_us = 0f64;
+    let mut seen: Vec<i64> = Vec::new();
+    for (&(_, len), part) in spans.iter().zip(&parts) {
+        if seen.contains(&len) {
+            continue;
+        }
+        seen.push(len);
+        let fp = fuse::plan(&part.graph, dev).map_err(|e| {
+            anyhow!(
+                "{}: shard of {} batch row(s) is infeasible: {}",
+                g.name,
+                len,
+                e
+            )
+        })?;
+        kernel_us = kernel_us.max(fp.fused_cost_us);
+    }
+    let comm_us = graph_comm_us(g, &flow, dev, spans.len() as f64);
+
+    Ok(GraphShardPlan {
+        graph_name: g.name.clone(),
+        strategy: if flow.attention_on_axis {
+            GraphStrategy::HeadParallel
+        } else {
+            GraphStrategy::RowParallel
+        },
+        batch,
+        spans,
+        parts,
+        concat_dim: out_axis.dim,
+        kernel_us,
+        comm_us,
+    })
+}
+
+/// All feasible graph partitions for `shards` executors (for the
+/// `tilelang plan` strategy table). One partition axis exists today —
+/// the block's batch axis — so this returns zero or one plan; the
+/// enumeration shape matches the single-kernel planner so more axes can
+/// slot in.
+pub fn enumerate_graph(g: &KernelGraph, shards: usize, dev: &Device) -> Vec<GraphShardPlan> {
+    plan_graph(g, shards, dev).ok().into_iter().collect()
+}
+
+/// Scatter + gather byte model over f32 wire tensors (mirrors the
+/// single-kernel planner's: sliced tensors move once in total,
+/// replicated weights once per shard, the concatenated output once).
+fn graph_comm_us(g: &KernelGraph, flow: &BatchFlow, dev: &Device, nparts: f64) -> f64 {
+    let mut bytes = 0f64;
+    for (gi, axis) in g.inputs.iter().zip(&flow.inputs) {
+        let full: i64 = gi.shape.iter().product();
+        bytes += full as f64 * 4.0 * if axis.is_none() { nparts } else { 1.0 };
+    }
+    if let Ok(out) = g.out_shape() {
+        bytes += out.iter().product::<i64>() as f64 * 4.0;
+    }
+    bytes / (link_gbps(dev) * 1e3)
+}
+
+/// A graph artifact resolved to per-shard [`GraphKernel`]s plus the
+/// scatter/gather plan connecting them — the graph analogue of
+/// [`crate::shard::exec::ShardedKernel`].
+pub struct ShardedGraphKernel {
+    plan: GraphShardPlan,
+    /// Distinct prepared graph kernels (uniform splits share one; each
+    /// carries its own fusion decision, tuned configs and memplan).
+    kernels: Vec<GraphKernel>,
+    /// Part index -> index into `kernels`.
+    part_kernel: Vec<usize>,
+    in_shapes: Vec<Vec<i64>>,
+    out_shape: Vec<i64>,
+    out_len: usize,
+    row_batchable: bool,
+}
+
+impl ShardedGraphKernel {
+    /// Plan the partition on the modeled device and prepare the
+    /// per-shard graph kernels.
+    pub fn prepare(
+        graph: &KernelGraph,
+        opts: &ShardedOptions,
+        dir: impl AsRef<Path>,
+    ) -> Result<ShardedGraphKernel> {
+        let dev = Device::by_name(&opts.interp.device).ok_or_else(|| {
+            anyhow!(
+                "sharded graph backend: unknown modeled device {:?}",
+                opts.interp.device
+            )
+        })?;
+        let plan = plan_graph(graph, opts.shards, &dev)?;
+        ShardedGraphKernel::from_plan(graph, plan, &opts.interp, dir)
+    }
+
+    /// Prepare per-shard kernels for an explicit plan (differential
+    /// tests pin partitions through this). Each *distinct* shard
+    /// sub-shape gets one [`GraphKernel`] — fusion planned, per-node
+    /// tile configs through the persistent tuning cache in `dir` (keyed
+    /// with the shard count), memplan enforced — shared across the
+    /// threads of identical shards.
+    pub fn from_plan(
+        graph: &KernelGraph,
+        plan: GraphShardPlan,
+        interp: &InterpOptions,
+        dir: impl AsRef<Path>,
+    ) -> Result<ShardedGraphKernel> {
+        let dir = dir.as_ref();
+        let mut interp = interp.clone();
+        interp.shards = plan.shards();
+        let mut kernels: Vec<GraphKernel> = Vec::new();
+        let mut kernel_lens: Vec<i64> = Vec::new();
+        let mut part_kernel = Vec::with_capacity(plan.shards());
+        for (&(_, len), part) in plan.spans.iter().zip(&plan.parts) {
+            let ki = match kernel_lens.iter().position(|&l| l == len) {
+                Some(ki) => ki,
+                None => {
+                    kernels.push(
+                        GraphKernel::prepare(&part.graph, &interp, dir)
+                            .map_err(|e| anyhow!("shard {}: {}", part.index, e))?,
+                    );
+                    kernel_lens.push(len);
+                    kernels.len() - 1
+                }
+            };
+            part_kernel.push(ki);
+        }
+        Ok(ShardedGraphKernel {
+            in_shapes: graph.input_shapes(),
+            out_shape: graph.out_shape()?.to_vec(),
+            out_len: graph.out_shape()?.iter().product::<i64>() as usize,
+            row_batchable: graph.row_batchable(),
+            plan,
+            kernels,
+            part_kernel,
+        })
+    }
+
+    /// The partition this kernel executes.
+    pub fn plan(&self) -> &GraphShardPlan {
+        &self.plan
+    }
+
+    /// Whether batched *row* serving is sound for the underlying graph
+    /// (see `KernelGraph::row_batchable`).
+    pub fn row_batchable(&self) -> bool {
+        self.row_batchable
+    }
+
+    /// One-line summary for serve output and logs (plan + the shared
+    /// per-shard kernel's fusion/memplan description).
+    pub fn describe(&self) -> String {
+        format!(
+            "{}: sharded {}; per-shard {}",
+            self.plan.graph_name,
+            self.plan.describe(),
+            self.kernels[self.part_kernel[0]].describe()
+        )
+    }
+
+    /// Scatter -> parallel per-shard graph execution -> concat gather.
+    pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        if inputs.len() != self.in_shapes.len() {
+            bail!(
+                "sharded graph expects {} inputs, got {}",
+                self.in_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (data, shape)) in inputs.iter().zip(&self.in_shapes).enumerate() {
+            let want = shape.iter().product::<i64>() as usize;
+            if data.len() != want {
+                bail!(
+                    "sharded graph input {} length {} != shape {:?}",
+                    i,
+                    data.len(),
+                    shape
+                );
+            }
+        }
+        // scatter: slice the batch-carrying tensors, borrow the rest
+        let mut shard_inputs: Vec<Vec<Cow<'_, [f32]>>> = Vec::with_capacity(self.plan.shards());
+        for part in &self.plan.parts {
+            let mut ins = Vec::with_capacity(inputs.len());
+            for (i, slice) in part.inputs.iter().enumerate() {
+                ins.push(match slice.dim {
+                    None => Cow::Borrowed(inputs[i].as_slice()),
+                    Some(d) => Cow::Owned(slice_tensor(
+                        &inputs[i],
+                        &self.in_shapes[i],
+                        d,
+                        slice.start,
+                        slice.len,
+                    )),
+                });
+            }
+            shard_inputs.push(ins);
+        }
+        // one thread per shard; identical shards share a prepared kernel
+        let outs: Vec<Result<Vec<f32>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = self
+                .part_kernel
+                .iter()
+                .zip(shard_inputs.iter())
+                .map(|(&ki, ins)| {
+                    let kernel = &self.kernels[ki];
+                    scope.spawn(move || {
+                        let refs: Vec<&[f32]> = ins.iter().map(|c| c.as_ref()).collect();
+                        kernel.execute_refs(&refs)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| {
+                    h.join()
+                        .unwrap_or_else(|_| Err(anyhow!("graph shard thread panicked")))
+                })
+                .collect()
+        });
+        let mut parts_data = Vec::with_capacity(outs.len());
+        for (i, r) in outs.into_iter().enumerate() {
+            parts_data.push(r.map_err(|e| anyhow!("shard {}: {}", i, e))?);
+        }
+        self.gather(parts_data)
+    }
+
+    /// Concatenate shard outputs along `plan.concat_dim` in shard order.
+    fn gather(&self, parts: Vec<Vec<f32>>) -> Result<Vec<f32>> {
+        let dim = self.plan.concat_dim;
+        if dim == 0 {
+            // leading-dim bands are contiguous in row-major order
+            let mut out = Vec::with_capacity(self.out_len);
+            for p in parts {
+                out.extend_from_slice(&p);
+            }
+            if out.len() != self.out_len {
+                bail!(
+                    "gathered graph output has {} elements, artifact expects {}",
+                    out.len(),
+                    self.out_len
+                );
+            }
+            return Ok(out);
+        }
+        // inner-dim concat (the transposed dequant output): interleave
+        // each shard's band into every outer row
+        let outer: i64 = self.out_shape[..dim].iter().product();
+        let inner: i64 = self.out_shape[dim + 1..].iter().product();
+        let full_extent = self.out_shape[dim];
+        let mut out = vec![0f32; self.out_len];
+        let mut offset = 0i64;
+        for (pi, (part, part_graph)) in
+            parts.iter().zip(self.plan.parts.iter().map(|p| &p.graph)).enumerate()
+        {
+            let extent = part_graph
+                .out_shape()
+                .map_err(|e| anyhow!("shard {}: {}", pi, e))?[dim];
+            if part.len() as i64 != outer * extent * inner {
+                bail!(
+                    "shard {} output has {} elements, its sub-graph expects {}",
+                    pi,
+                    part.len(),
+                    outer * extent * inner
+                );
+            }
+            for o in 0..outer {
+                let src = (o * extent * inner) as usize;
+                let dst = ((o * full_extent + offset) * inner) as usize;
+                let n = (extent * inner) as usize;
+                out[dst..dst + n].copy_from_slice(&part[src..src + n]);
+            }
+            offset += extent;
+        }
+        if offset != full_extent {
+            bail!(
+                "gathered bands cover {} of dim {} extent {}",
+                offset,
+                dim,
+                full_extent
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ir::{attention_block, decode_block, dequant_mlp_block, mlp_block};
+    use crate::workloads::dequant::WeightFormat;
+
+    fn h100() -> Device {
+        Device::h100()
+    }
+
+    #[test]
+    fn mlp_block_plans_row_parallel() {
+        let g = mlp_block(64, 64, 128);
+        let p = plan_graph(&g, 2, &h100()).expect("plan");
+        assert_eq!(p.strategy, GraphStrategy::RowParallel);
+        assert_eq!(p.spans, vec![(0, 32), (32, 32)]);
+        assert_eq!(p.concat_dim, 0);
+        // X slices, all four weights replicate
+        assert_eq!(p.parts[1].inputs[0], InputSlice::along(0, 32, 32));
+        for w in 1..5 {
+            assert_eq!(p.parts[1].inputs[w], InputSlice::full(), "input {}", w);
+        }
+        // the sub-graph is the same block at half the rows
+        assert_eq!(p.parts[0].graph.nodes.len(), g.nodes.len());
+        assert_eq!(p.parts[0].graph.inputs[0].shape, vec![32, 64]);
+        assert_eq!(p.parts[0].graph.out_shape().unwrap(), &[32, 64]);
+        assert!(p.kernel_us > 0.0 && p.comm_us > 0.0);
+        // uneven remainder spans hand out whole 16-row tiles
+        let p3 = plan_graph(&g, 3, &h100()).expect("plan x3");
+        assert_eq!(p3.spans, vec![(0, 32), (32, 16), (48, 16)]);
+    }
+
+    #[test]
+    fn decode_block_plans_head_parallel_with_scattered_caches() {
+        let g = decode_block(64, 16, 16, 64);
+        let p = plan_graph(&g, 2, &h100()).expect("plan");
+        assert_eq!(p.strategy, GraphStrategy::HeadParallel);
+        assert_eq!(p.concat_dim, 0);
+        // X and both caches scatter with the streams; weights replicate
+        assert_eq!(p.parts[1].inputs[0], InputSlice::along(0, 32, 32));
+        assert_eq!(p.parts[1].inputs[2], InputSlice::along(0, 32, 32));
+        assert_eq!(p.parts[1].inputs[3], InputSlice::along(0, 32, 32));
+        assert_eq!(p.parts[1].inputs[1], InputSlice::full());
+        assert_eq!(p.parts[1].inputs[4], InputSlice::full());
+        assert_eq!(p.parts[1].inputs[5], InputSlice::full());
+        // the per-shard attention keeps all 16 heads over 32 streams
+        let sub = &p.parts[0].graph;
+        assert_eq!(sub.nodes[1].in_shapes[0], vec![32, 16, 16]);
+        assert_eq!(sub.nodes[1].in_shapes[1], vec![32, 64, 16]);
+    }
+
+    #[test]
+    fn dequant_block_concatenates_along_dim_1() {
+        let g = dequant_mlp_block(64, 64, 64, 64, WeightFormat::Int4, 32);
+        let p = plan_graph(&g, 2, &h100()).expect("plan");
+        assert_eq!(p.strategy, GraphStrategy::RowParallel);
+        // the transposed dequant output carries the batch on dim 1
+        assert_eq!(p.concat_dim, 1);
+        assert_eq!(p.parts[0].graph.out_shape().unwrap(), &[64, 32]);
+        // packed weights, scales and the dim-0 bias replicate
+        assert_eq!(p.parts[1].inputs[3], InputSlice::full());
+        assert_eq!(p.parts[1].inputs[4], InputSlice::full());
+        assert_eq!(p.parts[1].inputs[5], InputSlice::full());
+    }
+
+    #[test]
+    fn attention_block_is_rejected_with_a_reason() {
+        // the single-head [seq, d] -> [1, seq, d] view moves the batch
+        // rows off the leading dim (and the flash kernel mixes them)
+        let g = attention_block(128, 64, false);
+        let err = plan_graph(&g, 2, &h100()).unwrap_err().to_string();
+        assert!(
+            err.contains("does not apply") && err.contains("leading"),
+            "{}",
+            err
+        );
+        assert!(enumerate_graph(&g, 2, &h100()).is_empty());
+    }
+
+    #[test]
+    fn over_split_blocks_are_rejected() {
+        // 64 rows = 4 gemm tiles: 5 shards cannot each hold one
+        let g = mlp_block(64, 64, 128);
+        let err = plan_graph(&g, 5, &h100()).unwrap_err().to_string();
+        assert!(err.contains("fewer than 5 shards"), "{}", err);
+    }
+}

@@ -1,18 +1,19 @@
-//! Multi-executor sharding: plan and execute one workload across N
-//! parallel devices/workers.
+//! Multi-executor sharding: plan and execute one workload — a single
+//! kernel or a whole dataflow graph — across N parallel
+//! devices/workers.
 //!
 //! The paper's thesis is that tiled dataflow makes kernel partitioning
 //! explicit and schedulable; this subsystem lifts the same idea one
 //! level up and partitions a workload's *tile grid* across executors:
 //!
-//! * [`plan`] — the sharding planner. Given a workload family, its
-//!   tensor shapes and a shard count, it enumerates the partition
-//!   strategies that apply to the family (row/data-parallel, split-K
-//!   with sum-reduction, head-parallel, chunk-parallel), costs each one
-//!   with the analytical device model (`sim::simulate_kernel` on the
-//!   per-shard sub-problem) plus a simple communication term, and picks
-//!   the cheapest — a [`plan::ShardPlan`] describing how every input is
-//!   scattered and how shard outputs recombine
+//! * [`plan`] — the single-kernel sharding planner. Given a workload
+//!   family, its tensor shapes and a shard count, it enumerates the
+//!   partition strategies that apply to the family (row/data-parallel,
+//!   split-K with sum-reduction, head-parallel, chunk-parallel), costs
+//!   each one with the analytical device model (`sim::simulate_kernel`
+//!   on the per-shard sub-problem) plus a simple communication term, and
+//!   picks the cheapest — a [`plan::ShardPlan`] describing how every
+//!   input is scattered and how shard outputs recombine
 //!   ([`plan::Collective`]: concat, head-concat or sum-reduce).
 //! * [`exec`] — the sharded execution backend. A
 //!   [`exec::ShardedKernel`] holds one prepared interpreter kernel per
@@ -20,10 +21,21 @@
 //!   tuning cache, keyed by shard count), scatters request inputs
 //!   according to the plan, executes all shards on parallel `std`
 //!   threads, and applies the gather/reduce collective.
+//! * [`graph`] — the graph analogue: [`graph::plan_graph`] picks one
+//!   partition axis for a whole `KernelGraph` (data-parallel rows for
+//!   MLP-style blocks, the flash grid's batch*heads axis for
+//!   attention/decode blocks) by tracking the batch axis through every
+//!   node, and [`graph::ShardedGraphKernel`] runs the fused block per
+//!   shard — scatter once, compute the whole block shard-locally
+//!   (intermediates never cross the interconnect), gather once.
 //!
-//! The runtime surfaces this as `ExecBackend::Sharded`, the coordinator
-//! as `Coordinator::start_sharded`, and the CLI as `serve --shards N` /
-//! `tilelang plan`. See `docs/ARCHITECTURE.md` ("Sharding layer").
+//! The runtime surfaces all of this as `ExecBackend::Sharded` (single
+//! kernels *and* graph artifacts), the coordinator as
+//! `Coordinator::start_sharded`, and the CLI as `serve --shards N`,
+//! `tilelang plan` and `tilelang graph --shards N`. See
+//! `docs/ARCHITECTURE.md` ("Sharding layer", "Graph sharding") and
+//! `docs/SERVING.md` for the operator flows.
 
 pub mod exec;
+pub mod graph;
 pub mod plan;

@@ -179,7 +179,9 @@ impl ShardPlan {
 pub fn strategies_for(kind: &WorkloadKind) -> &'static [Strategy] {
     match kind {
         WorkloadKind::Gemm => &[Strategy::RowParallel, Strategy::SplitK],
-        WorkloadKind::FlashAttention { .. } => &[Strategy::HeadParallel],
+        WorkloadKind::FlashAttention { .. } | WorkloadKind::FlashDecode => {
+            &[Strategy::HeadParallel]
+        }
         WorkloadKind::Dequant { .. } => &[Strategy::RowParallel],
         WorkloadKind::ChunkState | WorkloadKind::ChunkScan => &[Strategy::ChunkParallel],
     }
@@ -306,6 +308,42 @@ pub fn plan_with_strategy(
                     inputs: vec![InputSlice::along(0, start, len); 3],
                     in_shapes: vec![vec![len, seq, d]; 3],
                     out_shape: vec![len, seq, d],
+                })
+                .collect();
+            (parts, Collective::HeadConcat)
+        }
+        (WorkloadKind::FlashDecode, Strategy::HeadParallel) => {
+            // Q: [b, heads, d] (one query per stream*head), K/V cache:
+            // [b, kv, d] shared by each stream's heads — the sliceable
+            // axis is the stream batch, which is the flash grid's
+            // batch*heads analogue (heads never mix across streams)
+            if in_shapes.len() != 3 || in_shapes.iter().any(|sh| sh.len() != 3) {
+                bail!("flash_decode expects 3 rank-3 inputs, got {:?}", in_shapes);
+            }
+            let q = &in_shapes[0];
+            let (b, h, d) = (q[0], q[1], q[2]);
+            let kv = in_shapes[1][1];
+            if in_shapes[1] != vec![b, kv, d]
+                || in_shapes[2] != in_shapes[1]
+                || out_shape != q.as_slice()
+            {
+                bail!(
+                    "inconsistent flash_decode shapes (Q {:?}, K {:?}, V {:?}, out {:?})",
+                    q,
+                    in_shapes[1],
+                    in_shapes[2],
+                    out_shape
+                );
+            }
+            let spans = split_spans("streams", b, s, 1)?;
+            let parts = spans
+                .iter()
+                .enumerate()
+                .map(|(i, &(start, len))| ShardSpec {
+                    index: i,
+                    inputs: vec![InputSlice::along(0, start, len); 3],
+                    in_shapes: vec![vec![len, h, d], vec![len, kv, d], vec![len, kv, d]],
+                    out_shape: vec![len, h, d],
                 })
                 .collect();
             (parts, Collective::HeadConcat)
@@ -451,7 +489,12 @@ fn gemm_dims(in_shapes: &[Vec<i64>], out_shape: &[i64]) -> Result<(i64, i64, i64
 /// kernel needs (16 rows for GEMM dims — sub-16 shards pad back up to
 /// the instruction tile and just recompute the full problem; 1 for
 /// head/chunk dims). Returns `(start, len)` per shard.
-fn split_spans(name: &str, extent: i64, s: i64, granule: i64) -> Result<Vec<(i64, i64)>> {
+pub(crate) fn split_spans(
+    name: &str,
+    extent: i64,
+    s: i64,
+    granule: i64,
+) -> Result<Vec<(i64, i64)>> {
     if extent % granule != 0 {
         bail!(
             "{} = {} is not a multiple of the {}-wide hardware tile",
@@ -536,7 +579,7 @@ fn shard_kernel_us(kind: &WorkloadKind, part: &ShardSpec, dev: &Device) -> Resul
 
 /// Modeled executor-interconnect bandwidth: NVLink-class links run at
 /// roughly 1/8 of the device's HBM bandwidth.
-fn link_gbps(dev: &Device) -> f64 {
+pub(crate) fn link_gbps(dev: &Device) -> f64 {
     (dev.dram_gbps / 8.0).max(1.0)
 }
 
@@ -770,6 +813,32 @@ mod tests {
         // bh = 4, nchunks = 2: shard 1 takes state rows 4..8
         assert_eq!(p.parts[1].inputs[1], InputSlice::along(0, 4, 4));
         assert_eq!(p.parts[1].out_shape, vec![2, 128, 32]);
+    }
+
+    #[test]
+    fn flash_decode_shards_over_the_stream_batch() {
+        let p = plan(
+            &WorkloadKind::FlashDecode,
+            &[vec![4, 16, 16], vec![4, 64, 16], vec![4, 64, 16]],
+            &[4, 16, 16],
+            2,
+            &h100(),
+        )
+        .unwrap();
+        assert_eq!(p.strategy, Strategy::HeadParallel);
+        assert_eq!(p.collective, Collective::HeadConcat);
+        assert_eq!(p.parts[1].inputs[1], InputSlice::along(0, 2, 2));
+        assert_eq!(p.parts[1].in_shapes[0], vec![2, 16, 16]);
+        assert_eq!(p.parts[1].out_shape, vec![2, 16, 16]);
+        // more shards than streams: clean rejection, not a panic
+        assert!(plan(
+            &WorkloadKind::FlashDecode,
+            &[vec![2, 16, 16], vec![2, 64, 16], vec![2, 64, 16]],
+            &[2, 16, 16],
+            3,
+            &h100(),
+        )
+        .is_err());
     }
 
     #[test]

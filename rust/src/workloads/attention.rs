@@ -1,10 +1,15 @@
-//! Attention tile programs: FlashAttention-style MHA (Table 3 / Fig. 12)
-//! and the FlashMLA decode kernel (Fig. 18 / Fig. 14).
+//! Attention tile programs: FlashAttention-style MHA (Table 3 / Fig. 12),
+//! the FlashMLA decode kernel (Fig. 18 / Fig. 14), and the serving-side
+//! flash-decode kernel ([`flash_decode_program`]: one query per stream
+//! against a KV cache, MQA-style shared cache per stream).
 //!
-//! Both follow the paper's appendix kernels: online-softmax over a
+//! All follow the paper's appendix kernels: online-softmax over a
 //! pipelined KV loop, with `T.reduce_max/sum`, exp2 rescaling in
 //! `T.Parallel` bodies, and the S-tile staged through shared memory
-//! between the two GEMMs.
+//! between the two GEMMs. The flash and decode kernels also accept a
+//! fused epilogue list applied to the O accumulator before the copy-out
+//! (the graph layer's attention-family epilogues — e.g. a residual
+//! folded into the O tile).
 
 use crate::autotuner::{Tunable, TunableConfig};
 use crate::ir::builder::{store, KernelBuilder};
@@ -12,6 +17,7 @@ use crate::ir::dtype::DType;
 use crate::ir::expr::{Expr, UnOp};
 use crate::ir::program::{GemmWarpPolicy, ReduceKind, TileProgram};
 use crate::util::json::Json;
+use crate::workloads::epilogue::{declare_epilogue_params_rank3, emit_epilogues_rank3, EpilogueOp};
 use crate::workloads::shapes::{AttnShape, MlaShape};
 
 /// Attention tile configuration.
@@ -48,14 +54,39 @@ pub fn flash_attention_program(
     causal: bool,
     cfg: &AttnConfig,
 ) -> TileProgram {
+    flash_attention_program_ep(bh, seq_len, head_dim, causal, cfg, &[])
+}
+
+/// [`flash_attention_program`] with a fused epilogue: after the final
+/// softmax normalization the O accumulator tile takes the epilogue ops
+/// (activation, scale, residual-add against a full `[bh, seq, d]`
+/// operand) in registers before the single copy-out — the
+/// `graph::fuse` target for attention-family folds. Epilogue operand
+/// params follow Q/K/V and precede `O` (the runtime's
+/// `inputs..., output` contract). `BiasAdd` is not accepted: rank-3
+/// attention outputs have no rank-2 feature dim to broadcast along.
+pub fn flash_attention_program_ep(
+    bh: i64,
+    seq_len: i64,
+    head_dim: i64,
+    causal: bool,
+    cfg: &AttnConfig,
+    eps: &[EpilogueOp],
+) -> TileProgram {
     let (bm, bn, d) = (cfg.block_m, cfg.block_n, head_dim);
     assert!(seq_len % bm == 0 && seq_len % bn == 0);
     let scale = 1.0f64 / (head_dim as f64).sqrt() * std::f64::consts::LOG2_E;
 
-    let mut t = KernelBuilder::new("flash_attention", cfg.threads);
+    let name = if eps.is_empty() {
+        "flash_attention"
+    } else {
+        "flash_attention_ep"
+    };
+    let mut t = KernelBuilder::new(name, cfg.threads);
     let q = t.param("Q", &[bh, seq_len, d], DType::F16);
     let k = t.param("K", &[bh, seq_len, d], DType::F16);
     let v = t.param("V", &[bh, seq_len, d], DType::F16);
+    let ep_params = declare_epilogue_params_rank3(&mut t, eps, [bh, seq_len, d]);
     let o = t.param("O", &[bh, seq_len, d], DType::F16);
     let (bx, bz) = t.kernel2(seq_len / bm, bh);
     t.use_swizzle(8);
@@ -167,7 +198,187 @@ pub fn flash_attention_program(
                 * Expr::float(1.0).floordiv_f(Expr::load(logsum, vec![i.expr()])),
         )]
     });
+    emit_epilogues_rank3(
+        &mut t,
+        eps,
+        &ep_params,
+        acc_o,
+        [bm, d],
+        &[bz.expr(), bx.expr() * bm, Expr::int(0)],
+    );
     t.copy_out(acc_o, o, vec![bz.expr(), bx.expr() * bm, Expr::int(0)]);
+    t.finish()
+}
+
+/// Flash-decode tile configuration (the serving decode kernel's knobs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DecodeConfig {
+    /// Heads processed per block. Warp tiles hold whole 16x8 MMA tiles
+    /// along M, so `block_h` is a multiple of 16 and the kernel needs at
+    /// least 16 heads — the planner-side feasibility audit for
+    /// head-parallel shards lives in `runtime`'s `decode_config`.
+    pub block_h: i64,
+    /// KV-cache positions per pipelined loop step.
+    pub block_n: i64,
+    pub num_stages: usize,
+    pub threads: i64,
+}
+
+impl DecodeConfig {
+    /// Static default, narrowed to the shape: the widest feasible head
+    /// tile (16 or 32) and a KV tile that divides the cache length.
+    pub fn default_for(heads: i64, seqlen_kv: i64) -> DecodeConfig {
+        let block_h = if heads >= 32 && heads % 32 == 0 { 32 } else { 16 };
+        let block_n = if seqlen_kv % 32 == 0 { 32 } else { 16 };
+        DecodeConfig {
+            block_h,
+            block_n,
+            num_stages: 2,
+            // decode tiles are narrow ([block_h, d] accumulators); 2
+            // warps keep every warp split a whole-MMA-tile partition
+            threads: 64,
+        }
+    }
+}
+
+/// Build the serving flash-decode kernel: one query position per
+/// (stream, head) against a per-stream KV cache shared by all heads
+/// (MQA-style) — `Q: [batch, heads, d]`, `K,V: [batch, seqlen_kv, d]`,
+/// `O: [batch, heads, d]`. This is the m=1 decode analogue of
+/// [`flash_attention_program`], structured like the MLA kernel: one
+/// block handles `block_h` heads of one stream, so the score tile stays
+/// a full `[block_h, block_n]` MMA problem even though each head reads a
+/// single query row. The KV loop runs the same exp2 online softmax and
+/// is pipelined `num_stages` deep; the cache is attended in full (a
+/// decode step sees every cached position — causality is enforced by
+/// what the serving layer has appended, not by a mask).
+///
+/// `eps` fuses an epilogue list into the O accumulator before the
+/// copy-out (activation, scale, residual against a `[batch, heads, d]`
+/// operand) — the graph layer folds e.g. a block residual here instead
+/// of materializing the attention output.
+pub fn flash_decode_program(
+    batch: i64,
+    heads: i64,
+    seqlen_kv: i64,
+    head_dim: i64,
+    cfg: &DecodeConfig,
+    eps: &[EpilogueOp],
+) -> TileProgram {
+    let (bh, bn, d) = (cfg.block_h, cfg.block_n, head_dim);
+    assert!(
+        heads % bh == 0 && seqlen_kv % bn == 0,
+        "decode shape (heads {}, kv {}) not tileable by {}x{}",
+        heads,
+        seqlen_kv,
+        bh,
+        bn
+    );
+    let scale = 1.0f64 / (head_dim as f64).sqrt() * std::f64::consts::LOG2_E;
+
+    let name = if eps.is_empty() {
+        "flash_decode"
+    } else {
+        "flash_decode_ep"
+    };
+    let mut t = KernelBuilder::new(name, cfg.threads);
+    let q = t.param("Q", &[batch, heads, d], DType::F16);
+    let k = t.param("K", &[batch, seqlen_kv, d], DType::F16);
+    let v = t.param("V", &[batch, seqlen_kv, d], DType::F16);
+    let ep_params = declare_epilogue_params_rank3(&mut t, eps, [batch, heads, d]);
+    let o = t.param("O", &[batch, heads, d], DType::F16);
+    let (bx, by) = t.kernel2(batch, heads / bh);
+    t.use_swizzle(8);
+
+    let q_s = t.alloc_shared("Q_shared", &[bh, d], DType::F16);
+    let k_s = t.alloc_shared("K_shared", &[bn, d], DType::F16);
+    let v_s = t.alloc_shared("V_shared", &[bn, d], DType::F16);
+    let s_s = t.alloc_shared("S_shared", &[bh, bn], DType::F16);
+    let acc_s = t.alloc_fragment("acc_s", &[bh, bn], DType::F32);
+    let acc_o = t.alloc_fragment("acc_o", &[bh, d], DType::F32);
+    let m_prev = t.alloc_fragment("scores_max_prev", &[bh], DType::F32);
+    let m_cur = t.alloc_fragment("scores_max", &[bh], DType::F32);
+    let r_scale = t.alloc_fragment("scores_scale", &[bh], DType::F32);
+    let r_sum = t.alloc_fragment("scores_sum", &[bh], DType::F32);
+    let logsum = t.alloc_fragment("logsum", &[bh], DType::F32);
+
+    t.copy_in(q, vec![bx.expr(), by.expr() * bh, Expr::int(0)], q_s);
+    t.fill(acc_o, 0.0);
+    t.fill(logsum, 0.0);
+    t.fill(m_cur, f64::NEG_INFINITY);
+
+    t.pipelined(Expr::int(seqlen_kv / bn), cfg.num_stages, |t, ko| {
+        t.copy_in(k, vec![bx.expr(), ko.expr() * bn, Expr::int(0)], k_s);
+        t.copy_in(v, vec![bx.expr(), ko.expr() * bn, Expr::int(0)], v_s);
+        t.clear(acc_s);
+        // acc_s = Q @ K_cache^T: every head row scores the shared cache
+        t.gemm_opts(q_s, k_s, acc_s, false, true, GemmWarpPolicy::FullCol);
+        t.copy(m_cur, m_prev);
+        t.reduce(acc_s, m_cur, 1, ReduceKind::Max, false);
+        t.parallel(&[bh], |vrs| {
+            let i = &vrs[0];
+            vec![store(
+                r_scale,
+                vec![i.expr()],
+                Expr::un(
+                    UnOp::Exp2,
+                    Expr::load(m_prev, vec![i.expr()]) * scale
+                        - Expr::load(m_cur, vec![i.expr()]) * scale,
+                ),
+            )]
+        });
+        t.parallel(&[bh, bn], |vrs| {
+            let (i, j) = (&vrs[0], &vrs[1]);
+            vec![store(
+                acc_s,
+                vec![i.expr(), j.expr()],
+                Expr::un(
+                    UnOp::Exp2,
+                    Expr::load(acc_s, vec![i.expr(), j.expr()]) * scale
+                        - Expr::load(m_cur, vec![i.expr()]) * scale,
+                ),
+            )]
+        });
+        t.reduce(acc_s, r_sum, 1, ReduceKind::Sum, true);
+        t.parallel(&[bh], |vrs| {
+            let i = &vrs[0];
+            vec![store(
+                logsum,
+                vec![i.expr()],
+                Expr::load(logsum, vec![i.expr()]) * Expr::load(r_scale, vec![i.expr()])
+                    + Expr::load(r_sum, vec![i.expr()]),
+            )]
+        });
+        t.parallel(&[bh, d], |vrs| {
+            let (i, j) = (&vrs[0], &vrs[1]);
+            vec![store(
+                acc_o,
+                vec![i.expr(), j.expr()],
+                Expr::load(acc_o, vec![i.expr(), j.expr()])
+                    * Expr::load(r_scale, vec![i.expr()]),
+            )]
+        });
+        t.copy(acc_s, s_s);
+        t.gemm_opts(s_s, v_s, acc_o, false, false, GemmWarpPolicy::FullCol);
+    });
+    t.parallel(&[bh, d], |vrs| {
+        let (i, j) = (&vrs[0], &vrs[1]);
+        vec![store(
+            acc_o,
+            vec![i.expr(), j.expr()],
+            Expr::load(acc_o, vec![i.expr(), j.expr()])
+                * Expr::float(1.0).floordiv_f(Expr::load(logsum, vec![i.expr()])),
+        )]
+    });
+    emit_epilogues_rank3(
+        &mut t,
+        eps,
+        &ep_params,
+        acc_o,
+        [bh, d],
+        &[bx.expr(), by.expr() * bh, Expr::int(0)],
+    );
+    t.copy_out(acc_o, o, vec![bx.expr(), by.expr() * bh, Expr::int(0)]);
     t.finish()
 }
 
@@ -395,6 +606,94 @@ impl Tunable for AttentionTunable {
     }
 }
 
+impl TunableConfig for DecodeConfig {
+    fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("block_h".into(), Json::Num(self.block_h as f64)),
+            ("block_n".into(), Json::Num(self.block_n as f64)),
+            ("num_stages".into(), Json::Num(self.num_stages as f64)),
+            ("threads".into(), Json::Num(self.threads as f64)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Option<DecodeConfig> {
+        Some(DecodeConfig {
+            block_h: v.get("block_h")?.as_i64()?,
+            block_n: v.get("block_n")?.as_i64()?,
+            num_stages: v.get("num_stages")?.as_i64()?.max(1) as usize,
+            threads: v.get("threads")?.as_i64()?,
+        })
+    }
+}
+
+/// Flash-decode tuning problem: one query per (stream, head) against a
+/// per-stream KV cache.
+#[derive(Clone, Copy, Debug)]
+pub struct DecodeTunable {
+    pub batch: i64,
+    pub heads: i64,
+    pub seqlen_kv: i64,
+    pub head_dim: i64,
+}
+
+impl Tunable for DecodeTunable {
+    type Config = DecodeConfig;
+
+    fn workload(&self) -> &'static str {
+        "flash_decode"
+    }
+
+    fn shape_key(&self) -> Vec<i64> {
+        vec![self.batch, self.heads, self.seqlen_kv, self.head_dim]
+    }
+
+    fn dtype_key(&self) -> String {
+        DType::F16.to_string()
+    }
+
+    /// The feasibility contract the sharding planners rely on: head
+    /// tiles are whole 16-row MMA warp tiles, so fewer than 16 heads
+    /// (e.g. an over-split head-parallel shard) is rejected here rather
+    /// than producing an infeasible program downstream.
+    fn accepts(&self, cfg: &DecodeConfig) -> bool {
+        cfg.block_h >= 16
+            && cfg.block_h % 16 == 0
+            && cfg.block_n >= 16
+            && cfg.block_n % 16 == 0
+            && cfg.threads > 0
+            && cfg.threads % 32 == 0
+            && self.heads % cfg.block_h == 0
+            && self.seqlen_kv % cfg.block_n == 0
+            && self.head_dim % 16 == 0
+    }
+
+    fn candidates(&self) -> Vec<DecodeConfig> {
+        let mut out = Vec::new();
+        for bh in [16i64, 32, 64] {
+            for bn in [16i64, 32, 64] {
+                for stages in [1usize, 2] {
+                    for threads in [32i64, 64] {
+                        let cfg = DecodeConfig {
+                            block_h: bh,
+                            block_n: bn,
+                            num_stages: stages,
+                            threads,
+                        };
+                        if self.accepts(&cfg) {
+                            out.push(cfg);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    fn build(&self, cfg: &DecodeConfig) -> TileProgram {
+        flash_decode_program(self.batch, self.heads, self.seqlen_kv, self.head_dim, cfg, &[])
+    }
+}
+
 /// MLA decode tile configuration (Fig. 14 knobs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct MlaConfig {
@@ -543,6 +842,53 @@ pub fn reference_attention(
     out
 }
 
+/// Reference flash decode in f32: softmax over the full cache per
+/// (stream, head); every head of a stream shares that stream's cache.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_flash_decode(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    batch: i64,
+    heads: i64,
+    s_kv: i64,
+    d: i64,
+) -> Vec<f32> {
+    let (b_, h_, s_, d_) = (batch as usize, heads as usize, s_kv as usize, d as usize);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0f32; b_ * h_ * d_];
+    for b in 0..b_ {
+        let kb = &k[b * s_ * d_..(b + 1) * s_ * d_];
+        let vb = &v[b * s_ * d_..(b + 1) * s_ * d_];
+        for h in 0..h_ {
+            let qo = (b * h_ + h) * d_;
+            let mut scores = vec![0f32; s_];
+            let mut mx = f32::NEG_INFINITY;
+            for (j, sc) in scores.iter_mut().enumerate() {
+                let mut acc = 0f32;
+                for x in 0..d_ {
+                    acc += q[qo + x] * kb[j * d_ + x];
+                }
+                *sc = acc * scale;
+                mx = mx.max(*sc);
+            }
+            let mut denom = 0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            for x in 0..d_ {
+                let mut acc = 0f32;
+                for (j, sc) in scores.iter().enumerate() {
+                    acc += sc * vb[j * d_ + x];
+                }
+                out[qo + x] = acc / denom;
+            }
+        }
+    }
+    out
+}
+
 /// Reference MLA decode in f32.
 #[allow(clippy::too_many_arguments)]
 pub fn reference_mla(
@@ -657,6 +1003,128 @@ mod tests {
                 max_err
             );
         }
+    }
+
+    #[test]
+    fn flash_attention_o_epilogue_matches_reference() {
+        use crate::workloads::epilogue::{reference_apply, EpilogueOp};
+        let (bh, s, d) = (2i64, 128i64, 64i64);
+        let cfg = AttnConfig {
+            block_m: 32,
+            block_n: 32,
+            num_stages: 2,
+            threads: 128,
+        };
+        let eps = [EpilogueOp::ResidualAdd];
+        let p = flash_attention_program_ep(bh, s, d, false, &cfg, &eps);
+        assert_eq!(p.params.len(), 5); // Q, K, V, residual, O
+        let l = compile(&p, &Device::h100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+        let q = test_data(bh * s * d, 51);
+        let k = test_data(bh * s * d, 52);
+        let v = test_data(bh * s * d, 53);
+        let res = test_data(bh * s * d, 54);
+        let mut t = Tensors::new();
+        t.insert(p.params[0].id, q.clone());
+        t.insert(p.params[1].id, k.clone());
+        t.insert(p.params[2].id, v.clone());
+        t.insert(p.params[3].id, res.clone());
+        interp.run(&mut t).unwrap();
+        let mut want = reference_attention(&q, &k, &v, bh, s, d, false);
+        reference_apply(&eps[0], &mut want, Some(&res), &[bh, s, d]).unwrap();
+        let got = &t[&p.params[4].id];
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 0.02 + 0.02 * w.abs(), "{} vs {}", g, w);
+        }
+    }
+
+    #[test]
+    fn flash_decode_matches_reference() {
+        let (b, h, skv, d) = (2i64, 16i64, 64i64, 16i64);
+        let cfg = DecodeConfig {
+            block_h: 16,
+            block_n: 32,
+            num_stages: 2,
+            threads: 64,
+        };
+        let p = flash_decode_program(b, h, skv, d, &cfg, &[]);
+        let l = compile(&p, &Device::h100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+        let q = test_data(b * h * d, 31);
+        let k = test_data(b * skv * d, 32);
+        let v = test_data(b * skv * d, 33);
+        let mut t = Tensors::new();
+        t.insert(p.params[0].id, q.clone());
+        t.insert(p.params[1].id, k.clone());
+        t.insert(p.params[2].id, v.clone());
+        interp.run(&mut t).unwrap();
+        let want = reference_flash_decode(&q, &k, &v, b, h, skv, d);
+        let got = &t[&p.params[3].id];
+        let mut max_err = 0f32;
+        for (g, w) in got.iter().zip(&want) {
+            max_err = max_err.max((g - w).abs());
+        }
+        assert!(max_err < 0.02, "flash decode max error {}", max_err);
+    }
+
+    #[test]
+    fn flash_decode_o_epilogues_match_reference() {
+        use crate::workloads::epilogue::{reference_apply, EpilogueOp};
+        let (b, h, skv, d) = (2i64, 16i64, 64i64, 16i64);
+        let cfg = DecodeConfig {
+            block_h: 16,
+            block_n: 32,
+            num_stages: 2,
+            threads: 64,
+        };
+        // residual into the O epilogue + a scale behind it
+        let eps = [EpilogueOp::ResidualAdd, EpilogueOp::Scale(0.5)];
+        let p = flash_decode_program(b, h, skv, d, &cfg, &eps);
+        // Q, K, V, residual, O — epilogue operands precede the output
+        assert_eq!(p.params.len(), 5);
+        let l = compile(&p, &Device::h100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+        let q = test_data(b * h * d, 41);
+        let k = test_data(b * skv * d, 42);
+        let v = test_data(b * skv * d, 43);
+        let res = test_data(b * h * d, 44);
+        let mut t = Tensors::new();
+        t.insert(p.params[0].id, q.clone());
+        t.insert(p.params[1].id, k.clone());
+        t.insert(p.params[2].id, v.clone());
+        t.insert(p.params[3].id, res.clone());
+        interp.run(&mut t).unwrap();
+        let mut want = reference_flash_decode(&q, &k, &v, b, h, skv, d);
+        reference_apply(&eps[0], &mut want, Some(&res), &[b, h, d]).unwrap();
+        reference_apply(&eps[1], &mut want, None, &[b, h, d]).unwrap();
+        let got = &t[&p.params[4].id];
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 0.02 + 0.02 * w.abs(), "{} vs {}", g, w);
+        }
+    }
+
+    #[test]
+    fn decode_tunable_rejects_sub_tile_heads() {
+        // the head-parallel infeasibility audit: fewer than 16 heads can
+        // never hold a 16-row MMA warp tile, so no candidate exists and
+        // the static default is rejected by accepts()
+        let t = DecodeTunable {
+            batch: 4,
+            heads: 8,
+            seqlen_kv: 64,
+            head_dim: 16,
+        };
+        assert!(t.candidates().is_empty());
+        assert!(!t.accepts(&DecodeConfig::default_for(8, 64)));
+        // 16 heads is the floor and works
+        let t = DecodeTunable {
+            batch: 4,
+            heads: 16,
+            seqlen_kv: 64,
+            head_dim: 16,
+        };
+        assert!(!t.candidates().is_empty());
+        assert!(t.accepts(&DecodeConfig::default_for(16, 64)));
     }
 
     #[test]

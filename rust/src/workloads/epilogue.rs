@@ -208,9 +208,30 @@ pub fn emit_epilogues(
     tile: [i64; 2],
     off: &[Expr; 2],
 ) {
+    emit_epilogue_ops(t, eps, params, acc, tile, off)
+}
+
+/// The shared emitter behind [`emit_epilogues`] (rank-2 GEMM outputs)
+/// and [`emit_epilogues_rank3`] (attention O tiles): the accumulator is
+/// always a rank-2 `[tile[0], tile[1]]` fragment; `off` carries as many
+/// global coordinates as the output tensor has dims (the trailing two
+/// locate the tile). `BiasAdd` is rank-2-only — rank-3 callers are
+/// filtered by `graph::fuse::admits` before any builder runs.
+fn emit_epilogue_ops(
+    t: &mut KernelBuilder,
+    eps: &[EpilogueOp],
+    params: &[Option<BufferId>],
+    acc: BufferId,
+    tile: [i64; 2],
+    off: &[Expr],
+) {
     for (i, ep) in eps.iter().enumerate() {
         match ep {
             EpilogueOp::BiasAdd { dim } => {
+                assert!(
+                    off.len() == 2 && *dim < 2,
+                    "bias epilogues need a rank-2 output (admits() rejects rank-3 folds)"
+                );
                 let d = *dim;
                 let bias = params[i].expect("bias param declared");
                 let b_s =
@@ -242,7 +263,7 @@ pub fn emit_epilogues(
                     &[tile[0], tile[1]],
                     DType::F32,
                 );
-                t.copy_in(res, vec![off[0].clone(), off[1].clone()], r_s);
+                t.copy_in(res, off.to_vec(), r_s);
                 t.copy(r_s, r_l);
                 t.parallel(&[tile[0], tile[1]], |v| {
                     let (pi, pj) = (&v[0], &v[1]);
@@ -278,6 +299,54 @@ pub fn emit_epilogues(
             }
         }
     }
+}
+
+/// Declare the global parameters an epilogue list consumes for a
+/// *rank-3* attention-family output `[bh, rows, d]` (flash attention
+/// `[bh, seq, d]`, flash decode `[batch, heads, d]`). Only the
+/// element-wise subset applies on rank-3 outputs: `ResidualAdd` takes a
+/// full-shape operand, `Activation`/`Scale` take none, and `BiasAdd` is
+/// structurally excluded (`graph::fuse::admits` rejects it before any
+/// builder runs — there is no rank-2 feature dimension to broadcast
+/// along). Same parameter-ordering contract as
+/// [`declare_epilogue_params`]: call after the kernel operands, before
+/// the output.
+pub fn declare_epilogue_params_rank3(
+    t: &mut KernelBuilder,
+    eps: &[EpilogueOp],
+    out_shape: [i64; 3],
+) -> Vec<Option<BufferId>> {
+    eps.iter()
+        .enumerate()
+        .map(|(i, ep)| match ep {
+            EpilogueOp::ResidualAdd => Some(t.param(
+                &format!("Residual{}", i),
+                &[out_shape[0], out_shape[1], out_shape[2]],
+                DType::F32,
+            )),
+            EpilogueOp::BiasAdd { .. } => {
+                unreachable!("bias epilogues need a rank-2 output; admits() rejects this fold")
+            }
+            _ => None,
+        })
+        .collect()
+}
+
+/// Emit the epilogue ops on a rank-3 kernel's output accumulator `acc`
+/// (`[tile[0], tile[1]]` — the attention O tile `[block_rows, d]`),
+/// whose global position is `off` (three output-space coordinates, e.g.
+/// `[bz, bx * block_m, 0]`). Residual operand tiles stage
+/// global -> shared -> fragment exactly like the rank-2 path, so layout
+/// inference replicates them across the accumulator's owning threads.
+pub fn emit_epilogues_rank3(
+    t: &mut KernelBuilder,
+    eps: &[EpilogueOp],
+    params: &[Option<BufferId>],
+    acc: BufferId,
+    tile: [i64; 2],
+    off: &[Expr; 3],
+) {
+    emit_epilogue_ops(t, eps, params, acc, tile, off)
 }
 
 /// Apply one epilogue op to a row-major f32 tensor in place — the CPU

@@ -56,7 +56,11 @@ fn graph_defs() -> Vec<artifacts::ArtifactDef> {
 fn fused_matches_unfused_and_reference_for_every_graph() {
     let dir = artifacts_dir();
     let defs = graph_defs();
-    assert_eq!(defs.len(), 3, "mlp, attention and dequant-MLP variants");
+    assert_eq!(
+        defs.len(),
+        4,
+        "mlp, attention, dequant-MLP and decode-block variants"
+    );
     for d in defs {
         let graph = d.graph.as_ref().expect("graph def");
         let fused = GraphKernel::prepare(graph, &fast_opts(), &dir)
@@ -156,7 +160,8 @@ fn graph_artifacts_serve_through_the_runtime() {
     for name in [
         "mlp_block_64x64x128",
         "attention_block_128x64",
-        "dequant_mlp_32x64x64",
+        "dequant_mlp_64x64x64",
+        "decode_block_64x256x64",
     ] {
         let err = rt.golden_check(name).unwrap_or_else(|e| panic!("{name}: {e}"));
         assert!(err < TOL, "{name}: golden max err {err}");
@@ -170,11 +175,6 @@ fn graph_artifacts_serve_through_the_runtime() {
             "{name}"
         );
     }
-    // graph artifacts refuse the sharded backend with an error, not a
-    // panic or silent wrong numbers
-    let sharded = Runtime::with_backend(&dir, ExecBackend::sharded(2)).expect("runtime");
-    let e = sharded.load("mlp_block_64x64x128").unwrap_err().to_string();
-    assert!(e.contains("single-shard"), "{e}");
 }
 
 #[test]
@@ -215,11 +215,14 @@ fn coordinator_serves_a_full_block_per_row() {
 
 #[test]
 fn row_batchability_is_enforced_for_graph_serving() {
-    use tilelang::graph::ir::{attention_block, dequant_mlp_block, mlp_block};
+    use tilelang::graph::ir::{attention_block, decode_block, dequant_mlp_block, mlp_block};
     use tilelang::workloads::dequant::WeightFormat;
-    // the MLP keeps request rows independent end to end; attention mixes
-    // across the row dim and the dequant block transposes its output
+    // the MLP keeps request rows independent end to end, and so does the
+    // decode block (each stream attends only its own cache); attention
+    // mixes across the row dim and the dequant block transposes its
+    // output
     assert!(mlp_block(64, 64, 128).row_batchable());
+    assert!(decode_block(64, 16, 16, 64).row_batchable());
     assert!(!attention_block(128, 64, false).row_batchable());
     assert!(!dequant_mlp_block(32, 64, 64, 64, WeightFormat::Int4, 32).row_batchable());
 
@@ -274,7 +277,8 @@ fn graph_artifact_files_round_trip() {
     for name in [
         "mlp_block_64x64x128",
         "attention_block_128x64",
-        "dequant_mlp_32x64x64",
+        "dequant_mlp_64x64x64",
+        "decode_block_64x256x64",
     ] {
         let path = dir.join(format!("{name}.graph.json"));
         let g = KernelGraph::load(&path).unwrap_or_else(|e| panic!("{name}: {e}"));

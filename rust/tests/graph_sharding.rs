@@ -1,0 +1,369 @@
+//! Sharded-graph differential tests: a graph artifact partitioned
+//! across N executors must produce the same numbers as the
+//! single-executor `GraphKernel` and the CPU-reference composition, for
+//! every shardable scenario (mlp_block, dequant_mlp, decode_block) at
+//! shard counts 2 and 3 — plus the decode block's KV-cache lifecycle
+//! across two successive steps, clean planner rejections
+//! (attention_block's axis, over-split head counts), and end-to-end
+//! serving through `Runtime`/`Coordinator` on the sharded backend.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use tilelang::coordinator::{BatchPolicy, Coordinator};
+use tilelang::graph::exec::GraphKernel;
+use tilelang::graph::ir::{attention_block, decode_block, KernelGraph};
+use tilelang::graph::memplan::{self, find_live_overlap};
+use tilelang::runtime::{artifacts, ExecBackend, InterpOptions, Runtime};
+use tilelang::shard::exec::ShardedOptions;
+use tilelang::shard::graph::{plan_graph, GraphStrategy, ShardedGraphKernel};
+use tilelang::sim::device::Device;
+use tilelang::workloads::matmul::{reference_matmul, test_data};
+
+/// Sharded graphs chain the same fp16-staged kernels as single-executor
+/// graphs; the gather only reorders shard bands, so the graph golden
+/// bound applies unchanged.
+const TOL: f32 = tilelang::runtime::GRAPH_GOLDEN_TOL;
+
+/// One shared artifact directory per test binary (generation once).
+fn artifacts_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir()
+            .join(format!("tilelang-graphshard-artifacts-{}", std::process::id()));
+        artifacts::generate_default_set(&dir).expect("generate artifacts");
+        dir
+    })
+    .clone()
+}
+
+fn fast_opts() -> InterpOptions {
+    InterpOptions {
+        tune: false,
+        ..Default::default()
+    }
+}
+
+fn fast_sharded(shards: usize) -> ShardedOptions {
+    ShardedOptions {
+        shards,
+        interp: fast_opts(),
+    }
+}
+
+fn h100() -> Device {
+    Device::h100()
+}
+
+/// The shardable graph artifact defs (valid inputs — packed weights for
+/// the dequant variant, caches for the decode block — plus reference
+/// goldens): the differential corpus.
+fn shardable_defs() -> Vec<artifacts::ArtifactDef> {
+    artifacts::default_set()
+        .into_iter()
+        .filter(|d| {
+            d.graph.is_some()
+                && ["mlp_block", "dequant_mlp", "decode_block"]
+                    .iter()
+                    .any(|p| d.name.starts_with(p))
+        })
+        .collect()
+}
+
+#[test]
+fn sharded_graphs_match_single_executor_and_reference() {
+    let dir = artifacts_dir();
+    let defs = shardable_defs();
+    assert_eq!(defs.len(), 3, "mlp, dequant-MLP and decode-block scenarios");
+    for d in defs {
+        let graph = d.graph.as_ref().expect("graph def");
+        let single = GraphKernel::prepare(graph, &fast_opts(), &dir)
+            .unwrap_or_else(|e| panic!("{}: single-executor prepare: {}", d.name, e));
+        let base = single
+            .execute(&d.inputs)
+            .unwrap_or_else(|e| panic!("{}: single-executor execution: {}", d.name, e));
+        for shards in [2usize, 3] {
+            let kernel = ShardedGraphKernel::prepare(graph, &fast_sharded(shards), &dir)
+                .unwrap_or_else(|e| panic!("{} x{}: prepare: {}", d.name, shards, e));
+            assert_eq!(kernel.plan().shards(), shards, "{}", d.name);
+            let got = kernel
+                .execute(&d.inputs)
+                .unwrap_or_else(|e| panic!("{} x{}: execution: {}", d.name, shards, e));
+            assert_eq!(got.len(), d.golden.len(), "{} x{}", d.name, shards);
+            for (i, ((g, s), w)) in got.iter().zip(&base).zip(&d.golden).enumerate() {
+                assert!(
+                    (g - s).abs() < TOL,
+                    "{} x{} idx {}: sharded {} vs single {}",
+                    d.name,
+                    shards,
+                    i,
+                    g,
+                    s
+                );
+                assert!(
+                    (g - w).abs() < TOL + 0.02 * w.abs(),
+                    "{} x{} idx {}: sharded {} vs reference {}",
+                    d.name,
+                    shards,
+                    i,
+                    g,
+                    w
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn strategies_match_the_block_family() {
+    for d in shardable_defs() {
+        let graph = d.graph.as_ref().unwrap();
+        let p = plan_graph(graph, 2, &h100()).unwrap_or_else(|e| panic!("{}: {}", d.name, e));
+        let want = if d.name.starts_with("decode_block") {
+            // the partition axis rides the flash grid's batch*heads dim
+            GraphStrategy::HeadParallel
+        } else {
+            GraphStrategy::RowParallel
+        };
+        assert_eq!(p.strategy, want, "{}", d.name);
+        // the decode block's KV caches scatter with the streams
+        if d.name.starts_with("decode_block") {
+            assert!(p.parts[0].inputs[2].dim.is_some(), "K cache must scatter");
+            assert!(p.parts[0].inputs[3].dim.is_some(), "V cache must scatter");
+        }
+    }
+}
+
+#[test]
+fn per_shard_memplans_reuse_buffers_without_aliasing() {
+    for d in shardable_defs() {
+        let graph = d.graph.as_ref().unwrap();
+        let p = plan_graph(graph, 3, &h100()).unwrap_or_else(|e| panic!("{}: {}", d.name, e));
+        for part in &p.parts {
+            let mp = memplan::plan(&part.graph);
+            if let Some((i, j)) = find_live_overlap(&mp) {
+                panic!(
+                    "{} shard {}: nodes {} and {} share a buffer while live",
+                    d.name, part.index, i, j
+                );
+            }
+            assert!(mp.peak_bytes <= mp.intermediate_bytes, "{}", d.name);
+        }
+    }
+}
+
+#[test]
+fn attention_block_rejects_and_decode_head_audit_holds() {
+    // the single-head attention block cannot shard: the [seq, d] ->
+    // [1, seq, d] view moves the batch rows off the leading dim (and
+    // the flash kernel mixes them) — a clean reason, not a panic
+    let err = plan_graph(&attention_block(128, 64, false), 2, &h100())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("does not apply"), "{err}");
+
+    // head-count feasibility audit: a decode block with 8 heads can
+    // never hold a 16-head warp tile; the planner must reject it with
+    // the builder's reason instead of producing an infeasible config
+    let g = decode_block(64, 8, 16, 64);
+    let err = plan_graph(&g, 2, &h100()).unwrap_err().to_string();
+    assert!(
+        err.contains("flash_decode") && err.contains("head"),
+        "{err}"
+    );
+    // and the executor-side prepare path reports the same reason
+    let dir = std::env::temp_dir().join(format!("tilelang-gshard-audit-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = GraphKernel::prepare(&g, &fast_opts(), &dir)
+        .err()
+        .expect("sub-16-head decode must not prepare")
+        .to_string();
+    assert!(err.contains("flash_decode"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn decode_block_kv_cache_carries_state_across_steps() {
+    // two successive decode steps over a sliding-window KV cache: the
+    // serving layer owns the cache update (compute the new position's
+    // K/V, roll the fixed-size window), the graph artifact executes one
+    // step — sharded and single-executor runs must agree with the
+    // reference at both steps, and the cache must actually matter.
+    let (streams, heads, dh, past) = (64i64, 16i64, 16i64, 64i64);
+    let d_model = heads * dh;
+    let g = decode_block(streams, heads, dh, past);
+    let dir = artifacts_dir();
+
+    let wq = test_data(d_model * d_model, 0x71);
+    let wo = test_data(d_model * d_model, 0x72);
+    let bo = test_data(d_model, 0x73);
+    // per-stream MQA cache-update weights (owned by the serving layer,
+    // not the graph): one shared K/V head per stream
+    let wk = test_data(d_model * dh, 0x74);
+    let wv = test_data(d_model * dh, 0x75);
+
+    let x1 = test_data(streams * d_model, 0x76);
+    let k1 = test_data(streams * past * dh, 0x77);
+    let v1 = test_data(streams * past * dh, 0x78);
+
+    let single = GraphKernel::prepare(&g, &fast_opts(), &dir).expect("single prepare");
+    let sharded =
+        ShardedGraphKernel::prepare(&g, &fast_sharded(2), &dir).expect("sharded prepare");
+
+    let step = |kc: &[f32], vc: &[f32], x: &[f32]| {
+        let inputs = vec![
+            x.to_vec(),
+            wq.clone(),
+            kc.to_vec(),
+            vc.to_vec(),
+            wo.clone(),
+            bo.clone(),
+        ];
+        let want = g.reference_execute(&inputs).expect("reference step");
+        let got_single = single.execute(&inputs).expect("single step");
+        let got_sharded = sharded.execute(&inputs).expect("sharded step");
+        for (i, ((s, h), w)) in got_single
+            .iter()
+            .zip(&got_sharded)
+            .zip(&want)
+            .enumerate()
+        {
+            assert!((s - h).abs() < TOL, "idx {i}: single {s} vs sharded {h}");
+            assert!(
+                (s - w).abs() < TOL + 0.02 * w.abs(),
+                "idx {i}: single {s} vs reference {w}"
+            );
+        }
+        want
+    };
+
+    let y1 = step(&k1, &v1, &x1);
+
+    // cache update: k_new[s] = x1[s] @ Wk, v_new[s] = x1[s] @ Wv; the
+    // fixed-shape window rolls one position (drop the oldest row)
+    let k_new = reference_matmul(&x1, &wk, streams, dh, d_model);
+    let v_new = reference_matmul(&x1, &wv, streams, dh, d_model);
+    let roll = |cache: &[f32], new_rows: &[f32]| -> Vec<f32> {
+        let (p, d) = (past as usize, dh as usize);
+        let mut out = vec![0f32; cache.len()];
+        for s in 0..streams as usize {
+            let src = &cache[s * p * d..(s + 1) * p * d];
+            let dst = &mut out[s * p * d..(s + 1) * p * d];
+            dst[..(p - 1) * d].copy_from_slice(&src[d..]);
+            dst[(p - 1) * d..].copy_from_slice(&new_rows[s * d..(s + 1) * d]);
+        }
+        out
+    };
+    let k2 = roll(&k1, &k_new);
+    let v2 = roll(&v1, &v_new);
+
+    // step 2: the next token's hidden state is downstream of y1 in a
+    // real model; any new activations work for the numerics check
+    let x2 = test_data(streams * d_model, 0x79);
+    let y2 = step(&k2, &v2, &x2);
+
+    // the updated cache changes the answer: rerunning step 2's inputs
+    // against the *old* cache must diverge (the attention actually
+    // reads the cache operands)
+    let stale = g
+        .reference_execute(&[
+            x2.clone(),
+            wq.clone(),
+            k1.clone(),
+            v1.clone(),
+            wo.clone(),
+            bo.clone(),
+        ])
+        .expect("stale reference");
+    let max_delta = y2
+        .iter()
+        .zip(&stale)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(
+        max_delta > 1e-3,
+        "cache update had no effect on the decode output ({max_delta})"
+    );
+    // sanity: both steps produced different outputs
+    let diff = y1
+        .iter()
+        .zip(&y2)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(diff > 1e-3, "successive steps produced identical outputs");
+}
+
+#[test]
+fn sharded_runtime_serves_graph_artifacts() {
+    let dir = artifacts_dir();
+    let rt = Runtime::with_backend(&dir, ExecBackend::Sharded(fast_sharded(2)))
+        .expect("sharded runtime");
+    for name in ["mlp_block_64x64x128", "dequant_mlp_64x64x64", "decode_block_64x256x64"] {
+        let err = rt.golden_check(name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(err < TOL, "{name}: golden max err {err}");
+        let loaded = rt.load(name).expect(name);
+        let plan = loaded
+            .graph_shard_plan()
+            .expect("sharded graph artifacts expose their plan");
+        assert_eq!(plan.shards(), 2, "{name}");
+        assert!(loaded.shard_plan().is_none(), "{name}: not a single-kernel plan");
+    }
+    // the unshardable attention block still fails with a clear reason
+    // (map to () first: LoadedKernel carries no Debug impl)
+    let e = rt
+        .load("attention_block_128x64")
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("does not apply"), "{e}");
+}
+
+#[test]
+fn sharded_coordinator_serves_decode_and_mlp_rows() {
+    let dir = artifacts_dir();
+    for model in ["mlp_block_64x64x128", "decode_block_64x256x64"] {
+        let rt = Runtime::with_backend(&dir, ExecBackend::Sharded(fast_sharded(2)))
+            .expect("runtime");
+        let inputs = rt.example_inputs(model).expect("inputs");
+        let spec = rt.spec(model).expect("spec").clone();
+        let batch = spec.in_shapes[0][0] as usize;
+        let row_len: usize = spec.in_shapes[0][1..].iter().product::<i64>() as usize;
+        let out_row = spec.out_len() / batch;
+        let direct = rt.execute(model, &inputs).expect("direct sharded execution");
+
+        let coord = Coordinator::start_sharded(&dir, model, BatchPolicy::default(), 2)
+            .expect("start sharded coordinator");
+        let mut rxs = Vec::new();
+        for slot in 0..batch.min(16) {
+            let row = inputs[0][slot * row_len..(slot + 1) * row_len].to_vec();
+            rxs.push((slot, coord.submit_row(model, row).expect("submit")));
+        }
+        for (slot, rx) in rxs {
+            let reply = rx.recv().expect("reply");
+            let out = reply
+                .output
+                .unwrap_or_else(|e| panic!("{model} slot {slot}: {e}"));
+            assert_eq!(out.len(), out_row, "{model}");
+            // same backend + same plan + shared tuning cache: served rows
+            // reproduce the direct sharded execution
+            let want = &direct[slot * out_row..(slot + 1) * out_row];
+            for (g, w) in out.iter().zip(want) {
+                assert!((g - w).abs() < 1e-4, "{model} slot {slot}: {g} vs {w}");
+            }
+        }
+        coord.shutdown();
+    }
+}
+
+#[test]
+fn graph_artifact_files_still_round_trip_for_the_decode_block() {
+    let dir = artifacts_dir();
+    let path = dir.join("decode_block_64x256x64.graph.json");
+    let g = KernelGraph::load(&path).expect("decode graph file");
+    g.validate().expect("valid");
+    assert_eq!(g.inputs.len(), 6);
+    // stored unfused: the residual is a standalone element-wise node so
+    // the fusion planner's fold into the flash O epilogue stays a
+    // load-time decision
+    assert_eq!(g.nodes.len(), 5);
+}

@@ -236,6 +236,7 @@ fn sharded_runtime_passes_golden_checks() {
         "linear_64x256x64",
         "flash_attention_2x128x64",
         "flash_attention_causal_2x128x64",
+        "flash_decode_4x16x64x16",
         "chunk_state_2x128",
         "chunk_scan_2x128",
     ] {
