@@ -228,7 +228,12 @@ impl GraphKernel {
             kernels.push(match &node.op {
                 NodeOp::Kernel(kind) => {
                     let prog = node_program(node, dev, opts, dir)?;
-                    Some(InterpKernel::from_program(&prog, &node_spec(node, kind), dev)?)
+                    Some(InterpKernel::from_program(
+                        &prog,
+                        &node_spec(node, kind),
+                        dev,
+                        opts.compiled,
+                    )?)
                 }
                 NodeOp::Elementwise(_) => None,
             });

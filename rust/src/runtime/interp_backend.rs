@@ -23,6 +23,7 @@ use crate::ir::program::TileProgram;
 use crate::passes::lower::{compile, CompileOptions};
 use crate::sim::device::Device;
 use crate::sim::model::Penalties;
+use crate::tir::compile::{compile_lowered, CompiledProgram};
 use crate::tir::interp::{Interp, Tensors};
 use crate::tir::LoweredProgram;
 use crate::workloads::attention::{
@@ -55,6 +56,11 @@ pub struct InterpOptions {
     /// cached independently of single-device entries. Set by
     /// `shard::exec::ShardedKernel` when it prepares per-shard kernels.
     pub shards: usize,
+    /// Execute through the register-bytecode VM (`tir::compile`) instead
+    /// of the tree-walking interpreter. The lowered program is the same;
+    /// only the execution engine changes, and outputs are bit-identical
+    /// (the interpreter remains the differential oracle).
+    pub compiled: bool,
 }
 
 impl Default for InterpOptions {
@@ -64,6 +70,7 @@ impl Default for InterpOptions {
             cache_path: None,
             tune: true,
             shards: 1,
+            compiled: false,
         }
     }
 }
@@ -194,6 +201,9 @@ pub(crate) struct InterpKernel {
     param_ids: Vec<BufferId>,
     out_id: BufferId,
     out_len: usize,
+    /// Pre-compiled bytecode when the kernel was prepared with
+    /// `InterpOptions::compiled`; `None` runs the tree-walking interp.
+    compiled: Option<CompiledProgram>,
 }
 
 impl InterpKernel {
@@ -209,7 +219,7 @@ impl InterpKernel {
         let dev = Device::by_name(&opts.device)
             .ok_or_else(|| anyhow!("interp backend: unknown modeled device {:?}", opts.device))?;
         let prog = build_program(&kind, spec, &dev, opts, dir)?;
-        InterpKernel::from_program(&prog, spec, &dev)
+        InterpKernel::from_program(&prog, spec, &dev, opts.compiled)
     }
 
     /// Validate an already-built program against the spec's parameter
@@ -220,6 +230,7 @@ impl InterpKernel {
         prog: &TileProgram,
         spec: &ArtifactSpec,
         dev: &Device,
+        use_compiled: bool,
     ) -> Result<InterpKernel> {
         if prog.params.len() != spec.in_shapes.len() + 1 {
             bail!(
@@ -255,11 +266,20 @@ impl InterpKernel {
         }
         let lowered = compile(prog, dev, &CompileOptions::default())
             .map_err(|e| anyhow!("{}: compile failed: {}", spec.name, e))?;
+        let compiled = if use_compiled {
+            Some(
+                compile_lowered(&lowered)
+                    .map_err(|e| anyhow!("{}: bytecode compile failed: {}", spec.name, e))?,
+            )
+        } else {
+            None
+        };
         Ok(InterpKernel {
             param_ids: prog.params.iter().map(|b| b.id).collect(),
             out_id: out.id,
             out_len: spec.out_len(),
             lowered,
+            compiled,
         })
     }
 
@@ -284,7 +304,6 @@ impl InterpKernel {
         inputs: &[&[f32]],
         mut storage: Vec<f32>,
     ) -> Result<Vec<f32>> {
-        let interp = Interp::new(&self.lowered).map_err(|e| anyhow!("interp init: {}", e))?;
         let mut tensors = Tensors::new();
         // param_ids ends with the output id; zip stops at the inputs
         for (id, data) in self.param_ids.iter().zip(inputs) {
@@ -295,9 +314,18 @@ impl InterpKernel {
         storage.clear();
         storage.resize(self.out_len, 0.0);
         tensors.insert(self.out_id, storage);
-        interp
-            .run(&mut tensors)
-            .map_err(|e| anyhow!("interp run: {}", e))?;
+        match &self.compiled {
+            Some(vm) => vm
+                .run(&mut tensors)
+                .map_err(|e| anyhow!("compiled run: {}", e))?,
+            None => {
+                let interp =
+                    Interp::new(&self.lowered).map_err(|e| anyhow!("interp init: {}", e))?;
+                interp
+                    .run(&mut tensors)
+                    .map_err(|e| anyhow!("interp run: {}", e))?;
+            }
+        }
         let out = tensors
             .remove(&self.out_id)
             .ok_or_else(|| anyhow!("interp produced no output tensor"))?;

@@ -10,6 +10,12 @@
 //!   through the persistent tuning cache, lowers it and executes
 //!   requests on the TIR interpreter (`tir::interp`). The whole serving
 //!   loop is hermetic: no Python, no HLO files, no network.
+//! * [`ExecBackend::Compiled`] — the default: the same artifact
+//!   resolution and lowering, but the lowered program is flattened once
+//!   into register bytecode (`tir::compile`) and every request runs the
+//!   linear instruction stream instead of walking the IR tree. Outputs
+//!   are bit-identical to the interpreter, which stays available as the
+//!   differential oracle (`--backend interp`).
 //! * [`ExecBackend::Sharded`] — the multi-executor backend: a
 //!   `shard::plan` strategy partitions each artifact across N parallel
 //!   interpreter shards (data/row-parallel, split-K with sum-reduce,
@@ -73,6 +79,11 @@ pub enum ExecBackend {
     /// Lower the artifact's workload program and run it on the TIR
     /// interpreter (always available; see [`InterpOptions`]).
     Interp(InterpOptions),
+    /// Lower the artifact's workload program, flatten it to register
+    /// bytecode (`tir::compile`) and run the bytecode VM. Bit-identical
+    /// to [`ExecBackend::Interp`]; the `compiled` flag inside the
+    /// carried options is forced on at load time.
+    Compiled(InterpOptions),
     /// Partition each artifact across N parallel interpreter executors
     /// according to a planned strategy (see `shard::plan`).
     Sharded(ShardedOptions),
@@ -85,6 +96,14 @@ impl ExecBackend {
     /// The interpreter backend with default options.
     pub fn interp() -> ExecBackend {
         ExecBackend::Interp(InterpOptions::default())
+    }
+
+    /// The compiled bytecode backend with default options.
+    pub fn compiled() -> ExecBackend {
+        ExecBackend::Compiled(InterpOptions {
+            compiled: true,
+            ..Default::default()
+        })
     }
 
     /// The sharded backend across `shards` parallel executors.
@@ -100,16 +119,17 @@ impl ExecBackend {
     }
 
     /// The fastest backend this build provides: PJRT when the feature is
-    /// enabled, the interpreter otherwise.
+    /// enabled, the bytecode VM otherwise.
     #[cfg(not(feature = "pjrt"))]
     pub fn default_backend() -> ExecBackend {
-        ExecBackend::interp()
+        ExecBackend::compiled()
     }
 
     /// Stable backend name for logs and reports.
     pub fn name(&self) -> &'static str {
         match self {
             ExecBackend::Interp(_) => "interp",
+            ExecBackend::Compiled(_) => "compiled",
             ExecBackend::Sharded(_) => "sharded",
             #[cfg(feature = "pjrt")]
             ExecBackend::Pjrt => "pjrt",
@@ -464,6 +484,17 @@ impl Runtime {
                             .map_err(|e| anyhow!("{}: {}", spec.name, e))?,
                     )
                 }
+                ExecBackend::Compiled(opts) => {
+                    let opts = InterpOptions {
+                        compiled: true,
+                        ..opts.clone()
+                    };
+                    let graph = self.read_graph(&spec, gfile)?;
+                    KernelExec::Graph(
+                        GraphKernel::prepare(&graph, &opts, &self.dir)
+                            .map_err(|e| anyhow!("{}: {}", spec.name, e))?,
+                    )
+                }
                 ExecBackend::Sharded(opts) => {
                     // the whole fused block runs per shard: one partition
                     // axis for the graph, intermediates stay shard-local
@@ -487,6 +518,15 @@ impl Runtime {
                 ExecBackend::Interp(opts) => KernelExec::Interp(
                     interp_backend::InterpKernel::prepare(&spec, opts, &self.dir)?,
                 ),
+                ExecBackend::Compiled(opts) => {
+                    let opts = InterpOptions {
+                        compiled: true,
+                        ..opts.clone()
+                    };
+                    KernelExec::Interp(interp_backend::InterpKernel::prepare(
+                        &spec, &opts, &self.dir,
+                    )?)
+                }
                 ExecBackend::Sharded(opts) => {
                     KernelExec::Sharded(ShardedKernel::prepare(&spec, opts, &self.dir)?)
                 }

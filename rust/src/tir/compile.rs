@@ -1,0 +1,2343 @@
+//! Compiled CPU backend: lower a [`LoweredProgram`] to a fused
+//! register-bytecode VM (std-only, unsafe-free).
+//!
+//! The tree-walking interpreter ([`super::interp`]) re-evaluates offset
+//! expressions, hashes buffer ids and allocates index vectors on every
+//! element access. This module removes all of that *per-element dispatch*
+//! at compile time instead of run time:
+//!
+//! * **Linear instruction stream** — the grid loop, every `For` (static
+//!   after `specialize`), every statically-decidable `If`, and the
+//!   async-copy commit/wait queue are unrolled while compiling, so the VM
+//!   executes a flat `Vec<Instr>` with no control flow.
+//! * **Pre-resolved offsets** — region offsets, multi-buffer slot
+//!   indices and layout bases are evaluated to constants at compile time;
+//!   global tails are pre-clipped into per-axis `[lo, hi)` guard ranges
+//!   (out-of-bounds reads produce `0.0`, stores are dropped — the same
+//!   predication the interpreter applies element by element).
+//! * **Strength-reduced index arithmetic** — element addresses advance by
+//!   per-axis strides (an odometer walk); no expression tree is evaluated
+//!   inside a tile loop. Elementwise epilogues compile to constant-folded
+//!   postfix tapes over the parallel axes.
+//! * **Tile-granular inner ops** — one `Gemm` instruction runs the whole
+//!   fma-over-`block_k` accumulation, one `Reduce` the row-max/row-sum of
+//!   flash softmax, one `Dequant` the int4/nf4/fp4 unpack+scale.
+//!
+//! # Oracle contract
+//!
+//! The interpreter stays the semantic oracle: for every lowered program
+//! that the interpreter executes successfully, `CompiledProgram::run`
+//! produces **bit-for-bit identical** tensors — the same f32 accumulation
+//! order in GEMMs, the same `round_to_dtype` on every store, the same
+//! euclidean div/mod in index math, the same async-queue flush points and
+//! the same block execution order. (Programs the interpreter *rejects* —
+//! ownership violations, aliasing layouts — are reported as compile or
+//! run errors here instead; divergence is only possible on programs that
+//! are already broken.) `rust/tests/backend_diff.rs` enforces the
+//! contract across all six workload families; the VM additionally offers
+//! [`CompiledProgram::validate`] (static in-bounds proof of every
+//! pre-resolved address) and [`CompiledProgram::write_counts`] (a shadow
+//! pass counting stores per output element) for property tests.
+//!
+//! # Example: compile once, match the interpreter bit-for-bit
+//!
+//! ```
+//! use tilelang::ir::dtype::DType;
+//! use tilelang::passes::lower::{compile, CompileOptions};
+//! use tilelang::sim::device::Device;
+//! use tilelang::tir::compile::compile_lowered;
+//! use tilelang::tir::interp::{Interp, Tensors};
+//! use tilelang::workloads::matmul::{matmul_program, TileConfig};
+//!
+//! let cfg = TileConfig::default_for(32, 32, 32);
+//! let prog = matmul_program(32, 32, 32, DType::F16, &cfg);
+//! let lowered = compile(&prog, &Device::h100(), &CompileOptions::default()).unwrap();
+//!
+//! let vm = compile_lowered(&lowered).unwrap();
+//! vm.validate().unwrap();
+//!
+//! let (a, b, c) = (lowered.params[0].id, lowered.params[1].id, lowered.params[2].id);
+//! let mut t_vm: Tensors = Tensors::new();
+//! t_vm.insert(a, vec![1.0; 32 * 32]);
+//! t_vm.insert(b, vec![0.5; 32 * 32]);
+//! let mut t_oracle = t_vm.clone();
+//!
+//! vm.run(&mut t_vm).unwrap();
+//! Interp::new(&lowered).unwrap().run(&mut t_oracle).unwrap();
+//! assert_eq!(t_vm[&c], t_oracle[&c]); // bit-for-bit
+//! ```
+//!
+//! # Bytecode format (one block, schematically)
+//!
+//! ```text
+//! ZeroChip                          ; fresh on-chip arena (shared+frag)
+//! Copy   g[A+17408 Δ(64,1) ✓]  -> chip[0     Δ(32,1)]    ; tile load
+//! Copy   g[B+128   Δ(64,1) ✓]  -> chip[1024  Δ(64,1)]
+//! Gemm   m=32 n=32 k=32  a=chip[0] b=chip[1024] c=chip[3072]
+//! Elems  32x32 { c_l[i,j] = max(c_l[i,j], 0.0) }         ; fused epilogue
+//! Copy   chip[3072 Δ(32,1)]    -> g[C+2048 Δ(64,1) ✓]    ; tile store
+//! ```
+//!
+//! On-chip storage is a single flat f32 arena per block. Shared tiles
+//! address it through their inferred physical layout (identity layouts
+//! become pure strided walks; padded/swizzled layouts keep one
+//! precomputed `logical flat -> physical cell` table lookup per element).
+//! Fragments collapse to logical row-major cells: the interpreter keeps
+//! one replica per owning thread but every write path writes all replicas
+//! with the same value, so replicas are always equal and a single logical
+//! cell is value-identical.
+
+use std::collections::HashMap;
+
+use crate::ir::buffer::{BufferId, MemScope};
+use crate::ir::dtype::{fp4_e2m1_decode, round_to_dtype, DType, NF4_TABLE};
+use crate::ir::expr::{BinOp, Expr, ExprKind, UnOp, VarId};
+use crate::ir::program::{AtomicKind, DequantScheme, ElemStmt, ReduceKind};
+
+use super::interp::Tensors;
+use super::{LoweredProgram, RegionRef, TStmt};
+
+// ---------------------------------------------------------------------
+// address model
+// ---------------------------------------------------------------------
+
+/// Which storage a pre-resolved address points into.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Slab {
+    /// The per-block on-chip arena (shared tiles + fragment registers).
+    Chip,
+    /// Global parameter `i` (index into the param table).
+    Param(usize),
+}
+
+/// One dimension of a strided walk. `lo..hi` is the valid coordinate
+/// range after clipping against the underlying buffer (global tails);
+/// coordinates outside it read `0.0` / drop stores.
+#[derive(Clone, Debug)]
+struct AxisWalk {
+    extent: i64,
+    stride: i64,
+    lo: i64,
+    hi: i64,
+}
+
+impl AxisWalk {
+    #[inline]
+    fn ok(&self, c: i64) -> bool {
+        c >= self.lo && c < self.hi
+    }
+}
+
+/// A pre-resolved strided view of a slab (one side of a copy/atomic).
+#[derive(Clone, Debug)]
+struct View {
+    slab: Slab,
+    /// Arena segment base: chip buffer base + slot offset (0 for params).
+    seg: i64,
+    /// Constant part of the relative address (global offsets folded in).
+    rel0: i64,
+    axes: Vec<AxisWalk>,
+    /// Non-identity shared layout: index into `CompiledProgram::perms`,
+    /// remapping the logical relative address to a physical cell.
+    perm: Option<usize>,
+    /// Any axis is partially out of bounds (guard checks required).
+    guarded: bool,
+    /// Contiguous row-major walk (memcpy-able when also unguarded).
+    dense: bool,
+}
+
+impl View {
+    fn count(&self) -> i64 {
+        self.axes.iter().map(|a| a.extent).product()
+    }
+}
+
+/// Odometer over a `View`'s axes: tracks the relative address and the
+/// number of currently out-of-range axes incrementally (no per-element
+/// index vector, no re-multiplication).
+struct Cursor {
+    cnt: Vec<i64>,
+    rel: i64,
+    oob: i64,
+}
+
+impl Cursor {
+    fn new(v: &View) -> Cursor {
+        Cursor {
+            cnt: vec![0; v.axes.len()],
+            rel: v.rel0,
+            oob: v.axes.iter().filter(|a| !a.ok(0)).count() as i64,
+        }
+    }
+
+    #[inline]
+    fn valid(&self) -> bool {
+        self.oob == 0
+    }
+
+    /// Advance to the next element in row-major order.
+    #[inline]
+    fn step(&mut self, axes: &[AxisWalk]) {
+        let mut d = axes.len();
+        while d > 0 {
+            d -= 1;
+            let a = &axes[d];
+            let old = self.cnt[d];
+            if old + 1 < a.extent {
+                self.cnt[d] = old + 1;
+                self.rel += a.stride;
+                self.oob += a.ok(old) as i64 - a.ok(old + 1) as i64;
+                return;
+            }
+            self.cnt[d] = 0;
+            self.rel -= a.stride * (a.extent - 1);
+            self.oob += a.ok(old) as i64 - a.ok(0) as i64;
+        }
+    }
+}
+
+/// A GEMM operand: `value(r, k)` at `seg + perm(rel0 + r*rs + k*ks)`,
+/// valid when `r` in `[r_lo, r_hi)` and `k` in `[k_lo, k_hi)`.
+#[derive(Clone, Debug)]
+struct Mat {
+    slab: Slab,
+    seg: i64,
+    rel0: i64,
+    rs: i64,
+    ks: i64,
+    perm: Option<usize>,
+    r_lo: i64,
+    r_hi: i64,
+    k_lo: i64,
+    k_hi: i64,
+    guarded: bool,
+}
+
+// ---------------------------------------------------------------------
+// instruction set
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct CopyOp {
+    src: View,
+    dst: View,
+    /// Destination storage dtype (rounded on every store).
+    dtype: DType,
+    count: i64,
+}
+
+#[derive(Clone, Debug)]
+struct GemmOp {
+    m: i64,
+    n: i64,
+    k: i64,
+    a: Mat,
+    b: Mat,
+    /// Accumulator fragment: chip base + row stride (f32, unrounded).
+    c_seg: i64,
+    c_rs: i64,
+}
+
+#[derive(Clone, Debug)]
+struct ReduceOp {
+    out_extents: Vec<i64>,
+    /// Source stride per output axis (0 on the kept dummy dim).
+    src_strides: Vec<i64>,
+    dst_seg: i64,
+    src_seg: i64,
+    red_extent: i64,
+    red_stride: i64,
+    kind: ReduceKind,
+    clear: bool,
+    dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+struct ScaleRef {
+    seg: i64,
+    s0: i64,
+    s1: i64,
+    perm: Option<usize>,
+}
+
+#[derive(Clone, Debug)]
+struct DequantOp {
+    rows: i64,
+    cols: i64,
+    src_seg: i64,
+    src_s0: i64,
+    src_s1: i64,
+    src_perm: Option<usize>,
+    scale: Option<ScaleRef>,
+    dst_seg: i64,
+    scheme: DequantScheme,
+    bits: u32,
+    epb: i64,
+    group: i64,
+    dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+struct AtomicOp {
+    src: View,
+    dst: View,
+    kind: AtomicKind,
+    dtype: DType,
+    count: i64,
+}
+
+/// Integer postfix tape mirroring `Expr::eval_int` (euclidean div/mod).
+#[derive(Clone, Debug)]
+enum IOp {
+    Const(i64),
+    /// Parallel axis `k`'s current coordinate.
+    Axis(usize),
+    Bin(BinOp),
+    Un(UnOp),
+    /// Pops else, then, cond.
+    Select,
+}
+
+/// Float postfix tape mirroring `Interp::eval_value` (all-f32 math).
+#[derive(Clone, Debug)]
+enum FOp {
+    Const(f32),
+    Axis(usize),
+    /// Pushes the value of `ElemWrite::loads[i]`.
+    Load(usize),
+    Bin(BinOp),
+    Un(UnOp),
+    /// Pops else, then, cond (branches are pure — value-identical to the
+    /// interpreter's lazy select).
+    Select,
+    Cast(DType),
+}
+
+#[derive(Clone, Debug)]
+enum LSrc {
+    Chip {
+        seg: i64,
+        strides: Vec<i64>,
+        perm: Option<usize>,
+        /// Logical cell count (reads outside it yield 0.0 defensively).
+        cells: i64,
+    },
+    Global {
+        param: usize,
+        shape: Vec<i64>,
+    },
+}
+
+#[derive(Clone, Debug)]
+struct LoadRef {
+    idx: Vec<Vec<IOp>>,
+    src: LSrc,
+}
+
+#[derive(Clone, Debug)]
+enum Dst {
+    Chip {
+        seg: i64,
+        strides: Vec<i64>,
+        perm: Option<usize>,
+        cells: i64,
+    },
+    Global {
+        param: usize,
+        shape: Vec<i64>,
+    },
+}
+
+#[derive(Clone, Debug)]
+struct ElemWrite {
+    idx: Vec<Vec<IOp>>,
+    value: Vec<FOp>,
+    loads: Vec<LoadRef>,
+    dst: Dst,
+    dtype: DType,
+}
+
+#[derive(Clone, Debug)]
+struct ElemsOp {
+    extents: Vec<i64>,
+    stmts: Vec<ElemWrite>,
+}
+
+#[derive(Clone, Debug)]
+enum Instr {
+    /// Zero the on-chip arena (block start).
+    ZeroChip,
+    Copy(Box<CopyOp>),
+    Gemm(Box<GemmOp>),
+    Fill { seg: i64, len: i64, value: f32 },
+    Reduce(Box<ReduceOp>),
+    Dequant(Box<DequantOp>),
+    Atomic(Box<AtomicOp>),
+    Elems(Box<ElemsOp>),
+}
+
+// ---------------------------------------------------------------------
+// compiled program
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct ParamMeta {
+    id: BufferId,
+    name: String,
+    shape: Vec<i64>,
+    len: usize,
+}
+
+/// An on-chip buffer's slice of the arena.
+#[derive(Clone, Debug)]
+struct ChipBuf {
+    base: i64,
+    /// Addressable cells per multi-buffer slot (physical for shared).
+    cells: i64,
+    slots: i64,
+    /// Logical shape (layout input shape / fragment shape).
+    shape: Vec<i64>,
+    dtype: DType,
+    scope: MemScope,
+    perm: Option<usize>,
+}
+
+/// A [`LoweredProgram`] lowered to the bytecode VM. Built once by
+/// [`compile_lowered`]; [`CompiledProgram::run`] then executes the whole
+/// grid with the same tensor-map interface as `Interp::run`.
+#[derive(Clone, Debug)]
+pub struct CompiledProgram {
+    name: String,
+    instrs: Vec<Instr>,
+    perms: Vec<Vec<i64>>,
+    params: Vec<ParamMeta>,
+    chip_len: usize,
+}
+
+/// Reused evaluation scratch (no per-element allocation).
+struct Scratch {
+    f: Vec<f32>,
+    i: Vec<i64>,
+}
+
+fn row_major(shape: &[i64]) -> Vec<i64> {
+    let mut s = vec![1i64; shape.len()];
+    for d in (0..shape.len().saturating_sub(1)).rev() {
+        s[d] = s[d + 1] * shape[d + 1];
+    }
+    s
+}
+
+/// Is the axis walk a contiguous row-major range?
+fn is_dense(axes: &[AxisWalk]) -> bool {
+    let mut expect = 1i64;
+    for a in axes.iter().rev() {
+        if a.stride != expect {
+            return false;
+        }
+        expect *= a.extent;
+    }
+    true
+}
+
+// ---------------------------------------------------------------------
+// compile-time expression evaluation (mirrors Expr::eval_int, but
+// returns errors where the interpreter would panic)
+// ---------------------------------------------------------------------
+
+fn ibin_checked(op: BinOp, a: i64, b: i64) -> Result<i64, String> {
+    Ok(match op {
+        BinOp::FloorDiv => {
+            if b == 0 {
+                return Err("division by zero in static expression".into());
+            }
+            a.div_euclid(b)
+        }
+        BinOp::FloorMod => {
+            if b == 0 {
+                return Err("mod by zero in static expression".into());
+            }
+            a.rem_euclid(b)
+        }
+        _ => ibin(op, a, b),
+    })
+}
+
+/// Integer binop with the interpreter's semantics; div/mod by zero yield
+/// 0 (only reachable from eagerly-evaluated untaken select branches).
+#[inline]
+fn ibin(op: BinOp, a: i64, b: i64) -> i64 {
+    match op {
+        BinOp::Add => a + b,
+        BinOp::Sub => a - b,
+        BinOp::Mul => a * b,
+        BinOp::FloorDiv => {
+            if b == 0 {
+                0
+            } else {
+                a.div_euclid(b)
+            }
+        }
+        BinOp::FloorMod => {
+            if b == 0 {
+                0
+            } else {
+                a.rem_euclid(b)
+            }
+        }
+        BinOp::Min => a.min(b),
+        BinOp::Max => a.max(b),
+        BinOp::BitXor => a ^ b,
+        BinOp::BitAnd => a & b,
+        BinOp::Shl => a << b,
+        BinOp::Shr => a >> b,
+        BinOp::Lt => (a < b) as i64,
+        BinOp::Le => (a <= b) as i64,
+        BinOp::Eq => (a == b) as i64,
+        BinOp::And => (a != 0 && b != 0) as i64,
+        BinOp::Or => (a != 0 || b != 0) as i64,
+    }
+}
+
+/// Static integer evaluation under the compile-time environment.
+fn ceval(e: &Expr, env: &HashMap<VarId, i64>) -> Result<i64, String> {
+    Ok(match e.kind() {
+        ExprKind::Var(v) => *env
+            .get(&v.id)
+            .ok_or_else(|| format!("unbound var {} in static expression", v.name))?,
+        ExprKind::Int(v) => *v,
+        ExprKind::Float(_) => return Err("float in integer expression".into()),
+        ExprKind::Bin(op, a, b) => ibin_checked(*op, ceval(a, env)?, ceval(b, env)?)?,
+        ExprKind::Un(op, a) => {
+            let x = ceval(a, env)?;
+            match op {
+                UnOp::Neg => -x,
+                UnOp::Abs => x.abs(),
+                UnOp::Not => (x == 0) as i64,
+                _ => return Err("float intrinsic in integer expression".into()),
+            }
+        }
+        ExprKind::Select(c, t, f) => {
+            if ceval(c, env)? != 0 {
+                ceval(t, env)?
+            } else {
+                ceval(f, env)?
+            }
+        }
+        ExprKind::Cast(_, a) => ceval(a, env)?,
+        ExprKind::Load(..) => return Err("load in address expression".into()),
+    })
+}
+
+/// Static float evaluation (mirrors `Interp::eval_value` on load-free
+/// expressions) — used to constant-fold axis-independent subtrees.
+fn feval(e: &Expr, env: &HashMap<VarId, i64>) -> Result<f32, String> {
+    Ok(match e.kind() {
+        ExprKind::Var(v) => *env
+            .get(&v.id)
+            .ok_or_else(|| format!("unbound var {} in value", v.name))? as f32,
+        ExprKind::Int(v) => *v as f32,
+        ExprKind::Float(v) => *v as f32,
+        ExprKind::Bin(op, a, b) => fbin(*op, feval(a, env)?, feval(b, env)?)?,
+        ExprKind::Un(op, a) => fun(*op, feval(a, env)?),
+        ExprKind::Select(c, t, f) => {
+            if feval(c, env)? != 0.0 {
+                feval(t, env)?
+            } else {
+                feval(f, env)?
+            }
+        }
+        ExprKind::Cast(dt, a) => round_to_dtype(feval(a, env)?, *dt),
+        ExprKind::Load(..) => return Err("load in constant value".into()),
+    })
+}
+
+#[inline]
+fn fbin(op: BinOp, x: f32, y: f32) -> Result<f32, String> {
+    Ok(match op {
+        BinOp::Add => x + y,
+        BinOp::Sub => x - y,
+        BinOp::Mul => x * y,
+        BinOp::FloorDiv => (x / y).floor(),
+        BinOp::FloorMod => x - (x / y).floor() * y,
+        BinOp::Min => x.min(y),
+        BinOp::Max => x.max(y),
+        BinOp::Lt => (x < y) as i32 as f32,
+        BinOp::Le => (x <= y) as i32 as f32,
+        BinOp::Eq => (x == y) as i32 as f32,
+        BinOp::And => ((x != 0.0) && (y != 0.0)) as i32 as f32,
+        BinOp::Or => ((x != 0.0) || (y != 0.0)) as i32 as f32,
+        BinOp::BitXor | BinOp::BitAnd | BinOp::Shl | BinOp::Shr => {
+            return Err("bitwise op in float value".into())
+        }
+    })
+}
+
+#[inline]
+fn fun(op: UnOp, x: f32) -> f32 {
+    match op {
+        UnOp::Neg => -x,
+        UnOp::Exp => x.exp(),
+        UnOp::Exp2 => x.exp2(),
+        UnOp::Log => x.ln(),
+        UnOp::Sqrt => x.sqrt(),
+        UnOp::Rsqrt => 1.0 / x.sqrt(),
+        UnOp::Abs => x.abs(),
+        UnOp::Tanh => x.tanh(),
+        UnOp::Not => (x == 0.0) as i32 as f32,
+    }
+}
+
+fn uses_axis(e: &Expr, axes: &HashMap<VarId, usize>) -> bool {
+    match e.kind() {
+        ExprKind::Var(v) => axes.contains_key(&v.id),
+        ExprKind::Int(_) | ExprKind::Float(_) => false,
+        ExprKind::Bin(_, a, b) => uses_axis(a, axes) || uses_axis(b, axes),
+        ExprKind::Un(_, a) => uses_axis(a, axes),
+        ExprKind::Select(c, t, f) => {
+            uses_axis(c, axes) || uses_axis(t, axes) || uses_axis(f, axes)
+        }
+        ExprKind::Cast(_, a) => uses_axis(a, axes),
+        ExprKind::Load(_, idx) => idx.iter().any(|e| uses_axis(e, axes)),
+    }
+}
+
+fn has_load(e: &Expr) -> bool {
+    match e.kind() {
+        ExprKind::Var(_) | ExprKind::Int(_) | ExprKind::Float(_) => false,
+        ExprKind::Bin(_, a, b) => has_load(a) || has_load(b),
+        ExprKind::Un(_, a) => has_load(a),
+        ExprKind::Select(c, t, f) => has_load(c) || has_load(t) || has_load(f),
+        ExprKind::Cast(_, a) => has_load(a),
+        ExprKind::Load(..) => true,
+    }
+}
+
+// ---------------------------------------------------------------------
+// compiler
+// ---------------------------------------------------------------------
+
+/// Lower `prog` to bytecode. Fails (rather than miscompiling) on
+/// programs the interpreter could not execute either: dynamic grids,
+/// non-static loop extents, out-of-range on-chip regions.
+pub fn compile_lowered(prog: &LoweredProgram) -> Result<CompiledProgram, String> {
+    Compiler::new(prog)?.compile()
+}
+
+struct Compiler<'p> {
+    prog: &'p LoweredProgram,
+    chip: HashMap<BufferId, ChipBuf>,
+    perms: Vec<Vec<i64>>,
+    params: Vec<ParamMeta>,
+    pidx: HashMap<BufferId, usize>,
+    chip_len: i64,
+    instrs: Vec<Instr>,
+    /// Async-copy queue, mirrored at compile time: uncommitted copies,
+    /// then committed groups in FIFO order.
+    current: Vec<Instr>,
+    pending: Vec<Vec<Instr>>,
+}
+
+impl<'p> Compiler<'p> {
+    fn new(prog: &'p LoweredProgram) -> Result<Compiler<'p>, String> {
+        let mut params = Vec::new();
+        let mut pidx = HashMap::new();
+        for b in &prog.params {
+            let shape = b
+                .static_shape()
+                .ok_or_else(|| format!("param {} must be static for execution", b.name))?;
+            pidx.insert(b.id, params.len());
+            params.push(ParamMeta {
+                id: b.id,
+                name: b.name.clone(),
+                len: shape.iter().product::<i64>() as usize,
+                shape,
+            });
+        }
+        let mut chip = HashMap::new();
+        let mut perms: Vec<Vec<i64>> = Vec::new();
+        let mut chip_len = 0i64;
+        for s in &prog.shared {
+            let l = prog.layout.shared_layout(s.buf);
+            let shape = l.input_shape();
+            let table = l.table();
+            let logical: i64 = shape.iter().product();
+            if table.len() as i64 != logical {
+                return Err(format!(
+                    "shared layout table for buffer {} covers {} cells, expected {}",
+                    s.buf,
+                    table.len(),
+                    logical
+                ));
+            }
+            let identity = table.iter().enumerate().all(|(i, &p)| p == i as i64);
+            let perm = if identity {
+                None
+            } else {
+                if table.iter().any(|&p| p < 0 || p >= s.cells_per_slot) {
+                    return Err(format!(
+                        "shared layout for buffer {} maps outside its {} physical cells",
+                        s.buf, s.cells_per_slot
+                    ));
+                }
+                perms.push(table);
+                Some(perms.len() - 1)
+            };
+            chip.insert(
+                s.buf,
+                ChipBuf {
+                    base: chip_len,
+                    cells: s.cells_per_slot,
+                    slots: s.slots,
+                    shape,
+                    dtype: s.dtype,
+                    scope: MemScope::Shared,
+                    perm,
+                },
+            );
+            chip_len += s.cells_per_slot * s.slots;
+        }
+        for f in &prog.frags {
+            let fr = prog.layout.fragment(f.buf).to_table();
+            let cells: i64 = fr.shape.iter().product();
+            chip.insert(
+                f.buf,
+                ChipBuf {
+                    base: chip_len,
+                    cells,
+                    slots: 1,
+                    shape: fr.shape.clone(),
+                    dtype: f.dtype,
+                    scope: MemScope::Fragment,
+                    perm: None,
+                },
+            );
+            chip_len += cells;
+        }
+        Ok(Compiler {
+            prog,
+            chip,
+            perms,
+            params,
+            pidx,
+            chip_len,
+            instrs: Vec::new(),
+            current: Vec::new(),
+            pending: Vec::new(),
+        })
+    }
+
+    fn compile(mut self) -> Result<CompiledProgram, String> {
+        let grid = self
+            .prog
+            .static_grid()
+            .ok_or("grid must be static for execution (specialize first)")?;
+        let total: i64 = grid.iter().product();
+        for flat in 0..total {
+            let mut rem = flat;
+            let mut env: HashMap<VarId, i64> = HashMap::new();
+            for (d, v) in self.prog.block_vars.iter().enumerate() {
+                env.insert(v.id, rem % grid[d]);
+                rem /= grid[d];
+            }
+            self.instrs.push(Instr::ZeroChip);
+            let body = self.prog.body.clone();
+            self.walk(&body, &mut env)?;
+            // epilogue flush: committed groups execute, uncommitted
+            // copies are dropped (exactly the interpreter's block end)
+            while let Some(g) = (!self.pending.is_empty()).then(|| self.pending.remove(0)) {
+                self.instrs.extend(g);
+            }
+            self.current.clear();
+        }
+        Ok(CompiledProgram {
+            name: self.prog.name.clone(),
+            instrs: self.instrs,
+            perms: self.perms,
+            params: self.params,
+            chip_len: self.chip_len as usize,
+        })
+    }
+
+    fn cb(&self, buf: BufferId) -> Result<&ChipBuf, String> {
+        self.chip
+            .get(&buf)
+            .ok_or_else(|| format!("buffer {} is not on-chip", buf))
+    }
+
+    fn dtype_of(&self, buf: BufferId) -> DType {
+        if let Some(c) = self.chip.get(&buf) {
+            return c.dtype;
+        }
+        if let Some(&p) = self.pidx.get(&buf) {
+            return self
+                .prog
+                .param(self.params[p].id)
+                .dtype;
+        }
+        DType::F32
+    }
+
+    fn walk(&mut self, stmts: &[TStmt], env: &mut HashMap<VarId, i64>) -> Result<(), String> {
+        for s in stmts {
+            self.emit(s, env)?;
+        }
+        Ok(())
+    }
+
+    fn emit(&mut self, s: &TStmt, env: &mut HashMap<VarId, i64>) -> Result<(), String> {
+        match s {
+            TStmt::For {
+                var, extent, body, ..
+            } => {
+                let e = ceval(extent, env)?;
+                for i in 0..e {
+                    env.insert(var.id, i);
+                    self.walk(body, env)?;
+                }
+                env.remove(&var.id);
+                Ok(())
+            }
+            TStmt::If {
+                cond,
+                then_body,
+                else_body,
+            } => {
+                if ceval(cond, env)? != 0 {
+                    self.walk(then_body, env)
+                } else {
+                    self.walk(else_body, env)
+                }
+            }
+            TStmt::Copy { src, dst, binding } => {
+                let ins = self.copy_instr(src, dst, env)?;
+                if binding.is_async {
+                    self.current.push(ins);
+                } else {
+                    self.instrs.push(ins);
+                }
+                Ok(())
+            }
+            TStmt::AsyncCommit => {
+                let g = std::mem::take(&mut self.current);
+                self.pending.push(g);
+                Ok(())
+            }
+            TStmt::AsyncWait(n) => {
+                while self.pending.len() > *n {
+                    let g = self.pending.remove(0);
+                    self.instrs.extend(g);
+                }
+                Ok(())
+            }
+            TStmt::Barrier => Ok(()), // lockstep execution: no-op numerically
+            TStmt::Fill { buf, value } => {
+                let c = self.cb(*buf)?;
+                self.instrs.push(Instr::Fill {
+                    seg: c.base,
+                    len: c.cells * c.slots,
+                    value: round_to_dtype(*value as f32, c.dtype),
+                });
+                Ok(())
+            }
+            TStmt::Gemm {
+                a,
+                b,
+                c,
+                trans_a,
+                trans_b,
+                ..
+            } => {
+                let ins = self.gemm_instr(a, b, *c, *trans_a, *trans_b, env)?;
+                self.instrs.push(ins);
+                Ok(())
+            }
+            TStmt::Reduce {
+                src,
+                dst,
+                dim,
+                kind,
+                clear,
+            } => {
+                let ins = self.reduce_instr(*src, *dst, *dim, *kind, *clear)?;
+                self.instrs.push(ins);
+                Ok(())
+            }
+            TStmt::Dequant {
+                src,
+                dst,
+                scheme,
+                scale,
+                group_size,
+            } => {
+                let ins = self.dequant_instr(*src, *dst, *scheme, *scale, *group_size)?;
+                self.instrs.push(ins);
+                Ok(())
+            }
+            TStmt::Atomic { dst, src, kind } => {
+                let ins = self.atomic_instr(dst, *src, *kind, env)?;
+                self.instrs.push(ins);
+                Ok(())
+            }
+            TStmt::Parallel {
+                vars,
+                extents,
+                body,
+                ..
+            } => {
+                let ins = self.parallel_instr(vars, extents, body, env)?;
+                self.instrs.push(ins);
+                Ok(())
+            }
+        }
+    }
+
+    /// Resolve a region reference into a strided `View`.
+    fn view(&self, r: &RegionRef, env: &HashMap<VarId, i64>) -> Result<View, String> {
+        if let Some(&p) = self.pidx.get(&r.buf) {
+            let meta = &self.params[p];
+            if r.offsets.len() != meta.shape.len() || r.shape.len() != meta.shape.len() {
+                return Err(format!(
+                    "region rank {} does not match param {} rank {}",
+                    r.shape.len(),
+                    meta.name,
+                    meta.shape.len()
+                ));
+            }
+            let strides = row_major(&meta.shape);
+            let mut rel0 = 0i64;
+            let mut axes = Vec::with_capacity(r.shape.len());
+            let mut guarded = false;
+            for d in 0..r.shape.len() {
+                let o = ceval(&r.offsets[d], env)?;
+                rel0 += o * strides[d];
+                let extent = r.shape[d];
+                let lo = (-o).clamp(0, extent);
+                let hi = (meta.shape[d] - o).clamp(lo, extent);
+                if lo > 0 || hi < extent {
+                    guarded = true;
+                }
+                axes.push(AxisWalk {
+                    extent,
+                    stride: strides[d],
+                    lo,
+                    hi,
+                });
+            }
+            let dense = !guarded && is_dense(&axes);
+            return Ok(View {
+                slab: Slab::Param(p),
+                seg: 0,
+                rel0,
+                axes,
+                perm: None,
+                guarded,
+                dense,
+            });
+        }
+        let c = self.cb(r.buf)?;
+        if r.offsets.len() != c.shape.len() || r.shape.len() != c.shape.len() {
+            return Err(format!(
+                "region rank {} does not match on-chip buffer {} rank {}",
+                r.shape.len(),
+                r.buf,
+                c.shape.len()
+            ));
+        }
+        let slot = ceval(&r.slot, env)?;
+        if slot < 0 || slot >= c.slots {
+            return Err(format!(
+                "slot {} out of range for buffer {} ({} slots)",
+                slot, r.buf, c.slots
+            ));
+        }
+        let strides = row_major(&c.shape);
+        let mut rel0 = 0i64;
+        let mut axes = Vec::with_capacity(r.shape.len());
+        for d in 0..r.shape.len() {
+            let o = ceval(&r.offsets[d], env)?;
+            if o < 0 || o + r.shape[d] > c.shape[d] {
+                return Err(format!(
+                    "on-chip region [{}..{}) exceeds buffer {} dim {} extent {}",
+                    o,
+                    o + r.shape[d],
+                    r.buf,
+                    d,
+                    c.shape[d]
+                ));
+            }
+            rel0 += o * strides[d];
+            axes.push(AxisWalk {
+                extent: r.shape[d],
+                stride: strides[d],
+                lo: 0,
+                hi: r.shape[d],
+            });
+        }
+        let dense = c.perm.is_none() && rel0 == 0 && is_dense(&axes);
+        Ok(View {
+            slab: Slab::Chip,
+            seg: c.base + slot * c.cells,
+            rel0,
+            axes,
+            perm: c.perm,
+            guarded: false,
+            dense,
+        })
+    }
+
+    fn copy_instr(
+        &self,
+        src: &RegionRef,
+        dst: &RegionRef,
+        env: &HashMap<VarId, i64>,
+    ) -> Result<Instr, String> {
+        let sv = self.view(src, env)?;
+        let dv = self.view(dst, env)?;
+        let count = dv.count();
+        if sv.count() != count {
+            return Err(format!(
+                "copy cell count mismatch: src {} vs dst {}",
+                sv.count(),
+                count
+            ));
+        }
+        Ok(Instr::Copy(Box::new(CopyOp {
+            dtype: self.dtype_of(dst.buf),
+            src: sv,
+            dst: dv,
+            count,
+        })))
+    }
+
+    fn gemm_instr(
+        &self,
+        a: &RegionRef,
+        b: &RegionRef,
+        c: BufferId,
+        trans_a: bool,
+        trans_b: bool,
+        env: &HashMap<VarId, i64>,
+    ) -> Result<Instr, String> {
+        let (sa, sb) = (&a.shape, &b.shape);
+        if sa.len() != 2 || sb.len() != 2 {
+            return Err("gemm operands must be rank-2 regions".into());
+        }
+        let (m, k) = if trans_a {
+            (sa[1], sa[0])
+        } else {
+            (sa[0], sa[1])
+        };
+        let n = if trans_b { sb[0] } else { sb[1] };
+        let av = self.view(a, env)?;
+        let bv = self.view(b, env)?;
+        // map (row r, reduction kk) onto the region's (dim0, dim1):
+        // a indexes [i, kk] (transposed: [kk, i]), b indexes [kk, j]
+        // (transposed: [j, kk])
+        let a_mat = mat_of(&av, !trans_a);
+        let b_mat = mat_of(&bv, trans_b);
+        let cb = self.cb(c)?;
+        if cb.scope != MemScope::Fragment {
+            return Err("gemm accumulator must be a fragment".into());
+        }
+        if cb.shape.len() != 2 || m > cb.shape[0] || n > cb.shape[1] {
+            return Err(format!(
+                "gemm {}x{} accumulator exceeds fragment shape {:?}",
+                m, n, cb.shape
+            ));
+        }
+        Ok(Instr::Gemm(Box::new(GemmOp {
+            m,
+            n,
+            k,
+            a: a_mat,
+            b: b_mat,
+            c_seg: cb.base,
+            c_rs: cb.shape[1],
+        })))
+    }
+
+    fn reduce_instr(
+        &self,
+        src: BufferId,
+        dst: BufferId,
+        dim: usize,
+        kind: ReduceKind,
+        clear: bool,
+    ) -> Result<Instr, String> {
+        let sc = self.cb(src)?;
+        let dc = self.cb(dst)?;
+        if sc.scope != MemScope::Fragment || dc.scope != MemScope::Fragment {
+            return Err("reduce src/dst must be fragments".into());
+        }
+        let out = dc.shape.clone();
+        let ss = row_major(&sc.shape);
+        if dim >= sc.shape.len() {
+            return Err(format!("reduce dim {} out of range for {:?}", dim, sc.shape));
+        }
+        let src_strides: Vec<i64> = if sc.shape.len() == out.len() {
+            // dst kept a dummy dim
+            (0..out.len())
+                .map(|d| if d == dim { 0 } else { ss[d] })
+                .collect()
+        } else if sc.shape.len() == out.len() + 1 {
+            (0..out.len())
+                .map(|d| ss[if d < dim { d } else { d + 1 }])
+                .collect()
+        } else {
+            return Err(format!(
+                "reduce rank mismatch: src {:?} dst {:?}",
+                sc.shape, out
+            ));
+        };
+        for d in 0..out.len() {
+            let sd = if sc.shape.len() == out.len() {
+                d
+            } else if d < dim {
+                d
+            } else {
+                d + 1
+            };
+            if sd != dim && out[d] > sc.shape[sd] {
+                return Err(format!(
+                    "reduce output {:?} exceeds source {:?}",
+                    out, sc.shape
+                ));
+            }
+        }
+        Ok(Instr::Reduce(Box::new(ReduceOp {
+            src_strides,
+            out_extents: out,
+            dst_seg: dc.base,
+            src_seg: sc.base,
+            red_extent: sc.shape[dim],
+            red_stride: ss[dim],
+            kind,
+            clear,
+            dtype: dc.dtype,
+        })))
+    }
+
+    fn dequant_instr(
+        &self,
+        src: BufferId,
+        dst: BufferId,
+        scheme: DequantScheme,
+        scale: Option<BufferId>,
+        group_size: i64,
+    ) -> Result<Instr, String> {
+        let dc = self.cb(dst)?;
+        if dc.scope != MemScope::Fragment || dc.shape.len() != 2 {
+            return Err("dequant dst must be a rank-2 fragment".into());
+        }
+        let sc = self.cb(src)?;
+        if sc.shape.len() != 2 {
+            return Err("dequant src must be a rank-2 on-chip buffer".into());
+        }
+        let (rows, cols) = (dc.shape[0], dc.shape[1]);
+        let bits = match scheme {
+            DequantScheme::UintAffine { .. } => {
+                // bits derivable from shape ratio
+                let epb = dc.shape[1] / sc.shape[1];
+                if epb <= 0 || 8 % epb != 0 {
+                    return Err(format!(
+                        "dequant shape ratio {} does not give a byte-packable width",
+                        epb
+                    ));
+                }
+                (8 / epb) as u32
+            }
+            DequantScheme::Nf4Lut | DequantScheme::Fp4E2m1 => 4,
+        };
+        let epb = (8 / bits) as i64;
+        if rows > sc.shape[0] || (cols - 1) / epb >= sc.shape[1] {
+            return Err(format!(
+                "dequant dst {:?} reads outside packed src {:?}",
+                dc.shape, sc.shape
+            ));
+        }
+        let scale_ref = match scale {
+            Some(s) => {
+                let b = self.cb(s)?;
+                if b.shape.len() != 2 {
+                    return Err("dequant scale must be a rank-2 on-chip buffer".into());
+                }
+                if group_size <= 0 {
+                    return Err("dequant group_size must be positive".into());
+                }
+                if rows > b.shape[0] || (cols - 1) / group_size >= b.shape[1] {
+                    return Err(format!(
+                        "dequant dst {:?} reads outside scale {:?}",
+                        dc.shape, b.shape
+                    ));
+                }
+                Some(ScaleRef {
+                    seg: b.base,
+                    s0: b.shape[1],
+                    s1: 1,
+                    perm: b.perm,
+                })
+            }
+            None => None,
+        };
+        Ok(Instr::Dequant(Box::new(DequantOp {
+            rows,
+            cols,
+            src_seg: sc.base,
+            src_s0: sc.shape[1],
+            src_s1: 1,
+            src_perm: sc.perm,
+            scale: scale_ref,
+            dst_seg: dc.base,
+            scheme,
+            bits,
+            epb,
+            group: group_size,
+            dtype: dc.dtype,
+        })))
+    }
+
+    fn atomic_instr(
+        &self,
+        dst: &RegionRef,
+        src: BufferId,
+        kind: AtomicKind,
+        env: &HashMap<VarId, i64>,
+    ) -> Result<Instr, String> {
+        let dv = self.view(dst, env)?;
+        if !matches!(dv.slab, Slab::Param(_)) {
+            return Err("atomic destination must be a global param".into());
+        }
+        // source cells are read over the destination's cell domain
+        let src_region = if let Some(c) = self.chip.get(&src) {
+            if c.shape != dst.shape {
+                return Err(format!(
+                    "atomic src shape {:?} differs from dst region {:?}",
+                    c.shape, dst.shape
+                ));
+            }
+            RegionRef::whole(src, c.shape.clone())
+        } else if let Some(&p) = self.pidx.get(&src) {
+            if self.params[p].shape != dst.shape {
+                return Err(format!(
+                    "atomic src shape {:?} differs from dst region {:?}",
+                    self.params[p].shape, dst.shape
+                ));
+            }
+            RegionRef::whole(src, self.params[p].shape.clone())
+        } else {
+            return Err(format!("atomic src buffer {} unknown", src));
+        };
+        let sv = self.view(&src_region, env)?;
+        let count = dv.count();
+        Ok(Instr::Atomic(Box::new(AtomicOp {
+            src: sv,
+            dtype: self.dtype_of(dst.buf),
+            dst: dv,
+            kind,
+            count,
+        })))
+    }
+
+    fn parallel_instr(
+        &self,
+        vars: &[crate::ir::expr::Var],
+        extents: &[i64],
+        body: &[ElemStmt],
+        env: &HashMap<VarId, i64>,
+    ) -> Result<Instr, String> {
+        let axes: HashMap<VarId, usize> =
+            vars.iter().enumerate().map(|(i, v)| (v.id, i)).collect();
+        let mut stmts = Vec::with_capacity(body.len());
+        for es in body {
+            let dst = if let Some(&p) = self.pidx.get(&es.dst) {
+                Dst::Global {
+                    param: p,
+                    shape: self.params[p].shape.clone(),
+                }
+            } else {
+                let c = self.cb(es.dst)?;
+                Dst::Chip {
+                    seg: c.base,
+                    strides: row_major(&c.shape),
+                    perm: c.perm,
+                    cells: c.shape.iter().product(),
+                }
+            };
+            let idx = es
+                .indices
+                .iter()
+                .map(|e| self.itape(e, env, &axes))
+                .collect::<Result<Vec<_>, String>>()?;
+            let mut loads = Vec::new();
+            let mut value = Vec::new();
+            self.ftape(&es.value, env, &axes, &mut value, &mut loads)?;
+            stmts.push(ElemWrite {
+                idx,
+                value,
+                loads,
+                dst,
+                dtype: self.dtype_of(es.dst),
+            });
+        }
+        Ok(Instr::Elems(Box::new(ElemsOp {
+            extents: extents.to_vec(),
+            stmts,
+        })))
+    }
+
+    /// Build an integer tape; axis-free subtrees constant-fold.
+    fn itape(
+        &self,
+        e: &Expr,
+        env: &HashMap<VarId, i64>,
+        axes: &HashMap<VarId, usize>,
+    ) -> Result<Vec<IOp>, String> {
+        let mut out = Vec::new();
+        self.itape_into(e, env, axes, &mut out)?;
+        Ok(out)
+    }
+
+    fn itape_into(
+        &self,
+        e: &Expr,
+        env: &HashMap<VarId, i64>,
+        axes: &HashMap<VarId, usize>,
+        out: &mut Vec<IOp>,
+    ) -> Result<(), String> {
+        if !uses_axis(e, axes) {
+            out.push(IOp::Const(ceval(e, env)?));
+            return Ok(());
+        }
+        match e.kind() {
+            ExprKind::Var(v) => out.push(IOp::Axis(axes[&v.id])),
+            ExprKind::Bin(op, a, b) => {
+                self.itape_into(a, env, axes, out)?;
+                self.itape_into(b, env, axes, out)?;
+                out.push(IOp::Bin(*op));
+            }
+            ExprKind::Un(op, a) => {
+                if !matches!(op, UnOp::Neg | UnOp::Abs | UnOp::Not) {
+                    return Err("float intrinsic in integer expression".into());
+                }
+                self.itape_into(a, env, axes, out)?;
+                out.push(IOp::Un(*op));
+            }
+            ExprKind::Select(c, t, f) => {
+                self.itape_into(c, env, axes, out)?;
+                self.itape_into(t, env, axes, out)?;
+                self.itape_into(f, env, axes, out)?;
+                out.push(IOp::Select);
+            }
+            ExprKind::Cast(_, a) => self.itape_into(a, env, axes, out)?,
+            ExprKind::Int(_) | ExprKind::Float(_) | ExprKind::Load(..) => {
+                return Err("invalid node in address expression".into())
+            }
+        }
+        Ok(())
+    }
+
+    /// Build a float tape; axis-free load-free subtrees constant-fold.
+    fn ftape(
+        &self,
+        e: &Expr,
+        env: &HashMap<VarId, i64>,
+        axes: &HashMap<VarId, usize>,
+        out: &mut Vec<FOp>,
+        loads: &mut Vec<LoadRef>,
+    ) -> Result<(), String> {
+        if !uses_axis(e, axes) && !has_load(e) {
+            out.push(FOp::Const(feval(e, env)?));
+            return Ok(());
+        }
+        match e.kind() {
+            ExprKind::Var(v) => out.push(FOp::Axis(axes[&v.id])),
+            ExprKind::Int(v) => out.push(FOp::Const(*v as f32)),
+            ExprKind::Float(v) => out.push(FOp::Const(*v as f32)),
+            ExprKind::Load(buf, idx) => {
+                let idx_tapes = idx
+                    .iter()
+                    .map(|x| self.itape(x, env, axes))
+                    .collect::<Result<Vec<_>, String>>()?;
+                let src = if let Some(&p) = self.pidx.get(buf) {
+                    LSrc::Global {
+                        param: p,
+                        shape: self.params[p].shape.clone(),
+                    }
+                } else {
+                    let c = self.cb(*buf)?;
+                    LSrc::Chip {
+                        seg: c.base,
+                        strides: row_major(&c.shape),
+                        perm: c.perm,
+                        cells: c.shape.iter().product(),
+                    }
+                };
+                loads.push(LoadRef {
+                    idx: idx_tapes,
+                    src,
+                });
+                out.push(FOp::Load(loads.len() - 1));
+            }
+            ExprKind::Bin(op, a, b) => {
+                if matches!(
+                    op,
+                    BinOp::BitXor | BinOp::BitAnd | BinOp::Shl | BinOp::Shr
+                ) {
+                    return Err("bitwise op in float value".into());
+                }
+                self.ftape(a, env, axes, out, loads)?;
+                self.ftape(b, env, axes, out, loads)?;
+                out.push(FOp::Bin(*op));
+            }
+            ExprKind::Un(op, a) => {
+                self.ftape(a, env, axes, out, loads)?;
+                out.push(FOp::Un(*op));
+            }
+            ExprKind::Select(c, t, f) => {
+                // fold a static condition to preserve lazy-branch
+                // semantics where possible
+                if !uses_axis(c, axes) && !has_load(c) {
+                    if feval(c, env)? != 0.0 {
+                        self.ftape(t, env, axes, out, loads)?;
+                    } else {
+                        self.ftape(f, env, axes, out, loads)?;
+                    }
+                } else {
+                    self.ftape(c, env, axes, out, loads)?;
+                    self.ftape(t, env, axes, out, loads)?;
+                    self.ftape(f, env, axes, out, loads)?;
+                    out.push(FOp::Select);
+                }
+            }
+            ExprKind::Cast(dt, a) => {
+                self.ftape(a, env, axes, out, loads)?;
+                out.push(FOp::Cast(*dt));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Map a rank-2 view onto GEMM (row, reduction) coordinates.
+/// `row_is_dim0`: the row index selects dim 0 (else dim 1).
+fn mat_of(v: &View, row_is_dim0: bool) -> Mat {
+    let (r, k) = if row_is_dim0 {
+        (&v.axes[0], &v.axes[1])
+    } else {
+        (&v.axes[1], &v.axes[0])
+    };
+    Mat {
+        slab: v.slab,
+        seg: v.seg,
+        rel0: v.rel0,
+        rs: r.stride,
+        ks: k.stride,
+        perm: v.perm,
+        r_lo: r.lo,
+        r_hi: r.hi,
+        k_lo: k.lo,
+        k_hi: k.hi,
+        guarded: v.guarded,
+    }
+}
+
+// ---------------------------------------------------------------------
+// execution
+// ---------------------------------------------------------------------
+
+impl CompiledProgram {
+    /// Kernel name (from the lowered program).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Total instructions in the (fully unrolled) stream.
+    pub fn instr_count(&self) -> usize {
+        self.instrs.len()
+    }
+
+    /// On-chip arena cells per block.
+    pub fn chip_cells(&self) -> usize {
+        self.chip_len
+    }
+
+    /// Execute the whole grid. Same interface and same results as
+    /// `Interp::run`: `tensors` maps every global param id to row-major
+    /// f32 contents (created zero-filled if missing).
+    pub fn run(&self, tensors: &mut Tensors) -> Result<(), String> {
+        let mut globals: Vec<Vec<f32>> = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let t = tensors
+                .remove(&p.id)
+                .unwrap_or_else(|| vec![0.0; p.len]);
+            if t.len() != p.len {
+                let msg = format!(
+                    "tensor for {} has {} elements, expected {}",
+                    p.name,
+                    t.len(),
+                    p.len
+                );
+                tensors.insert(p.id, t);
+                for (q, v) in self.params.iter().zip(globals.drain(..)) {
+                    tensors.insert(q.id, v);
+                }
+                return Err(msg);
+            }
+            globals.push(t);
+        }
+        let mut chip = vec![0.0f32; self.chip_len];
+        let mut scratch = Scratch {
+            f: Vec::with_capacity(16),
+            i: Vec::with_capacity(16),
+        };
+        let mut res = Ok(());
+        for ins in &self.instrs {
+            res = self.exec(ins, &mut chip, &mut globals, &mut scratch);
+            if res.is_err() {
+                break;
+            }
+        }
+        for (p, v) in self.params.iter().zip(globals.into_iter()) {
+            tensors.insert(p.id, v);
+        }
+        res
+    }
+
+    fn exec(
+        &self,
+        ins: &Instr,
+        chip: &mut [f32],
+        globals: &mut [Vec<f32>],
+        scratch: &mut Scratch,
+    ) -> Result<(), String> {
+        match ins {
+            Instr::ZeroChip => {
+                chip.fill(0.0);
+                Ok(())
+            }
+            Instr::Fill { seg, len, value } => {
+                let s = *seg as usize;
+                chip[s..s + *len as usize].fill(*value);
+                Ok(())
+            }
+            Instr::Copy(c) => self.exec_copy(c, chip, globals),
+            Instr::Gemm(g) => {
+                self.exec_gemm(g, chip, globals);
+                Ok(())
+            }
+            Instr::Reduce(r) => {
+                exec_reduce(r, chip);
+                Ok(())
+            }
+            Instr::Dequant(d) => {
+                self.exec_dequant(d, chip);
+                Ok(())
+            }
+            Instr::Atomic(a) => {
+                self.exec_atomic(a, chip, globals);
+                Ok(())
+            }
+            Instr::Elems(e) => self.exec_elems(e, chip, globals, scratch),
+        }
+    }
+
+    #[inline]
+    fn addr(&self, v: &View, rel: i64) -> usize {
+        match v.perm {
+            Some(p) => (v.seg + self.perms[p][rel as usize]) as usize,
+            None => (v.seg + rel) as usize,
+        }
+    }
+
+    fn exec_copy(
+        &self,
+        c: &CopyOp,
+        chip: &mut [f32],
+        globals: &mut [Vec<f32>],
+    ) -> Result<(), String> {
+        let n = c.count as usize;
+        // dense f32 fast path: straight slice copy when both sides are
+        // contiguous, fully in-bounds, and storage applies no rounding
+        if c.src.dense && c.dst.dense && c.dtype == DType::F32 {
+            let s0 = self.addr(&c.src, c.src.rel0);
+            let d0 = self.addr(&c.dst, c.dst.rel0);
+            match (c.src.slab, c.dst.slab) {
+                (Slab::Chip, Slab::Chip) if s0 + n <= d0 || d0 + n <= s0 => {
+                    chip.copy_within(s0..s0 + n, d0);
+                    return Ok(());
+                }
+                (Slab::Param(p), Slab::Chip) => {
+                    chip[d0..d0 + n].copy_from_slice(&globals[p][s0..s0 + n]);
+                    return Ok(());
+                }
+                (Slab::Chip, Slab::Param(p)) => {
+                    globals[p][d0..d0 + n].copy_from_slice(&chip[s0..s0 + n]);
+                    return Ok(());
+                }
+                (Slab::Param(p), Slab::Param(q))
+                    if p != q || s0 + n <= d0 || d0 + n <= s0 =>
+                {
+                    if p == q {
+                        globals[p].copy_within(s0..s0 + n, d0);
+                    } else {
+                        let (src, dst) = two_params(globals, p, q);
+                        dst[d0..d0 + n].copy_from_slice(&src[s0..s0 + n]);
+                    }
+                    return Ok(());
+                }
+                _ => {} // overlapping: element order matters, fall through
+            }
+        }
+        let mut sc = Cursor::new(&c.src);
+        let mut dc = Cursor::new(&c.dst);
+        for _ in 0..c.count {
+            let v = if sc.valid() {
+                let a = self.addr(&c.src, sc.rel);
+                match c.src.slab {
+                    Slab::Chip => chip[a],
+                    Slab::Param(p) => globals[p][a],
+                }
+            } else {
+                0.0 // out-of-bounds read: predicated off
+            };
+            if dc.valid() {
+                let a = self.addr(&c.dst, dc.rel);
+                let v = round_to_dtype(v, c.dtype);
+                match c.dst.slab {
+                    Slab::Chip => chip[a] = v,
+                    Slab::Param(p) => globals[p][a] = v,
+                }
+            }
+            sc.step(&c.src.axes);
+            dc.step(&c.dst.axes);
+        }
+        Ok(())
+    }
+
+    fn exec_gemm(&self, g: &GemmOp, chip: &mut [f32], globals: &[Vec<f32>]) {
+        // hot path: both operands on-chip, identity layout, in-bounds —
+        // a branch-free fma-over-block_k inner loop
+        if g.a.slab == Slab::Chip
+            && g.b.slab == Slab::Chip
+            && g.a.perm.is_none()
+            && g.b.perm.is_none()
+            && !g.a.guarded
+            && !g.b.guarded
+        {
+            for i in 0..g.m {
+                let a_row = g.a.seg + g.a.rel0 + i * g.a.rs;
+                let c_row = g.c_seg + i * g.c_rs;
+                for j in 0..g.n {
+                    let caddr = (c_row + j) as usize;
+                    let mut acc = chip[caddr];
+                    let b_col = g.b.seg + g.b.rel0 + j * g.b.rs;
+                    let mut ai = a_row;
+                    let mut bi = b_col;
+                    for _ in 0..g.k {
+                        acc += chip[ai as usize] * chip[bi as usize];
+                        ai += g.a.ks;
+                        bi += g.b.ks;
+                    }
+                    chip[caddr] = acc; // unrounded f32 accumulator
+                }
+            }
+            return;
+        }
+        for i in 0..g.m {
+            let c_row = g.c_seg + i * g.c_rs;
+            for j in 0..g.n {
+                let caddr = (c_row + j) as usize;
+                let mut acc = chip[caddr];
+                for kk in 0..g.k {
+                    acc += self.mat_read(&g.a, i, kk, chip, globals)
+                        * self.mat_read(&g.b, j, kk, chip, globals);
+                }
+                chip[caddr] = acc;
+            }
+        }
+    }
+
+    #[inline]
+    fn mat_read(&self, m: &Mat, r: i64, k: i64, chip: &[f32], globals: &[Vec<f32>]) -> f32 {
+        if m.guarded && !(r >= m.r_lo && r < m.r_hi && k >= m.k_lo && k < m.k_hi) {
+            return 0.0;
+        }
+        let rel = m.rel0 + r * m.rs + k * m.ks;
+        let a = match m.perm {
+            Some(p) => (m.seg + self.perms[p][rel as usize]) as usize,
+            None => (m.seg + rel) as usize,
+        };
+        match m.slab {
+            Slab::Chip => chip[a],
+            Slab::Param(p) => globals[p][a],
+        }
+    }
+
+    fn exec_dequant(&self, d: &DequantOp, chip: &mut [f32]) {
+        let mask = (1u32 << d.bits) - 1;
+        for i in 0..d.rows {
+            for j in 0..d.cols {
+                let rel = i * d.src_s0 + (j / d.epb) * d.src_s1;
+                let a = match d.src_perm {
+                    Some(p) => (d.src_seg + self.perms[p][rel as usize]) as usize,
+                    None => (d.src_seg + rel) as usize,
+                };
+                let byte = chip[a] as u32;
+                let code = (byte >> (((j % d.epb) as u32) * d.bits)) & mask;
+                let base = match d.scheme {
+                    DequantScheme::UintAffine { zero } => code as f32 - zero as f32,
+                    DequantScheme::Nf4Lut => NF4_TABLE[code as usize],
+                    DequantScheme::Fp4E2m1 => fp4_e2m1_decode(code as u8),
+                };
+                let s = match &d.scale {
+                    Some(sc) => {
+                        let rel = i * sc.s0 + (j / d.group) * sc.s1;
+                        let a = match sc.perm {
+                            Some(p) => (sc.seg + self.perms[p][rel as usize]) as usize,
+                            None => (sc.seg + rel) as usize,
+                        };
+                        chip[a]
+                    }
+                    None => 1.0,
+                };
+                chip[(d.dst_seg + i * d.cols + j) as usize] =
+                    round_to_dtype(base * s, d.dtype);
+            }
+        }
+    }
+
+    fn exec_atomic(&self, at: &AtomicOp, chip: &mut [f32], globals: &mut [Vec<f32>]) {
+        let mut sc = Cursor::new(&at.src);
+        let mut dc = Cursor::new(&at.dst);
+        for _ in 0..at.count {
+            let sv = {
+                let a = self.addr(&at.src, sc.rel);
+                match at.src.slab {
+                    Slab::Chip => chip[a],
+                    Slab::Param(p) => globals[p][a],
+                }
+            };
+            if dc.valid() {
+                let a = self.addr(&at.dst, dc.rel);
+                if let Slab::Param(p) = at.dst.slab {
+                    let cur = globals[p][a];
+                    globals[p][a] = round_to_dtype(
+                        match at.kind {
+                            AtomicKind::Add => cur + sv,
+                            AtomicKind::Max => cur.max(sv),
+                            AtomicKind::Min => cur.min(sv),
+                        },
+                        at.dtype,
+                    );
+                }
+            }
+            sc.step(&at.src.axes);
+            dc.step(&at.dst.axes);
+        }
+    }
+
+    fn exec_elems(
+        &self,
+        e: &ElemsOp,
+        chip: &mut [f32],
+        globals: &mut [Vec<f32>],
+        scratch: &mut Scratch,
+    ) -> Result<(), String> {
+        let nd = e.extents.len();
+        let mut point = vec![0i64; nd];
+        let total: i64 = e.extents.iter().product();
+        for _ in 0..total {
+            for w in &e.stmts {
+                let value = self.eval_ftape(w, &point, chip, globals, scratch)?;
+                match &w.dst {
+                    Dst::Chip {
+                        seg,
+                        strides,
+                        perm,
+                        cells,
+                    } => {
+                        let mut rel = 0i64;
+                        for (t, s) in w.idx.iter().zip(strides) {
+                            rel += eval_itape(t, &point, &mut scratch.i) * s;
+                        }
+                        if rel < 0 || rel >= *cells {
+                            return Err(format!(
+                                "{}: elementwise store outside on-chip buffer",
+                                self.name
+                            ));
+                        }
+                        let a = match perm {
+                            Some(p) => (seg + self.perms[*p][rel as usize]) as usize,
+                            None => (seg + rel) as usize,
+                        };
+                        chip[a] = round_to_dtype(value, w.dtype);
+                    }
+                    Dst::Global { param, shape } => {
+                        let mut addr = 0i64;
+                        let mut ok = true;
+                        for (t, &s) in w.idx.iter().zip(shape.iter()) {
+                            let i = eval_itape(t, &point, &mut scratch.i);
+                            if i < 0 || i >= s {
+                                ok = false; // out-of-bounds: predicated off
+                                break;
+                            }
+                            addr = addr * s + i;
+                        }
+                        if ok {
+                            globals[*param][addr as usize] = round_to_dtype(value, w.dtype);
+                        }
+                    }
+                }
+            }
+            // row-major odometer over the parallel domain
+            let mut d = nd;
+            while d > 0 {
+                d -= 1;
+                point[d] += 1;
+                if point[d] < e.extents[d] {
+                    break;
+                }
+                point[d] = 0;
+            }
+        }
+        Ok(())
+    }
+
+    fn eval_ftape(
+        &self,
+        w: &ElemWrite,
+        point: &[i64],
+        chip: &[f32],
+        globals: &[Vec<f32>],
+        scratch: &mut Scratch,
+    ) -> Result<f32, String> {
+        scratch.f.clear();
+        for op in &w.value {
+            match op {
+                FOp::Const(v) => scratch.f.push(*v),
+                FOp::Axis(k) => scratch.f.push(point[*k] as f32),
+                FOp::Load(i) => {
+                    let l = &w.loads[*i];
+                    let v = match &l.src {
+                        LSrc::Chip {
+                            seg,
+                            strides,
+                            perm,
+                            cells,
+                        } => {
+                            let mut rel = 0i64;
+                            for (t, s) in l.idx.iter().zip(strides) {
+                                rel += eval_itape(t, point, &mut scratch.i) * s;
+                            }
+                            if rel < 0 || rel >= *cells {
+                                0.0 // defensively predicated (eager select branch)
+                            } else {
+                                let a = match perm {
+                                    Some(p) => (seg + self.perms[*p][rel as usize]) as usize,
+                                    None => (seg + rel) as usize,
+                                };
+                                chip[a]
+                            }
+                        }
+                        LSrc::Global { param, shape } => {
+                            let mut addr = 0i64;
+                            let mut ok = true;
+                            for (t, &s) in l.idx.iter().zip(shape.iter()) {
+                                let i = eval_itape(t, point, &mut scratch.i);
+                                if i < 0 || i >= s {
+                                    ok = false;
+                                    break;
+                                }
+                                addr = addr * s + i;
+                            }
+                            if ok {
+                                globals[*param][addr as usize]
+                            } else {
+                                0.0
+                            }
+                        }
+                    };
+                    scratch.f.push(v);
+                }
+                FOp::Bin(op) => {
+                    let y = scratch.f.pop().unwrap();
+                    let x = scratch.f.pop().unwrap();
+                    scratch.f.push(fbin(*op, x, y)?);
+                }
+                FOp::Un(op) => {
+                    let x = scratch.f.pop().unwrap();
+                    scratch.f.push(fun(*op, x));
+                }
+                FOp::Select => {
+                    let f = scratch.f.pop().unwrap();
+                    let t = scratch.f.pop().unwrap();
+                    let c = scratch.f.pop().unwrap();
+                    scratch.f.push(if c != 0.0 { t } else { f });
+                }
+                FOp::Cast(dt) => {
+                    let x = scratch.f.pop().unwrap();
+                    scratch.f.push(round_to_dtype(x, *dt));
+                }
+            }
+        }
+        Ok(scratch.f.pop().unwrap_or(0.0))
+    }
+}
+
+fn eval_itape(tape: &[IOp], point: &[i64], stack: &mut Vec<i64>) -> i64 {
+    stack.clear();
+    for op in tape {
+        match op {
+            IOp::Const(v) => stack.push(*v),
+            IOp::Axis(k) => stack.push(point[*k]),
+            IOp::Bin(op) => {
+                let b = stack.pop().unwrap();
+                let a = stack.pop().unwrap();
+                stack.push(ibin(*op, a, b));
+            }
+            IOp::Un(op) => {
+                let a = stack.pop().unwrap();
+                stack.push(match op {
+                    UnOp::Neg => -a,
+                    UnOp::Abs => a.abs(),
+                    UnOp::Not => (a == 0) as i64,
+                    _ => unreachable!("checked at tape build"),
+                });
+            }
+            IOp::Select => {
+                let f = stack.pop().unwrap();
+                let t = stack.pop().unwrap();
+                let c = stack.pop().unwrap();
+                stack.push(if c != 0 { t } else { f });
+            }
+        }
+    }
+    stack.pop().unwrap_or(0)
+}
+
+fn exec_reduce(r: &ReduceOp, chip: &mut [f32]) {
+    let init = match r.kind {
+        ReduceKind::Sum => 0.0f32,
+        ReduceKind::Max => f32::NEG_INFINITY,
+        ReduceKind::Min => f32::INFINITY,
+        ReduceKind::AbsMax => 0.0,
+    };
+    let nd = r.out_extents.len();
+    let mut cnt = vec![0i64; nd];
+    let mut src_rel = 0i64;
+    let total: i64 = r.out_extents.iter().product();
+    for flat in 0..total {
+        let daddr = (r.dst_seg + flat) as usize;
+        let mut acc = if r.clear { init } else { chip[daddr] };
+        let mut rel = src_rel;
+        for _ in 0..r.red_extent {
+            let v = chip[(r.src_seg + rel) as usize];
+            acc = match r.kind {
+                ReduceKind::Sum => acc + v,
+                ReduceKind::Max => acc.max(v),
+                ReduceKind::Min => acc.min(v),
+                ReduceKind::AbsMax => acc.max(v.abs()),
+            };
+            rel += r.red_stride;
+        }
+        chip[daddr] = round_to_dtype(acc, r.dtype);
+        let mut d = nd;
+        while d > 0 {
+            d -= 1;
+            cnt[d] += 1;
+            src_rel += r.src_strides[d];
+            if cnt[d] < r.out_extents[d] {
+                break;
+            }
+            src_rel -= r.src_strides[d] * cnt[d];
+            cnt[d] = 0;
+        }
+    }
+}
+
+/// Split-borrow two distinct parameter tensors (src read, dst write).
+fn two_params(globals: &mut [Vec<f32>], src: usize, dst: usize) -> (&[f32], &mut [f32]) {
+    debug_assert_ne!(src, dst);
+    if src < dst {
+        let (a, b) = globals.split_at_mut(dst);
+        (&a[src], &mut b[0])
+    } else {
+        let (a, b) = globals.split_at_mut(src);
+        (&b[0], &mut a[dst])
+    }
+}
+
+// ---------------------------------------------------------------------
+// property checks (static in-bounds proof + shadow write counting)
+// ---------------------------------------------------------------------
+
+impl CompiledProgram {
+    /// Prove every pre-resolved address in the instruction stream stays
+    /// inside its slab: strided walks are checked by their coordinate
+    /// extremes, permutation tables by their value range, elementwise
+    /// on-chip stores by sweeping the (small) parallel domain.
+    /// Runtime-guarded global accesses are exempt by design — they clip,
+    /// not trap.
+    pub fn validate(&self) -> Result<(), String> {
+        for (pi, perm) in self.perms.iter().enumerate() {
+            if perm.iter().any(|&v| v < 0) {
+                return Err(format!("perm table {} holds a negative cell", pi));
+            }
+        }
+        let mut stack = Vec::new();
+        for (n, ins) in self.instrs.iter().enumerate() {
+            let at = |msg: String| format!("instr {}: {}", n, msg);
+            match ins {
+                Instr::ZeroChip => {}
+                Instr::Fill { seg, len, value: _ } => {
+                    if *seg < 0 || (*seg + *len) as usize > self.chip_len {
+                        return Err(at(format!("fill [{}, {}) outside arena", seg, seg + len)));
+                    }
+                }
+                Instr::Copy(c) => {
+                    self.check_view(&c.src, false).map_err(&at)?;
+                    self.check_view(&c.dst, true).map_err(&at)?;
+                }
+                Instr::Atomic(a) => {
+                    self.check_view(&a.src, false).map_err(&at)?;
+                    self.check_view(&a.dst, true).map_err(&at)?;
+                }
+                Instr::Gemm(g) => {
+                    self.check_mat(&g.a, g.m, g.k).map_err(&at)?;
+                    self.check_mat(&g.b, g.n, g.k).map_err(&at)?;
+                    let hi = g.c_seg + (g.m - 1) * g.c_rs + (g.n - 1);
+                    if g.c_seg < 0 || hi as usize >= self.chip_len {
+                        return Err(at("gemm accumulator outside arena".into()));
+                    }
+                }
+                Instr::Reduce(r) => {
+                    let out: i64 = r.out_extents.iter().product();
+                    if r.dst_seg < 0 || (r.dst_seg + out) as usize > self.chip_len {
+                        return Err(at("reduce dst outside arena".into()));
+                    }
+                    let span: i64 = r
+                        .out_extents
+                        .iter()
+                        .zip(&r.src_strides)
+                        .map(|(e, s)| (e - 1) * s)
+                        .sum::<i64>()
+                        + (r.red_extent - 1) * r.red_stride;
+                    if r.src_seg < 0 || (r.src_seg + span) as usize >= self.chip_len {
+                        return Err(at("reduce src outside arena".into()));
+                    }
+                }
+                Instr::Dequant(d) => {
+                    let src_hi =
+                        d.src_seg + (d.rows - 1) * d.src_s0 + ((d.cols - 1) / d.epb) * d.src_s1;
+                    let src_hi = match d.src_perm {
+                        Some(p) => d.src_seg + max_perm(&self.perms[p]),
+                        None => src_hi,
+                    };
+                    if src_hi as usize >= self.chip_len {
+                        return Err(at("dequant src outside arena".into()));
+                    }
+                    if let Some(sc) = &d.scale {
+                        let hi = match sc.perm {
+                            Some(p) => sc.seg + max_perm(&self.perms[p]),
+                            None => {
+                                sc.seg + (d.rows - 1) * sc.s0 + ((d.cols - 1) / d.group) * sc.s1
+                            }
+                        };
+                        if hi as usize >= self.chip_len {
+                            return Err(at("dequant scale outside arena".into()));
+                        }
+                    }
+                    let dst_hi = d.dst_seg + d.rows * d.cols;
+                    if d.dst_seg < 0 || dst_hi as usize > self.chip_len {
+                        return Err(at("dequant dst outside arena".into()));
+                    }
+                }
+                Instr::Elems(e) => {
+                    // sweep the parallel domain: on-chip stores must
+                    // never leave their buffer
+                    let total: i64 = e.extents.iter().product();
+                    let nd = e.extents.len();
+                    let mut point = vec![0i64; nd];
+                    for _ in 0..total {
+                        for w in &e.stmts {
+                            if let Dst::Chip { strides, cells, .. } = &w.dst {
+                                let mut rel = 0i64;
+                                for (t, s) in w.idx.iter().zip(strides) {
+                                    rel += eval_itape(t, &point, &mut stack) * s;
+                                }
+                                if rel < 0 || rel >= *cells {
+                                    return Err(at(format!(
+                                        "elementwise store at {:?} leaves its buffer",
+                                        point
+                                    )));
+                                }
+                            }
+                        }
+                        let mut d = nd;
+                        while d > 0 {
+                            d -= 1;
+                            point[d] += 1;
+                            if point[d] < e.extents[d] {
+                                break;
+                            }
+                            point[d] = 0;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn slab_len(&self, slab: Slab) -> usize {
+        match slab {
+            Slab::Chip => self.chip_len,
+            Slab::Param(p) => self.params[p].len,
+        }
+    }
+
+    fn check_view(&self, v: &View, _is_dst: bool) -> Result<(), String> {
+        // axes with an empty valid range never dereference
+        if v.axes.iter().any(|a| a.lo >= a.hi) {
+            return Ok(());
+        }
+        let min_rel: i64 = v.rel0 + v.axes.iter().map(|a| a.lo * a.stride).sum::<i64>();
+        let max_rel: i64 = v.rel0 + v.axes.iter().map(|a| (a.hi - 1) * a.stride).sum::<i64>();
+        match v.perm {
+            Some(p) => {
+                let table = &self.perms[p];
+                if min_rel < 0 || max_rel as usize >= table.len() {
+                    return Err(format!(
+                        "view rel range [{}, {}] outside perm table ({})",
+                        min_rel,
+                        max_rel,
+                        table.len()
+                    ));
+                }
+                let hi = v.seg + max_perm(table);
+                if v.seg < 0 || hi as usize >= self.slab_len(v.slab) {
+                    return Err("permuted view outside slab".into());
+                }
+            }
+            None => {
+                let (lo, hi) = (v.seg + min_rel, v.seg + max_rel);
+                if lo < 0 || hi as usize >= self.slab_len(v.slab) {
+                    return Err(format!(
+                        "view addr range [{}, {}] outside slab of {} cells",
+                        lo,
+                        hi,
+                        self.slab_len(v.slab)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn check_mat(&self, m: &Mat, rows: i64, ks: i64) -> Result<(), String> {
+        let (r_lo, r_hi) = (m.r_lo.max(0), m.r_hi.min(rows));
+        let (k_lo, k_hi) = (m.k_lo.max(0), m.k_hi.min(ks));
+        if r_lo >= r_hi || k_lo >= k_hi {
+            return Ok(()); // fully guarded off
+        }
+        let min_rel = m.rel0 + r_lo * m.rs + k_lo * m.ks;
+        let max_rel = m.rel0 + (r_hi - 1) * m.rs + (k_hi - 1) * m.ks;
+        match m.perm {
+            Some(p) => {
+                let table = &self.perms[p];
+                if min_rel < 0 || max_rel as usize >= table.len() {
+                    return Err("gemm operand rel range outside perm table".into());
+                }
+                if m.seg < 0 || (m.seg + max_perm(table)) as usize >= self.slab_len(m.slab) {
+                    return Err("gemm operand outside slab".into());
+                }
+            }
+            None => {
+                if m.seg + min_rel < 0
+                    || (m.seg + max_rel) as usize >= self.slab_len(m.slab)
+                {
+                    return Err("gemm operand outside slab".into());
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Shadow pass: count how many times each element of global param
+    /// `buf` is written across the whole instruction stream, without
+    /// executing any arithmetic (index tapes never load tensor data, so
+    /// the result is input-independent). The canonical property for
+    /// every default artifact: the output tensor's counts are all 1.
+    pub fn write_counts(&self, buf: BufferId) -> Result<Vec<u64>, String> {
+        let target = self
+            .params
+            .iter()
+            .position(|p| p.id == buf)
+            .ok_or_else(|| format!("buffer {} is not a global param", buf))?;
+        let mut counts = vec![0u64; self.params[target].len];
+        let mut stack = Vec::new();
+        for ins in &self.instrs {
+            match ins {
+                Instr::Copy(c) => {
+                    if c.dst.slab == Slab::Param(target) {
+                        count_view(&c.dst, &mut counts);
+                    }
+                }
+                Instr::Atomic(a) => {
+                    if a.dst.slab == Slab::Param(target) {
+                        count_view(&a.dst, &mut counts);
+                    }
+                }
+                Instr::Elems(e) => {
+                    let total: i64 = e.extents.iter().product();
+                    let nd = e.extents.len();
+                    let mut point = vec![0i64; nd];
+                    for _ in 0..total {
+                        for w in &e.stmts {
+                            if let Dst::Global { param, shape } = &w.dst {
+                                if *param != target {
+                                    continue;
+                                }
+                                let mut addr = 0i64;
+                                let mut ok = true;
+                                for (t, &s) in w.idx.iter().zip(shape.iter()) {
+                                    let i = eval_itape(t, &point, &mut stack);
+                                    if i < 0 || i >= s {
+                                        ok = false;
+                                        break;
+                                    }
+                                    addr = addr * s + i;
+                                }
+                                if ok {
+                                    counts[addr as usize] += 1;
+                                }
+                            }
+                        }
+                        let mut d = nd;
+                        while d > 0 {
+                            d -= 1;
+                            point[d] += 1;
+                            if point[d] < e.extents[d] {
+                                break;
+                            }
+                            point[d] = 0;
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        Ok(counts)
+    }
+}
+
+fn count_view(v: &View, counts: &mut [u64]) {
+    let mut cur = Cursor::new(v);
+    let n: i64 = v.count();
+    for _ in 0..n {
+        if cur.valid() {
+            counts[cur.rel as usize] += 1;
+        }
+        cur.step(&v.axes);
+    }
+}
+
+fn max_perm(table: &[i64]) -> i64 {
+    table.iter().copied().max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::dtype::DType;
+    use crate::passes::lower::{compile, CompileOptions};
+    use crate::sim::device::Device;
+    use crate::workloads::matmul::{matmul_program, test_data, TileConfig};
+
+    fn lowered_matmul(m: i64, n: i64, k: i64) -> LoweredProgram {
+        let cfg = TileConfig::default_for(m, n, k);
+        let prog = matmul_program(m, n, k, DType::F16, &cfg);
+        compile(&prog, &Device::h100(), &CompileOptions::default()).unwrap()
+    }
+
+    #[test]
+    fn matmul_matches_interp_bit_for_bit() {
+        let lowered = lowered_matmul(64, 64, 64);
+        let vm = compile_lowered(&lowered).unwrap();
+        assert!(vm.instr_count() > 0);
+        let (a, b, c) = (
+            lowered.params[0].id,
+            lowered.params[1].id,
+            lowered.params[2].id,
+        );
+        let mut tv: Tensors = Tensors::new();
+        tv.insert(a, test_data(64 * 64, 0xC0));
+        tv.insert(b, test_data(64 * 64, 0xC1));
+        let mut ti = tv.clone();
+        vm.run(&mut tv).unwrap();
+        super::super::interp::Interp::new(&lowered)
+            .unwrap()
+            .run(&mut ti)
+            .unwrap();
+        assert_eq!(tv[&c], ti[&c], "compiled and interp outputs diverge");
+        assert!(tv[&c].iter().any(|&x| x != 0.0), "output all zero");
+    }
+
+    #[test]
+    fn validate_and_write_counts_hold_for_matmul() {
+        let lowered = lowered_matmul(64, 64, 64);
+        let vm = compile_lowered(&lowered).unwrap();
+        vm.validate().unwrap();
+        let c = lowered.params[2].id;
+        let counts = vm.write_counts(c).unwrap();
+        assert_eq!(counts.len(), 64 * 64);
+        assert!(
+            counts.iter().all(|&n| n == 1),
+            "every output element must be written exactly once"
+        );
+        // operands are never written
+        let a = lowered.params[0].id;
+        assert!(vm.write_counts(a).unwrap().iter().all(|&n| n == 0));
+    }
+
+    #[test]
+    fn dynamic_m_tail_matches_interp_and_writes_once() {
+        use crate::ir::program::specialize;
+        use crate::workloads::matmul::matmul_program_dyn;
+        let cfg = TileConfig {
+            block_m: 64,
+            block_n: 32,
+            block_k: 32,
+            num_stages: 2,
+            threads: 128,
+            policy: crate::ir::program::GemmWarpPolicy::Square,
+            rasterize: true,
+        };
+        let (n, k, m) = (64i64, 64i64, 33i64);
+        let (prog, mvar) = matmul_program_dyn(n, k, DType::F16, &cfg);
+        let mut bind = HashMap::new();
+        bind.insert(mvar.id, m);
+        let sp = specialize(&prog, &bind);
+        let lowered = compile(&sp, &Device::h100(), &CompileOptions::default()).unwrap();
+        let vm = compile_lowered(&lowered).unwrap();
+        vm.validate().unwrap();
+        let (a, b, c) = (
+            lowered.params[0].id,
+            lowered.params[1].id,
+            lowered.params[2].id,
+        );
+        let mut tv: Tensors = Tensors::new();
+        tv.insert(a, test_data(m * k, 0xD0));
+        tv.insert(b, test_data(k * n, 0xD1));
+        let mut ti = tv.clone();
+        vm.run(&mut tv).unwrap();
+        super::super::interp::Interp::new(&lowered)
+            .unwrap()
+            .run(&mut ti)
+            .unwrap();
+        assert_eq!(tv[&c], ti[&c], "dyn-M tail diverges from interp");
+        let counts = vm.write_counts(c).unwrap();
+        assert!(counts.iter().all(|&x| x == 1), "tail rows double- or un-written");
+    }
+}

@@ -10,6 +10,7 @@
 //! async-queue semantics, so a mis-scheduled pipeline produces wrong
 //! numbers, not just a slow estimate.
 
+pub mod compile;
 pub mod interp;
 
 use crate::ir::buffer::{Buffer, BufferId};

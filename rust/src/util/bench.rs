@@ -1,0 +1,334 @@
+//! Bench record format (`BENCH_*.json`) + regression comparison.
+//!
+//! `tilelang bench` measures each scenario on both execution backends
+//! (interp oracle, compiled bytecode VM) and writes a [`BenchReport`].
+//! One report is committed per PR (`BENCH_<n>.json` at the repo root),
+//! so the perf trajectory accrues alongside the code. CI re-runs the
+//! bench and gates with [`compare`]: a regression check on *relative*
+//! speedups — machine-independent, unlike absolute wall times — failing
+//! when the compiled-vs-interp speedup of any shared scenario (or the
+//! geomean) drops more than the tolerance below the committed baseline.
+
+use std::fs;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One measured scenario: a kernel, serve loop or graph block, timed on
+/// both backends. Times are microseconds per execution.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchScenario {
+    pub name: String,
+    /// `kernel`, `serve`, `graph` or `sharded` — display grouping only.
+    pub kind: String,
+    pub interp_p50_us: f64,
+    pub interp_p99_us: f64,
+    pub compiled_p50_us: f64,
+    pub compiled_p99_us: f64,
+    /// One-time bytecode compile cost (lowered program -> instruction
+    /// stream), amortized over every subsequent request.
+    pub compile_us: f64,
+    /// Executions per second on the compiled backend (p50-based).
+    pub throughput_per_s: f64,
+    /// `interp_p50_us / compiled_p50_us`.
+    pub speedup: f64,
+}
+
+/// A full bench run: the committed perf record for one PR.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchReport {
+    /// Report label, e.g. `BENCH_6`.
+    pub label: String,
+    /// `full` or `quick` (same scenario set, fewer iterations).
+    pub mode: String,
+    /// Where the numbers came from (host class, measured vs estimated).
+    pub provenance: String,
+    pub scenarios: Vec<BenchScenario>,
+}
+
+impl BenchReport {
+    /// Geometric mean of the per-scenario compiled-vs-interp speedups.
+    pub fn geomean_speedup(&self) -> f64 {
+        let positive: Vec<f64> = self
+            .scenarios
+            .iter()
+            .map(|s| s.speedup)
+            .filter(|&s| s > 0.0)
+            .collect();
+        if positive.is_empty() {
+            return 0.0;
+        }
+        let log_sum: f64 = positive.iter().map(|s| s.ln()).sum();
+        (log_sum / positive.len() as f64).exp()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema".into(), Json::Str("tilelang-bench-v1".into())),
+            ("label".into(), Json::Str(self.label.clone())),
+            ("mode".into(), Json::Str(self.mode.clone())),
+            ("provenance".into(), Json::Str(self.provenance.clone())),
+            (
+                "geomean_speedup".into(),
+                Json::Num(round3(self.geomean_speedup())),
+            ),
+            (
+                "scenarios".into(),
+                Json::Arr(
+                    self.scenarios
+                        .iter()
+                        .map(|s| {
+                            Json::Obj(vec![
+                                ("name".into(), Json::Str(s.name.clone())),
+                                ("kind".into(), Json::Str(s.kind.clone())),
+                                ("interp_p50_us".into(), Json::Num(round3(s.interp_p50_us))),
+                                ("interp_p99_us".into(), Json::Num(round3(s.interp_p99_us))),
+                                (
+                                    "compiled_p50_us".into(),
+                                    Json::Num(round3(s.compiled_p50_us)),
+                                ),
+                                (
+                                    "compiled_p99_us".into(),
+                                    Json::Num(round3(s.compiled_p99_us)),
+                                ),
+                                ("compile_us".into(), Json::Num(round3(s.compile_us))),
+                                (
+                                    "throughput_per_s".into(),
+                                    Json::Num(round3(s.throughput_per_s)),
+                                ),
+                                ("speedup".into(), Json::Num(round3(s.speedup))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<BenchReport, String> {
+        let schema = v
+            .get("schema")
+            .and_then(|s| s.as_str())
+            .ok_or("bench report: missing schema")?;
+        if schema != "tilelang-bench-v1" {
+            return Err(format!("bench report: unknown schema {:?}", schema));
+        }
+        let sstr = |o: &Json, k: &str| -> Result<String, String> {
+            Ok(o.get(k)
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| format!("bench report: missing string field {:?}", k))?
+                .to_string())
+        };
+        let snum = |o: &Json, k: &str| -> Result<f64, String> {
+            o.get(k)
+                .and_then(|x| x.as_f64())
+                .ok_or_else(|| format!("bench report: missing numeric field {:?}", k))
+        };
+        let mut scenarios = Vec::new();
+        for s in v
+            .get("scenarios")
+            .and_then(|a| a.as_arr())
+            .ok_or("bench report: missing scenarios array")?
+        {
+            scenarios.push(BenchScenario {
+                name: sstr(s, "name")?,
+                kind: sstr(s, "kind")?,
+                interp_p50_us: snum(s, "interp_p50_us")?,
+                interp_p99_us: snum(s, "interp_p99_us")?,
+                compiled_p50_us: snum(s, "compiled_p50_us")?,
+                compiled_p99_us: snum(s, "compiled_p99_us")?,
+                compile_us: snum(s, "compile_us")?,
+                throughput_per_s: snum(s, "throughput_per_s")?,
+                speedup: snum(s, "speedup")?,
+            });
+        }
+        Ok(BenchReport {
+            label: sstr(v, "label")?,
+            mode: sstr(v, "mode")?,
+            provenance: sstr(v, "provenance")?,
+            scenarios,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<(), String> {
+        fs::write(path.as_ref(), pretty(&self.to_json()) + "\n")
+            .map_err(|e| format!("write {:?}: {}", path.as_ref(), e))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<BenchReport, String> {
+        let text = fs::read_to_string(path.as_ref())
+            .map_err(|e| format!("read {:?}: {}", path.as_ref(), e))?;
+        BenchReport::from_json(&Json::parse(&text)?)
+    }
+}
+
+fn round3(x: f64) -> f64 {
+    (x * 1000.0).round() / 1000.0
+}
+
+/// Indent a compact JSON dump for a diff-friendly committed file:
+/// objects-in-arrays each get their own line. Good enough for the bench
+/// schema (no nested arrays-of-arrays).
+fn pretty(v: &Json) -> String {
+    let mut out = String::new();
+    write_pretty(v, 0, &mut out);
+    out
+}
+
+fn write_pretty(v: &Json, indent: usize, out: &mut String) {
+    let pad = "  ".repeat(indent);
+    let pad_in = "  ".repeat(indent + 1);
+    match v {
+        Json::Arr(items) if !items.is_empty() => {
+            out.push_str("[\n");
+            for (i, item) in items.iter().enumerate() {
+                out.push_str(&pad_in);
+                write_pretty(item, indent + 1, out);
+                if i + 1 < items.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&pad);
+            out.push(']');
+        }
+        Json::Obj(fields) if !fields.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, val)) in fields.iter().enumerate() {
+                out.push_str(&pad_in);
+                out.push_str(&Json::Str(k.clone()).dump());
+                out.push_str(": ");
+                write_pretty(val, indent + 1, out);
+                if i + 1 < fields.len() {
+                    out.push(',');
+                }
+                out.push('\n');
+            }
+            out.push_str(&pad);
+            out.push('}');
+        }
+        other => out.push_str(&other.dump()),
+    }
+}
+
+/// Compare a current bench run against a committed baseline. Returns the
+/// list of regression messages (empty = pass).
+///
+/// The gate is on *relative* speedups: absolute microseconds differ per
+/// machine, but compiled-vs-interp ratios on the same host are stable.
+/// A scenario regresses when its speedup drops more than `tol`
+/// (fractional, e.g. `0.20`) below the baseline's; scenarios present in
+/// only one report are reported as informational mismatches but do not
+/// fail unless they vanished from the current run.
+pub fn compare(baseline: &BenchReport, current: &BenchReport, tol: f64) -> Vec<String> {
+    let mut failures = Vec::new();
+    for b in &baseline.scenarios {
+        match current.scenarios.iter().find(|c| c.name == b.name) {
+            None => failures.push(format!(
+                "scenario {} present in baseline but missing from current run",
+                b.name
+            )),
+            Some(c) => {
+                let floor = b.speedup * (1.0 - tol);
+                if c.speedup < floor {
+                    failures.push(format!(
+                        "scenario {}: speedup {:.2}x < {:.2}x (baseline {:.2}x - {:.0}% tol)",
+                        b.name,
+                        c.speedup,
+                        floor,
+                        b.speedup,
+                        tol * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    let (bg, cg) = (baseline.geomean_speedup(), current.geomean_speedup());
+    if cg < bg * (1.0 - tol) {
+        failures.push(format!(
+            "geomean speedup {:.2}x < {:.2}x (baseline {:.2}x - {:.0}% tol)",
+            cg,
+            bg * (1.0 - tol),
+            bg,
+            tol * 100.0
+        ));
+    }
+    failures
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scenario(name: &str, speedup: f64) -> BenchScenario {
+        BenchScenario {
+            name: name.into(),
+            kind: "kernel".into(),
+            interp_p50_us: 1000.0 * speedup,
+            interp_p99_us: 1100.0 * speedup,
+            compiled_p50_us: 1000.0,
+            compiled_p99_us: 1100.0,
+            compile_us: 50.0,
+            throughput_per_s: 1000.0,
+            speedup,
+        }
+    }
+
+    fn report(speedups: &[(&str, f64)]) -> BenchReport {
+        BenchReport {
+            label: "BENCH_TEST".into(),
+            mode: "quick".into(),
+            provenance: "unit test".into(),
+            scenarios: speedups.iter().map(|(n, s)| scenario(n, *s)).collect(),
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_report() {
+        let r = report(&[("gemm", 4.0), ("attn", 6.5)]);
+        let back = BenchReport::from_json(&Json::parse(&pretty(&r.to_json())).unwrap()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn geomean_is_geometric() {
+        let r = report(&[("a", 2.0), ("b", 8.0)]);
+        assert!((r.geomean_speedup() - 4.0).abs() < 1e-9);
+        assert_eq!(report(&[]).geomean_speedup(), 0.0);
+    }
+
+    #[test]
+    fn compare_passes_within_tolerance() {
+        let base = report(&[("gemm", 4.0), ("attn", 6.0)]);
+        let cur = report(&[("gemm", 3.5), ("attn", 5.2)]);
+        assert!(compare(&base, &cur, 0.20).is_empty());
+    }
+
+    #[test]
+    fn compare_fails_on_regression_and_missing_scenarios() {
+        let base = report(&[("gemm", 4.0), ("attn", 6.0)]);
+        let cur = report(&[("gemm", 2.0), ("attn", 6.0)]);
+        let fails = compare(&base, &cur, 0.20);
+        // the gemm scenario and the geomean both drop past 20%
+        assert_eq!(fails.len(), 2, "{:?}", fails);
+        assert!(fails[0].contains("gemm"));
+
+        let missing = report(&[("attn", 6.0)]);
+        let fails = compare(&base, &missing, 0.20);
+        assert!(fails.iter().any(|f| f.contains("missing")), "{:?}", fails);
+        // new scenarios in the current run are fine
+        let extra = report(&[("gemm", 4.0), ("attn", 6.0), ("new", 1.0)]);
+        assert!(compare(&base, &extra, 0.20).is_empty());
+    }
+
+    #[test]
+    fn save_and_load_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("tilelang-bench-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_T.json");
+        let r = report(&[("gemm", 4.0)]);
+        r.save(&path).unwrap();
+        assert_eq!(BenchReport::load(&path).unwrap(), r);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

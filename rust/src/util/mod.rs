@@ -1,4 +1,5 @@
 //! Dependency-free utility modules (the offline vendor set has no
 //! serde/anyhow-class crates; see DESIGN.md dependency note).
 
+pub mod bench;
 pub mod json;

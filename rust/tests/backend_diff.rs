@@ -1,0 +1,522 @@
+//! Differential fuzz harness for the compiled bytecode VM.
+//!
+//! Every case runs the SAME lowered program on both execution engines —
+//! the tree-walking interpreter (`tir::interp`, the oracle) and the
+//! register-bytecode VM (`tir::compile`) — and demands *bit-for-bit*
+//! equal outputs: both engines share `round_to_dtype` on every store
+//! and the exact f32 accumulation order, so any divergence is a
+//! compiler bug, not noise. Where a CPU reference exists the interp
+//! output is additionally held to the usual fp16-staging tolerance, so
+//! a case that passes proves compiled == interp == reference.
+//!
+//! Coverage: seeded-random shapes/configs/dtypes for the GEMM family
+//! (with fused epilogue combos), flash attention (± causal), flash
+//! decode, dequant GEMM, both Mamba-2 chunk kernels, dynamic-M tail
+//! shapes (M ∈ {33, 80, 96}), and the sharded + graph execution paths
+//! through the public `Runtime` API.
+
+use std::collections::HashMap;
+
+use tilelang::ir::buffer::BufferId;
+use tilelang::ir::dtype::DType;
+use tilelang::ir::program::{specialize, GemmWarpPolicy, TileProgram};
+use tilelang::passes::lower::{compile, CompileOptions};
+use tilelang::sim::device::Device;
+use tilelang::tir::compile::compile_lowered;
+use tilelang::tir::interp::{Interp, Tensors};
+use tilelang::workloads::attention::{
+    flash_attention_program, flash_decode_program, reference_attention, reference_flash_decode,
+    AttnConfig, DecodeConfig,
+};
+use tilelang::workloads::dequant::{
+    dequant_matmul_program, dequantize_weights, quantize_weights, DequantConfig, WeightFormat,
+};
+use tilelang::workloads::epilogue::{reference_apply, Activation, EpilogueOp};
+use tilelang::workloads::linear_attention::{
+    chunk_scan_program, chunk_state_program, reference_chunk_scan, reference_chunk_state,
+};
+use tilelang::workloads::matmul::{
+    matmul_program, matmul_program_dyn, matmul_program_ep, reference_matmul, test_data,
+    TileConfig,
+};
+
+/// SplitMix64 (same driver as tests/property.rs; no proptest offline).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+    fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[(self.next() % xs.len() as u64) as usize]
+    }
+}
+
+/// Lower `prog`, run it on both engines with the same inputs, assert the
+/// outputs are bit-identical and return the (shared) output vector.
+fn run_both(
+    prog: &TileProgram,
+    dev: &Device,
+    inputs: &[(BufferId, Vec<f32>)],
+    out: BufferId,
+    label: &str,
+) -> Vec<f32> {
+    let lowered = compile(prog, dev, &CompileOptions::default())
+        .unwrap_or_else(|e| panic!("{label}: lowering failed: {e}"));
+    let interp = Interp::new(&lowered).unwrap_or_else(|e| panic!("{label}: interp init: {e}"));
+    let mut ti = Tensors::new();
+    for (id, v) in inputs {
+        ti.insert(*id, v.clone());
+    }
+    interp
+        .run(&mut ti)
+        .unwrap_or_else(|e| panic!("{label}: interp run: {e}"));
+
+    let vm = compile_lowered(&lowered)
+        .unwrap_or_else(|e| panic!("{label}: bytecode compile failed: {e}"));
+    vm.validate()
+        .unwrap_or_else(|e| panic!("{label}: bytecode validation failed: {e}"));
+    let mut tc = Tensors::new();
+    for (id, v) in inputs {
+        tc.insert(*id, v.clone());
+    }
+    vm.run(&mut tc)
+        .unwrap_or_else(|e| panic!("{label}: compiled run: {e}"));
+
+    let want = ti.remove(&out).unwrap_or_else(|| panic!("{label}: interp produced no output"));
+    let got = tc.remove(&out).unwrap_or_else(|| panic!("{label}: vm produced no output"));
+    assert_eq!(got.len(), want.len(), "{label}: output length mismatch");
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{label}: compiled diverged from interp oracle at {i}: {g} vs {w}"
+        );
+    }
+    got
+}
+
+#[test]
+fn gemm_family_compiled_matches_interp_and_reference() {
+    let mut rng = Rng(0xD1FF_0001);
+    let devices = [Device::a100(), Device::h100(), Device::rtx4090()];
+    let mut executed = 0;
+    for case in 0..10 {
+        let bm = *rng.pick(&[16i64, 32, 64]);
+        let bn = *rng.pick(&[16i64, 32, 64]);
+        let bk = *rng.pick(&[16i64, 32]);
+        let m = bm * *rng.pick(&[1i64, 2, 3]);
+        let n = bn * *rng.pick(&[1i64, 2]);
+        let k = bk * *rng.pick(&[2i64, 3]);
+        let cfg = TileConfig {
+            block_m: bm,
+            block_n: bn,
+            block_k: bk,
+            num_stages: *rng.pick(&[1usize, 2, 3]),
+            threads: *rng.pick(&[64i64, 128]),
+            policy: *rng.pick(&[
+                GemmWarpPolicy::Square,
+                GemmWarpPolicy::FullRow,
+                GemmWarpPolicy::FullCol,
+            ]),
+            rasterize: case % 2 == 0,
+        };
+        let dev = rng.pick(&devices);
+        let prog = matmul_program(m, n, k, DType::F16, &cfg);
+        let a = test_data(m * k, 1000 + case as u64);
+        let b = test_data(k * n, 2000 + case as u64);
+        let got = run_both(
+            &prog,
+            dev,
+            &[(prog.params[0].id, a.clone()), (prog.params[1].id, b.clone())],
+            prog.params[2].id,
+            &format!("gemm case {case} ({m}x{n}x{k})"),
+        );
+        let want = reference_matmul(&a, &b, m, n, k);
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() < 0.05 + 0.02 * w.abs(),
+                "gemm case {case}: {g} vs {w}"
+            );
+        }
+        executed += 1;
+    }
+    assert_eq!(executed, 10);
+}
+
+/// Non-f16 input dtypes: both engines round stores through the same
+/// `round_to_dtype`, so outputs stay bit-identical even where no CPU
+/// reference tolerance is meaningful.
+#[test]
+fn gemm_other_dtypes_stay_bit_identical() {
+    let cfg = TileConfig::default_for(32, 32, 32);
+    for (dtype, seed) in [(DType::BF16, 0xB16u64), (DType::F32, 0xF32u64)] {
+        let prog = matmul_program(32, 32, 32, dtype, &cfg);
+        let a = test_data(32 * 32, seed);
+        let b = test_data(32 * 32, seed + 1);
+        let got = run_both(
+            &prog,
+            &Device::h100(),
+            &[(prog.params[0].id, a.clone()), (prog.params[1].id, b.clone())],
+            prog.params[2].id,
+            &format!("gemm {dtype:?}"),
+        );
+        assert!(got.iter().any(|v| *v != 0.0), "{dtype:?}: all-zero output");
+    }
+}
+
+#[test]
+fn gemm_epilogue_combos_compiled_matches_interp_and_reference() {
+    let mut rng = Rng(0xD1FF_0002);
+    let menu: &[&[EpilogueOp]] = &[
+        &[EpilogueOp::BiasAdd { dim: 1 }],
+        &[EpilogueOp::Activation(Activation::Relu)],
+        &[EpilogueOp::Activation(Activation::Gelu)],
+        &[EpilogueOp::Activation(Activation::Silu)],
+        &[EpilogueOp::ResidualAdd],
+        &[EpilogueOp::Scale(0.5)],
+        &[
+            EpilogueOp::BiasAdd { dim: 1 },
+            EpilogueOp::Activation(Activation::Gelu),
+            EpilogueOp::ResidualAdd,
+        ],
+        &[EpilogueOp::Scale(2.0), EpilogueOp::Activation(Activation::Relu)],
+    ];
+    for (case, eps) in menu.iter().enumerate() {
+        let (m, n, k) = (64i64, 32i64, 64i64);
+        let cfg = TileConfig {
+            block_m: 32,
+            block_n: 32,
+            block_k: 32,
+            num_stages: *rng.pick(&[1usize, 2]),
+            threads: 128,
+            policy: GemmWarpPolicy::Square,
+            rasterize: false,
+        };
+        let prog = matmul_program_ep(m, n, k, DType::F16, &cfg, eps);
+        let a = test_data(m * k, 3000 + case as u64);
+        let b = test_data(k * n, 4000 + case as u64);
+        // params: A, B, <one operand per operand-taking op>, C
+        let mut inputs = vec![
+            (prog.params[0].id, a.clone()),
+            (prog.params[1].id, b.clone()),
+        ];
+        let mut operands = Vec::new();
+        let mut pi = 2;
+        for (oi, op) in eps.iter().enumerate() {
+            if op.takes_operand() {
+                let len: i64 = op.operand_shape(&[m, n]).unwrap().iter().product();
+                let data = test_data(len, 5000 + (case * 8 + oi) as u64);
+                inputs.push((prog.params[pi].id, data.clone()));
+                operands.push(Some(data));
+                pi += 1;
+            } else {
+                operands.push(None);
+            }
+        }
+        let out = prog.params[pi].id;
+        let got = run_both(
+            &prog,
+            &Device::h100(),
+            &inputs,
+            out,
+            &format!("gemm-ep case {case} ({eps:?})"),
+        );
+        let mut want = reference_matmul(&a, &b, m, n, k);
+        for (op, operand) in eps.iter().zip(&operands) {
+            reference_apply(op, &mut want, operand.as_deref(), &[m, n])
+                .unwrap_or_else(|e| panic!("gemm-ep case {case}: reference: {e}"));
+        }
+        for (g, w) in got.iter().zip(&want) {
+            assert!(
+                (g - w).abs() < 0.06 + 0.02 * w.abs(),
+                "gemm-ep case {case} ({eps:?}): {g} vs {w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn attention_family_compiled_matches_interp_and_reference() {
+    let mut rng = Rng(0xD1FF_0003);
+    let mut executed = 0;
+    for case in 0..8 {
+        let seq = *rng.pick(&[64i64, 128]);
+        let d = *rng.pick(&[32i64, 64]);
+        let bh = *rng.pick(&[1i64, 2]);
+        let causal = case % 2 == 0;
+        let cfg = AttnConfig {
+            block_m: *rng.pick(&[32i64, 64]),
+            block_n: *rng.pick(&[32i64, 64]),
+            num_stages: *rng.pick(&[1usize, 2]),
+            threads: 128,
+        };
+        if seq % cfg.block_m != 0 || seq % cfg.block_n != 0 {
+            continue;
+        }
+        let prog = flash_attention_program(bh, seq, d, causal, &cfg);
+        let q = test_data(bh * seq * d, 6000 + case as u64);
+        let k = test_data(bh * seq * d, 7000 + case as u64);
+        let v = test_data(bh * seq * d, 8000 + case as u64);
+        let got = run_both(
+            &prog,
+            &Device::h100(),
+            &[
+                (prog.params[0].id, q.clone()),
+                (prog.params[1].id, k.clone()),
+                (prog.params[2].id, v.clone()),
+            ],
+            prog.params[3].id,
+            &format!("attention case {case} (seq={seq} d={d} causal={causal})"),
+        );
+        let want = reference_attention(&q, &k, &v, bh, seq, d, causal);
+        let mut max_err = 0f32;
+        for (g, w) in got.iter().zip(&want) {
+            max_err = max_err.max((g - w).abs());
+        }
+        assert!(max_err < 0.03, "attention case {case}: max err {max_err}");
+        executed += 1;
+    }
+    assert!(executed >= 5, "grid too sparse: only {executed} cases ran");
+}
+
+#[test]
+fn flash_decode_compiled_matches_interp_and_reference() {
+    for (case, (batch, heads, kv, d)) in
+        [(2i64, 16i64, 64i64, 16i64), (4, 16, 64, 16), (1, 32, 128, 32)]
+            .iter()
+            .enumerate()
+    {
+        let cfg = DecodeConfig::default_for(*heads, *kv);
+        let prog = flash_decode_program(*batch, *heads, *kv, *d, &cfg, &[]);
+        let q = test_data(batch * heads * d, 9000 + case as u64);
+        let k = test_data(batch * kv * d, 9100 + case as u64);
+        let v = test_data(batch * kv * d, 9200 + case as u64);
+        let got = run_both(
+            &prog,
+            &Device::h100(),
+            &[
+                (prog.params[0].id, q.clone()),
+                (prog.params[1].id, k.clone()),
+                (prog.params[2].id, v.clone()),
+            ],
+            prog.params[3].id,
+            &format!("decode case {case}"),
+        );
+        let want = reference_flash_decode(&q, &k, &v, *batch, *heads, *kv, *d);
+        let mut max_err = 0f32;
+        for (g, w) in got.iter().zip(&want) {
+            max_err = max_err.max((g - w).abs());
+        }
+        assert!(max_err < 0.03, "decode case {case}: max err {max_err}");
+    }
+}
+
+#[test]
+fn dequant_family_compiled_matches_interp_and_reference() {
+    let (m, n, k) = (32i64, 64i64, 64i64);
+    for fmt in [
+        WeightFormat::Int4,
+        WeightFormat::Nf4,
+        WeightFormat::Fp4,
+        WeightFormat::Int2,
+    ] {
+        let tol = if fmt == WeightFormat::Int2 { 0.5 } else { 0.05 };
+        let (bm, bn, bk, stages) = (16i64, 32i64, 32i64, 2usize);
+        let group = if fmt.act_dtype().is_float() { 32 } else { bk };
+        let cfg = DequantConfig {
+            block_m: bm,
+            block_n: bn,
+            block_k: bk,
+            num_stages: stages,
+            threads: 128,
+            group_size: group,
+        };
+        let prog = dequant_matmul_program(m, n, k, fmt, &cfg);
+        let mut aval = test_data(m * k, 0xDE01);
+        if fmt == WeightFormat::Int2 {
+            for x in aval.iter_mut() {
+                *x = (*x * 8.0).round().clamp(-4.0, 3.0);
+            }
+        }
+        let w = test_data(n * k, 0xDE02);
+        let (packed, scales) = quantize_weights(&w, n, k, fmt, group);
+        let got = run_both(
+            &prog,
+            &Device::a100(),
+            &[
+                (prog.params[0].id, aval.clone()),
+                (prog.params[1].id, packed.clone()),
+                (prog.params[2].id, scales.clone()),
+            ],
+            prog.params[3].id,
+            &format!("dequant {fmt:?}"),
+        );
+        let wdq = dequantize_weights(&packed, &scales, n, k, fmt, group);
+        let mut max_err = 0f32;
+        for i in 0..n as usize {
+            for j in 0..m as usize {
+                let mut acc = 0f32;
+                for kk in 0..k as usize {
+                    acc += wdq[i * k as usize + kk] * aval[j * k as usize + kk];
+                }
+                max_err = max_err.max((got[i * m as usize + j] - acc).abs());
+            }
+        }
+        assert!(max_err < tol, "dequant {fmt:?}: max err {max_err}");
+    }
+}
+
+#[test]
+fn chunk_kernels_compiled_match_interp_and_reference() {
+    let (bh, seq, n, p, chunk) = (2i64, 128i64, 32i64, 32i64, 64i64);
+    let nchunks = seq / chunk;
+
+    let prog = chunk_state_program(bh, seq, n, p, chunk, 2);
+    let b = test_data(bh * seq * n, 41);
+    let x = test_data(bh * seq * p, 42);
+    let w: Vec<f32> = test_data(bh * seq, 43).iter().map(|v| v + 0.75).collect();
+    let got = run_both(
+        &prog,
+        &Device::h100(),
+        &[
+            (prog.params[0].id, b.clone()),
+            (prog.params[1].id, x.clone()),
+            (prog.params[2].id, w.clone()),
+        ],
+        prog.params[3].id,
+        "chunk_state",
+    );
+    let want = reference_chunk_state(&b, &x, &w, bh, seq, n, p, chunk);
+    for (g, wv) in got.iter().zip(&want) {
+        assert!((g - wv).abs() < 0.05 + 0.02 * wv.abs(), "chunk_state: {g} vs {wv}");
+    }
+
+    let prog = chunk_scan_program(bh, seq, n, p, chunk, 2);
+    let c = test_data(bh * seq * n, 51);
+    let s = test_data(bh * nchunks * n * p, 52);
+    let w2: Vec<f32> = test_data(bh * seq, 53).iter().map(|v| v + 0.75).collect();
+    let got = run_both(
+        &prog,
+        &Device::h100(),
+        &[
+            (prog.params[0].id, c.clone()),
+            (prog.params[1].id, s.clone()),
+            (prog.params[2].id, w2.clone()),
+        ],
+        prog.params[3].id,
+        "chunk_scan",
+    );
+    let want = reference_chunk_scan(&c, &s, &w2, bh, seq, n, p, chunk);
+    for (g, wv) in got.iter().zip(&want) {
+        assert!((g - wv).abs() < 0.05 + 0.02 * wv.abs(), "chunk_scan: {g} vs {wv}");
+    }
+}
+
+/// Dynamic-M tails: specialize the symbolic-M GEMM to non-tile-multiple
+/// row counts. The predicated tail block is where pre-resolved offsets
+/// can go wrong, so this is the sharpest single test of the VM's guard
+/// ranges (OOB reads as zero, OOB stores dropped).
+#[test]
+fn dynamic_m_tails_compiled_matches_interp_and_reference() {
+    let (n, k) = (64i64, 64i64);
+    let cfg = TileConfig {
+        block_m: 64,
+        block_n: 32,
+        block_k: 32,
+        num_stages: 2,
+        threads: 128,
+        policy: GemmWarpPolicy::Square,
+        rasterize: true,
+    };
+    for &m in &[33i64, 80, 96] {
+        let (prog, mvar) = matmul_program_dyn(n, k, DType::F16, &cfg);
+        let mut bind = HashMap::new();
+        bind.insert(mvar.id, m);
+        let sp = specialize(&prog, &bind);
+        let a = test_data(m * k, 0xD11 + m as u64);
+        let b = test_data(k * n, 0xD12);
+        let got = run_both(
+            &sp,
+            &Device::a100(),
+            &[(sp.params[0].id, a.clone()), (sp.params[1].id, b.clone())],
+            sp.params[2].id,
+            &format!("dyn-M m={m}"),
+        );
+        assert_eq!(got.len(), (m * n) as usize);
+        let want = reference_matmul(&a, &b, m, n, k);
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (g - w).abs() < 0.05 + 0.02 * w.abs(),
+                "dyn-M m={m} idx={i}: {g} vs {w}"
+            );
+        }
+    }
+}
+
+/// End-to-end through the public Runtime API: every default artifact
+/// (single kernels AND graphs) must produce bit-identical outputs on
+/// `ExecBackend::Interp` vs `ExecBackend::Compiled`, and the sharded
+/// backend must agree with itself across engines (per-shard kernels are
+/// bit-identical and the gather collective is shared code).
+#[test]
+fn runtime_backends_agree_on_all_default_artifacts() {
+    use tilelang::runtime::{artifacts, ExecBackend, InterpOptions, Runtime};
+    use tilelang::shard::exec::ShardedOptions;
+
+    let dir = std::env::temp_dir().join(format!(
+        "tilelang-backend-diff-artifacts-{}",
+        std::process::id()
+    ));
+    artifacts::generate_default_set(&dir).expect("generate artifacts");
+    let fast = InterpOptions {
+        tune: false,
+        ..Default::default()
+    };
+    let interp_rt =
+        Runtime::with_backend(&dir, ExecBackend::Interp(fast.clone())).expect("interp runtime");
+    let compiled_rt =
+        Runtime::with_backend(&dir, ExecBackend::Compiled(fast.clone())).expect("compiled runtime");
+    assert_eq!(compiled_rt.backend_name(), "compiled");
+    for name in interp_rt.artifact_names() {
+        let inputs = interp_rt.example_inputs(&name).expect("inputs");
+        let want = interp_rt.execute(&name, &inputs).expect("interp exec");
+        let got = compiled_rt
+            .execute(&name, &inputs)
+            .unwrap_or_else(|e| panic!("{name}: compiled exec: {e}"));
+        assert_eq!(got.len(), want.len(), "{name}: length mismatch");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                g.to_bits() == w.to_bits(),
+                "{name}: compiled diverged from interp at {i}: {g} vs {w}"
+            );
+        }
+    }
+
+    // sharded path: same artifact, interp shards vs compiled shards
+    for name in ["linear_64x256x64", "mlp_block_64x64x128"] {
+        let mut oi = ShardedOptions::new(2);
+        oi.interp = fast.clone();
+        let mut oc = ShardedOptions::new(2);
+        oc.interp = fast.clone();
+        oc.interp.compiled = true;
+        let rt_i = Runtime::with_backend(&dir, ExecBackend::Sharded(oi)).expect("sharded interp");
+        let rt_c =
+            Runtime::with_backend(&dir, ExecBackend::Sharded(oc)).expect("sharded compiled");
+        let inputs = rt_i.example_inputs(name).expect("inputs");
+        let want = rt_i.execute(name, &inputs).expect("sharded interp exec");
+        let got = rt_c
+            .execute(name, &inputs)
+            .unwrap_or_else(|e| panic!("{name}: sharded compiled exec: {e}"));
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                g.to_bits() == w.to_bits(),
+                "{name} sharded: compiled diverged from interp at {i}: {g} vs {w}"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}

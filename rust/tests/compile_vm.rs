@@ -1,0 +1,163 @@
+//! Property tests for the register-bytecode VM (`tir::compile`).
+//!
+//! Two properties are pinned for every scenario in the default artifact
+//! set (the same shapes and static-default configs `tilelang artifacts`
+//! serves with `tune: false`), plus the fused-epilogue programs graph
+//! nodes execute and the dynamic-M tail shapes:
+//!
+//! 1. **In-bounds offsets** — `CompiledProgram::validate()` statically
+//!    sweeps every instruction's pre-resolved address ranges (chip
+//!    segments, permutation tables, parameter views, element-loop
+//!    domains) against the arena and parameter lengths.
+//! 2. **Exactly-once writes** — `CompiledProgram::write_counts(out)` is
+//!    a shadow pass that walks the instruction stream counting stores
+//!    per output element without executing arithmetic: every output
+//!    element must be written exactly once, and pure inputs never.
+
+use std::collections::HashMap;
+
+use tilelang::ir::dtype::DType;
+use tilelang::ir::program::{specialize, TileProgram};
+use tilelang::passes::lower::{compile, CompileOptions};
+use tilelang::sim::device::Device;
+use tilelang::tir::compile::{compile_lowered, CompiledProgram};
+use tilelang::workloads::attention::{
+    flash_attention_program, flash_decode_program, AttnConfig, DecodeConfig,
+};
+use tilelang::workloads::dequant::{dequant_matmul_program, DequantConfig, WeightFormat};
+use tilelang::workloads::epilogue::{Activation, EpilogueOp};
+use tilelang::workloads::linear_attention::{chunk_scan_program, chunk_state_program};
+use tilelang::workloads::matmul::{
+    matmul_program, matmul_program_dyn, matmul_program_ep, TileConfig,
+};
+
+/// Compile, validate, and check the write-count properties: the output
+/// parameter is written exactly once per element, inputs never.
+fn check_properties(prog: &TileProgram, dev: &Device, label: &str) -> CompiledProgram {
+    let lowered = compile(prog, dev, &CompileOptions::default())
+        .unwrap_or_else(|e| panic!("{label}: lowering failed: {e}"));
+    let vm = compile_lowered(&lowered)
+        .unwrap_or_else(|e| panic!("{label}: bytecode compile failed: {e}"));
+    assert!(vm.instr_count() > 0, "{label}: empty instruction stream");
+    vm.validate()
+        .unwrap_or_else(|e| panic!("{label}: offset validation failed: {e}"));
+
+    let out = prog.params.last().expect("program has params");
+    let out_len: i64 = out
+        .static_shape()
+        .expect("static output shape")
+        .iter()
+        .product();
+    let counts = vm
+        .write_counts(out.id)
+        .unwrap_or_else(|e| panic!("{label}: write_counts: {e}"));
+    assert_eq!(counts.len(), out_len as usize, "{label}: count vector length");
+    for (i, c) in counts.iter().enumerate() {
+        assert_eq!(
+            *c, 1,
+            "{label}: output element {i} written {c} times (want exactly once)"
+        );
+    }
+    // pure inputs are never stored to
+    for p in &prog.params[..prog.params.len() - 1] {
+        let counts = vm
+            .write_counts(p.id)
+            .unwrap_or_else(|e| panic!("{label}: write_counts({}): {e}", p.name));
+        assert!(
+            counts.iter().all(|&c| c == 0),
+            "{label}: input {} receives stores",
+            p.name
+        );
+    }
+    vm
+}
+
+#[test]
+fn gemm_artifact_scenarios_hold_vm_properties() {
+    // matmul_64x64x64 and linear_64x256x64 with their static defaults
+    for (m, n, k) in [(64i64, 64i64, 64i64), (64, 256, 64)] {
+        let cfg = TileConfig::default_for(m, n, k);
+        let prog = matmul_program(m, n, k, DType::F16, &cfg);
+        let vm = check_properties(&prog, &Device::h100(), &format!("gemm {m}x{n}x{k}"));
+        assert!(vm.chip_cells() > 0);
+    }
+}
+
+#[test]
+fn attention_artifact_scenarios_hold_vm_properties() {
+    for causal in [false, true] {
+        let (bh, seq, d) = (2i64, 128i64, 64i64);
+        let cfg = AttnConfig::default_for(seq);
+        let prog = flash_attention_program(bh, seq, d, causal, &cfg);
+        check_properties(
+            &prog,
+            &Device::h100(),
+            &format!("flash_attention causal={causal}"),
+        );
+    }
+}
+
+#[test]
+fn decode_artifact_scenario_holds_vm_properties() {
+    let (b, h, kv, d) = (4i64, 16i64, 64i64, 16i64);
+    let cfg = DecodeConfig::default_for(h, kv);
+    let prog = flash_decode_program(b, h, kv, d, &cfg, &[]);
+    check_properties(&prog, &Device::h100(), "flash_decode");
+}
+
+#[test]
+fn dequant_artifact_scenario_holds_vm_properties() {
+    let (m, n, k) = (32i64, 64i64, 64i64);
+    let prog = dequant_matmul_program(m, n, k, WeightFormat::Int4, &DequantConfig::default());
+    check_properties(&prog, &Device::h100(), "dequant_int4");
+}
+
+#[test]
+fn chunk_artifact_scenarios_hold_vm_properties() {
+    let (bh, seq, n_state, p, chunk) = (2i64, 128i64, 32i64, 32i64, 64i64);
+    let state = chunk_state_program(bh, seq, n_state, p, chunk, 2);
+    check_properties(&state, &Device::h100(), "chunk_state");
+    let scan = chunk_scan_program(bh, seq, n_state, p, chunk, 2);
+    check_properties(&scan, &Device::h100(), "chunk_scan");
+}
+
+/// The fused-epilogue programs graph nodes execute (GEMM+bias+act+
+/// residual, decode+residual): epilogue element loops must not break
+/// the exactly-once property.
+#[test]
+fn graph_node_fused_programs_hold_vm_properties() {
+    let cfg = TileConfig::default_for(64, 64, 64);
+    let prog = matmul_program_ep(
+        64,
+        64,
+        64,
+        DType::F16,
+        &cfg,
+        &[
+            EpilogueOp::BiasAdd { dim: 1 },
+            EpilogueOp::Activation(Activation::Gelu),
+            EpilogueOp::ResidualAdd,
+        ],
+    );
+    check_properties(&prog, &Device::h100(), "gemm+bias+gelu+residual");
+
+    let dcfg = DecodeConfig::default_for(16, 64);
+    let prog = flash_decode_program(4, 16, 64, 16, &dcfg, &[EpilogueOp::ResidualAdd]);
+    check_properties(&prog, &Device::h100(), "decode+residual");
+}
+
+/// Dynamic-M tails: out-of-bounds tail stores are dropped at compile
+/// time by the guard ranges, so every *existing* output element is
+/// still written exactly once — no double-writes, no gaps.
+#[test]
+fn dynamic_m_tail_scenarios_hold_vm_properties() {
+    let (n, k) = (64i64, 64i64);
+    let cfg = TileConfig::default_for(64, n, k);
+    for &m in &[33i64, 80, 96] {
+        let (prog, mvar) = matmul_program_dyn(n, k, DType::F16, &cfg);
+        let mut bind = HashMap::new();
+        bind.insert(mvar.id, m);
+        let sp = specialize(&prog, &bind);
+        check_properties(&sp, &Device::a100(), &format!("dyn-M m={m}"));
+    }
+}

@@ -272,6 +272,64 @@ fn golden_round_trip_on_regenerated_artifacts() {
 }
 
 #[test]
+fn untuned_path_is_deterministic_and_uses_default_configs() {
+    // Seed-era gap: the untuned path (`tune: false`) used to be exercised
+    // only incidentally. Pin its guarantees directly: with tuning off the
+    // runtime must (a) fall back to the static default configs without
+    // ever materializing a tuning cache, (b) serve every artifact
+    // bit-identically across independent runtime instances, and (c) agree
+    // bit-for-bit between the interp oracle and the compiled VM.
+    let dir = std::env::temp_dir().join(format!("tilelang-it-untuned-{}", std::process::id()));
+    let names = artifacts::generate_default_set(&dir).expect("generate");
+    let untuned = |compiled: bool| {
+        let opts = InterpOptions {
+            tune: false,
+            compiled,
+            ..Default::default()
+        };
+        let backend = if compiled {
+            ExecBackend::Compiled(opts)
+        } else {
+            ExecBackend::Interp(opts)
+        };
+        Runtime::with_backend(&dir, backend).expect("runtime")
+    };
+
+    let a = untuned(false);
+    let b = untuned(false);
+    let vm = untuned(true);
+    assert_eq!(vm.backend_name(), "compiled");
+    for name in &names {
+        let inputs = a.example_inputs(name).expect("inputs");
+        let ra = a.execute(name, &inputs).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let rb = b.execute(name, &inputs).expect("second run");
+        let rc = vm.execute(name, &inputs).expect("compiled run");
+        assert_eq!(ra.len(), rb.len());
+        for (i, (x, y)) in ra.iter().zip(&rb).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{name}[{i}]: untuned path nondeterministic ({x} vs {y})"
+            );
+        }
+        for (i, (x, y)) in ra.iter().zip(&rc).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{name}[{i}]: compiled diverges from interp on untuned path"
+            );
+        }
+    }
+    // tuning off means the default-config fallback ran: the sweep that
+    // writes the cache must never have started
+    assert!(
+        !dir.join("tune_cache.json").exists(),
+        "tune: false still materialized a tuning cache"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn compile_pipeline_covers_all_workload_families() {
     // every paper workload compiles on every modeled device
     let devices = [
