@@ -249,12 +249,8 @@ fn raw_worker(dir: PathBuf, backend: ExecBackend, kernel: String, rx: Receiver<J
                     exec_us: t0.elapsed().as_micros(),
                 });
             }
-            Job::Row { reply, .. } => {
-                let _ = reply.send(RowReply {
-                    output: Err("raw worker cannot batch rows".into()),
-                    latency_us: 0,
-                    batch_size: 0,
-                });
+            Job::Row { reply, enqueued, .. } => {
+                let _ = reply.send(error_row_reply("raw worker cannot batch rows", enqueued));
             }
             Job::Shutdown => break,
         }
@@ -376,12 +372,9 @@ fn batched_worker(
                     Instant::now() + policy.max_wait
                 }
                 Ok(Job::Shutdown) | Err(_) => break,
-                Ok(Job::Raw { reply, .. }) => {
-                    let _ = reply.send(KernelReply {
-                        output: Err("batched worker only accepts rows".into()),
-                        queue_us: 0,
-                        exec_us: 0,
-                    });
+                Ok(Job::Raw { reply, enqueued, .. }) => {
+                    let _ = reply
+                        .send(error_kernel_reply("batched worker only accepts rows", enqueued));
                     continue;
                 }
             }
@@ -402,12 +395,9 @@ fn batched_worker(
                     break;
                 }
                 Err(RecvTimeoutError::Timeout) => break,
-                Ok(Job::Raw { reply, .. }) => {
-                    let _ = reply.send(KernelReply {
-                        output: Err("batched worker only accepts rows".into()),
-                        queue_us: 0,
-                        exec_us: 0,
-                    });
+                Ok(Job::Raw { reply, enqueued, .. }) => {
+                    let _ = reply
+                        .send(error_kernel_reply("batched worker only accepts rows", enqueued));
                 }
             }
         }
@@ -451,22 +441,34 @@ fn batched_worker(
 fn drain_with_error(rx: &Receiver<Job>, msg: &str) {
     while let Ok(job) = rx.recv() {
         match job {
-            Job::Raw { reply, .. } => {
-                let _ = reply.send(KernelReply {
-                    output: Err(msg.to_string()),
-                    queue_us: 0,
-                    exec_us: 0,
-                });
+            Job::Raw { reply, enqueued, .. } => {
+                let _ = reply.send(error_kernel_reply(msg, enqueued));
             }
-            Job::Row { reply, .. } => {
-                let _ = reply.send(RowReply {
-                    output: Err(msg.to_string()),
-                    latency_us: 0,
-                    batch_size: 0,
-                });
+            Job::Row { reply, enqueued, .. } => {
+                let _ = reply.send(error_row_reply(msg, enqueued));
             }
             Job::Shutdown => break,
         }
+    }
+}
+
+/// Error replies must carry the *real* elapsed time since submit, not
+/// zero: a failure path that reports `latency_us: 0` drags the latency
+/// percentiles down exactly when the service is misbehaving, flattering
+/// p99 in the serve summary.
+fn error_kernel_reply(msg: &str, enqueued: Instant) -> KernelReply {
+    KernelReply {
+        output: Err(msg.to_string()),
+        queue_us: enqueued.elapsed().as_micros(),
+        exec_us: 0,
+    }
+}
+
+fn error_row_reply(msg: &str, enqueued: Instant) -> RowReply {
+    RowReply {
+        output: Err(msg.to_string()),
+        latency_us: enqueued.elapsed().as_micros(),
+        batch_size: 0,
     }
 }
 
@@ -504,7 +506,29 @@ pub fn percentile(sorted_us: &[u128], p: f64) -> u128 {
 
 #[cfg(test)]
 mod tests {
-    use super::{assemble_batch, percentile};
+    use super::{assemble_batch, error_kernel_reply, error_row_reply, percentile};
+
+    #[test]
+    fn error_replies_report_real_elapsed_time() {
+        // the zero-latency bug: error paths used to send latency_us: 0,
+        // which dragged p99 *down* when the service failed
+        let t0 = std::time::Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let row = error_row_reply("boom", t0);
+        assert!(row.output.is_err());
+        assert!(
+            row.latency_us >= 5_000,
+            "error row reply claims {}us after a 5ms wait",
+            row.latency_us
+        );
+        let kr = error_kernel_reply("boom", t0);
+        assert!(kr.output.is_err());
+        assert!(
+            kr.queue_us >= 5_000,
+            "error kernel reply claims {}us queue after a 5ms wait",
+            kr.queue_us
+        );
+    }
 
     #[test]
     fn percentile_basics() {

@@ -20,12 +20,15 @@ use crate::graph::ir::{GraphNode, KernelGraph, NodeOp, ValueRef};
 use crate::graph::memplan::{self, MemPlan};
 use crate::ir::program::TileProgram;
 use crate::runtime::interp_backend::{
-    attention_config, decode_config, dequant_config, gemm_config, InterpKernel,
+    attention_config, decode_config, dequant_config, gemm_config, paged_decode_config,
+    InterpKernel,
 };
 use crate::runtime::{ArtifactSpec, InterpOptions, WorkloadKind};
 use crate::sim::device::Device;
 use crate::sim::model::{simulate_kernel, Penalties, LAUNCH_US};
-use crate::workloads::attention::{flash_attention_program_ep, flash_decode_program};
+use crate::workloads::attention::{
+    flash_attention_program_ep, flash_decode_paged_program, flash_decode_program,
+};
 use crate::workloads::dequant::dequant_matmul_program_ep;
 use crate::workloads::epilogue::reference_apply;
 use crate::workloads::matmul::matmul_program_ep;
@@ -120,6 +123,17 @@ pub(crate) fn node_program(
                 .map_err(|e| anyhow!("{}: {}", node.name, e))?;
             Ok(flash_decode_program(b, h, kv, d, &cfg, &node.epilogues))
         }
+        WorkloadKind::FlashDecodePaged => {
+            let q = &node.in_shapes[0];
+            let (b, h, d) = (q[0], q[1], q[2]);
+            let kv = node.in_shapes[1][1];
+            // pinned config — never tuned, never shape-adaptive, so a
+            // stream's output is invariant under cache-view padding (the
+            // serial-vs-batched bit-exactness the serving tests assert)
+            let cfg =
+                paged_decode_config(h, kv, d).map_err(|e| anyhow!("{}: {}", node.name, e))?;
+            Ok(flash_decode_paged_program(b, h, kv, d, &cfg, &node.epilogues))
+        }
         other => bail!(
             "{}: {} kernels take no fused epilogues",
             node.name,
@@ -180,6 +194,8 @@ pub struct GraphKernel {
     kernels: Vec<Option<InterpKernel>>,
     in_shapes: Vec<Vec<i64>>,
     out_len: usize,
+    /// Element counts of the extra outputs, declaration order.
+    extra_out_lens: Vec<usize>,
 }
 
 impl GraphKernel {
@@ -241,6 +257,11 @@ impl GraphKernel {
         Ok(GraphKernel {
             in_shapes: graph.input_shapes(),
             out_len: graph.out_shape()?.iter().product::<i64>() as usize,
+            extra_out_lens: graph
+                .extra_out_shapes()?
+                .iter()
+                .map(|s| s.iter().product::<i64>() as usize)
+                .collect(),
             graph,
             fused,
             fused_cost_us,
@@ -303,8 +324,16 @@ impl GraphKernel {
 
     /// Like [`GraphKernel::execute`], over borrowed slices — the sharded
     /// graph backend shares replicated weight tensors across shard
-    /// threads without copying them per shard.
+    /// threads without copying them per shard. Returns the primary
+    /// output only.
     pub fn execute_refs(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        Ok(self.execute_all_refs(inputs)?.swap_remove(0))
+    }
+
+    /// Execute and return every surfaced tensor: the primary output
+    /// first, then the extra outputs in declaration order — the serving
+    /// engine reads a decode step's new K/V rows from here.
+    pub fn execute_all_refs(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
         if inputs.len() != self.in_shapes.len() {
             bail!(
                 "graph {} expects {} inputs, got {}",
@@ -371,15 +400,20 @@ impl GraphKernel {
                 None => dedicated[i] = Some(out),
             }
         }
-        let out = match self.graph.output {
-            ValueRef::Input(i) => inputs[i].to_vec(),
-            ValueRef::Node(j) => match self.memplan.slots[j].buffer {
-                Some(b) => std::mem::take(&mut pool[b]),
-                None => dedicated[j]
-                    .take()
-                    .ok_or_else(|| anyhow!("graph output was not materialized"))?,
-            },
+        // validation forbids duplicate output refs, so each surfaced
+        // value can be moved out of its storage exactly once
+        let mut fetch = |v: ValueRef| -> Result<Vec<f32>> {
+            Ok(match v {
+                ValueRef::Input(i) => inputs[i].to_vec(),
+                ValueRef::Node(j) => match self.memplan.slots[j].buffer {
+                    Some(b) => std::mem::take(&mut pool[b]),
+                    None => dedicated[j]
+                        .take()
+                        .ok_or_else(|| anyhow!("graph output node {} was not materialized", j))?,
+                },
+            })
         };
+        let out = fetch(self.graph.output)?;
         if out.len() != self.out_len {
             bail!(
                 "graph output has {} values, manifest expects {}",
@@ -387,7 +421,20 @@ impl GraphKernel {
                 self.out_len
             );
         }
-        Ok(out)
+        let mut outs = vec![out];
+        for (i, &e) in self.graph.extra_outputs.iter().enumerate() {
+            let extra = fetch(e)?;
+            if extra.len() != self.extra_out_lens[i] {
+                bail!(
+                    "graph extra output {} has {} values, expected {}",
+                    i,
+                    extra.len(),
+                    self.extra_out_lens[i]
+                );
+            }
+            outs.push(extra);
+        }
+        Ok(outs)
     }
 }
 
@@ -443,6 +490,51 @@ mod tests {
         for (g_, u) in got.iter().zip(&got_u) {
             assert!((g_ - u).abs() < 0.06, "fused {} vs unfused {}", g_, u);
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn paged_decode_graph_surfaces_extras() {
+        use crate::graph::ir::decode_block_paged;
+        let (slots, heads, dh, max_kv) = (16i64, 16, 16, 32);
+        let d_model = heads * dh;
+        let g = decode_block_paged(slots, heads, dh, max_kv);
+        let lens: Vec<f32> = (0..slots)
+            .map(|i| if i == 2 { 0.0 } else { (16 + (i % 3) * 5) as f32 })
+            .collect();
+        let inputs = vec![
+            test_data(slots * d_model, 0x81),
+            test_data(d_model * d_model, 0x82),
+            test_data(slots * max_kv * dh, 0x83),
+            test_data(slots * max_kv * dh, 0x84),
+            lens,
+            test_data(d_model * dh, 0x85),
+            test_data(d_model * dh, 0x86),
+            test_data(d_model * d_model, 0x87),
+            test_data(d_model, 0x88),
+        ];
+        let want = g.reference_execute_all(&inputs).expect("reference");
+        let dir = std::env::temp_dir().join(format!("tilelang-graph-paged-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let k = GraphKernel::prepare_unfused(&g, &fast_opts(), &dir).expect("prepare");
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let outs = k.execute_all_refs(&refs).expect("execute");
+        assert_eq!(outs.len(), 3);
+        for (which, (got, want)) in outs.iter().zip(&want).enumerate() {
+            assert_eq!(got.len(), want.len(), "output {}", which);
+            for (i, (g_, w)) in got.iter().zip(want).enumerate() {
+                assert!(
+                    (g_ - w).abs() < 0.06 + 0.02 * w.abs(),
+                    "output {} idx {}: {} vs {}",
+                    which,
+                    i,
+                    g_,
+                    w
+                );
+            }
+        }
+        // the primary-only path returns the same tensor
+        assert_eq!(k.execute_refs(&refs).unwrap(), outs[0]);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -82,7 +82,9 @@ pub fn admits(kind: &WorkloadKind, op: &EpilogueOp, out_shape: &[i64]) -> Result
     let feature_dim = match kind {
         WorkloadKind::Gemm => 1usize,
         WorkloadKind::Dequant { .. } => 0usize,
-        WorkloadKind::FlashAttention { .. } | WorkloadKind::FlashDecode => {
+        WorkloadKind::FlashAttention { .. }
+        | WorkloadKind::FlashDecode
+        | WorkloadKind::FlashDecodePaged => {
             if out_shape.len() != 3 {
                 return Err(format!(
                     "attention epilogues need the rank-3 O tile, got {:?}",
@@ -238,8 +240,11 @@ fn check_fold(
             g.fan_out(ValueRef::Node(p))
         ));
     }
-    if g.output == ValueRef::Node(p) {
-        return Err(format!("{} is the graph output", g.nodes[p].name));
+    if g.is_output(ValueRef::Node(p)) {
+        return Err(format!(
+            "{} is a graph output (primary or extra)",
+            g.nodes[p].name
+        ));
     }
     // the element-wise view must be the producer's own shape (no fused
     // reshape), and epilogue operands must already be defined before p
@@ -291,6 +296,7 @@ fn fold(g: &KernelGraph, p: usize, e: usize) -> KernelGraph {
         inputs: g.inputs.clone(),
         nodes,
         output: remap(g.output),
+        extra_outputs: g.extra_outputs.iter().map(|&v| remap(v)).collect(),
     }
 }
 
@@ -371,6 +377,45 @@ mod tests {
         assert_eq!(attn.epilogues, vec![EpilogueOp::ResidualAdd]);
         assert_eq!(attn.inputs.len(), 4);
         p.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn paged_decode_folds_track_extra_outputs_through_the_rewrite() {
+        let g = crate::graph::ir::decode_block_paged(16, 16, 16, 32);
+        let p = plan(&g, &h100()).expect("fusion plan");
+        p.graph.validate().unwrap();
+        // whatever folded, the extras must still point at the K/V
+        // projection nodes after index compaction
+        assert_eq!(p.graph.extra_outputs.len(), 2);
+        for (extra, want) in p.graph.extra_outputs.iter().zip(["k_new", "v_new"]) {
+            match extra {
+                ValueRef::Node(j) => assert_eq!(p.graph.nodes[*j].name, want),
+                other => panic!("extra output {:?} is not a node", other),
+            }
+        }
+        // the residual still folds into the paged attention kernel and
+        // the bias into the out-projection, as in the contiguous block
+        assert_eq!(p.fused.len(), 2, "fused: {:?}", p.fused);
+        assert!(p.fused.iter().any(|f| f.producer == "attn"));
+        assert!(p.fused.iter().any(|f| f.producer == "out_proj"));
+    }
+
+    #[test]
+    fn extra_outputs_block_folding_their_producer() {
+        // mark ffn1's output as an extra: the gelu consumer behind its
+        // bias may no longer fold the producer away
+        let mut g = mlp_block(64, 64, 128);
+        g.extra_outputs.push(ValueRef::Node(0));
+        let p = plan(&g, &h100()).expect("plan");
+        p.graph.validate().unwrap();
+        assert!(
+            p.rejected
+                .iter()
+                .any(|(n, why)| n == "bias1" && why.contains("consumers")),
+            "rejected: {:?}",
+            p.rejected
+        );
+        assert!(p.fused.iter().all(|f| f.producer != "ffn1"));
     }
 
     #[test]

@@ -19,9 +19,12 @@
 //! Ships builders for the paper-motivated scenarios: [`mlp_block`]
 //! (GEMM+bias+GELU -> GEMM+bias+residual), [`attention_block`]
 //! (QKV GEMMs -> flash attention -> output-proj+residual),
-//! [`dequant_mlp_block`] (GEMM+bias+GELU -> dequant-GEMM+bias) and
+//! [`dequant_mlp_block`] (GEMM+bias+GELU -> dequant-GEMM+bias),
 //! [`decode_block`] (autoregressive decode against a KV cache:
-//! Q projection -> flash decode + residual-in-O -> out-proj + bias).
+//! Q projection -> flash decode + residual-in-O -> out-proj + bias) and
+//! [`decode_block_paged`] (the continuous-batching variant: masked
+//! paged attention over gathered cache pages, with this step's new K/V
+//! rows surfaced as *extra outputs* for the in-graph cache append).
 
 use std::fs;
 use std::path::Path;
@@ -30,7 +33,9 @@ use crate::error::{Context, Result};
 use crate::ir::dtype::DType;
 use crate::runtime::WorkloadKind;
 use crate::util::json::Json;
-use crate::workloads::attention::{reference_attention, reference_flash_decode};
+use crate::workloads::attention::{
+    reference_attention, reference_flash_decode, reference_flash_decode_paged,
+};
 use crate::workloads::dequant::{reference_dequant_matmul, WeightFormat};
 use crate::workloads::epilogue::{reference_apply, Activation, EpilogueOp};
 use crate::workloads::linear_attention::{reference_chunk_scan, reference_chunk_state};
@@ -131,14 +136,20 @@ impl GraphNode {
     }
 }
 
-/// A multi-kernel dataflow graph with a single output tensor (the
-/// runtime artifact contract).
+/// A multi-kernel dataflow graph. `output` is the primary output tensor
+/// (the runtime artifact contract: one request tensor out per execute).
+/// `extra_outputs` names additional node values the executor must also
+/// surface — e.g. a paged decode block's freshly projected K/V rows, so
+/// the serving layer's cache append consumes in-graph values instead of
+/// re-deriving them. Extras never replace the primary output; they ride
+/// alongside it via `GraphKernel::execute_all_refs`.
 #[derive(Clone, Debug)]
 pub struct KernelGraph {
     pub name: String,
     pub inputs: Vec<GraphInput>,
     pub nodes: Vec<GraphNode>,
     pub output: ValueRef,
+    pub extra_outputs: Vec<ValueRef>,
 }
 
 /// Number of primary (non-epilogue) operands a workload kernel takes.
@@ -146,6 +157,8 @@ pub fn kernel_input_count(kind: &WorkloadKind) -> usize {
     match kind {
         WorkloadKind::Gemm => 2,
         WorkloadKind::FlashAttention { .. } | WorkloadKind::FlashDecode => 3,
+        // Q gather, K gather, V gather, per-stream lengths
+        WorkloadKind::FlashDecodePaged => 4,
         WorkloadKind::Dequant { .. } => 3,
         WorkloadKind::ChunkState | WorkloadKind::ChunkScan => 3,
     }
@@ -182,7 +195,8 @@ impl KernelGraph {
         self.inputs.iter().map(|i| i.shape.clone()).collect()
     }
 
-    /// How many node operands (plus the graph output) read this value.
+    /// How many node operands (plus the graph outputs, primary and
+    /// extra) read this value.
     pub fn fan_out(&self, v: ValueRef) -> usize {
         let mut n = 0;
         for node in &self.nodes {
@@ -191,7 +205,23 @@ impl KernelGraph {
         if self.output == v {
             n += 1;
         }
+        n += self.extra_outputs.iter().filter(|&&e| e == v).count();
         n
+    }
+
+    /// Is `v` surfaced by the executor — the primary output or one of
+    /// the extras? Such values must keep dedicated storage (no pool
+    /// reuse) and must not be folded away by fusion.
+    pub fn is_output(&self, v: ValueRef) -> bool {
+        self.output == v || self.extra_outputs.contains(&v)
+    }
+
+    /// Shapes of the extra outputs, in declaration order.
+    pub fn extra_out_shapes(&self) -> Result<Vec<Vec<i64>>> {
+        self.extra_outputs
+            .iter()
+            .map(|&v| Ok(self.value_shape(v)?.to_vec()))
+            .collect()
     }
 
     /// Structural + shape validation: topological operand order, operand
@@ -278,6 +308,7 @@ impl KernelGraph {
                         WorkloadKind::FlashAttention { .. } | WorkloadKind::FlashDecode => {
                             &[3, 3, 3]
                         }
+                        WorkloadKind::FlashDecodePaged => &[3, 3, 3, 1],
                         WorkloadKind::Dequant { .. } => &[2, 2, 2],
                         WorkloadKind::ChunkState | WorkloadKind::ChunkScan => &[3, 3, 2],
                     };
@@ -359,6 +390,16 @@ impl KernelGraph {
             }
         }
         self.value_shape(self.output).context("graph output")?;
+        for (i, &e) in self.extra_outputs.iter().enumerate() {
+            self.value_shape(e)
+                .with_context(|| format!("graph extra output {}", i))?;
+            if e == self.output {
+                bail!("graph extra output {} duplicates the primary output", i);
+            }
+            if self.extra_outputs[..i].contains(&e) {
+                bail!("graph extra output {} listed twice ({:?})", i, e);
+            }
+        }
         Ok(())
     }
 
@@ -375,6 +416,11 @@ impl KernelGraph {
     /// the artifact instead of serving rows computed from co-batched
     /// strangers.
     pub fn row_batchable(&self) -> bool {
+        // multi-output graphs carry side-channel tensors (e.g. new K/V
+        // rows) the row-serving reply format cannot return
+        if !self.extra_outputs.is_empty() {
+            return false;
+        }
         let batch = match self.inputs.first() {
             Some(gi) => gi.shape[0],
             None => return false,
@@ -416,8 +462,16 @@ impl KernelGraph {
 
     /// Execute the graph on the f32 CPU references, node by node with
     /// every edge materialized — the semantic oracle for goldens and the
-    /// fused-vs-unfused differential tests.
+    /// fused-vs-unfused differential tests. Returns the primary output.
     pub fn reference_execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let mut outs = self.reference_execute_all(inputs)?;
+        Ok(outs.swap_remove(0))
+    }
+
+    /// Like [`KernelGraph::reference_execute`] but returns every
+    /// surfaced tensor: the primary output first, then the extra
+    /// outputs in declaration order.
+    pub fn reference_execute_all(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         self.validate()?;
         if inputs.len() != self.inputs.len() {
             bail!(
@@ -479,10 +533,13 @@ impl KernelGraph {
             drop(ops);
             values.push(out);
         }
-        Ok(match self.output {
+        let fetch = |v: ValueRef| match v {
             ValueRef::Input(i) => inputs[i].clone(),
             ValueRef::Node(j) => values[j].clone(),
-        })
+        };
+        let mut outs = vec![fetch(self.output)];
+        outs.extend(self.extra_outputs.iter().map(|&e| fetch(e)));
+        Ok(outs)
     }
 
     // ---- serialization (graph artifacts) -----------------------------
@@ -531,12 +588,26 @@ impl KernelGraph {
                 Json::Obj(fields)
             })
             .collect();
-        Json::Obj(vec![
+        let mut fields = vec![
             ("name".into(), Json::Str(self.name.clone())),
             ("inputs".into(), Json::Arr(inputs)),
             ("nodes".into(), Json::Arr(nodes)),
             ("output".into(), Json::Str(self.output.encode())),
-        ])
+        ];
+        // only written when present, so single-output artifacts keep
+        // their pre-multi-output byte layout
+        if !self.extra_outputs.is_empty() {
+            fields.push((
+                "extra_outputs".into(),
+                Json::Arr(
+                    self.extra_outputs
+                        .iter()
+                        .map(|v| Json::Str(v.encode()))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::Obj(fields)
     }
 
     pub fn from_json(v: &Json) -> Result<KernelGraph> {
@@ -634,11 +705,24 @@ impl KernelGraph {
             .and_then(Json::as_str)
             .and_then(ValueRef::decode)
             .ok_or_else(|| anyhow!("graph json missing output"))?;
+        let mut extra_outputs = Vec::new();
+        if let Some(extras) = v.get("extra_outputs").and_then(Json::as_arr) {
+            for e in extras {
+                let s = e
+                    .as_str()
+                    .ok_or_else(|| anyhow!("graph json: bad extra output ref"))?;
+                extra_outputs.push(
+                    ValueRef::decode(s)
+                        .ok_or_else(|| anyhow!("graph json: bad extra output ref {:?}", s))?,
+                );
+            }
+        }
         let g = KernelGraph {
             name,
             inputs,
             nodes,
             output,
+            extra_outputs,
         };
         g.validate()?;
         Ok(g)
@@ -775,6 +859,21 @@ fn reference_kernel(
                 ops[0], ops[1], ops[2], q[0], q[1], k[1], q[2],
             ))
         }
+        WorkloadKind::FlashDecodePaged => {
+            let (q, k) = (&in_shapes[0], &in_shapes[1]);
+            if k[0] != q[0] || k[2] != q[2] || in_shapes[2] != *k || in_shapes[3] != [q[0]] {
+                bail!(
+                    "flash_decode_paged cache {:?}/{:?} or lens {:?} does not match Q {:?}",
+                    k,
+                    in_shapes[2],
+                    in_shapes[3],
+                    q
+                );
+            }
+            Ok(reference_flash_decode_paged(
+                ops[0], ops[1], ops[2], ops[3], q[0], q[1], k[1], q[2],
+            ))
+        }
         WorkloadKind::Dequant { fmt, group } => {
             let (a, s) = (&in_shapes[0], &in_shapes[2]);
             let (m, k) = (a[0], a[1]);
@@ -903,6 +1002,7 @@ pub fn mlp_block(m: i64, d_model: i64, d_hidden: i64) -> KernelGraph {
         inputs,
         nodes,
         output: ValueRef::Node(5),
+        extra_outputs: vec![],
     }
 }
 
@@ -969,6 +1069,7 @@ pub fn attention_block(seq: i64, d: i64, causal: bool) -> KernelGraph {
         inputs,
         nodes,
         output: ValueRef::Node(5),
+        extra_outputs: vec![],
     }
 }
 
@@ -1057,6 +1158,7 @@ pub fn dequant_mlp_block(
         inputs,
         nodes,
         output: ValueRef::Node(4),
+        extra_outputs: vec![],
     }
 }
 
@@ -1156,6 +1258,128 @@ pub fn decode_block(streams: i64, heads: i64, head_dim: i64, past: i64) -> Kerne
         inputs,
         nodes,
         output: ValueRef::Node(4),
+        extra_outputs: vec![],
+    }
+}
+
+/// Paged-cache decode block: the continuous-batching serving engine's
+/// per-step graph. Like [`decode_block`], but (a) attention runs the
+/// *masked* paged kernel — the K/V operands are gather buffers padded to
+/// `max_kv` rows with a per-stream `Lens` vector masking the tail, so
+/// slots at different sequence lengths co-batch in one launch — and (b)
+/// the graph also projects this step's new K/V rows (`X Wk`, `X Wv`) and
+/// surfaces them as extra outputs, so the engine appends cache rows from
+/// in-graph values instead of re-deriving them host-side.
+///
+/// `slots` is the engine's fixed batch dimension (dead slots run with
+/// `lens = 0` and produce exactly-zero attention output); `max_kv` is
+/// the gather buffer's padded row count (multiple of 16).
+pub fn decode_block_paged(slots: i64, heads: i64, head_dim: i64, max_kv: i64) -> KernelGraph {
+    let f32s = DType::F32;
+    let d_model = heads * head_dim;
+    let inputs = vec![
+        GraphInput { name: "X".into(), shape: vec![slots, d_model], dtype: f32s },
+        GraphInput { name: "Wq".into(), shape: vec![d_model, d_model], dtype: f32s },
+        GraphInput {
+            name: "K_gather".into(),
+            shape: vec![slots, max_kv, head_dim],
+            dtype: f32s,
+        },
+        GraphInput {
+            name: "V_gather".into(),
+            shape: vec![slots, max_kv, head_dim],
+            dtype: f32s,
+        },
+        GraphInput { name: "Lens".into(), shape: vec![slots], dtype: f32s },
+        GraphInput { name: "Wk".into(), shape: vec![d_model, head_dim], dtype: f32s },
+        GraphInput { name: "Wv".into(), shape: vec![d_model, head_dim], dtype: f32s },
+        GraphInput { name: "Wo".into(), shape: vec![d_model, d_model], dtype: f32s },
+        GraphInput { name: "Bo".into(), shape: vec![d_model], dtype: f32s },
+    ];
+    let nodes = vec![
+        GraphNode {
+            name: "q_proj".into(),
+            op: NodeOp::Kernel(WorkloadKind::Gemm),
+            inputs: vec![ValueRef::Input(0), ValueRef::Input(1)],
+            in_shapes: vec![vec![slots, d_model], vec![d_model, d_model]],
+            epilogues: vec![],
+            out_shape: vec![slots, d_model],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "attn".into(),
+            op: NodeOp::Kernel(WorkloadKind::FlashDecodePaged),
+            inputs: vec![
+                ValueRef::Node(0),
+                ValueRef::Input(2),
+                ValueRef::Input(3),
+                ValueRef::Input(4),
+            ],
+            in_shapes: vec![
+                vec![slots, heads, head_dim],
+                vec![slots, max_kv, head_dim],
+                vec![slots, max_kv, head_dim],
+                vec![slots],
+            ],
+            epilogues: vec![],
+            out_shape: vec![slots, heads, head_dim],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "attn_res".into(),
+            op: NodeOp::Elementwise(EpilogueOp::ResidualAdd),
+            inputs: vec![ValueRef::Node(1), ValueRef::Input(0)],
+            in_shapes: vec![
+                vec![slots, heads, head_dim],
+                vec![slots, heads, head_dim],
+            ],
+            epilogues: vec![],
+            out_shape: vec![slots, heads, head_dim],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "out_proj".into(),
+            op: NodeOp::Kernel(WorkloadKind::Gemm),
+            inputs: vec![ValueRef::Node(2), ValueRef::Input(7)],
+            in_shapes: vec![vec![slots, d_model], vec![d_model, d_model]],
+            epilogues: vec![],
+            out_shape: vec![slots, d_model],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "bias_o".into(),
+            op: NodeOp::Elementwise(EpilogueOp::BiasAdd { dim: 1 }),
+            inputs: vec![ValueRef::Node(3), ValueRef::Input(8)],
+            in_shapes: vec![vec![slots, d_model], vec![d_model]],
+            epilogues: vec![],
+            out_shape: vec![slots, d_model],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "k_new".into(),
+            op: NodeOp::Kernel(WorkloadKind::Gemm),
+            inputs: vec![ValueRef::Input(0), ValueRef::Input(5)],
+            in_shapes: vec![vec![slots, d_model], vec![d_model, head_dim]],
+            epilogues: vec![],
+            out_shape: vec![slots, head_dim],
+            dtype: f32s,
+        },
+        GraphNode {
+            name: "v_new".into(),
+            op: NodeOp::Kernel(WorkloadKind::Gemm),
+            inputs: vec![ValueRef::Input(0), ValueRef::Input(6)],
+            in_shapes: vec![vec![slots, d_model], vec![d_model, head_dim]],
+            epilogues: vec![],
+            out_shape: vec![slots, head_dim],
+            dtype: f32s,
+        },
+    ];
+    KernelGraph {
+        name: format!("decode_block_paged_{}x{}x{}", slots, d_model, max_kv),
+        inputs,
+        nodes,
+        output: ValueRef::Node(4),
+        extra_outputs: vec![ValueRef::Node(5), ValueRef::Node(6)],
     }
 }
 
@@ -1296,5 +1520,99 @@ mod tests {
         assert_eq!(g.fan_out(ValueRef::Input(0)), 2);
         assert_eq!(g.fan_out(ValueRef::Node(0)), 1);
         assert_eq!(g.fan_out(ValueRef::Node(5)), 1); // the graph output
+    }
+
+    #[test]
+    fn paged_decode_block_validates_with_extras() {
+        let g = decode_block_paged(16, 16, 16, 32);
+        g.validate().unwrap();
+        assert_eq!(g.out_shape().unwrap(), &[16, 256]);
+        assert_eq!(
+            g.extra_out_shapes().unwrap(),
+            vec![vec![16, 16], vec![16, 16]]
+        );
+        // extras pin their producers' storage and count as consumers
+        assert!(g.is_output(ValueRef::Node(4)));
+        assert!(g.is_output(ValueRef::Node(5)));
+        assert!(g.is_output(ValueRef::Node(6)));
+        assert!(!g.is_output(ValueRef::Node(0)));
+        assert_eq!(g.fan_out(ValueRef::Node(5)), 1);
+        // the reply format can't carry the extra K/V tensors
+        assert!(!g.row_batchable());
+        // an extra referencing a missing node fails validation
+        let mut bad = decode_block_paged(16, 16, 16, 32);
+        bad.extra_outputs.push(ValueRef::Node(99));
+        assert!(bad.validate().is_err());
+        let mut dup = decode_block_paged(16, 16, 16, 32);
+        dup.extra_outputs.push(ValueRef::Node(5));
+        assert!(dup.validate().is_err());
+    }
+
+    #[test]
+    fn extra_outputs_survive_json_round_trip() {
+        let g = decode_block_paged(16, 16, 16, 32);
+        let back = KernelGraph::from_json(&Json::parse(&g.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.output, g.output);
+        assert_eq!(back.extra_outputs, g.extra_outputs);
+        // single-output graphs keep the old artifact layout
+        let text = mlp_block(8, 8, 16).to_json().dump();
+        assert!(!text.contains("extra_outputs"));
+    }
+
+    #[test]
+    fn reference_execute_all_returns_primary_then_extras() {
+        use crate::workloads::attention::reference_flash_decode_paged;
+        let (slots, heads, dh, max_kv) = (16i64, 16i64, 16i64, 32i64);
+        let d_model = heads * dh;
+        let g = decode_block_paged(slots, heads, dh, max_kv);
+        let x = test_data(slots * d_model, 0x71);
+        let wq = test_data(d_model * d_model, 0x72);
+        let kg = test_data(slots * max_kv * dh, 0x73);
+        let vg = test_data(slots * max_kv * dh, 0x74);
+        // staggered live lengths, one dead slot
+        let lens: Vec<f32> = (0..slots)
+            .map(|i| if i == 3 { 0.0 } else { (8 + (i % 4) * 7) as f32 })
+            .collect();
+        let wk = test_data(d_model * dh, 0x75);
+        let wv = test_data(d_model * dh, 0x76);
+        let wo = test_data(d_model * d_model, 0x77);
+        let bo = test_data(d_model, 0x78);
+        let inputs = vec![
+            x.clone(),
+            wq.clone(),
+            kg.clone(),
+            vg.clone(),
+            lens.clone(),
+            wk.clone(),
+            wv.clone(),
+            wo.clone(),
+            bo.clone(),
+        ];
+        let outs = g.reference_execute_all(&inputs).unwrap();
+        assert_eq!(outs.len(), 3);
+        assert_eq!(outs[0].len(), (slots * d_model) as usize);
+        // extras are exactly the K/V projections of X
+        let k_new = reference_matmul(&x, &wk, slots, dh, d_model);
+        let v_new = reference_matmul(&x, &wv, slots, dh, d_model);
+        assert_eq!(outs[1], k_new);
+        assert_eq!(outs[2], v_new);
+        // primary composes the masked decode oracle
+        let q = reference_matmul(&x, &wq, slots, d_model, d_model);
+        let mut h =
+            reference_flash_decode_paged(&q, &kg, &vg, &lens, slots, heads, max_kv, dh);
+        for (hv, xv) in h.iter_mut().zip(&x) {
+            *hv += xv;
+        }
+        let mut y = reference_matmul(&h, &wo, slots, d_model, d_model);
+        for i in 0..slots as usize {
+            for j in 0..d_model as usize {
+                y[i * d_model as usize + j] += bo[j];
+            }
+        }
+        for (g_, w) in outs[0].iter().zip(&y) {
+            assert!((g_ - w).abs() < 1e-4, "{} vs {}", g_, w);
+        }
+        // reference_execute still returns just the primary
+        assert_eq!(g.reference_execute(&inputs).unwrap(), outs[0]);
     }
 }

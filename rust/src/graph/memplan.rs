@@ -15,8 +15,9 @@ use crate::graph::ir::{KernelGraph, ValueRef};
 /// its live range `[def, last_use]` in node indices.
 #[derive(Clone, Debug)]
 pub struct SlotAssign {
-    /// Pool buffer index; `None` for the graph output (dedicated
-    /// allocation — it leaves the pool as the request reply).
+    /// Pool buffer index; `None` for the graph outputs — primary and
+    /// extras alike get dedicated allocations, since they leave the
+    /// pool with the request reply.
     pub buffer: Option<usize>,
     /// Node index that defines the tensor.
     pub def: usize,
@@ -88,7 +89,7 @@ pub fn plan(g: &KernelGraph) -> MemPlan {
     let mut intermediate_bytes = 0i64;
     for (i, node) in g.nodes.iter().enumerate() {
         let bytes = node.out_len() as i64 * 4;
-        let buffer = if g.output == ValueRef::Node(i) {
+        let buffer = if g.is_output(ValueRef::Node(i)) {
             None
         } else {
             intermediate_bytes += bytes;
@@ -162,7 +163,7 @@ pub fn find_live_overlap(plan: &MemPlan) -> Option<(usize, usize)> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::ir::{attention_block, dequant_mlp_block, mlp_block};
+    use crate::graph::ir::{attention_block, decode_block_paged, dequant_mlp_block, mlp_block};
     use crate::workloads::dequant::WeightFormat;
 
     #[test]
@@ -198,6 +199,20 @@ mod tests {
         assert_ne!(q.buffer, k.buffer);
         assert_ne!(q.buffer, v.buffer);
         assert_ne!(k.buffer, v.buffer);
+    }
+
+    #[test]
+    fn extra_outputs_get_dedicated_storage() {
+        let g = decode_block_paged(16, 16, 16, 32);
+        let p = plan(&g);
+        // primary (bias_o, node 4) and both extras (k_new 5, v_new 6)
+        // must never land in the shared pool
+        for i in [4, 5, 6] {
+            assert!(p.slots[i].buffer.is_none(), "node {} pooled", i);
+        }
+        // true intermediates still pool
+        assert!(p.slots[0].buffer.is_some());
+        assert!(find_live_overlap(&p).is_none());
     }
 
     #[test]

@@ -30,7 +30,13 @@
 //!   interp backend — and, via `shard::graph`, partitioned whole across
 //!   executors (scatter once, run the fused block per shard, gather
 //!   once; the KV-cache decode block serves this way with per-stream
-//!   caches scattered to their shards).
+//!   caches scattered to their shards). The continuous-batching layer
+//!   ([`serve`]) adds the stateful serving mode: a shared paged
+//!   KV-cache pool (`serve::pool`) and a decode engine
+//!   (`serve::engine`) that admits/retires autoregressive streams
+//!   between steps, co-batching them at different sequence lengths
+//!   through the multi-output `decode_block_paged` graph —
+//!   bit-identical to serial per-stream decode on both backends.
 //!
 //! The crate is dependency-free (std only) so the whole loop — author,
 //! compile, tune, execute, serve — runs in an offline build:
@@ -50,6 +56,7 @@ pub mod layout;
 pub mod passes;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod shard;
 pub mod sim;
 pub mod tir;

@@ -27,7 +27,7 @@ use crate::tir::compile::{compile_lowered, CompiledProgram};
 use crate::tir::interp::{Interp, Tensors};
 use crate::tir::LoweredProgram;
 use crate::workloads::attention::{
-    AttentionTunable, AttnConfig, DecodeConfig, DecodeTunable,
+    flash_decode_paged_program, AttentionTunable, AttnConfig, DecodeConfig, DecodeTunable,
 };
 use crate::workloads::dequant::{DequantConfig, DequantTunable, WeightFormat};
 use crate::workloads::linear_attention::{
@@ -87,6 +87,12 @@ pub enum WorkloadKind {
     /// KV cache shared by the stream's heads (MQA-style) —
     /// `Q: [batch, heads, d]`, `K,V: [batch, seqlen_kv, d]`.
     FlashDecode,
+    /// Length-masked flash decode for the continuous-batching engine:
+    /// `K,V: [batch, max_kv, d]` hold the paged-gather of each stream's
+    /// cache padded to the co-batch maximum, and a fourth input
+    /// `Lens: [batch]` marks each stream's committed row count. Masked
+    /// positions are exact no-ops (see `flash_decode_paged_program`).
+    FlashDecodePaged,
     /// Weight-only quantized GEMM `Ct[n,m] = dequant(B) @ A^T`.
     Dequant { fmt: WeightFormat, group: i64 },
     /// Mamba-2 chunked state update `S = B^T @ (w * X)`.
@@ -98,14 +104,16 @@ pub enum WorkloadKind {
 impl WorkloadKind {
     /// Parse a manifest `workload=` tag. Tags are stable strings:
     /// `gemm`, `flash_attention`, `flash_attention_causal`,
-    /// `flash_decode`, `dequant_<int4|int2|nf4|fp4>_g<group>`,
-    /// `chunk_state`, `chunk_scan`.
+    /// `flash_decode`, `flash_decode_paged`,
+    /// `dequant_<int4|int2|nf4|fp4>_g<group>`, `chunk_state`,
+    /// `chunk_scan`.
     pub fn parse(tag: &str) -> Result<WorkloadKind> {
         match tag {
             "gemm" | "matmul" | "linear" => return Ok(WorkloadKind::Gemm),
             "flash_attention" => return Ok(WorkloadKind::FlashAttention { causal: false }),
             "flash_attention_causal" => return Ok(WorkloadKind::FlashAttention { causal: true }),
             "flash_decode" => return Ok(WorkloadKind::FlashDecode),
+            "flash_decode_paged" => return Ok(WorkloadKind::FlashDecodePaged),
             "chunk_state" => return Ok(WorkloadKind::ChunkState),
             "chunk_scan" => return Ok(WorkloadKind::ChunkScan),
             _ => {}
@@ -137,6 +145,7 @@ impl WorkloadKind {
             WorkloadKind::FlashAttention { causal: false } => "flash_attention".to_string(),
             WorkloadKind::FlashAttention { causal: true } => "flash_attention_causal".to_string(),
             WorkloadKind::FlashDecode => "flash_decode".to_string(),
+            WorkloadKind::FlashDecodePaged => "flash_decode_paged".to_string(),
             WorkloadKind::ChunkState => "chunk_state".to_string(),
             WorkloadKind::ChunkScan => "chunk_scan".to_string(),
             WorkloadKind::Dequant { fmt, group } => {
@@ -156,6 +165,9 @@ impl WorkloadKind {
     pub fn from_artifact_name(name: &str) -> Result<WorkloadKind> {
         if name.starts_with("matmul") || name.starts_with("gemm") || name.starts_with("linear") {
             return Ok(WorkloadKind::Gemm);
+        }
+        if name.starts_with("flash_decode_paged") {
+            return Ok(WorkloadKind::FlashDecodePaged);
         }
         if name.starts_with("flash_decode") {
             return Ok(WorkloadKind::FlashDecode);
@@ -450,6 +462,39 @@ pub(crate) fn decode_config(
     Ok(cfg)
 }
 
+/// Tile config for the paged (length-masked) decode kernel. Deliberately
+/// *not* tuned and *not* shape-adaptive: the continuous-batching engine
+/// runs the same stream under different `max_kv` paddings (its own
+/// 16-aligned length when decoded serially, the co-batch maximum when
+/// co-batched), and bit-identical outputs across those runs require the
+/// same KV block partitioning — the online-softmax rescale sequence
+/// depends on block boundaries. One fixed `block_n` keeps every padding
+/// of the same stream on the same block schedule.
+pub(crate) fn paged_decode_config(heads: i64, max_kv: i64, head_dim: i64) -> Result<DecodeConfig> {
+    if heads < 16 || heads % 16 != 0 {
+        bail!(
+            "paged decode needs a 16-aligned head count of at least 16, got {}",
+            heads
+        );
+    }
+    if head_dim % 16 != 0 {
+        bail!("paged decode head_dim {} is not a multiple of 16", head_dim);
+    }
+    if max_kv < 16 || max_kv % 16 != 0 {
+        bail!(
+            "paged decode max_kv {} must be a positive multiple of the fixed 16-row KV tile \
+             (gather pads to 16)",
+            max_kv
+        );
+    }
+    Ok(DecodeConfig {
+        block_h: 16,
+        block_n: 16,
+        num_stages: 2,
+        threads: 64,
+    })
+}
+
 /// Tile config for a dequant-GEMM problem. The artifact pins the scale
 /// grouping, so the tuner's group choice yields to the packed layout;
 /// an infeasible tuned config degrades to a group-compatible default.
@@ -582,6 +627,35 @@ pub(crate) fn build_program(
                 head_dim: d,
             }
             .build(&cfg))
+        }
+        WorkloadKind::FlashDecodePaged => {
+            if spec.in_shapes.len() != 4 {
+                bail!(
+                    "{}: flash_decode_paged expects 4 inputs (Q, K gather, V gather, Lens)",
+                    spec.name
+                );
+            }
+            let q = dims(spec, 0, 3)?;
+            let k = dims(spec, 1, 3)?;
+            let v = dims(spec, 2, 3)?;
+            let lens = dims(spec, 3, 1)?;
+            let (b, h, d) = (q[0], q[1], q[2]);
+            let kv = k[1];
+            if k != [b, kv, d] || v != k || lens != [b] || spec.out_shape != q {
+                bail!(
+                    "{}: inconsistent flash_decode_paged shapes (Q {:?}, K {:?}, V {:?}, \
+                     Lens {:?}, out {:?})",
+                    spec.name,
+                    q,
+                    k,
+                    v,
+                    lens,
+                    spec.out_shape
+                );
+            }
+            let cfg =
+                paged_decode_config(h, kv, d).map_err(|e| anyhow!("{}: {}", spec.name, e))?;
+            Ok(flash_decode_paged_program(b, h, kv, d, &cfg, &[]))
         }
         WorkloadKind::Dequant { fmt, group } => {
             let (fmt, group) = (*fmt, *group);

@@ -1,0 +1,610 @@
+//! Continuous-batching decode engine over the paged KV-cache pool.
+//!
+//! The engine runs `decode_block_paged` as one multi-output graph per
+//! step: every live stream occupies a batch slot, streams at different
+//! sequence lengths co-batch through the per-step paged gather (cache
+//! rows are copied out of the pool into contiguous `[slots, padded_kv,
+//! head_dim]` buffers, padded to the longest live stream rounded up to
+//! 16), and the graph's extra outputs hand back each slot's new K/V row
+//! so the cache update happens in-graph rather than as a host-side
+//! re-projection. Between steps the only authoritative cache copy lives
+//! in the shared [`KvPool`]; appends go in place and retirement recycles
+//! pages through the free list.
+//!
+//! Scheduling is deliberately simple and deterministic: arrivals queue
+//! FIFO, and a stream is admitted when a batch slot is free and the pool
+//! has enough free pages for the stream's whole lifetime (prefill +
+//! every decode step) — admission never strands a stream mid-decode on
+//! pool exhaustion. Prefill (writing the prompt's K/V rows) is timed
+//! separately from decode, and queue latency is measured from arrival
+//! to the stream's first decode step.
+//!
+//! Bit-exactness contract (the soak test's oracle): a stream's emitted
+//! outputs are byte-identical whether it runs alone or co-batched with
+//! any other streams at any interleaving. This holds because the paged
+//! kernel's length mask zeroes padded scores *exactly* (the masked
+//! score rescale underflows to 0.0 for any finite row max), GEMM rows
+//! are computed independently with a fixed k-ascending accumulation
+//! order, and the engine pins every tile config: it prepares graphs
+//! unfused with `tune: false`, so no fusion or tuning decision can vary
+//! with batch composition or padding.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::bail;
+use crate::coordinator::percentile;
+use crate::error::Result;
+use crate::graph::exec::GraphKernel;
+use crate::graph::ir::decode_block_paged;
+use crate::runtime::InterpOptions;
+use crate::serve::pool::KvPool;
+use crate::workloads::matmul::test_data;
+
+/// Engine shape and pool sizing. `slots` is the fixed batch dimension
+/// of the decode graph (GEMM block_m needs it ≥ 16 and 16-aligned);
+/// live streams map onto slots, dead slots ride along masked out.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub slots: i64,
+    pub heads: i64,
+    pub head_dim: i64,
+    /// Cache rows per pool page.
+    pub page_rows: usize,
+    /// Total pages in the shared pool.
+    pub pool_pages: usize,
+    /// Run node kernels through the compiled bytecode VM.
+    pub compiled: bool,
+    /// Seed for weights, prompts and initial inputs.
+    pub seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig {
+            slots: 16,
+            heads: 16,
+            head_dim: 16,
+            page_rows: 16,
+            pool_pages: 64,
+            compiled: false,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn d_model(&self) -> i64 {
+        self.heads * self.head_dim
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.slots < 16 || self.slots % 16 != 0 {
+            bail!("engine slots must be >= 16 and 16-aligned, got {}", self.slots);
+        }
+        if self.heads < 16 || self.heads % 16 != 0 || self.head_dim < 16 || self.head_dim % 16 != 0
+        {
+            bail!(
+                "engine heads/head_dim must be >= 16 and 16-aligned, got {}x{}",
+                self.heads,
+                self.head_dim
+            );
+        }
+        if self.page_rows == 0 || self.pool_pages == 0 {
+            bail!(
+                "engine pool needs positive sizing ({} pages x {} rows)",
+                self.pool_pages,
+                self.page_rows
+            );
+        }
+        Ok(())
+    }
+}
+
+/// One request: arrive at `arrival_step`, prefill `prefill_rows` prompt
+/// K/V rows, then emit `decode_steps` autoregressive outputs.
+#[derive(Clone, Debug)]
+pub struct StreamSpec {
+    pub id: u64,
+    pub arrival_step: usize,
+    pub prefill_rows: usize,
+    pub decode_steps: usize,
+}
+
+impl StreamSpec {
+    fn total_rows(&self) -> usize {
+        // every decode step appends one K/V row after executing
+        self.prefill_rows + self.decode_steps
+    }
+}
+
+/// p50/p99 over one phase's latency samples.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PhaseStats {
+    pub p50_us: u128,
+    pub p99_us: u128,
+    pub samples: usize,
+}
+
+impl PhaseStats {
+    fn from_samples(mut us: Vec<u128>) -> PhaseStats {
+        us.sort_unstable();
+        PhaseStats {
+            p50_us: percentile(&us, 50.0),
+            p99_us: percentile(&us, 99.0),
+            samples: us.len(),
+        }
+    }
+}
+
+/// What a continuous-batching run produced and how it behaved.
+pub struct EngineReport {
+    /// Per stream, the emitted decode outputs in order (`d_model` f32s
+    /// each) — the soak test bit-compares these against the serial
+    /// oracle.
+    pub outputs: BTreeMap<u64, Vec<Vec<f32>>>,
+    pub prefill: PhaseStats,
+    pub decode: PhaseStats,
+    pub queue: PhaseStats,
+    /// Scheduler steps that executed at least one live stream.
+    pub steps: usize,
+    pub streams: usize,
+    /// Most live streams ever co-batched in one step.
+    pub peak_concurrency: usize,
+    /// Peak pool pages in use / total pages.
+    pub peak_pages: usize,
+    pub pool_pages: usize,
+    /// Completed streams per wall-clock second.
+    pub streams_per_s: f64,
+}
+
+impl EngineReport {
+    /// The `tilelang serve --continuous` summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "continuous batching: {} streams over {} steps (peak {} co-batched), {:.1} \
+             streams/s | prefill p50/p99 {}us/{}us | decode p50/p99 {}us/{}us | queue p50/p99 \
+             {}us/{}us | pool peak {}/{} pages",
+            self.streams,
+            self.steps,
+            self.peak_concurrency,
+            self.streams_per_s,
+            self.prefill.p50_us,
+            self.prefill.p99_us,
+            self.decode.p50_us,
+            self.decode.p99_us,
+            self.queue.p50_us,
+            self.queue.p99_us,
+            self.peak_pages,
+            self.pool_pages
+        )
+    }
+}
+
+struct StreamState {
+    spec_idx: usize,
+    /// Next decode input — the previous step's output row.
+    x: Vec<f32>,
+    remaining: usize,
+    arrived_at: Instant,
+    first_decode_pending: bool,
+}
+
+/// The continuous-batching engine. Holds the model weights (seeded,
+/// deterministic) and a kernel cache keyed by padded KV length, so the
+/// serial oracle and the batched run share prepared graphs.
+pub struct Engine {
+    cfg: EngineConfig,
+    wq: Vec<f32>,
+    wk: Vec<f32>,
+    wv: Vec<f32>,
+    wo: Vec<f32>,
+    bo: Vec<f32>,
+    kernels: HashMap<i64, GraphKernel>,
+    cache_dir: PathBuf,
+}
+
+/// Weights live in [-0.03, 0.03]: with d_model-wide dot products the
+/// y -> next-x feedback loop then contracts instead of blowing past
+/// f16 range (kernels compute through f16 staging).
+const WEIGHT_SCALE: f32 = 0.06;
+
+fn scaled(n: i64, seed: u64) -> Vec<f32> {
+    test_data(n, seed).into_iter().map(|x| x * WEIGHT_SCALE).collect()
+}
+
+/// Per-stream data seeds, independent of arrival order and batch
+/// composition so the serial oracle regenerates identical prompts.
+fn stream_seed(base: u64, id: u64, lane: u64, row: u64) -> u64 {
+    base.wrapping_mul(0x9E3779B97F4A7C15)
+        ^ id.wrapping_mul(0xBF58476D1CE4E5B9)
+        ^ lane.wrapping_mul(0x94D049BB133111EB)
+        ^ row.wrapping_add(0x2545F4914F6CDD1D)
+}
+
+fn round_up16(n: usize) -> i64 {
+    (n.div_ceil(16) * 16).max(16) as i64
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig) -> Result<Engine> {
+        cfg.validate()?;
+        let dm = cfg.d_model();
+        let hd = cfg.head_dim;
+        let s = cfg.seed;
+        let cache_dir =
+            std::env::temp_dir().join(format!("tilelang-serve-{}", std::process::id()));
+        std::fs::create_dir_all(&cache_dir)?;
+        Ok(Engine {
+            wq: scaled(dm * dm, stream_seed(s, 0, 10, 0)),
+            wk: scaled(dm * hd, stream_seed(s, 0, 11, 0)),
+            wv: scaled(dm * hd, stream_seed(s, 0, 12, 0)),
+            wo: scaled(dm * dm, stream_seed(s, 0, 13, 0)),
+            bo: scaled(dm, stream_seed(s, 0, 14, 0)),
+            kernels: HashMap::new(),
+            cache_dir,
+            cfg,
+        })
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// A stream's prompt K/V row (prefill) — seeded by stream id and
+    /// row index only, so it is identical in any batch composition.
+    fn prompt_row(&self, id: u64, row: usize) -> (Vec<f32>, Vec<f32>) {
+        let hd = self.cfg.head_dim;
+        let k = test_data(hd, stream_seed(self.cfg.seed, id, 0, row as u64));
+        let v = test_data(hd, stream_seed(self.cfg.seed, id, 1, row as u64));
+        (k, v)
+    }
+
+    /// A stream's first decode input.
+    fn initial_x(&self, id: u64) -> Vec<f32> {
+        test_data(self.cfg.d_model(), stream_seed(self.cfg.seed, id, 2, 0))
+    }
+
+    /// Prepared decode graph for one padded KV length. Always unfused
+    /// and untuned: fusion and tuning choices may differ across padded
+    /// lengths, which would break serial-vs-batched bit equality.
+    fn kernel_for(
+        kernels: &mut HashMap<i64, GraphKernel>,
+        cfg: &EngineConfig,
+        dir: &Path,
+        padded_kv: i64,
+    ) -> Result<&GraphKernel> {
+        use std::collections::hash_map::Entry;
+        match kernels.entry(padded_kv) {
+            Entry::Occupied(e) => Ok(e.into_mut()),
+            Entry::Vacant(e) => {
+                let g = decode_block_paged(cfg.slots, cfg.heads, cfg.head_dim, padded_kv);
+                let opts = InterpOptions {
+                    tune: false,
+                    compiled: cfg.compiled,
+                    ..Default::default()
+                };
+                Ok(e.insert(GraphKernel::prepare_unfused(&g, &opts, dir)?))
+            }
+        }
+    }
+
+    /// Run the continuous-batching scheduler over `specs` to completion.
+    pub fn run(&mut self, specs: &[StreamSpec]) -> Result<EngineReport> {
+        let cfg = self.cfg.clone();
+        let slots_n = cfg.slots as usize;
+        let (dm, hd) = (cfg.d_model() as usize, cfg.head_dim as usize);
+        let mut seen = std::collections::HashSet::new();
+        for sp in specs {
+            if !seen.insert(sp.id) {
+                bail!("duplicate stream id {}", sp.id);
+            }
+            if sp.prefill_rows == 0 || sp.decode_steps == 0 {
+                bail!(
+                    "stream {}: prefill_rows and decode_steps must be >= 1 ({} / {})",
+                    sp.id,
+                    sp.prefill_rows,
+                    sp.decode_steps
+                );
+            }
+        }
+        let mut pool = KvPool::new(cfg.pool_pages, cfg.page_rows, hd)?;
+        for sp in specs {
+            if pool.pages_for(sp.total_rows()) > cfg.pool_pages {
+                bail!(
+                    "stream {} needs {} pages over its lifetime but the pool has {}",
+                    sp.id,
+                    pool.pages_for(sp.total_rows()),
+                    cfg.pool_pages
+                );
+            }
+        }
+
+        // arrival order: by step, ties in spec order
+        let mut arrival_order: Vec<usize> = (0..specs.len()).collect();
+        arrival_order.sort_by_key(|&i| specs[i].arrival_step);
+        let mut next_arrival = 0usize;
+
+        let mut slot_live: Vec<Option<StreamState>> = (0..slots_n).map(|_| None).collect();
+        let mut pending: Vec<usize> = Vec::new(); // FIFO admission queue of spec indices
+        let mut arrived_at: Vec<Option<Instant>> = vec![None; specs.len()];
+        let mut outputs: BTreeMap<u64, Vec<Vec<f32>>> = BTreeMap::new();
+        let (mut prefill_us, mut decode_us, mut queue_us) =
+            (Vec::new(), Vec::new(), Vec::new());
+        let (mut peak_pages, mut peak_concurrency, mut exec_steps, mut finished) = (0, 0, 0, 0);
+
+        // runaway guard: each spec needs at most decode_steps executing
+        // steps once admitted, plus its arrival delay and queueing slack
+        let max_arrival = specs.iter().map(|s| s.arrival_step).max().unwrap_or(0);
+        let step_cap =
+            max_arrival + specs.iter().map(|s| s.decode_steps).sum::<usize>() + specs.len() + 16;
+
+        let t0 = Instant::now();
+        let mut step = 0usize;
+        while finished < specs.len() {
+            if step > step_cap {
+                bail!(
+                    "scheduler stalled: {} of {} streams finished after {} steps",
+                    finished,
+                    specs.len(),
+                    step
+                );
+            }
+            // arrivals at this step join the FIFO queue
+            while next_arrival < arrival_order.len()
+                && specs[arrival_order[next_arrival]].arrival_step <= step
+            {
+                let i = arrival_order[next_arrival];
+                arrived_at[i] = Some(Instant::now());
+                pending.push(i);
+                next_arrival += 1;
+            }
+            // admit from the queue head while a slot is free and the
+            // pool can hold the stream's whole lifetime; head-of-line
+            // blocking keeps admission deterministic
+            while let Some(&i) = pending.first() {
+                let sp = &specs[i];
+                let live = slot_live.iter().filter(|s| s.is_some()).count();
+                if live >= slots_n || !pool.can_admit(sp.total_rows()) {
+                    break;
+                }
+                pending.remove(0);
+                pool.admit(sp.id)?;
+                let pf0 = Instant::now();
+                for r in 0..sp.prefill_rows {
+                    let (k, v) = self.prompt_row(sp.id, r);
+                    pool.append_row(sp.id, &k, &v)?;
+                }
+                prefill_us.push(pf0.elapsed().as_micros());
+                let slot = slot_live
+                    .iter()
+                    .position(|s| s.is_none())
+                    .expect("live < slots implies a free slot");
+                slot_live[slot] = Some(StreamState {
+                    spec_idx: i,
+                    x: self.initial_x(sp.id),
+                    remaining: sp.decode_steps,
+                    arrived_at: arrived_at[i].expect("arrived before admission"),
+                    first_decode_pending: true,
+                });
+                outputs.insert(sp.id, Vec::new());
+            }
+            peak_pages = peak_pages.max(pool.used_pages());
+
+            let live: Vec<usize> =
+                (0..slots_n).filter(|&s| slot_live[s].is_some()).collect();
+            if live.is_empty() {
+                // idle tick waiting on future arrivals
+                step += 1;
+                continue;
+            }
+            peak_concurrency = peak_concurrency.max(live.len());
+
+            // gather: pad to the longest live cache, 16-aligned
+            let max_len = live
+                .iter()
+                .map(|&s| {
+                    let st = slot_live[s].as_ref().expect("live slot");
+                    pool.rows_of(specs[st.spec_idx].id)
+                })
+                .collect::<Result<Vec<_>>>()?
+                .into_iter()
+                .max()
+                .expect("non-empty live set");
+            let padded = round_up16(max_len);
+            let pd = padded as usize;
+            let mut x_buf = vec![0.0f32; slots_n * dm];
+            let mut k_buf = vec![0.0f32; slots_n * pd * hd];
+            let mut v_buf = vec![0.0f32; slots_n * pd * hd];
+            let mut lens = vec![0.0f32; slots_n];
+            for &s in &live {
+                let st = slot_live[s].as_mut().expect("live slot");
+                let id = specs[st.spec_idx].id;
+                let rows = pool.gather_into(
+                    id,
+                    &mut k_buf[s * pd * hd..(s + 1) * pd * hd],
+                    &mut v_buf[s * pd * hd..(s + 1) * pd * hd],
+                )?;
+                lens[s] = rows as f32;
+                x_buf[s * dm..(s + 1) * dm].copy_from_slice(&st.x);
+                if st.first_decode_pending {
+                    st.first_decode_pending = false;
+                    queue_us.push(st.arrived_at.elapsed().as_micros());
+                }
+            }
+
+            // execute the multi-output decode graph: [Y, K_new, V_new]
+            let kern = Engine::kernel_for(&mut self.kernels, &cfg, &self.cache_dir, padded)?;
+            let ex0 = Instant::now();
+            let mut outs = kern.execute_all_refs(&[
+                x_buf.as_slice(),
+                self.wq.as_slice(),
+                k_buf.as_slice(),
+                v_buf.as_slice(),
+                lens.as_slice(),
+                self.wk.as_slice(),
+                self.wv.as_slice(),
+                self.wo.as_slice(),
+                self.bo.as_slice(),
+            ])?;
+            decode_us.push(ex0.elapsed().as_micros());
+            exec_steps += 1;
+            let v_new = outs.pop().expect("decode graph emits V_new");
+            let k_new = outs.pop().expect("decode graph emits K_new");
+            let y = outs.pop().expect("decode graph emits Y");
+
+            // commit: emit the output row, append the new K/V row in
+            // place, feed y back as the next input, retire finished
+            for &s in &live {
+                let st = slot_live[s].as_mut().expect("live slot");
+                let id = specs[st.spec_idx].id;
+                let y_row = &y[s * dm..(s + 1) * dm];
+                outputs.get_mut(&id).expect("admitted").push(y_row.to_vec());
+                pool.append_row(id, &k_new[s * hd..(s + 1) * hd], &v_new[s * hd..(s + 1) * hd])?;
+                st.x = y_row.to_vec();
+                st.remaining -= 1;
+                if st.remaining == 0 {
+                    pool.retire(id)?;
+                    slot_live[s] = None;
+                    finished += 1;
+                }
+            }
+            peak_pages = peak_pages.max(pool.used_pages());
+            pool.validate()?;
+            step += 1;
+        }
+        if pool.live_count() != 0 || pool.used_pages() != 0 {
+            bail!("engine finished with {} streams still in the pool", pool.live_count());
+        }
+
+        let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+        Ok(EngineReport {
+            outputs,
+            prefill: PhaseStats::from_samples(prefill_us),
+            decode: PhaseStats::from_samples(decode_us),
+            queue: PhaseStats::from_samples(queue_us),
+            steps: exec_steps,
+            streams: specs.len(),
+            peak_concurrency,
+            peak_pages,
+            pool_pages: cfg.pool_pages,
+            streams_per_s: specs.len() as f64 / wall_s,
+        })
+    }
+
+    /// The serial-decode oracle: run every stream alone (arrival 0, one
+    /// live stream, its own padding) through the same engine machinery.
+    /// Continuous batching must reproduce these outputs bit for bit.
+    pub fn serial_oracle(
+        &mut self,
+        specs: &[StreamSpec],
+    ) -> Result<BTreeMap<u64, Vec<Vec<f32>>>> {
+        let mut all = BTreeMap::new();
+        for sp in specs {
+            let solo = StreamSpec { arrival_step: 0, ..sp.clone() };
+            let report = self.run(&[solo])?;
+            let (id, outs) = report.outputs.into_iter().next().expect("one stream");
+            all.insert(id, outs);
+        }
+        Ok(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_validation_rejects_unaligned_shapes() {
+        let bad = EngineConfig { slots: 8, ..Default::default() };
+        assert!(Engine::new(bad).is_err());
+        let bad = EngineConfig { head_dim: 24, ..Default::default() };
+        assert!(Engine::new(bad).is_err());
+        let bad = EngineConfig { pool_pages: 0, ..Default::default() };
+        assert!(Engine::new(bad).is_err());
+    }
+
+    #[test]
+    fn single_stream_decodes_and_recycles_the_pool() {
+        let mut eng = Engine::new(EngineConfig::default()).unwrap();
+        let specs = [StreamSpec { id: 3, arrival_step: 0, prefill_rows: 5, decode_steps: 4 }];
+        let report = eng.run(&specs).unwrap();
+        assert_eq!(report.outputs[&3].len(), 4);
+        assert_eq!(report.steps, 4);
+        assert_eq!(report.peak_concurrency, 1);
+        assert!(report.peak_pages >= 1 && report.peak_pages <= report.pool_pages);
+        assert_eq!(report.decode.samples, 4);
+        for y in &report.outputs[&3] {
+            assert_eq!(y.len(), 256);
+            assert!(y.iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn staggered_streams_match_the_serial_oracle_bit_for_bit() {
+        let mut eng = Engine::new(EngineConfig::default()).unwrap();
+        let specs = [
+            StreamSpec { id: 1, arrival_step: 0, prefill_rows: 7, decode_steps: 5 },
+            StreamSpec { id: 2, arrival_step: 1, prefill_rows: 3, decode_steps: 6 },
+            StreamSpec { id: 3, arrival_step: 2, prefill_rows: 19, decode_steps: 3 },
+        ];
+        let batched = eng.run(&specs).unwrap();
+        assert!(batched.peak_concurrency >= 2, "streams must actually co-batch");
+        let serial = eng.serial_oracle(&specs).unwrap();
+        for sp in &specs {
+            let (b, s) = (&batched.outputs[&sp.id], &serial[&sp.id]);
+            assert_eq!(b.len(), s.len());
+            for (step, (br, sr)) in b.iter().zip(s).enumerate() {
+                for (i, (x, y)) in br.iter().zip(sr).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "stream {} step {} idx {}: batched {} vs serial {}",
+                        sp.id,
+                        step,
+                        i,
+                        x,
+                        y
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pool_pressure_defers_admission_instead_of_failing() {
+        // pool holds 6 pages of 4 rows; each stream needs 3 pages, so
+        // only two fit at once and the third must wait its turn
+        let cfg = EngineConfig { pool_pages: 6, page_rows: 4, ..Default::default() };
+        let mut eng = Engine::new(cfg).unwrap();
+        let specs = [
+            StreamSpec { id: 1, arrival_step: 0, prefill_rows: 6, decode_steps: 5 },
+            StreamSpec { id: 2, arrival_step: 0, prefill_rows: 6, decode_steps: 5 },
+            StreamSpec { id: 3, arrival_step: 0, prefill_rows: 6, decode_steps: 5 },
+        ];
+        let report = eng.run(&specs).unwrap();
+        assert_eq!(report.outputs.len(), 3);
+        assert!(report.peak_pages <= 6);
+        assert_eq!(report.queue.samples, 3);
+        // and the deferred stream still matches its solo run
+        let serial = eng.serial_oracle(&specs[2..]).unwrap();
+        assert_eq!(
+            report.outputs[&3]
+                .iter()
+                .flatten()
+                .map(|v| v.to_bits())
+                .collect::<Vec<_>>(),
+            serial[&3].iter().flatten().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn oversized_stream_is_rejected_up_front() {
+        let cfg = EngineConfig { pool_pages: 2, page_rows: 4, ..Default::default() };
+        let mut eng = Engine::new(cfg).unwrap();
+        let specs = [StreamSpec { id: 1, arrival_step: 0, prefill_rows: 20, decode_steps: 4 }];
+        let err = eng.run(&specs).unwrap_err().to_string();
+        assert!(err.contains("over its lifetime"), "got: {}", err);
+    }
+}

@@ -1,0 +1,13 @@
+//! Continuous-batching serving: a shared paged KV-cache pool
+//! ([`pool::KvPool`]) plus a decode engine ([`engine::Engine`]) that
+//! co-batches streams at different sequence lengths through the
+//! multi-output `decode_block_paged` graph. The engine's outputs are
+//! bit-identical to running each stream alone (the engine's
+//! `serial_oracle`) — the property the `serve_soak` integration test
+//! enforces on both the interp and compiled backends.
+
+pub mod engine;
+pub mod pool;
+
+pub use engine::{Engine, EngineConfig, EngineReport, PhaseStats, StreamSpec};
+pub use pool::KvPool;

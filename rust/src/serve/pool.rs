@@ -1,0 +1,334 @@
+//! Slab/paged KV-cache allocator for the continuous-batching engine.
+//!
+//! One shared pool holds every live stream's cache: two f32 slabs (K
+//! and V) cut into fixed-size pages of `page_rows` cache rows each.
+//! Per-stream [`PageTable`]s map a stream's logical row sequence onto
+//! pool pages; appends write in place into the stream's last page (rows
+//! are never moved once committed), and retiring a stream returns its
+//! pages to the free list for recycling — vLLM-style paged attention,
+//! scaled to the interp runtime.
+//!
+//! The allocator is exactly the kind of code that is subtly wrong under
+//! rare interleavings, so [`KvPool::validate`] checks the full
+//! invariant set (no page aliased by two live streams, free + live ==
+//! pool, page counts match committed rows) and the fuzz suite in
+//! `rust/tests/kv_pool.rs` runs it after every randomized operation.
+
+use std::collections::BTreeMap;
+
+use crate::error::Result;
+use crate::{anyhow, bail};
+
+/// A stream's mapping from logical cache rows to pool pages. Row `r`
+/// lives in `pages[r / page_rows]` at page-local row `r % page_rows`.
+#[derive(Clone, Debug)]
+pub struct PageTable {
+    pages: Vec<usize>,
+    rows: usize,
+}
+
+impl PageTable {
+    /// Committed cache rows (the stream's current KV length).
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Pool page indices backing this stream, logical order.
+    pub fn pages(&self) -> &[usize] {
+        &self.pages
+    }
+}
+
+/// The shared paged KV-cache pool.
+pub struct KvPool {
+    page_rows: usize,
+    head_dim: usize,
+    total_pages: usize,
+    /// K slab: page `p` occupies `p * page_rows * head_dim ..`.
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Free page indices. Allocation pops from the back, retirement
+    /// pushes to the back — LIFO recycling keeps the working set hot.
+    free: Vec<usize>,
+    /// Live streams by id (BTreeMap: deterministic iteration).
+    streams: BTreeMap<u64, PageTable>,
+}
+
+impl KvPool {
+    pub fn new(total_pages: usize, page_rows: usize, head_dim: usize) -> Result<KvPool> {
+        if total_pages == 0 || page_rows == 0 || head_dim == 0 {
+            bail!(
+                "kv pool needs positive dimensions (pages {}, rows/page {}, head_dim {})",
+                total_pages,
+                page_rows,
+                head_dim
+            );
+        }
+        let elems = total_pages * page_rows * head_dim;
+        Ok(KvPool {
+            page_rows,
+            head_dim,
+            total_pages,
+            k: vec![0.0; elems],
+            v: vec![0.0; elems],
+            free: (0..total_pages).rev().collect(),
+            streams: BTreeMap::new(),
+        })
+    }
+
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.head_dim
+    }
+
+    pub fn total_pages(&self) -> usize {
+        self.total_pages
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.streams.values().map(|t| t.pages.len()).sum()
+    }
+
+    /// Pages needed to hold `rows` cache rows.
+    pub fn pages_for(&self, rows: usize) -> usize {
+        rows.div_ceil(self.page_rows)
+    }
+
+    /// Can a stream that will eventually commit `rows` rows be admitted
+    /// right now without ever hitting pool exhaustion? The engine's
+    /// admission policy: hold arrivals in the queue until this is true.
+    pub fn can_admit(&self, rows: usize) -> bool {
+        self.pages_for(rows) <= self.free.len()
+    }
+
+    pub fn is_live(&self, id: u64) -> bool {
+        self.streams.contains_key(&id)
+    }
+
+    pub fn live_count(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Committed rows of a live stream.
+    pub fn rows_of(&self, id: u64) -> Result<usize> {
+        Ok(self.table(id)?.rows)
+    }
+
+    pub fn table(&self, id: u64) -> Result<&PageTable> {
+        self.streams
+            .get(&id)
+            .ok_or_else(|| anyhow!("stream {} is not live in the kv pool", id))
+    }
+
+    /// Register a new stream with an empty cache.
+    pub fn admit(&mut self, id: u64) -> Result<()> {
+        if self.streams.contains_key(&id) {
+            bail!("stream {} is already live", id);
+        }
+        self.streams.insert(id, PageTable { pages: Vec::new(), rows: 0 });
+        Ok(())
+    }
+
+    /// Append one K/V cache row for `id`, in place: a fresh page is
+    /// taken from the free list only on a page boundary, and committed
+    /// rows are never moved or copied.
+    pub fn append_row(&mut self, id: u64, k_row: &[f32], v_row: &[f32]) -> Result<()> {
+        if k_row.len() != self.head_dim || v_row.len() != self.head_dim {
+            bail!(
+                "stream {}: appended row has {}/{} values, head_dim is {}",
+                id,
+                k_row.len(),
+                v_row.len(),
+                self.head_dim
+            );
+        }
+        let (page_rows, head_dim) = (self.page_rows, self.head_dim);
+        let needs_page = {
+            let t = self.table(id)?;
+            t.rows == t.pages.len() * page_rows
+        };
+        if needs_page {
+            let page = self
+                .free
+                .pop()
+                .ok_or_else(|| anyhow!("kv pool exhausted appending to stream {}", id))?;
+            self.streams.get_mut(&id).expect("checked live").pages.push(page);
+        }
+        let t = self.streams.get_mut(&id).expect("checked live");
+        let page = t.pages[t.rows / page_rows];
+        let off = (page * page_rows + t.rows % page_rows) * head_dim;
+        self.k[off..off + head_dim].copy_from_slice(k_row);
+        self.v[off..off + head_dim].copy_from_slice(v_row);
+        t.rows += 1;
+        Ok(())
+    }
+
+    /// Retire a stream: its pages go back to the free list.
+    pub fn retire(&mut self, id: u64) -> Result<()> {
+        let t = self
+            .streams
+            .remove(&id)
+            .ok_or_else(|| anyhow!("cannot retire stream {}: not live", id))?;
+        self.free.extend(t.pages);
+        Ok(())
+    }
+
+    /// Copy a stream's committed rows, page by page, into the head of
+    /// contiguous K/V buffers (the per-step gather that lets streams at
+    /// different lengths co-batch). The tail beyond `rows * head_dim`
+    /// is zero-filled; returns the committed row count.
+    pub fn gather_into(&self, id: u64, k_out: &mut [f32], v_out: &mut [f32]) -> Result<usize> {
+        let t = self.table(id)?;
+        let need = t.rows * self.head_dim;
+        if k_out.len() < need || v_out.len() < need || k_out.len() != v_out.len() {
+            bail!(
+                "stream {}: gather buffers hold {}/{} values, cache needs {}",
+                id,
+                k_out.len(),
+                v_out.len(),
+                need
+            );
+        }
+        let mut written = 0usize;
+        for (pi, &page) in t.pages.iter().enumerate() {
+            let rows_here = (t.rows - pi * self.page_rows).min(self.page_rows);
+            let src = page * self.page_rows * self.head_dim;
+            let n = rows_here * self.head_dim;
+            k_out[written..written + n].copy_from_slice(&self.k[src..src + n]);
+            v_out[written..written + n].copy_from_slice(&self.v[src..src + n]);
+            written += n;
+        }
+        k_out[written..].fill(0.0);
+        v_out[written..].fill(0.0);
+        Ok(t.rows)
+    }
+
+    /// Allocating gather padded to `padded_rows` (test convenience).
+    pub fn gather(&self, id: u64, padded_rows: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        let mut k = vec![0.0; padded_rows * self.head_dim];
+        let mut v = vec![0.0; padded_rows * self.head_dim];
+        self.gather_into(id, &mut k, &mut v)?;
+        Ok((k, v))
+    }
+
+    /// Check every pool invariant; the fuzz suite calls this after each
+    /// randomized operation and the engine after each decode step.
+    ///
+    /// 1. every page index (live or free) is in range;
+    /// 2. no page is owned by two live streams, or both owned and free;
+    /// 3. free + live accounts for exactly the whole pool;
+    /// 4. each stream holds exactly `ceil(rows / page_rows)` pages.
+    pub fn validate(&self) -> Result<()> {
+        let mut owner: Vec<Option<u64>> = vec![None; self.total_pages];
+        for (&id, t) in &self.streams {
+            if t.pages.len() != self.pages_for(t.rows) {
+                bail!(
+                    "stream {}: {} pages for {} rows ({} rows/page)",
+                    id,
+                    t.pages.len(),
+                    t.rows,
+                    self.page_rows
+                );
+            }
+            for &p in &t.pages {
+                if p >= self.total_pages {
+                    bail!("stream {}: page {} out of range ({})", id, p, self.total_pages);
+                }
+                if let Some(other) = owner[p] {
+                    bail!("page {} aliased by live streams {} and {}", p, other, id);
+                }
+                owner[p] = Some(id);
+            }
+        }
+        for &p in &self.free {
+            if p >= self.total_pages {
+                bail!("free list holds out-of-range page {}", p);
+            }
+            if let Some(id) = owner[p] {
+                bail!("page {} is both free and owned by stream {}", p, id);
+            }
+            // mark to catch duplicates within the free list itself
+            owner[p] = Some(u64::MAX);
+        }
+        let accounted = owner.iter().filter(|o| o.is_some()).count();
+        if accounted != self.total_pages {
+            bail!(
+                "page conservation violated: {} of {} pages accounted for (free {} + live {})",
+                accounted,
+                self.total_pages,
+                self.free.len(),
+                self.used_pages()
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admit_append_gather_round_trip() {
+        let mut pool = KvPool::new(4, 2, 4).unwrap();
+        pool.admit(7).unwrap();
+        let row = |x: f32| vec![x; 4];
+        for i in 0..3 {
+            pool.append_row(7, &row(i as f32 + 1.0), &row(-(i as f32) - 1.0)).unwrap();
+            pool.validate().unwrap();
+        }
+        assert_eq!(pool.rows_of(7).unwrap(), 3);
+        assert_eq!(pool.used_pages(), 2);
+        let (k, v) = pool.gather(7, 4).unwrap();
+        assert_eq!(&k[..4], &[1.0; 4]);
+        assert_eq!(&k[8..12], &[3.0; 4]);
+        assert_eq!(&k[12..], &[0.0; 4][..]); // zero tail padding
+        assert_eq!(&v[..4], &[-1.0; 4]);
+        pool.retire(7).unwrap();
+        pool.validate().unwrap();
+        assert_eq!(pool.free_pages(), 4);
+    }
+
+    #[test]
+    fn exhaustion_and_admission_guards() {
+        let mut pool = KvPool::new(2, 2, 4).unwrap();
+        pool.admit(1).unwrap();
+        assert!(pool.admit(1).is_err(), "double admit");
+        for _ in 0..4 {
+            pool.append_row(1, &[0.0; 4], &[0.0; 4]).unwrap();
+        }
+        assert!(!pool.can_admit(1));
+        assert!(pool.append_row(1, &[0.0; 4], &[0.0; 4]).is_err(), "pool exhausted");
+        pool.validate().unwrap();
+        assert!(pool.retire(2).is_err(), "retire unknown stream");
+        pool.retire(1).unwrap();
+        assert!(pool.can_admit(4));
+        assert!(!pool.can_admit(5));
+    }
+
+    #[test]
+    fn validate_catches_aliasing_and_leaks() {
+        let mut pool = KvPool::new(4, 2, 4).unwrap();
+        pool.admit(1).unwrap();
+        pool.admit(2).unwrap();
+        pool.append_row(1, &[0.0; 4], &[0.0; 4]).unwrap();
+        pool.append_row(2, &[0.0; 4], &[0.0; 4]).unwrap();
+        pool.validate().unwrap();
+        // alias stream 2's page into stream 1's table
+        let stolen = pool.streams[&2].pages[0];
+        pool.streams.get_mut(&1).unwrap().pages.push(stolen);
+        pool.streams.get_mut(&1).unwrap().rows += 2;
+        assert!(pool.validate().unwrap_err().to_string().contains("aliased"));
+        // leak a page: drop it from the free list
+        let mut pool = KvPool::new(4, 2, 4).unwrap();
+        pool.free.pop();
+        assert!(pool.validate().unwrap_err().to_string().contains("conservation"));
+    }
+}

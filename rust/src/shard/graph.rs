@@ -479,6 +479,15 @@ fn analyze(g: &KernelGraph) -> Result<BatchFlow, String> {
     if g.inputs.is_empty() {
         return Err("graph has no inputs to partition".to_string());
     }
+    if !g.extra_outputs.is_empty() {
+        // the collective only reassembles the primary output; extras
+        // (e.g. a paged decode block's new K/V rows) would be dropped
+        return Err(format!(
+            "graph carries {} extra output(s); sharded execution returns only \
+             the primary output",
+            g.extra_outputs.len()
+        ));
+    }
     let batch = g.inputs[0].shape[0];
     let mut flow_inputs: Vec<Option<Axis>> = vec![None; g.inputs.len()];
     let mut denied: Vec<Option<String>> = vec![None; g.inputs.len()];
@@ -636,7 +645,9 @@ fn analyze(g: &KernelGraph) -> Result<BatchFlow, String> {
                             }
                         }
                     }
-                    WorkloadKind::ChunkState | WorkloadKind::ChunkScan => {
+                    WorkloadKind::FlashDecodePaged
+                    | WorkloadKind::ChunkState
+                    | WorkloadKind::ChunkScan => {
                         return Err(format!(
                             "{}: {} nodes are not graph-shardable yet",
                             node.name,

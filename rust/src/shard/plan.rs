@@ -182,6 +182,11 @@ pub fn strategies_for(kind: &WorkloadKind) -> &'static [Strategy] {
         WorkloadKind::FlashAttention { .. } | WorkloadKind::FlashDecode => {
             &[Strategy::HeadParallel]
         }
+        // the paged kernel's gather buffers are views into the serving
+        // engine's shared KV pool: slicing them per shard would deep-copy
+        // the pool (defeating paging), so it has no shard strategies —
+        // continuous batching scales by co-batching streams instead
+        WorkloadKind::FlashDecodePaged => &[],
         WorkloadKind::Dequant { .. } => &[Strategy::RowParallel],
         WorkloadKind::ChunkState | WorkloadKind::ChunkScan => &[Strategy::ChunkParallel],
     }

@@ -382,6 +382,171 @@ pub fn flash_decode_program(
     t.finish()
 }
 
+/// The serving engine's paged-gather decode kernel: [`flash_decode_program`]
+/// plus a per-stream valid-length mask, so streams at *different* sequence
+/// lengths co-batch against one `[batch, max_kv, d]` gather of their paged
+/// caches. A fourth input `Lens: [batch]` carries each stream's committed
+/// row count; cache positions `j >= Lens[bx]` are masked to `-1e30` before
+/// the online-softmax max, which makes them exact no-ops on the running
+/// `(m, logsum, acc_o)` state:
+///
+/// * a masked score rescales to `exp2(-1e30*scale - m*scale)`, which
+///   underflows to exactly `0.0` in f32 whenever any valid row has been
+///   seen (`m` finite), so `r_sum` and the `S@V` GEMM contribute nothing;
+/// * a *fully* masked trailing block leaves `m` unchanged (`max(m, -1e30)
+///   = m`), so `r_scale = exp2(0) = 1` and the state passes through
+///   bit-for-bit.
+///
+/// That no-op property is what the continuous-batching oracle tests rely
+/// on: padding a stream's cache view out to the co-batch's `max_kv` (or
+/// any longer 16-aligned length) cannot change its output, so a batched
+/// step equals the one-stream-at-a-time serial decode exactly — provided
+/// the tile config is pinned across lengths (see the runtime's
+/// `paged_decode_config`, which never varies `block_n` with `max_kv`).
+///
+/// A dead co-batch slot (`Lens[bx] = 0`, zeroed Q/K/V rows) degenerates to
+/// `exp2(0)` scores over zero V rows: output exactly `0.0`, never NaN.
+pub fn flash_decode_paged_program(
+    batch: i64,
+    heads: i64,
+    max_kv: i64,
+    head_dim: i64,
+    cfg: &DecodeConfig,
+    eps: &[EpilogueOp],
+) -> TileProgram {
+    let (bh, bn, d) = (cfg.block_h, cfg.block_n, head_dim);
+    assert!(
+        heads % bh == 0 && max_kv % bn == 0,
+        "paged decode shape (heads {}, max_kv {}) not tileable by {}x{}",
+        heads,
+        max_kv,
+        bh,
+        bn
+    );
+    let scale = 1.0f64 / (head_dim as f64).sqrt() * std::f64::consts::LOG2_E;
+
+    let name = if eps.is_empty() {
+        "flash_decode_paged"
+    } else {
+        "flash_decode_paged_ep"
+    };
+    let mut t = KernelBuilder::new(name, cfg.threads);
+    let q = t.param("Q", &[batch, heads, d], DType::F16);
+    let k = t.param("K", &[batch, max_kv, d], DType::F16);
+    let v = t.param("V", &[batch, max_kv, d], DType::F16);
+    // per-stream committed cache rows; f32 holds lengths < 2^24 exactly
+    let lens = t.param("Lens", &[batch], DType::F32);
+    let ep_params = declare_epilogue_params_rank3(&mut t, eps, [batch, heads, d]);
+    let o = t.param("O", &[batch, heads, d], DType::F16);
+    let (bx, by) = t.kernel2(batch, heads / bh);
+    t.use_swizzle(8);
+
+    let q_s = t.alloc_shared("Q_shared", &[bh, d], DType::F16);
+    let k_s = t.alloc_shared("K_shared", &[bn, d], DType::F16);
+    let v_s = t.alloc_shared("V_shared", &[bn, d], DType::F16);
+    let s_s = t.alloc_shared("S_shared", &[bh, bn], DType::F16);
+    let acc_s = t.alloc_fragment("acc_s", &[bh, bn], DType::F32);
+    let acc_o = t.alloc_fragment("acc_o", &[bh, d], DType::F32);
+    let m_prev = t.alloc_fragment("scores_max_prev", &[bh], DType::F32);
+    let m_cur = t.alloc_fragment("scores_max", &[bh], DType::F32);
+    let r_scale = t.alloc_fragment("scores_scale", &[bh], DType::F32);
+    let r_sum = t.alloc_fragment("scores_sum", &[bh], DType::F32);
+    let logsum = t.alloc_fragment("logsum", &[bh], DType::F32);
+
+    t.copy_in(q, vec![bx.expr(), by.expr() * bh, Expr::int(0)], q_s);
+    t.fill(acc_o, 0.0);
+    t.fill(logsum, 0.0);
+    t.fill(m_cur, f64::NEG_INFINITY);
+
+    t.pipelined(Expr::int(max_kv / bn), cfg.num_stages, |t, ko| {
+        t.copy_in(k, vec![bx.expr(), ko.expr() * bn, Expr::int(0)], k_s);
+        t.copy_in(v, vec![bx.expr(), ko.expr() * bn, Expr::int(0)], v_s);
+        t.clear(acc_s);
+        t.gemm_opts(q_s, k_s, acc_s, false, true, GemmWarpPolicy::FullCol);
+        // the paged-gather mask: global cache position ko*bn + j is a
+        // real committed row only below this stream's length
+        let (ko_e, bx_e) = (ko.expr(), bx.expr());
+        t.parallel(&[bh, bn], move |vrs| {
+            let (i, j) = (&vrs[0], &vrs[1]);
+            vec![store(
+                acc_s,
+                vec![i.expr(), j.expr()],
+                Expr::select(
+                    (ko_e * bn + j.expr()).lt(Expr::load(lens, vec![bx_e])),
+                    Expr::load(acc_s, vec![i.expr(), j.expr()]),
+                    Expr::float(-1e30),
+                ),
+            )]
+        });
+        t.copy(m_cur, m_prev);
+        t.reduce(acc_s, m_cur, 1, ReduceKind::Max, false);
+        t.parallel(&[bh], |vrs| {
+            let i = &vrs[0];
+            vec![store(
+                r_scale,
+                vec![i.expr()],
+                Expr::un(
+                    UnOp::Exp2,
+                    Expr::load(m_prev, vec![i.expr()]) * scale
+                        - Expr::load(m_cur, vec![i.expr()]) * scale,
+                ),
+            )]
+        });
+        t.parallel(&[bh, bn], |vrs| {
+            let (i, j) = (&vrs[0], &vrs[1]);
+            vec![store(
+                acc_s,
+                vec![i.expr(), j.expr()],
+                Expr::un(
+                    UnOp::Exp2,
+                    Expr::load(acc_s, vec![i.expr(), j.expr()]) * scale
+                        - Expr::load(m_cur, vec![i.expr()]) * scale,
+                ),
+            )]
+        });
+        t.reduce(acc_s, r_sum, 1, ReduceKind::Sum, true);
+        t.parallel(&[bh], |vrs| {
+            let i = &vrs[0];
+            vec![store(
+                logsum,
+                vec![i.expr()],
+                Expr::load(logsum, vec![i.expr()]) * Expr::load(r_scale, vec![i.expr()])
+                    + Expr::load(r_sum, vec![i.expr()]),
+            )]
+        });
+        t.parallel(&[bh, d], |vrs| {
+            let (i, j) = (&vrs[0], &vrs[1]);
+            vec![store(
+                acc_o,
+                vec![i.expr(), j.expr()],
+                Expr::load(acc_o, vec![i.expr(), j.expr()])
+                    * Expr::load(r_scale, vec![i.expr()]),
+            )]
+        });
+        t.copy(acc_s, s_s);
+        t.gemm_opts(s_s, v_s, acc_o, false, false, GemmWarpPolicy::FullCol);
+    });
+    t.parallel(&[bh, d], |vrs| {
+        let (i, j) = (&vrs[0], &vrs[1]);
+        vec![store(
+            acc_o,
+            vec![i.expr(), j.expr()],
+            Expr::load(acc_o, vec![i.expr(), j.expr()])
+                * Expr::float(1.0).floordiv_f(Expr::load(logsum, vec![i.expr()])),
+        )]
+    });
+    emit_epilogues_rank3(
+        &mut t,
+        eps,
+        &ep_params,
+        acc_o,
+        [bh, d],
+        &[bx.expr(), by.expr() * bh, Expr::int(0)],
+    );
+    t.copy_out(acc_o, o, vec![bx.expr(), by.expr() * bh, Expr::int(0)]);
+    t.finish()
+}
+
 /// MLA decode kernel (Fig. 18): queries `[b, h, dim]` + rope part
 /// `[b, h, pe]`, compressed KV `[b, s_kv, dim]` + `K_pe [b, s_kv, pe]`,
 /// output `[b, h, dim]`. One block handles `block_h` heads of one batch
@@ -889,6 +1054,60 @@ pub fn reference_flash_decode(
     out
 }
 
+/// Reference for the paged decode kernel: per-stream softmax over the
+/// first `lens[b]` cache positions only (positions beyond a stream's
+/// committed length do not exist, whatever `max_kv` the co-batch padded
+/// to). A zero-length stream (dead co-batch slot) outputs zeros.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_flash_decode_paged(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    lens: &[f32],
+    batch: i64,
+    heads: i64,
+    max_kv: i64,
+    d: i64,
+) -> Vec<f32> {
+    let (b_, h_, s_, d_) = (batch as usize, heads as usize, max_kv as usize, d as usize);
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0f32; b_ * h_ * d_];
+    for b in 0..b_ {
+        let len = (lens[b].max(0.0) as usize).min(s_);
+        if len == 0 {
+            continue;
+        }
+        let kb = &k[b * s_ * d_..(b + 1) * s_ * d_];
+        let vb = &v[b * s_ * d_..(b + 1) * s_ * d_];
+        for h in 0..h_ {
+            let qo = (b * h_ + h) * d_;
+            let mut scores = vec![0f32; len];
+            let mut mx = f32::NEG_INFINITY;
+            for (j, sc) in scores.iter_mut().enumerate() {
+                let mut acc = 0f32;
+                for x in 0..d_ {
+                    acc += q[qo + x] * kb[j * d_ + x];
+                }
+                *sc = acc * scale;
+                mx = mx.max(*sc);
+            }
+            let mut denom = 0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            for x in 0..d_ {
+                let mut acc = 0f32;
+                for (j, sc) in scores.iter().enumerate() {
+                    acc += sc * vb[j * d_ + x];
+                }
+                out[qo + x] = acc / denom;
+            }
+        }
+    }
+    out
+}
+
 /// Reference MLA decode in f32.
 #[allow(clippy::too_many_arguments)]
 pub fn reference_mla(
@@ -1162,5 +1381,122 @@ mod tests {
             "MLA frontend LOC should be paper-scale, got {}",
             loc
         );
+    }
+
+    /// Run the paged decode kernel on the interpreter.
+    fn run_paged(
+        b: i64,
+        h: i64,
+        max_kv: i64,
+        d: i64,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        lens: &[f32],
+    ) -> Vec<f32> {
+        let cfg = DecodeConfig {
+            block_h: 16,
+            block_n: 16,
+            num_stages: 2,
+            threads: 64,
+        };
+        let p = flash_decode_paged_program(b, h, max_kv, d, &cfg, &[]);
+        let l = compile(&p, &Device::h100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+        let mut t = Tensors::new();
+        t.insert(p.params[0].id, q.to_vec());
+        t.insert(p.params[1].id, k.to_vec());
+        t.insert(p.params[2].id, v.to_vec());
+        t.insert(p.params[3].id, lens.to_vec());
+        interp.run(&mut t).unwrap();
+        t[&p.params[4].id].clone()
+    }
+
+    #[test]
+    fn flash_decode_paged_matches_masked_reference() {
+        let (b, h, max_kv, d) = (2i64, 16i64, 64i64, 16i64);
+        let q = test_data(b * h * d, 71);
+        let k = test_data(b * max_kv * d, 72);
+        let v = test_data(b * max_kv * d, 73);
+        // stream 0 at a partial, unaligned length; stream 1 at full length
+        let lens = vec![37.0f32, 64.0];
+        let got = run_paged(b, h, max_kv, d, &q, &k, &v, &lens);
+        let want = reference_flash_decode_paged(&q, &k, &v, &lens, b, h, max_kv, d);
+        let mut max_err = 0f32;
+        for (g, w) in got.iter().zip(&want) {
+            max_err = max_err.max((g - w).abs());
+        }
+        assert!(max_err < 0.02, "paged decode max error {}", max_err);
+    }
+
+    #[test]
+    fn flash_decode_paged_at_full_length_equals_unmasked_kernel() {
+        // lens == max_kv: the mask never fires, so the paged kernel must be
+        // bit-identical to flash_decode on the same inputs and tile config
+        let (b, h, max_kv, d) = (2i64, 16i64, 64i64, 16i64);
+        let cfg = DecodeConfig {
+            block_h: 16,
+            block_n: 16,
+            num_stages: 2,
+            threads: 64,
+        };
+        let q = test_data(b * h * d, 81);
+        let k = test_data(b * max_kv * d, 82);
+        let v = test_data(b * max_kv * d, 83);
+        let lens = vec![max_kv as f32; b as usize];
+        let got = run_paged(b, h, max_kv, d, &q, &k, &v, &lens);
+
+        let p = flash_decode_program(b, h, max_kv, d, &cfg, &[]);
+        let l = compile(&p, &Device::h100(), &CompileOptions::default()).unwrap();
+        let interp = Interp::new(&l).unwrap();
+        let mut t = Tensors::new();
+        t.insert(p.params[0].id, q.clone());
+        t.insert(p.params[1].id, k.clone());
+        t.insert(p.params[2].id, v.clone());
+        interp.run(&mut t).unwrap();
+        assert_eq!(got, t[&p.params[3].id], "mask at full length must be a no-op");
+    }
+
+    #[test]
+    fn flash_decode_paged_tail_padding_is_bit_exact() {
+        // the serial-oracle property: padding a stream's cache view past its
+        // committed length (fully masked trailing blocks) must not change
+        // its output at all — same tile config, longer max_kv, same bits
+        let (b, h, d) = (1i64, 16i64, 16i64);
+        let len = 37usize;
+        let q = test_data(b * h * d, 91);
+        let rows_k = test_data(128 * d, 92);
+        let rows_v = test_data(128 * d, 93);
+        let build = |max_kv: usize| -> (Vec<f32>, Vec<f32>) {
+            let mut k = vec![0f32; max_kv * d as usize];
+            let mut v = vec![0f32; max_kv * d as usize];
+            let n = d as usize * len;
+            k[..n].copy_from_slice(&rows_k[..n]);
+            v[..n].copy_from_slice(&rows_v[..n]);
+            (k, v)
+        };
+        let (k48, v48) = build(48);
+        let (k96, v96) = build(96);
+        let lens = vec![len as f32];
+        let short = run_paged(b, h, 48, d, &q, &k48, &v48, &lens);
+        let long = run_paged(b, h, 96, d, &q, &k96, &v96, &lens);
+        assert_eq!(short, long, "masked tail blocks must be exact no-ops");
+    }
+
+    #[test]
+    fn flash_decode_paged_dead_slot_outputs_zero() {
+        let (b, h, max_kv, d) = (2i64, 16i64, 32i64, 16i64);
+        let q = test_data(b * h * d, 95);
+        let k = test_data(b * max_kv * d, 96);
+        let v = test_data(b * max_kv * d, 97);
+        // stream 1 is a dead co-batch slot: no committed rows
+        let lens = vec![32.0f32, 0.0];
+        let got = run_paged(b, h, max_kv, d, &q, &k, &v, &lens);
+        let per_stream = (h * d) as usize;
+        assert!(
+            got[per_stream..].iter().all(|&x| x == 0.0),
+            "dead slot must decode to exact zeros, never NaN"
+        );
+        assert!(got[..per_stream].iter().any(|&x| x != 0.0));
     }
 }

@@ -25,8 +25,9 @@ use tilelang::sim::device::Device;
 use tilelang::tir::compile::compile_lowered;
 use tilelang::tir::interp::{Interp, Tensors};
 use tilelang::workloads::attention::{
-    flash_attention_program, flash_decode_program, reference_attention, reference_flash_decode,
-    AttnConfig, DecodeConfig,
+    flash_attention_program, flash_decode_paged_program, flash_decode_program,
+    reference_attention, reference_flash_decode, reference_flash_decode_paged, AttnConfig,
+    DecodeConfig,
 };
 use tilelang::workloads::dequant::{
     dequant_matmul_program, dequantize_weights, quantize_weights, DequantConfig, WeightFormat,
@@ -515,6 +516,106 @@ fn runtime_backends_agree_on_all_default_artifacts() {
             assert!(
                 g.to_bits() == w.to_bits(),
                 "{name} sharded: compiled diverged from interp at {i}: {g} vs {w}"
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The paged (length-masked) decode kernel that backs the continuous
+/// batching engine: compiled must stay bit-identical to interp across
+/// random per-stream lengths (including dead slots, len 0), and interp
+/// must match the masked CPU reference. Uses the engine's pinned
+/// config (block_h/block_n 16) — the one the serving path always runs.
+#[test]
+fn flash_decode_paged_compiled_matches_interp_and_reference() {
+    let mut rng = Rng(0xFA6ED);
+    let cfg = DecodeConfig {
+        block_h: 16,
+        block_n: 16,
+        num_stages: 2,
+        threads: 64,
+    };
+    for case in 0..4usize {
+        let (batch, heads, d) = (4i64, 16i64, 16i64);
+        let max_kv = *rng.pick(&[16i64, 48, 96]);
+        let prog = flash_decode_paged_program(batch, heads, max_kv, d, &cfg, &[]);
+        let q = test_data(batch * heads * d, 9500 + case as u64);
+        let k = test_data(batch * max_kv * d, 9600 + case as u64);
+        let v = test_data(batch * max_kv * d, 9700 + case as u64);
+        // random valid lengths, always exercising a dead slot
+        let mut lens: Vec<f32> =
+            (0..batch).map(|_| (rng.next() % (max_kv as u64 + 1)) as f32).collect();
+        lens[case % batch as usize] = 0.0;
+        let got = run_both(
+            &prog,
+            &Device::h100(),
+            &[
+                (prog.params[0].id, q.clone()),
+                (prog.params[1].id, k.clone()),
+                (prog.params[2].id, v.clone()),
+                (prog.params[3].id, lens.clone()),
+            ],
+            prog.params[4].id,
+            &format!("paged decode case {case} (kv {max_kv}, lens {lens:?})"),
+        );
+        let want = reference_flash_decode_paged(&q, &k, &v, &lens, batch, heads, max_kv, d);
+        let mut max_err = 0f32;
+        for (g, w) in got.iter().zip(&want) {
+            max_err = max_err.max((g - w).abs());
+        }
+        assert!(max_err < 0.03, "paged decode case {case}: max err {max_err}");
+    }
+}
+
+/// The multi-output decode graph end to end: interp and compiled
+/// GraphKernels must agree bit for bit on the primary output AND both
+/// extra outputs (the new K/V rows the serving engine appends to the
+/// paged pool).
+#[test]
+fn paged_decode_graph_backends_agree_on_all_outputs() {
+    use tilelang::graph::exec::GraphKernel;
+    use tilelang::graph::ir::decode_block_paged;
+    use tilelang::runtime::InterpOptions;
+
+    let (slots, heads, hd, max_kv) = (16i64, 16i64, 16i64, 32i64);
+    let dm = heads * hd;
+    let g = decode_block_paged(slots, heads, hd, max_kv);
+    let inputs: Vec<Vec<f32>> = vec![
+        test_data(slots * dm, 0xA1),
+        test_data(dm * dm, 0xA2).iter().map(|x| x * 0.06).collect(),
+        test_data(slots * max_kv * hd, 0xA3),
+        test_data(slots * max_kv * hd, 0xA4),
+        (0..slots).map(|s| ((s * 7 + 3) % (max_kv + 1)) as f32).collect(),
+        test_data(dm * hd, 0xA5).iter().map(|x| x * 0.06).collect(),
+        test_data(dm * hd, 0xA6).iter().map(|x| x * 0.06).collect(),
+        test_data(dm * dm, 0xA7).iter().map(|x| x * 0.06).collect(),
+        test_data(dm, 0xA8).iter().map(|x| x * 0.06).collect(),
+    ];
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let dir = std::env::temp_dir().join(format!(
+        "tilelang-backend-diff-paged-graph-{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    let fast = InterpOptions {
+        tune: false,
+        ..Default::default()
+    };
+    let mut compiled_opts = fast.clone();
+    compiled_opts.compiled = true;
+    let ki = GraphKernel::prepare_unfused(&g, &fast, &dir).expect("interp graph");
+    let kc = GraphKernel::prepare_unfused(&g, &compiled_opts, &dir).expect("compiled graph");
+    let want = ki.execute_all_refs(&refs).expect("interp exec");
+    let got = kc.execute_all_refs(&refs).expect("compiled exec");
+    assert_eq!(want.len(), 3, "primary + K_new + V_new");
+    assert_eq!(got.len(), 3);
+    for (o, (w, gv)) in want.iter().zip(&got).enumerate() {
+        assert_eq!(w.len(), gv.len(), "output {o}: length mismatch");
+        for (i, (a, b)) in w.iter().zip(gv).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "output {o} idx {i}: compiled diverged from interp: {b} vs {a}"
             );
         }
     }

@@ -1,0 +1,212 @@
+//! Property/fuzz suite for the paged KV-cache pool behind the
+//! continuous-batching engine.
+//!
+//! A seeded random walk drives admit / append / retire against the
+//! pool while a shadow model keeps each live stream's cache as a plain
+//! contiguous Vec. After every operation the pool's full invariant set
+//! is re-checked (`KvPool::validate`: no page aliased by two live
+//! streams, free + live pages == pool, page counts match rows), and the
+//! paged gather must reproduce the shadow cache *byte for byte* —
+//! including the zero-filled padding tail that the masked decode kernel
+//! relies on.
+
+use std::collections::BTreeMap;
+
+use tilelang::serve::KvPool;
+
+/// SplitMix64 (same driver as tests/property.rs; no proptest offline).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+    fn below(&mut self, n: u64) -> u64 {
+        self.next() % n
+    }
+}
+
+const HEAD_DIM: usize = 16;
+
+fn random_row(rng: &mut Rng) -> Vec<f32> {
+    (0..HEAD_DIM)
+        .map(|_| ((rng.next() >> 40) as f32 / (1u64 << 24) as f32) - 0.5)
+        .collect()
+}
+
+/// Shadow model: per stream, the contiguous (k, v) cache the pool's
+/// paged layout must be able to reproduce exactly.
+type Shadow = BTreeMap<u64, (Vec<f32>, Vec<f32>)>;
+
+fn assert_gather_matches(pool: &KvPool, shadow: &Shadow) {
+    for (&id, (sk, sv)) in shadow {
+        let rows = sk.len() / HEAD_DIM;
+        // pad past the committed length like the engine does, to prove
+        // the tail comes back zeroed
+        let padded = rows + 1 + rows % 3;
+        let (gk, gv) = pool.gather(id, padded).expect("gather live stream");
+        assert_eq!(gk.len(), padded * HEAD_DIM);
+        let want_k: Vec<u32> = sk
+            .iter()
+            .copied()
+            .chain(std::iter::repeat(0.0))
+            .take(padded * HEAD_DIM)
+            .map(f32::to_bits)
+            .collect();
+        let got_k: Vec<u32> = gk.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_k, want_k, "stream {id}: paged K gather != contiguous shadow");
+        let want_v: Vec<u32> = sv
+            .iter()
+            .copied()
+            .chain(std::iter::repeat(0.0))
+            .take(padded * HEAD_DIM)
+            .map(f32::to_bits)
+            .collect();
+        let got_v: Vec<u32> = gv.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got_v, want_v, "stream {id}: paged V gather != contiguous shadow");
+    }
+}
+
+#[test]
+fn randomized_admit_append_retire_preserves_invariants() {
+    for seed in [0x1234u64, 0xBEEF, 0xF00D, 0xDEAD_10CC] {
+        let mut rng = Rng(seed);
+        let page_rows = 1 + rng.below(5) as usize; // 1..=5 rows/page
+        let pages = 8 + rng.below(24) as usize; // 8..=31 pages
+        let mut pool = KvPool::new(pages, page_rows, HEAD_DIM).expect("pool");
+        let mut shadow: Shadow = BTreeMap::new();
+        let mut next_id = 0u64;
+        let mut ops = 0usize;
+        for _ in 0..600 {
+            match rng.below(10) {
+                // admit a fresh stream (ids never reused in this walk)
+                0 | 1 => {
+                    pool.admit(next_id).expect("admit fresh id");
+                    shadow.insert(next_id, (Vec::new(), Vec::new()));
+                    next_id += 1;
+                }
+                // retire a random live stream
+                2 => {
+                    if shadow.is_empty() {
+                        continue;
+                    }
+                    let pick = rng.below(shadow.len() as u64) as usize;
+                    let id = *shadow.keys().nth(pick).expect("picked live stream");
+                    let before_free = pool.free_pages();
+                    let freed = pool.table(id).expect("live").pages().len();
+                    pool.retire(id).expect("retire live stream");
+                    shadow.remove(&id);
+                    assert_eq!(
+                        pool.free_pages(),
+                        before_free + freed,
+                        "retire must recycle every page"
+                    );
+                }
+                // append a row to a random live stream
+                _ => {
+                    if shadow.is_empty() {
+                        continue;
+                    }
+                    let pick = rng.below(shadow.len() as u64) as usize;
+                    let id = *shadow.keys().nth(pick).expect("picked live stream");
+                    let (k, v) = (random_row(&mut rng), random_row(&mut rng));
+                    match pool.append_row(id, &k, &v) {
+                        Ok(()) => {
+                            let e = shadow.get_mut(&id).expect("shadowed");
+                            e.0.extend_from_slice(&k);
+                            e.1.extend_from_slice(&v);
+                        }
+                        Err(err) => {
+                            // only legal failure: pool exhausted on a
+                            // page boundary — and it must not corrupt
+                            assert!(
+                                err.to_string().contains("exhausted"),
+                                "unexpected append failure: {err}"
+                            );
+                            assert_eq!(pool.free_pages(), 0);
+                            let rows = pool.rows_of(id).expect("still live");
+                            assert_eq!(
+                                rows % page_rows,
+                                0,
+                                "append may only fail on a page boundary"
+                            );
+                        }
+                    }
+                }
+            }
+            ops += 1;
+            pool.validate()
+                .unwrap_or_else(|e| panic!("seed {seed:#x} op {ops}: invariant broken: {e}"));
+            assert_eq!(pool.live_count(), shadow.len());
+            assert_eq!(
+                pool.used_pages() + pool.free_pages(),
+                pool.total_pages(),
+                "page conservation"
+            );
+        }
+        assert_gather_matches(&pool, &shadow);
+        // drain: retire everything, pool must come back whole
+        let ids: Vec<u64> = shadow.keys().copied().collect();
+        for id in ids {
+            pool.retire(id).expect("drain retire");
+            shadow.remove(&id);
+            pool.validate().expect("invariants during drain");
+        }
+        assert_eq!(pool.free_pages(), pool.total_pages());
+        assert_eq!(pool.used_pages(), 0);
+    }
+}
+
+/// Committed rows never move: interleaved appends to other streams and
+/// page recycling from retirements must leave every previously-gathered
+/// prefix bit-identical.
+#[test]
+fn appends_and_recycling_never_move_committed_rows() {
+    let mut rng = Rng(0x5EED);
+    let mut pool = KvPool::new(12, 2, HEAD_DIM).expect("pool");
+    let mut shadow: Shadow = BTreeMap::new();
+    for id in 0..3u64 {
+        pool.admit(id).expect("admit");
+        shadow.insert(id, (Vec::new(), Vec::new()));
+    }
+    let mut snapshots: BTreeMap<u64, (Vec<u32>, usize)> = BTreeMap::new();
+    for round in 0..20 {
+        let id = rng.below(3);
+        let (k, v) = (random_row(&mut rng), random_row(&mut rng));
+        if pool.append_row(id, &k, &v).is_ok() {
+            let e = shadow.get_mut(&id).expect("shadowed");
+            e.0.extend_from_slice(&k);
+            e.1.extend_from_slice(&v);
+        }
+        // churn the free list: a short-lived stream takes and returns
+        // pages so later appends land on recycled pages
+        if round % 5 == 4 {
+            let tmp = 100 + round as u64;
+            pool.admit(tmp).expect("admit churn stream");
+            let _ = pool.append_row(tmp, &random_row(&mut rng), &random_row(&mut rng));
+            pool.retire(tmp).expect("retire churn stream");
+        }
+        pool.validate().expect("invariants");
+        // every stream's previously-snapshotted prefix must be intact
+        for (&sid, (bits, rows)) in &snapshots {
+            let (gk, _) = pool.gather(sid, pool.rows_of(sid).expect("live")).expect("gather");
+            let prefix: Vec<u32> =
+                gk[..rows * HEAD_DIM].iter().map(|v| v.to_bits()).collect();
+            assert_eq!(&prefix, bits, "stream {sid}: committed rows moved after round {round}");
+        }
+        // refresh snapshots
+        for &sid in shadow.keys() {
+            let rows = pool.rows_of(sid).expect("live");
+            if rows > 0 {
+                let (gk, _) = pool.gather(sid, rows).expect("gather");
+                snapshots
+                    .insert(sid, (gk.iter().map(|v| v.to_bits()).collect(), rows));
+            }
+        }
+    }
+    assert_gather_matches(&pool, &shadow);
+}
