@@ -12,10 +12,13 @@
 //! pages through the free list.
 //!
 //! Scheduling is deliberately simple and deterministic: arrivals queue
-//! FIFO, and a stream is admitted when a batch slot is free and the pool
-//! has enough free pages for the stream's whole lifetime (prefill +
-//! every decode step) — admission never strands a stream mid-decode on
-//! pool exhaustion. Prefill (writing the prompt's K/V rows) is timed
+//! FIFO, and a stream is admitted when a batch slot is free and the
+//! pool can *reserve* enough pages for the stream's whole lifetime
+//! (prefill + every decode step). Reservations, not the instantaneous
+//! free list, back the guarantee: pages are allocated lazily as caches
+//! grow, so live streams' unallocated future pages must not be promised
+//! to newcomers — admission never strands a stream mid-decode on pool
+//! exhaustion. Prefill (writing the prompt's K/V rows) is timed
 //! separately from decode, and queue latency is measured from arrival
 //! to the stream's first decode step.
 //!
@@ -29,7 +32,7 @@
 //! unfused with `tune: false`, so no fusion or tuning decision can vary
 //! with batch composition or padding.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
@@ -327,7 +330,7 @@ impl Engine {
         let mut next_arrival = 0usize;
 
         let mut slot_live: Vec<Option<StreamState>> = (0..slots_n).map(|_| None).collect();
-        let mut pending: Vec<usize> = Vec::new(); // FIFO admission queue of spec indices
+        let mut pending: VecDeque<usize> = VecDeque::new(); // FIFO admission queue of spec indices
         let mut arrived_at: Vec<Option<Instant>> = vec![None; specs.len()];
         let mut outputs: BTreeMap<u64, Vec<Vec<f32>>> = BTreeMap::new();
         let (mut prefill_us, mut decode_us, mut queue_us) =
@@ -357,20 +360,20 @@ impl Engine {
             {
                 let i = arrival_order[next_arrival];
                 arrived_at[i] = Some(Instant::now());
-                pending.push(i);
+                pending.push_back(i);
                 next_arrival += 1;
             }
             // admit from the queue head while a slot is free and the
-            // pool can hold the stream's whole lifetime; head-of-line
+            // pool can reserve the stream's whole lifetime; head-of-line
             // blocking keeps admission deterministic
-            while let Some(&i) = pending.first() {
+            while let Some(&i) = pending.front() {
                 let sp = &specs[i];
                 let live = slot_live.iter().filter(|s| s.is_some()).count();
                 if live >= slots_n || !pool.can_admit(sp.total_rows()) {
                     break;
                 }
-                pending.remove(0);
-                pool.admit(sp.id)?;
+                pending.pop_front();
+                pool.admit(sp.id, sp.total_rows())?;
                 let pf0 = Instant::now();
                 for r in 0..sp.prefill_rows {
                     let (k, v) = self.prompt_row(sp.id, r);
@@ -597,6 +600,39 @@ mod tests {
                 .collect::<Vec<_>>(),
             serial[&3].iter().flatten().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn admission_reserves_lifetime_pages_not_just_free_ones() {
+        // two streams each need 3 pages over their lifetime (1 prefill
+        // row + 11 decode rows, 4 rows/page) but touch only 1 page at
+        // admit time; a free-list-only gate would admit both into a
+        // 4-page pool and strand one mid-decode once lazy growth
+        // collides (3 + 3 pages > 4)
+        let cfg = EngineConfig { pool_pages: 4, page_rows: 4, ..Default::default() };
+        let mut eng = Engine::new(cfg).unwrap();
+        let specs = [
+            StreamSpec { id: 1, arrival_step: 0, prefill_rows: 1, decode_steps: 11 },
+            StreamSpec { id: 2, arrival_step: 0, prefill_rows: 1, decode_steps: 11 },
+        ];
+        let report = eng.run(&specs).expect("must defer, not exhaust mid-decode");
+        assert_eq!(report.peak_concurrency, 1, "second stream must wait for the first");
+        assert!(report.peak_pages <= 4);
+        assert_eq!(report.outputs[&1].len(), 11);
+        assert_eq!(report.outputs[&2].len(), 11);
+        // and the deferred stream is still bit-identical to its solo run
+        let serial = eng.serial_oracle(&specs).unwrap();
+        for id in [1u64, 2] {
+            assert_eq!(
+                report.outputs[&id]
+                    .iter()
+                    .flatten()
+                    .map(|v| v.to_bits())
+                    .collect::<Vec<_>>(),
+                serial[&id].iter().flatten().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "stream {id}"
+            );
+        }
     }
 
     #[test]

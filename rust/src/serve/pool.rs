@@ -8,6 +8,15 @@
 //! pages to the free list for recycling — vLLM-style paged attention,
 //! scaled to the interp runtime.
 //!
+//! Pages are allocated lazily (a stream takes a fresh page only when an
+//! append crosses a page boundary), so the instantaneous free list
+//! over-states what is really available: live streams' unallocated
+//! future pages still sit on it. Admission therefore works on
+//! *reservations* — [`KvPool::admit`] sets aside capacity for the
+//! stream's whole lifetime up front, and [`KvPool::can_admit`] compares
+//! against reserved (not free) pages — so an admitted stream can never
+//! strand mid-decode on pool exhaustion.
+//!
 //! The allocator is exactly the kind of code that is subtly wrong under
 //! rare interleavings, so [`KvPool::validate`] checks the full
 //! invariant set (no page aliased by two live streams, free + live ==
@@ -25,6 +34,8 @@ use crate::{anyhow, bail};
 pub struct PageTable {
     pages: Vec<usize>,
     rows: usize,
+    /// Lifetime row budget fixed at admission; appends past it fail.
+    reserved_rows: usize,
 }
 
 impl PageTable {
@@ -37,6 +48,20 @@ impl PageTable {
     pub fn pages(&self) -> &[usize] {
         &self.pages
     }
+
+    /// The lifetime row budget this stream reserved at admission.
+    pub fn reserved_rows(&self) -> usize {
+        self.reserved_rows
+    }
+}
+
+/// What a pool page belongs to while [`KvPool::validate`] sweeps the
+/// ownership table — a dedicated enum rather than a sentinel stream id,
+/// so a real stream can use any `u64` id without confusing diagnostics.
+#[derive(Clone, Copy, Debug)]
+enum PageOwner {
+    Live(u64),
+    Free,
 }
 
 /// The shared paged KV-cache pool.
@@ -50,6 +75,9 @@ pub struct KvPool {
     /// Free page indices. Allocation pops from the back, retirement
     /// pushes to the back — LIFO recycling keeps the working set hot.
     free: Vec<usize>,
+    /// Pages promised to live streams' lifetimes (sum over streams of
+    /// `pages_for(reserved_rows)`), whether or not allocated yet.
+    reserved_pages: usize,
     /// Live streams by id (BTreeMap: deterministic iteration).
     streams: BTreeMap<u64, PageTable>,
 }
@@ -72,6 +100,7 @@ impl KvPool {
             k: vec![0.0; elems],
             v: vec![0.0; elems],
             free: (0..total_pages).rev().collect(),
+            reserved_pages: 0,
             streams: BTreeMap::new(),
         })
     }
@@ -92,6 +121,12 @@ impl KvPool {
         self.free.len()
     }
 
+    /// Pages promised to live streams' lifetime reservations (allocated
+    /// or not yet).
+    pub fn reserved_pages(&self) -> usize {
+        self.reserved_pages
+    }
+
     pub fn used_pages(&self) -> usize {
         self.streams.values().map(|t| t.pages.len()).sum()
     }
@@ -104,8 +139,13 @@ impl KvPool {
     /// Can a stream that will eventually commit `rows` rows be admitted
     /// right now without ever hitting pool exhaustion? The engine's
     /// admission policy: hold arrivals in the queue until this is true.
+    ///
+    /// Compares against *reserved* pages, not the free list: pages are
+    /// allocated lazily on append, so live streams' unallocated future
+    /// pages still sit on the free list — counting them as available
+    /// would double-promise capacity and strand someone mid-decode.
     pub fn can_admit(&self, rows: usize) -> bool {
-        self.pages_for(rows) <= self.free.len()
+        self.reserved_pages + self.pages_for(rows) <= self.total_pages
     }
 
     pub fn is_live(&self, id: u64) -> bool {
@@ -127,12 +167,31 @@ impl KvPool {
             .ok_or_else(|| anyhow!("stream {} is not live in the kv pool", id))
     }
 
-    /// Register a new stream with an empty cache.
-    pub fn admit(&mut self, id: u64) -> Result<()> {
+    /// Register a new stream with an empty cache, reserving pool
+    /// capacity for its whole lifetime of `reserved_rows` committed
+    /// rows. The reservation is what makes [`KvPool::can_admit`] a real
+    /// guarantee: pages are still allocated lazily on append, but every
+    /// live stream's future growth is set aside up front, so appends
+    /// within the reservation can never hit pool exhaustion.
+    pub fn admit(&mut self, id: u64, reserved_rows: usize) -> Result<()> {
+        if reserved_rows == 0 {
+            bail!("stream {}: reservation must cover at least one row", id);
+        }
         if self.streams.contains_key(&id) {
             bail!("stream {} is already live", id);
         }
-        self.streams.insert(id, PageTable { pages: Vec::new(), rows: 0 });
+        if !self.can_admit(reserved_rows) {
+            bail!(
+                "cannot admit stream {}: its lifetime needs {} pages but only {} of {} are \
+                 unreserved",
+                id,
+                self.pages_for(reserved_rows),
+                self.total_pages - self.reserved_pages,
+                self.total_pages
+            );
+        }
+        self.reserved_pages += self.pages_for(reserved_rows);
+        self.streams.insert(id, PageTable { pages: Vec::new(), rows: 0, reserved_rows });
         Ok(())
     }
 
@@ -152,13 +211,22 @@ impl KvPool {
         let (page_rows, head_dim) = (self.page_rows, self.head_dim);
         let needs_page = {
             let t = self.table(id)?;
+            if t.rows == t.reserved_rows {
+                bail!(
+                    "stream {}: append would exceed its lifetime reservation of {} rows",
+                    id,
+                    t.reserved_rows
+                );
+            }
             t.rows == t.pages.len() * page_rows
         };
         if needs_page {
-            let page = self
-                .free
-                .pop()
-                .ok_or_else(|| anyhow!("kv pool exhausted appending to stream {}", id))?;
+            // within the reservation this cannot fail: reserved_pages
+            // <= total_pages and every stream's allocation stays under
+            // its own reservation, so a free page always exists
+            let page = self.free.pop().ok_or_else(|| {
+                anyhow!("kv pool exhausted appending to stream {} (reservation accounting broken)", id)
+            })?;
             self.streams.get_mut(&id).expect("checked live").pages.push(page);
         }
         let t = self.streams.get_mut(&id).expect("checked live");
@@ -170,12 +238,14 @@ impl KvPool {
         Ok(())
     }
 
-    /// Retire a stream: its pages go back to the free list.
+    /// Retire a stream: its pages go back to the free list and its
+    /// lifetime reservation is released.
     pub fn retire(&mut self, id: u64) -> Result<()> {
         let t = self
             .streams
             .remove(&id)
             .ok_or_else(|| anyhow!("cannot retire stream {}: not live", id))?;
+        self.reserved_pages -= self.pages_for(t.reserved_rows);
         self.free.extend(t.pages);
         Ok(())
     }
@@ -222,11 +292,15 @@ impl KvPool {
     /// randomized operation and the engine after each decode step.
     ///
     /// 1. every page index (live or free) is in range;
-    /// 2. no page is owned by two live streams, or both owned and free;
+    /// 2. no page is owned by two live streams, both owned and free, or
+    ///    listed free twice;
     /// 3. free + live accounts for exactly the whole pool;
-    /// 4. each stream holds exactly `ceil(rows / page_rows)` pages.
+    /// 4. each stream holds exactly `ceil(rows / page_rows)` pages and
+    ///    stays within its lifetime reservation;
+    /// 5. the reserved-page tally matches the live streams' lifetime
+    ///    reservations and fits the pool.
     pub fn validate(&self) -> Result<()> {
-        let mut owner: Vec<Option<u64>> = vec![None; self.total_pages];
+        let mut owner: Vec<Option<PageOwner>> = vec![None; self.total_pages];
         for (&id, t) in &self.streams {
             if t.pages.len() != self.pages_for(t.rows) {
                 bail!(
@@ -237,25 +311,40 @@ impl KvPool {
                     self.page_rows
                 );
             }
+            if t.rows > t.reserved_rows {
+                bail!(
+                    "stream {}: {} committed rows exceed its reservation of {}",
+                    id,
+                    t.rows,
+                    t.reserved_rows
+                );
+            }
             for &p in &t.pages {
                 if p >= self.total_pages {
                     bail!("stream {}: page {} out of range ({})", id, p, self.total_pages);
                 }
-                if let Some(other) = owner[p] {
-                    bail!("page {} aliased by live streams {} and {}", p, other, id);
+                match owner[p] {
+                    Some(PageOwner::Live(other)) => {
+                        bail!("page {} aliased by live streams {} and {}", p, other, id)
+                    }
+                    Some(PageOwner::Free) => {
+                        unreachable!("free list is swept after live streams")
+                    }
+                    None => owner[p] = Some(PageOwner::Live(id)),
                 }
-                owner[p] = Some(id);
             }
         }
         for &p in &self.free {
             if p >= self.total_pages {
                 bail!("free list holds out-of-range page {}", p);
             }
-            if let Some(id) = owner[p] {
-                bail!("page {} is both free and owned by stream {}", p, id);
+            match owner[p] {
+                Some(PageOwner::Live(id)) => {
+                    bail!("page {} is both free and owned by stream {}", p, id)
+                }
+                Some(PageOwner::Free) => bail!("page {} listed twice in the free list", p),
+                None => owner[p] = Some(PageOwner::Free),
             }
-            // mark to catch duplicates within the free list itself
-            owner[p] = Some(u64::MAX);
         }
         let accounted = owner.iter().filter(|o| o.is_some()).count();
         if accounted != self.total_pages {
@@ -265,6 +354,22 @@ impl KvPool {
                 self.total_pages,
                 self.free.len(),
                 self.used_pages()
+            );
+        }
+        let promised: usize =
+            self.streams.values().map(|t| self.pages_for(t.reserved_rows)).sum();
+        if promised != self.reserved_pages {
+            bail!(
+                "reservation accounting drifted: tracked {} pages, live streams reserve {}",
+                self.reserved_pages,
+                promised
+            );
+        }
+        if self.reserved_pages > self.total_pages {
+            bail!(
+                "over-reserved: {} pages promised but the pool has {}",
+                self.reserved_pages,
+                self.total_pages
             );
         }
         Ok(())
@@ -278,7 +383,7 @@ mod tests {
     #[test]
     fn admit_append_gather_round_trip() {
         let mut pool = KvPool::new(4, 2, 4).unwrap();
-        pool.admit(7).unwrap();
+        pool.admit(7, 4).unwrap();
         let row = |x: f32| vec![x; 4];
         for i in 0..3 {
             pool.append_row(7, &row(i as f32 + 1.0), &row(-(i as f32) - 1.0)).unwrap();
@@ -297,27 +402,57 @@ mod tests {
     }
 
     #[test]
-    fn exhaustion_and_admission_guards() {
+    fn reservation_and_admission_guards() {
         let mut pool = KvPool::new(2, 2, 4).unwrap();
-        pool.admit(1).unwrap();
-        assert!(pool.admit(1).is_err(), "double admit");
+        pool.admit(1, 4).unwrap();
+        assert!(pool.admit(1, 1).is_err(), "double admit");
+        assert!(pool.admit(2, 0).is_err(), "empty reservation");
+        assert!(!pool.can_admit(1), "whole pool reserved before any page is allocated");
+        assert!(pool.admit(2, 1).is_err(), "no unreserved capacity");
         for _ in 0..4 {
             pool.append_row(1, &[0.0; 4], &[0.0; 4]).unwrap();
         }
-        assert!(!pool.can_admit(1));
-        assert!(pool.append_row(1, &[0.0; 4], &[0.0; 4]).is_err(), "pool exhausted");
+        assert!(
+            pool.append_row(1, &[0.0; 4], &[0.0; 4])
+                .unwrap_err()
+                .to_string()
+                .contains("reservation"),
+            "append past the lifetime budget"
+        );
         pool.validate().unwrap();
         assert!(pool.retire(2).is_err(), "retire unknown stream");
         pool.retire(1).unwrap();
+        assert_eq!(pool.reserved_pages(), 0, "retire releases the reservation");
         assert!(pool.can_admit(4));
         assert!(!pool.can_admit(5));
     }
 
     #[test]
+    fn reservations_cover_lazy_growth_not_just_allocated_pages() {
+        // the mid-decode-exhaustion scenario a free-list-only gate gets
+        // wrong: 4 pages of 4 rows, two streams each needing 12 rows
+        // (3 pages) over their lifetime but holding only 1 page early
+        let mut pool = KvPool::new(4, 4, 4).unwrap();
+        pool.admit(1, 12).unwrap();
+        pool.append_row(1, &[0.0; 4], &[0.0; 4]).unwrap();
+        assert_eq!(pool.free_pages(), 3, "free list alone would still admit the second");
+        assert!(!pool.can_admit(12), "reservation gate must refuse it");
+        assert!(pool.admit(2, 12).unwrap_err().to_string().contains("unreserved"));
+        // the admitted stream grows to its full lifetime without ever
+        // hitting exhaustion
+        for _ in 1..12 {
+            pool.append_row(1, &[0.0; 4], &[0.0; 4]).unwrap();
+        }
+        pool.validate().unwrap();
+        pool.retire(1).unwrap();
+        assert!(pool.can_admit(12), "retirement frees the reservation");
+    }
+
+    #[test]
     fn validate_catches_aliasing_and_leaks() {
         let mut pool = KvPool::new(4, 2, 4).unwrap();
-        pool.admit(1).unwrap();
-        pool.admit(2).unwrap();
+        pool.admit(1, 4).unwrap();
+        pool.admit(2, 2).unwrap();
         pool.append_row(1, &[0.0; 4], &[0.0; 4]).unwrap();
         pool.append_row(2, &[0.0; 4], &[0.0; 4]).unwrap();
         pool.validate().unwrap();

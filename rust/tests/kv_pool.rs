@@ -5,10 +5,15 @@
 //! pool while a shadow model keeps each live stream's cache as a plain
 //! contiguous Vec. After every operation the pool's full invariant set
 //! is re-checked (`KvPool::validate`: no page aliased by two live
-//! streams, free + live pages == pool, page counts match rows), and the
-//! paged gather must reproduce the shadow cache *byte for byte* —
-//! including the zero-filled padding tail that the masked decode kernel
-//! relies on.
+//! streams, free + live pages == pool, page counts match rows,
+//! reservation accounting), and the paged gather must reproduce the
+//! shadow cache *byte for byte* — including the zero-filled padding
+//! tail that the masked decode kernel relies on.
+//!
+//! Admission reserves each stream's whole lifetime up front, so the
+//! walk also proves the central scheduling guarantee: appends within a
+//! reservation NEVER fail, even though pages are allocated lazily and
+//! the free list over-states availability.
 
 use std::collections::BTreeMap;
 
@@ -79,15 +84,29 @@ fn randomized_admit_append_retire_preserves_invariants() {
         let pages = 8 + rng.below(24) as usize; // 8..=31 pages
         let mut pool = KvPool::new(pages, page_rows, HEAD_DIM).expect("pool");
         let mut shadow: Shadow = BTreeMap::new();
+        // per-stream lifetime reservation (rows), fixed at admission
+        let mut reserved: BTreeMap<u64, usize> = BTreeMap::new();
         let mut next_id = 0u64;
         let mut ops = 0usize;
         for _ in 0..600 {
             match rng.below(10) {
                 // admit a fresh stream (ids never reused in this walk)
+                // with a random lifetime reservation; when the pool
+                // cannot reserve it, admit must refuse instead
                 0 | 1 => {
-                    pool.admit(next_id).expect("admit fresh id");
-                    shadow.insert(next_id, (Vec::new(), Vec::new()));
-                    next_id += 1;
+                    let rows = 1 + rng.below(3 * page_rows as u64) as usize;
+                    if pool.can_admit(rows) {
+                        pool.admit(next_id, rows).expect("can_admit implies admit");
+                        shadow.insert(next_id, (Vec::new(), Vec::new()));
+                        reserved.insert(next_id, rows);
+                        next_id += 1;
+                    } else {
+                        let err = pool.admit(next_id, rows).expect_err("over-reservation");
+                        assert!(
+                            err.to_string().contains("unreserved"),
+                            "unexpected admit failure: {err}"
+                        );
+                    }
                 }
                 // retire a random live stream
                 2 => {
@@ -100,6 +119,7 @@ fn randomized_admit_append_retire_preserves_invariants() {
                     let freed = pool.table(id).expect("live").pages().len();
                     pool.retire(id).expect("retire live stream");
                     shadow.remove(&id);
+                    reserved.remove(&id);
                     assert_eq!(
                         pool.free_pages(),
                         before_free + freed,
@@ -114,25 +134,30 @@ fn randomized_admit_append_retire_preserves_invariants() {
                     let pick = rng.below(shadow.len() as u64) as usize;
                     let id = *shadow.keys().nth(pick).expect("picked live stream");
                     let (k, v) = (random_row(&mut rng), random_row(&mut rng));
+                    let budget = reserved[&id];
+                    let rows_before = pool.rows_of(id).expect("live");
                     match pool.append_row(id, &k, &v) {
                         Ok(()) => {
+                            assert!(
+                                rows_before < budget,
+                                "append past the reservation must fail"
+                            );
                             let e = shadow.get_mut(&id).expect("shadowed");
                             e.0.extend_from_slice(&k);
                             e.1.extend_from_slice(&v);
                         }
                         Err(err) => {
-                            // only legal failure: pool exhausted on a
-                            // page boundary — and it must not corrupt
+                            // the ONLY legal failure is a spent
+                            // reservation; admission reserved every
+                            // lifetime page, so lazy growth can never
+                            // exhaust the pool mid-stream
                             assert!(
-                                err.to_string().contains("exhausted"),
+                                err.to_string().contains("reservation"),
                                 "unexpected append failure: {err}"
                             );
-                            assert_eq!(pool.free_pages(), 0);
-                            let rows = pool.rows_of(id).expect("still live");
                             assert_eq!(
-                                rows % page_rows,
-                                0,
-                                "append may only fail on a page boundary"
+                                rows_before, budget,
+                                "append may only fail once the reservation is spent"
                             );
                         }
                     }
@@ -147,6 +172,11 @@ fn randomized_admit_append_retire_preserves_invariants() {
                 pool.total_pages(),
                 "page conservation"
             );
+            assert!(
+                pool.used_pages() <= pool.reserved_pages()
+                    && pool.reserved_pages() <= pool.total_pages(),
+                "allocated pages must stay within reservations, reservations within the pool"
+            );
         }
         assert_gather_matches(&pool, &shadow);
         // drain: retire everything, pool must come back whole
@@ -158,6 +188,7 @@ fn randomized_admit_append_retire_preserves_invariants() {
         }
         assert_eq!(pool.free_pages(), pool.total_pages());
         assert_eq!(pool.used_pages(), 0);
+        assert_eq!(pool.reserved_pages(), 0, "drain must release every reservation");
     }
 }
 
@@ -170,7 +201,9 @@ fn appends_and_recycling_never_move_committed_rows() {
     let mut pool = KvPool::new(12, 2, HEAD_DIM).expect("pool");
     let mut shadow: Shadow = BTreeMap::new();
     for id in 0..3u64 {
-        pool.admit(id).expect("admit");
+        // 6 rows (3 pages) lifetime each: 9 of 12 pages reserved,
+        // leaving headroom for the churn streams below
+        pool.admit(id, 6).expect("admit");
         shadow.insert(id, (Vec::new(), Vec::new()));
     }
     let mut snapshots: BTreeMap<u64, (Vec<u32>, usize)> = BTreeMap::new();
@@ -186,7 +219,7 @@ fn appends_and_recycling_never_move_committed_rows() {
         // pages so later appends land on recycled pages
         if round % 5 == 4 {
             let tmp = 100 + round as u64;
-            pool.admit(tmp).expect("admit churn stream");
+            pool.admit(tmp, 1).expect("admit churn stream");
             let _ = pool.append_row(tmp, &random_row(&mut rng), &random_row(&mut rng));
             pool.retire(tmp).expect("retire churn stream");
         }
