@@ -30,6 +30,7 @@ use std::time::{Duration, Instant};
 
 use crate::anyhow;
 use crate::error::Result;
+use crate::obs::Recorder;
 use crate::runtime::{ExecBackend, Runtime, WorkloadKind};
 
 /// A raw kernel invocation result.
@@ -43,11 +44,21 @@ pub struct KernelReply {
 }
 
 /// A batched-row invocation result (one row of the model batch).
+///
+/// Like [`KernelReply`], the latency splits into a queue and an exec
+/// component: `queue_us` is submit-to-execute-start (including the
+/// micro-batch flush wait), `exec_us` is the *shared* backend execution
+/// time of the batch this row rode in (every co-batched row reports the
+/// same `exec_us` — measured once, by the worker's recorder span).
 pub struct RowReply {
     /// This row's output slice, or a stringified worker-side error.
     pub output: Result<Vec<f32>, String>,
     /// Submit-to-reply latency (includes micro-batch wait).
     pub latency_us: u128,
+    /// Submit-to-execute-start wait (micro-batch assembly included).
+    pub queue_us: u128,
+    /// Backend execution time of the shared batch.
+    pub exec_us: u128,
     /// Rows that shared the executed batch.
     pub batch_size: usize,
 }
@@ -110,6 +121,18 @@ impl Coordinator {
         backend: ExecBackend,
         kernels: &[&str],
     ) -> Result<Coordinator> {
+        Coordinator::start_with_backend_rec(dir, backend, kernels, Recorder::disabled())
+    }
+
+    /// [`Coordinator::start_with_backend`] reporting through `rec`:
+    /// worker runtimes attach the recorder and every reply's queue/exec
+    /// split comes from its spans.
+    pub fn start_with_backend_rec(
+        dir: impl Into<PathBuf>,
+        backend: ExecBackend,
+        kernels: &[&str],
+        rec: Recorder,
+    ) -> Result<Coordinator> {
         let dir = dir.into();
         let mut workers = HashMap::new();
         for &k in kernels {
@@ -117,9 +140,10 @@ impl Coordinator {
             let name = k.to_string();
             let d = dir.clone();
             let be = backend.clone();
+            let r = rec.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("kernel-{}", k))
-                .spawn(move || raw_worker(d, be, name, rx))
+                .spawn(move || raw_worker(d, be, name, rx, r))
                 .map_err(|e| anyhow!("spawn: {}", e))?;
             workers.insert(k.to_string(), Worker { tx, handle });
         }
@@ -163,12 +187,32 @@ impl Coordinator {
         kernel: &str,
         policy: BatchPolicy,
     ) -> Result<Coordinator> {
+        Coordinator::start_batched_with_backend_rec(
+            dir,
+            backend,
+            kernel,
+            policy,
+            Recorder::disabled(),
+        )
+    }
+
+    /// [`Coordinator::start_batched_with_backend`] reporting through
+    /// `rec`: the worker runtime attaches the recorder, each executed
+    /// micro-batch is a `coord` span, and [`RowReply::exec_us`] is that
+    /// span's measured duration.
+    pub fn start_batched_with_backend_rec(
+        dir: impl Into<PathBuf>,
+        backend: ExecBackend,
+        kernel: &str,
+        policy: BatchPolicy,
+        rec: Recorder,
+    ) -> Result<Coordinator> {
         let dir = dir.into();
         let (tx, rx) = mpsc::channel::<Job>();
         let name = kernel.to_string();
         let handle = std::thread::Builder::new()
             .name(format!("model-{}", kernel))
-            .spawn(move || batched_worker(dir, backend, name, policy, rx))
+            .spawn(move || batched_worker(dir, backend, name, policy, rx, rec))
             .map_err(|e| anyhow!("spawn: {}", e))?;
         let mut workers = HashMap::new();
         workers.insert(kernel.to_string(), Worker { tx, handle });
@@ -218,9 +262,18 @@ impl Coordinator {
     }
 }
 
-fn raw_worker(dir: PathBuf, backend: ExecBackend, kernel: String, rx: Receiver<Job>) {
+fn raw_worker(
+    dir: PathBuf,
+    backend: ExecBackend,
+    kernel: String,
+    rx: Receiver<Job>,
+    rec: Recorder,
+) {
     let runtime = match Runtime::with_backend(&dir, backend) {
-        Ok(r) => r,
+        Ok(mut r) => {
+            r.set_recorder(rec.clone());
+            r
+        }
         Err(e) => {
             drain_with_error(&rx, &format!("runtime init failed: {}", e));
             return;
@@ -241,12 +294,15 @@ fn raw_worker(dir: PathBuf, backend: ExecBackend, kernel: String, rx: Receiver<J
                 enqueued,
             } => {
                 let queue_us = enqueued.elapsed().as_micros();
-                let t0 = Instant::now();
-                let output = loaded.execute(&inputs).map_err(|e| e.to_string());
+                rec.sample("coord.queue_us", queue_us as f64);
+                let sp = rec.span_with("coord", "exec", || {
+                    vec![("kernel".to_string(), kernel.clone())]
+                });
+                let output = loaded.execute_rec(&inputs, &rec).map_err(|e| e.to_string());
                 let _ = reply.send(KernelReply {
                     output,
                     queue_us,
-                    exec_us: t0.elapsed().as_micros(),
+                    exec_us: sp.finish_us(),
                 });
             }
             Job::Row { reply, enqueued, .. } => {
@@ -263,9 +319,13 @@ fn batched_worker(
     kernel: String,
     policy: BatchPolicy,
     rx: Receiver<Job>,
+    rec: Recorder,
 ) {
     let runtime = match Runtime::with_backend(&dir, backend) {
-        Ok(r) => r,
+        Ok(mut r) => {
+            r.set_recorder(rec.clone());
+            r
+        }
         Err(e) => {
             drain_with_error(&rx, &format!("runtime init failed: {}", e));
             return;
@@ -411,7 +471,20 @@ fn batched_worker(
         let (batch, bad) = assemble_batch(&row_refs, row_len, batch_shape[0] as usize);
         let mut inputs = vec![batch];
         inputs.extend(weights.iter().cloned());
-        let result = loaded.execute(&inputs).map_err(|e| e.to_string());
+        // snapshot each row's queue wait at execute start: the reply's
+        // queue/exec split is queue_us (submit -> batch start, flush
+        // wait included) + exec_us (the shared batch span below)
+        let queue_marks: Vec<u128> =
+            rows.iter().map(|(_, _, enq)| enq.elapsed().as_micros()).collect();
+        rec.sample("coord.batch_size", n as f64);
+        let sp = rec.span_with("coord", "batch_exec", || {
+            vec![
+                ("kernel".to_string(), kernel.clone()),
+                ("batch_size".to_string(), n.to_string()),
+            ]
+        });
+        let result = loaded.execute_rec(&inputs, &rec).map_err(|e| e.to_string());
+        let exec_us = sp.finish_us();
         for (i, (_, reply, enq)) in rows.into_iter().enumerate() {
             let output = if bad.contains(&i) {
                 Err(format!("row length != {}", row_len))
@@ -432,6 +505,8 @@ fn batched_worker(
             let _ = reply.send(RowReply {
                 output,
                 latency_us: enq.elapsed().as_micros(),
+                queue_us: queue_marks[i],
+                exec_us,
                 batch_size: n,
             });
         }
@@ -465,9 +540,13 @@ fn error_kernel_reply(msg: &str, enqueued: Instant) -> KernelReply {
 }
 
 fn error_row_reply(msg: &str, enqueued: Instant) -> RowReply {
+    // the full wait counts as queue time: the row never reached a batch
+    let waited = enqueued.elapsed().as_micros();
     RowReply {
         output: Err(msg.to_string()),
-        latency_us: enqueued.elapsed().as_micros(),
+        latency_us: waited,
+        queue_us: waited,
+        exec_us: 0,
         batch_size: 0,
     }
 }
@@ -495,13 +574,11 @@ pub fn assemble_batch(
     (batch, bad)
 }
 
-/// Latency percentile helper for serving reports.
+/// Latency percentile helper for serving reports. Re-exported from
+/// [`crate::util::stats`], where the serve engine, benches and the
+/// metrics exporter share the same nearest-rank definition.
 pub fn percentile(sorted_us: &[u128], p: f64) -> u128 {
-    if sorted_us.is_empty() {
-        return 0;
-    }
-    let idx = ((sorted_us.len() as f64 - 1.0) * p / 100.0).round() as usize;
-    sorted_us[idx.min(sorted_us.len() - 1)]
+    crate::util::stats::percentile(sorted_us, p)
 }
 
 #[cfg(test)]
@@ -521,6 +598,10 @@ mod tests {
             "error row reply claims {}us after a 5ms wait",
             row.latency_us
         );
+        // the queue/exec split must not hide the wait either: a row that
+        // never executed spent its whole latency queued
+        assert_eq!(row.queue_us, row.latency_us);
+        assert_eq!(row.exec_us, 0);
         let kr = error_kernel_reply("boom", t0);
         assert!(kr.output.is_err());
         assert!(

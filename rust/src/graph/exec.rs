@@ -19,6 +19,7 @@ use crate::graph::fuse::{self, FusedEdge};
 use crate::graph::ir::{GraphNode, KernelGraph, NodeOp, ValueRef};
 use crate::graph::memplan::{self, MemPlan};
 use crate::ir::program::TileProgram;
+use crate::obs::Recorder;
 use crate::runtime::interp_backend::{
     attention_config, decode_config, dequant_config, gemm_config, paged_decode_config,
     InterpKernel,
@@ -192,6 +193,8 @@ pub struct GraphKernel {
     memplan: MemPlan,
     /// One prepared kernel per kernel node (`None` for element-wise).
     kernels: Vec<Option<InterpKernel>>,
+    /// The modeled device the kernels were prepared for (cost column).
+    device: Device,
     in_shapes: Vec<Vec<i64>>,
     out_len: usize,
     /// Element counts of the extra outputs, declaration order.
@@ -268,6 +271,7 @@ impl GraphKernel {
             unfused_cost_us,
             memplan,
             kernels,
+            device: dev.clone(),
         })
     }
 
@@ -289,6 +293,38 @@ impl GraphKernel {
     /// Modeled (fused, unfused) graph cost, µs.
     pub fn modeled_cost_us(&self) -> (f64, f64) {
         (self.fused_cost_us, self.unfused_cost_us)
+    }
+
+    /// Per-node `(name, modeled µs)` pairs in execution order — the
+    /// `model` column of `tilelang profile`. Kernel nodes are costed on
+    /// their *prepared* lowered program (tuned config included);
+    /// element-wise nodes use the fusion planner's DRAM-traffic model.
+    /// `None` marks a node the simulator cannot cost.
+    pub fn node_modeled_us(&self) -> Vec<(String, Option<f64>)> {
+        self.graph
+            .nodes
+            .iter()
+            .zip(&self.kernels)
+            .map(|(node, kernel)| {
+                let us = match kernel {
+                    Some(k) => k.modeled_time_us(&self.device),
+                    None => node_cost_us(node, &self.device).ok(),
+                };
+                (node.name.clone(), us)
+            })
+            .collect()
+    }
+
+    /// Static VM counters summed over every compiled kernel node (all
+    /// zeros when the graph was prepared for the tree-walking interp).
+    pub fn op_counts(&self) -> crate::tir::compile::OpCounts {
+        let mut oc = crate::tir::compile::OpCounts::default();
+        for kernel in self.kernels.iter().flatten() {
+            if let Some(k) = kernel.op_counts() {
+                oc.merge(&k);
+            }
+        }
+        oc
     }
 
     /// Whether batched *row* serving is sound for this graph (every
@@ -330,10 +366,26 @@ impl GraphKernel {
         Ok(self.execute_all_refs(inputs)?.swap_remove(0))
     }
 
+    /// [`GraphKernel::execute_refs`] with spans recorded per node.
+    pub fn execute_refs_rec(&self, inputs: &[&[f32]], rec: &Recorder) -> Result<Vec<f32>> {
+        Ok(self.execute_all_refs_rec(inputs, rec)?.swap_remove(0))
+    }
+
     /// Execute and return every surfaced tensor: the primary output
     /// first, then the extra outputs in declaration order — the serving
     /// engine reads a decode step's new K/V rows from here.
     pub fn execute_all_refs(&self, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        self.execute_all_refs_rec(inputs, &Recorder::disabled())
+    }
+
+    /// [`GraphKernel::execute_all_refs`] under a [`Recorder`]: one
+    /// `graph` span per node (annotated with the node's fused epilogue
+    /// chain and memplan buffer id) plus the node's static VM counters.
+    pub fn execute_all_refs_rec(
+        &self,
+        inputs: &[&[f32]],
+        rec: &Recorder,
+    ) -> Result<Vec<Vec<f32>>> {
         if inputs.len() != self.in_shapes.len() {
             bail!(
                 "graph {} expects {} inputs, got {}",
@@ -378,6 +430,17 @@ impl GraphKernel {
                     },
                 });
             }
+            let sp = rec.span_with("graph", &node.name, || {
+                let mut args = vec![("graph".to_string(), self.graph.name.clone())];
+                if !node.epilogues.is_empty() {
+                    let eps: Vec<String> = node.epilogues.iter().map(|e| e.describe()).collect();
+                    args.push(("epilogues".to_string(), eps.join("+")));
+                }
+                if let Some(b) = self.memplan.slots[i].buffer {
+                    args.push(("buffer".to_string(), b.to_string()));
+                }
+                args
+            });
             let out = match (&self.kernels[i], &node.op) {
                 (Some(kernel), _) => kernel
                     .execute_into(&ops, storage)
@@ -394,6 +457,16 @@ impl GraphKernel {
                     bail!("{}: kernel node was not prepared", node.name)
                 }
             };
+            sp.finish_us();
+            if rec.is_enabled() {
+                if let Some(kernel) = &self.kernels[i] {
+                    if let Some(oc) = kernel.op_counts() {
+                        for (name, v) in oc.items() {
+                            rec.add(name, v);
+                        }
+                    }
+                }
+            }
             drop(ops);
             match self.memplan.slots[i].buffer {
                 Some(b) => pool[b] = out,

@@ -38,6 +38,13 @@
 //!   through the multi-output `decode_block_paged` graph —
 //!   bit-identical to serial per-stream decode on both backends.
 //!
+//! Cross-cutting: the observability layer ([`obs`]) threads one span
+//! recorder through runtime load, graph node execution, the sharded
+//! executors, the compiled VM's instruction-class counters and the
+//! serving layers, exporting Chrome trace-event JSON and a
+//! Prometheus-style metrics dump — and `tilelang profile` diffs the
+//! measured spans against the [`sim`] cost model's predictions.
+//!
 //! The crate is dependency-free (std only) so the whole loop — author,
 //! compile, tune, execute, serve — runs in an offline build:
 //!
@@ -53,6 +60,7 @@ pub mod error;
 pub mod graph;
 pub mod ir;
 pub mod layout;
+pub mod obs;
 pub mod passes;
 pub mod report;
 pub mod runtime;

@@ -1,0 +1,274 @@
+//! Trace and metrics exporters.
+//!
+//! * [`chrome_trace`] — the Chrome trace-event JSON object array format
+//!   (`{"traceEvents": [{"ph": "X", ...}]}`), loadable in
+//!   `chrome://tracing` and `ui.perfetto.dev`. [`read_chrome_trace`]
+//!   parses it back (the round-trip tests and `scripts/check_trace` use
+//!   the same reader).
+//! * [`metrics_text`] — a Prometheus-style text dump: one `counter`
+//!   family per recorder counter, and per span family / sample series a
+//!   decade-bucket `histogram` plus `p50`/`p99` gauges.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::obs::trace::{Event, Recorder};
+use crate::util::json::Json;
+use crate::util::stats::{summarize, Histogram};
+
+/// The Chrome trace-event document for everything the recorder holds.
+/// Spans become `ph: "X"` (complete) events; counters ride along as one
+/// `ph: "C"` event each so they show as counter tracks.
+pub fn chrome_trace(rec: &Recorder) -> Json {
+    let mut events: Vec<Json> = vec![Json::Obj(vec![
+        ("name".into(), Json::Str("process_name".into())),
+        ("ph".into(), Json::Str("M".into())),
+        ("pid".into(), Json::Num(1.0)),
+        (
+            "args".into(),
+            Json::Obj(vec![("name".into(), Json::Str("tilelang".into()))]),
+        ),
+    ])];
+    let mut last_ts = 0.0f64;
+    for ev in rec.events() {
+        last_ts = last_ts.max(ev.ts_us + ev.dur_us);
+        events.push(Json::Obj(vec![
+            ("name".into(), Json::Str(ev.name.clone())),
+            ("cat".into(), Json::Str(ev.cat.clone())),
+            ("ph".into(), Json::Str("X".into())),
+            ("pid".into(), Json::Num(1.0)),
+            ("tid".into(), Json::Num(ev.tid as f64)),
+            ("ts".into(), Json::Num(ev.ts_us)),
+            ("dur".into(), Json::Num(ev.dur_us)),
+            (
+                "args".into(),
+                Json::Obj(
+                    ev.args
+                        .iter()
+                        .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                        .collect(),
+                ),
+            ),
+        ]));
+    }
+    for (name, value) in rec.counters() {
+        events.push(Json::Obj(vec![
+            ("name".into(), Json::Str(name.clone())),
+            ("ph".into(), Json::Str("C".into())),
+            ("pid".into(), Json::Num(1.0)),
+            ("ts".into(), Json::Num(last_ts)),
+            (
+                "args".into(),
+                Json::Obj(vec![("value".into(), Json::Num(value as f64))]),
+            ),
+        ]));
+    }
+    Json::Obj(vec![
+        ("traceEvents".into(), Json::Arr(events)),
+        ("displayTimeUnit".into(), Json::Str("ms".into())),
+    ])
+}
+
+/// Write the Chrome trace to `path`.
+pub fn write_chrome_trace(rec: &Recorder, path: impl AsRef<Path>) -> Result<(), String> {
+    std::fs::write(path.as_ref(), chrome_trace(rec).dump())
+        .map_err(|e| format!("write trace {:?}: {}", path.as_ref(), e))
+}
+
+/// Parse a Chrome trace-event document back into span [`Event`]s.
+/// Non-span phases (`M` metadata, `C` counters) are skipped; a document
+/// without a `traceEvents` array, or a span event missing a required
+/// field, is an error — this is the validator behind
+/// `scripts/check_trace`.
+pub fn read_chrome_trace(text: &str) -> Result<Vec<Event>, String> {
+    let doc = Json::parse(text)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or("trace: missing traceEvents array")?;
+    let mut out = Vec::new();
+    for (i, ev) in events.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("trace event {}: missing ph", i))?;
+        if ph != "X" {
+            continue;
+        }
+        let field = |k: &str| -> Result<&Json, String> {
+            ev.get(k).ok_or_else(|| format!("trace event {}: missing {}", i, k))
+        };
+        let num = |k: &str| -> Result<f64, String> {
+            field(k)?
+                .as_f64()
+                .ok_or_else(|| format!("trace event {}: {} is not a number", i, k))
+        };
+        let args = match ev.get("args") {
+            Some(Json::Obj(fields)) => fields
+                .iter()
+                .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                .collect(),
+            _ => Vec::new(),
+        };
+        out.push(Event {
+            name: field("name")?
+                .as_str()
+                .ok_or_else(|| format!("trace event {}: name is not a string", i))?
+                .to_string(),
+            cat: ev
+                .get("cat")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            ts_us: num("ts")?,
+            dur_us: num("dur")?,
+            tid: num("tid")? as u64,
+            args,
+        });
+    }
+    Ok(out)
+}
+
+/// A metric-safe name: `serve.decode` -> `tilelang_serve_decode`.
+fn metric_name(raw: &str) -> String {
+    let mut out = String::from("tilelang_");
+    for c in raw.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    out
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 9.0e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{:.3}", v)
+    }
+}
+
+fn write_series(out: &mut String, name: &str, values: &[f64]) {
+    let mut h = Histogram::decades(1.0, 1e7);
+    for &v in values {
+        h.observe(v);
+    }
+    let s = summarize(values);
+    let _ = writeln!(out, "# TYPE {} histogram", name);
+    for (bound, count) in h.cumulative() {
+        let le = if bound.is_infinite() {
+            "+Inf".to_string()
+        } else {
+            fmt_f64(bound)
+        };
+        let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", name, le, count);
+    }
+    let _ = writeln!(out, "{}_sum {}", name, fmt_f64(s.sum));
+    let _ = writeln!(out, "{}_count {}", name, s.count);
+    let _ = writeln!(out, "# TYPE {}_p50 gauge", name);
+    let _ = writeln!(out, "{}_p50 {}", name, fmt_f64(s.p50));
+    let _ = writeln!(out, "# TYPE {}_p99 gauge", name);
+    let _ = writeln!(out, "{}_p99 {}", name, fmt_f64(s.p99));
+}
+
+/// The Prometheus-style text dump: counters, then one histogram +
+/// p50/p99 pair per span family (span durations, µs, keyed
+/// `<cat>.<name>`) and per sample series.
+pub fn metrics_text(rec: &Recorder) -> String {
+    let mut out = String::new();
+    for (name, value) in rec.counters() {
+        let n = format!("{}_total", metric_name(&name));
+        let _ = writeln!(out, "# TYPE {} counter", n);
+        let _ = writeln!(out, "{} {}", n, value);
+    }
+    let mut span_us: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    for ev in rec.events() {
+        span_us
+            .entry(format!("{}.{}", ev.cat, ev.name))
+            .or_default()
+            .push(ev.dur_us);
+    }
+    for (key, durs) in &span_us {
+        write_series(&mut out, &format!("{}_us", metric_name(key)), durs);
+    }
+    for (name, values) in rec.samples() {
+        write_series(&mut out, &metric_name(&name), &values);
+    }
+    out
+}
+
+/// Write the metrics dump to `path`.
+pub fn write_metrics(rec: &Recorder, path: impl AsRef<Path>) -> Result<(), String> {
+    std::fs::write(path.as_ref(), metrics_text(rec))
+        .map_err(|e| format!("write metrics {:?}: {}", path.as_ref(), e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chrome_trace_round_trips_through_the_reader() {
+        let rec = Recorder::enabled();
+        rec.span_with("graph", "q_proj", || {
+            vec![
+                ("epilogues".to_string(), "bias,relu".to_string()),
+                ("buffer".to_string(), "2".to_string()),
+            ]
+        })
+        .finish_us();
+        rec.span("serve", "decode").finish_us();
+        rec.add("vm.gemm_tiles", 7);
+
+        let text = chrome_trace(&rec).dump();
+        let back = read_chrome_trace(&text).expect("parse trace");
+        let orig = rec.events();
+        assert_eq!(back.len(), orig.len());
+        for (b, o) in back.iter().zip(&orig) {
+            assert_eq!(b.name, o.name);
+            assert_eq!(b.cat, o.cat);
+            assert_eq!(b.tid, o.tid);
+            assert_eq!(b.args, o.args);
+            assert!((b.ts_us - o.ts_us).abs() < 1e-6);
+            assert!((b.dur_us - o.dur_us).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn reader_rejects_malformed_documents() {
+        assert!(read_chrome_trace("{}").is_err());
+        assert!(read_chrome_trace("not json").is_err());
+        // an X event without a ts is an error, metadata is skipped
+        let bad = r#"{"traceEvents":[{"name":"x","ph":"X","dur":1,"tid":1}]}"#;
+        assert!(read_chrome_trace(bad).is_err());
+        let ok = r#"{"traceEvents":[{"name":"m","ph":"M","args":{}}]}"#;
+        assert_eq!(read_chrome_trace(ok).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn metrics_text_has_counters_and_histograms() {
+        let rec = Recorder::enabled();
+        rec.add("runtime.cache_hit", 3);
+        rec.span("serve", "decode").finish_us();
+        rec.sample("serve.pool_pages", 12.0);
+        rec.sample("serve.pool_pages", 20.0);
+        let text = metrics_text(&rec);
+        assert!(text.contains("tilelang_runtime_cache_hit_total 3"), "{}", text);
+        assert!(text.contains("# TYPE tilelang_serve_decode_us histogram"), "{}", text);
+        assert!(text.contains("tilelang_serve_decode_us_bucket{le=\"+Inf\"} 1"), "{}", text);
+        assert!(text.contains("tilelang_serve_pool_pages_count 2"), "{}", text);
+        assert!(text.contains("tilelang_serve_pool_pages_p99 20"), "{}", text);
+    }
+
+    #[test]
+    fn disabled_recorder_exports_empty_documents() {
+        let rec = Recorder::disabled();
+        let doc = chrome_trace(&rec);
+        let back = read_chrome_trace(&doc.dump()).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(metrics_text(&rec), "");
+    }
+}

@@ -1,0 +1,398 @@
+//! The span recorder: lightweight `Instant`-based spans, counters and
+//! sample series behind one cloneable handle.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Monotonic per-thread ids for trace lanes. Global (not per recorder):
+/// a thread keeps one lane across every recorder it touches, which is
+/// what a trace viewer expects.
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: u64 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+fn current_tid() -> u64 {
+    TID.with(|t| *t)
+}
+
+/// One completed span, in microseconds relative to the recorder epoch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Event {
+    pub name: String,
+    /// Span family: `runtime`, `graph`, `shard`, `serve`, `coord`,
+    /// `profile`, ...
+    pub cat: String,
+    /// Start offset from the recorder's creation, µs.
+    pub ts_us: f64,
+    pub dur_us: f64,
+    /// Trace lane (stable per OS thread).
+    pub tid: u64,
+    /// Free-form annotations (epilogues, buffer ids, shard index, ...).
+    pub args: Vec<(String, String)>,
+}
+
+struct Inner {
+    epoch: Instant,
+    events: Mutex<Vec<Event>>,
+    counters: Mutex<BTreeMap<String, u64>>,
+    samples: Mutex<BTreeMap<String, Vec<f64>>>,
+}
+
+/// Handle to a trace/metrics sink. `Recorder::disabled()` (the
+/// `Default`) is a cheap no-op: spans still return elapsed time, but
+/// nothing is allocated or stored. Clones share the same sink; the
+/// handle is `Send + Sync` so one recorder spans worker threads.
+#[derive(Clone, Default)]
+pub struct Recorder {
+    inner: Option<Arc<Inner>>,
+}
+
+impl Recorder {
+    /// A recorder that stores spans, counters and samples.
+    pub fn enabled() -> Recorder {
+        Recorder {
+            inner: Some(Arc::new(Inner {
+                epoch: Instant::now(),
+                events: Mutex::new(Vec::new()),
+                counters: Mutex::new(BTreeMap::new()),
+                samples: Mutex::new(BTreeMap::new()),
+            })),
+        }
+    }
+
+    /// A recorder that drops everything (the default in every layer).
+    pub fn disabled() -> Recorder {
+        Recorder { inner: None }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a span. The returned guard records on [`Span::finish_us`]
+    /// (or drop) and always reports its elapsed microseconds — serving
+    /// reports read their latencies from this return value, so tracing
+    /// on/off cannot change what gets measured.
+    pub fn span(&self, cat: &'static str, name: &str) -> Span {
+        self.span_with(cat, name, Vec::new)
+    }
+
+    /// [`Recorder::span`] with annotations. `args` is a closure so the
+    /// disabled path never formats or allocates them.
+    pub fn span_with(
+        &self,
+        cat: &'static str,
+        name: &str,
+        args: impl FnOnce() -> Vec<(String, String)>,
+    ) -> Span {
+        let recorded = self.inner.as_ref().map(|inner| RecordedSpan {
+            inner: Arc::clone(inner),
+            name: name.to_string(),
+            args: args(),
+        });
+        Span {
+            recorded,
+            cat,
+            start: Instant::now(),
+            done: false,
+        }
+    }
+
+    /// Add to a named monotonic counter.
+    pub fn add(&self, name: &str, delta: u64) {
+        if let Some(inner) = &self.inner {
+            if delta > 0 {
+                let mut c = inner.counters.lock().expect("obs counters lock");
+                *c.entry(name.to_string()).or_insert(0) += delta;
+            }
+        }
+    }
+
+    /// Record one observation of a sample series (pool occupancy, batch
+    /// size, queue latency, ...). Series become histogram buckets and
+    /// p50/p99 gauges in the metrics dump.
+    pub fn sample(&self, name: &str, value: f64) {
+        if let Some(inner) = &self.inner {
+            let mut s = inner.samples.lock().expect("obs samples lock");
+            s.entry(name.to_string()).or_default().push(value);
+        }
+    }
+
+    /// Fork a per-thread buffer: spans and counters accumulate locally
+    /// and merge into the recorder in one step when the buffer drops —
+    /// the contention-free way for `std::thread::scope` shard workers
+    /// to record.
+    pub fn fork(&self) -> ThreadBuf {
+        ThreadBuf {
+            inner: self.inner.clone(),
+            events: Vec::new(),
+            counters: Vec::new(),
+        }
+    }
+
+    /// Every recorded span, sorted by start time.
+    pub fn events(&self) -> Vec<Event> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(inner) => {
+                let mut ev = inner.events.lock().expect("obs events lock").clone();
+                ev.sort_by(|a, b| a.ts_us.partial_cmp(&b.ts_us).expect("finite ts"));
+                ev
+            }
+        }
+    }
+
+    /// Counter totals, name-sorted.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(inner) => inner
+                .counters
+                .lock()
+                .expect("obs counters lock")
+                .iter()
+                .map(|(k, v)| (k.clone(), *v))
+                .collect(),
+        }
+    }
+
+    /// Sample series, name-sorted, observations in record order.
+    pub fn samples(&self) -> Vec<(String, Vec<f64>)> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(inner) => inner
+                .samples
+                .lock()
+                .expect("obs samples lock")
+                .iter()
+                .map(|(k, v)| (k.clone(), v.clone()))
+                .collect(),
+        }
+    }
+
+    /// Microseconds since the recorder was created (0 when disabled).
+    fn epoch_us(&self, at: Instant) -> f64 {
+        match &self.inner {
+            None => 0.0,
+            Some(inner) => at.duration_since(inner.epoch).as_secs_f64() * 1e6,
+        }
+    }
+
+    fn push(&self, ev: Event) {
+        if let Some(inner) = &self.inner {
+            inner.events.lock().expect("obs events lock").push(ev);
+        }
+    }
+
+    /// Durations (µs) of every recorded span named `name`, start order.
+    pub fn span_durations_us(&self, name: &str) -> Vec<f64> {
+        self.events()
+            .into_iter()
+            .filter(|e| e.name == name)
+            .map(|e| e.dur_us)
+            .collect()
+    }
+}
+
+/// The enabled half of a [`Span`]: where the event goes and what it is
+/// called. Absent entirely on a disabled recorder.
+struct RecordedSpan {
+    inner: Arc<Inner>,
+    name: String,
+    args: Vec<(String, String)>,
+}
+
+/// An open span guard. Call [`Span::finish_us`] to close it and read
+/// the elapsed microseconds; dropping it unfinished records the span
+/// too (guard style).
+pub struct Span {
+    recorded: Option<RecordedSpan>,
+    cat: &'static str,
+    start: Instant,
+    done: bool,
+}
+
+impl Span {
+    /// Close the span; returns elapsed µs whether or not recording.
+    pub fn finish_us(mut self) -> u128 {
+        let elapsed = self.start.elapsed();
+        self.record(elapsed.as_secs_f64() * 1e6);
+        self.done = true;
+        elapsed.as_micros()
+    }
+
+    fn record(&mut self, dur_us: f64) {
+        if let Some(rec) = self.recorded.take() {
+            let ts_us = self.start.duration_since(rec.inner.epoch).as_secs_f64() * 1e6;
+            rec.inner.events.lock().expect("obs events lock").push(Event {
+                name: rec.name,
+                cat: self.cat.to_string(),
+                ts_us,
+                dur_us,
+                tid: current_tid(),
+                args: rec.args,
+            });
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if !self.done {
+            let dur = self.start.elapsed().as_secs_f64() * 1e6;
+            self.record(dur);
+        }
+    }
+}
+
+/// A per-thread event buffer forked from a [`Recorder`]: spans and
+/// counter increments land in thread-local `Vec`s with no locking, and
+/// merge into the shared recorder in one step when the buffer drops at
+/// the end of the thread's work.
+pub struct ThreadBuf {
+    inner: Option<Arc<Inner>>,
+    events: Vec<Event>,
+    counters: Vec<(String, u64)>,
+}
+
+impl ThreadBuf {
+    /// Record a completed span that began at `start`; returns elapsed
+    /// µs (measured whether or not recording, like [`Span::finish_us`]).
+    pub fn span(&mut self, cat: &'static str, name: &str, start: Instant) -> u128 {
+        self.span_with(cat, name, start, Vec::new)
+    }
+
+    /// [`ThreadBuf::span`] with lazily-built annotations.
+    pub fn span_with(
+        &mut self,
+        cat: &'static str,
+        name: &str,
+        start: Instant,
+        args: impl FnOnce() -> Vec<(String, String)>,
+    ) -> u128 {
+        let elapsed = start.elapsed();
+        if let Some(inner) = &self.inner {
+            let ts_us = start.duration_since(inner.epoch).as_secs_f64() * 1e6;
+            self.events.push(Event {
+                name: name.to_string(),
+                cat: cat.to_string(),
+                ts_us,
+                dur_us: elapsed.as_secs_f64() * 1e6,
+                tid: current_tid(),
+                args: args(),
+            });
+        }
+        elapsed.as_micros()
+    }
+
+    /// Add to a named counter (merged with the recorder's at finish).
+    pub fn add(&mut self, name: &str, delta: u64) {
+        if self.inner.is_some() && delta > 0 {
+            self.counters.push((name.to_string(), delta));
+        }
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        if let Some(inner) = &self.inner {
+            if !self.events.is_empty() {
+                inner
+                    .events
+                    .lock()
+                    .expect("obs events lock")
+                    .append(&mut self.events);
+            }
+            if !self.counters.is_empty() {
+                let mut c = inner.counters.lock().expect("obs counters lock");
+                for (name, delta) in self.counters.drain(..) {
+                    *c.entry(name).or_insert(0) += delta;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing_but_still_times() {
+        let rec = Recorder::disabled();
+        assert!(!rec.is_enabled());
+        let sp = rec.span("test", "noop");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let us = sp.finish_us();
+        assert!(us >= 2_000, "span must still measure elapsed time, got {}us", us);
+        rec.add("c", 5);
+        rec.sample("s", 1.0);
+        let mut tb = rec.fork();
+        tb.add("c", 5);
+        tb.span("test", "forked", Instant::now());
+        drop(tb);
+        assert!(rec.events().is_empty());
+        assert!(rec.counters().is_empty());
+        assert!(rec.samples().is_empty());
+    }
+
+    #[test]
+    fn spans_counters_and_samples_round_through_the_recorder() {
+        let rec = Recorder::enabled();
+        {
+            let _outer = rec.span_with("test", "outer", || {
+                vec![("k".to_string(), "v".to_string())]
+            });
+            let inner = rec.span("test", "inner");
+            inner.finish_us();
+        } // outer records on drop
+        rec.add("hits", 2);
+        rec.add("hits", 3);
+        rec.add("zero", 0); // no-op: zero deltas are not materialized
+        rec.sample("occupancy", 4.0);
+        rec.sample("occupancy", 6.0);
+
+        let ev = rec.events();
+        assert_eq!(ev.len(), 2);
+        // sorted by start: outer opened first
+        assert_eq!(ev[0].name, "outer");
+        assert_eq!(ev[0].args, vec![("k".to_string(), "v".to_string())]);
+        assert_eq!(ev[1].name, "inner");
+        // inner nests within outer on the same thread
+        assert_eq!(ev[0].tid, ev[1].tid);
+        assert!(ev[1].ts_us >= ev[0].ts_us);
+        assert!(ev[1].ts_us + ev[1].dur_us <= ev[0].ts_us + ev[0].dur_us + 1.0);
+
+        assert_eq!(rec.counters(), vec![("hits".to_string(), 5)]);
+        assert_eq!(rec.samples(), vec![("occupancy".to_string(), vec![4.0, 6.0])]);
+        assert_eq!(rec.span_durations_us("inner").len(), 1);
+    }
+
+    #[test]
+    fn thread_buffers_merge_at_finish() {
+        let rec = Recorder::enabled();
+        std::thread::scope(|scope| {
+            for i in 0..4 {
+                let rec = &rec;
+                scope.spawn(move || {
+                    let mut tb = rec.fork();
+                    let t0 = Instant::now();
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    tb.span_with("shard", &format!("worker{}", i), t0, || {
+                        vec![("shard".to_string(), i.to_string())]
+                    });
+                    tb.add("tiles", 10);
+                });
+            }
+        });
+        let ev = rec.events();
+        assert_eq!(ev.len(), 4);
+        let tids: std::collections::HashSet<u64> = ev.iter().map(|e| e.tid).collect();
+        assert_eq!(tids.len(), 4, "each scoped thread gets its own lane");
+        assert_eq!(rec.counters(), vec![("tiles".to_string(), 40)]);
+    }
+}

@@ -346,6 +346,24 @@ impl InterpKernel {
         }
         Ok(out)
     }
+
+    /// Static per-instruction-class counters for one execution —
+    /// `Some` only when the kernel was prepared for the compiled VM
+    /// (see [`crate::tir::compile::OpCounts`]).
+    pub(crate) fn op_counts(&self) -> Option<crate::tir::compile::OpCounts> {
+        self.compiled.as_ref().map(|vm| vm.op_counts())
+    }
+
+    /// The cost model's prediction for this kernel on `dev`, µs
+    /// (per-launch overhead included — the number `tilelang profile`
+    /// puts in the `model` column). `None` for dynamic-grid programs,
+    /// which the simulator cannot cost without specialization.
+    pub(crate) fn modeled_time_us(&self, dev: &Device) -> Option<f64> {
+        self.lowered.static_grid()?;
+        let report =
+            crate::sim::model::estimate(&self.lowered, dev, &crate::sim::model::Penalties::none());
+        Some(report.time_us + crate::sim::model::LAUNCH_US)
+    }
 }
 
 /// Select a config through the persistent tuning cache; `None` when

@@ -68,9 +68,11 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use crate::error::{Context, Result};
 use crate::graph::exec::GraphKernel;
 use crate::graph::ir::KernelGraph;
+use crate::obs::Recorder;
 use crate::shard::exec::{ShardedKernel, ShardedOptions};
 use crate::shard::graph::{GraphShardPlan, ShardedGraphKernel};
 use crate::shard::plan::ShardPlan;
+use crate::sim::device::Device;
 use crate::{anyhow, bail};
 
 /// How loaded artifacts execute.
@@ -215,13 +217,94 @@ impl LoadedKernel {
                 );
             }
         }
+        self.dispatch(inputs, &Recorder::disabled())
+    }
+
+    /// [`LoadedKernel::execute`] under a [`Recorder`]: one `runtime`
+    /// span covering the whole request, the backend's own spans nested
+    /// inside (per graph node, per shard), and the compiled VM's static
+    /// instruction-class counters for single-kernel artifacts.
+    pub fn execute_rec(&self, inputs: &[Vec<f32>], rec: &Recorder) -> Result<Vec<f32>> {
+        if inputs.len() != self.spec.in_shapes.len() {
+            bail!(
+                "{} expects {} inputs, got {}",
+                self.spec.name,
+                self.spec.in_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (data, shape)) in inputs.iter().zip(&self.spec.in_shapes).enumerate() {
+            let want = shape.iter().product::<i64>() as usize;
+            if data.len() != want {
+                bail!(
+                    "{}: input {} length {} != shape {:?}",
+                    self.spec.name,
+                    i,
+                    data.len(),
+                    shape
+                );
+            }
+        }
+        let sp = rec.span("runtime", &self.spec.name);
+        let out = self.dispatch(inputs, rec);
+        sp.finish_us();
+        out
+    }
+
+    fn dispatch(&self, inputs: &[Vec<f32>], rec: &Recorder) -> Result<Vec<f32>> {
         match &self.exec {
-            KernelExec::Interp(k) => k.execute(inputs),
-            KernelExec::Sharded(k) => k.execute(inputs),
-            KernelExec::Graph(k) => k.execute(inputs),
-            KernelExec::ShardedGraph(k) => k.execute(inputs),
+            KernelExec::Interp(k) => {
+                let out = k.execute(inputs);
+                if rec.is_enabled() {
+                    if let Some(oc) = k.op_counts() {
+                        for (name, v) in oc.items() {
+                            rec.add(name, v);
+                        }
+                    }
+                }
+                out
+            }
+            KernelExec::Sharded(k) => k.execute_rec(inputs, rec),
+            KernelExec::Graph(k) => {
+                let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                k.execute_refs_rec(&refs, rec)
+            }
+            KernelExec::ShardedGraph(k) => k.execute_rec(inputs, rec),
             #[cfg(feature = "pjrt")]
             KernelExec::Pjrt(exe) => self.execute_pjrt(exe, inputs),
+        }
+    }
+
+    /// Per-unit cost-model predictions for `tilelang profile`: one
+    /// `(span name, modeled µs)` row per measurable unit, named so each
+    /// row matches the span the unit emits when executed under a
+    /// recorder. Single kernels yield one row (the `runtime` span);
+    /// graphs one row per node (the `graph` spans); sharded artifacts
+    /// the whole-request row plus a `compute` row for the planner's
+    /// slowest-shard prediction (the `shard`/`compute` spans). `None`
+    /// marks a unit the simulator cannot cost (dynamic grids).
+    pub fn modeled_node_us(&self, dev: &Device) -> Vec<(String, Option<f64>)> {
+        match &self.exec {
+            KernelExec::Interp(k) => {
+                vec![(self.spec.name.clone(), k.modeled_time_us(dev))]
+            }
+            KernelExec::Graph(k) => k.node_modeled_us(),
+            KernelExec::Sharded(k) => {
+                let p = k.plan();
+                vec![
+                    (self.spec.name.clone(), Some(p.cost_us())),
+                    ("compute".to_string(), Some(p.kernel_us)),
+                ]
+            }
+            KernelExec::ShardedGraph(k) => {
+                let p = k.plan();
+                vec![
+                    (self.spec.name.clone(), Some(p.cost_us())),
+                    ("compute".to_string(), Some(p.kernel_us)),
+                ]
+            }
+            #[cfg(feature = "pjrt")]
+            KernelExec::Pjrt(_) => vec![(self.spec.name.clone(), None)],
         }
     }
 
@@ -308,6 +391,9 @@ pub struct Runtime {
     specs: HashMap<String, ArtifactSpec>,
     goldens: HashMap<String, Golden>,
     cache: Mutex<HashMap<String, Arc<LoadedKernel>>>,
+    /// Observability sink: disabled by default; `--trace`/`--metrics`
+    /// swap in an enabled recorder via [`Runtime::set_recorder`].
+    recorder: Recorder,
 }
 
 /// Parse a `x`-separated shape (`128x64`). Malformed or non-positive
@@ -430,7 +516,19 @@ impl Runtime {
             specs,
             goldens,
             cache: Mutex::new(HashMap::new()),
+            recorder: Recorder::disabled(),
         })
+    }
+
+    /// Attach an observability recorder: `load` spans, cache hit/miss
+    /// counters and every backend's execution spans report through it.
+    pub fn set_recorder(&mut self, rec: Recorder) {
+        self.recorder = rec;
+    }
+
+    /// The recorder this runtime reports through (disabled by default).
+    pub fn recorder(&self) -> &Recorder {
+        &self.recorder
     }
 
     /// The backend this runtime loads artifacts with.
@@ -472,8 +570,16 @@ impl Runtime {
     /// the tuning cache, so serving starts pre-compile tuned configs.
     pub fn load(&self, name: &str) -> Result<Arc<LoadedKernel>> {
         if let Some(k) = self.compile_cache()?.get(name) {
+            self.recorder.add("runtime.cache_hit", 1);
             return Ok(k.clone());
         }
+        self.recorder.add("runtime.cache_miss", 1);
+        let load_sp = self.recorder.span_with("runtime", "load", || {
+            vec![
+                ("artifact".to_string(), name.to_string()),
+                ("backend".to_string(), self.backend.name().to_string()),
+            ]
+        });
         let spec = self.spec(name)?.clone();
         let exec = if let Some(gfile) = &spec.graph {
             match &self.backend {
@@ -559,6 +665,7 @@ impl Runtime {
         };
         let k = Arc::new(LoadedKernel { spec, exec });
         self.compile_cache()?.insert(name.to_string(), k.clone());
+        load_sp.finish_us();
         Ok(k)
     }
 
@@ -588,9 +695,10 @@ impl Runtime {
         Ok(graph)
     }
 
-    /// Convenience: load + execute.
+    /// Convenience: load + execute, reporting through the runtime's
+    /// recorder (a no-op unless [`Runtime::set_recorder`] was called).
     pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
-        self.load(name)?.execute(inputs)
+        self.load(name)?.execute_rec(inputs, &self.recorder)
     }
 
     /// Read the recorded example inputs for an artifact.

@@ -37,12 +37,13 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::bail;
-use crate::coordinator::percentile;
 use crate::error::Result;
 use crate::graph::exec::GraphKernel;
 use crate::graph::ir::decode_block_paged;
+use crate::obs::Recorder;
 use crate::runtime::InterpOptions;
 use crate::serve::pool::KvPool;
+use crate::util::stats::percentile;
 use crate::workloads::matmul::test_data;
 
 /// Engine shape and pool sizing. `slots` is the fixed batch dimension
@@ -206,6 +207,13 @@ pub struct Engine {
     bo: Vec<f32>,
     kernels: HashMap<i64, GraphKernel>,
     cache_dir: PathBuf,
+    /// Observability sink. Disabled by default; `--trace`/`--metrics`
+    /// attach an enabled recorder via [`Engine::set_recorder`]. The
+    /// [`EngineReport`] phase latencies are measured by this recorder's
+    /// spans whether or not it records, so enabling tracing cannot
+    /// change what gets reported — or what gets decoded (the bit-
+    /// exactness contract above is timing-independent).
+    recorder: Recorder,
 }
 
 /// Weights live in [-0.03, 0.03]: with d_model-wide dot products the
@@ -248,11 +256,36 @@ impl Engine {
             kernels: HashMap::new(),
             cache_dir,
             cfg,
+            recorder: Recorder::disabled(),
         })
     }
 
     pub fn config(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// Attach an observability recorder: admit/prefill/decode/gather
+    /// spans and pool-occupancy samples report through it.
+    pub fn set_recorder(&mut self, rec: Recorder) {
+        self.recorder = rec;
+    }
+
+    /// The recorder this engine reports through (disabled by default).
+    pub fn recorder(&self) -> &Recorder {
+        &self.recorder
+    }
+
+    /// Per-node cost-model predictions for the decode graph — the
+    /// `model` column of `tilelang profile`'s continuous-serve section.
+    /// The decode graph is re-prepared per padded KV length; this
+    /// reports the largest one prepared so far (the worst-case step the
+    /// run reached). Empty before any run.
+    pub fn node_modeled_us(&self) -> Vec<(String, Option<f64>)> {
+        self.kernels
+            .iter()
+            .max_by_key(|(padded, _)| **padded)
+            .map(|(_, k)| k.node_modeled_us())
+            .unwrap_or_default()
     }
 
     /// A stream's prompt K/V row (prefill) — seeded by stream id and
@@ -373,13 +406,25 @@ impl Engine {
                     break;
                 }
                 pending.pop_front();
+                let admit_sp = self.recorder.span_with("serve", "admit", || {
+                    vec![
+                        ("stream".to_string(), sp.id.to_string()),
+                        ("rows".to_string(), sp.total_rows().to_string()),
+                    ]
+                });
                 pool.admit(sp.id, sp.total_rows())?;
-                let pf0 = Instant::now();
+                let prefill_sp = self.recorder.span_with("serve", "prefill", || {
+                    vec![
+                        ("stream".to_string(), sp.id.to_string()),
+                        ("rows".to_string(), sp.prefill_rows.to_string()),
+                    ]
+                });
                 for r in 0..sp.prefill_rows {
                     let (k, v) = self.prompt_row(sp.id, r);
                     pool.append_row(sp.id, &k, &v)?;
                 }
-                prefill_us.push(pf0.elapsed().as_micros());
+                prefill_us.push(prefill_sp.finish_us());
+                admit_sp.finish_us();
                 let slot = slot_live
                     .iter()
                     .position(|s| s.is_none())
@@ -394,6 +439,7 @@ impl Engine {
                 outputs.insert(sp.id, Vec::new());
             }
             peak_pages = peak_pages.max(pool.used_pages());
+            self.recorder.sample("serve.pool_pages", pool.used_pages() as f64);
 
             let live: Vec<usize> =
                 (0..slots_n).filter(|&s| slot_live[s].is_some()).collect();
@@ -403,8 +449,15 @@ impl Engine {
                 continue;
             }
             peak_concurrency = peak_concurrency.max(live.len());
+            self.recorder.sample("serve.batch_size", live.len() as f64);
 
             // gather: pad to the longest live cache, 16-aligned
+            let gather_sp = self.recorder.span_with("serve", "gather", || {
+                vec![
+                    ("step".to_string(), step.to_string()),
+                    ("live".to_string(), live.len().to_string()),
+                ]
+            });
             let max_len = live
                 .iter()
                 .map(|&s| {
@@ -433,25 +486,37 @@ impl Engine {
                 x_buf[s * dm..(s + 1) * dm].copy_from_slice(&st.x);
                 if st.first_decode_pending {
                     st.first_decode_pending = false;
-                    queue_us.push(st.arrived_at.elapsed().as_micros());
+                    let waited = st.arrived_at.elapsed().as_micros();
+                    queue_us.push(waited);
+                    self.recorder.sample("serve.queue_us", waited as f64);
                 }
             }
+            gather_sp.finish_us();
 
             // execute the multi-output decode graph: [Y, K_new, V_new]
             let kern = Engine::kernel_for(&mut self.kernels, &cfg, &self.cache_dir, padded)?;
-            let ex0 = Instant::now();
-            let mut outs = kern.execute_all_refs(&[
-                x_buf.as_slice(),
-                self.wq.as_slice(),
-                k_buf.as_slice(),
-                v_buf.as_slice(),
-                lens.as_slice(),
-                self.wk.as_slice(),
-                self.wv.as_slice(),
-                self.wo.as_slice(),
-                self.bo.as_slice(),
-            ])?;
-            decode_us.push(ex0.elapsed().as_micros());
+            let decode_sp = self.recorder.span_with("serve", "decode", || {
+                vec![
+                    ("step".to_string(), step.to_string()),
+                    ("live".to_string(), live.len().to_string()),
+                    ("padded_kv".to_string(), padded.to_string()),
+                ]
+            });
+            let mut outs = kern.execute_all_refs_rec(
+                &[
+                    x_buf.as_slice(),
+                    self.wq.as_slice(),
+                    k_buf.as_slice(),
+                    v_buf.as_slice(),
+                    lens.as_slice(),
+                    self.wk.as_slice(),
+                    self.wv.as_slice(),
+                    self.wo.as_slice(),
+                    self.bo.as_slice(),
+                ],
+                &self.recorder,
+            )?;
+            decode_us.push(decode_sp.finish_us());
             exec_steps += 1;
             let v_new = outs.pop().expect("decode graph emits V_new");
             let k_new = outs.pop().expect("decode graph emits K_new");
@@ -474,6 +539,7 @@ impl Engine {
                 }
             }
             peak_pages = peak_pages.max(pool.used_pages());
+            self.recorder.sample("serve.pool_pages", pool.used_pages() as f64);
             pool.validate()?;
             step += 1;
         }
@@ -503,14 +569,23 @@ impl Engine {
         &mut self,
         specs: &[StreamSpec],
     ) -> Result<BTreeMap<u64, Vec<Vec<f32>>>> {
-        let mut all = BTreeMap::new();
-        for sp in specs {
-            let solo = StreamSpec { arrival_step: 0, ..sp.clone() };
-            let report = self.run(&[solo])?;
-            let (id, outs) = report.outputs.into_iter().next().expect("one stream");
-            all.insert(id, outs);
-        }
-        Ok(all)
+        // oracle reruns must not pollute the attached trace: swap in a
+        // disabled recorder for the duration (timing is observability-
+        // only, so this cannot change the decoded bits)
+        let saved = std::mem::take(&mut self.recorder);
+        let mut run_all = || -> Result<BTreeMap<u64, Vec<Vec<f32>>>> {
+            let mut all = BTreeMap::new();
+            for sp in specs {
+                let solo = StreamSpec { arrival_step: 0, ..sp.clone() };
+                let report = self.run(&[solo])?;
+                let (id, outs) = report.outputs.into_iter().next().expect("one stream");
+                all.insert(id, outs);
+            }
+            Ok(all)
+        };
+        let result = run_all();
+        self.recorder = saved;
+        result
     }
 }
 

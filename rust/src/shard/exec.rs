@@ -15,8 +15,10 @@
 
 use std::borrow::Cow;
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
 use crate::error::Result;
+use crate::obs::Recorder;
 use crate::runtime::interp_backend::InterpKernel;
 use crate::runtime::{ArtifactSpec, InterpOptions};
 use crate::shard::plan::{self, Collective, ShardPlan};
@@ -133,6 +135,14 @@ impl ShardedKernel {
 
     /// Scatter -> parallel shard execution -> gather/reduce.
     pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.execute_rec(inputs, &Recorder::disabled())
+    }
+
+    /// [`ShardedKernel::execute`] under a [`Recorder`]: a `shard`
+    /// scatter span, one compute span per shard thread (recorded
+    /// through a forked [`crate::obs::ThreadBuf`], so shard imbalance
+    /// shows as lanes of different length) and a gather span.
+    pub fn execute_rec(&self, inputs: &[Vec<f32>], rec: &Recorder) -> Result<Vec<f32>> {
         if inputs.len() != self.in_shapes.len() {
             bail!(
                 "sharded kernel expects {} inputs, got {}",
@@ -148,6 +158,12 @@ impl ShardedKernel {
         }
         // scatter: materialize only the sliced tensors; replicated
         // inputs are borrowed by every shard instead of copied per shard
+        let scatter_sp = rec.span_with("shard", "scatter", || {
+            vec![
+                ("strategy".to_string(), self.plan.strategy.to_string()),
+                ("shards".to_string(), self.plan.shards().to_string()),
+            ]
+        });
         let mut shard_inputs: Vec<Vec<Cow<'_, [f32]>>> = Vec::with_capacity(self.plan.shards());
         for part in &self.plan.parts {
             let mut ins = Vec::with_capacity(inputs.len());
@@ -165,17 +181,30 @@ impl ShardedKernel {
             }
             shard_inputs.push(ins);
         }
+        scatter_sp.finish_us();
         // execute every shard on its own thread
         let outs: Vec<Result<Vec<f32>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self
                 .part_kernel
                 .iter()
                 .zip(shard_inputs.iter())
-                .map(|(&ki, ins)| {
+                .enumerate()
+                .map(|(si, (&ki, ins))| {
                     let kernel = &self.kernels[ki];
+                    let mut tb = rec.fork();
                     scope.spawn(move || {
+                        let t0 = Instant::now();
                         let refs: Vec<&[f32]> = ins.iter().map(|c| c.as_ref()).collect();
-                        kernel.execute_refs(&refs)
+                        let out = kernel.execute_refs(&refs);
+                        tb.span_with("shard", "compute", t0, || {
+                            vec![("shard".to_string(), si.to_string())]
+                        });
+                        if let Some(oc) = kernel.op_counts() {
+                            for (name, v) in oc.items() {
+                                tb.add(name, v);
+                            }
+                        }
+                        out
                     })
                 })
                 .collect();
@@ -188,7 +217,8 @@ impl ShardedKernel {
                 .collect()
         });
         // gather
-        match self.plan.collective {
+        let gather_sp = rec.span("shard", "gather");
+        let gathered = match self.plan.collective {
             Collective::Concat | Collective::HeadConcat => {
                 let mut out = Vec::with_capacity(self.out_len);
                 for (i, r) in outs.into_iter().enumerate() {
@@ -222,7 +252,9 @@ impl ShardedKernel {
                 }
                 Ok(out)
             }
-        }
+        };
+        gather_sp.finish_us();
+        gathered
     }
 }
 

@@ -91,9 +91,11 @@
 use std::borrow::Cow;
 use std::fmt;
 use std::path::Path;
+use std::time::Instant;
 
 use crate::error::Result;
 use crate::graph::exec::GraphKernel;
+use crate::obs::Recorder;
 use crate::graph::fuse;
 use crate::graph::ir::{kernel_input_count, KernelGraph, NodeOp, ValueRef};
 use crate::runtime::{InterpOptions, WorkloadKind};
@@ -947,6 +949,15 @@ impl ShardedGraphKernel {
 
     /// Scatter -> parallel per-shard graph execution -> concat gather.
     pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        self.execute_rec(inputs, &Recorder::disabled())
+    }
+
+    /// [`ShardedGraphKernel::execute`] under a [`Recorder`]: scatter /
+    /// per-shard compute / gather spans, with each shard thread
+    /// recording through a forked [`crate::obs::ThreadBuf`]. The
+    /// per-shard [`GraphKernel`] adds its own per-node `graph` spans on
+    /// the shard thread's lane.
+    pub fn execute_rec(&self, inputs: &[Vec<f32>], rec: &Recorder) -> Result<Vec<f32>> {
         if inputs.len() != self.in_shapes.len() {
             bail!(
                 "sharded graph expects {} inputs, got {}",
@@ -966,6 +977,13 @@ impl ShardedGraphKernel {
             }
         }
         // scatter: slice the batch-carrying tensors, borrow the rest
+        let scatter_sp = rec.span_with("shard", "scatter", || {
+            vec![
+                ("graph".to_string(), self.plan.graph_name.clone()),
+                ("strategy".to_string(), self.plan.strategy.to_string()),
+                ("shards".to_string(), self.plan.shards().to_string()),
+            ]
+        });
         let mut shard_inputs: Vec<Vec<Cow<'_, [f32]>>> = Vec::with_capacity(self.plan.shards());
         for part in &self.plan.parts {
             let mut ins = Vec::with_capacity(inputs.len());
@@ -983,17 +1001,26 @@ impl ShardedGraphKernel {
             }
             shard_inputs.push(ins);
         }
+        scatter_sp.finish_us();
         // one thread per shard; identical shards share a prepared kernel
         let outs: Vec<Result<Vec<f32>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = self
                 .part_kernel
                 .iter()
                 .zip(shard_inputs.iter())
-                .map(|(&ki, ins)| {
+                .enumerate()
+                .map(|(si, (&ki, ins))| {
                     let kernel = &self.kernels[ki];
+                    let rec = rec.clone();
                     scope.spawn(move || {
+                        let mut tb = rec.fork();
+                        let t0 = Instant::now();
                         let refs: Vec<&[f32]> = ins.iter().map(|c| c.as_ref()).collect();
-                        kernel.execute_refs(&refs)
+                        let out = kernel.execute_refs_rec(&refs, &rec);
+                        tb.span_with("shard", "compute", t0, || {
+                            vec![("shard".to_string(), si.to_string())]
+                        });
+                        out
                     })
                 })
                 .collect();
@@ -1006,10 +1033,13 @@ impl ShardedGraphKernel {
                 .collect()
         });
         let mut parts_data = Vec::with_capacity(outs.len());
+        let gather_sp = rec.span("shard", "gather");
         for (i, r) in outs.into_iter().enumerate() {
             parts_data.push(r.map_err(|e| anyhow!("shard {}: {}", i, e))?);
         }
-        self.gather(parts_data)
+        let gathered = self.gather(parts_data);
+        gather_sp.finish_us();
+        gathered
     }
 
     /// Concatenate shard outputs along `plan.concat_dim` in shard order.

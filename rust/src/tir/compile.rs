@@ -2232,6 +2232,140 @@ impl CompiledProgram {
     }
 }
 
+/// Static per-instruction-class execution counters for one VM run.
+///
+/// Computed from the instruction stream alone (like
+/// [`CompiledProgram::write_counts`]: index tapes never load tensor
+/// data), so the numbers are tensor-independent — executing the same
+/// program twice reports identical counts regardless of inputs. The
+/// observability layer emits these as `vm.*` counters per node
+/// execution, and `tilelang profile` sums them per kernel next to the
+/// cost model's predictions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCounts {
+    /// Copy instructions executed (tile loads/stores + atomics).
+    pub copy_tiles: u64,
+    pub gemm_tiles: u64,
+    pub reduce_tiles: u64,
+    pub dequant_tiles: u64,
+    /// Elementwise sweeps executed (fused epilogues, masks, softmax).
+    pub elems_tiles: u64,
+    /// f32 arithmetic operations (2·m·n·k per GEMM tile, one combine
+    /// per reduced element, one tape op per elementwise evaluation).
+    pub f32_ops: u64,
+    /// Bytes read + written through the arena and the global params.
+    pub bytes_moved: u64,
+}
+
+impl OpCounts {
+    pub fn merge(&mut self, other: &OpCounts) {
+        self.copy_tiles += other.copy_tiles;
+        self.gemm_tiles += other.gemm_tiles;
+        self.reduce_tiles += other.reduce_tiles;
+        self.dequant_tiles += other.dequant_tiles;
+        self.elems_tiles += other.elems_tiles;
+        self.f32_ops += other.f32_ops;
+        self.bytes_moved += other.bytes_moved;
+    }
+
+    /// `(counter name, value)` pairs in the `vm.*` namespace the
+    /// recorder stores them under.
+    pub fn items(&self) -> [(&'static str, u64); 7] {
+        [
+            ("vm.copy_tiles", self.copy_tiles),
+            ("vm.gemm_tiles", self.gemm_tiles),
+            ("vm.reduce_tiles", self.reduce_tiles),
+            ("vm.dequant_tiles", self.dequant_tiles),
+            ("vm.elems_tiles", self.elems_tiles),
+            ("vm.f32_ops", self.f32_ops),
+            ("vm.bytes_moved", self.bytes_moved),
+        ]
+    }
+
+    /// Tiles across every instruction class.
+    pub fn total_tiles(&self) -> u64 {
+        self.copy_tiles + self.gemm_tiles + self.reduce_tiles + self.dequant_tiles
+            + self.elems_tiles
+    }
+}
+
+impl CompiledProgram {
+    /// Per-instruction-class counters for one full-grid execution —
+    /// a shadow pass over the instruction stream, input-independent by
+    /// construction (see [`OpCounts`]). O(instructions), no domain
+    /// sweeps: element counts come from extents, never from walking
+    /// addresses.
+    pub fn op_counts(&self) -> OpCounts {
+        let mut oc = OpCounts::default();
+        for ins in &self.instrs {
+            match ins {
+                Instr::ZeroChip => {
+                    oc.bytes_moved += 4 * self.chip_len as u64;
+                }
+                Instr::Fill { len, .. } => {
+                    oc.bytes_moved += 4 * *len as u64;
+                }
+                Instr::Copy(c) => {
+                    oc.copy_tiles += 1;
+                    // read + write four bytes per element
+                    oc.bytes_moved += 8 * c.count as u64;
+                }
+                Instr::Atomic(a) => {
+                    // an atomic is a copy with a combine: read src,
+                    // read-modify-write dst
+                    oc.copy_tiles += 1;
+                    oc.f32_ops += a.count as u64;
+                    oc.bytes_moved += 12 * a.count as u64;
+                }
+                Instr::Gemm(g) => {
+                    oc.gemm_tiles += 1;
+                    let (m, n, k) = (g.m as u64, g.n as u64, g.k as u64);
+                    oc.f32_ops += 2 * m * n * k;
+                    oc.bytes_moved += 4 * (m * k + n * k + 2 * m * n);
+                }
+                Instr::Reduce(r) => {
+                    oc.reduce_tiles += 1;
+                    let out: u64 = r.out_extents.iter().map(|&e| e as u64).product();
+                    let red = r.red_extent as u64;
+                    oc.f32_ops += out * red;
+                    oc.bytes_moved += 4 * (out * red + out);
+                }
+                Instr::Dequant(d) => {
+                    oc.dequant_tiles += 1;
+                    let elems = (d.rows * d.cols) as u64;
+                    let packed = (d.rows * d.cols.div_ceil(d.epb)) as u64;
+                    let scales = match &d.scale {
+                        Some(_) => (d.rows * d.cols.div_ceil(d.group)) as u64,
+                        None => 0,
+                    };
+                    oc.f32_ops += elems;
+                    oc.bytes_moved += 4 * (elems + packed + scales);
+                }
+                Instr::Elems(e) => {
+                    oc.elems_tiles += 1;
+                    let total: u64 = e.extents.iter().map(|&x| x as u64).product();
+                    for w in &e.stmts {
+                        let tape_ops = w
+                            .value
+                            .iter()
+                            .filter(|op| {
+                                matches!(
+                                    op,
+                                    FOp::Bin(_) | FOp::Un(_) | FOp::Select | FOp::Cast(_)
+                                )
+                            })
+                            .count() as u64;
+                        oc.f32_ops += total * tape_ops.max(1);
+                        // every load read + the store written
+                        oc.bytes_moved += total * 4 * (w.loads.len() as u64 + 1);
+                    }
+                }
+            }
+        }
+        oc
+    }
+}
+
 fn count_view(v: &View, counts: &mut [u64]) {
     let mut cur = Cursor::new(v);
     let n: i64 = v.count();
@@ -2339,5 +2473,39 @@ mod tests {
         assert_eq!(tv[&c], ti[&c], "dyn-M tail diverges from interp");
         let counts = vm.write_counts(c).unwrap();
         assert!(counts.iter().all(|&x| x == 1), "tail rows double- or un-written");
+    }
+
+    #[test]
+    fn op_counts_are_static_and_track_the_gemm_volume() {
+        let lowered = lowered_matmul(64, 64, 64);
+        let vm = compile_lowered(&lowered).unwrap();
+        let oc = vm.op_counts();
+        // tensor-independent: the shadow pass never reads data
+        assert_eq!(oc, vm.op_counts());
+        assert!(oc.gemm_tiles > 0, "a matmul must execute gemm tiles");
+        assert!(oc.copy_tiles > 0, "tiles are loaded and stored via copies");
+        // the grid tiles 64x64x64 exactly, so gemm flops cover at least
+        // the full 2*M*N*K mac volume
+        assert!(
+            oc.f32_ops >= 2 * 64 * 64 * 64,
+            "gemm flops {} below the 2MNK volume",
+            oc.f32_ops
+        );
+        // every output element is written once through a copy/elems
+        // path, so at least out reads+writes move through memory
+        let c = lowered.params[2].id;
+        let writes: u64 = vm.write_counts(c).unwrap().iter().sum();
+        assert_eq!(writes, 64 * 64);
+        assert!(
+            oc.bytes_moved >= 8 * writes,
+            "bytes_moved {} below the output write volume",
+            oc.bytes_moved
+        );
+        assert_eq!(oc.total_tiles(), oc.copy_tiles + oc.gemm_tiles + oc.elems_tiles
+            + oc.reduce_tiles + oc.dequant_tiles);
+        // counter names are stable (the obs layer keys on them)
+        let items = oc.items();
+        assert_eq!(items[1].0, "vm.gemm_tiles");
+        assert_eq!(items[1].1, oc.gemm_tiles);
     }
 }

@@ -32,7 +32,17 @@ pub struct BenchScenario {
     pub throughput_per_s: f64,
     /// `interp_p50_us / compiled_p50_us`.
     pub speedup: f64,
+    /// Disabled-tracing overhead ratio (`>= 1.0`): the cost the
+    /// observability span sites add to one execution when no recorder is
+    /// attached, relative to the execution's p50. `0.0` = not measured
+    /// for this scenario (the field is omitted from the JSON). Gated at
+    /// [`TRACE_OVERHEAD_CEILING`] by [`compare`].
+    pub trace_overhead: f64,
 }
+
+/// Disabled tracing must cost less than 2% of the traced scenario:
+/// `compare` fails any measured `trace_overhead` above this ratio.
+pub const TRACE_OVERHEAD_CEILING: f64 = 1.02;
 
 /// A full bench run: the committed perf record for one PR.
 #[derive(Clone, Debug, PartialEq)]
@@ -43,6 +53,12 @@ pub struct BenchReport {
     pub mode: String,
     /// Where the numbers came from (host class, measured vs estimated).
     pub provenance: String,
+    /// `"measured"` (real bench run) or `"estimated"` (hand-authored
+    /// numbers, e.g. when the authoring environment has no toolchain).
+    /// `bench-check` downgrades regressions against an estimated
+    /// baseline to warnings. Older records without the field sniff it
+    /// from the `provenance` prefix at load time.
+    pub provenance_kind: String,
     pub scenarios: Vec<BenchScenario>,
 }
 
@@ -68,6 +84,10 @@ impl BenchReport {
             ("label".into(), Json::Str(self.label.clone())),
             ("mode".into(), Json::Str(self.mode.clone())),
             ("provenance".into(), Json::Str(self.provenance.clone())),
+            (
+                "provenance_kind".into(),
+                Json::Str(self.provenance_kind.clone()),
+            ),
             (
                 "geomean_speedup".into(),
                 Json::Num(round3(self.geomean_speedup())),
@@ -97,7 +117,15 @@ impl BenchReport {
                                     Json::Num(round3(s.throughput_per_s)),
                                 ),
                                 ("speedup".into(), Json::Num(round3(s.speedup))),
-                            ])
+                            ]
+                            .into_iter()
+                            .chain((s.trace_overhead > 0.0).then(|| {
+                                (
+                                    "trace_overhead".to_string(),
+                                    Json::Num(round5(s.trace_overhead)),
+                                )
+                            }))
+                            .collect())
                         })
                         .collect(),
                 ),
@@ -140,12 +168,24 @@ impl BenchReport {
                 compile_us: snum(s, "compile_us")?,
                 throughput_per_s: snum(s, "throughput_per_s")?,
                 speedup: snum(s, "speedup")?,
+                trace_overhead: snum(s, "trace_overhead").unwrap_or(0.0),
             });
         }
+        let provenance = sstr(v, "provenance")?;
+        // records predating the field sniff the kind from the free-form
+        // provenance string (BENCH_7 and older start with "estimated:")
+        let provenance_kind = sstr(v, "provenance_kind").unwrap_or_else(|_| {
+            if provenance.starts_with("estimated") {
+                "estimated".to_string()
+            } else {
+                "measured".to_string()
+            }
+        });
         Ok(BenchReport {
             label: sstr(v, "label")?,
             mode: sstr(v, "mode")?,
-            provenance: sstr(v, "provenance")?,
+            provenance,
+            provenance_kind,
             scenarios,
         })
     }
@@ -164,6 +204,12 @@ impl BenchReport {
 
 fn round3(x: f64) -> f64 {
     (x * 1000.0).round() / 1000.0
+}
+
+/// Five decimals for ratios near 1.0 (`trace_overhead`), where round3
+/// would erase the measurement entirely.
+fn round5(x: f64) -> f64 {
+    (x * 100_000.0).round() / 100_000.0
 }
 
 /// Indent a compact JSON dump for a diff-friendly committed file:
@@ -243,6 +289,18 @@ pub fn compare(baseline: &BenchReport, current: &BenchReport, tol: f64) -> Vec<S
             }
         }
     }
+    // absolute gate, independent of the baseline: instrumentation with
+    // the recorder off must stay in the noise (< 2% of the scenario)
+    for c in &current.scenarios {
+        if c.trace_overhead > TRACE_OVERHEAD_CEILING {
+            failures.push(format!(
+                "scenario {}: disabled-tracing overhead {:.2}% exceeds {:.0}%",
+                c.name,
+                (c.trace_overhead - 1.0) * 100.0,
+                (TRACE_OVERHEAD_CEILING - 1.0) * 100.0
+            ));
+        }
+    }
     let (bg, cg) = (baseline.geomean_speedup(), current.geomean_speedup());
     if cg < bg * (1.0 - tol) {
         failures.push(format!(
@@ -271,6 +329,7 @@ mod tests {
             compile_us: 50.0,
             throughput_per_s: 1000.0,
             speedup,
+            trace_overhead: 0.0,
         }
     }
 
@@ -279,15 +338,49 @@ mod tests {
             label: "BENCH_TEST".into(),
             mode: "quick".into(),
             provenance: "unit test".into(),
+            provenance_kind: "measured".into(),
             scenarios: speedups.iter().map(|(n, s)| scenario(n, *s)).collect(),
         }
     }
 
     #[test]
     fn json_roundtrip_preserves_report() {
-        let r = report(&[("gemm", 4.0), ("attn", 6.5)]);
+        let mut r = report(&[("gemm", 4.0), ("attn", 6.5)]);
+        r.scenarios[0].trace_overhead = 1.00341;
         let back = BenchReport::from_json(&Json::parse(&pretty(&r.to_json())).unwrap()).unwrap();
         assert_eq!(back, r);
+    }
+
+    #[test]
+    fn provenance_kind_is_sniffed_from_legacy_records() {
+        // a pre-provenance_kind record: the field is absent from the JSON
+        let mut r = report(&[("gemm", 4.0)]);
+        r.provenance = "estimated: no toolchain on the authoring host".into();
+        let mut doc = r.to_json();
+        if let Json::Obj(fields) = &mut doc {
+            fields.retain(|(k, _)| k != "provenance_kind");
+        }
+        let back = BenchReport::from_json(&doc).unwrap();
+        assert_eq!(back.provenance_kind, "estimated");
+
+        r.provenance = "measured: tilelang bench on x86_64-linux".into();
+        let mut doc = r.to_json();
+        if let Json::Obj(fields) = &mut doc {
+            fields.retain(|(k, _)| k != "provenance_kind");
+        }
+        assert_eq!(BenchReport::from_json(&doc).unwrap().provenance_kind, "measured");
+    }
+
+    #[test]
+    fn trace_overhead_above_ceiling_is_a_regression() {
+        let base = report(&[("gemm", 4.0)]);
+        let mut cur = report(&[("gemm", 4.0)]);
+        cur.scenarios[0].trace_overhead = 1.01; // within the 2% ceiling
+        assert!(compare(&base, &cur, 0.20).is_empty());
+        cur.scenarios[0].trace_overhead = 1.05;
+        let fails = compare(&base, &cur, 0.20);
+        assert_eq!(fails.len(), 1, "{:?}", fails);
+        assert!(fails[0].contains("tracing overhead"), "{}", fails[0]);
     }
 
     #[test]

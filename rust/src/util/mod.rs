@@ -3,3 +3,4 @@
 
 pub mod bench;
 pub mod json;
+pub mod stats;

@@ -1,0 +1,175 @@
+//! Shared latency statistics: percentiles, summaries and histogram
+//! buckets.
+//!
+//! One implementation for every consumer of timing samples — the
+//! coordinator's serve summary, `serve::engine`'s per-phase p50/p99,
+//! `tilelang bench`, and the [`crate::obs`] metrics exporter — so the
+//! edge cases (empty slice, single sample, p0/p100, p > 100) are handled
+//! once and identically everywhere.
+
+/// Nearest-rank percentile over a **sorted** slice of microsecond
+/// samples. `p` is in percent; out-of-range values clamp (p <= 0 is the
+/// minimum, p >= 100 the maximum). An empty slice yields 0.
+pub fn percentile(sorted_us: &[u128], p: f64) -> u128 {
+    if sorted_us.is_empty() {
+        return 0;
+    }
+    let idx = ((sorted_us.len() as f64 - 1.0) * p.max(0.0) / 100.0).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// [`percentile`] over f64 samples (bench numbers, metrics samples).
+pub fn percentile_f64(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p.max(0.0) / 100.0).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Five-number-ish summary of a sample set.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p99: f64,
+}
+
+/// Summarize unsorted samples (sorts a copy; non-finite values are
+/// dropped so one NaN cannot poison a whole metrics dump).
+pub fn summarize(values: &[f64]) -> Summary {
+    let mut v: Vec<f64> = values.iter().copied().filter(|x| x.is_finite()).collect();
+    if v.is_empty() {
+        return Summary::default();
+    }
+    v.sort_by(|a, b| a.partial_cmp(b).expect("finite values"));
+    Summary {
+        count: v.len(),
+        sum: v.iter().sum(),
+        min: v[0],
+        max: v[v.len() - 1],
+        p50: percentile_f64(&v, 50.0),
+        p99: percentile_f64(&v, 99.0),
+    }
+}
+
+/// A fixed-bound histogram in the Prometheus style: `bounds` are the
+/// inclusive upper edges of the finite buckets; everything above the
+/// last bound lands in the implicit `+Inf` bucket.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// One count per finite bound, plus the trailing `+Inf` bucket.
+    counts: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Histogram {
+    /// A histogram over the given (ascending) finite bucket bounds.
+    pub fn new(bounds: Vec<f64>) -> Histogram {
+        let n = bounds.len();
+        Histogram {
+            bounds,
+            counts: vec![0; n + 1],
+            count: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Decade buckets from `lo` (>= 1) through `hi`: 10, 100, 1000, ...
+    /// — the right shape for microsecond latencies spanning orders of
+    /// magnitude.
+    pub fn decades(lo: f64, hi: f64) -> Histogram {
+        let mut bounds = Vec::new();
+        let mut b = lo.max(1.0);
+        while b <= hi {
+            bounds.push(b);
+            b *= 10.0;
+        }
+        Histogram::new(bounds)
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        if !v.is_finite() {
+            return;
+        }
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Cumulative `(upper_bound, count <= bound)` pairs, ending with the
+    /// `(+Inf, total)` bucket — exactly what a Prometheus text
+    /// `_bucket{le="..."}` series wants.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::with_capacity(self.counts.len());
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            let bound = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+            out.push((bound, acc));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_edge_cases() {
+        assert_eq!(percentile(&[], 50.0), 0);
+        let one = [7u128];
+        for p in [-5.0, 0.0, 50.0, 99.0, 100.0, 250.0] {
+            assert_eq!(percentile(&one, p), 7);
+        }
+        let v = [1u128, 2, 3, 4, 100];
+        assert_eq!(percentile(&v, 0.0), 1);
+        assert_eq!(percentile(&v, 50.0), 3);
+        assert_eq!(percentile(&v, 99.0), 100);
+        assert_eq!(percentile(&v, 100.0), 100);
+        // two elements: midpoint rounds to the upper rank
+        let two = [10u128, 20];
+        assert_eq!(percentile(&two, 49.0), 10);
+        assert_eq!(percentile(&two, 50.0), 20);
+    }
+
+    #[test]
+    fn summarize_handles_empty_singleton_and_nan() {
+        assert_eq!(summarize(&[]), Summary::default());
+        let s = summarize(&[42.0]);
+        assert_eq!((s.count, s.min, s.max, s.p50, s.p99), (1, 42.0, 42.0, 42.0, 42.0));
+        let s = summarize(&[1.0, f64::NAN, 3.0, f64::INFINITY]);
+        assert_eq!(s.count, 2);
+        assert_eq!(s.sum, 4.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn histogram_buckets_are_cumulative() {
+        let mut h = Histogram::decades(10.0, 10_000.0);
+        for v in [5.0, 15.0, 150.0, 1_500.0, 150_000.0] {
+            h.observe(v);
+        }
+        h.observe(f64::NAN); // dropped
+        assert_eq!(h.count, 5);
+        let cum = h.cumulative();
+        assert_eq!(cum.len(), 5); // 10, 100, 1k, 10k, +Inf
+        assert_eq!(cum[0], (10.0, 1));
+        assert_eq!(cum[1], (100.0, 2));
+        assert_eq!(cum[2], (1_000.0, 3));
+        assert_eq!(cum[3], (10_000.0, 4));
+        assert!(cum[4].0.is_infinite());
+        assert_eq!(cum[4].1, 5);
+    }
+}

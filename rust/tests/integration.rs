@@ -144,6 +144,24 @@ fn coordinator_batches_rows_and_matches_cpu_reference() {
             assert!((g - w).abs() < GOLDEN_TOL, "slot {slot} vs reference");
         }
         assert!(reply.batch_size >= 1 && reply.batch_size <= batch);
+        // regression: RowReply reports the same queue/exec split as
+        // KernelReply. A served row must have really executed, and the
+        // components cannot exceed the end-to-end latency (small slack:
+        // the three clocks are read at slightly different instants).
+        assert!(reply.exec_us > 0, "served row reports exec_us == 0");
+        assert!(
+            reply.queue_us <= reply.latency_us,
+            "queue {}us > latency {}us",
+            reply.queue_us,
+            reply.latency_us
+        );
+        assert!(
+            reply.queue_us + reply.exec_us <= reply.latency_us + 1_000,
+            "queue {}us + exec {}us inconsistent with latency {}us",
+            reply.queue_us,
+            reply.exec_us,
+            reply.latency_us
+        );
     }
     coord.shutdown();
 }

@@ -1,0 +1,233 @@
+//! Observability integration tests: the recorder driven through the
+//! real execution stack (sharded runtime, graph artifacts, the serving
+//! engine), the Chrome-trace/metrics exporters on files, and the VM
+//! instruction-class counters against their static shadow.
+//!
+//! Recorder mechanics in isolation (nesting, thread-buffer merging, the
+//! disabled fast path) are unit-tested in `obs::trace`; this file pins
+//! the contract the layers above rely on.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use tilelang::obs::{read_chrome_trace, write_chrome_trace, write_metrics, Event, Recorder};
+use tilelang::runtime::{artifacts, ExecBackend, InterpOptions, Runtime};
+use tilelang::serve::{Engine, EngineConfig, StreamSpec};
+use tilelang::shard::exec::ShardedOptions;
+
+/// One shared artifact directory per test binary (generation once).
+fn artifacts_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir =
+            std::env::temp_dir().join(format!("tilelang-obs-artifacts-{}", std::process::id()));
+        artifacts::generate_default_set(&dir).expect("generate artifacts");
+        dir
+    })
+    .clone()
+}
+
+fn compiled_backend() -> ExecBackend {
+    ExecBackend::Compiled(InterpOptions {
+        tune: false,
+        compiled: true,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn sharded_execution_records_balanced_scatter_compute_gather_spans() {
+    let dir = artifacts_dir();
+    let mut opts = ShardedOptions::new(2);
+    opts.interp.tune = false;
+    let mut rt = Runtime::with_backend(&dir, ExecBackend::Sharded(opts)).expect("runtime");
+    let rec = Recorder::enabled();
+    rt.set_recorder(rec.clone());
+    let name = "matmul_64x64x64";
+    let inputs = rt.example_inputs(name).expect("inputs");
+    rt.execute(name, &inputs).expect("sharded execute");
+
+    let events = rec.events();
+    let count = |n: &str| events.iter().filter(|e| e.name == n).count();
+    let runtime_spans: Vec<&Event> = events.iter().filter(|e| e.name == name).collect();
+    assert_eq!(runtime_spans.len(), 1, "one whole-request runtime span");
+    assert_eq!(count("scatter"), 1);
+    assert_eq!(count("gather"), 1);
+    let computes: Vec<&Event> = events.iter().filter(|e| e.name == "compute").collect();
+    assert_eq!(computes.len(), 2, "one compute span per shard");
+
+    // spans balance: every shard-phase span nests inside the runtime
+    // span's interval, and the scoped shard threads get distinct lanes
+    let outer = runtime_spans[0];
+    let end = outer.ts_us + outer.dur_us;
+    for ev in events.iter().filter(|e| e.cat == "shard") {
+        assert!(
+            ev.ts_us >= outer.ts_us - 1.0 && ev.ts_us + ev.dur_us <= end + 1.0,
+            "{} span [{}, {}] escapes the runtime span [{}, {}]",
+            ev.name,
+            ev.ts_us,
+            ev.ts_us + ev.dur_us,
+            outer.ts_us,
+            end
+        );
+    }
+    assert_ne!(computes[0].tid, computes[1].tid, "shard threads get their own lanes");
+    let shard_ids: Vec<&str> = computes
+        .iter()
+        .filter_map(|e| e.args.iter().find(|(k, _)| k == "shard").map(|(_, v)| v.as_str()))
+        .collect();
+    assert_eq!(shard_ids.len(), 2, "compute spans carry their shard index");
+}
+
+#[test]
+fn default_runtime_recorder_is_disabled_and_records_nothing() {
+    let dir = artifacts_dir();
+    let rt = Runtime::with_backend(&dir, compiled_backend()).expect("runtime");
+    let name = "matmul_64x64x64";
+    let inputs = rt.example_inputs(name).expect("inputs");
+    rt.execute(name, &inputs).expect("execute");
+    assert!(!rt.recorder().is_enabled());
+    assert!(rt.recorder().events().is_empty());
+    assert!(rt.recorder().counters().is_empty());
+    assert!(rt.recorder().samples().is_empty());
+}
+
+#[test]
+fn vm_counters_match_the_graph_kernels_static_shadow() {
+    let dir = artifacts_dir();
+    let mut rt = Runtime::with_backend(&dir, compiled_backend()).expect("runtime");
+    let rec = Recorder::enabled();
+    rt.set_recorder(rec.clone());
+    let name = "mlp_block_64x64x128";
+    let inputs = rt.example_inputs(name).expect("inputs");
+    rt.execute(name, &inputs).expect("graph execute");
+
+    let loaded = rt.load(name).expect("load");
+    let shadow = loaded.graph_kernel().expect("graph artifact").op_counts();
+    let counters = rec.counters();
+    let recorded = |key: &str| -> u64 {
+        counters
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    };
+    let mut saw_nonzero = false;
+    for (key, want) in shadow.items() {
+        assert_eq!(
+            recorded(key),
+            want,
+            "counter {} diverged from the static shadow",
+            key
+        );
+        saw_nonzero |= want > 0;
+    }
+    assert!(saw_nonzero, "a compiled GEMM graph must move tiles and bytes");
+
+    // a second execution doubles every nonzero counter: the totals are
+    // per-execution deltas, not a static snapshot re-added on load
+    rt.execute(name, &inputs).expect("second execute");
+    let counters = rt.recorder().counters();
+    for (key, want) in shadow.items() {
+        let got = counters
+            .iter()
+            .find(|(k, _)| k.as_str() == key)
+            .map(|(_, v)| *v)
+            .unwrap_or(0);
+        assert_eq!(got, want * 2, "counter {} after two executions", key);
+    }
+}
+
+#[test]
+fn serve_trace_and_metrics_round_trip_through_files() {
+    let rec = Recorder::enabled();
+    let mut eng = Engine::new(EngineConfig {
+        page_rows: 4,
+        pool_pages: 32,
+        compiled: true,
+        ..Default::default()
+    })
+    .expect("engine");
+    eng.set_recorder(rec.clone());
+    let specs: Vec<StreamSpec> = (0..3)
+        .map(|i| StreamSpec {
+            id: i + 1,
+            arrival_step: i as usize,
+            prefill_rows: 2 + i as usize,
+            decode_steps: 2,
+        })
+        .collect();
+    eng.run(&specs).expect("engine run");
+
+    let tmp = std::env::temp_dir().join(format!("tilelang-obs-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).expect("tmp dir");
+    let trace_path = tmp.join("trace.json");
+    let metrics_path = tmp.join("metrics.txt");
+    write_chrome_trace(&rec, &trace_path).expect("write trace");
+    write_metrics(&rec, &metrics_path).expect("write metrics");
+
+    let text = std::fs::read_to_string(&trace_path).expect("read trace");
+    let back = read_chrome_trace(&text).expect("parse trace");
+    let orig = rec.events();
+    assert!(!orig.is_empty());
+    assert_eq!(back.len(), orig.len(), "every span survives the file round-trip");
+    for (b, o) in back.iter().zip(&orig) {
+        assert_eq!((b.name.as_str(), b.cat.as_str(), b.tid), (o.name.as_str(), o.cat.as_str(), o.tid));
+        assert!((b.dur_us - o.dur_us).abs() < 1e-6);
+    }
+    for phase in ["admit", "prefill", "decode", "gather"] {
+        assert!(
+            back.iter().any(|e| e.cat == "serve" && e.name == phase),
+            "missing serve phase span {}",
+            phase
+        );
+    }
+    assert!(
+        back.iter().any(|e| e.cat == "graph"),
+        "decode graph nodes must appear as graph spans"
+    );
+
+    let metrics = std::fs::read_to_string(&metrics_path).expect("read metrics");
+    for family in [
+        "# TYPE tilelang_serve_decode_us histogram",
+        "tilelang_serve_pool_pages",
+        "tilelang_serve_batch_size",
+    ] {
+        assert!(metrics.contains(family), "metrics dump missing {}:\n{}", family, metrics);
+    }
+    let _ = std::fs::remove_dir_all(&tmp);
+}
+
+#[test]
+fn enabling_tracing_does_not_change_decode_bits() {
+    let cfg = EngineConfig {
+        page_rows: 4,
+        pool_pages: 32,
+        compiled: true,
+        ..Default::default()
+    };
+    let specs: Vec<StreamSpec> = (0..3)
+        .map(|i| StreamSpec {
+            id: i + 1,
+            arrival_step: 0,
+            prefill_rows: 3,
+            decode_steps: 2,
+        })
+        .collect();
+    let mut plain = Engine::new(cfg.clone()).expect("engine");
+    let baseline = plain.run(&specs).expect("run");
+    let mut traced = Engine::new(cfg).expect("engine");
+    traced.set_recorder(Recorder::enabled());
+    let report = traced.run(&specs).expect("traced run");
+    for sp in &specs {
+        let (a, b) = (&baseline.outputs[&sp.id], &report.outputs[&sp.id]);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                x.iter().zip(y).all(|(p, q)| p.to_bits() == q.to_bits()),
+                "stream {}: tracing changed decode bits",
+                sp.id
+            );
+        }
+    }
+}
