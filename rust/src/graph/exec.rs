@@ -19,7 +19,7 @@ use crate::graph::fuse::{self, FusedEdge};
 use crate::graph::ir::{GraphNode, KernelGraph, NodeOp, ValueRef};
 use crate::graph::memplan::{self, MemPlan};
 use crate::ir::program::TileProgram;
-use crate::obs::Recorder;
+use crate::obs::{Recorder, Traffic};
 use crate::runtime::interp_backend::{
     attention_config, decode_config, dequant_config, gemm_config, paged_decode_config,
     InterpKernel,
@@ -141,6 +141,23 @@ pub(crate) fn node_program(
             other.tag()
         ),
     }
+}
+
+/// Data-movement accounting for an element-wise node: `reference_apply`
+/// streams every input once from DRAM, writes the output once, and
+/// spends one flop per output element. One fixed formula used by both
+/// the static shadow ([`GraphKernel::node_traffic`]) and the dynamic
+/// recording in `execute_all_refs_rec`, so the two agree by
+/// construction (kernel nodes get the real static-vs-dynamic cross
+/// check from `tir`).
+pub(crate) fn elementwise_traffic(node: &GraphNode) -> Traffic {
+    let mut t = Traffic::default();
+    for s in &node.in_shapes {
+        t.dram_rd_bytes += 4 * s.iter().product::<i64>() as u64;
+    }
+    t.dram_wr_bytes += 4 * node.out_len() as u64;
+    t.flops += node.out_len() as u64;
+    t
 }
 
 /// A kernel node viewed as a single-kernel artifact spec (shape
@@ -327,6 +344,63 @@ impl GraphKernel {
         oc
     }
 
+    /// Per-node static data-movement shadow, execution order — fused
+    /// epilogues are attributed to their producer node because they
+    /// execute inside its lowered program. Kernel nodes carry their
+    /// `CompiledProgram::traffic` shadow (`None` on the tree-walking
+    /// interp, which counts dynamically instead); element-wise nodes use
+    /// the fixed [`elementwise_traffic`] formula.
+    pub fn node_traffic(&self) -> Vec<(String, Option<Traffic>)> {
+        self.graph
+            .nodes
+            .iter()
+            .zip(&self.kernels)
+            .map(|(node, kernel)| {
+                let t = match kernel {
+                    Some(k) => k.traffic(),
+                    None => Some(elementwise_traffic(node)),
+                };
+                (node.name.clone(), t)
+            })
+            .collect()
+    }
+
+    /// Whole-graph static data-movement shadow: the sum of every
+    /// resolvable [`GraphKernel::node_traffic`] row. On the compiled
+    /// backend this equals the `traffic.*` counters one recorded
+    /// execution adds.
+    pub fn traffic(&self) -> Traffic {
+        let mut t = Traffic::default();
+        for (_, node) in self.node_traffic() {
+            if let Some(nt) = node {
+                t.merge(&nt);
+            }
+        }
+        t
+    }
+
+    /// Per-node `(name, modeled DRAM bytes)` predictions from the cost
+    /// model — the denominators of `tilelang roofline`'s calibration
+    /// column. Element-wise nodes use the fusion planner's streaming
+    /// model (every input read once, the output written once).
+    pub fn node_modeled_bytes(&self) -> Vec<(String, Option<f64>)> {
+        self.graph
+            .nodes
+            .iter()
+            .zip(&self.kernels)
+            .map(|(node, kernel)| {
+                let b = match kernel {
+                    Some(k) => k.modeled_dram_bytes(&self.device),
+                    None => {
+                        let t = elementwise_traffic(node);
+                        Some((t.dram_rd_bytes + t.dram_wr_bytes) as f64)
+                    }
+                };
+                (node.name.clone(), b)
+            })
+            .collect()
+    }
+
     /// Whether batched *row* serving is sound for this graph (every
     /// output row depends only on the matching row of input 0 — see
     /// [`KernelGraph::row_batchable`]). The coordinator's model workers
@@ -441,9 +515,9 @@ impl GraphKernel {
                 }
                 args
             });
-            let out = match (&self.kernels[i], &node.op) {
+            let (out, traffic) = match (&self.kernels[i], &node.op) {
                 (Some(kernel), _) => kernel
-                    .execute_into(&ops, storage)
+                    .execute_into_traffic(&ops, storage)
                     .map_err(|e| anyhow!("{}: {}", node.name, e))?,
                 (None, NodeOp::Elementwise(op)) => {
                     let mut out = storage;
@@ -451,7 +525,7 @@ impl GraphKernel {
                     out.extend_from_slice(ops[0]);
                     reference_apply(op, &mut out, ops.get(1).copied(), &node.out_shape)
                         .map_err(|e| anyhow!("{}: {}", node.name, e))?;
-                    out
+                    (out, elementwise_traffic(node))
                 }
                 (None, NodeOp::Kernel(_)) => {
                     bail!("{}: kernel node was not prepared", node.name)
@@ -465,6 +539,9 @@ impl GraphKernel {
                             rec.add(name, v);
                         }
                     }
+                }
+                for (name, v) in traffic.items() {
+                    rec.add(name, v);
                 }
             }
             drop(ops);

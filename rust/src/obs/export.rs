@@ -18,8 +18,9 @@ use crate::util::json::Json;
 use crate::util::stats::{summarize, Histogram};
 
 /// The Chrome trace-event document for everything the recorder holds.
-/// Spans become `ph: "X"` (complete) events; counters ride along as one
-/// `ph: "C"` event each so they show as counter tracks.
+/// Spans become `ph: "X"` (complete) events; every counter increment
+/// becomes a `ph: "C"` event carrying the running total at that
+/// moment, so counters render as real (monotonic) tracks over time.
 pub fn chrome_trace(rec: &Recorder) -> Json {
     let mut events: Vec<Json> = vec![Json::Obj(vec![
         ("name".into(), Json::Str("process_name".into())),
@@ -30,9 +31,7 @@ pub fn chrome_trace(rec: &Recorder) -> Json {
             Json::Obj(vec![("name".into(), Json::Str("tilelang".into()))]),
         ),
     ])];
-    let mut last_ts = 0.0f64;
     for ev in rec.events() {
-        last_ts = last_ts.max(ev.ts_us + ev.dur_us);
         events.push(Json::Obj(vec![
             ("name".into(), Json::Str(ev.name.clone())),
             ("cat".into(), Json::Str(ev.cat.clone())),
@@ -52,15 +51,18 @@ pub fn chrome_trace(rec: &Recorder) -> Json {
             ),
         ]));
     }
-    for (name, value) in rec.counters() {
+    let mut totals: BTreeMap<String, u64> = BTreeMap::new();
+    for pt in rec.counter_points() {
+        let total = totals.entry(pt.name.clone()).or_insert(0);
+        *total += pt.delta;
         events.push(Json::Obj(vec![
-            ("name".into(), Json::Str(name.clone())),
+            ("name".into(), Json::Str(pt.name.clone())),
             ("ph".into(), Json::Str("C".into())),
             ("pid".into(), Json::Num(1.0)),
-            ("ts".into(), Json::Num(last_ts)),
+            ("ts".into(), Json::Num(pt.ts_us)),
             (
                 "args".into(),
-                Json::Obj(vec![("value".into(), Json::Num(value as f64))]),
+                Json::Obj(vec![("value".into(), Json::Num(*total as f64))]),
             ),
         ]));
     }
@@ -130,7 +132,44 @@ pub fn read_chrome_trace(text: &str) -> Result<Vec<Event>, String> {
     Ok(out)
 }
 
+/// Parse the `ph: "C"` counter events out of a Chrome trace document:
+/// `(counter name, ts µs, running total)` in document order. Used by
+/// `tilelang check-trace` to validate that every counter track is
+/// monotonically non-decreasing.
+pub fn read_chrome_counters(text: &str) -> Result<Vec<(String, f64, f64)>, String> {
+    let doc = Json::parse(text)?;
+    let events = doc
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .ok_or("trace: missing traceEvents array")?;
+    let mut out = Vec::new();
+    for (i, ev) in events.iter().enumerate() {
+        if ev.get("ph").and_then(|v| v.as_str()) != Some("C") {
+            continue;
+        }
+        let name = ev
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("trace counter event {}: missing name", i))?
+            .to_string();
+        let ts = ev
+            .get("ts")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("trace counter event {}: missing ts", i))?;
+        let value = ev
+            .get("args")
+            .and_then(|a| a.get("value"))
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("trace counter event {}: missing args.value", i))?;
+        out.push((name, ts, value));
+    }
+    Ok(out)
+}
+
 /// A metric-safe name: `serve.decode` -> `tilelang_serve_decode`.
+/// Every character outside `[a-zA-Z0-9_]` (dots, dashes, spaces,
+/// unicode) is replaced with `_` so the result is always a valid
+/// Prometheus metric name.
 fn metric_name(raw: &str) -> String {
     let mut out = String::from("tilelang_");
     for c in raw.chars() {
@@ -138,6 +177,22 @@ fn metric_name(raw: &str) -> String {
             out.push(c);
         } else {
             out.push('_');
+        }
+    }
+    out
+}
+
+/// Escape a label value per the Prometheus exposition format:
+/// backslash, double-quote and newline must be escaped inside the
+/// quoted label string.
+fn escape_label_value(raw: &str) -> String {
+    let mut out = String::with_capacity(raw.len());
+    for c in raw.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
         }
     }
     out
@@ -164,7 +219,13 @@ fn write_series(out: &mut String, name: &str, values: &[f64]) {
         } else {
             fmt_f64(bound)
         };
-        let _ = writeln!(out, "{}_bucket{{le=\"{}\"}} {}", name, le, count);
+        let _ = writeln!(
+            out,
+            "{}_bucket{{le=\"{}\"}} {}",
+            name,
+            escape_label_value(&le),
+            count
+        );
     }
     let _ = writeln!(out, "{}_sum {}", name, fmt_f64(s.sum));
     let _ = writeln!(out, "{}_count {}", name, s.count);
@@ -261,6 +322,62 @@ mod tests {
         assert!(text.contains("tilelang_serve_decode_us_bucket{le=\"+Inf\"} 1"), "{}", text);
         assert!(text.contains("tilelang_serve_pool_pages_count 2"), "{}", text);
         assert!(text.contains("tilelang_serve_pool_pages_p99 20"), "{}", text);
+    }
+
+    #[test]
+    fn counter_tracks_carry_running_totals_per_add() {
+        let rec = Recorder::enabled();
+        rec.add("traffic.flops", 10);
+        rec.add("traffic.flops", 5);
+        rec.add("vm.gemm_tiles", 2);
+        let text = chrome_trace(&rec).dump();
+        let pts = read_chrome_counters(&text).expect("parse counters");
+        let flops: Vec<&(String, f64, f64)> =
+            pts.iter().filter(|(n, _, _)| n == "traffic.flops").collect();
+        assert_eq!(flops.len(), 2, "one C event per add");
+        assert_eq!(flops[0].2, 10.0);
+        assert_eq!(flops[1].2, 15.0, "C events carry the running total");
+        assert!(flops[0].1 <= flops[1].1, "points in timestamp order");
+        assert_eq!(
+            pts.iter().filter(|(n, _, _)| n == "vm.gemm_tiles").count(),
+            1
+        );
+        // the span reader still skips C events
+        assert!(read_chrome_trace(&text).expect("parse spans").is_empty());
+    }
+
+    #[test]
+    fn exposition_format_is_pinned_for_hostile_names_and_labels() {
+        // metric names: every invalid char ('.', '-', space, unicode)
+        // sanitizes to '_'
+        let rec = Recorder::enabled();
+        rec.add("traffic.dram_rd_bytes", 7);
+        rec.add("weird-name with µchars", 1);
+        let text = metrics_text(&rec);
+        assert!(
+            text.contains("# TYPE tilelang_traffic_dram_rd_bytes_total counter\ntilelang_traffic_dram_rd_bytes_total 7"),
+            "{}",
+            text
+        );
+        assert!(
+            text.contains("tilelang_weird_name_with__chars_total 1"),
+            "{}",
+            text
+        );
+        // only [a-zA-Z0-9_] survives in metric names
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let name = line.split([' ', '{']).next().unwrap();
+            assert!(
+                name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+                "unsanitized metric name {:?}",
+                name
+            );
+        }
+        // label values: exposition-format escapes
+        assert_eq!(escape_label_value("plain"), "plain");
+        assert_eq!(escape_label_value("a\"b"), "a\\\"b");
+        assert_eq!(escape_label_value("a\\b"), "a\\\\b");
+        assert_eq!(escape_label_value("a\nb"), "a\\nb");
     }
 
     #[test]

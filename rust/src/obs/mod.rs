@@ -34,11 +34,20 @@
 //! buckets per span family and sample series). `tilelang profile`
 //! joins the measured spans against `sim::simulate_kernel` predictions
 //! into the model-vs-measured table; see `docs/OBSERVABILITY.md`.
+//!
+//! [`traffic`] is the data-movement half: per-tier byte/FLOP counters
+//! ([`Traffic`]) that the compiled VM derives statically and the
+//! interpreter counts dynamically — bit-identical by construction —
+//! surfaced as `traffic.*` recorder counters and joined with measured
+//! span times and `sim::device` peaks by `tilelang roofline`.
 
 mod export;
 mod trace;
+pub mod traffic;
 
 pub use export::{
-    chrome_trace, metrics_text, read_chrome_trace, write_chrome_trace, write_metrics,
+    chrome_trace, metrics_text, read_chrome_counters, read_chrome_trace, write_chrome_trace,
+    write_metrics,
 };
-pub use trace::{Event, Recorder, Span, ThreadBuf};
+pub use trace::{CounterPoint, Event, Recorder, Span, ThreadBuf};
+pub use traffic::{bound_label, Tier, Traffic};

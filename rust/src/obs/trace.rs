@@ -35,10 +35,22 @@ pub struct Event {
     pub args: Vec<(String, String)>,
 }
 
+/// One counter increment: which counter, when (µs from the recorder
+/// epoch), and by how much. The Chrome exporter turns the per-name
+/// point sequence into a counter *track* (running totals over time), so
+/// `tilelang check-trace` can validate monotonicity.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CounterPoint {
+    pub name: String,
+    pub ts_us: f64,
+    pub delta: u64,
+}
+
 struct Inner {
     epoch: Instant,
     events: Mutex<Vec<Event>>,
     counters: Mutex<BTreeMap<String, u64>>,
+    counter_points: Mutex<Vec<CounterPoint>>,
     samples: Mutex<BTreeMap<String, Vec<f64>>>,
 }
 
@@ -59,6 +71,7 @@ impl Recorder {
                 epoch: Instant::now(),
                 events: Mutex::new(Vec::new()),
                 counters: Mutex::new(BTreeMap::new()),
+                counter_points: Mutex::new(Vec::new()),
                 samples: Mutex::new(BTreeMap::new()),
             })),
         }
@@ -102,12 +115,25 @@ impl Recorder {
         }
     }
 
-    /// Add to a named monotonic counter.
+    /// Add to a named monotonic counter. Each nonzero add also records
+    /// a timestamped [`CounterPoint`], so exported counter tracks show
+    /// *when* the counting happened, not just the final total.
     pub fn add(&self, name: &str, delta: u64) {
         if let Some(inner) = &self.inner {
             if delta > 0 {
+                let ts_us = Instant::now().duration_since(inner.epoch).as_secs_f64() * 1e6;
                 let mut c = inner.counters.lock().expect("obs counters lock");
                 *c.entry(name.to_string()).or_insert(0) += delta;
+                drop(c);
+                inner
+                    .counter_points
+                    .lock()
+                    .expect("obs counter points lock")
+                    .push(CounterPoint {
+                        name: name.to_string(),
+                        ts_us,
+                        delta,
+                    });
             }
         }
     }
@@ -142,6 +168,24 @@ impl Recorder {
                 let mut ev = inner.events.lock().expect("obs events lock").clone();
                 ev.sort_by(|a, b| a.ts_us.partial_cmp(&b.ts_us).expect("finite ts"));
                 ev
+            }
+        }
+    }
+
+    /// Every counter increment in timestamp order (name ties keep
+    /// record order). Running per-name totals over this sequence are
+    /// non-decreasing by construction (deltas are unsigned).
+    pub fn counter_points(&self) -> Vec<CounterPoint> {
+        match &self.inner {
+            None => Vec::new(),
+            Some(inner) => {
+                let mut pts = inner
+                    .counter_points
+                    .lock()
+                    .expect("obs counter points lock")
+                    .clone();
+                pts.sort_by(|a, b| a.ts_us.partial_cmp(&b.ts_us).expect("finite ts"));
+                pts
             }
         }
     }
@@ -256,7 +300,7 @@ impl Drop for Span {
 pub struct ThreadBuf {
     inner: Option<Arc<Inner>>,
     events: Vec<Event>,
-    counters: Vec<(String, u64)>,
+    counters: Vec<CounterPoint>,
 }
 
 impl ThreadBuf {
@@ -290,9 +334,18 @@ impl ThreadBuf {
     }
 
     /// Add to a named counter (merged with the recorder's at finish).
+    /// The increment is timestamped now, so the exported counter track
+    /// reflects when the work happened, not when the buffer merged.
     pub fn add(&mut self, name: &str, delta: u64) {
-        if self.inner.is_some() && delta > 0 {
-            self.counters.push((name.to_string(), delta));
+        if let Some(inner) = &self.inner {
+            if delta > 0 {
+                let ts_us = Instant::now().duration_since(inner.epoch).as_secs_f64() * 1e6;
+                self.counters.push(CounterPoint {
+                    name: name.to_string(),
+                    ts_us,
+                    delta,
+                });
+            }
         }
     }
 }
@@ -309,9 +362,15 @@ impl Drop for ThreadBuf {
             }
             if !self.counters.is_empty() {
                 let mut c = inner.counters.lock().expect("obs counters lock");
-                for (name, delta) in self.counters.drain(..) {
-                    *c.entry(name).or_insert(0) += delta;
+                for pt in &self.counters {
+                    *c.entry(pt.name.clone()).or_insert(0) += pt.delta;
                 }
+                drop(c);
+                inner
+                    .counter_points
+                    .lock()
+                    .expect("obs counter points lock")
+                    .append(&mut self.counters);
             }
         }
     }
@@ -337,6 +396,7 @@ mod tests {
         drop(tb);
         assert!(rec.events().is_empty());
         assert!(rec.counters().is_empty());
+        assert!(rec.counter_points().is_empty());
         assert!(rec.samples().is_empty());
     }
 
@@ -368,6 +428,12 @@ mod tests {
         assert!(ev[1].ts_us + ev[1].dur_us <= ev[0].ts_us + ev[0].dur_us + 1.0);
 
         assert_eq!(rec.counters(), vec![("hits".to_string(), 5)]);
+        // every nonzero add leaves a timestamped point, in ts order
+        let pts = rec.counter_points();
+        assert_eq!(pts.len(), 2);
+        assert_eq!((pts[0].name.as_str(), pts[0].delta), ("hits", 2));
+        assert_eq!((pts[1].name.as_str(), pts[1].delta), ("hits", 3));
+        assert!(pts[0].ts_us <= pts[1].ts_us);
         assert_eq!(rec.samples(), vec![("occupancy".to_string(), vec![4.0, 6.0])]);
         assert_eq!(rec.span_durations_us("inner").len(), 1);
     }
@@ -394,5 +460,6 @@ mod tests {
         let tids: std::collections::HashSet<u64> = ev.iter().map(|e| e.tid).collect();
         assert_eq!(tids.len(), 4, "each scoped thread gets its own lane");
         assert_eq!(rec.counters(), vec![("tiles".to_string(), 40)]);
+        assert_eq!(rec.counter_points().len(), 4, "one point per thread add");
     }
 }

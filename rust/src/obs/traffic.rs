@@ -1,0 +1,268 @@
+//! Data-movement accounting: per-tier byte and FLOP counters.
+//!
+//! The paper's framing is that AI kernels are dataflow over tiles moving
+//! between DRAM, shared memory and register fragments — this module is
+//! the common vocabulary both execution backends use to *count* that
+//! movement. [`Traffic`] holds read/write bytes per tier plus FLOPs; the
+//! compiled VM produces one from a static shadow pass over its bytecode
+//! (`CompiledProgram::traffic`), the tree-walking interpreter counts the
+//! identical quantities dynamically as it executes
+//! (`Interp::run_traffic`), and the two must agree bit-exactly — the
+//! accounting is defined on *logical* per-instruction extents (guards
+//! and replication ignored), which both backends share by construction.
+//!
+//! Counting conventions (one entry per executed instruction):
+//!
+//! * `Copy` — src-tier read + dst-tier write of `4 * count` bytes,
+//!   `count` the product of the destination region's extents.
+//! * `Gemm` m×n×k — A-tier read `4mk`, B-tier read `4nk`, fragment
+//!   read+write `4mn` each (the accumulator is read-modify-write),
+//!   `2mnk` FLOPs.
+//! * `Reduce` — fragment read `4·out·red` (+`4·out` when accumulating
+//!   into live values), fragment write `4·out`, `out·red` FLOPs.
+//! * `Dequant` — packed-tier read `4·rows·ceil(cols/epb)`, scale-tier
+//!   read `4·rows·ceil(cols/group)` when scaled, fragment write
+//!   `4·rows·cols`, `rows·cols` FLOPs.
+//! * `Atomic` — src-tier read, dst-tier read *and* write (read-modify-
+//!   write) of `4 * count` bytes each, `count` FLOPs.
+//! * `Elems` — per statement: each surviving load reads `4·total`
+//!   bytes from its tier, the destination is written `4·total` bytes,
+//!   and FLOPs are `total ×` the statement's arithmetic tape ops
+//!   (constant-folded subtrees cost nothing, a select with a static
+//!   condition keeps only the taken branch — exactly the compiled
+//!   tape's folding rules).
+//! * `Fill` — a write of the buffer's whole storage (`4·cells·slots`).
+//!   Block-start arena zeroing is *not* counted: it is allocation, not
+//!   data movement.
+//!
+//! The roofline helpers at the bottom turn a [`Traffic`] plus a
+//! measured span time and a `sim::device` peak pair into arithmetic
+//! intensity, achieved-vs-peak rates, and a memory-/compute-bound
+//! verdict — the math behind `tilelang roofline`.
+
+/// A memory tier, as both backends classify buffer storage: global
+/// params live in DRAM, on-chip buffers are shared memory or register
+/// fragments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    Dram,
+    Shared,
+    Fragment,
+}
+
+/// Byte/FLOP totals per tier. All counts follow the logical-extent
+/// conventions in the module doc, so the compiled static shadow and the
+/// interpreter's dynamic count are equal by construction.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Traffic {
+    pub dram_rd_bytes: u64,
+    pub dram_wr_bytes: u64,
+    pub shared_rd_bytes: u64,
+    pub shared_wr_bytes: u64,
+    pub frag_rd_bytes: u64,
+    pub frag_wr_bytes: u64,
+    pub flops: u64,
+}
+
+impl Traffic {
+    /// The recorder counter names, in `items()` order.
+    pub const COUNTER_NAMES: [&'static str; 7] = [
+        "traffic.dram_rd_bytes",
+        "traffic.dram_wr_bytes",
+        "traffic.shared_rd_bytes",
+        "traffic.shared_wr_bytes",
+        "traffic.frag_rd_bytes",
+        "traffic.frag_wr_bytes",
+        "traffic.flops",
+    ];
+
+    /// `(counter name, value)` pairs for the recorder.
+    pub fn items(&self) -> [(&'static str, u64); 7] {
+        [
+            (Self::COUNTER_NAMES[0], self.dram_rd_bytes),
+            (Self::COUNTER_NAMES[1], self.dram_wr_bytes),
+            (Self::COUNTER_NAMES[2], self.shared_rd_bytes),
+            (Self::COUNTER_NAMES[3], self.shared_wr_bytes),
+            (Self::COUNTER_NAMES[4], self.frag_rd_bytes),
+            (Self::COUNTER_NAMES[5], self.frag_wr_bytes),
+            (Self::COUNTER_NAMES[6], self.flops),
+        ]
+    }
+
+    /// Rebuild a `Traffic` from recorder counter totals (ignores
+    /// non-`traffic.*` names).
+    pub fn from_counters(counters: &[(String, u64)]) -> Traffic {
+        let mut t = Traffic::default();
+        for (name, v) in counters {
+            match name.as_str() {
+                "traffic.dram_rd_bytes" => t.dram_rd_bytes = *v,
+                "traffic.dram_wr_bytes" => t.dram_wr_bytes = *v,
+                "traffic.shared_rd_bytes" => t.shared_rd_bytes = *v,
+                "traffic.shared_wr_bytes" => t.shared_wr_bytes = *v,
+                "traffic.frag_rd_bytes" => t.frag_rd_bytes = *v,
+                "traffic.frag_wr_bytes" => t.frag_wr_bytes = *v,
+                "traffic.flops" => t.flops = *v,
+                _ => {}
+            }
+        }
+        t
+    }
+
+    pub fn merge(&mut self, o: &Traffic) {
+        self.dram_rd_bytes += o.dram_rd_bytes;
+        self.dram_wr_bytes += o.dram_wr_bytes;
+        self.shared_rd_bytes += o.shared_rd_bytes;
+        self.shared_wr_bytes += o.shared_wr_bytes;
+        self.frag_rd_bytes += o.frag_rd_bytes;
+        self.frag_wr_bytes += o.frag_wr_bytes;
+        self.flops += o.flops;
+    }
+
+    pub fn add_rd(&mut self, tier: Tier, bytes: u64) {
+        match tier {
+            Tier::Dram => self.dram_rd_bytes += bytes,
+            Tier::Shared => self.shared_rd_bytes += bytes,
+            Tier::Fragment => self.frag_rd_bytes += bytes,
+        }
+    }
+
+    pub fn add_wr(&mut self, tier: Tier, bytes: u64) {
+        match tier {
+            Tier::Dram => self.dram_wr_bytes += bytes,
+            Tier::Shared => self.shared_wr_bytes += bytes,
+            Tier::Fragment => self.frag_wr_bytes += bytes,
+        }
+    }
+
+    /// Total DRAM bytes (read + write) — the roofline denominator.
+    pub fn dram_bytes(&self) -> u64 {
+        self.dram_rd_bytes + self.dram_wr_bytes
+    }
+
+    /// Bytes across every tier, reads and writes.
+    pub fn total_bytes(&self) -> u64 {
+        self.dram_bytes()
+            + self.shared_rd_bytes
+            + self.shared_wr_bytes
+            + self.frag_rd_bytes
+            + self.frag_wr_bytes
+    }
+
+    pub fn is_zero(&self) -> bool {
+        *self == Traffic::default()
+    }
+
+    /// Arithmetic intensity: FLOPs per DRAM byte. Zero DRAM traffic
+    /// with nonzero FLOPs is `inf` (fully resident — never
+    /// memory-bound); zero FLOPs is 0.
+    pub fn arith_intensity(&self) -> f64 {
+        let b = self.dram_bytes();
+        if b == 0 {
+            if self.flops > 0 {
+                f64::INFINITY
+            } else {
+                0.0
+            }
+        } else {
+            self.flops as f64 / b as f64
+        }
+    }
+
+    /// Achieved DRAM bandwidth in GB/s over a measured span time.
+    pub fn achieved_dram_gbps(&self, time_us: f64) -> f64 {
+        if time_us <= 0.0 {
+            return 0.0;
+        }
+        self.dram_bytes() as f64 / 1e9 / (time_us / 1e6)
+    }
+
+    /// Achieved compute rate in TFLOP/s over a measured span time.
+    pub fn achieved_tflops(&self, time_us: f64) -> f64 {
+        if time_us <= 0.0 {
+            return 0.0;
+        }
+        self.flops as f64 / 1e12 / (time_us / 1e6)
+    }
+}
+
+/// The roofline verdict: a unit whose arithmetic intensity sits below
+/// the device ridge point (`peak FLOP/s ÷ peak DRAM B/s`) is limited by
+/// memory bandwidth, above it by compute throughput.
+pub fn bound_label(arith_intensity: f64, ridge_flops_per_byte: f64) -> &'static str {
+    if arith_intensity < ridge_flops_per_byte {
+        "memory-bound"
+    } else {
+        "compute-bound"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Traffic {
+        Traffic {
+            dram_rd_bytes: 100,
+            dram_wr_bytes: 28,
+            shared_rd_bytes: 7,
+            shared_wr_bytes: 5,
+            frag_rd_bytes: 3,
+            frag_wr_bytes: 2,
+            flops: 640,
+        }
+    }
+
+    #[test]
+    fn items_round_trip_through_counters() {
+        let t = sample();
+        let counters: Vec<(String, u64)> = t
+            .items()
+            .iter()
+            .map(|(k, v)| (k.to_string(), *v))
+            .collect();
+        assert_eq!(Traffic::from_counters(&counters), t);
+        // foreign counters are ignored
+        let mut with_noise = counters.clone();
+        with_noise.push(("vm.gemm_tiles".into(), 9));
+        assert_eq!(Traffic::from_counters(&with_noise), t);
+    }
+
+    #[test]
+    fn merge_and_tier_adds_accumulate() {
+        let mut t = sample();
+        t.merge(&sample());
+        assert_eq!(t.dram_bytes(), 2 * 128);
+        assert_eq!(t.flops, 1280);
+        let mut u = Traffic::default();
+        u.add_rd(Tier::Dram, 8);
+        u.add_wr(Tier::Shared, 4);
+        u.add_rd(Tier::Fragment, 2);
+        assert_eq!(u.dram_rd_bytes, 8);
+        assert_eq!(u.shared_wr_bytes, 4);
+        assert_eq!(u.frag_rd_bytes, 2);
+        assert!(!u.is_zero());
+        assert!(Traffic::default().is_zero());
+    }
+
+    #[test]
+    fn arith_intensity_handles_empty_denominators() {
+        assert_eq!(sample().arith_intensity(), 640.0 / 128.0);
+        let resident = Traffic {
+            flops: 10,
+            ..Traffic::default()
+        };
+        assert!(resident.arith_intensity().is_infinite());
+        assert_eq!(Traffic::default().arith_intensity(), 0.0);
+    }
+
+    #[test]
+    fn roofline_rates_and_verdict() {
+        let t = sample(); // 128 DRAM bytes, 640 flops
+        // 128 bytes over 1 µs = 0.128 GB/s
+        assert!((t.achieved_dram_gbps(1.0) - 0.128).abs() < 1e-12);
+        assert!((t.achieved_tflops(1.0) - 640e-6).abs() < 1e-12);
+        assert_eq!(t.achieved_dram_gbps(0.0), 0.0);
+        assert_eq!(bound_label(1.0, 295.0), "memory-bound");
+        assert_eq!(bound_label(400.0, 295.0), "compute-bound");
+    }
+}

@@ -20,6 +20,7 @@ use crate::error::Result;
 use crate::ir::buffer::BufferId;
 use crate::ir::dtype::DType;
 use crate::ir::program::TileProgram;
+use crate::obs::Traffic;
 use crate::passes::lower::{compile, CompileOptions};
 use crate::sim::device::Device;
 use crate::sim::model::Penalties;
@@ -216,6 +217,11 @@ pub(crate) struct InterpKernel {
     /// Pre-compiled bytecode when the kernel was prepared with
     /// `InterpOptions::compiled`; `None` runs the tree-walking interp.
     compiled: Option<CompiledProgram>,
+    /// Static data-movement shadow of one execution, cached at prepare
+    /// time from `CompiledProgram::traffic` (compiled backend only, like
+    /// `op_counts`). The interpreter path counts the same quantities
+    /// dynamically in `execute_into_traffic`.
+    traffic_shadow: Option<Traffic>,
 }
 
 impl InterpKernel {
@@ -286,12 +292,14 @@ impl InterpKernel {
         } else {
             None
         };
+        let traffic_shadow = compiled.as_ref().map(|vm| vm.traffic());
         Ok(InterpKernel {
             param_ids: prog.params.iter().map(|b| b.id).collect(),
             out_id: out.id,
             out_len: spec.out_len(),
             lowered,
             compiled,
+            traffic_shadow,
         })
     }
 
@@ -307,6 +315,12 @@ impl InterpKernel {
         self.execute_into(inputs, Vec::new())
     }
 
+    /// [`InterpKernel::execute_refs`] also returning the execution's
+    /// data-movement accounting (see [`InterpKernel::execute_into_traffic`]).
+    pub(crate) fn execute_refs_traffic(&self, inputs: &[&[f32]]) -> Result<(Vec<f32>, Traffic)> {
+        self.execute_into_traffic(inputs, Vec::new())
+    }
+
     /// Execute with caller-provided output storage: the graph executor's
     /// planned buffer-reuse path. `storage` is resized to the output
     /// length (reusing its allocation when the capacity suffices), the
@@ -314,8 +328,20 @@ impl InterpKernel {
     pub(crate) fn execute_into(
         &self,
         inputs: &[&[f32]],
-        mut storage: Vec<f32>,
+        storage: Vec<f32>,
     ) -> Result<Vec<f32>> {
+        self.execute_into_traffic(inputs, storage).map(|(out, _)| out)
+    }
+
+    /// [`InterpKernel::execute_into`] also returning the execution's
+    /// data-movement accounting: the compiled VM uses its cached static
+    /// shadow (input-independent by construction), the interpreter
+    /// counts dynamically — the two agree bit-exactly.
+    pub(crate) fn execute_into_traffic(
+        &self,
+        inputs: &[&[f32]],
+        mut storage: Vec<f32>,
+    ) -> Result<(Vec<f32>, Traffic)> {
         let mut tensors = Tensors::new();
         // param_ids ends with the output id; zip stops at the inputs
         for (id, data) in self.param_ids.iter().zip(inputs) {
@@ -326,25 +352,27 @@ impl InterpKernel {
         storage.clear();
         storage.resize(self.out_len, 0.0);
         tensors.insert(self.out_id, storage);
-        match &self.compiled {
-            Some(vm) => vm
-                .run(&mut tensors)
-                .map_err(|e| anyhow!("compiled run: {}", e))?,
+        let traffic = match &self.compiled {
+            Some(vm) => {
+                vm.run(&mut tensors)
+                    .map_err(|e| anyhow!("compiled run: {}", e))?;
+                self.traffic_shadow.unwrap_or_default()
+            }
             None => {
                 let interp =
                     Interp::new(&self.lowered).map_err(|e| anyhow!("interp init: {}", e))?;
                 interp
-                    .run(&mut tensors)
-                    .map_err(|e| anyhow!("interp run: {}", e))?;
+                    .run_traffic(&mut tensors)
+                    .map_err(|e| anyhow!("interp run: {}", e))?
             }
-        }
+        };
         let out = tensors
             .remove(&self.out_id)
             .ok_or_else(|| anyhow!("interp produced no output tensor"))?;
         if out.len() != self.out_len {
             bail!("interp output length {} != manifest {}", out.len(), self.out_len);
         }
-        Ok(out)
+        Ok((out, traffic))
     }
 
     /// Static per-instruction-class counters for one execution —
@@ -352,6 +380,23 @@ impl InterpKernel {
     /// (see [`crate::tir::compile::OpCounts`]).
     pub(crate) fn op_counts(&self) -> Option<crate::tir::compile::OpCounts> {
         self.compiled.as_ref().map(|vm| vm.op_counts())
+    }
+
+    /// Static per-tier data-movement shadow of one execution — `Some`
+    /// only for compiled-VM kernels (see [`CompiledProgram::traffic`]).
+    pub(crate) fn traffic(&self) -> Option<Traffic> {
+        self.traffic_shadow
+    }
+
+    /// The cost model's predicted DRAM bytes for one execution of this
+    /// kernel on `dev` — the denominator of the roofline calibration
+    /// ratio (measured bytes ÷ modeled bytes). `None` for dynamic-grid
+    /// programs.
+    pub(crate) fn modeled_dram_bytes(&self, dev: &Device) -> Option<f64> {
+        self.lowered.static_grid()?;
+        let report =
+            crate::sim::model::estimate(&self.lowered, dev, &crate::sim::model::Penalties::none());
+        Some(report.dram_gb * 1e9)
     }
 
     /// The cost model's prediction for this kernel on `dev`, µs

@@ -68,7 +68,7 @@ use std::sync::{Arc, Mutex, MutexGuard};
 use crate::error::{Context, Result};
 use crate::graph::exec::GraphKernel;
 use crate::graph::ir::KernelGraph;
-use crate::obs::Recorder;
+use crate::obs::{Recorder, Traffic};
 use crate::shard::exec::{ShardedKernel, ShardedOptions};
 use crate::shard::graph::{GraphShardPlan, ShardedGraphKernel};
 use crate::shard::plan::ShardPlan;
@@ -254,15 +254,21 @@ impl LoadedKernel {
     fn dispatch(&self, inputs: &[Vec<f32>], rec: &Recorder) -> Result<Vec<f32>> {
         match &self.exec {
             KernelExec::Interp(k) => {
-                let out = k.execute(inputs);
                 if rec.is_enabled() {
+                    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+                    let (out, traffic) = k.execute_refs_traffic(&refs)?;
                     if let Some(oc) = k.op_counts() {
                         for (name, v) in oc.items() {
                             rec.add(name, v);
                         }
                     }
+                    for (name, v) in traffic.items() {
+                        rec.add(name, v);
+                    }
+                    Ok(out)
+                } else {
+                    k.execute(inputs)
                 }
-                out
             }
             KernelExec::Sharded(k) => k.execute_rec(inputs, rec),
             KernelExec::Graph(k) => {
@@ -303,6 +309,40 @@ impl LoadedKernel {
                     ("compute".to_string(), Some(p.kernel_us)),
                 ]
             }
+            #[cfg(feature = "pjrt")]
+            KernelExec::Pjrt(_) => vec![(self.spec.name.clone(), None)],
+        }
+    }
+
+    /// Per-unit static data-movement shadows for `tilelang roofline`:
+    /// one `(span name, traffic)` row per measurable unit, named like
+    /// [`LoadedKernel::modeled_node_us`]'s rows. Single kernels yield
+    /// one row; graphs one per node (fused epilogues attributed to their
+    /// producer); sharded artifacts one per lane. `None` rows mean no
+    /// compiled shadow exists (tree-walking interp) — the dynamic
+    /// `traffic.*` counters still record the same totals.
+    pub fn node_traffic(&self) -> Vec<(String, Option<Traffic>)> {
+        match &self.exec {
+            KernelExec::Interp(k) => vec![(self.spec.name.clone(), k.traffic())],
+            KernelExec::Graph(k) => k.node_traffic(),
+            KernelExec::Sharded(k) => k.shard_traffic(),
+            KernelExec::ShardedGraph(k) => k.shard_traffic(),
+            #[cfg(feature = "pjrt")]
+            KernelExec::Pjrt(_) => vec![(self.spec.name.clone(), None)],
+        }
+    }
+
+    /// Per-unit modeled DRAM bytes from the cost model, rows aligned
+    /// with [`LoadedKernel::node_traffic`] — the denominators of the
+    /// roofline calibration ratio (measured ÷ modeled bytes).
+    pub fn modeled_node_bytes(&self, dev: &Device) -> Vec<(String, Option<f64>)> {
+        match &self.exec {
+            KernelExec::Interp(k) => {
+                vec![(self.spec.name.clone(), k.modeled_dram_bytes(dev))]
+            }
+            KernelExec::Graph(k) => k.node_modeled_bytes(),
+            KernelExec::Sharded(k) => k.shard_modeled_bytes(dev),
+            KernelExec::ShardedGraph(k) => k.shard_modeled_bytes(),
             #[cfg(feature = "pjrt")]
             KernelExec::Pjrt(_) => vec![(self.spec.name.clone(), None)],
         }

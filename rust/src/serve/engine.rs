@@ -40,7 +40,7 @@ use crate::bail;
 use crate::error::Result;
 use crate::graph::exec::GraphKernel;
 use crate::graph::ir::decode_block_paged;
-use crate::obs::Recorder;
+use crate::obs::{Recorder, Traffic};
 use crate::runtime::InterpOptions;
 use crate::serve::pool::KvPool;
 use crate::util::stats::percentile;
@@ -288,6 +288,28 @@ impl Engine {
             .unwrap_or_default()
     }
 
+    /// Per-node traffic of the decode graph — static shadows for
+    /// compiled kernel nodes plus the fixed element-wise formula. Like
+    /// [`Engine::node_modeled_us`], reports the largest padded KV
+    /// length prepared so far. Empty before any run.
+    pub fn node_traffic(&self) -> Vec<(String, Option<Traffic>)> {
+        self.kernels
+            .iter()
+            .max_by_key(|(padded, _)| **padded)
+            .map(|(_, k)| k.node_traffic())
+            .unwrap_or_default()
+    }
+
+    /// Per-node DRAM bytes the analytical model predicts for one decode
+    /// step of the largest prepared graph (calibration denominator).
+    pub fn node_modeled_bytes(&self) -> Vec<(String, Option<f64>)> {
+        self.kernels
+            .iter()
+            .max_by_key(|(padded, _)| **padded)
+            .map(|(_, k)| k.node_modeled_bytes())
+            .unwrap_or_default()
+    }
+
     /// A stream's prompt K/V row (prefill) — seeded by stream id and
     /// row index only, so it is identical in any batch composition.
     fn prompt_row(&self, id: u64, row: usize) -> (Vec<f32>, Vec<f32>) {
@@ -423,6 +445,10 @@ impl Engine {
                     let (k, v) = self.prompt_row(sp.id, r);
                     pool.append_row(sp.id, &k, &v)?;
                 }
+                // prefill movement: one K row + one V row per prompt row
+                // lands in the pool's backing store
+                self.recorder
+                    .add("traffic.dram_wr_bytes", (sp.prefill_rows * hd * 2 * 4) as u64);
                 prefill_us.push(prefill_sp.finish_us());
                 admit_sp.finish_us();
                 let slot = slot_live

@@ -18,7 +18,7 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use crate::error::Result;
-use crate::obs::Recorder;
+use crate::obs::{Recorder, Traffic};
 use crate::runtime::interp_backend::InterpKernel;
 use crate::runtime::{ArtifactSpec, InterpOptions};
 use crate::shard::plan::{self, Collective, ShardPlan};
@@ -133,6 +133,41 @@ impl ShardedKernel {
         &self.plan
     }
 
+    /// Per-lane static data-movement shadows, `("shard<i>", traffic)`
+    /// rows in part order. `None` lanes mean the per-shard kernels were
+    /// prepared for the tree-walking interp (no compiled shadow; the
+    /// dynamic `traffic.*` counters still record).
+    pub fn shard_traffic(&self) -> Vec<(String, Option<Traffic>)> {
+        self.part_kernel
+            .iter()
+            .enumerate()
+            .map(|(si, &ki)| (format!("shard{}", si), self.kernels[ki].traffic()))
+            .collect()
+    }
+
+    /// Whole-request static shadow: the sum over every lane, or `None`
+    /// when any lane has no compiled shadow. On the compiled backend
+    /// this equals the `traffic.*` counters one recorded execution adds.
+    pub fn traffic(&self) -> Option<Traffic> {
+        let mut t = Traffic::default();
+        for (_, lane) in self.shard_traffic() {
+            t.merge(&lane?);
+        }
+        Some(t)
+    }
+
+    /// Per-lane modeled DRAM bytes from the cost model (`tilelang
+    /// roofline`'s calibration denominators), part order.
+    pub fn shard_modeled_bytes(&self, dev: &Device) -> Vec<(String, Option<f64>)> {
+        self.part_kernel
+            .iter()
+            .enumerate()
+            .map(|(si, &ki)| {
+                (format!("shard{}", si), self.kernels[ki].modeled_dram_bytes(dev))
+            })
+            .collect()
+    }
+
     /// Scatter -> parallel shard execution -> gather/reduce.
     pub fn execute(&self, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
         self.execute_rec(inputs, &Recorder::disabled())
@@ -195,7 +230,7 @@ impl ShardedKernel {
                     scope.spawn(move || {
                         let t0 = Instant::now();
                         let refs: Vec<&[f32]> = ins.iter().map(|c| c.as_ref()).collect();
-                        let out = kernel.execute_refs(&refs);
+                        let out = kernel.execute_refs_traffic(&refs);
                         tb.span_with("shard", "compute", t0, || {
                             vec![("shard".to_string(), si.to_string())]
                         });
@@ -204,7 +239,15 @@ impl ShardedKernel {
                                 tb.add(name, v);
                             }
                         }
-                        out
+                        match out {
+                            Ok((out, traffic)) => {
+                                for (name, v) in traffic.items() {
+                                    tb.add(name, v);
+                                }
+                                Ok(out)
+                            }
+                            Err(e) => Err(e),
+                        }
                     })
                 })
                 .collect();

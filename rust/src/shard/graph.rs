@@ -95,7 +95,7 @@ use std::time::Instant;
 
 use crate::error::Result;
 use crate::graph::exec::GraphKernel;
-use crate::obs::Recorder;
+use crate::obs::{Recorder, Traffic};
 use crate::graph::fuse;
 use crate::graph::ir::{kernel_input_count, KernelGraph, NodeOp, ValueRef};
 use crate::runtime::{InterpOptions, WorkloadKind};
@@ -934,6 +934,61 @@ impl ShardedGraphKernel {
     /// (see `KernelGraph::row_batchable`).
     pub fn row_batchable(&self) -> bool {
         self.row_batchable
+    }
+
+    /// Per-lane static data-movement shadows, `("shard<i>", traffic)`
+    /// rows in part order: each lane sums its sub-graph's per-node
+    /// shadows ([`GraphKernel::node_traffic`]). A lane is `None` when
+    /// any of its kernel nodes was prepared for the tree-walking interp
+    /// (dynamic `traffic.*` counters still record).
+    pub fn shard_traffic(&self) -> Vec<(String, Option<Traffic>)> {
+        self.part_kernel
+            .iter()
+            .enumerate()
+            .map(|(si, &ki)| {
+                let mut t = Traffic::default();
+                let mut complete = true;
+                for (_, node) in self.kernels[ki].node_traffic() {
+                    match node {
+                        Some(nt) => t.merge(&nt),
+                        None => complete = false,
+                    }
+                }
+                (format!("shard{}", si), complete.then_some(t))
+            })
+            .collect()
+    }
+
+    /// Whole-request static shadow: the sum over every lane, `None` when
+    /// any lane is incomplete. On the compiled backend this equals the
+    /// `traffic.*` counters one recorded execution adds.
+    pub fn traffic(&self) -> Option<Traffic> {
+        let mut t = Traffic::default();
+        for (_, lane) in self.shard_traffic() {
+            t.merge(&lane?);
+        }
+        Some(t)
+    }
+
+    /// Per-lane modeled DRAM bytes (`tilelang roofline` calibration
+    /// denominators): each lane sums its sub-graph's per-node
+    /// predictions, `None` when any node is uncostable.
+    pub fn shard_modeled_bytes(&self) -> Vec<(String, Option<f64>)> {
+        self.part_kernel
+            .iter()
+            .enumerate()
+            .map(|(si, &ki)| {
+                let mut total = 0f64;
+                let mut complete = true;
+                for (_, b) in self.kernels[ki].node_modeled_bytes() {
+                    match b {
+                        Some(b) => total += b,
+                        None => complete = false,
+                    }
+                }
+                (format!("shard{}", si), complete.then_some(total))
+            })
+            .collect()
     }
 
     /// One-line summary for serve output and logs (plan + the shared

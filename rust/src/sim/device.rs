@@ -119,6 +119,19 @@ impl Device {
         self.instr_tops(InstrClass::Mma, DType::F16).unwrap_or(0.0)
     }
 
+    /// The roofline ridge point: flops/byte at which the fp16 tensor
+    /// peak and the DRAM bandwidth peak intersect. A kernel whose
+    /// arithmetic intensity sits below this is memory-bound on this
+    /// device, above it compute-bound.
+    pub fn ridge_flops_per_byte(&self) -> f64 {
+        let peak_flops = self.peak_tensor_tflops() * 1e12;
+        let bytes_per_s = self.dram_gbps * 1e9;
+        if bytes_per_s <= 0.0 {
+            return f64::INFINITY;
+        }
+        peak_flops / bytes_per_s
+    }
+
     pub fn h100() -> Device {
         Device {
             name: "H100-SXM",
@@ -284,6 +297,14 @@ mod tests {
         assert!(!Device::rtx4090().arch.has_wgmma());
         assert_eq!(Device::mi300x().arch.warp_size(), 64);
         assert_eq!(Device::h100().arch.warp_size(), 32);
+    }
+
+    #[test]
+    fn ridge_point_sits_between_known_kernels() {
+        // H100: 989 fp16 TFLOPS over 3.35 TB/s => ~295 flop/byte.
+        let r = Device::h100().ridge_flops_per_byte();
+        assert!((r - 989.0e12 / 3350.0e9).abs() < 1e-6);
+        assert!(r > 200.0 && r < 400.0);
     }
 
     #[test]

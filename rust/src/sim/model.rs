@@ -403,6 +403,90 @@ fn walk(
     }
 }
 
+/// One measured-vs-modeled DRAM traffic comparison, for a named unit
+/// (kernel, graph node, shard lane, or serve step).
+#[derive(Clone, Debug)]
+pub struct CalibrationRow {
+    pub name: String,
+    /// Bytes actually moved through DRAM, from the interpreter/VM
+    /// traffic counters (`obs::Traffic::dram_bytes`).
+    pub measured_bytes: f64,
+    /// Bytes the analytical model predicts (`SimReport::dram_gb * 1e9`).
+    pub modeled_bytes: f64,
+}
+
+impl CalibrationRow {
+    /// measured / modeled; `None` when either side is unknown or zero.
+    pub fn ratio(&self) -> Option<f64> {
+        if self.measured_bytes > 0.0 && self.modeled_bytes > 0.0 {
+            Some(self.measured_bytes / self.modeled_bytes)
+        } else {
+            None
+        }
+    }
+}
+
+/// Joins counted DRAM traffic back into the analytical model: the
+/// roofline report feeds measured bytes per unit in here, and the
+/// resulting geomean scale is the hook `estimate` callers use to
+/// correct `dram_gb` (and memory-bound times) with observed traffic.
+#[derive(Clone, Debug, Default)]
+pub struct TrafficCalibration {
+    pub rows: Vec<CalibrationRow>,
+}
+
+impl TrafficCalibration {
+    pub fn push(&mut self, name: &str, measured_bytes: f64, modeled_bytes: f64) {
+        self.rows.push(CalibrationRow {
+            name: name.to_string(),
+            measured_bytes,
+            modeled_bytes,
+        });
+    }
+
+    /// Geometric-mean measured/modeled byte ratio over the rows where
+    /// both sides are known. `None` when no row is comparable.
+    pub fn scale(&self) -> Option<f64> {
+        let ratios: Vec<f64> = self.rows.iter().filter_map(|r| r.ratio()).collect();
+        if ratios.is_empty() {
+            return None;
+        }
+        let log_sum: f64 = ratios.iter().map(|r| r.ln()).sum();
+        Some((log_sum / ratios.len() as f64).exp())
+    }
+
+    /// Rows whose measured/modeled ratio deviates by more than
+    /// `threshold`x in either direction — the model is missing (or
+    /// inventing) traffic for these units and should not be trusted
+    /// until retuned.
+    pub fn deviations(&self, threshold: f64) -> Vec<&CalibrationRow> {
+        self.rows
+            .iter()
+            .filter(|r| {
+                r.ratio()
+                    .map(|q| q > threshold || q < 1.0 / threshold)
+                    .unwrap_or(false)
+            })
+            .collect()
+    }
+
+    /// Apply the calibration to a fresh `SimReport`: rescale the
+    /// modeled DRAM bytes by the geomean ratio and, when the kernel is
+    /// memory-bound (its time is the DRAM time), rescale the predicted
+    /// time with it. No-op when no rows are comparable.
+    pub fn apply(&self, report: &mut SimReport) {
+        if let Some(s) = self.scale() {
+            report.dram_gb *= s;
+            if report.bound == Bound::Memory {
+                report.time_us *= s;
+                if report.time_us > 0.0 {
+                    report.tflops = report.tflops / s;
+                }
+            }
+        }
+    }
+}
+
 /// Convenience: compile + simulate a program variant. Grid extents that
 /// depend on dynamic vars are unsupported — that surfaces as an `Err`
 /// (specialize first), not a panic, so autotuner sweeps can skip such
@@ -487,6 +571,45 @@ mod tests {
         let a = gemm_report(4096, 4096, 4096, &Device::a100(), &Penalties::none());
         let h = gemm_report(4096, 4096, 4096, &Device::h100(), &Penalties::none());
         assert!(h.time_us < a.time_us * 0.6, "h100 {} vs a100 {}", h.time_us, a.time_us);
+    }
+
+    #[test]
+    fn calibration_geomean_and_deviation_flags() {
+        let mut cal = TrafficCalibration::default();
+        cal.push("a", 2.0e9, 1.0e9); // 2.0x
+        cal.push("b", 0.5e9, 1.0e9); // 0.5x
+        cal.push("c", 5.0e9, 1.0e9); // 5.0x — deviates
+        cal.push("unknown", 0.0, 1.0e9); // not comparable, ignored
+        let s = cal.scale().unwrap();
+        assert!((s - (2.0f64 * 0.5 * 5.0).powf(1.0 / 3.0)).abs() < 1e-9);
+        let dev = cal.deviations(2.0);
+        assert_eq!(dev.len(), 1);
+        assert_eq!(dev[0].name, "c");
+        assert!(cal.deviations(10.0).is_empty());
+        assert!(TrafficCalibration::default().scale().is_none());
+    }
+
+    #[test]
+    fn calibration_rescales_memory_bound_reports() {
+        let dev = Device::a100();
+        let cfg = TileConfig {
+            block_m: 16,
+            block_n: 128,
+            block_k: 64,
+            num_stages: 3,
+            threads: 128,
+            policy: crate::ir::program::GemmWarpPolicy::FullCol,
+            rasterize: true,
+        };
+        let p = matmul_program(16, 16384, 16384, DType::F16, &cfg);
+        let mut r = simulate_kernel(&p, &dev, &Penalties::none()).unwrap();
+        assert_eq!(r.bound, Bound::Memory);
+        let (t0, gb0) = (r.time_us, r.dram_gb);
+        let mut cal = TrafficCalibration::default();
+        cal.push("skinny", 2.0 * gb0 * 1e9, gb0 * 1e9);
+        cal.apply(&mut r);
+        assert!((r.dram_gb - 2.0 * gb0).abs() < 1e-9);
+        assert!((r.time_us - 2.0 * t0).abs() < 1e-6);
     }
 
     #[test]

@@ -36,8 +36,10 @@
 //! are already broken.) `rust/tests/backend_diff.rs` enforces the
 //! contract across all six workload families; the VM additionally offers
 //! [`CompiledProgram::validate`] (static in-bounds proof of every
-//! pre-resolved address) and [`CompiledProgram::write_counts`] (a shadow
-//! pass counting stores per output element) for property tests.
+//! pre-resolved address), [`CompiledProgram::write_counts`] (a shadow
+//! pass counting stores per output element) and
+//! [`CompiledProgram::traffic`] (per-tier byte/FLOP movement accounting
+//! the interpreter must reproduce dynamically) for property tests.
 //!
 //! # Example: compile once, match the interpreter bit-for-bit
 //!
@@ -93,6 +95,8 @@ use crate::ir::buffer::{BufferId, MemScope};
 use crate::ir::dtype::{fp4_e2m1_decode, round_to_dtype, DType, NF4_TABLE};
 use crate::ir::expr::{BinOp, Expr, ExprKind, UnOp, VarId};
 use crate::ir::program::{AtomicKind, DequantScheme, ElemStmt, ReduceKind};
+
+use crate::obs::traffic::{Tier, Traffic};
 
 use super::interp::Tensors;
 use super::{LoweredProgram, RegionRef, TStmt};
@@ -412,6 +416,11 @@ pub struct CompiledProgram {
     perms: Vec<Vec<i64>>,
     params: Vec<ParamMeta>,
     chip_len: usize,
+    /// Arena tier map: `(base, end, scope)` per on-chip buffer, sorted
+    /// by base. A pre-resolved chip segment never straddles buffers, so
+    /// one lookup classifies it as shared memory or fragment registers
+    /// for the [`CompiledProgram::traffic`] shadow pass.
+    chip_spans: Vec<(i64, i64, MemScope)>,
 }
 
 /// Reused evaluation scratch (no per-element allocation).
@@ -750,12 +759,19 @@ impl<'p> Compiler<'p> {
             }
             self.current.clear();
         }
+        let mut chip_spans: Vec<(i64, i64, MemScope)> = self
+            .chip
+            .values()
+            .map(|c| (c.base, c.base + c.cells * c.slots, c.scope))
+            .collect();
+        chip_spans.sort_by_key(|&(base, _, _)| base);
         Ok(CompiledProgram {
             name: self.prog.name.clone(),
             instrs: self.instrs,
             perms: self.perms,
             params: self.params,
             chip_len: self.chip_len as usize,
+            chip_spans,
         })
     }
 
@@ -1417,6 +1433,54 @@ impl<'p> Compiler<'p> {
         }
         Ok(())
     }
+}
+
+/// Count the arithmetic tape ops and surviving loads of an elementwise
+/// value expression, mirroring `ftape`'s constant folding *exactly*: an
+/// axis-free, load-free subtree folds to one constant (zero ops), a
+/// select whose condition is static keeps only the taken branch, and
+/// every surviving `Bin`/`Un`/`Select`/`Cast` costs one op. The
+/// interpreter calls this once per executed `Parallel` statement so its
+/// dynamic traffic counters agree bit-exactly with the compiled static
+/// shadow ([`CompiledProgram::traffic`]); any change here must move in
+/// lockstep with `ftape`.
+pub(crate) fn elem_value_cost(
+    e: &Expr,
+    env: &HashMap<VarId, i64>,
+    axes: &HashMap<VarId, usize>,
+    loads: &mut Vec<BufferId>,
+) -> Result<u64, String> {
+    if !uses_axis(e, axes) && !has_load(e) {
+        return Ok(0); // folds to one FOp::Const
+    }
+    Ok(match e.kind() {
+        ExprKind::Var(_) | ExprKind::Int(_) | ExprKind::Float(_) => 0,
+        ExprKind::Load(buf, _) => {
+            // index tapes are integer address math, not f32 ops
+            loads.push(*buf);
+            0
+        }
+        ExprKind::Bin(_, a, b) => {
+            elem_value_cost(a, env, axes, loads)? + elem_value_cost(b, env, axes, loads)? + 1
+        }
+        ExprKind::Un(_, a) => elem_value_cost(a, env, axes, loads)? + 1,
+        ExprKind::Select(c, t, f) => {
+            if !uses_axis(c, axes) && !has_load(c) {
+                // static condition: only the taken branch is compiled
+                if feval(c, env)? != 0.0 {
+                    elem_value_cost(t, env, axes, loads)?
+                } else {
+                    elem_value_cost(f, env, axes, loads)?
+                }
+            } else {
+                elem_value_cost(c, env, axes, loads)?
+                    + elem_value_cost(t, env, axes, loads)?
+                    + elem_value_cost(f, env, axes, loads)?
+                    + 1
+            }
+        }
+        ExprKind::Cast(_, a) => elem_value_cost(a, env, axes, loads)? + 1,
+    })
 }
 
 /// Map a rank-2 view onto GEMM (row, reduction) coordinates.
@@ -2364,6 +2428,129 @@ impl CompiledProgram {
         }
         oc
     }
+
+    /// Which tier an arena segment lives in (shared tile vs fragment
+    /// registers), from the compile-time buffer layout.
+    fn chip_tier(&self, seg: i64) -> Tier {
+        for &(base, end, scope) in &self.chip_spans {
+            if seg >= base && seg < end {
+                return match scope {
+                    MemScope::Fragment => Tier::Fragment,
+                    _ => Tier::Shared,
+                };
+            }
+        }
+        // an empty segment (zero-cell buffer) cannot carry traffic
+        Tier::Shared
+    }
+
+    fn view_tier(&self, v: &View) -> Tier {
+        match v.slab {
+            Slab::Param(_) => Tier::Dram,
+            Slab::Chip => self.chip_tier(v.seg),
+        }
+    }
+
+    fn mat_tier(&self, m: &Mat) -> Tier {
+        match m.slab {
+            Slab::Param(_) => Tier::Dram,
+            Slab::Chip => self.chip_tier(m.seg),
+        }
+    }
+
+    /// Per-tier data-movement shadow pass: exact DRAM/shared/fragment
+    /// read+write bytes and FLOPs for one full-grid execution, computed
+    /// from the instruction stream's pre-resolved shapes alone — no
+    /// domain sweeps, input-independent by construction. Follows the
+    /// logical-extent conventions documented in [`crate::obs::traffic`];
+    /// the interpreter counts the identical quantities dynamically
+    /// (`Interp::run_traffic`), and `rust/tests/traffic.rs` pins the two
+    /// bit-exactly across every default artifact.
+    pub fn traffic(&self) -> Traffic {
+        let mut t = Traffic::default();
+        for ins in &self.instrs {
+            match ins {
+                // block-start arena zeroing is allocation, not movement
+                Instr::ZeroChip => {}
+                Instr::Fill { seg, len, .. } => {
+                    t.add_wr(self.chip_tier(*seg), 4 * *len as u64);
+                }
+                Instr::Copy(c) => {
+                    let bytes = 4 * c.count as u64;
+                    t.add_rd(self.view_tier(&c.src), bytes);
+                    t.add_wr(self.view_tier(&c.dst), bytes);
+                }
+                Instr::Atomic(a) => {
+                    // read src, read-modify-write dst
+                    let bytes = 4 * a.count as u64;
+                    t.add_rd(self.view_tier(&a.src), bytes);
+                    t.add_rd(self.view_tier(&a.dst), bytes);
+                    t.add_wr(self.view_tier(&a.dst), bytes);
+                    t.flops += a.count as u64;
+                }
+                Instr::Gemm(g) => {
+                    let (m, n, k) = (g.m as u64, g.n as u64, g.k as u64);
+                    t.add_rd(self.mat_tier(&g.a), 4 * m * k);
+                    t.add_rd(self.mat_tier(&g.b), 4 * n * k);
+                    // the accumulator is read-modify-written in place
+                    t.frag_rd_bytes += 4 * m * n;
+                    t.frag_wr_bytes += 4 * m * n;
+                    t.flops += 2 * m * n * k;
+                }
+                Instr::Reduce(r) => {
+                    let out: u64 = r.out_extents.iter().map(|&e| e as u64).product();
+                    let red = r.red_extent as u64;
+                    t.frag_rd_bytes += 4 * out * red;
+                    if !r.clear {
+                        // accumulating into live values reads them first
+                        t.frag_rd_bytes += 4 * out;
+                    }
+                    t.frag_wr_bytes += 4 * out;
+                    t.flops += out * red;
+                }
+                Instr::Dequant(d) => {
+                    let elems = (d.rows * d.cols) as u64;
+                    let packed = (d.rows * d.cols.div_ceil(d.epb)) as u64;
+                    t.add_rd(self.chip_tier(d.src_seg), 4 * packed);
+                    if let Some(s) = &d.scale {
+                        let scales = (d.rows * d.cols.div_ceil(d.group)) as u64;
+                        t.add_rd(self.chip_tier(s.seg), 4 * scales);
+                    }
+                    t.frag_wr_bytes += 4 * elems;
+                    t.flops += elems;
+                }
+                Instr::Elems(e) => {
+                    let total: u64 = e.extents.iter().map(|&x| x as u64).product();
+                    for w in &e.stmts {
+                        for l in &w.loads {
+                            let tier = match &l.src {
+                                LSrc::Global { .. } => Tier::Dram,
+                                LSrc::Chip { seg, .. } => self.chip_tier(*seg),
+                            };
+                            t.add_rd(tier, 4 * total);
+                        }
+                        let dst_tier = match &w.dst {
+                            Dst::Global { .. } => Tier::Dram,
+                            Dst::Chip { seg, .. } => self.chip_tier(*seg),
+                        };
+                        t.add_wr(dst_tier, 4 * total);
+                        let tape_ops = w
+                            .value
+                            .iter()
+                            .filter(|op| {
+                                matches!(
+                                    op,
+                                    FOp::Bin(_) | FOp::Un(_) | FOp::Select | FOp::Cast(_)
+                                )
+                            })
+                            .count() as u64;
+                        t.flops += total * tape_ops;
+                    }
+                }
+            }
+        }
+        t
+    }
 }
 
 fn count_view(v: &View, counts: &mut [u64]) {
@@ -2507,5 +2694,34 @@ mod tests {
         let items = oc.items();
         assert_eq!(items[1].0, "vm.gemm_tiles");
         assert_eq!(items[1].1, oc.gemm_tiles);
+    }
+
+    #[test]
+    fn traffic_shadow_matches_the_interpreters_dynamic_count() {
+        let lowered = lowered_matmul(64, 64, 64);
+        let vm = compile_lowered(&lowered).unwrap();
+        let shadow = vm.traffic();
+        // input-independent and repeatable
+        assert_eq!(shadow, vm.traffic());
+        let (a, b) = (lowered.params[0].id, lowered.params[1].id);
+        let mut t: Tensors = Tensors::new();
+        t.insert(a, test_data(64 * 64, 0xC0));
+        t.insert(b, test_data(64 * 64, 0xC1));
+        let dynamic = super::super::interp::Interp::new(&lowered)
+            .unwrap()
+            .run_traffic(&mut t)
+            .unwrap();
+        assert_eq!(
+            shadow, dynamic,
+            "static traffic shadow diverges from the interpreter's dynamic count"
+        );
+        // a tiled matmul stages operands DRAM -> shared -> fragments:
+        // every tier must see movement, and GEMM flops dominate
+        assert!(shadow.dram_rd_bytes >= 4 * 2 * 64 * 64, "operand loads");
+        assert!(shadow.dram_wr_bytes >= 4 * 64 * 64, "output store");
+        assert!(shadow.shared_rd_bytes > 0 && shadow.shared_wr_bytes > 0);
+        assert!(shadow.frag_rd_bytes > 0 && shadow.frag_wr_bytes > 0);
+        assert!(shadow.flops >= 2 * 64 * 64 * 64);
+        assert!(shadow.arith_intensity() > 0.0);
     }
 }

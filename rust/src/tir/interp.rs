@@ -22,7 +22,9 @@ use crate::ir::expr::{BinOp, Expr, ExprKind, UnOp, VarId};
 use crate::ir::program::{AtomicKind, DequantScheme, ReduceKind};
 use crate::layout::fragment::Fragment;
 use crate::layout::layout::domain_iter;
+use crate::obs::traffic::{Tier, Traffic};
 
+use super::compile::elem_value_cost;
 use super::{LoweredProgram, RegionRef, TStmt};
 
 /// Dense tensor storage for interpreter runs: logical row-major f32
@@ -37,6 +39,10 @@ struct BlockState {
     /// pending async copy groups (stmt clone + env snapshot)
     pending: Vec<Vec<(TStmt, HashMap<VarId, i64>)>>,
     current_group: Vec<(TStmt, HashMap<VarId, i64>)>,
+    /// dynamic data-movement counters, one add per executed op on its
+    /// logical extents — must agree bit-exactly with the compiled
+    /// static shadow (`CompiledProgram::traffic`)
+    traffic: Traffic,
 }
 
 /// Cached per-buffer metadata.
@@ -130,9 +136,28 @@ impl<'a> Interp<'a> {
             .unwrap_or_else(|| panic!("no metadata for buffer {}", buf))
     }
 
+    /// Which traffic tier a buffer's storage lives in.
+    fn tier_of(&self, buf: BufferId) -> Tier {
+        match self.m(buf).scope {
+            MemScope::Global => Tier::Dram,
+            MemScope::Shared | MemScope::SharedDyn => Tier::Shared,
+            MemScope::Fragment => Tier::Fragment,
+            MemScope::Local => unreachable!("locals are not addressable buffers"),
+        }
+    }
+
     /// Execute the whole grid. `tensors` maps every global param id to
     /// row-major f32 contents (created if missing, zero-filled).
     pub fn run(&self, tensors: &mut Tensors) -> Result<(), String> {
+        self.run_traffic(tensors).map(|_| ())
+    }
+
+    /// [`Interp::run`] returning the run's dynamically counted
+    /// data-movement accounting: per-tier read/write bytes and FLOPs on
+    /// the logical extents of every executed op (the conventions in
+    /// [`crate::obs::traffic`]). For any program the compiler accepts,
+    /// this equals `CompiledProgram::traffic()` bit-exactly.
+    pub fn run_traffic(&self, tensors: &mut Tensors) -> Result<Traffic, String> {
         let grid = self
             .prog
             .static_grid()
@@ -150,6 +175,7 @@ impl<'a> Interp<'a> {
             }
         }
         let total: i64 = grid.iter().product();
+        let mut traffic = Traffic::default();
         for flat in 0..total {
             let mut rem = flat;
             let mut env: HashMap<VarId, i64> = HashMap::new();
@@ -179,12 +205,14 @@ impl<'a> Interp<'a> {
                     .collect(),
                 pending: Vec::new(),
                 current_group: Vec::new(),
+                traffic: Traffic::default(),
             };
             self.exec_stmts(&self.prog.body, &mut env, &mut st, tensors)?;
             // flush any remaining async copies (epilogue safety)
             self.drain_async(0, &mut st, tensors)?;
+            traffic.merge(&st.traffic);
         }
-        Ok(())
+        Ok(traffic)
     }
 
     fn exec_stmts(
@@ -247,6 +275,14 @@ impl<'a> Interp<'a> {
             TStmt::Barrier => Ok(()), // lockstep execution: no-op numerically
             TStmt::Fill { buf, value } => {
                 let m = self.m(*buf);
+                // whole-storage write: cells*slots for shared tiles,
+                // logical cells for fragments (matching the compiled
+                // Fill's `len` exactly)
+                let len: u64 = match m.scope {
+                    MemScope::Fragment => m.shape.iter().product::<i64>() as u64,
+                    _ => m.slots_cells as u64,
+                };
+                st.traffic.add_wr(self.tier_of(*buf), 4 * len);
                 let v = round_to_dtype(*value as f32, m.dtype);
                 match m.scope {
                     MemScope::Fragment => {
@@ -420,6 +456,9 @@ impl<'a> Interp<'a> {
         let dst_off: Vec<i64> = dst.offsets.iter().map(|e| e.eval_int(env)).collect();
         let src_slot = src.slot.eval_int(env);
         let dst_slot = dst.slot.eval_int(env);
+        let bytes = 4 * dst.shape.iter().product::<i64>() as u64;
+        st.traffic.add_rd(self.tier_of(src.buf), bytes);
+        st.traffic.add_wr(self.tier_of(dst.buf), bytes);
         // copies are tile-shaped; same cell count, possibly different rank
         for cell in domain_iter(&dst.shape) {
             let flat = flatten(&cell, &dst.shape);
@@ -451,6 +490,12 @@ impl<'a> Interp<'a> {
             (sa[0], sa[1])
         };
         let n = if trans_b { sb[0] } else { sb[1] };
+        st.traffic.add_rd(self.tier_of(a.buf), 4 * (m * k) as u64);
+        st.traffic.add_rd(self.tier_of(b.buf), 4 * (n * k) as u64);
+        // the fragment accumulator is read-modify-written in place
+        st.traffic.frag_rd_bytes += 4 * (m * n) as u64;
+        st.traffic.frag_wr_bytes += 4 * (m * n) as u64;
+        st.traffic.flops += 2 * (m * n * k) as u64;
         let a_slot = a.slot.eval_int(env);
         let b_slot = b.slot.eval_int(env);
         let cm = self.m(c);
@@ -487,6 +532,14 @@ impl<'a> Interp<'a> {
         let dm = self.m(dst);
         let sf = sm.frag.as_ref().ok_or("reduce src must be fragment")?;
         let df = dm.frag.as_ref().ok_or("reduce dst must be fragment")?;
+        let out_n: u64 = df.shape.iter().product::<i64>() as u64;
+        let red_n = sf.shape[dim] as u64;
+        st.traffic.frag_rd_bytes += 4 * out_n * red_n;
+        if !clear {
+            st.traffic.frag_rd_bytes += 4 * out_n;
+        }
+        st.traffic.frag_wr_bytes += 4 * out_n;
+        st.traffic.flops += out_n * red_n;
         for out in domain_iter(&df.shape) {
             let init = if clear {
                 match kind {
@@ -549,6 +602,16 @@ impl<'a> Interp<'a> {
         };
         let epb = (8 / bits) as i64;
         let mask = (1u32 << bits) - 1;
+        let (rows, cols) = (df.shape[0], df.shape[1]);
+        let elems = (rows * cols) as u64;
+        st.traffic
+            .add_rd(self.tier_of(src), 4 * (rows * cols.div_ceil(epb)) as u64);
+        if let Some(sc) = scale {
+            st.traffic
+                .add_rd(self.tier_of(sc), 4 * (rows * cols.div_ceil(group_size)) as u64);
+        }
+        st.traffic.frag_wr_bytes += 4 * elems;
+        st.traffic.flops += elems;
         for cell in domain_iter(&df.shape) {
             let (i, j) = (cell[0], cell[1]);
             let byte_idx = vec![i, j / epb];
@@ -606,6 +669,12 @@ impl<'a> Interp<'a> {
     ) -> Result<(), String> {
         let off: Vec<i64> = dst.offsets.iter().map(|e| e.eval_int(env)).collect();
         let dm = self.m(dst.buf);
+        let count: u64 = dst.shape.iter().product::<i64>() as u64;
+        st.traffic.add_rd(self.tier_of(src), 4 * count);
+        // destination is read-modify-written
+        st.traffic.add_rd(self.tier_of(dst.buf), 4 * count);
+        st.traffic.add_wr(self.tier_of(dst.buf), 4 * count);
+        st.traffic.flops += count;
         for cell in domain_iter(&dst.shape) {
             let didx: Vec<i64> = cell.iter().zip(&off).map(|(c, o)| c + o).collect();
             let sv = self.read_elem(src, &cell, 0, None, st, tensors)?;
@@ -634,6 +703,22 @@ impl<'a> Interp<'a> {
         st: &mut BlockState,
         tensors: &mut Tensors,
     ) -> Result<(), String> {
+        // Charge traffic once up front from the *logical* extents, using
+        // the same constant-folding rules the compiler's value tapes
+        // apply (`elem_value_cost`), so both halves count identically.
+        // env carries no parallel-var bindings yet — same as emit time.
+        let axes: HashMap<VarId, usize> =
+            vars.iter().enumerate().map(|(i, v)| (v.id, i)).collect();
+        let total: u64 = extents.iter().product::<i64>() as u64;
+        for es in body {
+            let mut loads = Vec::new();
+            let ops = elem_value_cost(&es.value, env, &axes, &mut loads)?;
+            for b in loads {
+                st.traffic.add_rd(self.tier_of(b), 4 * total);
+            }
+            st.traffic.add_wr(self.tier_of(es.dst), 4 * total);
+            st.traffic.flops += total * ops;
+        }
         for point in domain_iter(extents) {
             for (v, &p) in vars.iter().zip(&point) {
                 env.insert(v.id, p);

@@ -38,6 +38,17 @@ pub struct BenchScenario {
     /// for this scenario (the field is omitted from the JSON). Gated at
     /// [`TRACE_OVERHEAD_CEILING`] by [`compare`].
     pub trace_overhead: f64,
+    /// DRAM bytes one execution moves, from the `traffic.*` counters.
+    /// Deterministic (counted on logical extents, identical on both
+    /// backends by construction), so [`compare`] gates it with *exact*
+    /// equality against the baseline — any drift means the accounting
+    /// or the kernels changed, not the machine. `0` = not measured
+    /// (field omitted from the JSON).
+    pub dram_bytes: u64,
+    /// FLOPs per DRAM byte for one execution (`traffic.flops /
+    /// dram_bytes`) — the roofline x-coordinate. `0.0` = not measured
+    /// (field omitted from the JSON).
+    pub arith_intensity: f64,
 }
 
 /// Disabled tracing must cost less than 2% of the traced scenario:
@@ -125,6 +136,18 @@ impl BenchReport {
                                     Json::Num(round5(s.trace_overhead)),
                                 )
                             }))
+                            .chain((s.dram_bytes > 0).then(|| {
+                                (
+                                    "dram_bytes".to_string(),
+                                    Json::Num(s.dram_bytes as f64),
+                                )
+                            }))
+                            .chain((s.arith_intensity > 0.0).then(|| {
+                                (
+                                    "arith_intensity".to_string(),
+                                    Json::Num(round5(s.arith_intensity)),
+                                )
+                            }))
                             .collect())
                         })
                         .collect(),
@@ -169,6 +192,8 @@ impl BenchReport {
                 throughput_per_s: snum(s, "throughput_per_s")?,
                 speedup: snum(s, "speedup")?,
                 trace_overhead: snum(s, "trace_overhead").unwrap_or(0.0),
+                dram_bytes: snum(s, "dram_bytes").unwrap_or(0.0) as u64,
+                arith_intensity: snum(s, "arith_intensity").unwrap_or(0.0),
             });
         }
         let provenance = sstr(v, "provenance")?;
@@ -286,6 +311,16 @@ pub fn compare(baseline: &BenchReport, current: &BenchReport, tol: f64) -> Vec<S
                         tol * 100.0
                     ));
                 }
+                // DRAM traffic is counted, not timed: when both records
+                // carry it, the bytes must match exactly — drift means
+                // the kernels or the accounting changed
+                if b.dram_bytes > 0 && c.dram_bytes > 0 && b.dram_bytes != c.dram_bytes {
+                    failures.push(format!(
+                        "scenario {}: DRAM bytes {} != baseline {} (traffic counters \
+                         are deterministic; this is a semantic change, not noise)",
+                        b.name, c.dram_bytes, b.dram_bytes
+                    ));
+                }
             }
         }
     }
@@ -330,6 +365,8 @@ mod tests {
             throughput_per_s: 1000.0,
             speedup,
             trace_overhead: 0.0,
+            dram_bytes: 0,
+            arith_intensity: 0.0,
         }
     }
 
@@ -347,8 +384,30 @@ mod tests {
     fn json_roundtrip_preserves_report() {
         let mut r = report(&[("gemm", 4.0), ("attn", 6.5)]);
         r.scenarios[0].trace_overhead = 1.00341;
+        r.scenarios[0].dram_bytes = 98304;
+        r.scenarios[0].arith_intensity = 5.33333;
         let back = BenchReport::from_json(&Json::parse(&pretty(&r.to_json())).unwrap()).unwrap();
         assert_eq!(back, r);
+        // zero-valued traffic fields stay out of the serialized record
+        let dump = pretty(&r.to_json());
+        assert!(dump.contains("\"dram_bytes\""));
+        let plain = pretty(&report(&[("gemm", 4.0)]).to_json());
+        assert!(!plain.contains("dram_bytes") && !plain.contains("arith_intensity"));
+    }
+
+    #[test]
+    fn dram_bytes_gate_is_exact_and_skips_unmeasured_records() {
+        let mut base = report(&[("gemm", 4.0)]);
+        let mut cur = report(&[("gemm", 4.0)]);
+        base.scenarios[0].dram_bytes = 98304;
+        // current run without traffic fields (old binary): no gate
+        assert!(compare(&base, &cur, 0.20).is_empty());
+        cur.scenarios[0].dram_bytes = 98304;
+        assert!(compare(&base, &cur, 0.20).is_empty());
+        cur.scenarios[0].dram_bytes = 98308;
+        let fails = compare(&base, &cur, 0.20);
+        assert_eq!(fails.len(), 1, "{:?}", fails);
+        assert!(fails[0].contains("DRAM bytes"), "{}", fails[0]);
     }
 
     #[test]

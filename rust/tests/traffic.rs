@@ -1,0 +1,232 @@
+//! Data-movement accounting integration tests: the static per-tier
+//! traffic shadow (`tir::compile`) against the interpreter's dynamic
+//! counters, driven through the real runtime on every default artifact
+//! — single kernels, fused graphs, sharded execution, and the paged
+//! continuous-batching decode engine.
+//!
+//! The contract under test is bit-exactness: both halves count the same
+//! logical tile movements (guards and replication ignored), so the
+//! tree-walking interpreter, the bytecode VM, and the VM's static
+//! shadow must agree to the byte on every artifact, and totals must
+//! scale exactly linearly with execution count (each instruction is
+//! counted exactly once per execution).
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use tilelang::obs::{Recorder, Traffic};
+use tilelang::runtime::{artifacts, ExecBackend, InterpOptions, Runtime};
+use tilelang::serve::{Engine, EngineConfig, StreamSpec};
+use tilelang::shard::exec::ShardedOptions;
+
+/// One shared artifact directory per test binary (generation once).
+fn artifacts_dir() -> PathBuf {
+    static DIR: OnceLock<PathBuf> = OnceLock::new();
+    DIR.get_or_init(|| {
+        let dir = std::env::temp_dir()
+            .join(format!("tilelang-traffic-artifacts-{}", std::process::id()));
+        artifacts::generate_default_set(&dir).expect("generate artifacts");
+        dir
+    })
+    .clone()
+}
+
+fn interp_backend() -> ExecBackend {
+    ExecBackend::Interp(InterpOptions {
+        tune: false,
+        ..Default::default()
+    })
+}
+
+fn compiled_backend() -> ExecBackend {
+    ExecBackend::Compiled(InterpOptions {
+        tune: false,
+        compiled: true,
+        ..Default::default()
+    })
+}
+
+/// Execute `name` once under a fresh enabled recorder and return the
+/// recorded `traffic.*` counter totals as a [`Traffic`].
+fn recorded_traffic(rt: &mut Runtime, name: &str) -> Traffic {
+    let rec = Recorder::enabled();
+    rt.set_recorder(rec.clone());
+    let inputs = rt.example_inputs(name).expect("inputs");
+    rt.execute(name, &inputs).expect("execute");
+    Traffic::from_counters(&rec.counters())
+}
+
+/// Sum a `node_traffic()` row set, asserting every row carries a static
+/// shadow (compiled-backend artifacts must never report `None` lanes).
+fn sum_shadow(rows: &[(String, Option<Traffic>)], ctx: &str) -> Traffic {
+    let mut total = Traffic::default();
+    for (unit, t) in rows {
+        let t = t
+            .as_ref()
+            .unwrap_or_else(|| panic!("{}: unit {} has no static shadow", ctx, unit));
+        total.merge(t);
+    }
+    total
+}
+
+#[test]
+fn every_default_artifact_counts_identical_traffic_on_both_backends() {
+    let dir = artifacts_dir();
+    let mut interp_rt = Runtime::with_backend(&dir, interp_backend()).expect("interp runtime");
+    let mut compiled_rt =
+        Runtime::with_backend(&dir, compiled_backend()).expect("compiled runtime");
+
+    let names = interp_rt.artifact_names();
+    assert!(!names.is_empty(), "default artifact set is empty");
+    for name in &names {
+        let dynamic = recorded_traffic(&mut interp_rt, name);
+        let shadowed = recorded_traffic(&mut compiled_rt, name);
+        assert!(
+            !dynamic.is_zero(),
+            "{}: interpreter recorded no data movement",
+            name
+        );
+        assert_eq!(
+            dynamic, shadowed,
+            "{}: interp dynamic counters != compiled counters",
+            name
+        );
+
+        // the compiled backend's per-unit static shadows (what
+        // `tilelang roofline` prints) sum to exactly the dynamic totals
+        let loaded = compiled_rt.load(name).expect("load compiled");
+        let stat = sum_shadow(&loaded.node_traffic(), name);
+        assert_eq!(
+            stat, dynamic,
+            "{}: static shadow sum != dynamic counters",
+            name
+        );
+        assert!(stat.flops > 0, "{}: zero FLOPs counted", name);
+        assert!(stat.dram_bytes() > 0, "{}: zero DRAM bytes counted", name);
+    }
+}
+
+#[test]
+fn traffic_counters_scale_exactly_linearly_with_executions() {
+    let dir = artifacts_dir();
+    let mut rt = Runtime::with_backend(&dir, compiled_backend()).expect("runtime");
+    let rec = Recorder::enabled();
+    rt.set_recorder(rec.clone());
+    let name = "matmul_64x64x64";
+    let inputs = rt.example_inputs(name).expect("inputs");
+    let shadow = sum_shadow(&rt.load(name).expect("load").node_traffic(), name);
+
+    rt.execute(name, &inputs).expect("first execute");
+    assert_eq!(Traffic::from_counters(&rec.counters()), shadow);
+
+    // a second run adds exactly one more shadow: every instruction is
+    // counted exactly once per execution, nothing is double-added on
+    // cache hits and nothing is a load-time snapshot
+    rt.execute(name, &inputs).expect("second execute");
+    let mut twice = shadow;
+    twice.merge(&shadow);
+    assert_eq!(Traffic::from_counters(&rec.counters()), twice);
+}
+
+#[test]
+fn sharded_lane_shadows_sum_to_dynamic_counters_on_both_engines() {
+    let dir = artifacts_dir();
+    // compiled per-shard kernels: static lane shadows exist
+    let mut opts = ShardedOptions::new(2);
+    opts.interp.tune = false;
+    opts.interp.compiled = true;
+    let mut rt = Runtime::with_backend(&dir, ExecBackend::Sharded(opts)).expect("runtime");
+
+    // a plain kernel (per-lane sub-problem) and a fused graph (whole
+    // block per shard) — both sharded execution paths
+    for name in ["linear_64x256x64", "mlp_block_64x64x128"] {
+        let dynamic = recorded_traffic(&mut rt, name);
+        let loaded = rt.load(name).expect("load");
+        let rows = loaded.node_traffic();
+        assert_eq!(rows.len(), 2, "{}: one traffic row per lane", name);
+        for (unit, _) in &rows {
+            assert!(unit.starts_with("shard"), "{}: lane row named {}", name, unit);
+        }
+        let stat = sum_shadow(&rows, name);
+        assert!(!stat.is_zero(), "{}: lanes moved no bytes", name);
+        assert_eq!(
+            stat, dynamic,
+            "{}: lane shadow sum != recorded shard counters",
+            name
+        );
+
+        // the tree-walking per-shard engine counts the same totals
+        let mut iopts = ShardedOptions::new(2);
+        iopts.interp.tune = false;
+        let mut irt =
+            Runtime::with_backend(&dir, ExecBackend::Sharded(iopts)).expect("interp runtime");
+        let idynamic = recorded_traffic(&mut irt, name);
+        assert_eq!(
+            idynamic, dynamic,
+            "{}: sharded interp counters != sharded compiled counters",
+            name
+        );
+    }
+}
+
+#[test]
+fn paged_decode_traffic_is_backend_invariant() {
+    let specs: Vec<StreamSpec> = (0..3)
+        .map(|i| StreamSpec {
+            id: i + 1,
+            arrival_step: i as usize,
+            prefill_rows: 2 + i as usize,
+            decode_steps: 3,
+        })
+        .collect();
+    let run = |compiled: bool| -> Traffic {
+        let rec = Recorder::enabled();
+        let mut eng = Engine::new(EngineConfig {
+            page_rows: 4,
+            pool_pages: 32,
+            compiled,
+            ..Default::default()
+        })
+        .expect("engine");
+        eng.set_recorder(rec.clone());
+        eng.run(&specs).expect("engine run");
+        Traffic::from_counters(&rec.counters())
+    };
+
+    let vm = run(true);
+    let interp = run(false);
+    assert!(vm.flops > 0, "paged decode counted no FLOPs");
+    assert!(vm.dram_wr_bytes > 0, "prefill writes no pool bytes");
+    assert_eq!(
+        vm, interp,
+        "paged decode traffic diverges between the VM and the interpreter"
+    );
+}
+
+#[test]
+fn serve_node_traffic_rows_carry_shadows_for_the_compiled_engine() {
+    let mut eng = Engine::new(EngineConfig {
+        page_rows: 4,
+        pool_pages: 32,
+        compiled: true,
+        ..Default::default()
+    })
+    .expect("engine");
+    let specs: Vec<StreamSpec> = (0..2)
+        .map(|i| StreamSpec {
+            id: i + 1,
+            arrival_step: 0,
+            prefill_rows: 3,
+            decode_steps: 2,
+        })
+        .collect();
+    eng.set_recorder(Recorder::enabled());
+    eng.run(&specs).expect("engine run");
+
+    let rows = eng.node_traffic();
+    assert!(!rows.is_empty(), "compiled engine reports no decode-node traffic");
+    let stat = sum_shadow(&rows, "serve decode graph");
+    assert!(stat.flops > 0, "decode graph shadow counts no FLOPs");
+    let modeled = eng.node_modeled_bytes();
+    assert_eq!(rows.len(), modeled.len(), "traffic and modeled rows align");
+}
