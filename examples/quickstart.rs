@@ -25,6 +25,7 @@ fn main() {
         threads: 128,
         policy: Default::default(),
         rasterize: true,
+        specialize: None,
     };
     let prog = matmul_program(m, n, k, DType::F16, &cfg);
     println!(

@@ -41,7 +41,7 @@ fn main() {
         4096,
         128,
         true,
-        &AttnConfig { block_m: 128, block_n: 128, num_stages: 2, threads: 128 },
+        &AttnConfig { block_m: 128, block_n: 128, num_stages: 2, threads: 128, specialize: None },
     );
     bench("compile: flash_attention 128x128", 10, || {
         let _ = compile(&fa_prog, &dev, &opts).unwrap();

@@ -28,6 +28,7 @@ fn triton_attention_us(s: &AttnShape, dev: &Device) -> f64 {
         block_n: 64.min(s.seq_len),
         num_stages: 2,
         threads: 128,
+        specialize: None,
     };
     let p = flash_attention_program(s.batch * s.heads, s.seq_len, s.head_dim, s.causal, &cfg);
     simulate_kernel(&p, dev, &Penalties::triton_like())

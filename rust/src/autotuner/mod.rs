@@ -336,6 +336,7 @@ mod tests {
             block_n: 128,
             num_stages: 2,
             threads: 128,
+            specialize: None,
         };
         let prog = crate::workloads::attention::flash_attention_program(8, 256, 128, false, &fixed);
         let fixed_r = simulate_kernel(&prog, &dev, &Penalties::none()).unwrap();

@@ -26,7 +26,7 @@ use crate::runtime::interp_backend::{
 };
 use crate::runtime::{ArtifactSpec, InterpOptions, WorkloadKind};
 use crate::sim::device::Device;
-use crate::sim::model::{simulate_kernel, Penalties, LAUNCH_US};
+use crate::sim::model::{simulate_kernel, Penalties};
 use crate::workloads::attention::{
     flash_attention_program_ep, flash_decode_paged_program, flash_decode_program,
 };
@@ -195,7 +195,9 @@ pub(crate) fn node_cost_us(node: &GraphNode, dev: &Device) -> Result<f64> {
                 .map(|s| s.iter().product::<i64>())
                 .sum::<i64>()
                 + node.out_len() as i64;
-            Ok(LAUNCH_US + elems as f64 * 4.0 / (dev.dram_gbps * 1e3))
+            // same formula as the model's element-wise helper, so the
+            // fold-vs-launch tradeoff stays calibrated to LAUNCH_US
+            Ok(crate::sim::model::elemwise_kernel_us(elems, dev))
         }
     }
 }
@@ -363,6 +365,37 @@ impl GraphKernel {
                 (node.name.clone(), t)
             })
             .collect()
+    }
+
+    /// Model-side op/byte counters per node: kernel nodes go through
+    /// [`crate::sim::model::modeled_traffic`] (the lowered program's
+    /// static shadow), element-wise nodes through the fixed
+    /// [`elementwise_traffic`] formula. This is the quantity the
+    /// differential guardrail pins against the dynamic counters.
+    pub fn modeled_node_traffic_exact(&self) -> Vec<(String, Option<Traffic>)> {
+        self.graph
+            .nodes
+            .iter()
+            .zip(&self.kernels)
+            .map(|(node, kernel)| {
+                let t = match kernel {
+                    Some(k) => k.modeled_traffic_exact(),
+                    None => Some(elementwise_traffic(node)),
+                };
+                (node.name.clone(), t)
+            })
+            .collect()
+    }
+
+    /// Whole-graph modeled traffic (sum of
+    /// [`GraphKernel::modeled_node_traffic_exact`] rows), `None` when a
+    /// kernel node fails to compile to the VM.
+    pub fn modeled_traffic_exact(&self) -> Option<Traffic> {
+        let mut t = Traffic::default();
+        for (_, node) in self.modeled_node_traffic_exact() {
+            t.merge(&node?);
+        }
+        Some(t)
     }
 
     /// Whole-graph static data-movement shadow: the sum of every

@@ -390,6 +390,14 @@ impl KernelBuilder {
         self.annotations.no_warp_specialize = true;
     }
 
+    /// Pin the producer/consumer warp-specialization decision instead of
+    /// leaving it to the per-architecture default (see
+    /// [`crate::ir::program::Annotations::warp_specialize`]). Tuning
+    /// configs call this so specialization is a searchable knob.
+    pub fn warp_specialize(&mut self, on: bool) {
+        self.annotations.warp_specialize = Some(on);
+    }
+
     pub fn finish(mut self) -> TileProgram {
         assert_eq!(self.frames.len(), 1, "unbalanced builder frames");
         assert!(

@@ -229,6 +229,14 @@ pub struct Annotations {
     pub no_smem_swizzle: bool,
     /// Force-disable warp specialization (ablation knob).
     pub no_warp_specialize: bool,
+    /// Explicit producer/consumer warp-specialization request:
+    /// `Some(true)` forces it on any architecture with async copies,
+    /// `Some(false)` forces it off, `None` (default) leaves the
+    /// decision to the architecture rule in `passes::lower` (on for
+    /// Hopper-class devices with an async pipeline). Tuning configs set
+    /// this; the legacy `no_warp_specialize` knob only applies in the
+    /// `None` (auto) case.
+    pub warp_specialize: Option<bool>,
 }
 
 /// A complete tile program = one kernel (Fig. 1(a)).

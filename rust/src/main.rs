@@ -6,6 +6,11 @@
 //!                                   the artifact directory
 //!   compile --kernel K --device D   compile a workload, print report
 //!   simulate --kernel K --device D  compile + simulate across baselines
+//!   schedule --kernel K --device D  rank the schedule candidates (tiles x
+//!            [--top N]              stages x specialization) and print
+//!                                   each one's per-pipeline copy/compute
+//!                                   stage timeline plus a specialized-vs-
+//!                                   unspecialized head-to-head
 //!   tune --kernel K --device D      autotune a workload (persistent cache)
 //!   run --artifact NAME [--dir D]   execute one artifact end to end
 //!       [--backend interp|compiled]
@@ -112,7 +117,7 @@ use tilelang::shard::plan as shard_plan;
 use tilelang::util::bench::{compare, BenchReport, BenchScenario};
 use tilelang::util::stats::{percentile, percentile_f64};
 use tilelang::sim::device::Device;
-use tilelang::sim::model::{estimate, Penalties, TrafficCalibration};
+use tilelang::sim::model::{estimate, simulate_kernel, Penalties, TrafficCalibration};
 use tilelang::workloads::attention::{
     flash_attention_program, AttentionTunable, AttnConfig, MlaTunable,
 };
@@ -583,7 +588,7 @@ fn run_bench(flags: &HashMap<String, String>, dir: &str) {
     ];
     let (rec, trace, metrics) = obs_from_flags(flags);
     let mut report = BenchReport {
-        label: "BENCH_9".to_string(),
+        label: "BENCH_10".to_string(),
         mode: if quick { "quick" } else { "full" }.to_string(),
         provenance: format!(
             "measured: tilelang bench on {}-{}, tune=false static configs, {} iters/backend",
@@ -1366,6 +1371,128 @@ fn main() {
                 }
             }
         }
+        "schedule" => {
+            let kernel = flags
+                .get("kernel")
+                .map(|s| s.as_str())
+                .unwrap_or("flash_attention");
+            let dev = Device::by_name(flags.get("device").map(|s| s.as_str()).unwrap_or("h100"))
+                .unwrap_or_else(|| {
+                    eprintln!("unknown device");
+                    std::process::exit(2);
+                });
+            let top = geti(&flags, "top", 8).max(1) as usize;
+            let pen = Penalties::none();
+            // (candidate label, specialize knob, report)
+            let mut rows: Vec<(String, Option<bool>, tilelang::sim::model::SimReport)> =
+                Vec::new();
+            match kernel {
+                "gemm" => {
+                    let (m, n, k) = (
+                        geti(&flags, "m", 4096),
+                        geti(&flags, "n", 4096),
+                        geti(&flags, "k", 4096),
+                    );
+                    let t = GemmTunable::new(m, n, k, DType::F16);
+                    println!("schedule space: gemm {}x{}x{} on {}", m, n, k, dev.name);
+                    for cfg in t.candidates() {
+                        if let Ok(r) = simulate_kernel(&t.build(&cfg), &dev, &pen) {
+                            let label = format!(
+                                "bm{:<3} bn{:<3} bk{:<2} stages{} thr{}",
+                                cfg.block_m, cfg.block_n, cfg.block_k, cfg.num_stages, cfg.threads
+                            );
+                            rows.push((label, cfg.specialize, r));
+                        }
+                    }
+                }
+                "flash_attention" => {
+                    let (bh, s, d) = (
+                        geti(&flags, "bh", 32),
+                        geti(&flags, "seq", 1024),
+                        geti(&flags, "d", 128),
+                    );
+                    let causal = flags.contains_key("causal");
+                    let shape = AttnShape {
+                        name: "cli",
+                        batch: 1,
+                        heads: bh,
+                        seq_len: s,
+                        head_dim: d,
+                        causal,
+                    };
+                    let t = AttentionTunable { shape };
+                    println!(
+                        "schedule space: flash_attention bh={} seq={} d={} causal={} on {}",
+                        bh, s, d, causal, dev.name
+                    );
+                    for cfg in t.candidates() {
+                        if let Ok(r) = simulate_kernel(&t.build(&cfg), &dev, &pen) {
+                            let label = format!(
+                                "bm{:<3} bn{:<3} stages{} thr{}",
+                                cfg.block_m, cfg.block_n, cfg.num_stages, cfg.threads
+                            );
+                            rows.push((label, cfg.specialize, r));
+                        }
+                    }
+                }
+                other => die(&format!(
+                    "schedule supports --kernel gemm|flash_attention, got {}",
+                    other
+                )),
+            }
+            if rows.is_empty() {
+                die("no feasible candidates");
+            }
+            rows.sort_by(|a, b| a.2.time_us.partial_cmp(&b.2.time_us).unwrap());
+            println!(
+                "  {:<32} {:>5} {:>10} | per-pipeline: stages spec {:>9} {:>9} {:>9} {:>9}",
+                "candidate", "spec", "time", "copy", "compute", "fill", "steady"
+            );
+            for (label, sp, r) in rows.iter().take(top) {
+                let spec = match sp {
+                    None => "auto",
+                    Some(true) => "on",
+                    Some(false) => "off",
+                };
+                let mut line = format!("  {:<32} {:>5} {:>10} |", label, spec, fmt_us(r.time_us));
+                for p in &r.pipelines {
+                    line.push_str(&format!(
+                        "        {} {:>4} {:>9} {:>9} {:>9} {:>9}",
+                        p.stages,
+                        if p.specialized { "yes" } else { "no" },
+                        fmt_us(p.copy_us),
+                        fmt_us(p.compute_us),
+                        fmt_us(p.fill_us),
+                        fmt_us(p.steady_us),
+                    ));
+                }
+                println!("{}", line);
+            }
+            // head-to-head: best specialized vs best unspecialized
+            let best_on = rows
+                .iter()
+                .filter(|(_, sp, _)| *sp == Some(true))
+                .map(|(_, _, r)| r.time_us)
+                .fold(f64::INFINITY, f64::min);
+            let best_off = rows
+                .iter()
+                .filter(|(_, sp, _)| *sp == Some(false))
+                .map(|(_, _, r)| r.time_us)
+                .fold(f64::INFINITY, f64::min);
+            if best_on.is_finite() && best_off.is_finite() {
+                let verdict = if best_on < best_off {
+                    "specialized wins"
+                } else {
+                    "unspecialized wins"
+                };
+                println!(
+                    "specialization: on={} off={} ({})",
+                    fmt_us(best_on),
+                    fmt_us(best_off),
+                    verdict
+                );
+            }
+        }
         "run" => {
             let name = flags
                 .get("artifact")
@@ -1885,9 +2012,10 @@ fn main() {
         _ => {
             println!(
                 "tilelang {} — composable tiled programming model (reproduction)\n\
-                 usage: tilelang <devices|artifacts|compile|simulate|tune|run|serve|plan|graph|bench|bench-check|profile|roofline|check-trace> [--flags]\n\
+                 usage: tilelang <devices|artifacts|compile|simulate|schedule|tune|run|serve|plan|graph|bench|bench-check|profile|roofline|check-trace> [--flags]\n\
                  examples:\n\
                  \u{20}  tilelang simulate --kernel gemm --device a100 --m 4096 --n 4096 --k 4096 --tune\n\
+                 \u{20}  tilelang schedule --kernel flash_attention --device h100 --seq 1024 --top 8\n\
                  \u{20}  tilelang tune --kernel flash_attention --device h100 --seq 4096\n\
                  \u{20}  tilelang artifacts --dir artifacts\n\
                  \u{20}  tilelang run --artifact matmul_64x64x64 --backend compiled\n\
@@ -1908,7 +2036,7 @@ fn main() {
                  \u{20}  tilelang roofline --device h100\n\
                  \u{20}  tilelang roofline --artifact matmul_64x64x64 --iters 5\n\
                  \u{20}  tilelang bench --quick --out BENCH_current.json\n\
-                 \u{20}  tilelang bench-check --baseline BENCH_9.json --current BENCH_current.json",
+                 \u{20}  tilelang bench-check --baseline BENCH_10.json --current BENCH_current.json",
                 tilelang::version()
             );
         }

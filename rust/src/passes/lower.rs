@@ -94,12 +94,32 @@ pub fn compile(
         .map(|f| f.locals_per_thread * (dtype_bits(prog, f.buf) as i64).max(32) / 32)
         .sum();
 
-    let has_pipeline = !ctx.pipelines.is_empty();
+    // Specialization needs an actual async pipeline to hand work to the
+    // producer warps; a degenerate 1-stage loop has nothing to overlap.
+    let has_async_pipeline = ctx
+        .pipelines
+        .iter()
+        .any(|p| p.num_stages >= 2 && p.uses_async);
+    let warp_specialized = match prog.annotations.warp_specialize {
+        // Explicit request (autotuner knob): honor it on any arch with
+        // async copies, as long as there is a pipeline to specialize.
+        Some(on) => on && has_async_pipeline && device.arch.has_async_copy(),
+        // Default policy: only Hopper-class parts specialize, unless the
+        // legacy opt-out annotation is set.
+        None => {
+            device.arch.has_tma() && has_async_pipeline && !prog.annotations.no_warp_specialize
+        }
+    };
+    // One warp in four feeds copies; at least one producer warp.
+    let producer_warps = if warp_specialized {
+        (prog.threads / 32 / 4).max(1)
+    } else {
+        0
+    };
     let schedule = ScheduleInfo {
         pipelines: ctx.pipelines.clone(),
-        warp_specialized: device.arch.has_tma()
-            && has_pipeline
-            && !prog.annotations.no_warp_specialize,
+        warp_specialized,
+        producer_warps,
         smem_bytes,
         regs_per_thread,
         swizzle_blocks: prog.annotations.swizzle_blocks.is_some(),
@@ -225,6 +245,7 @@ impl<'a> LowerCtx<'a> {
                             extent: extent.clone(),
                             body: self.lower_stmts(body, slot_env)?,
                             unroll: matches!(kind, ForKind::Unroll),
+                            pipeline: None,
                         });
                     }
                     ForKind::Pipelined {
@@ -607,6 +628,9 @@ impl<'a> LowerCtx<'a> {
             trip_count: extent.as_int(),
             uses_async: s >= 2 && self.device.arch.has_async_copy(),
         });
+        // the loop lowered below (steady-state or degenerate serial) is
+        // tagged with this pipeline's index for the schedule model
+        let pipe_idx = self.pipelines.len() - 1;
 
         if s < 2 || producers.is_empty() {
             // degenerate: plain serial loop
@@ -616,6 +640,7 @@ impl<'a> LowerCtx<'a> {
                 extent: extent.clone(),
                 body: inner,
                 unroll: false,
+                pipeline: Some(pipe_idx),
             });
             return Ok(());
         }
@@ -704,6 +729,7 @@ impl<'a> LowerCtx<'a> {
             extent: extent.clone(),
             body: loop_body,
             unroll: false,
+            pipeline: Some(pipe_idx),
         });
         Ok(())
     }

@@ -388,6 +388,14 @@ impl InterpKernel {
         self.traffic_shadow
     }
 
+    /// Exact modeled op/byte counters: the static traffic shadow of the
+    /// kernel's lowered program (compiled on demand when this kernel
+    /// runs on the tree-walking interp). Bit-matches the dynamic
+    /// counters — the differential guardrail in `tests/traffic.rs`.
+    pub(crate) fn modeled_traffic_exact(&self) -> Option<Traffic> {
+        crate::sim::model::modeled_traffic(&self.lowered).ok()
+    }
+
     /// The cost model's predicted DRAM bytes for one execution of this
     /// kernel on `dev` — the denominator of the roofline calibration
     /// ratio (measured bytes ÷ modeled bytes). `None` for dynamic-grid

@@ -332,6 +332,37 @@ impl LoadedKernel {
         }
     }
 
+    /// Whole-artifact modeled op/byte counters: the model-side traffic
+    /// the differential guardrail compares against the dynamic
+    /// interp/VM counters (they must bit-match — `tests/traffic.rs`).
+    /// Interp and graph artifacts count through
+    /// [`crate::sim::model::modeled_traffic`]; sharded artifacts fall
+    /// back to summing their per-lane static shadows, which are the
+    /// same quantity computed per shard. `None` when any unit cannot be
+    /// compiled to the VM.
+    pub fn modeled_traffic_exact(&self) -> Option<Traffic> {
+        match &self.exec {
+            KernelExec::Interp(k) => k.modeled_traffic_exact(),
+            KernelExec::Graph(k) => k.modeled_traffic_exact(),
+            KernelExec::Sharded(k) => {
+                let mut t = Traffic::default();
+                for (_, lane) in k.shard_traffic() {
+                    t.merge(&lane?);
+                }
+                Some(t)
+            }
+            KernelExec::ShardedGraph(k) => {
+                let mut t = Traffic::default();
+                for (_, lane) in k.shard_traffic() {
+                    t.merge(&lane?);
+                }
+                Some(t)
+            }
+            #[cfg(feature = "pjrt")]
+            KernelExec::Pjrt(_) => None,
+        }
+    }
+
     /// Per-unit modeled DRAM bytes from the cost model, rows aligned
     /// with [`LoadedKernel::node_traffic`] — the denominators of the
     /// roofline calibration ratio (measured ÷ modeled bytes).

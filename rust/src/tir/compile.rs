@@ -2634,6 +2634,7 @@ mod tests {
             threads: 128,
             policy: crate::ir::program::GemmWarpPolicy::Square,
             rasterize: true,
+            specialize: None,
         };
         let (n, k, m) = (64i64, 64i64, 33i64);
         let (prog, mvar) = matmul_program_dyn(n, k, DType::F16, &cfg);

@@ -84,6 +84,12 @@ pub enum TStmt {
         extent: Expr,
         body: Vec<TStmt>,
         unroll: bool,
+        /// Index into [`ScheduleInfo::pipelines`] when this loop is the
+        /// steady-state (or degenerate serial form) of a software
+        /// pipeline; `None` for ordinary loops. The simulator uses it to
+        /// attribute the loop body to that pipeline's copy/compute
+        /// stage timeline instead of the flat kernel-wide accumulator.
+        pipeline: Option<usize>,
     },
     If {
         cond: Expr,
@@ -183,6 +189,10 @@ pub struct PipelineSched {
 pub struct ScheduleInfo {
     pub pipelines: Vec<PipelineSched>,
     pub warp_specialized: bool,
+    /// Warps dedicated to the producer (copy) role under warp
+    /// specialization; `0` when the kernel is not specialized. The
+    /// remaining `threads/32 - producer_warps` warps are consumers.
+    pub producer_warps: i64,
     /// Total shared memory bytes per block (after multi-buffering).
     pub smem_bytes: i64,
     /// Estimated registers per thread (fragment locals x 32-bit words).

@@ -27,6 +27,10 @@ pub struct AttnConfig {
     pub block_n: i64,
     pub num_stages: usize,
     pub threads: i64,
+    /// Producer/consumer warp specialization: `Some(on)` pins the
+    /// decision (a searchable schedule knob); `None` leaves it to the
+    /// per-architecture default (Hopper on, others off).
+    pub specialize: Option<bool>,
 }
 
 impl AttnConfig {
@@ -40,6 +44,7 @@ impl AttnConfig {
             block_n,
             num_stages: 2,
             threads: 128,
+            specialize: None,
         }
     }
 }
@@ -90,6 +95,9 @@ pub fn flash_attention_program_ep(
     let o = t.param("O", &[bh, seq_len, d], DType::F16);
     let (bx, bz) = t.kernel2(seq_len / bm, bh);
     t.use_swizzle(8);
+    if let Some(on) = cfg.specialize {
+        t.warp_specialize(on);
+    }
 
     let q_s = t.alloc_shared("Q_shared", &[bm, d], DType::F16);
     let k_s = t.alloc_shared("K_shared", &[bn, d], DType::F16);
@@ -690,20 +698,35 @@ pub fn mla_program_opts(
 
 impl TunableConfig for AttnConfig {
     fn to_json(&self) -> Json {
+        let specialize = match self.specialize {
+            None => "auto",
+            Some(true) => "on",
+            Some(false) => "off",
+        };
         Json::Obj(vec![
             ("block_m".into(), Json::Num(self.block_m as f64)),
             ("block_n".into(), Json::Num(self.block_n as f64)),
             ("num_stages".into(), Json::Num(self.num_stages as f64)),
             ("threads".into(), Json::Num(self.threads as f64)),
+            ("specialize".into(), Json::Str(specialize.into())),
         ])
     }
 
     fn from_json(v: &Json) -> Option<AttnConfig> {
+        // pre-specialization cache entries have no "specialize" key:
+        // decode as `None` (the architecture default) so old tune_cache
+        // files keep hitting
+        let specialize = match v.get("specialize").and_then(|s| s.as_str()) {
+            Some("on") => Some(true),
+            Some("off") => Some(false),
+            _ => None,
+        };
         Some(AttnConfig {
             block_m: v.get("block_m")?.as_i64()?,
             block_n: v.get("block_n")?.as_i64()?,
             num_stages: v.get("num_stages")?.as_i64()?.max(1) as usize,
             threads: v.get("threads")?.as_i64()?,
+            specialize,
         })
     }
 }
@@ -737,6 +760,12 @@ impl Tunable for AttentionTunable {
             && cfg.threads > 0
             && self.shape.seq_len % cfg.block_m == 0
             && self.shape.seq_len % cfg.block_n == 0
+            // register pressure: the score + output accumulator tiles
+            // must fit the per-thread register file, or the candidate
+            // spills and the model would mis-rank it (see
+            // sim::model::MAX_REGS_PER_THREAD)
+            && cfg.block_m * (cfg.block_n + self.shape.head_dim) / cfg.threads
+                <= crate::sim::model::MAX_REGS_PER_THREAD
     }
 
     fn candidates(&self) -> Vec<AttnConfig> {
@@ -749,14 +778,19 @@ impl Tunable for AttentionTunable {
                     // a second warp-group (the IR supports any multiple
                     // of the warp size)
                     for threads in [128i64, 256] {
-                        let cfg = AttnConfig {
-                            block_m: bm,
-                            block_n: bn,
-                            num_stages: stages,
-                            threads,
-                        };
-                        if self.accepts(&cfg) {
-                            out.push(cfg);
+                        // both specialization settings are candidates
+                        // (unspecialized first, so ties break to it)
+                        for sp in [Some(false), Some(true)] {
+                            let cfg = AttnConfig {
+                                block_m: bm,
+                                block_n: bn,
+                                num_stages: stages,
+                                threads,
+                                specialize: sp,
+                            };
+                            if self.accepts(&cfg) {
+                                out.push(cfg);
+                            }
                         }
                     }
                 }
@@ -1197,6 +1231,7 @@ mod tests {
                 block_n: 32,
                 num_stages: 2,
                 threads: 128,
+                specialize: None,
             };
             let p = flash_attention_program(bh, s, d, causal, &cfg);
             let l = compile(&p, &Device::h100(), &CompileOptions::default()).unwrap();
@@ -1233,6 +1268,7 @@ mod tests {
             block_n: 32,
             num_stages: 2,
             threads: 128,
+            specialize: None,
         };
         let eps = [EpilogueOp::ResidualAdd];
         let p = flash_attention_program_ep(bh, s, d, false, &cfg, &eps);

@@ -19,6 +19,10 @@ pub struct TileConfig {
     pub policy: GemmWarpPolicy,
     /// L2 rasterization swizzle (T.use_swizzle).
     pub rasterize: bool,
+    /// Producer/consumer warp specialization: `Some(on)` pins the
+    /// decision (a searchable schedule knob); `None` leaves it to the
+    /// per-architecture default (Hopper on, others off).
+    pub specialize: Option<bool>,
 }
 
 impl TileConfig {
@@ -37,6 +41,7 @@ impl TileConfig {
             threads: 128,
             policy: GemmWarpPolicy::Square,
             rasterize: true,
+            specialize: None,
         }
     }
 
@@ -57,15 +62,24 @@ impl TileConfig {
                         if bm * bk + bn * bk > 64 * 1024 {
                             continue;
                         }
-                        out.push(TileConfig {
-                            block_m: bm.min(m.max(16)),
-                            block_n: bn.min(n.max(16)),
-                            block_k: bk,
-                            num_stages: stages,
-                            threads: 128,
-                            policy: GemmWarpPolicy::Square,
-                            rasterize: true,
-                        });
+                        // both specialization settings are candidates
+                        // (unspecialized first, so ties break to it);
+                        // 1-stage loops have no pipeline to specialize
+                        for &sp in &[Some(false), Some(true)] {
+                            if stages < 2 && sp == Some(true) {
+                                continue;
+                            }
+                            out.push(TileConfig {
+                                block_m: bm.min(m.max(16)),
+                                block_n: bn.min(n.max(16)),
+                                block_k: bk,
+                                num_stages: stages,
+                                threads: 128,
+                                policy: GemmWarpPolicy::Square,
+                                rasterize: true,
+                                specialize: sp,
+                            });
+                        }
                     }
                 }
             }
@@ -114,6 +128,9 @@ pub fn matmul_program_ep(
     let (bx, by) = t.kernel2(n / cfg.block_n, m / cfg.block_m);
     if cfg.rasterize {
         t.use_swizzle(3);
+    }
+    if let Some(on) = cfg.specialize {
+        t.warp_specialize(on);
     }
     let a_s = t.alloc_shared("A_shared", &[cfg.block_m, cfg.block_k], dtype);
     let b_s = t.alloc_shared("B_shared", &[cfg.block_k, cfg.block_n], dtype);
@@ -177,6 +194,9 @@ pub fn matmul_program_dyn(
     if cfg.rasterize {
         t.use_swizzle(3);
     }
+    if let Some(on) = cfg.specialize {
+        t.warp_specialize(on);
+    }
     let a_s = t.alloc_shared("A_shared", &[bm, bk], dtype);
     let b_s = t.alloc_shared("B_shared", &[bk, bn], dtype);
     let c_l = t.alloc_fragment("C_local", &[bm, bn], DType::F32);
@@ -214,6 +234,11 @@ impl TunableConfig for TileConfig {
             GemmWarpPolicy::FullRow => "full_row",
             GemmWarpPolicy::FullCol => "full_col",
         };
+        let specialize = match self.specialize {
+            None => "auto",
+            Some(true) => "on",
+            Some(false) => "off",
+        };
         Json::Obj(vec![
             ("block_m".into(), Json::Num(self.block_m as f64)),
             ("block_n".into(), Json::Num(self.block_n as f64)),
@@ -222,6 +247,7 @@ impl TunableConfig for TileConfig {
             ("threads".into(), Json::Num(self.threads as f64)),
             ("policy".into(), Json::Str(policy.into())),
             ("rasterize".into(), Json::Bool(self.rasterize)),
+            ("specialize".into(), Json::Str(specialize.into())),
         ])
     }
 
@@ -232,6 +258,14 @@ impl TunableConfig for TileConfig {
             "full_col" => GemmWarpPolicy::FullCol,
             _ => return None,
         };
+        // pre-specialization cache entries have no "specialize" key:
+        // decode as `None` (the architecture default) so old tune_cache
+        // files keep hitting
+        let specialize = match v.get("specialize").and_then(|s| s.as_str()) {
+            Some("on") => Some(true),
+            Some("off") => Some(false),
+            _ => None,
+        };
         Some(TileConfig {
             block_m: v.get("block_m")?.as_i64()?,
             block_n: v.get("block_n")?.as_i64()?,
@@ -240,6 +274,7 @@ impl TunableConfig for TileConfig {
             threads: v.get("threads")?.as_i64()?,
             policy,
             rasterize: v.get("rasterize")?.as_bool()?,
+            specialize,
         })
     }
 }
@@ -292,6 +327,12 @@ impl Tunable for GemmTunable {
             && pm % cfg.block_m == 0
             && pn % cfg.block_n == 0
             && pk % cfg.block_k == 0
+            // register pressure: the fp32 accumulator tile alone must
+            // fit the per-thread register file, or the candidate spills
+            // and the model would mis-rank it (see
+            // sim::model::MAX_REGS_PER_THREAD)
+            && cfg.block_m * cfg.block_n / cfg.threads
+                <= crate::sim::model::MAX_REGS_PER_THREAD
     }
 
     fn candidates(&self) -> Vec<TileConfig> {
@@ -361,6 +402,7 @@ mod tests {
                 threads: 64,
                 policy: GemmWarpPolicy::Square,
                 rasterize: false,
+                specialize: None,
             },
         );
         check(
@@ -375,6 +417,7 @@ mod tests {
                 threads: 64,
                 policy: GemmWarpPolicy::FullRow,
                 rasterize: true,
+                specialize: None,
             },
         );
     }
@@ -391,6 +434,7 @@ mod tests {
             threads: 64,
             policy: GemmWarpPolicy::Square,
             rasterize: false,
+            specialize: None,
         };
         let eps = [
             EpilogueOp::BiasAdd { dim: 1 },
@@ -427,10 +471,17 @@ mod tests {
     #[test]
     fn search_space_is_nonempty_and_bounded() {
         let space = TileConfig::search_space(4096, 8192, 8192);
-        assert!(space.len() >= 20 && space.len() <= 200);
+        assert!(space.len() >= 20 && space.len() <= 400);
         for c in &space {
             assert!(c.block_m * c.block_k + c.block_n * c.block_k <= 64 * 1024);
         }
+        // the specialization knob is actually searched
+        assert!(space.iter().any(|c| c.specialize == Some(true)));
+        assert!(space.iter().any(|c| c.specialize == Some(false)));
+        // ...but never on a 1-stage loop (nothing to specialize)
+        assert!(space
+            .iter()
+            .all(|c| c.num_stages >= 2 || c.specialize != Some(true)));
         // skinny decode shapes still get candidates
         let skinny = TileConfig::search_space(1, 16384, 16384);
         assert!(!skinny.is_empty());

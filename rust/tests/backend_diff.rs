@@ -124,6 +124,7 @@ fn gemm_family_compiled_matches_interp_and_reference() {
                 GemmWarpPolicy::FullCol,
             ]),
             rasterize: case % 2 == 0,
+            specialize: *rng.pick(&[None, Some(false), Some(true)]),
         };
         let dev = rng.pick(&devices);
         let prog = matmul_program(m, n, k, DType::F16, &cfg);
@@ -196,6 +197,7 @@ fn gemm_epilogue_combos_compiled_matches_interp_and_reference() {
             threads: 128,
             policy: GemmWarpPolicy::Square,
             rasterize: false,
+            specialize: None,
         };
         let prog = matmul_program_ep(m, n, k, DType::F16, &cfg, eps);
         let a = test_data(m * k, 3000 + case as u64);
@@ -254,6 +256,7 @@ fn attention_family_compiled_matches_interp_and_reference() {
             block_n: *rng.pick(&[32i64, 64]),
             num_stages: *rng.pick(&[1usize, 2]),
             threads: 128,
+            specialize: *rng.pick(&[None, Some(false), Some(true)]),
         };
         if seq % cfg.block_m != 0 || seq % cfg.block_n != 0 {
             continue;
@@ -432,6 +435,7 @@ fn dynamic_m_tails_compiled_matches_interp_and_reference() {
         threads: 128,
         policy: GemmWarpPolicy::Square,
         rasterize: true,
+        specialize: None,
     };
     for &m in &[33i64, 80, 96] {
         let (prog, mvar) = matmul_program_dyn(n, k, DType::F16, &cfg);

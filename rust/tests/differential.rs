@@ -63,6 +63,7 @@ fn matmul_interp_matches_reference_over_seeded_grid() {
                 GemmWarpPolicy::FullCol,
             ]),
             rasterize: case % 2 == 0,
+            specialize: *rng.pick(&[None, Some(false), Some(true)]),
         };
         let dev = rng.pick(&devices);
         let prog = matmul_program(m, n, k, DType::F16, &cfg);
@@ -108,6 +109,7 @@ fn attention_interp_matches_reference_over_seeded_grid() {
             block_n: bn,
             num_stages: *rng.pick(&[1usize, 2]),
             threads: 128,
+            specialize: *rng.pick(&[None, Some(false), Some(true)]),
         };
         let prog = flash_attention_program(bh, seq, d, causal, &cfg);
         let lowered = compile(&prog, &Device::h100(), &CompileOptions::default())
@@ -260,6 +262,7 @@ fn dynamic_m_tail_shapes_specialize_and_match_reference() {
         threads: 128,
         policy: GemmWarpPolicy::Square,
         rasterize: true,
+        specialize: None,
     };
     // 96 and 80: one full block + a partial tail; 33: a single mostly-
     // empty block; 128: control (no tail at all)

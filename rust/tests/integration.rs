@@ -364,7 +364,7 @@ fn compile_pipeline_covers_all_workload_families() {
             256,
             64,
             true,
-            &AttnConfig { block_m: 64, block_n: 64, num_stages: 2, threads: 128 },
+            &AttnConfig { block_m: 64, block_n: 64, num_stages: 2, threads: 128, specialize: None },
         );
         let mla = mla_program(2, 32, 256, 128, 64, 16, 32, 2); // tile fits MI300X's 64KB LDS
         let dq = dequant_matmul_program(
@@ -408,4 +408,69 @@ fn warp_specialization_only_on_hopper() {
     p2.annotations.no_warp_specialize = true;
     let h2 = compile(&p2, &Device::h100(), &CompileOptions::default()).unwrap();
     assert!(!h2.schedule.warp_specialized);
+}
+
+#[test]
+fn pre_specialization_cache_entries_still_hit() {
+    // Back-compat guardrail (PR 10): tune_cache.json entries written
+    // before the `specialize` field existed carry no such key. They
+    // must decode with the architecture-default schedule
+    // (`specialize == None`), hit the cache, and return the stored
+    // config unchanged — old caches keep working after the schedule
+    // space grew.
+    use tilelang::autotuner::{
+        penalties_variant, tune_gemm_cached, CacheKey, TunableConfig, TuningCache,
+    };
+    use tilelang::util::json::Json;
+
+    let dev = Device::a100();
+    let pen = Penalties::none();
+    let (m, n, k) = (512i64, 512, 512);
+    let legacy_cfg = Json::Obj(vec![
+        ("block_m".into(), Json::Num(64.0)),
+        ("block_n".into(), Json::Num(64.0)),
+        ("block_k".into(), Json::Num(32.0)),
+        ("num_stages".into(), Json::Num(3.0)),
+        ("threads".into(), Json::Num(128.0)),
+        ("policy".into(), Json::Str("square".into())),
+        ("rasterize".into(), Json::Bool(true)),
+        // no "specialize" key: pre-PR-10 entry
+    ]);
+    let decoded = TileConfig::from_json(&legacy_cfg).expect("legacy entry decodes");
+    assert_eq!(decoded.specialize, None, "missing key means architecture default");
+    assert_eq!(
+        (decoded.block_m, decoded.block_n, decoded.block_k, decoded.num_stages, decoded.threads),
+        (64, 64, 32, 3, 128),
+        "legacy fields decode unchanged"
+    );
+
+    let mut cache = TuningCache::in_memory();
+    cache.put(
+        CacheKey {
+            workload: "gemm".into(),
+            shape: vec![m, n, k],
+            dtype: DType::F16.to_string(),
+            device: dev.name.to_string(),
+            variant: penalties_variant(&pen),
+            shards: 1,
+        },
+        legacy_cfg,
+        0.0,
+    );
+    let hit = tune_gemm_cached(m, n, k, DType::F16, &dev, &pen, &mut cache)
+        .expect("cached tune");
+    assert!(hit.cache_hit, "legacy entry must hit, not resweep");
+    assert_eq!(hit.evaluated, 0, "hit re-scores only the stored config");
+    assert_eq!(hit.config, decoded, "hit returns the stored config verbatim");
+    assert_eq!(hit.config.specialize, None);
+
+    // round-trip: a fresh sweep on a new shape writes the enlarged
+    // config (with the specialize key) and re-reads it identically
+    let miss = tune_gemm_cached(m, n, 2 * k, DType::F16, &dev, &pen, &mut cache)
+        .expect("fresh tune");
+    assert!(!miss.cache_hit);
+    let again = tune_gemm_cached(m, n, 2 * k, DType::F16, &dev, &pen, &mut cache)
+        .expect("re-read");
+    assert!(again.cache_hit);
+    assert_eq!(again.config, miss.config, "new-format entry round-trips");
 }

@@ -58,6 +58,7 @@ fn random_gemm_configs_preserve_semantics() {
             threads,
             policy,
             rasterize: case % 2 == 0,
+            specialize: *rng.pick(&[None, Some(false), Some(true)]),
         };
         let prog = matmul_program(m, n, k, DType::F16, &cfg);
         let dev = rng.pick(&devices);
@@ -144,6 +145,7 @@ fn dynamic_specialization_matches_static_compile() {
         threads: 128,
         policy: Default::default(),
         rasterize: true,
+        specialize: None,
     };
     let stat = matmul_program(128, 128, 64, DType::F16, &cfg);
     let l_static = compile(&stat, &Device::a100(), &CompileOptions::default()).unwrap();

@@ -1,0 +1,349 @@
+//! Schedule-model property suite (PR 10 guardrails).
+//!
+//! Pins the overlap-aware schedule model's invariants so autotuner
+//! rankings and timeline semantics can't silently flip:
+//!
+//! * monotonicity — deeper async pipelining (more overlap) never
+//!   increases a pipeline's modeled steady-state time,
+//! * specialization never helps when the copy stage is negligible
+//!   (compute-bound kernels on architectures without a wgmma-class
+//!   specialized path pay the producer-warp compute tax for nothing),
+//! * register-pressure rejection — `accepts` filters over-budget tiles,
+//!   the search space never emits them, and the simulator hard-rejects
+//!   candidates past the 2x spill horizon,
+//! * pinned best-candidate regressions per kernel family, including the
+//!   PR 10 selection change: on Hopper the attention tuner now picks an
+//!   explicitly specialized schedule.
+
+use tilelang::autotuner::{tune_attention, tune_gemm, Tunable};
+use tilelang::ir::dtype::DType;
+use tilelang::ir::program::GemmWarpPolicy;
+use tilelang::passes::lower::{compile, CompileOptions};
+use tilelang::sim::device::Device;
+use tilelang::sim::model::{estimate, simulate_kernel, Penalties, MAX_REGS_PER_THREAD};
+use tilelang::workloads::attention::{flash_attention_program, AttentionTunable, AttnConfig};
+use tilelang::workloads::matmul::{matmul_program, GemmTunable, TileConfig};
+use tilelang::workloads::shapes::AttnShape;
+
+fn gemm_cfg(stages: usize, specialize: Option<bool>) -> TileConfig {
+    TileConfig {
+        block_m: 64,
+        block_n: 64,
+        block_k: 32,
+        num_stages: stages,
+        threads: 128,
+        policy: GemmWarpPolicy::Square,
+        rasterize: false,
+        specialize,
+    }
+}
+
+/// More overlap never increases modeled steady-state time: for a fixed
+/// tile the per-pipeline `steady_us` is non-increasing in `num_stages`
+/// (the async wait amortizes over `stages - 1` in-flight groups; copy
+/// and compute totals are unchanged).
+#[test]
+fn deeper_pipelines_never_increase_steady_state() {
+    for dev in [Device::a100(), Device::h100()] {
+        let mut prev: Option<f64> = None;
+        for stages in [2usize, 3, 4] {
+            let prog =
+                matmul_program(512, 512, 2048, DType::F16, &gemm_cfg(stages, Some(false)));
+            let lowered = compile(&prog, &dev, &CompileOptions::default()).unwrap();
+            let rep = estimate(&lowered, &dev, &Penalties::none());
+            assert_eq!(rep.pipelines.len(), 1, "{}: one K pipeline expected", dev.name);
+            let tl = &rep.pipelines[0];
+            assert_eq!(tl.stages, stages);
+            assert!(tl.uses_async, "{}: staged copies lower async", dev.name);
+            if let Some(p) = prev {
+                assert!(
+                    tl.steady_us <= p + 1e-9,
+                    "{}: steady-state regressed going deeper: {} -> {} us",
+                    dev.name,
+                    p,
+                    tl.steady_us
+                );
+            }
+            prev = Some(tl.steady_us);
+        }
+    }
+}
+
+/// Fill time grows with depth (more stage latencies to hide) while total
+/// time stays finite and positive — the timeline decomposition is sane.
+#[test]
+fn fill_grows_with_depth_and_times_are_positive() {
+    let dev = Device::a100();
+    let mut prev_fill = 0.0;
+    for stages in [2usize, 3, 4] {
+        let prog = matmul_program(512, 512, 2048, DType::F16, &gemm_cfg(stages, Some(false)));
+        let lowered = compile(&prog, &dev, &CompileOptions::default()).unwrap();
+        let rep = estimate(&lowered, &dev, &Penalties::none());
+        let tl = &rep.pipelines[0];
+        assert!(tl.fill_us > prev_fill, "fill must grow with stage depth");
+        assert!(tl.copy_us > 0.0 && tl.compute_us > 0.0 && tl.steady_us > 0.0);
+        assert!(rep.time_us > tl.fill_us, "fill is a component, not the total");
+        prev_fill = tl.fill_us;
+    }
+}
+
+/// Specialization never helps when the copy stage is negligible: on a
+/// compute-bound GEMM on Ampere (no wgmma-class specialized path),
+/// donating warps to the producer role only slows the consumer side.
+#[test]
+fn specialization_never_helps_compute_bound_on_ampere() {
+    let dev = Device::a100();
+    let pen = Penalties::none();
+    // 2048^3 fp16 GEMM: ~17 GFLOP vs ~32 MB unique traffic — firmly
+    // compute-bound at A100 ratios for every tested tile.
+    for stages in [2usize, 3] {
+        let off = simulate_kernel(
+            &matmul_program(2048, 2048, 2048, DType::F16, &gemm_cfg(stages, Some(false))),
+            &dev,
+            &pen,
+        )
+        .unwrap();
+        let on = simulate_kernel(
+            &matmul_program(2048, 2048, 2048, DType::F16, &gemm_cfg(stages, Some(true))),
+            &dev,
+            &pen,
+        )
+        .unwrap();
+        assert!(
+            on.time_us >= off.time_us,
+            "stages={}: specialization must not help a compute-bound \
+             Ampere kernel (on {} us < off {} us)",
+            stages,
+            on.time_us,
+            off.time_us
+        );
+    }
+}
+
+/// The specialized flag round-trips into the report timeline: forcing it
+/// on marks the pipeline specialized on any async-copy architecture,
+/// forcing it off never does.
+#[test]
+fn timeline_reflects_forced_specialization() {
+    for dev in [Device::a100(), Device::h100()] {
+        for (sp, want) in [(Some(false), false), (Some(true), true)] {
+            let prog = matmul_program(512, 512, 512, DType::F16, &gemm_cfg(3, sp));
+            let lowered = compile(&prog, &dev, &CompileOptions::default()).unwrap();
+            assert_eq!(
+                lowered.schedule.warp_specialized, want,
+                "{}: forced specialize {:?}",
+                dev.name, sp
+            );
+            if want {
+                assert!(lowered.schedule.producer_warps > 0);
+                assert!(
+                    lowered.schedule.producer_warps * 32 < prog.threads,
+                    "producers must leave consumer warps"
+                );
+            } else {
+                assert_eq!(lowered.schedule.producer_warps, 0);
+            }
+            let rep = estimate(&lowered, &dev, &Penalties::none());
+            assert_eq!(rep.pipelines[0].specialized, want);
+        }
+    }
+}
+
+/// Register-pressure rejection, tier 1: `accepts` filters tiles whose
+/// accumulator demand exceeds the architectural register file, and the
+/// enumerated search space never contains one.
+#[test]
+fn accepts_rejects_register_over_budget_tiles() {
+    let t = GemmTunable::new(1024, 1024, 1024, DType::F16);
+    let over = TileConfig {
+        block_m: 256,
+        block_n: 256,
+        block_k: 32,
+        num_stages: 2,
+        threads: 128,
+        policy: GemmWarpPolicy::Square,
+        rasterize: false,
+        specialize: None,
+    };
+    assert!(
+        !t.accepts(&over),
+        "256x256 @ 128 threads = 512 accumulators/thread must be rejected"
+    );
+    for cfg in t.candidates() {
+        assert!(
+            cfg.block_m * cfg.block_n / cfg.threads <= MAX_REGS_PER_THREAD,
+            "search space leaked an over-pressure tile: {:?}",
+            cfg
+        );
+    }
+
+    let shape = AttnShape {
+        name: "pin",
+        batch: 1,
+        heads: 32,
+        seq_len: 1024,
+        head_dim: 128,
+        causal: false,
+    };
+    let at = AttentionTunable { shape };
+    for cfg in at.candidates() {
+        assert!(
+            cfg.block_m * (cfg.block_n + shape.head_dim) / cfg.threads
+                <= MAX_REGS_PER_THREAD,
+            "attention search space leaked an over-pressure tile: {:?}",
+            cfg
+        );
+    }
+}
+
+/// Register-pressure rejection, tier 3: past 2x the register file the
+/// simulator refuses the candidate outright (no spill model rescues it).
+#[test]
+fn simulator_hard_rejects_past_spill_horizon() {
+    let over = TileConfig {
+        block_m: 256,
+        block_n: 256,
+        block_k: 32,
+        num_stages: 2,
+        threads: 128,
+        policy: GemmWarpPolicy::Square,
+        rasterize: false,
+        specialize: None,
+    };
+    let prog = matmul_program(1024, 1024, 1024, DType::F16, &over);
+    let err = simulate_kernel(&prog, &Device::a100(), &Penalties::none())
+        .expect_err("512 regs/thread is past the 2x spill horizon");
+    assert!(
+        err.contains("register pressure"),
+        "rejection must name the cause, got: {}",
+        err
+    );
+}
+
+/// Tier 2 sits between: a mildly over-budget kernel still simulates but
+/// pays a spill-traffic penalty relative to an in-budget twin of the
+/// same shape (more DRAM bytes modeled, never fewer).
+#[test]
+fn spill_tier_charges_traffic_but_simulates() {
+    let dev = Device::a100();
+    // 256x128 @ 128 threads: 256 accumulators/thread — just past the
+    // file, inside the 2x horizon. Doubling threads fits the same tile.
+    let spilled = TileConfig {
+        block_m: 256,
+        block_n: 128,
+        block_k: 32,
+        num_stages: 2,
+        threads: 128,
+        policy: GemmWarpPolicy::Square,
+        rasterize: false,
+        specialize: None,
+    };
+    let fits = TileConfig { threads: 256, ..spilled };
+    let rep_sp = simulate_kernel(
+        &matmul_program(1024, 1024, 1024, DType::F16, &spilled),
+        &dev,
+        &Penalties::none(),
+    )
+    .unwrap();
+    let rep_ok = simulate_kernel(
+        &matmul_program(1024, 1024, 1024, DType::F16, &fits),
+        &dev,
+        &Penalties::none(),
+    )
+    .unwrap();
+    assert!(
+        rep_sp.dram_gb > rep_ok.dram_gb,
+        "spilled twin must model extra DRAM traffic ({} vs {} GB)",
+        rep_sp.dram_gb,
+        rep_ok.dram_gb
+    );
+}
+
+/// Pinned selection change (PR 10 acceptance): on Hopper the enlarged
+/// stages x specialization space makes the attention tuner pick an
+/// explicitly specialized schedule, and that winner strictly beats its
+/// unspecialized twin.
+#[test]
+fn hopper_attention_tuner_picks_specialized_schedule() {
+    let dev = Device::h100();
+    let pen = Penalties::none();
+    let shape = AttnShape {
+        name: "FA2-like",
+        batch: 1,
+        heads: 32,
+        seq_len: 1024,
+        head_dim: 128,
+        causal: false,
+    };
+    let win = tune_attention(&shape, &dev, &pen).unwrap();
+    assert_eq!(
+        win.config.specialize,
+        Some(true),
+        "Hopper attention winner must be the specialized schedule, got {:?}",
+        win.config
+    );
+
+    let twin = AttnConfig { specialize: Some(false), ..win.config.clone() };
+    let on = simulate_kernel(
+        &flash_attention_program(
+            shape.batch * shape.heads,
+            shape.seq_len,
+            shape.head_dim,
+            shape.causal,
+            &win.config,
+        ),
+        &dev,
+        &pen,
+    )
+    .unwrap();
+    let off = simulate_kernel(
+        &flash_attention_program(
+            shape.batch * shape.heads,
+            shape.seq_len,
+            shape.head_dim,
+            shape.causal,
+            &twin,
+        ),
+        &dev,
+        &pen,
+    )
+    .unwrap();
+    assert!(
+        on.time_us < off.time_us,
+        "specialized winner must strictly beat its twin ({} vs {} us)",
+        on.time_us,
+        off.time_us
+    );
+}
+
+/// Pinned best-candidate regression, GEMM family: on Ampere the winner
+/// for a large square GEMM stays unspecialized and multi-staged, and it
+/// beats the heuristic default config.
+#[test]
+fn ampere_gemm_winner_pinned() {
+    let dev = Device::a100();
+    let pen = Penalties::none();
+    let win = tune_gemm(2048, 2048, 2048, DType::F16, &dev, &pen).unwrap();
+    assert_ne!(
+        win.config.specialize,
+        Some(true),
+        "Ampere compute-bound GEMM must not choose specialization: {:?}",
+        win.config
+    );
+    assert!(win.config.num_stages >= 2, "winner must pipeline: {:?}", win.config);
+    assert!(win.evaluated > 1, "sweep must actually explore the space");
+
+    let default = TileConfig::default_for(2048, 2048, 2048);
+    let base = simulate_kernel(
+        &matmul_program(2048, 2048, 2048, DType::F16, &default),
+        &dev,
+        &pen,
+    )
+    .unwrap();
+    assert!(
+        win.report.time_us <= base.time_us + 1e-9,
+        "tuned config must not lose to the default ({} vs {} us)",
+        win.report.time_us,
+        base.time_us
+    );
+}

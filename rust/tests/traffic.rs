@@ -107,6 +107,51 @@ fn every_default_artifact_counts_identical_traffic_on_both_backends() {
 }
 
 #[test]
+fn modeled_traffic_bit_matches_dynamic_counters_on_every_artifact() {
+    // PR 10 differential guardrail: the schedule model's op/byte counts
+    // (`LoadedKernel::modeled_traffic_exact`, fed by
+    // `sim::model::modeled_traffic`) must bit-match the interpreter's
+    // dynamic `traffic.*` counters for every default artifact — the
+    // analytical model and the execution engines count the same moves.
+    let dir = artifacts_dir();
+    for backend in [interp_backend(), compiled_backend()] {
+        let mut rt = Runtime::with_backend(&dir, backend).expect("runtime");
+        let names = rt.artifact_names();
+        for name in &names {
+            let dynamic = recorded_traffic(&mut rt, name);
+            let loaded = rt.load(name).expect("load");
+            let modeled = loaded
+                .modeled_traffic_exact()
+                .unwrap_or_else(|| panic!("{}: model produced no traffic", name));
+            assert_eq!(
+                modeled, dynamic,
+                "{}: modeled op/byte counts != dynamic counters",
+                name
+            );
+        }
+    }
+
+    // sharded lanes: the model sums the same quantity per shard
+    let mut opts = ShardedOptions::new(2);
+    opts.interp.tune = false;
+    opts.interp.compiled = true;
+    let mut srt = Runtime::with_backend(&dir, ExecBackend::Sharded(opts)).expect("runtime");
+    for name in ["linear_64x256x64", "mlp_block_64x64x128"] {
+        let dynamic = recorded_traffic(&mut srt, name);
+        let modeled = srt
+            .load(name)
+            .expect("load")
+            .modeled_traffic_exact()
+            .unwrap_or_else(|| panic!("{}: sharded model produced no traffic", name));
+        assert_eq!(
+            modeled, dynamic,
+            "{}: sharded modeled counts != dynamic counters",
+            name
+        );
+    }
+}
+
+#[test]
 fn traffic_counters_scale_exactly_linearly_with_executions() {
     let dir = artifacts_dir();
     let mut rt = Runtime::with_backend(&dir, compiled_backend()).expect("runtime");
